@@ -1,0 +1,239 @@
+//! END-TO-END DRIVER (DESIGN.md §Experiments E2E): the full stack on a
+//! real small workload.
+//!
+//! A ~1M-element adaptive Morton-ordered quadtree carries four fields
+//! (two smooth f64 fixed-size fields, one u32 index field, one hp-style
+//! variable-size coefficient field). The run:
+//!
+//!   1. generates the mesh and fields (workload substrate),
+//!   2. writes one scda checkpoint on P ranks through the staged pipeline
+//!      (precondition via PJRT artifacts when present — L1/L2 — with the
+//!      native fallback otherwise; per-element deflate — §3 convention;
+//!      parallel single-file windows — §2),
+//!   3. verifies serial-equivalence: the P-rank file hash equals the
+//!      1-rank file hash (the paper's headline property),
+//!   4. restarts on a different process count and verifies bit-exactness,
+//!   5. reports the headline metrics: equivalence, compression ratio,
+//!      write/read bandwidth, per-stage timings.
+//!
+//!     cargo run --release --example amr_pipeline [--ranks P] [--base L]
+//!
+//! Results are recorded in EXPERIMENTS.md §E2E.
+
+use scda::cli::args::Args;
+use scda::coordinator::checkpoint::{read_checkpoint, write_checkpoint, Field, FieldPayload};
+use scda::coordinator::Metrics;
+use scda::mesh::{self, fields};
+use scda::par::{run_parallel, Communicator, Partition};
+use scda::runtime::{PrecondService, Transform};
+use std::sync::Arc;
+use std::time::Instant;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let args = Args::parse(std::env::args().skip(1)).unwrap();
+    let ranks: usize = args.get_parse("ranks", 4).unwrap();
+    let base: u8 = args.get_parse("base", if args.flag("quick") { 6 } else { 9 }).unwrap();
+    let max: u8 = base + 2;
+
+    // ---- 1. Workload -----------------------------------------------------
+    let t0 = Instant::now();
+    let leaves = Arc::new(mesh::ring_mesh(base, max, (0.5, 0.5), 0.3));
+    let n = leaves.len() as u64;
+    println!(
+        "mesh: {n} elements (levels {base}..{max}), generated in {:.2}s",
+        t0.elapsed().as_secs_f64()
+    );
+
+    let pre = Arc::new(PrecondService::auto(scda::cli::artifacts_dir()));
+    println!("precondition backend: {} (L1/L2 via PJRT when 'pjrt')", pre.name());
+
+    // ---- 2+3. Write on P ranks and on 1 rank; compare hashes -------------
+    let mut hashes = Vec::new();
+    let mut raw_bytes = 0u64;
+    let mut file_bytes = 0u64;
+    let mut write_secs = 0.0f64;
+    for p in [ranks, 1] {
+        let path = Arc::new(std::env::temp_dir().join(format!("scda-e2e-{p}.scda")));
+        let part = Arc::new(Partition::uniform(p, n));
+        let metrics = Arc::new(Metrics::new());
+        let t0 = Instant::now();
+        {
+            let (path, leaves, part, metrics, pre) =
+                (Arc::clone(&path), Arc::clone(&leaves), Arc::clone(&part), Arc::clone(&metrics), Arc::clone(&pre));
+            run_parallel(p, move |comm| {
+                let r = part.local_range(comm.rank());
+                let range = r.start as usize..r.end as usize;
+                let (hp_sizes, hp_data) = fields::local_hp_field(&leaves, range.clone(), 6);
+                let idx: Vec<u8> = leaves[range.clone()]
+                    .iter()
+                    .flat_map(|q| {
+                        let (x, y) = (q.x, q.y);
+                        [x.to_le_bytes(), y.to_le_bytes()].concat()
+                    })
+                    .collect();
+                let flds = vec![
+                    Field {
+                        name: "rho:f32x512".into(),
+                        encode: true,
+                        precondition: true,
+                        payload: FieldPayload::Fixed {
+                            elem_size: 2048,
+                            data: fields::local_fixed_field_f32(&leaves, range.clone(), 512),
+                        },
+                    },
+                    Field {
+                        name: "energy:f32x256".into(),
+                        encode: true,
+                        precondition: true,
+                        payload: FieldPayload::Fixed {
+                            elem_size: 1024,
+                            data: fields::local_fixed_field_f32(&leaves, range.clone(), 256),
+                        },
+                    },
+                    // Tiny structural elements: per-element compression
+                    // would only add framing overhead, so store raw (the
+                    // paper's overhead trade-off, measured by bench t4).
+                    Field {
+                        name: "anchor:u32x2".into(),
+                        encode: false,
+                        precondition: false,
+                        payload: FieldPayload::Fixed { elem_size: 8, data: idx },
+                    },
+                    Field {
+                        name: "hp:coeffs".into(),
+                        encode: true,
+                        precondition: false,
+                        payload: FieldPayload::Var { sizes: hp_sizes, data: hp_data },
+                    },
+                ];
+                write_checkpoint(comm, &path, "amr-e2e", 100, &part, &flds, &*pre, &metrics).unwrap();
+            });
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        let fbytes = std::fs::metadata(&*path)?.len();
+        let rbytes = metrics.bytes_in.load(std::sync::atomic::Ordering::Relaxed);
+        println!(
+            "write P={p}: {:.2}s, {:.1} MiB raw -> {:.1} MiB file (ratio {:.3}), {:.0} MiB/s effective",
+            secs,
+            rbytes as f64 / 1048576.0,
+            fbytes as f64 / 1048576.0,
+            fbytes as f64 / rbytes as f64,
+            rbytes as f64 / 1048576.0 / secs,
+        );
+        if p == ranks {
+            println!("{}", metrics.report());
+            raw_bytes = rbytes;
+            file_bytes = fbytes;
+            write_secs = secs;
+        }
+        hashes.push(sha256_file(&path)?);
+        if p == 1 {
+            std::fs::remove_file(&*path)?;
+        }
+    }
+    assert_eq!(hashes[0], hashes[1], "SERIAL-EQUIVALENCE VIOLATED");
+    println!("serial-equivalence: P={ranks} file SHA-256 == serial file SHA-256 ({})", hex(&hashes[0][..8]));
+
+    // ---- 4. Restart on a different P, verify bit-exactness ---------------
+    let path = Arc::new(std::env::temp_dir().join(format!("scda-e2e-{ranks}.scda")));
+    let restart_ranks = ranks + 1;
+    let rpart = Arc::new(Partition::uniform(restart_ranks, n));
+    let t0 = Instant::now();
+    {
+        let (path, leaves, rpart, pre) =
+            (Arc::clone(&path), Arc::clone(&leaves), Arc::clone(&rpart), Arc::clone(&pre));
+        run_parallel(restart_ranks, move |comm| {
+            let rank = comm.rank();
+            let (info, restored) = read_checkpoint(comm, &path, &rpart, &*pre).unwrap();
+            assert_eq!(info.step, 100);
+            let r = rpart.local_range(rank);
+            let range = r.start as usize..r.end as usize;
+            match &restored[0].payload {
+                FieldPayload::Fixed { data, .. } => {
+                    assert_eq!(data, &fields::local_fixed_field_f32(&leaves, range.clone(), 512));
+                }
+                _ => unreachable!(),
+            }
+            match &restored[3].payload {
+                FieldPayload::Var { sizes, data } => {
+                    let (es, ed) = fields::local_hp_field(&leaves, range, 6);
+                    assert_eq!(sizes, &es);
+                    assert_eq!(data, &ed);
+                }
+                _ => unreachable!(),
+            }
+        });
+    }
+    let read_secs = t0.elapsed().as_secs_f64();
+    println!(
+        "restart P={restart_ranks}: {:.2}s ({:.0} MiB/s effective), fields bit-exact",
+        read_secs,
+        raw_bytes as f64 / 1048576.0 / read_secs
+    );
+
+    // ---- 4b. Chunk-scale spectral snapshot: the PJRT (L1/L2) hot path ----
+    // Patch-sized elements (1 MiB f32 each) exercise the AOT-compiled
+    // shuffle/delta graphs at their design granularity.
+    let spath = Arc::new(std::env::temp_dir().join("scda-e2e-spectrum.scda"));
+    let patches = 8u64;
+    let patch_words = 262_144usize; // 1 MiB per patch
+    let t0 = Instant::now();
+    {
+        let (spath, pre) = (Arc::clone(&spath), Arc::clone(&pre));
+        run_parallel(ranks.min(patches as usize), move |comm| {
+            let p = Partition::uniform(comm.size(), patches);
+            let r = p.local_range(comm.rank());
+            let mut data = Vec::with_capacity((r.end - r.start) as usize * patch_words * 4);
+            for patch in r.clone() {
+                for i in 0..patch_words {
+                    let v = ((i as f32) * 1e-3 + patch as f32).sin() * 10.0;
+                    data.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            let mut transformed = Vec::with_capacity(data.len());
+            for chunk in data.chunks(patch_words * 4) {
+                transformed.extend_from_slice(&pre.forward(chunk).unwrap().0);
+            }
+            let mut f = scda::api::ScdaFile::create(comm, &*spath, b"spectrum").unwrap();
+            f.write_array(
+                scda::api::DataSrc::Contiguous(&transformed),
+                &p,
+                patch_words as u64 * 4,
+                Some(b"spectrum:f32"),
+                true,
+            )
+            .unwrap();
+            f.close().unwrap();
+        });
+    }
+    let spec_secs = t0.elapsed().as_secs_f64();
+    let spec_raw = patches as f64 * patch_words as f64 * 4.0;
+    let spec_file = std::fs::metadata(&*spath)?.len();
+    println!(
+        "spectral snapshot ({} backend): {:.1} MiB in {:.2}s = {:.0} MiB/s; ratio {:.3}",
+        pre.name(),
+        spec_raw / 1048576.0,
+        spec_secs,
+        spec_raw / 1048576.0 / spec_secs,
+        spec_file as f64 / spec_raw
+    );
+    std::fs::remove_file(&*spath)?;
+
+    // ---- 5. Headline summary ---------------------------------------------
+    println!("\n=== E2E HEADLINE ===");
+    println!("elements                 {n}");
+    println!("serial-equivalent        yes (SHA-256 equal across P)");
+    println!("compression ratio        {:.3} (per-element, random access preserved)", file_bytes as f64 / raw_bytes as f64);
+    println!("write bandwidth (raw)    {:.0} MiB/s on {ranks} ranks", raw_bytes as f64 / 1048576.0 / write_secs);
+    println!("restart bandwidth (raw)  {:.0} MiB/s on {restart_ranks} ranks", raw_bytes as f64 / 1048576.0 / read_secs);
+    std::fs::remove_file(&*path)?;
+    Ok(())
+}
+
+fn sha256_file(path: &std::path::Path) -> std::io::Result<[u8; 32]> {
+    Ok(scda::bench_support::sha256(&std::fs::read(path)?))
+}
+
+fn hex(bytes: &[u8]) -> String {
+    bytes.iter().map(|b| format!("{b:02x}")).collect()
+}

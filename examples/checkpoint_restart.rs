@@ -1,0 +1,123 @@
+//! Checkpoint/restart across different process counts: write an AMR
+//! checkpoint on `P_w` simulated ranks, restart it on several other
+//! process counts (including byte-balanced repartitioning), and verify
+//! the restored fields bit-for-bit.
+//!
+//!     cargo run --release --example checkpoint_restart [P_w]
+
+use scda::coordinator::checkpoint::{read_checkpoint, write_checkpoint, Field, FieldPayload};
+use scda::coordinator::{by_bytes, Metrics};
+use scda::mesh::{self, fields};
+use scda::par::{run_parallel, Communicator, Partition};
+use scda::runtime::{NativeTransform, PrecondService, Preconditioner};
+use std::sync::Arc;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let write_ranks: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(4);
+    let path = Arc::new(std::env::temp_dir().join("scda-ckpt-example.scda"));
+
+    // The mesh and its fields (globally known for verification).
+    let leaves = Arc::new(mesh::ring_mesh(4, 7, (0.4, 0.6), 0.25));
+    let n = leaves.len() as u64;
+    let global_rho = Arc::new(fields::local_fixed_field(&leaves, 0..leaves.len(), 5));
+    let (gs, gd) = fields::local_hp_field(&leaves, 0..leaves.len(), 6);
+    let global_hp_sizes = Arc::new(gs);
+    let global_hp = Arc::new(gd);
+    println!("mesh: {n} elements; rho {} B; hp {} B", global_rho.len(), global_hp.len());
+
+    // ---- Write on P_w ranks ----------------------------------------------
+    let part = Arc::new(Partition::uniform(write_ranks, n));
+    let metrics = Arc::new(Metrics::new());
+    let pre = Arc::new(PrecondService::spawn(Preconditioner::native));
+    {
+        let (path, leaves, part, metrics, pre) =
+            (Arc::clone(&path), Arc::clone(&leaves), Arc::clone(&part), Arc::clone(&metrics), Arc::clone(&pre));
+        run_parallel(write_ranks, move |comm| {
+            let r = part.local_range(comm.rank());
+            let range = r.start as usize..r.end as usize;
+            let fields = vec![
+                Field {
+                    name: "rho".into(),
+                    encode: true,
+                    precondition: true,
+                    payload: FieldPayload::Fixed {
+                        elem_size: 40,
+                        data: fields::local_fixed_field(&leaves, range.clone(), 5),
+                    },
+                },
+                Field {
+                    name: "hp".into(),
+                    encode: true,
+                    precondition: false,
+                    payload: {
+                        let (sizes, data) = fields::local_hp_field(&leaves, range, 6);
+                        FieldPayload::Var { sizes, data }
+                    },
+                },
+            ];
+            write_checkpoint(comm, &path, "ckpt-example", 7, &part, &fields, &*pre, &metrics).unwrap();
+        });
+    }
+    let file_bytes = std::fs::metadata(&*path)?.len();
+    let raw_bytes = global_rho.len() + global_hp.len();
+    println!(
+        "checkpoint: {file_bytes} B on disk for {raw_bytes} B of field data (ratio {:.3})",
+        file_bytes as f64 / raw_bytes as f64
+    );
+    println!("{}", metrics.report());
+
+    // ---- Restart on several process counts -------------------------------
+    for restart_ranks in [1usize, 2, 3, 7] {
+        // Count-balanced partition...
+        let rpart = Arc::new(Partition::uniform(restart_ranks, n));
+        verify_restart(&path, restart_ranks, &rpart, &global_rho, &global_hp_sizes, &global_hp);
+        // ...and a byte-balanced one (hp sizes are level-skewed).
+        let bpart = Arc::new(by_bytes(&global_hp_sizes, restart_ranks));
+        verify_restart(&path, restart_ranks, &bpart, &global_rho, &global_hp_sizes, &global_hp);
+        println!("restart on {restart_ranks:>2} ranks: OK (count- and byte-balanced)");
+    }
+
+    std::fs::remove_file(&*path)?;
+    println!("checkpoint_restart OK");
+    Ok(())
+}
+
+fn verify_restart(
+    path: &Arc<std::path::PathBuf>,
+    ranks: usize,
+    part: &Arc<Partition>,
+    global_rho: &Arc<Vec<u8>>,
+    global_hp_sizes: &Arc<Vec<u64>>,
+    global_hp: &Arc<Vec<u8>>,
+) {
+    let (path, part, rho, hps, hp) = (
+        Arc::clone(path),
+        Arc::clone(part),
+        Arc::clone(global_rho),
+        Arc::clone(global_hp_sizes),
+        Arc::clone(global_hp),
+    );
+    run_parallel(ranks, move |comm| {
+        let rank = comm.rank();
+        let (info, restored) = read_checkpoint(comm, &path, &part, &NativeTransform).unwrap();
+        assert_eq!(info.app, "ckpt-example");
+        assert_eq!(info.step, 7);
+        let r = part.local_range(rank);
+        match &restored[0].payload {
+            FieldPayload::Fixed { elem_size, data } => {
+                assert_eq!(*elem_size, 40);
+                assert_eq!(data, &rho[(r.start * 40) as usize..(r.end * 40) as usize]);
+            }
+            _ => panic!("rho must be fixed"),
+        }
+        match &restored[1].payload {
+            FieldPayload::Var { sizes, data } => {
+                assert_eq!(sizes, &hps[r.start as usize..r.end as usize]);
+                let lo: u64 = hps[..r.start as usize].iter().sum();
+                let len: u64 = sizes.iter().sum();
+                assert_eq!(data, &hp[lo as usize..(lo + len) as usize]);
+            }
+            _ => panic!("hp must be var"),
+        }
+    });
+}

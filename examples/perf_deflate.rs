@@ -1,0 +1,18 @@
+//! §Perf micro-benchmark: per-element deflate throughput by element size
+//! (the compression convention hot path). See EXPERIMENTS.md §Perf.
+// quick micro-benchmark for encode_element before optimization
+use scda::codec::{encode_element, CodecOptions};
+fn main() {
+    let data: Vec<u8> = scda::bench_support::corpus(1 << 20).remove(3).1;
+    for elem in [256usize, 4096, 65536] {
+        let t0 = std::time::Instant::now();
+        let mut total = 0usize;
+        for _ in 0..4 {
+            for e in data.chunks(elem) {
+                total += encode_element(e, CodecOptions::default()).len();
+            }
+        }
+        let s = t0.elapsed().as_secs_f64();
+        println!("elem {elem:>6}: {:.1} MiB/s (total {total})", 4.0 / s);
+    }
+}

@@ -1,0 +1,35 @@
+//! §Perf micro-benchmark: write-path breakdown (scda vs fsync vs baseline).
+//! See EXPERIMENTS.md §Perf.
+// Write-path breakdown: where do the milliseconds go for a 64 MiB array?
+use scda::api::{DataSrc, ScdaFile};
+use scda::par::{run_parallel, Communicator, Partition};
+use std::sync::Arc;
+use std::time::Instant;
+fn main() {
+    let total: u64 = 64 << 20;
+    let elem = 64 * 1024u64;
+    let n = total / elem;
+    let payload: Arc<Vec<u8>> = Arc::new(vec![0xA5u8; total as usize]);
+    for p in [1usize, 4] {
+        let part = Arc::new(Partition::uniform(p, n));
+        let path = Arc::new(std::env::temp_dir().join(format!("perfw-{p}.scda")));
+        for label in ["scda", "scda-nosync", "baseline"] {
+            let (pp, pl, pa) = (Arc::clone(&path), Arc::clone(&payload), Arc::clone(&part));
+            let lab = label.to_string();
+            let t0 = Instant::now();
+            run_parallel(p, move |comm| {
+                let r = pa.local_range(comm.rank());
+                let local = &pl[(r.start * elem) as usize..(r.end * elem) as usize];
+                match lab.as_str() {
+                    "baseline" => std::fs::write(format!("{}.{}", pp.display(), comm.rank()), local).unwrap(),
+                    _ => {
+                        let mut f = ScdaFile::create(comm, &*pp, b"w").unwrap();
+                        f.write_array(DataSrc::Contiguous(local), &pa, elem, Some(b"x"), false).unwrap();
+                        if lab == "scda-nosync" { drop(f); } else { f.close().unwrap(); }
+                    }
+                }
+            });
+            println!("P={p} {label:>12}: {:.1} ms  ({:.0} MiB/s)", t0.elapsed().as_secs_f64()*1e3, 64.0/t0.elapsed().as_secs_f64());
+        }
+    }
+}

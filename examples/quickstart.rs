@@ -1,0 +1,69 @@
+//! Quickstart: write an scda file with all four section types, read it
+//! back under a different partition, and verify every byte.
+//!
+//!     cargo run --release --example quickstart
+
+use scda::api::{DataSrc, ScdaFile};
+use scda::par::{run_parallel, Communicator, Partition, SerialComm};
+use std::sync::Arc;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let path = std::env::temp_dir().join("scda-quickstart.scda");
+
+    // ---- Write in serial -------------------------------------------------
+    let mut f = ScdaFile::create(SerialComm::new(), &path, b"quickstart")?;
+    // 32 bytes of inline status — visible verbatim in a text editor.
+    f.write_inline(b"run 0042 / state OK / restart 1\n", Some(b"status"))?;
+    // A global configuration block.
+    f.write_block(b"dt=1e-3\nscheme=rk4\nlevels=3..7\n", Some(b"config"))?;
+    // A fixed-size array: 1000 elements x 8 bytes.
+    let n = 1000u64;
+    let part = Partition::uniform(1, n);
+    let data: Vec<u8> = (0..n * 8).map(|i| (i % 251) as u8).collect();
+    f.write_array(DataSrc::Contiguous(&data), &part, 8, Some(b"field:u64"), false)?;
+    // The same array, compressed per element (§3 convention).
+    f.write_array(DataSrc::Contiguous(&data), &part, 8, Some(b"field:u64:z"), true)?;
+    f.close()?;
+    println!("wrote {} ({} bytes)", path.display(), std::fs::metadata(&path)?.len());
+
+    // ---- Strict structural verification ----------------------------------
+    let sections = scda::api::verify_file(&path)?;
+    println!("verify: OK ({sections} raw sections)");
+
+    // ---- Read back on 3 simulated ranks with a different partition -------
+    let path2 = Arc::new(path.clone());
+    let expected = Arc::new(data);
+    run_parallel(3, move |comm| {
+        let rank = comm.rank();
+        let part = Partition::uniform(3, n);
+        let mut f = ScdaFile::open(comm, &*path2).unwrap();
+        // Sections must be consumed in order; headers tell us what's next.
+        let h = f.read_section_header(false).unwrap();
+        assert_eq!(h.user, b"status");
+        let inline = f.read_inline_data(0, true).unwrap();
+        if rank == 0 {
+            print!("status: {}", String::from_utf8_lossy(&inline.unwrap()));
+        }
+        let h = f.read_section_header(false).unwrap();
+        assert_eq!(h.user, b"config");
+        f.read_block_data(0, rank == 0).unwrap();
+        // Raw array: each rank reads its own window.
+        let h = f.read_section_header(false).unwrap();
+        assert_eq!((h.elem_count, h.elem_size), (n, 8));
+        let local = f.read_array_data(&part, 8, true).unwrap().unwrap();
+        let r = part.local_range(rank);
+        assert_eq!(local, &expected[(r.start * 8) as usize..(r.end * 8) as usize]);
+        // Compressed array: transparently decoded.
+        let h = f.read_section_header(true).unwrap();
+        assert!(h.decoded);
+        let local_z = f.read_array_data(&part, 8, true).unwrap().unwrap();
+        assert_eq!(local_z, local);
+        assert!(f.at_end().unwrap());
+        f.close().unwrap();
+        println!("rank {rank}: verified {} bytes", local.len() * 2);
+    });
+
+    std::fs::remove_file(&path)?;
+    println!("quickstart OK");
+    Ok(())
+}

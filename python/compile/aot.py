@@ -1,0 +1,79 @@
+"""AOT lowering: JAX/Pallas graphs -> HLO *text* -> artifacts/.
+
+Run once at build time (`make artifacts`); python never appears on the
+request path. The rust runtime (rust/src/runtime/engine.rs) loads the
+text with `HloModuleProto::from_text_file`, compiles on the PJRT CPU
+client, and executes.
+
+HLO text — not `lowered.compile().serialize()` and not a serialized
+HloModuleProto — is the interchange format: jax >= 0.5 emits protos with
+64-bit instruction ids that xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Usage: python -m compile.aot [--out-dir ../artifacts]
+"""
+
+import argparse
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.shuffle_delta import TILE
+
+# Chunk sizes (in u32 elements) compiled ahead of time. The runtime picks
+# the largest chunk <= remaining work and pads the tail chunk. 65536 u32 =
+# 256 KiB per chunk is the steady-state hot path; the small variant keeps
+# tail padding bounded for short elements.
+CHUNK_SIZES = [65536, 8192]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_all(out_dir: pathlib.Path) -> dict:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    manifest = {"tile": TILE, "entropy_sample": model.ENTROPY_SAMPLE, "graphs": {}}
+    for n in CHUNK_SIZES:
+        assert n % TILE == 0
+        fwd_spec = jax.ShapeDtypeStruct((n,), jnp.uint32)
+        inv_spec = jax.ShapeDtypeStruct((4, n), jnp.uint8)
+
+        fwd = jax.jit(model.precond_fwd_model).lower(fwd_spec)
+        fwd_path = out_dir / f"precond_fwd_{n}.hlo.txt"
+        fwd_path.write_text(to_hlo_text(fwd))
+
+        inv = jax.jit(model.precond_inv_model).lower(inv_spec)
+        inv_path = out_dir / f"precond_inv_{n}.hlo.txt"
+        inv_path.write_text(to_hlo_text(inv))
+
+        manifest["graphs"][str(n)] = {
+            "fwd": fwd_path.name,
+            "inv": inv_path.name,
+            "in_u32": n,
+            "out_planes": [4, n],
+        }
+        print(f"lowered chunk={n}: {fwd_path.name} ({fwd_path.stat().st_size} B), "
+              f"{inv_path.name} ({inv_path.stat().st_size} B)")
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2) + "\n")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts", help="artifact output directory")
+    args = ap.parse_args()
+    lower_all(pathlib.Path(args.out_dir))
+
+
+if __name__ == "__main__":
+    main()

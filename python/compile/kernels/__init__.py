@@ -1,0 +1,3 @@
+"""L1 Pallas kernels and their pure-jnp oracles."""
+
+from . import ref, shuffle_delta  # noqa: F401

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the shuffle/delta kernels (no Pallas).
+
+This is the correctness contract: `shuffle_delta.precond_fwd` must equal
+`ref_fwd` bit-for-bit and `precond_inv` must equal `ref_inv`, for every
+shape and input (pytest + hypothesis sweep them). The rust native fallback
+(rust/src/runtime/precond.rs) implements the same function and is checked
+against the AOT artifacts in rust/tests/runtime_artifacts.rs.
+"""
+
+import jax.numpy as jnp
+
+from .shuffle_delta import TILE
+
+
+def ref_fwd(x):
+    """uint32[N] -> uint8[4, N]; tile-local XOR delta + byte-plane split."""
+    n = x.shape[0]
+    assert n % TILE == 0
+    t = x.reshape(-1, TILE)
+    prev = jnp.concatenate([jnp.zeros((t.shape[0], 1), jnp.uint32), t[:, :-1]], axis=1)
+    d = (t ^ prev).reshape(n)
+    return jnp.stack([(d >> (8 * k)).astype(jnp.uint8) for k in range(4)], axis=0)
+
+
+def ref_inv(planes):
+    """uint8[4, N] -> uint32[N]; byte-plane merge + tile-local XOR scan."""
+    n = planes.shape[1]
+    assert planes.shape[0] == 4 and n % TILE == 0
+    p = planes.astype(jnp.uint32)
+    d = p[0] | (p[1] << 8) | (p[2] << 16) | (p[3] << 24)
+    t = d.reshape(-1, TILE)
+    # Prefix-XOR scan along the tile axis.
+    import jax
+
+    x = jax.lax.associative_scan(jnp.bitwise_xor, t, axis=1)
+    return x.reshape(n)

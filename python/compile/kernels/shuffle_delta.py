@@ -1,0 +1,86 @@
+"""L1 — Pallas preconditioning kernels: XOR-delta + byte-plane shuffle.
+
+The scda compression convention (paper §3) deflates each array element
+individually. Raw floating-point scientific data deflates poorly; the
+classic fix (HDF5 shuffle filter, Blosc) is to decorrelate neighbouring
+values and regroup bytes by significance before the entropy coder. These
+kernels implement exactly that transform:
+
+    fwd:  u32[N]  ->  u8[4, N]     d[i] = x[i] ^ x[i-1] (tile-local),
+                                   plane[k][i] = byte k of d[i]
+    inv:  u8[4, N] -> u32[N]       prefix-XOR scan per tile
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the transform is
+tiled so one tile's working set fits comfortably in VMEM; the grid sweeps
+HBM->VMEM via BlockSpec. All arithmetic is element-wise integer work
+(VPU); there is no data-dependent control flow, so the schedule is a pure
+streaming pass. `interpret=True` everywhere — the CPU PJRT plugin cannot
+run Mosaic custom-calls; real-TPU viability is argued by footprint in
+EXPERIMENTS.md, not measured here.
+
+The delta is *tile-local* (element 0 of each tile is stored verbatim) so
+that tiles are independent: this is what lets the rust runtime precondition
+arbitrarily partitioned element streams without halo exchanges, and it is
+also what the bit-exact native fallback in rust/src/runtime/precond.rs
+implements.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# One tile's footprint: TILE u32 in (8 KiB) + 4xTILE u8 out (8 KiB) —
+# far below the ~16 MiB VMEM budget; chosen small to give the pipeline
+# latitude for double-buffering across the grid sweep.
+TILE = 2048
+
+
+def _fwd_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    # Tile-local XOR delta: d[0] = x[0], d[i] = x[i] ^ x[i-1].
+    prev = jnp.concatenate([jnp.zeros((1,), jnp.uint32), x[:-1]])
+    d = x ^ prev
+    # Byte-plane split (little-endian significance order).
+    planes = [(d >> (8 * k)).astype(jnp.uint8) for k in range(4)]
+    o_ref[...] = jnp.stack(planes, axis=0)
+
+
+def _inv_kernel(p_ref, o_ref):
+    p = p_ref[...].astype(jnp.uint32)
+    d = p[0] | (p[1] << 8) | (p[2] << 16) | (p[3] << 24)
+    # Inclusive prefix-XOR scan (Hillis–Steele, log2(TILE) steps).
+    x = d
+    k = 1
+    while k < TILE:
+        x = x ^ jnp.concatenate([jnp.zeros((k,), jnp.uint32), x[:-k]])
+        k *= 2
+    o_ref[...] = x
+
+
+def precond_fwd(x):
+    """Forward transform. `x`: uint32[N] with N a multiple of TILE."""
+    n = x.shape[0]
+    assert n % TILE == 0, f"N={n} must be a multiple of TILE={TILE}"
+    return pl.pallas_call(
+        _fwd_kernel,
+        grid=(n // TILE,),
+        in_specs=[pl.BlockSpec((TILE,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((4, TILE), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((4, n), jnp.uint8),
+        interpret=True,
+    )(x)
+
+
+def precond_inv(planes):
+    """Inverse transform. `planes`: uint8[4, N] with N a multiple of TILE."""
+    n = planes.shape[1]
+    assert planes.shape[0] == 4
+    assert n % TILE == 0, f"N={n} must be a multiple of TILE={TILE}"
+    return pl.pallas_call(
+        _inv_kernel,
+        grid=(n // TILE,),
+        in_specs=[pl.BlockSpec((4, TILE), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((TILE,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.uint32),
+        interpret=True,
+    )(planes)

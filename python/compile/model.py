@@ -1,0 +1,51 @@
+"""L2 — the JAX compute graphs AOT-compiled for the rust runtime.
+
+Two graphs per chunk size, both calling the L1 Pallas kernels:
+
+* ``precond_fwd_model``: u32[N] -> (u8[4, N] shuffled planes,
+  f32[] byte-entropy estimate). The entropy estimate drives the
+  coordinator's compress-vs-store decision per chunk: if the shuffled
+  bytes are near-random (entropy ~ 8 bits/byte), deflate is skipped and
+  the element is stored raw inside the zlib stream (level-0 semantics),
+  saving CPU on incompressible data.
+* ``precond_inv_model``: u8[4, N] -> u32[N], the exact inverse transform.
+
+The entropy estimate is formulated as a one-hot (SAMPLE x 256) matrix
+product — the TPU-idiomatic histogram (MXU work) rather than a scatter —
+over a fixed-size sample of the shuffled bytes so its cost is independent
+of N.
+"""
+
+import jax.nn
+import jax.numpy as jnp
+
+from .kernels import shuffle_delta
+
+# Bytes sampled for the entropy estimate (one-hot matmul operand:
+# 8192 x 256 f32 = 8 MiB, VMEM-friendly and MXU-shaped).
+ENTROPY_SAMPLE = 8192
+
+
+def byte_entropy_estimate(planes):
+    """Shannon entropy (bits/byte) of a leading sample of the planes."""
+    flat = planes.reshape(-1)
+    sample = flat[:ENTROPY_SAMPLE].astype(jnp.int32)
+    onehot = jax.nn.one_hot(sample, 256, dtype=jnp.float32)
+    ones = jnp.ones((1, sample.shape[0]), jnp.float32)
+    counts = (ones @ onehot)[0]  # MXU-shaped histogram
+    total = jnp.sum(counts)
+    p = counts / total
+    # 0 * log(0) := 0.
+    logp = jnp.where(p > 0, jnp.log2(jnp.where(p > 0, p, 1.0)), 0.0)
+    return -jnp.sum(p * logp)
+
+
+def precond_fwd_model(x):
+    """u32[N] -> (u8[4, N], f32[]) — shuffle planes and entropy estimate."""
+    planes = shuffle_delta.precond_fwd(x)
+    return planes, byte_entropy_estimate(planes)
+
+
+def precond_inv_model(planes):
+    """u8[4, N] -> u32[N] — exact inverse of the forward transform."""
+    return shuffle_delta.precond_inv(planes)

@@ -1,0 +1,7 @@
+"""Make `compile` and `scda_py` importable whether pytest runs from the
+repository root (CI invocation) or from python/ (Makefile invocation)."""
+
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))

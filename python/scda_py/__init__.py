@@ -1,0 +1,17 @@
+"""scda_py — independent, serial, pure-Python implementation of the scda
+format (paper §2) and its compression convention (§3).
+
+Exists for conformance cross-validation only: files written here must be
+byte-identical to the rust implementation's output for the same input
+(Unix line-break style), and each implementation must read the other's
+files. It deliberately shares no code with the rust crate and uses
+CPython's zlib as the second, independent RFC 1950/1951 oracle.
+"""
+
+from .format import (  # noqa: F401
+    ScdaReader,
+    ScdaWriter,
+    encode_count_entry,
+    pad_data,
+    pad_str,
+)

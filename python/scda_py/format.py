@@ -1,0 +1,230 @@
+"""Serial scda writer/reader in pure Python (Unix line-break style).
+
+Follows paper §2 (format) and §3 (compression convention) to the byte.
+"""
+
+import base64
+import struct
+import zlib
+
+MAGIC = b"scdata0"
+VENDOR = b"scda-py 0.1"
+USER_MAX = 58
+VENDOR_MAX = 20
+COUNT_ENTRY = 32
+INLINE_BYTES = 32
+D = 32  # data padding divisor
+
+CONV_BLOCK = b"B compressed scda 00"
+CONV_ARRAY = b"A compressed scda 00"
+CONV_VARRAY = b"V compressed scda 00"
+
+
+def pad_str(data: bytes, d: int) -> bytes:
+    """padding('-' to d), Unix style (q = b'-\\n')."""
+    if len(data) + 4 > d:
+        raise ValueError(f"string of {len(data)} bytes exceeds field of {d}")
+    p = d - len(data)
+    return data + b" " + b"-" * (p - 3) + b"-\n"
+
+
+def unpad_str(field: bytes) -> bytes:
+    if field[-2:] not in (b"-\n", b"\r\n"):
+        raise ValueError("bad string padding tail")
+    i = len(field) - 2
+    while i > 0 and field[i - 1 : i] == b"-":
+        i -= 1
+    if i == 0 or field[i - 1 : i] != b" ":
+        raise ValueError("bad string padding")
+    return field[: i - 1]
+
+
+def data_pad_len(n: int) -> int:
+    p = D - n % D
+    if p < 7:
+        p += D
+    return p
+
+
+def pad_data(n: int, last: bytes | None) -> bytes:
+    """padding('=' mod 32), Unix style."""
+    p = data_pad_len(n)
+    head = b"==" if (n > 0 and last == b"\n") else b"\n="
+    return head + b"=" * (p - 4) + b"\n\n"
+
+
+def encode_count_entry(letter: bytes, value: int) -> bytes:
+    digits = str(value).encode()
+    if len(digits) > 26:
+        raise ValueError("count exceeds 26 digits")
+    return letter + b" " + pad_str(digits, 30)
+
+
+def decode_count_entry(entry: bytes, letter: bytes) -> int:
+    assert len(entry) == COUNT_ENTRY, len(entry)
+    if entry[:2] != letter + b" ":
+        raise ValueError(f"count entry starts {entry[:2]!r}, want {letter!r}")
+    digits = unpad_str(entry[2:])
+    if not digits or (digits[0:1] == b"0" and len(digits) > 1) or not digits.isdigit():
+        raise ValueError(f"bad digits {digits!r}")
+    return int(digits)
+
+
+def compress_element(data: bytes, level: int = 9) -> bytes:
+    """§3.1 two-stage framing: be64 size + b'z' + zlib, then base64/76."""
+    stage1 = struct.pack(">Q", len(data)) + b"z" + zlib.compress(data, level)
+    code = base64.b64encode(stage1)
+    lines = [code[i : i + 76] for i in range(0, len(code), 76)] or [b""]
+    return b"".join(line + b"=\n" for line in lines)
+
+
+def decompress_element(enc: bytes) -> bytes:
+    # Line geometry is determined by the total length: every line (incl.
+    # a partial or empty last one) carries a 2-byte terminator.
+    lines = max(1, -(-len(enc) // 78))
+    code_len = len(enc) - 2 * lines
+    assert code_len >= 0 and code_len % 4 == 0, "bad base64 stream length"
+    code = b"".join(enc[78 * j : 78 * j + min(76, code_len - 76 * j)] for j in range(lines))
+    stage1 = base64.b64decode(code, validate=True)
+    (size,) = struct.unpack(">Q", stage1[:8])
+    assert stage1[8:9] == b"z", "missing z marker"
+    out = zlib.decompress(stage1[9:])
+    assert len(out) == size, (len(out), size)
+    return out
+
+
+class ScdaWriter:
+    """Serial writer; mirrors scda_fopen(..., 'w') + fwrite_* + fclose."""
+
+    def __init__(self, path, user: bytes = b""):
+        self.f = open(path, "wb")
+        self.f.write(MAGIC + b" " + pad_str(VENDOR, 24))
+        self.f.write(b"F " + pad_str(user, 62))
+        self.f.write(pad_data(0, None))
+
+    def _type_row(self, letter: bytes, user: bytes) -> None:
+        self.f.write(letter + b" " + pad_str(user, 62))
+
+    def write_inline(self, data: bytes, user: bytes = b"") -> None:
+        assert len(data) == INLINE_BYTES
+        self._type_row(b"I", user)
+        self.f.write(data)
+
+    def write_block(self, data: bytes, user: bytes = b"", encode: bool = False) -> None:
+        if encode:
+            self.write_inline(encode_count_entry(b"U", len(data)), CONV_BLOCK)
+            data = compress_element(data)
+        self._type_row(b"B", user)
+        self.f.write(encode_count_entry(b"E", len(data)))
+        self.f.write(data)
+        self.f.write(pad_data(len(data), data[-1:] if data else None))
+
+    def write_array(self, data: bytes, n: int, e: int, user: bytes = b"", encode: bool = False) -> None:
+        assert len(data) == n * e
+        if encode:
+            self.write_inline(encode_count_entry(b"U", e), CONV_ARRAY)
+            elems = [compress_element(data[i * e : (i + 1) * e]) for i in range(n)]
+            self._write_varray_raw(elems, user)
+            return
+        self._type_row(b"A", user)
+        self.f.write(encode_count_entry(b"N", n))
+        self.f.write(encode_count_entry(b"E", e))
+        self.f.write(data)
+        self.f.write(pad_data(len(data), data[-1:] if data else None))
+
+    def write_varray(self, elems: list[bytes], user: bytes = b"", encode: bool = False) -> None:
+        if encode:
+            urows = b"".join(encode_count_entry(b"U", len(el)) for el in elems)
+            self.write_array(urows, len(elems), COUNT_ENTRY, CONV_VARRAY)
+            elems = [compress_element(el) for el in elems]
+        self._write_varray_raw(elems, user)
+
+    def _write_varray_raw(self, elems: list[bytes], user: bytes) -> None:
+        self._type_row(b"V", user)
+        self.f.write(encode_count_entry(b"N", len(elems)))
+        for el in elems:
+            self.f.write(encode_count_entry(b"E", len(el)))
+        data = b"".join(elems)
+        self.f.write(data)
+        self.f.write(pad_data(len(data), data[-1:] if data else None))
+
+    def close(self) -> None:
+        self.f.close()
+
+
+class ScdaReader:
+    """Serial reader with transparent decode of the convention."""
+
+    def __init__(self, path):
+        self.buf = open(path, "rb").read()
+        assert self.buf[:5] == b"scdat", "bad magic"
+        int(self.buf[5:7], 16)  # version parses as hex
+        self.vendor = unpad_str(self.buf[8:32])
+        assert self.buf[32:34] == b"F ", "bad header letter"
+        self.user = unpad_str(self.buf[34:96])
+        self.at = 128
+
+    def at_end(self) -> bool:
+        return self.at >= len(self.buf)
+
+    def _take(self, n: int) -> bytes:
+        out = self.buf[self.at : self.at + n]
+        assert len(out) == n, "truncated"
+        self.at += n
+        return out
+
+    def _raw_section(self):
+        """Parse one raw section -> (kind, user, payload-or-elems)."""
+        row = self._take(64)
+        kind, user = chr(row[0]), unpad_str(row[2:])
+        if kind == "I":
+            return kind, user, self._take(INLINE_BYTES)
+        if kind == "B":
+            e = decode_count_entry(self._take(COUNT_ENTRY), b"E")
+            data = self._take(e)
+            self._take(data_pad_len(e))
+            return kind, user, data
+        if kind == "A":
+            n = decode_count_entry(self._take(COUNT_ENTRY), b"N")
+            e = decode_count_entry(self._take(COUNT_ENTRY), b"E")
+            data = self._take(n * e)
+            self._take(data_pad_len(n * e))
+            return kind, user, [data[i * e : (i + 1) * e] for i in range(n)]
+        if kind == "V":
+            n = decode_count_entry(self._take(COUNT_ENTRY), b"N")
+            sizes = [decode_count_entry(self._take(COUNT_ENTRY), b"E") for _ in range(n)]
+            elems = [self._take(s) for s in sizes]
+            self._take(data_pad_len(sum(sizes)))
+            return kind, user, elems
+        raise ValueError(f"unknown section {kind!r}")
+
+    def next_section(self, decode: bool = True):
+        """-> (kind, user, payload) with convention resolution.
+
+        payload: bytes for I/B; list[bytes] (elements) for A/V.
+        """
+        kind, user, payload = self._raw_section()
+        if not decode:
+            return kind, user, payload
+        if kind == "I" and user == CONV_BLOCK:
+            u = decode_count_entry(payload, b"U")
+            k2, user2, comp = self._raw_section()
+            assert k2 == "B", "convention violated"
+            data = decompress_element(comp)
+            assert len(data) == u
+            return "B", user2, data
+        if kind == "I" and user == CONV_ARRAY:
+            u = decode_count_entry(payload, b"U")
+            k2, user2, elems = self._raw_section()
+            assert k2 == "V", "convention violated"
+            out = [decompress_element(el) for el in elems]
+            assert all(len(o) == u for o in out)
+            return "A", user2, out
+        if kind == "A" and user == CONV_VARRAY:
+            sizes = [decode_count_entry(row, b"U") for row in payload]
+            k2, user2, elems = self._raw_section()
+            assert k2 == "V" and len(elems) == len(sizes), "convention violated"
+            out = [decompress_element(el) for el in elems]
+            assert [len(o) for o in out] == sizes
+            return "V", user2, out
+        return kind, user, payload

@@ -1,0 +1,138 @@
+"""Conformance of the pure-Python scda implementation against the spec's
+stated invariants (section sizes, padding shapes, convention layering)."""
+
+import pathlib
+import tempfile
+
+import pytest
+
+from scda_py import ScdaReader, ScdaWriter
+from scda_py.format import (
+    compress_element,
+    data_pad_len,
+    decode_count_entry,
+    decompress_element,
+    encode_count_entry,
+    pad_data,
+    pad_str,
+    unpad_str,
+)
+
+
+def roundtrip_file(write_fn):
+    with tempfile.TemporaryDirectory() as d:
+        path = pathlib.Path(d) / "t.scda"
+        w = ScdaWriter(path, b"pytest")
+        write_fn(w)
+        w.close()
+        return path.read_bytes(), ScdaReader(path)
+
+
+def test_header_is_128_bytes():
+    data, r = roundtrip_file(lambda w: None)
+    assert len(data) == 128
+    assert data.startswith(b"scdata0 ")
+    assert data.endswith(b"\n\n")
+    assert r.user == b"pytest"
+    assert r.at_end()
+
+
+def test_padding_shapes():
+    assert len(pad_str(b"abc", 62)) == 62
+    assert unpad_str(pad_str(b"abc", 62)) == b"abc"
+    for n in range(0, 100):
+        p = data_pad_len(n)
+        assert 7 <= p <= 38 and (n + p) % 32 == 0
+        assert len(pad_data(n, b"x")) == p
+    assert pad_data(1, b"\n")[:2] == b"=="
+    assert pad_data(1, b"x")[:2] == b"\n="
+
+
+def test_count_entries():
+    for v in (0, 1, 42, 10**26 - 1):
+        e = encode_count_entry(b"N", v)
+        assert len(e) == 32
+        assert decode_count_entry(e, b"N") == v
+    with pytest.raises(ValueError):
+        encode_count_entry(b"N", 10**26)
+
+
+def test_all_sections_roundtrip():
+    inline = bytes(range(32))
+    block = b"global context"
+    arr = bytes(100)
+    elems = [b"a", b"", b"ccc" * 40]
+
+    def write(w):
+        w.write_inline(inline, b"i")
+        w.write_block(block, b"b")
+        w.write_array(arr, 25, 4, b"a")
+        w.write_varray(elems, b"v")
+
+    _, r = roundtrip_file(write)
+    assert r.next_section() == ("I", b"i", inline)
+    assert r.next_section() == ("B", b"b", block)
+    kind, user, got = r.next_section()
+    assert (kind, user) == ("A", b"a") and b"".join(got) == arr
+    assert r.next_section() == ("V", b"v", elems)
+    assert r.at_end()
+
+
+def test_compression_convention_roundtrip():
+    block = b"z" * 10_000
+    arr = b"0123456789abcdef" * 64
+    elems = [b"x" * n for n in (0, 1, 500, 77)]
+
+    def write(w):
+        w.write_block(block, b"zb", encode=True)
+        w.write_array(arr, 64, 16, b"za", encode=True)
+        w.write_varray(elems, b"zv", encode=True)
+
+    data, r = roundtrip_file(write)
+    assert ("B", b"zb", block) == r.next_section()
+    kind, user, got = r.next_section()
+    assert (kind, user) == ("A", b"za") and b"".join(got) == arr
+    assert ("V", b"zv", elems) == r.next_section()
+    assert r.at_end()
+    # Compressed payloads are ASCII-armored in the file.
+    assert b"B compressed scda 00" in data
+    assert b"A compressed scda 00" in data
+    assert b"V compressed scda 00" in data
+
+
+def test_decode_false_reads_raw_pair():
+    def write(w):
+        w.write_block(b"payload", b"u", encode=True)
+
+    _, r = roundtrip_file(write)
+    kind, user, meta = r.next_section(decode=False)
+    assert (kind, user) == ("I", b"B compressed scda 00")
+    assert meta.startswith(b"U 7 ")
+    kind, user, raw = r.next_section(decode=False)
+    assert (kind, user) == ("B", b"u")
+    assert raw.isascii() and raw != b"payload"
+
+
+def test_element_framing():
+    for payload in (b"", b"x", b"hello" * 1000):
+        enc = compress_element(payload)
+        assert enc.isascii()
+        assert decompress_element(enc) == payload
+        # lines of 76 + "=\n"
+        for j in range(0, len(enc), 78):
+            line = enc[j : j + 78]
+            assert line.endswith(b"=\n") or len(line) < 78
+
+
+def test_marker_byte_verified():
+    # Craft a frame whose ninth byte is not 'z' (paper: "verifying that
+    # the ninth byte of the decoded base64 data is indeed 'z'").
+    import base64 as b64
+    import struct
+    import zlib
+
+    stage1 = struct.pack(">Q", 4) + b"q" + zlib.compress(b"data")
+    code = b64.b64encode(stage1)
+    bad = b"".join(code[i : i + 76] + b"=\n" for i in range(0, len(code), 76))
+    with pytest.raises(AssertionError):
+        decompress_element(bad)

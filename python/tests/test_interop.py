@@ -1,0 +1,91 @@
+"""Interop from the python side: drive the release `scda` binary (when
+built) against scda_py files and vice versa. The reverse directions are
+covered by rust/tests/interop_python.rs under `cargo test`.
+
+Skips when target/release/scda is absent (run `make build` first).
+"""
+
+import pathlib
+import subprocess
+
+import pytest
+
+from scda_py import ScdaReader, ScdaWriter
+
+REPO = pathlib.Path(__file__).resolve().parents[2]
+BIN = REPO / "target" / "release" / "scda"
+
+needs_bin = pytest.mark.skipif(not BIN.exists(), reason="rust binary not built (make build)")
+
+
+def run(args: list[str]) -> subprocess.CompletedProcess:
+    return subprocess.run([str(BIN), *args], capture_output=True, text=True, timeout=300)
+
+
+@needs_bin
+def test_rust_verifies_python_file(tmp_path):
+    path = tmp_path / "py.scda"
+    w = ScdaWriter(path, b"py-interop")
+    w.write_inline(b"?" * 32, b"i")
+    w.write_block(b"data " * 100, b"b", encode=True)
+    w.write_varray([b"x" * n for n in (5, 0, 1000)], b"v", encode=True)
+    w.close()
+    out = run(["verify", str(path)])
+    assert out.returncode == 0, out.stderr
+    assert "OK" in out.stdout
+
+
+@needs_bin
+def test_rust_info_lists_python_sections(tmp_path):
+    path = tmp_path / "py.scda"
+    w = ScdaWriter(path, b"listing")
+    w.write_block(b"hello", b"greeting")
+    w.write_array(bytes(64), 8, 8, b"grid")
+    w.close()
+    out = run(["info", str(path)])
+    assert out.returncode == 0, out.stderr
+    assert "greeting" in out.stdout
+    assert "grid" in out.stdout
+    assert '"listing"' in out.stdout
+
+
+@needs_bin
+def test_rust_cat_extracts_python_payload(tmp_path):
+    path = tmp_path / "py.scda"
+    payload = b"the exact payload bytes \x00\x01\x02"
+    w = ScdaWriter(path, b"")
+    w.write_block(payload, b"blob", encode=True)
+    w.close()
+    out = subprocess.run([str(BIN), "cat", str(path), "0"], capture_output=True, timeout=300)
+    assert out.returncode == 0, out.stderr
+    assert out.stdout == payload
+
+
+@needs_bin
+def test_python_reads_rust_demo_checkpoint(tmp_path):
+    path = tmp_path / "demo.scda"
+    out = run(["demo-write", str(path), "--ranks", "3", "--base", "2", "--max", "4", "--encode"])
+    assert out.returncode == 0, out.stderr
+    r = ScdaReader(path)
+    kinds = []
+    while not r.at_end():
+        kind, user, payload = r.next_section()
+        kinds.append((kind, bytes(user)))
+    assert ("I", b"scda:ckpt") == kinds[0]
+    assert ("B", b"scda:manifest") == kinds[1]
+    names = [u for _, u in kinds[2:]]
+    assert b"rho:f64x5" in names and b"hp:coeffs" in names
+
+
+@needs_bin
+def test_corrupt_file_yields_clean_error(tmp_path):
+    path = tmp_path / "bad.scda"
+    w = ScdaWriter(path, b"x")
+    w.write_block(b"payload", b"b")
+    w.close()
+    data = bytearray(path.read_bytes())
+    data[0] ^= 0xFF
+    path.write_bytes(bytes(data))
+    out = run(["verify", str(path)])
+    assert out.returncode != 0
+    assert "scda error 1" in out.stderr  # corrupt-file group (1xxx)

@@ -1,0 +1,73 @@
+//! F2 — the L1/L2 preconditioner's effect on deflate ratio and speed:
+//! shuffle/delta ON vs OFF across the corpus, plus PJRT-vs-native
+//! transform throughput at chunk granularity (the AOT hot path).
+
+use scda::bench_support::{corpus, measure, Table};
+use scda::codec::zlib_compress;
+use scda::runtime::{Preconditioner, CHUNK};
+
+fn main() {
+    let quick = scda::bench_support::quick();
+    let len = if quick { 1 << 20 } else { 8 << 20 };
+    let reps = if quick { 2 } else { 3 };
+    let native = Preconditioner::native();
+
+    println!("F2a: deflate (level 6) ratio with and without shuffle/delta, {} MiB inputs\n", len >> 20);
+    let mut table = Table::new(&["corpus", "raw ratio", "shuffled ratio", "improvement", "entropy est (bits/B)"]);
+    for (name, data) in corpus(len) {
+        let raw = zlib_compress(&data, 6).len() as f64 / data.len() as f64;
+        let (t, ent) = native.forward(&data).unwrap();
+        let sh = zlib_compress(&t, 6).len() as f64 / data.len() as f64;
+        table.row(&[
+            name.to_string(),
+            format!("{raw:.3}"),
+            format!("{sh:.3}"),
+            format!("{:+.1}%", (1.0 - sh / raw) * 100.0),
+            format!("{ent:.2}"),
+        ]);
+    }
+    table.print();
+    println!("\nF2a shape check: improvement on smooth numeric data (amr-f64), ~0 on text/random\n");
+
+    println!("F2b: transform throughput at chunk granularity ({} KiB chunks)\n", CHUNK * 4 / 1024);
+    let data = corpus(4 * CHUNK * 4).remove(3).1; // amr-f64, 4 chunks
+    let mut table = Table::new(&["backend", "fwd MiB/s", "inv MiB/s", "bit-identical"]);
+    let mut rows: Vec<(String, f64, f64, bool)> = Vec::new();
+    let (ref_t, _) = native.forward(&data).unwrap();
+    {
+        let d = data.clone();
+        let p = Preconditioner::native();
+        let fwd = measure(1, reps, move || {
+            std::hint::black_box(p.forward(&d).unwrap().0.len());
+        });
+        let p = Preconditioner::native();
+        let t = ref_t.clone();
+        let inv = measure(1, reps, move || {
+            std::hint::black_box(p.inverse(&t).unwrap().len());
+        });
+        rows.push(("native".into(), fwd.mib_per_s(data.len() as u64), inv.mib_per_s(data.len() as u64), true));
+    }
+    match Preconditioner::pjrt(&scda::cli::artifacts_dir()) {
+        Ok(p) => {
+            let ident = p.forward(&data).unwrap().0 == ref_t;
+            let d = data.clone();
+            let p1 = Preconditioner::pjrt(&scda::cli::artifacts_dir()).unwrap();
+            let fwd = measure(1, reps, move || {
+                std::hint::black_box(p1.forward(&d).unwrap().0.len());
+            });
+            let p2 = Preconditioner::pjrt(&scda::cli::artifacts_dir()).unwrap();
+            let t = ref_t.clone();
+            let inv = measure(1, reps, move || {
+                std::hint::black_box(p2.inverse(&t).unwrap().len());
+            });
+            rows.push(("pjrt (interpret)".into(), fwd.mib_per_s(data.len() as u64), inv.mib_per_s(data.len() as u64), ident));
+        }
+        Err(e) => println!("(PJRT unavailable: {e}; run `make artifacts`)"),
+    }
+    for (name, f, i, ident) in rows {
+        table.row(&[name, format!("{f:.0}"), format!("{i:.0}"), ident.to_string()]);
+    }
+    table.print();
+    println!("\nF2b note: interpret-mode Pallas is a correctness vehicle, not a TPU perf proxy —");
+    println!("see EXPERIMENTS.md §Perf for the VMEM/roofline estimate of the real-TPU kernel.");
+}

@@ -1,0 +1,84 @@
+//! T1 — serial-equivalence at scale (DESIGN.md §Experiments).
+//!
+//! Writes the same mixed-section workload in serial and under every
+//! process count P ∈ {1,2,3,4,7,8,16,32} with randomized partitions,
+//! SHA-256s each file, and reports the hashes plus write wall time.
+//! PASS = one identical hash per row.
+
+use scda::api::{DataSrc, ScdaFile};
+use scda::bench_support::{hex, sha256, Table};
+use scda::par::{run_parallel, Communicator, Partition};
+use scda::testutil::Rng;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn main() {
+    let quick = scda::bench_support::quick();
+    let n: u64 = if quick { 1 << 12 } else { 1 << 16 };
+    let elem = 48u64;
+    let mut rng = Rng::new(0x71);
+    let data: Arc<Vec<u8>> = Arc::new(rng.bytes((n * elem) as usize, 64));
+    let vsizes: Arc<Vec<u64>> = Arc::new((0..n).map(|_| rng.below(100)).collect());
+    let vtotal: u64 = vsizes.iter().sum();
+    let vdata: Arc<Vec<u8>> = Arc::new(rng.bytes(vtotal as usize, 16));
+
+    println!("T1: serial-equivalence, N={n} elements (A: {elem} B fixed; V: {vtotal} B total)\n");
+    let mut table = Table::new(&["P", "partition", "write secs", "file SHA-256 (first 16 hex)"]);
+    let mut reference: Option<[u8; 32]> = None;
+    let mut ok = true;
+    for p in [1usize, 2, 3, 4, 7, 8, 16, 32] {
+        for style in ["uniform", "random", "skewed"] {
+            let part = match style {
+                "uniform" => Partition::uniform(p, n),
+                "random" => Partition::from_counts(&rng.partition(n, p)),
+                _ => Partition::root_only(p, n),
+            };
+            let part = Arc::new(part);
+            let path = Arc::new(std::env::temp_dir().join(format!("scda-t1-{p}-{style}.scda")));
+            let (pp, dd, vv, vs, pa) =
+                (Arc::clone(&path), Arc::clone(&data), Arc::clone(&vdata), Arc::clone(&vsizes), Arc::clone(&part));
+            let t0 = Instant::now();
+            run_parallel(p, move |comm| {
+                let rank = comm.rank();
+                let r = pa.local_range(rank);
+                let mut f = ScdaFile::create(comm, &*pp, b"t1").unwrap();
+                f.write_inline(&[b'#'; 32], Some(b"t1:inline")).unwrap();
+                f.write_block_from(0, Some(b"global state"), 12, Some(b"t1:block"), false).unwrap();
+                let local = &dd[(r.start * elem) as usize..(r.end * elem) as usize];
+                f.write_array(DataSrc::Contiguous(local), &pa, elem, Some(b"t1:array"), false).unwrap();
+                let ls = &vs[r.start as usize..r.end as usize];
+                let lo: u64 = vs[..r.start as usize].iter().sum();
+                let len: u64 = ls.iter().sum();
+                f.write_varray(
+                    DataSrc::Contiguous(&vv[lo as usize..(lo + len) as usize]),
+                    &pa,
+                    ls,
+                    Some(b"t1:varray"),
+                    false,
+                )
+                .unwrap();
+                f.close().unwrap();
+            });
+            let secs = t0.elapsed().as_secs_f64();
+            let h = sha256(&std::fs::read(&*path).unwrap());
+            let matches = match &reference {
+                None => {
+                    reference = Some(h);
+                    true
+                }
+                Some(r) => *r == h,
+            };
+            ok &= matches;
+            table.row(&[
+                p.to_string(),
+                style.to_string(),
+                format!("{secs:.3}"),
+                format!("{}{}", hex(&h[..8]), if matches { "" } else { "  << MISMATCH" }),
+            ]);
+            std::fs::remove_file(&*path).unwrap();
+        }
+    }
+    table.print();
+    println!("\nT1 RESULT: {}", if ok { "PASS — file bytes invariant under repartition" } else { "FAIL" });
+    assert!(ok);
+}

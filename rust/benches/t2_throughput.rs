@@ -1,0 +1,101 @@
+//! T2 — parallel single-file throughput vs process count, against the
+//! file-per-rank baseline (the pattern scda's single-file design
+//! replaces). Reports write and read bandwidth per P for a fixed total
+//! payload; the paper's claim is that one partition-independent file
+//! costs ~nothing over P private files on the same storage.
+
+use scda::api::{DataSrc, ScdaFile};
+use scda::bench_support::{measure, Table};
+use scda::par::{run_parallel, Communicator, Partition};
+use std::sync::Arc;
+
+fn main() {
+    let quick = scda::bench_support::quick();
+    let total_bytes: u64 = if quick { 16 << 20 } else { 256 << 20 };
+    let elem = 64u64 * 1024;
+    let n = total_bytes / elem;
+    let reps = if quick { 2 } else { 3 };
+    println!("T2: {} MiB total, {} elements x {} KiB, {} reps (median)\n", total_bytes >> 20, n, elem >> 10, reps);
+
+    let payload: Arc<Vec<u8>> = Arc::new(vec![0xA5u8; total_bytes as usize]);
+    let dir = std::env::temp_dir().join("scda-t2");
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let mut table = Table::new(&["P", "scda write MiB/s", "scda +fsync MiB/s", "scda read MiB/s", "file-per-rank write MiB/s", "files"]);
+    for p in [1usize, 2, 4, 8, 16] {
+        let part = Arc::new(Partition::uniform(p, n));
+        // --- scda single-file write ---
+        let path = Arc::new(dir.join(format!("t2-{p}.scda")));
+        let w = {
+            let (path, payload, part) = (Arc::clone(&path), Arc::clone(&payload), Arc::clone(&part));
+            measure(1, reps, move || {
+                let (path, payload, part) = (Arc::clone(&path), Arc::clone(&payload), Arc::clone(&part));
+                run_parallel(p, move |comm| {
+                    let r = part.local_range(comm.rank());
+                    let local = &payload[(r.start * elem) as usize..(r.end * elem) as usize];
+                    let mut f = ScdaFile::create(comm, &*path, b"t2").unwrap();
+                    // The file-per-rank baseline (std::fs::write) does not
+                    // fsync; match its durability for a fair comparison.
+                    f.set_sync_on_close(false);
+                    f.write_array(DataSrc::Contiguous(local), &part, elem, Some(b"payload"), false).unwrap();
+                    f.close().unwrap();
+                });
+            })
+        };
+        // --- scda durable write (fsync on close) ---
+        let wd = {
+            let (path, payload, part) = (Arc::clone(&path), Arc::clone(&payload), Arc::clone(&part));
+            measure(1, reps, move || {
+                let (path, payload, part) = (Arc::clone(&path), Arc::clone(&payload), Arc::clone(&part));
+                run_parallel(p, move |comm| {
+                    let r = part.local_range(comm.rank());
+                    let local = &payload[(r.start * elem) as usize..(r.end * elem) as usize];
+                    let mut f = ScdaFile::create(comm, &*path, b"t2").unwrap();
+                    f.write_array(DataSrc::Contiguous(local), &part, elem, Some(b"payload"), false).unwrap();
+                    f.close().unwrap();
+                });
+            })
+        };
+        // --- scda read ---
+        let r = {
+            let (path, part) = (Arc::clone(&path), Arc::clone(&part));
+            measure(1, reps, move || {
+                let (path, part) = (Arc::clone(&path), Arc::clone(&part));
+                run_parallel(p, move |comm| {
+                    let mut f = ScdaFile::open(comm, &*path).unwrap();
+                    f.read_section_header(false).unwrap();
+                    let _ = f.read_array_data(&part, elem, true).unwrap();
+                    f.close().unwrap();
+                });
+            })
+        };
+        std::fs::remove_file(&*path).ok();
+        // --- baseline: one private file per rank (not serial-equivalent,
+        // not partition-independent; P files to manage downstream) ---
+        let dirb = dir.clone();
+        let payload2 = Arc::clone(&payload);
+        let part2 = Arc::clone(&part);
+        let b = measure(1, reps, move || {
+            let (dirb, payload2, part2) = (dirb.clone(), Arc::clone(&payload2), Arc::clone(&part2));
+            run_parallel(p, move |comm| {
+                let rank = comm.rank();
+                let r = part2.local_range(rank);
+                let local = &payload2[(r.start * elem) as usize..(r.end * elem) as usize];
+                std::fs::write(dirb.join(format!("t2-baseline-{rank}.bin")), local).unwrap();
+            });
+        });
+        for rank in 0..p {
+            std::fs::remove_file(dir.join(format!("t2-baseline-{rank}.bin"))).ok();
+        }
+        table.row(&[
+            p.to_string(),
+            format!("{:.0}", w.mib_per_s(total_bytes)),
+            format!("{:.0}", wd.mib_per_s(total_bytes)),
+            format!("{:.0}", r.mib_per_s(total_bytes)),
+            format!("{:.0}", b.mib_per_s(total_bytes)),
+            format!("1 vs {p}"),
+        ]);
+    }
+    table.print();
+    println!("\nT2 note: identical storage substrate; scda additionally guarantees one partition-independent file.");
+}

@@ -1,0 +1,81 @@
+//! T3 — selective random access under compression: per-element (scda §3)
+//! vs monolithic whole-array deflate (the baseline that "inhibits random
+//! and selective access", §1). Measures the latency of extracting k
+//! random elements from a compressed array of N elements.
+//!
+//! Expected shape: per-element access is O(element) — flat in N — while
+//! monolithic requires inflating the whole array prefix: O(N). The
+//! crossover: monolithic only wins when reading ~everything.
+
+use scda::bench_support::{measure, Table};
+use scda::codec::{decode_element, encode_element, zlib_compress, zlib_decompress, CodecOptions};
+use scda::mesh::{fields, ring_mesh};
+use scda::testutil::Rng;
+
+fn main() {
+    let quick = scda::bench_support::quick();
+    let elem = 4096usize;
+    let reps = if quick { 3 } else { 5 };
+    let mesh = ring_mesh(6, 9, (0.5, 0.5), 0.3);
+
+    println!("T3: extract k random elements of {elem} B from a compressed N-element array\n");
+    let mut table = Table::new(&[
+        "N",
+        "k",
+        "per-elem ms",
+        "monolithic ms",
+        "speedup",
+        "per-elem ratio",
+        "monolithic ratio",
+    ]);
+    let ns: &[usize] = if quick { &[256, 1024] } else { &[256, 1024, 4096, 16384] };
+    for &n in ns {
+        // Build payload: n elements of smooth AMR floats.
+        let mut payload = Vec::with_capacity(n * elem);
+        for (i, q) in mesh.iter().cycle().take(n).enumerate() {
+            let mut e = fields::fixed_payload_f32(q, elem / 4);
+            e[0] = i as u8; // decorrelate slightly
+            payload.extend_from_slice(&e);
+        }
+        // Per-element encoding (scda convention).
+        let opts = CodecOptions::default();
+        let encoded: Vec<Vec<u8>> = payload.chunks(elem).map(|e| encode_element(e, opts)).collect();
+        let per_elem_bytes: usize = encoded.iter().map(|e| e.len()).sum();
+        // Monolithic encoding.
+        let mono = zlib_compress(&payload, 9);
+
+        for k in [1usize, 16] {
+            let mut rng = Rng::new(n as u64 + k as u64);
+            let idx: Vec<usize> = (0..k).map(|_| rng.below(n as u64) as usize).collect();
+            let idx2 = idx.clone();
+            let enc = encoded.clone();
+            let s_pe = measure(1, reps, move || {
+                for &i in &idx2 {
+                    let e = decode_element(&enc[i]).unwrap();
+                    std::hint::black_box(&e);
+                }
+            });
+            let mono2 = mono.clone();
+            let idx3 = idx.clone();
+            let s_mono = measure(1, reps, move || {
+                // Monolithic: must inflate the whole array to reach
+                // arbitrary elements (deflate has no random entry points).
+                let all = zlib_decompress(&mono2, Some(n * elem)).unwrap();
+                for &i in &idx3 {
+                    std::hint::black_box(&all[i * elem..(i + 1) * elem]);
+                }
+            });
+            table.row(&[
+                n.to_string(),
+                k.to_string(),
+                format!("{:.3}", s_pe.median * 1e3),
+                format!("{:.3}", s_mono.median * 1e3),
+                format!("{:.1}x", s_mono.median / s_pe.median),
+                format!("{:.3}", per_elem_bytes as f64 / payload.len() as f64),
+                format!("{:.3}", mono.len() as f64 / payload.len() as f64),
+            ]);
+        }
+    }
+    table.print();
+    println!("\nT3 shape check: per-elem latency ~flat in N; monolithic grows ~linearly (who wins: per-element, by O(N/k)).");
+}

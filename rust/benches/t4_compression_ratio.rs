@@ -1,0 +1,58 @@
+//! T4 — compression ratio and speed: per-element convention (§3) vs
+//! monolithic deflate vs no compression, across the corpus and element
+//! sizes. Quantifies the paper's stated "downside to include more
+//! overhead than monolithic compression" and where the per-element
+//! framing (base64 4/3 + zlib header + size rows) amortizes.
+
+use scda::bench_support::{corpus, measure, Table};
+use scda::codec::{encode_element, zlib_compress, CodecOptions};
+
+fn main() {
+    let quick = scda::bench_support::quick();
+    let len = if quick { 1 << 20 } else { 8 << 20 };
+    let reps = if quick { 2 } else { 3 };
+    println!("T4: ratios over {} MiB per corpus entry (level 9)\n", len >> 20);
+
+    let mut table = Table::new(&[
+        "corpus",
+        "elem B",
+        "per-elem ratio",
+        "mono ratio",
+        "overhead vs mono",
+        "per-elem MiB/s",
+        "mono MiB/s",
+    ]);
+    for (name, data) in corpus(len) {
+        // Monolithic reference.
+        let d2 = data.clone();
+        let s_mono = measure(0, reps, move || {
+            std::hint::black_box(zlib_compress(&d2, 9).len());
+        });
+        let mono_len = zlib_compress(&data, 9).len();
+        for elem in [256usize, 4096, 65536] {
+            let opts = CodecOptions::default();
+            let d3 = data.clone();
+            let s_pe = measure(0, reps, move || {
+                let mut total = 0usize;
+                for e in d3.chunks(elem) {
+                    total += encode_element(e, opts).len();
+                }
+                std::hint::black_box(total);
+            });
+            let pe_len: usize = data.chunks(elem).map(|e| encode_element(e, opts).len()).sum::<usize>()
+                + 32 * data.len().div_ceil(elem); // V-section size rows
+            table.row(&[
+                name.to_string(),
+                elem.to_string(),
+                format!("{:.3}", pe_len as f64 / data.len() as f64),
+                format!("{:.3}", mono_len as f64 / data.len() as f64),
+                format!("{:.2}x", pe_len as f64 / mono_len as f64),
+                format!("{:.0}", s_pe.mib_per_s(data.len() as u64)),
+                format!("{:.0}", s_mono.mib_per_s(data.len() as u64)),
+            ]);
+        }
+    }
+    table.print();
+    println!("\nT4 shape check: per-element ratio approaches monolithic as elem size grows;");
+    println!("the 4/3 base64 factor is the floor of the per-element overhead (paper §3.1).");
+}

@@ -1,0 +1,198 @@
+//! The opaque file context of §A: a forward-only cursor over the sections
+//! of one scda file, shared collectively by all ranks of a communicator.
+//!
+//! Every API call is collective over the file and advances the cursor by
+//! exactly one section (a compressed logical section advances it by its
+//! two raw sections). Errors close the file cleanly — "file errors should
+//! never crash the simulation" (§A.6) — which in Rust means the context is
+//! consumed on error and all resources are dropped.
+
+use std::path::Path;
+
+use crate::codec::CodecOptions;
+use crate::error::{usage, Result, ScdaError};
+use crate::format::header::{encode_file_header, parse_file_header, FileHeader};
+use crate::format::limits::{FILE_HEADER_BYTES, VENDOR_STRING};
+use crate::format::padding::LineStyle;
+use crate::format::section::SectionMeta;
+use crate::par::comm::Communicator;
+use crate::par::pfile::ParallelFile;
+
+/// Open mode, matching `scda_fopen`'s `'w'` / `'r'`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpenMode {
+    Write,
+    Read,
+}
+
+/// Reader-side state: what the last `read_section_header` promised and
+/// what the next data call must therefore be (§A.5's composition rules).
+#[derive(Debug, Clone)]
+pub(crate) enum Pending {
+    /// No header has been read; the next call must be `read_section_header`.
+    None,
+    /// A raw (uncompressed) section: metadata plus the absolute offset of
+    /// its payload region (for V: of its element-size rows).
+    Raw { meta: SectionMeta, payload_off: u64 },
+    /// Convention (8): logical block; the B section holds the compressed
+    /// stream of `uncompressed` bytes at `payload_off`.
+    DecodedBlock { meta: SectionMeta, payload_off: u64, uncompressed: u64 },
+    /// Convention (9): logical fixed-size array backed by a V section;
+    /// `erows_off` locates the compressed-size rows, `uncomp_elem` is the
+    /// common uncompressed element size.
+    DecodedArray { v_meta: SectionMeta, erows_off: u64, uncomp_elem: u64 },
+    /// Convention (10): logical variable-size array; `urows_off` locates
+    /// the uncompressed-size rows (data of the leading A section),
+    /// `erows_off` the compressed-size rows of the trailing V section.
+    DecodedVarray { v_meta: SectionMeta, urows_off: u64, erows_off: u64 },
+    /// A V-flavored section whose sizes have been read; data comes next.
+    VarraySized(Box<Pending>),
+}
+
+/// The scda file context (`f` in the paper's API).
+pub struct ScdaFile<C: Communicator> {
+    pub(crate) comm: C,
+    pub(crate) file: ParallelFile,
+    pub(crate) cursor: u64,
+    pub(crate) mode: OpenMode,
+    /// Line-break style used when writing (§2.1; our default is Unix like
+    /// the authors' reference implementation).
+    pub(crate) style: LineStyle,
+    /// Compression settings for `encode = true` writes.
+    pub(crate) codec: CodecOptions,
+    pub(crate) pending: Pending,
+    /// Parsed file header (populated on read).
+    pub(crate) header: Option<FileHeader>,
+    /// Whether `close` fsyncs (checkpoint durability; default true).
+    pub(crate) sync_on_close: bool,
+}
+
+impl<C: Communicator> std::fmt::Debug for ScdaFile<C> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ScdaFile")
+            .field("path", &self.file.path())
+            .field("mode", &self.mode)
+            .field("cursor", &self.cursor)
+            .field("rank", &self.comm.rank())
+            .field("size", &self.comm.size())
+            .finish()
+    }
+}
+
+impl<C: Communicator> ScdaFile<C> {
+    /// `scda_fopen(comm, filename, 'w', userstr)`: collectively create the
+    /// file and write its 128-byte header section.
+    pub fn create(comm: C, path: impl AsRef<Path>, user: &[u8]) -> Result<Self> {
+        let file = ParallelFile::create(&comm, path.as_ref())?;
+        let style = LineStyle::Unix;
+        let header = encode_file_header(VENDOR_STRING, user, style)?;
+        if comm.rank() == 0 {
+            file.write_at(0, &header)?;
+        }
+        comm.barrier();
+        Ok(ScdaFile {
+            comm,
+            file,
+            cursor: FILE_HEADER_BYTES as u64,
+            mode: OpenMode::Write,
+            style,
+            codec: CodecOptions::default(),
+            pending: Pending::None,
+            header: None,
+            sync_on_close: true,
+        })
+    }
+
+    /// `scda_fopen(comm, filename, 'r', userstr)`: collectively open and
+    /// validate the file header; the cursor lands after it.
+    pub fn open(comm: C, path: impl AsRef<Path>) -> Result<Self> {
+        let file = ParallelFile::open_read(&comm, path.as_ref())?;
+        let bytes = file.read_vec(0, FILE_HEADER_BYTES)?;
+        let header = parse_file_header(&bytes, false)?;
+        Ok(ScdaFile {
+            comm,
+            file,
+            cursor: FILE_HEADER_BYTES as u64,
+            mode: OpenMode::Read,
+            style: LineStyle::Unix,
+            codec: CodecOptions::default(),
+            pending: Pending::None,
+            header: Some(header),
+            sync_on_close: false,
+        })
+    }
+
+    /// The user string recorded in the file header (read mode).
+    pub fn header_user_string(&self) -> Option<&[u8]> {
+        self.header.as_ref().map(|h| h.user.as_slice())
+    }
+
+    /// The vendor string recorded in the file header (read mode).
+    pub fn header_vendor_string(&self) -> Option<&[u8]> {
+        self.header.as_ref().map(|h| h.vendor.as_slice())
+    }
+
+    /// Configure the line-break style for subsequent writes.
+    pub fn set_style(&mut self, style: LineStyle) -> &mut Self {
+        self.style = style;
+        self.codec.style = style;
+        self
+    }
+
+    /// Configure whether `close` flushes to stable storage (fsync).
+    /// Defaults to true in write mode — checkpoints should survive a
+    /// crash — but bulk non-durable writers may disable it.
+    pub fn set_sync_on_close(&mut self, sync: bool) -> &mut Self {
+        self.sync_on_close = sync;
+        self
+    }
+
+    /// Configure the deflate level for `encode = true` writes.
+    pub fn set_level(&mut self, level: u8) -> &mut Self {
+        self.codec.level = level.min(9);
+        self
+    }
+
+    pub fn comm(&self) -> &C {
+        &self.comm
+    }
+
+    /// Absolute offset of the next section (equals current file length in
+    /// write mode).
+    pub fn position(&self) -> u64 {
+        self.cursor
+    }
+
+    pub(crate) fn require_mode(&self, mode: OpenMode, what: &str) -> Result<()> {
+        if self.mode != mode {
+            return Err(ScdaError::usage(
+                usage::CALL_SEQUENCE,
+                format!("{what} requires a file opened for {mode:?}"),
+            ));
+        }
+        Ok(())
+    }
+
+    pub(crate) fn require_no_pending(&self, what: &str) -> Result<()> {
+        if !matches!(self.pending, Pending::None) {
+            return Err(ScdaError::usage(
+                usage::CALL_SEQUENCE,
+                format!("{what} called while a section header awaits its data call"),
+            ));
+        }
+        Ok(())
+    }
+
+    /// `scda_fclose`: collective; flushes in write mode. The context is
+    /// consumed (deallocation is automatic in Rust, error or not).
+    pub fn close(self) -> Result<()> {
+        if self.mode == OpenMode::Write {
+            self.comm.barrier();
+            if self.sync_on_close && self.comm.rank() == 0 {
+                self.file.sync()?;
+            }
+            self.comm.barrier();
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,36 @@
+//! The functional interface of Appendix A: collective open/close, one
+//! writing function per section type (§A.4), the reading state machine
+//! (§A.5), structure queries, and strict verification.
+//!
+//! Naming maps 1:1 onto the paper's C API:
+//!
+//! | paper                        | here                                  |
+//! |------------------------------|---------------------------------------|
+//! | `scda_fopen(..., 'w', ...)`  | [`ScdaFile::create`]                  |
+//! | `scda_fopen(..., 'r', ...)`  | [`ScdaFile::open`]                    |
+//! | `scda_fclose`                | [`ScdaFile::close`]                   |
+//! | `scda_fwrite_inline`         | [`ScdaFile::write_inline_from`]       |
+//! | `scda_fwrite_block`          | [`ScdaFile::write_block_from`]        |
+//! | `scda_fwrite_array`          | [`ScdaFile::write_array`]             |
+//! | `scda_fwrite_varray`         | [`ScdaFile::write_varray`]            |
+//! | `scda_fread_section_header`  | [`ScdaFile::read_section_header`]     |
+//! | `scda_fread_inline_data`     | [`ScdaFile::read_inline_data`]        |
+//! | `scda_fread_block_data`      | [`ScdaFile::read_block_data`]         |
+//! | `scda_fread_array_data`      | [`ScdaFile::read_array_data`]         |
+//! | `scda_fread_varray_sizes`    | [`ScdaFile::read_varray_sizes`]       |
+//! | `scda_fread_varray_data`     | [`ScdaFile::read_varray_data`]        |
+//! | `scda_ferror_string`         | [`crate::error::ferror_string`]       |
+//!
+//! Errors carry the paper's three-group taxonomy via
+//! [`crate::error::ScdaErrorKind`]; the paper's NULL-skip reads map to
+//! `want = false`; `indirect` maps to [`writer::DataSrc::Indirect`].
+
+pub mod context;
+pub mod query;
+pub mod reader;
+pub mod writer;
+
+pub use context::{OpenMode, ScdaFile};
+pub use query::{verify_bytes, verify_file, TocEntry};
+pub use reader::SectionHeader;
+pub use writer::DataSrc;

@@ -1,0 +1,104 @@
+//! File structure queries: the "query function that reads all file section
+//! headers but skips the data bytes to identify the structure of the file"
+//! that §A.5.1 anticipates, plus a strict byte-level verifier used by
+//! `scda verify`.
+
+use crate::error::{corrupt, Result, ScdaError};
+use crate::format::header::parse_file_header;
+use crate::format::limits::*;
+use crate::format::number::decode_count;
+use crate::format::padding::{check_data_pad, data_pad_len};
+use crate::format::section::{parse_section_prefix, SectionKind, SECTION_PREFIX_MAX};
+use crate::par::comm::Communicator;
+
+use super::context::{OpenMode, ScdaFile};
+use super::reader::SectionHeader;
+
+/// One table-of-contents entry.
+#[derive(Debug, Clone)]
+pub struct TocEntry {
+    pub header: SectionHeader,
+    /// Absolute offset of the first raw section byte.
+    pub offset: u64,
+    /// Total bytes this logical section occupies in the file (both raw
+    /// sections for convention pairs).
+    pub byte_len: u64,
+}
+
+impl<C: Communicator> ScdaFile<C> {
+    /// Read the table of contents: every logical section's header, with
+    /// data bytes skipped. With `decode`, convention pairs are reported as
+    /// one logical compressed section.
+    pub fn toc(&mut self, decode: bool) -> Result<Vec<TocEntry>> {
+        self.require_mode(OpenMode::Read, "toc")?;
+        self.require_no_pending("toc")?;
+        let mut entries = Vec::new();
+        while !self.at_end()? {
+            let offset = self.cursor;
+            let header = self.read_section_header(decode)?;
+            self.skip_section_data()?;
+            entries.push(TocEntry { header, offset, byte_len: self.cursor - offset });
+        }
+        Ok(entries)
+    }
+}
+
+/// Strict structural verification of a whole scda file, independent of any
+/// communicator: checks the magic, every header row, every count entry,
+/// every string padding *and* every data padding byte (MIME or Unix form),
+/// and that sections tile the file exactly. Returns the number of
+/// sections. This is the reference acceptance test for foreign writers.
+pub fn verify_file(path: &std::path::Path) -> Result<usize> {
+    let bytes = std::fs::read(path).map_err(|e| ScdaError::io(e, format!("reading {}", path.display())))?;
+    verify_bytes(&bytes)
+}
+
+/// [`verify_file`] over an in-memory image.
+pub fn verify_bytes(bytes: &[u8]) -> Result<usize> {
+    if bytes.len() < FILE_HEADER_BYTES {
+        return Err(ScdaError::corrupt(corrupt::TRUNCATED, "file shorter than the 128-byte header"));
+    }
+    parse_file_header(&bytes[..FILE_HEADER_BYTES], true)?;
+    let mut at = FILE_HEADER_BYTES;
+    let mut sections = 0usize;
+    while at < bytes.len() {
+        let take = (bytes.len() - at).min(SECTION_PREFIX_MAX);
+        let (meta, prefix) = parse_section_prefix(&bytes[at..at + take])?;
+        at += prefix;
+        let data_len: u128 = match meta.kind {
+            SectionKind::Inline => INLINE_DATA_BYTES as u128,
+            SectionKind::Block => meta.elem_size,
+            SectionKind::Array => meta.elem_count * meta.elem_size,
+            SectionKind::Varray => {
+                // Validate and sum all size rows.
+                let mut total: u128 = 0;
+                for _ in 0..meta.elem_count {
+                    if at + COUNT_ENTRY_BYTES > bytes.len() {
+                        return Err(ScdaError::corrupt(corrupt::TRUNCATED, "V size rows truncated"));
+                    }
+                    total += decode_count(&bytes[at..at + COUNT_ENTRY_BYTES], b'E')?;
+                    at += COUNT_ENTRY_BYTES;
+                }
+                total
+            }
+        };
+        let data_len_us = usize::try_from(data_len)
+            .map_err(|_| ScdaError::corrupt(corrupt::COUNT_OVERFLOW, "section larger than memory"))?;
+        if at + data_len_us > bytes.len() {
+            return Err(ScdaError::corrupt(corrupt::TRUNCATED, "section data truncated"));
+        }
+        let last = if data_len_us > 0 { Some(bytes[at + data_len_us - 1]) } else { None };
+        at += data_len_us;
+        if meta.kind != SectionKind::Inline {
+            let p = data_pad_len(data_len);
+            if at + p > bytes.len() {
+                return Err(ScdaError::corrupt(corrupt::TRUNCATED, "data padding truncated"));
+            }
+            check_data_pad(&bytes[at..at + p], data_len, last, true)?;
+            at += p;
+        }
+        sections += 1;
+    }
+    debug_assert_eq!(at, bytes.len());
+    Ok(sections)
+}

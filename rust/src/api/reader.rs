@@ -1,0 +1,517 @@
+//! Collective reading functions (§A.5).
+//!
+//! Reading is a small state machine per §A.5's composition rules: each
+//! section is consumed by `read_section_header` followed by the matching
+//! data call(s) — for `V` sections, `read_varray_sizes` then
+//! `read_varray_data`. Passing `decode = true` to `read_section_header`
+//! transparently resolves the compression convention (Table 2): if the
+//! upcoming raw section is a convention header, the *logical* section
+//! (type, `N`, uncompressed `E`) is returned and the data calls inflate
+//! per element; otherwise the data is read raw.
+
+use crate::codec::frame::decode_element;
+use crate::error::{corrupt, usage, Result, ScdaError};
+use crate::format::limits::*;
+use crate::format::number::{count_to_usize, decode_count};
+use crate::format::section::{parse_section_prefix, SectionKind, SectionMeta, SECTION_PREFIX_MAX};
+use crate::par::comm::Communicator;
+use crate::par::partition::Partition;
+
+use super::context::{OpenMode, Pending, ScdaFile};
+
+/// The logical header of the upcoming section, as reported by
+/// `read_section_header` (§A.5.1): `N` is 0 for `I`/`B`, `E` is 0 for
+/// `I`/`V`; with `decoded`, `E` is the *uncompressed* size.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SectionHeader {
+    pub kind: SectionKind,
+    pub user: Vec<u8>,
+    pub elem_count: u64,
+    pub elem_size: u64,
+    /// Whether the compression convention was detected and will be
+    /// resolved by the data calls (the `decode` output of Table 2).
+    pub decoded: bool,
+}
+
+impl<C: Communicator> ScdaFile<C> {
+    /// True when the cursor has reached the end of the file (no further
+    /// sections). Collective by construction: all ranks share the cursor.
+    ///
+    /// A cursor *past* the end means the previous section's trailing
+    /// bytes (typically its data padding) are missing — a truncated file.
+    pub fn at_end(&self) -> Result<bool> {
+        let flen = self.file.len()?;
+        if self.cursor > flen {
+            return Err(ScdaError::corrupt(
+                corrupt::TRUNCATED,
+                format!("file ends at {flen} inside a section reaching {}", self.cursor),
+            ));
+        }
+        Ok(self.cursor == flen)
+    }
+
+    /// `scda_fread_section_header` (§A.5.1).
+    pub fn read_section_header(&mut self, decode: bool) -> Result<SectionHeader> {
+        self.require_mode(OpenMode::Read, "read_section_header")?;
+        self.require_no_pending("read_section_header")?;
+        let (meta, prefix_len) = self.parse_prefix_at(self.cursor)?;
+        let payload_off = self.cursor + prefix_len as u64;
+        // Convention detection (§3): a matching type + user string starts
+        // a compressed section pair.
+        if decode && meta.kind == SectionKind::Inline && meta.user == CONV_BLOCK {
+            return self.begin_decoded_block(payload_off);
+        }
+        if decode && meta.kind == SectionKind::Inline && meta.user == CONV_ARRAY {
+            return self.begin_decoded_array(payload_off);
+        }
+        if decode && meta.kind == SectionKind::Array && meta.user == CONV_VARRAY {
+            return self.begin_decoded_varray(&meta, payload_off);
+        }
+        let header = SectionHeader {
+            kind: meta.kind,
+            user: meta.user.clone(),
+            elem_count: to_u64(meta.elem_count, "element count")?,
+            elem_size: to_u64(meta.elem_size, "element size")?,
+            decoded: false,
+        };
+        self.pending = Pending::Raw { meta, payload_off };
+        Ok(header)
+    }
+
+    fn parse_prefix_at(&self, off: u64) -> Result<(SectionMeta, usize)> {
+        let flen = self.file.len()?;
+        if off >= flen {
+            return Err(ScdaError::corrupt(corrupt::TRUNCATED, "no further section in file"));
+        }
+        let take = (flen - off).min(SECTION_PREFIX_MAX as u64) as usize;
+        let bytes = self.file.read_vec(off, take)?;
+        parse_section_prefix(&bytes)
+    }
+
+    /// Convention (8): the inline data is a `U` count entry with the
+    /// uncompressed size; the next raw section must be a `B`.
+    fn begin_decoded_block(&mut self, u_off: u64) -> Result<SectionHeader> {
+        let entry = self.file.read_vec(u_off, COUNT_ENTRY_BYTES)?;
+        let uncompressed = decode_count(&entry, b'U')?;
+        let next = u_off + INLINE_DATA_BYTES as u64;
+        let (meta_b, prefix_len) = self.parse_prefix_at(next)?;
+        if meta_b.kind != SectionKind::Block {
+            return Err(ScdaError::corrupt(
+                corrupt::BAD_CONVENTION,
+                format!("compressed-block header followed by {} section, expected B", meta_b.kind),
+            ));
+        }
+        let header = SectionHeader {
+            kind: SectionKind::Block,
+            user: meta_b.user.clone(),
+            elem_count: 0,
+            elem_size: to_u64(uncompressed, "uncompressed size")?,
+            decoded: true,
+        };
+        self.cursor = next;
+        self.pending = Pending::DecodedBlock {
+            payload_off: next + prefix_len as u64,
+            uncompressed: to_u64(uncompressed, "uncompressed size")?,
+            meta: meta_b,
+        };
+        Ok(header)
+    }
+
+    /// Convention (9): inline `U` entry holds the fixed uncompressed
+    /// element size; the next raw section must be a `V` with the same `N`.
+    fn begin_decoded_array(&mut self, u_off: u64) -> Result<SectionHeader> {
+        let entry = self.file.read_vec(u_off, COUNT_ENTRY_BYTES)?;
+        let uncomp_elem = decode_count(&entry, b'U')?;
+        let next = u_off + INLINE_DATA_BYTES as u64;
+        let (v_meta, prefix_len) = self.parse_prefix_at(next)?;
+        if v_meta.kind != SectionKind::Varray {
+            return Err(ScdaError::corrupt(
+                corrupt::BAD_CONVENTION,
+                format!("compressed-array header followed by {} section, expected V", v_meta.kind),
+            ));
+        }
+        let header = SectionHeader {
+            kind: SectionKind::Array,
+            user: v_meta.user.clone(),
+            elem_count: to_u64(v_meta.elem_count, "element count")?,
+            elem_size: to_u64(uncomp_elem, "element size")?,
+            decoded: true,
+        };
+        self.cursor = next;
+        self.pending = Pending::DecodedArray {
+            erows_off: next + prefix_len as u64,
+            uncomp_elem: to_u64(uncomp_elem, "element size")?,
+            v_meta,
+        };
+        Ok(header)
+    }
+
+    /// Convention (10): the `A` section's data rows are `U` entries with
+    /// per-element uncompressed sizes; the following `V` holds compressed
+    /// sizes and payloads.
+    fn begin_decoded_varray(&mut self, a_meta: &SectionMeta, a_payload_off: u64) -> Result<SectionHeader> {
+        if a_meta.elem_size != COUNT_ENTRY_BYTES as u128 {
+            return Err(ScdaError::corrupt(
+                corrupt::BAD_CONVENTION,
+                "compressed-varray metadata array must have 32-byte elements",
+            ));
+        }
+        let urows_off = a_payload_off;
+        let next = a_payload_off
+            + (a_meta.elem_count * COUNT_ENTRY_BYTES as u128
+                + crate::format::padding::data_pad_len(a_meta.elem_count * COUNT_ENTRY_BYTES as u128) as u128)
+                as u64;
+        let (v_meta, prefix_len) = self.parse_prefix_at(next)?;
+        if v_meta.kind != SectionKind::Varray || v_meta.elem_count != a_meta.elem_count {
+            return Err(ScdaError::corrupt(
+                corrupt::BAD_CONVENTION,
+                "compressed-varray metadata not followed by a matching V section",
+            ));
+        }
+        let header = SectionHeader {
+            kind: SectionKind::Varray,
+            user: v_meta.user.clone(),
+            elem_count: to_u64(v_meta.elem_count, "element count")?,
+            elem_size: 0,
+            decoded: true,
+        };
+        self.cursor = next;
+        self.pending = Pending::DecodedVarray { urows_off, erows_off: next + prefix_len as u64, v_meta };
+        Ok(header)
+    }
+
+    // ------------------------------------------------------------------
+    // Data calls
+    // ------------------------------------------------------------------
+
+    /// `scda_fread_inline_data` (§A.5.2): returns the 32 bytes on the
+    /// `root` rank (`Some`), `None` elsewhere. Pass `want = false` on root
+    /// to skip (the paper's NULL).
+    pub fn read_inline_data(&mut self, root: usize, want: bool) -> Result<Option<[u8; 32]>> {
+        let pending = std::mem::replace(&mut self.pending, Pending::None);
+        let Pending::Raw { meta, payload_off } = pending else {
+            return Err(call_seq("read_inline_data without a pending raw section"));
+        };
+        if meta.kind != SectionKind::Inline {
+            return Err(wrong_section("read_inline_data", meta.kind));
+        }
+        let out = if self.comm.rank() == root && want {
+            let v = self.file.read_vec(payload_off, INLINE_DATA_BYTES)?;
+            Some(<[u8; 32]>::try_from(v.as_slice()).unwrap())
+        } else {
+            None
+        };
+        self.cursor += meta.total_len(None) as u64;
+        self.comm.barrier();
+        Ok(out)
+    }
+
+    /// `scda_fread_block_data` (§A.5.3): the block bytes on `root`
+    /// (decoded if the header was). `want = false` skips on root.
+    pub fn read_block_data(&mut self, root: usize, want: bool) -> Result<Option<Vec<u8>>> {
+        let pending = std::mem::replace(&mut self.pending, Pending::None);
+        match pending {
+            Pending::Raw { meta, payload_off } => {
+                if meta.kind != SectionKind::Block {
+                    return Err(wrong_section("read_block_data", meta.kind));
+                }
+                let out = if self.comm.rank() == root && want {
+                    Some(self.file.read_vec(payload_off, count_to_usize(meta.elem_size, "block")?)?)
+                } else {
+                    None
+                };
+                self.cursor += meta.total_len(None) as u64;
+                self.comm.barrier();
+                Ok(out)
+            }
+            Pending::DecodedBlock { meta, payload_off, uncompressed } => {
+                let out = if self.comm.rank() == root && want {
+                    let comp = self.file.read_vec(payload_off, count_to_usize(meta.elem_size, "block")?)?;
+                    let data = decode_element(&comp)?;
+                    if data.len() as u64 != uncompressed {
+                        return Err(ScdaError::corrupt(
+                            corrupt::SIZE_MISMATCH,
+                            format!("block inflated to {} bytes, convention says {}", data.len(), uncompressed),
+                        ));
+                    }
+                    Some(data)
+                } else {
+                    None
+                };
+                self.cursor += meta.total_len(None) as u64;
+                self.comm.barrier();
+                Ok(out)
+            }
+            _ => Err(call_seq("read_block_data without a pending block section")),
+        }
+    }
+
+    /// `scda_fread_array_data` (§A.5.4): this rank's `N_p` elements of `E`
+    /// bytes under the *reading* partition `part` (any partition with the
+    /// right total). `want = false` skips the data on this rank but still
+    /// participates in the collective.
+    pub fn read_array_data(&mut self, part: &Partition, elem_size: u64, want: bool) -> Result<Option<Vec<u8>>> {
+        self.check_partition(part)?;
+        let pending = std::mem::replace(&mut self.pending, Pending::None);
+        match pending {
+            Pending::Raw { meta, payload_off } => {
+                if meta.kind != SectionKind::Array {
+                    return Err(wrong_section("read_array_data", meta.kind));
+                }
+                part.check_total(to_u64(meta.elem_count, "N")?)?;
+                if elem_size as u128 != meta.elem_size {
+                    return Err(ScdaError::usage(
+                        usage::BUFFER_SIZE,
+                        format!("element size {elem_size} does not match section's {}", meta.elem_size),
+                    ));
+                }
+                let rank = self.comm.rank();
+                let out = if want {
+                    let np = part.count(rank);
+                    let off = payload_off + part.offset(rank) * elem_size;
+                    Some(self.file.read_vec(off, (np * elem_size) as usize)?)
+                } else {
+                    None
+                };
+                self.cursor += meta.total_len(None) as u64;
+                self.comm.barrier();
+                Ok(out)
+            }
+            Pending::DecodedArray { v_meta, erows_off, uncomp_elem } => {
+                part.check_total(to_u64(v_meta.elem_count, "N")?)?;
+                if elem_size != uncomp_elem {
+                    return Err(ScdaError::usage(
+                        usage::BUFFER_SIZE,
+                        format!("element size {elem_size} does not match uncompressed size {uncomp_elem}"),
+                    ));
+                }
+                let (out, total) = self.read_compressed_elements(
+                    part,
+                    erows_off,
+                    to_u64(v_meta.elem_count, "N")?,
+                    want,
+                    |i| {
+                        let _ = i;
+                        uncomp_elem
+                    },
+                )?;
+                self.cursor += v_meta.total_len(Some(total as u128)) as u64;
+                self.comm.barrier();
+                Ok(out)
+            }
+            _ => Err(call_seq("read_array_data without a pending array section")),
+        }
+    }
+
+    /// `scda_fread_varray_sizes` (§A.5.5): this rank's element byte sizes
+    /// under the reading partition (uncompressed sizes if decoding).
+    pub fn read_varray_sizes(&mut self, part: &Partition) -> Result<Vec<u64>> {
+        self.check_partition(part)?;
+        let pending = std::mem::replace(&mut self.pending, Pending::None);
+        let (rows_off, n, letter) = match &pending {
+            Pending::Raw { meta, payload_off } => {
+                if meta.kind != SectionKind::Varray {
+                    self.pending = pending.clone();
+                    return Err(wrong_section("read_varray_sizes", meta.kind));
+                }
+                (*payload_off, to_u64(meta.elem_count, "N")?, b'E')
+            }
+            Pending::DecodedVarray { urows_off, v_meta, .. } => {
+                (*urows_off, to_u64(v_meta.elem_count, "N")?, b'U')
+            }
+            _ => return Err(call_seq("read_varray_sizes without a pending varray section")),
+        };
+        part.check_total(n)?;
+        let rank = self.comm.rank();
+        let sizes = self.read_size_rows(rows_off, part.offset(rank), part.count(rank), letter)?;
+        self.pending = Pending::VarraySized(Box::new(pending));
+        Ok(sizes)
+    }
+
+    /// `scda_fread_varray_data` (§A.5.6): this rank's element payloads;
+    /// `local_sizes` must be the values from [`Self::read_varray_sizes`].
+    pub fn read_varray_data(
+        &mut self,
+        part: &Partition,
+        local_sizes: &[u64],
+        want: bool,
+    ) -> Result<Option<Vec<u8>>> {
+        self.check_partition(part)?;
+        let pending = std::mem::replace(&mut self.pending, Pending::None);
+        let Pending::VarraySized(inner) = pending else {
+            return Err(call_seq("read_varray_data before read_varray_sizes"));
+        };
+        let rank = self.comm.rank();
+        if local_sizes.len() as u64 != part.count(rank) {
+            return Err(ScdaError::usage(
+                usage::PARTITION_MISMATCH,
+                format!("{} sizes for {} local elements", local_sizes.len(), part.count(rank)),
+            ));
+        }
+        match *inner {
+            Pending::Raw { meta, payload_off } => {
+                part.check_total(to_u64(meta.elem_count, "N")?)?;
+                let n = to_u64(meta.elem_count, "N")?;
+                let data_off = payload_off + n * COUNT_ENTRY_BYTES as u64;
+                let local_bytes: u64 = local_sizes.iter().sum();
+                let sq = self.comm.allgather_u64(local_bytes);
+                let my_off: u64 = sq[..rank].iter().sum();
+                let total: u64 = sq.iter().sum();
+                let out = if want {
+                    Some(self.file.read_vec(data_off + my_off, local_bytes as usize)?)
+                } else {
+                    None
+                };
+                self.cursor += meta.total_len(Some(total as u128)) as u64;
+                self.comm.barrier();
+                Ok(out)
+            }
+            Pending::DecodedVarray { erows_off, v_meta, .. } => {
+                let n = to_u64(v_meta.elem_count, "N")?;
+                part.check_total(n)?;
+                let (out, total) = self.read_compressed_elements(part, erows_off, n, want, |i| local_sizes[i])?;
+                self.cursor += v_meta.total_len(Some(total as u128)) as u64;
+                self.comm.barrier();
+                Ok(out)
+            }
+            _ => Err(call_seq("read_varray_data state mismatch")),
+        }
+    }
+
+    /// Skip the pending section entirely (all ranks): advances the cursor
+    /// without reading data bytes — the paper's "query function that reads
+    /// all file section headers but skips the data bytes".
+    pub fn skip_section_data(&mut self) -> Result<()> {
+        let pending = std::mem::replace(&mut self.pending, Pending::None);
+        let adv = |this: &Self, meta: &SectionMeta, payload_off: u64| -> Result<u64> {
+            match meta.kind {
+                SectionKind::Varray => {
+                    let n = to_u64(meta.elem_count, "N")?;
+                    let total = this.sum_size_rows(payload_off, n)?;
+                    Ok(meta.total_len(Some(total as u128)) as u64)
+                }
+                _ => Ok(meta.total_len(None) as u64),
+            }
+        };
+        match &pending {
+            Pending::Raw { meta, payload_off } => {
+                self.cursor += adv(self, meta, *payload_off)?;
+            }
+            Pending::DecodedBlock { meta, .. } => {
+                self.cursor += meta.total_len(None) as u64;
+            }
+            Pending::DecodedArray { v_meta, erows_off, .. }
+            | Pending::DecodedVarray { v_meta, erows_off, .. } => {
+                let total = self.sum_size_rows(*erows_off, to_u64(v_meta.elem_count, "N")?)?;
+                self.cursor += v_meta.total_len(Some(total as u128)) as u64;
+            }
+            Pending::VarraySized(inner) => {
+                match inner.as_ref() {
+                    Pending::Raw { meta, payload_off } => {
+                        self.cursor += adv(self, meta, *payload_off)?;
+                    }
+                    Pending::DecodedVarray { v_meta, erows_off, .. } => {
+                        let total = self.sum_size_rows(*erows_off, to_u64(v_meta.elem_count, "N")?)?;
+                        self.cursor += v_meta.total_len(Some(total as u128)) as u64;
+                    }
+                    _ => return Err(call_seq("skip_section_data state mismatch")),
+                }
+            }
+            Pending::None => return Err(call_seq("skip_section_data without a pending section")),
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // Internals
+    // ------------------------------------------------------------------
+
+    /// Read `count` 32-byte size rows starting at global row `first`.
+    fn read_size_rows(&self, rows_off: u64, first: u64, count: u64, letter: u8) -> Result<Vec<u64>> {
+        let mut sizes = Vec::with_capacity(count as usize);
+        if count == 0 {
+            return Ok(sizes);
+        }
+        let bytes = self
+            .file
+            .read_vec(rows_off + first * COUNT_ENTRY_BYTES as u64, (count as usize) * COUNT_ENTRY_BYTES)?;
+        for row in bytes.chunks_exact(COUNT_ENTRY_BYTES) {
+            sizes.push(to_u64(decode_count(row, letter)?, "element size")?);
+        }
+        Ok(sizes)
+    }
+
+    /// Sum all `n` size rows (used by skip paths; reads in 8 KiB chunks).
+    fn sum_size_rows(&self, rows_off: u64, n: u64) -> Result<u64> {
+        let mut total = 0u64;
+        let chunk_rows = 256u64;
+        let mut at = 0u64;
+        while at < n {
+            let take = chunk_rows.min(n - at);
+            for s in self.read_size_rows(rows_off, at, take, b'E')? {
+                total += s;
+            }
+            at += take;
+        }
+        Ok(total)
+    }
+
+    /// Shared decode path for conventions (9) and (10): read this rank's
+    /// compressed-size rows, locate its byte window via an allgather
+    /// prefix, inflate each element, and verify the uncompressed sizes.
+    /// Returns (local decoded payload, total compressed bytes).
+    fn read_compressed_elements(
+        &self,
+        part: &Partition,
+        erows_off: u64,
+        n: u64,
+        want: bool,
+        expected_size: impl Fn(usize) -> u64,
+    ) -> Result<(Option<Vec<u8>>, u64)> {
+        let rank = self.comm.rank();
+        let comp_sizes = self.read_size_rows(erows_off, part.offset(rank), part.count(rank), b'E')?;
+        let local_comp: u64 = comp_sizes.iter().sum();
+        let sq = self.comm.allgather_u64(local_comp);
+        let my_off: u64 = sq[..rank].iter().sum();
+        let total: u64 = sq.iter().sum();
+        let data_off = erows_off + n * COUNT_ENTRY_BYTES as u64;
+        let out = if want {
+            let blob = self.file.read_vec(data_off + my_off, local_comp as usize)?;
+            let mut decoded = Vec::new();
+            let mut at = 0usize;
+            for (i, &cs) in comp_sizes.iter().enumerate() {
+                let elem = decode_element(&blob[at..at + cs as usize])?;
+                if elem.len() as u64 != expected_size(i) {
+                    return Err(ScdaError::corrupt(
+                        corrupt::SIZE_MISMATCH,
+                        format!(
+                            "element {i} inflated to {} bytes, metadata says {}",
+                            elem.len(),
+                            expected_size(i)
+                        ),
+                    ));
+                }
+                decoded.extend_from_slice(&elem);
+                at += cs as usize;
+            }
+            Some(decoded)
+        } else {
+            None
+        };
+        Ok((out, total))
+    }
+}
+
+fn to_u64(v: u128, what: &str) -> Result<u64> {
+    u64::try_from(v).map_err(|_| {
+        ScdaError::corrupt(corrupt::COUNT_OVERFLOW, format!("{what} {v} exceeds this implementation's 64-bit limit"))
+    })
+}
+
+fn call_seq(msg: &str) -> ScdaError {
+    ScdaError::usage(usage::CALL_SEQUENCE, msg)
+}
+
+fn wrong_section(call: &str, kind: SectionKind) -> ScdaError {
+    ScdaError::usage(usage::WRONG_SECTION, format!("{call} on a pending {kind} section"))
+}

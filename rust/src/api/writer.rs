@@ -1,0 +1,404 @@
+//! Collective writing functions (§A.4): one per section type, with the
+//! `encode` option implementing the compression convention of §3.
+//!
+//! Division of labour per section (all offsets are pure functions of
+//! collective inputs, which is what makes the file bytes partition-
+//! independent):
+//!
+//! * rank 0 writes the section header rows (type/user string, `N`, `E`);
+//! * each rank writes its own count rows (V sections) and its own data
+//!   window `[C_p·E, C_{p+1}·E)` resp. byte window from the `S_q` prefix;
+//! * rank 0 writes the final data padding, whose bytes depend only on the
+//!   total data length and the globally last data byte (gathered).
+
+use crate::codec::frame::encode_element;
+use crate::error::{usage, Result, ScdaError};
+use crate::format::limits::*;
+use crate::format::number::encode_count;
+use crate::format::padding::pad_data;
+use crate::format::section::{encode_type_row, SectionKind, SectionMeta};
+use crate::par::comm::Communicator;
+use crate::par::partition::Partition;
+
+use super::context::{OpenMode, Pending, ScdaFile};
+
+/// Element data passed to array writers: one contiguous range, or one
+/// pointer per element ("indirect addressing", §A.2).
+#[derive(Debug, Clone, Copy)]
+pub enum DataSrc<'a> {
+    Contiguous(&'a [u8]),
+    Indirect(&'a [&'a [u8]]),
+}
+
+impl<'a> DataSrc<'a> {
+    pub(crate) fn total_len(&self) -> u64 {
+        match self {
+            DataSrc::Contiguous(b) => b.len() as u64,
+            DataSrc::Indirect(parts) => parts.iter().map(|p| p.len() as u64).sum(),
+        }
+    }
+
+    pub(crate) fn last_byte(&self) -> Option<u8> {
+        match self {
+            DataSrc::Contiguous(b) => b.last().copied(),
+            DataSrc::Indirect(parts) => parts.iter().rev().find_map(|p| p.last().copied()),
+        }
+    }
+
+    fn for_each_element(&self, sizes: impl Iterator<Item = u64>, mut f: impl FnMut(&[u8]) -> Result<()>) -> Result<()> {
+        match self {
+            DataSrc::Contiguous(b) => {
+                let mut at = 0usize;
+                for s in sizes {
+                    let s = s as usize;
+                    f(&b[at..at + s])?;
+                    at += s;
+                }
+            }
+            DataSrc::Indirect(parts) => {
+                for (p, s) in parts.iter().zip(sizes) {
+                    debug_assert_eq!(p.len() as u64, s);
+                    f(p)?;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<C: Communicator> ScdaFile<C> {
+    // ------------------------------------------------------------------
+    // Inline sections (§2.3, §A.4.1 — MPI_Bcast semantics)
+    // ------------------------------------------------------------------
+
+    /// `scda_fwrite_inline`: write exactly 32 bytes present on `root`.
+    /// `data` must be `Some` on the root rank and is ignored elsewhere.
+    pub fn write_inline_from(&mut self, root: usize, data: Option<&[u8]>, user: Option<&[u8]>) -> Result<()> {
+        self.require_mode(OpenMode::Write, "write_inline")?;
+        let user = user.unwrap_or(b"");
+        if self.comm.rank() == root {
+            let d = data.ok_or_else(|| {
+                ScdaError::usage(usage::CALL_SEQUENCE, "inline data must be provided on the root rank")
+            })?;
+            if d.len() != INLINE_DATA_BYTES {
+                return Err(ScdaError::usage(
+                    usage::INLINE_SIZE,
+                    format!("inline data must be exactly {INLINE_DATA_BYTES} bytes, got {}", d.len()),
+                ));
+            }
+        }
+        let row = encode_type_row(SectionKind::Inline, user, self.style)?;
+        if self.comm.rank() == 0 {
+            self.file.write_at(self.cursor, &row)?;
+        }
+        if self.comm.rank() == root {
+            self.file.write_at(self.cursor + SECTION_HEADER_BYTES as u64, data.unwrap())?;
+        }
+        self.comm.barrier();
+        self.cursor += INLINE_SECTION_BYTES as u64;
+        Ok(())
+    }
+
+    /// Convenience: inline data replicated on all ranks, root 0.
+    pub fn write_inline(&mut self, data: &[u8], user: Option<&[u8]>) -> Result<()> {
+        self.write_inline_from(0, Some(data), user)
+    }
+
+    // ------------------------------------------------------------------
+    // Block sections (§2.4, §A.4.2)
+    // ------------------------------------------------------------------
+
+    /// `scda_fwrite_block`: write `len` bytes present on `root`. With
+    /// `encode`, the block is written per the compression convention (8).
+    pub fn write_block_from(
+        &mut self,
+        root: usize,
+        data: Option<&[u8]>,
+        len: u64,
+        user: Option<&[u8]>,
+        encode: bool,
+    ) -> Result<()> {
+        self.require_mode(OpenMode::Write, "write_block")?;
+        let user = user.unwrap_or(b"");
+        if self.comm.rank() == root {
+            let d = data.ok_or_else(|| {
+                ScdaError::usage(usage::CALL_SEQUENCE, "block data must be provided on the root rank")
+            })?;
+            if d.len() as u64 != len {
+                return Err(ScdaError::usage(
+                    usage::BUFFER_SIZE,
+                    format!("block buffer has {} bytes, len says {len}", d.len()),
+                ));
+            }
+        }
+        if encode {
+            // Convention (8): I("B compressed scda 00", U entry) then
+            // B(user, compressed bytes).
+            let mut u_entry = Vec::with_capacity(COUNT_ENTRY_BYTES);
+            encode_count(&mut u_entry, b'U', len as u128, self.style)?;
+            self.write_inline_from(root, Some(&u_entry), Some(CONV_BLOCK))?;
+            let compressed = if self.comm.rank() == root {
+                Some(encode_element(data.unwrap(), self.codec))
+            } else {
+                None
+            };
+            let clen = self.comm.bcast_u64(root, compressed.as_ref().map(|c| c.len() as u64));
+            return self.write_block_raw(root, compressed.as_deref(), clen, user);
+        }
+        self.write_block_raw(root, data, len, user)
+    }
+
+    /// Convenience: block data replicated on all ranks, root 0, raw.
+    pub fn write_block(&mut self, data: &[u8], user: Option<&[u8]>) -> Result<()> {
+        self.write_block_from(0, Some(data), data.len() as u64, user, false)
+    }
+
+    fn write_block_raw(&mut self, root: usize, data: Option<&[u8]>, len: u64, user: &[u8]) -> Result<()> {
+        let meta = SectionMeta::block(user, len as u128);
+        let mut head = encode_type_row(SectionKind::Block, user, self.style)?;
+        encode_count(&mut head, b'E', len as u128, self.style)?;
+        if self.comm.rank() == 0 {
+            self.file.write_at(self.cursor, &head)?;
+        }
+        let data_off = self.cursor + meta.header_len() as u64;
+        if self.comm.rank() == root {
+            let d = data.unwrap();
+            self.file.write_at(data_off, d)?;
+            let mut pad = Vec::new();
+            pad_data(&mut pad, len as u128, d.last().copied(), self.style);
+            self.file.write_at(data_off + len, &pad)?;
+        }
+        self.comm.barrier();
+        self.cursor += meta.total_len(None) as u64;
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // Fixed-size arrays (§2.5, §A.4.3 — MPI_Allgather semantics)
+    // ------------------------------------------------------------------
+
+    /// `scda_fwrite_array`: collectively write an array of `part.total()`
+    /// elements of `elem_size` bytes; this rank contributes the elements
+    /// of its partition range. With `encode`, convention (9) applies.
+    pub fn write_array(
+        &mut self,
+        data: DataSrc<'_>,
+        part: &Partition,
+        elem_size: u64,
+        user: Option<&[u8]>,
+        encode: bool,
+    ) -> Result<()> {
+        self.require_mode(OpenMode::Write, "write_array")?;
+        let user = user.unwrap_or(b"");
+        self.check_partition(part)?;
+        let np = part.count(self.comm.rank());
+        if data.total_len() != np * elem_size {
+            return Err(ScdaError::usage(
+                usage::BUFFER_SIZE,
+                format!("local buffer has {} bytes for {np} elements of {elem_size}", data.total_len()),
+            ));
+        }
+        if encode {
+            // Convention (9): I("A compressed scda 00", U = elem bytes)
+            // then V(user, N, per-element compressed sizes).
+            let mut u_entry = Vec::with_capacity(COUNT_ENTRY_BYTES);
+            encode_count(&mut u_entry, b'U', elem_size as u128, self.style)?;
+            self.write_inline_from(0, Some(&u_entry), Some(CONV_ARRAY))?;
+            let (sizes, blob) = self.encode_local_elements(&data, std::iter::repeat(elem_size).take(np as usize))?;
+            return self.write_varray_raw(DataSrc::Contiguous(&blob), part, &sizes, user);
+        }
+        let meta = SectionMeta::array(user, part.total() as u128, elem_size as u128);
+        let mut head = encode_type_row(SectionKind::Array, user, self.style)?;
+        encode_count(&mut head, b'N', part.total() as u128, self.style)?;
+        encode_count(&mut head, b'E', elem_size as u128, self.style)?;
+        if self.comm.rank() == 0 {
+            self.file.write_at(self.cursor, &head)?;
+        }
+        let data_off = self.cursor + meta.header_len() as u64;
+        let my_off = data_off + part.offset(self.comm.rank()) * elem_size;
+        self.write_windows(my_off, &data, std::iter::repeat(elem_size).take(np as usize))?;
+        // Rank 0 writes the single trailing padding; its contents depend
+        // on the globally last data byte.
+        let total = part.total() * elem_size;
+        let last = self.gather_last_byte(data.last_byte());
+        if self.comm.rank() == 0 {
+            let mut pad = Vec::new();
+            pad_data(&mut pad, total as u128, last, self.style);
+            self.file.write_at(data_off + total, &pad)?;
+        }
+        self.comm.barrier();
+        self.cursor += meta.total_len(None) as u64;
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // Variable-size arrays (§2.6, §A.4.4)
+    // ------------------------------------------------------------------
+
+    /// `scda_fwrite_varray`: collectively write an array of elements with
+    /// per-element byte sizes (`local_sizes`, this rank's `(E_i)`). With
+    /// `encode`, convention (10) applies.
+    pub fn write_varray(
+        &mut self,
+        data: DataSrc<'_>,
+        part: &Partition,
+        local_sizes: &[u64],
+        user: Option<&[u8]>,
+        encode: bool,
+    ) -> Result<()> {
+        self.require_mode(OpenMode::Write, "write_varray")?;
+        let user = user.unwrap_or(b"");
+        self.check_partition(part)?;
+        let np = part.count(self.comm.rank());
+        if local_sizes.len() as u64 != np {
+            return Err(ScdaError::usage(
+                usage::PARTITION_MISMATCH,
+                format!("{} element sizes for {np} local elements", local_sizes.len()),
+            ));
+        }
+        let local_bytes: u64 = local_sizes.iter().sum();
+        if data.total_len() != local_bytes {
+            return Err(ScdaError::usage(
+                usage::BUFFER_SIZE,
+                format!("local buffer has {} bytes, sizes sum to {local_bytes}", data.total_len()),
+            ));
+        }
+        if encode {
+            // Convention (10): A("V compressed scda 00", N, E = 32) whose
+            // data rows record the uncompressed sizes (Figure 7), then
+            // V(user, N, compressed sizes).
+            let mut urows = Vec::with_capacity(local_sizes.len() * COUNT_ENTRY_BYTES);
+            for &s in local_sizes {
+                encode_count(&mut urows, b'U', s as u128, self.style)?;
+            }
+            self.write_array(
+                DataSrc::Contiguous(&urows),
+                part,
+                COUNT_ENTRY_BYTES as u64,
+                Some(CONV_VARRAY),
+                false,
+            )?;
+            let (sizes, blob) = self.encode_local_elements(&data, local_sizes.iter().copied())?;
+            return self.write_varray_raw(DataSrc::Contiguous(&blob), part, &sizes, user);
+        }
+        self.write_varray_raw(data, part, local_sizes, user)
+    }
+
+    /// The shared V-section writer: header by rank 0, per-rank size rows,
+    /// per-rank data windows, padding by rank 0.
+    fn write_varray_raw(
+        &mut self,
+        data: DataSrc<'_>,
+        part: &Partition,
+        local_sizes: &[u64],
+        user: &[u8],
+    ) -> Result<()> {
+        let n = part.total();
+        let meta = SectionMeta::varray(user, n as u128);
+        let mut head = encode_type_row(SectionKind::Varray, user, self.style)?;
+        encode_count(&mut head, b'N', n as u128, self.style)?;
+        if self.comm.rank() == 0 {
+            self.file.write_at(self.cursor, &head)?;
+        }
+        // Per-rank E_i rows.
+        let erows_off = self.cursor + (SECTION_HEADER_BYTES + COUNT_ENTRY_BYTES) as u64;
+        let mut rows = Vec::with_capacity(local_sizes.len() * COUNT_ENTRY_BYTES);
+        for &s in local_sizes {
+            encode_count(&mut rows, b'E', s as u128, self.style)?;
+        }
+        let my_rank = self.comm.rank();
+        if !rows.is_empty() {
+            self.file.write_at(erows_off + part.offset(my_rank) * COUNT_ENTRY_BYTES as u64, &rows)?;
+        }
+        // Per-rank data windows from the S_q prefix.
+        let local_bytes: u64 = local_sizes.iter().sum();
+        let sq = self.comm.allgather_u64(local_bytes);
+        let my_byte_off: u64 = sq[..my_rank].iter().sum();
+        let total_bytes: u64 = sq.iter().sum();
+        let data_off = erows_off + n * COUNT_ENTRY_BYTES as u64;
+        self.write_windows(data_off + my_byte_off, &data, local_sizes.iter().copied())?;
+        let last = self.gather_last_byte(data.last_byte());
+        if self.comm.rank() == 0 {
+            let mut pad = Vec::new();
+            pad_data(&mut pad, total_bytes as u128, last, self.style);
+            self.file.write_at(data_off + total_bytes, &pad)?;
+        }
+        self.comm.barrier();
+        self.cursor += meta.total_len(Some(total_bytes as u128)) as u64;
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // Helpers
+    // ------------------------------------------------------------------
+
+    pub(crate) fn check_partition(&self, part: &Partition) -> Result<()> {
+        if part.num_ranks() != self.comm.size() {
+            return Err(ScdaError::usage(
+                usage::PARTITION_MISMATCH,
+                format!("partition has {} ranks, communicator {}", part.num_ranks(), self.comm.size()),
+            ));
+        }
+        Ok(())
+    }
+
+    /// Compress each local element individually (§3.1); returns the
+    /// compressed sizes and the concatenated compressed payload.
+    fn encode_local_elements(
+        &self,
+        data: &DataSrc<'_>,
+        sizes: impl Iterator<Item = u64>,
+    ) -> Result<(Vec<u64>, Vec<u8>)> {
+        let mut out_sizes = Vec::new();
+        let mut blob = Vec::new();
+        let codec = self.codec;
+        data.for_each_element(sizes, |elem| {
+            let enc = encode_element(elem, codec);
+            out_sizes.push(enc.len() as u64);
+            blob.extend_from_slice(&enc);
+            Ok(())
+        })?;
+        Ok((out_sizes, blob))
+    }
+
+    /// Write this rank's element data starting at `offset` (contiguous in
+    /// the file even when indirectly addressed in memory).
+    fn write_windows(
+        &self,
+        offset: u64,
+        data: &DataSrc<'_>,
+        sizes: impl Iterator<Item = u64>,
+    ) -> Result<()> {
+        match data {
+            DataSrc::Contiguous(b) => {
+                if !b.is_empty() {
+                    self.file.write_at(offset, b)?;
+                }
+                Ok(())
+            }
+            DataSrc::Indirect(_) => {
+                let mut at = offset;
+                data.for_each_element(sizes, |elem| {
+                    if !elem.is_empty() {
+                        self.file.write_at(at, elem)?;
+                    }
+                    at += elem.len() as u64;
+                    Ok(())
+                })
+            }
+        }
+    }
+
+    /// The last data byte across all ranks (None if the section is empty):
+    /// encoded as `0x1FF` for "no local data" in an allgather.
+    fn gather_last_byte(&self, local: Option<u8>) -> Option<u8> {
+        let enc = local.map(|b| b as u64).unwrap_or(0x1ff);
+        let all = self.comm.allgather_u64(enc);
+        all.iter().rev().find(|&&v| v != 0x1ff).map(|&v| v as u8)
+    }
+}
+
+// Pending is unused in the writer but keeping the import local to the
+// module documents that writes never interact with reader state.
+#[allow(unused)]
+fn _pending_is_reader_state(_: &Pending) {}

@@ -1,0 +1,162 @@
+//! Benchmark harness support (the offline environment lacks criterion):
+//! wall-clock measurement with warmup and repetition statistics, table
+//! rendering matching the experiment ids in DESIGN.md §Experiments, and
+//! shared workload corpora.
+
+pub mod sha256;
+
+pub use sha256::{hex, sha256};
+
+use std::time::Instant;
+
+/// Measurement of repeated runs (seconds).
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub reps: usize,
+    pub min: f64,
+    pub median: f64,
+    pub mean: f64,
+    pub max: f64,
+}
+
+/// Run `f` `reps` times after `warmup` runs; report statistics.
+pub fn measure(warmup: usize, reps: usize, mut f: impl FnMut()) -> Sample {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = times.iter().sum::<f64>() / reps as f64;
+    Sample { reps, min: times[0], median: times[reps / 2], mean, max: times[reps - 1] }
+}
+
+impl Sample {
+    /// Throughput in MiB/s for `bytes` processed per rep (median-based).
+    pub fn mib_per_s(&self, bytes: u64) -> f64 {
+        bytes as f64 / (1024.0 * 1024.0) / self.median
+    }
+}
+
+/// Simple fixed-width table printer (markdown-flavored) so bench output
+/// can be pasted into EXPERIMENTS.md verbatim.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| {
+            let mut line = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                line.push_str(&format!(" {c:>w$} |"));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Workload corpora shared by the compression/precondition benches; each
+/// is (name, bytes) with deterministic contents.
+pub fn corpus(len: usize) -> Vec<(&'static str, Vec<u8>)> {
+    use crate::mesh::{fields, ring_mesh};
+    use crate::testutil::Rng;
+    let mut rng = Rng::new(0xC0FFEE);
+    let mut out = Vec::new();
+    out.push(("zeros", vec![0u8; len]));
+    out.push(("random", rng.bytes(len, 256)));
+    out.push(("text", {
+        let phrase = b"The scda format is serial-equivalent by design. ";
+        phrase.iter().cycle().take(len).copied().collect()
+    }));
+    // Smooth AMR f64 field bytes — the paper's target workload.
+    let mesh = ring_mesh(5, 8, (0.5, 0.5), 0.3);
+    let mut amr = Vec::with_capacity(len);
+    'outer: loop {
+        for q in &mesh {
+            amr.extend_from_slice(&fields::fixed_payload(q, 5));
+            if amr.len() >= len {
+                break 'outer;
+            }
+        }
+    }
+    amr.truncate(len);
+    out.push(("amr-f64", amr));
+    out
+}
+
+/// `SCDA_BENCH_QUICK=1` shrinks workloads for CI-style smoke runs.
+pub fn quick() -> bool {
+    std::env::var_os("SCDA_BENCH_QUICK").is_some()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_reports_sane_stats() {
+        let s = measure(1, 5, || std::thread::sleep(std::time::Duration::from_millis(1)));
+        assert_eq!(s.reps, 5);
+        assert!(s.min >= 0.001);
+        assert!(s.min <= s.median && s.median <= s.max);
+        assert!(s.mib_per_s(1024 * 1024) > 0.0);
+    }
+
+    #[test]
+    fn table_renders_markdown() {
+        let mut t = Table::new(&["a", "bee"]);
+        t.row(&["1".into(), "2".into()]);
+        let r = t.render();
+        assert!(r.contains("| a | bee |") || r.contains("|   a | bee |") || r.contains("| a |"));
+        assert!(r.lines().count() == 3);
+    }
+
+    #[test]
+    fn corpus_is_deterministic_and_sized() {
+        let a = corpus(10_000);
+        let b = corpus(10_000);
+        assert_eq!(a.len(), 4);
+        for ((n1, d1), (n2, d2)) in a.iter().zip(b.iter()) {
+            assert_eq!(n1, n2);
+            assert_eq!(d1, d2);
+            assert_eq!(d1.len(), 10_000);
+        }
+    }
+}

@@ -1,0 +1,556 @@
+//! C ABI mirroring the paper's Appendix A verbatim — the interface a C
+//! simulation code (libsc/p4est-style) links against. Serial-communicator
+//! backed: the C caller owns process-level parallelism (each process
+//! writes its window through the partition arguments exactly as in §A.4,
+//! with the collective agreement contract on the caller).
+//!
+//! Conventions:
+//! * every function sets `*err` to an §A.6 error code (0 = success);
+//! * `NULL` data pointers mean "skip" exactly where the paper allows it;
+//! * strings are raw byte buffers with explicit lengths (the format does
+//!   not interpret them; no NUL-termination requirements).
+//!
+//! Memory rules: `scda_fopen_*` returns an owned handle; every path ends
+//! in `scda_fclose`, which frees it (also on error paths, matching "the
+//! file context is deallocated regardless").
+
+use std::ffi::{c_char, c_int};
+
+use crate::api::{DataSrc, ScdaFile};
+use crate::error::{usage, ScdaError};
+use crate::par::{Partition, SerialComm};
+
+/// Opaque file context (`f` in the paper).
+pub struct ScdaHandle {
+    file: Option<ScdaFile<SerialComm>>,
+}
+
+fn set_err(err: *mut c_int, code: c_int) {
+    if !err.is_null() {
+        unsafe { *err = code };
+    }
+}
+
+fn fail(err: *mut c_int, e: &ScdaError) {
+    set_err(err, e.code());
+}
+
+unsafe fn slice<'a>(ptr: *const u8, len: usize) -> &'a [u8] {
+    if ptr.is_null() || len == 0 {
+        &[]
+    } else {
+        std::slice::from_raw_parts(ptr, len)
+    }
+}
+
+unsafe fn path_from(ptr: *const c_char) -> Option<std::path::PathBuf> {
+    if ptr.is_null() {
+        return None;
+    }
+    let cstr = std::ffi::CStr::from_ptr(ptr);
+    Some(std::path::PathBuf::from(std::ffi::OsStr::new(
+        std::str::from_utf8(cstr.to_bytes()).ok()?,
+    )))
+}
+
+/// `scda_fopen(..., 'w'|'r', ...)`. `mode` is the ASCII letter. Returns
+/// NULL on error with `*err` set. The user string applies in write mode.
+///
+/// # Safety
+/// `filename` must be a valid NUL-terminated path; `userstr` (may be
+/// NULL) must reference `userlen` readable bytes; `err` may be NULL.
+#[no_mangle]
+pub unsafe extern "C" fn scda_fopen(
+    filename: *const c_char,
+    mode: c_char,
+    userstr: *const u8,
+    userlen: usize,
+    err: *mut c_int,
+) -> *mut ScdaHandle {
+    set_err(err, 0);
+    let Some(path) = path_from(filename) else {
+        set_err(err, 3000 + usage::BAD_MODE);
+        return std::ptr::null_mut();
+    };
+    let result = match mode as u8 {
+        b'w' => ScdaFile::create(SerialComm::new(), &path, slice(userstr, userlen)),
+        b'r' => ScdaFile::open(SerialComm::new(), &path),
+        _ => {
+            set_err(err, 3000 + usage::BAD_MODE);
+            return std::ptr::null_mut();
+        }
+    };
+    match result {
+        Ok(file) => Box::into_raw(Box::new(ScdaHandle { file: Some(file) })),
+        Err(e) => {
+            fail(err, &e);
+            std::ptr::null_mut()
+        }
+    }
+}
+
+/// `scda_fclose`. Frees the handle regardless of outcome; returns 0 on
+/// success.
+///
+/// # Safety
+/// `f` must be a handle from `scda_fopen` not yet closed.
+#[no_mangle]
+pub unsafe extern "C" fn scda_fclose(f: *mut ScdaHandle, err: *mut c_int) -> c_int {
+    set_err(err, 0);
+    if f.is_null() {
+        set_err(err, 3000 + usage::CALL_SEQUENCE);
+        return -1;
+    }
+    let mut handle = Box::from_raw(f);
+    match handle.file.take().map(|file| file.close()) {
+        Some(Ok(())) => 0,
+        Some(Err(e)) => {
+            fail(err, &e);
+            -1
+        }
+        None => {
+            set_err(err, 3000 + usage::CALL_SEQUENCE);
+            -1
+        }
+    }
+}
+
+unsafe fn with_file<R>(
+    f: *mut ScdaHandle,
+    err: *mut c_int,
+    op: impl FnOnce(&mut ScdaFile<SerialComm>) -> crate::error::Result<R>,
+) -> Option<R> {
+    set_err(err, 0);
+    let Some(handle) = f.as_mut() else {
+        set_err(err, 3000 + usage::CALL_SEQUENCE);
+        return None;
+    };
+    let Some(file) = handle.file.as_mut() else {
+        set_err(err, 3000 + usage::CALL_SEQUENCE);
+        return None;
+    };
+    match op(file) {
+        Ok(r) => Some(r),
+        Err(e) => {
+            fail(err, &e);
+            None
+        }
+    }
+}
+
+/// `scda_fwrite_inline` (§A.4.1): exactly 32 bytes.
+///
+/// # Safety
+/// Pointers must reference the stated lengths; see module docs.
+#[no_mangle]
+pub unsafe extern "C" fn scda_fwrite_inline(
+    f: *mut ScdaHandle,
+    dbytes: *const u8,
+    userstr: *const u8,
+    userlen: usize,
+    err: *mut c_int,
+) -> c_int {
+    let user = slice(userstr, userlen).to_vec();
+    let data = slice(dbytes, 32).to_vec();
+    match with_file(f, err, |file| file.write_inline(&data, Some(&user))) {
+        Some(()) => 0,
+        None => -1,
+    }
+}
+
+/// `scda_fwrite_block` (§A.4.2).
+///
+/// # Safety
+/// `dbytes` must reference `len` bytes; see module docs.
+#[no_mangle]
+pub unsafe extern "C" fn scda_fwrite_block(
+    f: *mut ScdaHandle,
+    dbytes: *const u8,
+    len: u64,
+    userstr: *const u8,
+    userlen: usize,
+    encode: c_int,
+    err: *mut c_int,
+) -> c_int {
+    let user = slice(userstr, userlen).to_vec();
+    let data = slice(dbytes, len as usize).to_vec();
+    match with_file(f, err, |file| {
+        file.write_block_from(0, Some(&data), len, Some(&user), encode != 0)
+    }) {
+        Some(()) => 0,
+        None => -1,
+    }
+}
+
+/// `scda_fwrite_array` (§A.4.3), serial view: the caller is the only
+/// process, so `N_p = N` and `dbytes` holds all `N * E` bytes.
+///
+/// # Safety
+/// `dbytes` must reference `n * elem_size` bytes.
+#[no_mangle]
+pub unsafe extern "C" fn scda_fwrite_array(
+    f: *mut ScdaHandle,
+    dbytes: *const u8,
+    n: u64,
+    elem_size: u64,
+    userstr: *const u8,
+    userlen: usize,
+    encode: c_int,
+    err: *mut c_int,
+) -> c_int {
+    let user = slice(userstr, userlen).to_vec();
+    let data = slice(dbytes, (n * elem_size) as usize);
+    let part = Partition::uniform(1, n);
+    match with_file(f, err, |file| {
+        file.write_array(DataSrc::Contiguous(data), &part, elem_size, Some(&user), encode != 0)
+    }) {
+        Some(()) => 0,
+        None => -1,
+    }
+}
+
+/// `scda_fwrite_varray` (§A.4.4), serial view: `sizes` holds all `N`
+/// element byte counts, `dbytes` their concatenation.
+///
+/// # Safety
+/// `sizes` must reference `n` u64s; `dbytes` their sum in bytes.
+#[no_mangle]
+pub unsafe extern "C" fn scda_fwrite_varray(
+    f: *mut ScdaHandle,
+    dbytes: *const u8,
+    n: u64,
+    sizes: *const u64,
+    userstr: *const u8,
+    userlen: usize,
+    encode: c_int,
+    err: *mut c_int,
+) -> c_int {
+    let user = slice(userstr, userlen).to_vec();
+    let sz: &[u64] =
+        if sizes.is_null() { &[] } else { std::slice::from_raw_parts(sizes, n as usize) };
+    let total: u64 = sz.iter().sum();
+    let data = slice(dbytes, total as usize);
+    let part = Partition::uniform(1, n);
+    match with_file(f, err, |file| {
+        file.write_varray(DataSrc::Contiguous(data), &part, sz, Some(&user), encode != 0)
+    }) {
+        Some(()) => 0,
+        None => -1,
+    }
+}
+
+/// `scda_fread_section_header` (§A.5.1). Outputs: `*kind` is the section
+/// letter ('I','B','A','V'); `*n`, `*e` per Table in §A.5.1; the user
+/// string is copied into `userstr` (capacity `*userlen`, actual written
+/// back); `*decode` is in/out per Table 2.
+///
+/// # Safety
+/// All out-pointers must be valid; `userstr` must have `*userlen` bytes.
+#[no_mangle]
+pub unsafe extern "C" fn scda_fread_section_header(
+    f: *mut ScdaHandle,
+    kind: *mut c_char,
+    n: *mut u64,
+    e: *mut u64,
+    userstr: *mut u8,
+    userlen: *mut usize,
+    decode: *mut c_int,
+    err: *mut c_int,
+) -> c_int {
+    let want_decode = !decode.is_null() && *decode != 0;
+    match with_file(f, err, |file| file.read_section_header(want_decode)) {
+        Some(h) => {
+            if !kind.is_null() {
+                *kind = h.kind.letter() as c_char;
+            }
+            if !n.is_null() {
+                *n = h.elem_count;
+            }
+            if !e.is_null() {
+                *e = h.elem_size;
+            }
+            if !decode.is_null() {
+                *decode = h.decoded as c_int;
+            }
+            if !userstr.is_null() && !userlen.is_null() {
+                let cap = *userlen;
+                let take = h.user.len().min(cap);
+                std::ptr::copy_nonoverlapping(h.user.as_ptr(), userstr, take);
+                *userlen = take;
+            }
+            0
+        }
+        None => -1,
+    }
+}
+
+/// `scda_fread_inline_data` (§A.5.2): 32 bytes into `dbytes` (NULL skips).
+///
+/// # Safety
+/// `dbytes`, when non-NULL, must have 32 writable bytes.
+#[no_mangle]
+pub unsafe extern "C" fn scda_fread_inline_data(f: *mut ScdaHandle, dbytes: *mut u8, err: *mut c_int) -> c_int {
+    let want = !dbytes.is_null();
+    match with_file(f, err, |file| file.read_inline_data(0, want)) {
+        Some(Some(data)) => {
+            std::ptr::copy_nonoverlapping(data.as_ptr(), dbytes, 32);
+            0
+        }
+        Some(None) => 0,
+        None => -1,
+    }
+}
+
+/// `scda_fread_block_data` (§A.5.3): `n` bytes into `dbytes` (NULL skips).
+///
+/// # Safety
+/// `dbytes`, when non-NULL, must have `n` writable bytes.
+#[no_mangle]
+pub unsafe extern "C" fn scda_fread_block_data(
+    f: *mut ScdaHandle,
+    dbytes: *mut u8,
+    n: u64,
+    err: *mut c_int,
+) -> c_int {
+    let want = !dbytes.is_null();
+    match with_file(f, err, |file| {
+        let out = file.read_block_data(0, want)?;
+        if let Some(data) = &out {
+            if data.len() as u64 != n {
+                return Err(ScdaError::usage(
+                    usage::BUFFER_SIZE,
+                    format!("buffer of {n} bytes for a {}-byte block", data.len()),
+                ));
+            }
+        }
+        Ok(out)
+    }) {
+        Some(Some(data)) => {
+            std::ptr::copy_nonoverlapping(data.as_ptr(), dbytes, data.len());
+            0
+        }
+        Some(None) => 0,
+        None => -1,
+    }
+}
+
+/// `scda_fread_array_data` (§A.5.4), serial view (`N_p = N`).
+///
+/// # Safety
+/// `dbytes`, when non-NULL, must have `n * elem_size` writable bytes.
+#[no_mangle]
+pub unsafe extern "C" fn scda_fread_array_data(
+    f: *mut ScdaHandle,
+    dbytes: *mut u8,
+    n: u64,
+    elem_size: u64,
+    err: *mut c_int,
+) -> c_int {
+    let want = !dbytes.is_null();
+    let part = Partition::uniform(1, n);
+    match with_file(f, err, |file| file.read_array_data(&part, elem_size, want)) {
+        Some(Some(data)) => {
+            std::ptr::copy_nonoverlapping(data.as_ptr(), dbytes, data.len());
+            0
+        }
+        Some(None) => 0,
+        None => -1,
+    }
+}
+
+/// `scda_fread_varray_sizes` (§A.5.5): `n` u64 sizes into `sizes`.
+///
+/// # Safety
+/// `sizes` must have `n` writable u64 slots.
+#[no_mangle]
+pub unsafe extern "C" fn scda_fread_varray_sizes(
+    f: *mut ScdaHandle,
+    sizes: *mut u64,
+    n: u64,
+    err: *mut c_int,
+) -> c_int {
+    let part = Partition::uniform(1, n);
+    match with_file(f, err, |file| file.read_varray_sizes(&part)) {
+        Some(out) => {
+            if !sizes.is_null() {
+                std::ptr::copy_nonoverlapping(out.as_ptr(), sizes, out.len());
+            }
+            0
+        }
+        None => -1,
+    }
+}
+
+/// `scda_fread_varray_data` (§A.5.6).
+///
+/// # Safety
+/// `sizes` must hold the values from `scda_fread_varray_sizes`; `dbytes`,
+/// when non-NULL, must have their sum in writable bytes.
+#[no_mangle]
+pub unsafe extern "C" fn scda_fread_varray_data(
+    f: *mut ScdaHandle,
+    dbytes: *mut u8,
+    n: u64,
+    sizes: *const u64,
+    err: *mut c_int,
+) -> c_int {
+    let part = Partition::uniform(1, n);
+    let sz: &[u64] =
+        if sizes.is_null() { &[] } else { std::slice::from_raw_parts(sizes, n as usize) };
+    let want = !dbytes.is_null();
+    match with_file(f, err, |file| file.read_varray_data(&part, sz, want)) {
+        Some(Some(data)) => {
+            std::ptr::copy_nonoverlapping(data.as_ptr(), dbytes, data.len());
+            0
+        }
+        Some(None) => 0,
+        None => -1,
+    }
+}
+
+/// `scda_ferror_string` (§A.6.1): translate `err` into `buf` (capacity
+/// `*buflen`; written length returned through it). Returns 0 for valid
+/// codes (including 0) and a negative value otherwise.
+///
+/// # Safety
+/// `buf` must have `*buflen` writable bytes; `buflen` must be valid.
+#[no_mangle]
+pub unsafe extern "C" fn scda_ferror_string(err: c_int, buf: *mut c_char, buflen: *mut usize) -> c_int {
+    let Some(msg) = crate::error::ferror_string(err) else {
+        return -1;
+    };
+    if !buf.is_null() && !buflen.is_null() {
+        let take = msg.len().min(*buflen);
+        std::ptr::copy_nonoverlapping(msg.as_ptr() as *const c_char, buf, take);
+        *buflen = take;
+    }
+    0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::ffi::CString;
+
+    fn tmp(name: &str) -> CString {
+        let dir = std::env::temp_dir().join("scda-capi");
+        std::fs::create_dir_all(&dir).unwrap();
+        CString::new(dir.join(format!("{name}-{}.scda", std::process::id())).to_str().unwrap()).unwrap()
+    }
+
+    #[test]
+    fn c_api_roundtrip_all_sections() {
+        unsafe {
+            let path = tmp("roundtrip");
+            let mut err: c_int = -1;
+            let f = scda_fopen(path.as_ptr(), b'w' as c_char, b"capi".as_ptr(), 4, &mut err);
+            assert_eq!(err, 0);
+            assert!(!f.is_null());
+            let inline = [b'z'; 32];
+            assert_eq!(scda_fwrite_inline(f, inline.as_ptr(), b"i".as_ptr(), 1, &mut err), 0);
+            let block = b"global block";
+            assert_eq!(scda_fwrite_block(f, block.as_ptr(), 12, b"b".as_ptr(), 1, 1, &mut err), 0);
+            let arr: Vec<u8> = (0..60).collect();
+            assert_eq!(scda_fwrite_array(f, arr.as_ptr(), 10, 6, b"a".as_ptr(), 1, 0, &mut err), 0);
+            let sizes = [3u64, 0, 5];
+            let vdata: Vec<u8> = (0..8).collect();
+            assert_eq!(scda_fwrite_varray(f, vdata.as_ptr(), 3, sizes.as_ptr(), b"v".as_ptr(), 1, 0, &mut err), 0);
+            assert_eq!(scda_fclose(f, &mut err), 0);
+            assert_eq!(err, 0);
+
+            // Read it back through the C surface.
+            let f = scda_fopen(path.as_ptr(), b'r' as c_char, std::ptr::null(), 0, &mut err);
+            assert_eq!(err, 0);
+            let mut kind: c_char = 0;
+            let (mut n, mut e) = (0u64, 0u64);
+            let mut user = [0u8; 58];
+            let mut userlen = user.len();
+            let mut decode: c_int = 1;
+            assert_eq!(
+                scda_fread_section_header(f, &mut kind, &mut n, &mut e, user.as_mut_ptr(), &mut userlen, &mut decode, &mut err),
+                0
+            );
+            assert_eq!(kind as u8, b'I');
+            assert_eq!(&user[..userlen], b"i");
+            let mut got = [0u8; 32];
+            assert_eq!(scda_fread_inline_data(f, got.as_mut_ptr(), &mut err), 0);
+            assert_eq!(got, inline);
+
+            let mut userlen = user.len();
+            let mut decode: c_int = 1;
+            scda_fread_section_header(f, &mut kind, &mut n, &mut e, user.as_mut_ptr(), &mut userlen, &mut decode, &mut err);
+            assert_eq!((kind as u8, decode), (b'B', 1)); // compressed + decoded
+            assert_eq!(e, 12);
+            let mut bbuf = vec![0u8; e as usize];
+            assert_eq!(scda_fread_block_data(f, bbuf.as_mut_ptr(), e, &mut err), 0);
+            assert_eq!(&bbuf, block);
+
+            let mut userlen = user.len();
+            let mut decode: c_int = 0;
+            scda_fread_section_header(f, &mut kind, &mut n, &mut e, user.as_mut_ptr(), &mut userlen, &mut decode, &mut err);
+            assert_eq!((kind as u8, n, e), (b'A', 10, 6));
+            let mut abuf = vec![0u8; 60];
+            assert_eq!(scda_fread_array_data(f, abuf.as_mut_ptr(), n, e, &mut err), 0);
+            assert_eq!(abuf, arr);
+
+            let mut userlen = user.len();
+            let mut decode: c_int = 0;
+            scda_fread_section_header(f, &mut kind, &mut n, &mut e, user.as_mut_ptr(), &mut userlen, &mut decode, &mut err);
+            assert_eq!((kind as u8, n), (b'V', 3));
+            let mut rsizes = vec![0u64; 3];
+            assert_eq!(scda_fread_varray_sizes(f, rsizes.as_mut_ptr(), 3, &mut err), 0);
+            assert_eq!(rsizes, sizes);
+            let mut vbuf = vec![0u8; 8];
+            assert_eq!(scda_fread_varray_data(f, vbuf.as_mut_ptr(), 3, rsizes.as_ptr(), &mut err), 0);
+            assert_eq!(vbuf, vdata);
+            assert_eq!(scda_fclose(f, &mut err), 0);
+            std::fs::remove_file(std::str::from_utf8(path.as_bytes()).unwrap()).unwrap();
+        }
+    }
+
+    #[test]
+    fn c_api_errors_and_skips() {
+        unsafe {
+            let mut err: c_int = 0;
+            // Bad mode.
+            let path = tmp("errors");
+            let f = scda_fopen(path.as_ptr(), b'x' as c_char, std::ptr::null(), 0, &mut err);
+            assert!(f.is_null());
+            assert_eq!(err, 3000 + usage::BAD_MODE);
+            // Missing file.
+            let missing = CString::new("/nonexistent/x.scda").unwrap();
+            let f = scda_fopen(missing.as_ptr(), b'r' as c_char, std::ptr::null(), 0, &mut err);
+            assert!(f.is_null());
+            assert!((2000..3000).contains(&err));
+            // Error string translation.
+            let mut buf = [0i8; 128];
+            let mut len = buf.len();
+            assert_eq!(scda_ferror_string(err, buf.as_mut_ptr(), &mut len), 0);
+            assert!(len > 0);
+            assert_eq!(scda_ferror_string(-7, buf.as_mut_ptr(), &mut len), -1);
+            // NULL skip on read.
+            let f = scda_fopen(path.as_ptr(), b'w' as c_char, std::ptr::null(), 0, &mut err);
+            assert_eq!(err, 0);
+            scda_fwrite_block(f, b"skipme".as_ptr(), 6, std::ptr::null(), 0, 0, &mut err);
+            scda_fclose(f, &mut err);
+            let f = scda_fopen(path.as_ptr(), b'r' as c_char, std::ptr::null(), 0, &mut err);
+            let mut decode: c_int = 0;
+            let mut kind: c_char = 0;
+            let (mut n, mut e) = (0u64, 0u64);
+            scda_fread_section_header(f, &mut kind, &mut n, &mut e, std::ptr::null_mut(), std::ptr::null_mut(), &mut decode, &mut err);
+            assert_eq!(scda_fread_block_data(f, std::ptr::null_mut(), e, &mut err), 0); // NULL = skip
+            scda_fclose(f, &mut err);
+            std::fs::remove_file(std::str::from_utf8(path.as_bytes()).unwrap()).unwrap();
+        }
+    }
+
+    #[test]
+    fn double_close_and_null_handle_are_clean_errors() {
+        unsafe {
+            let mut err: c_int = 0;
+            assert_eq!(scda_fclose(std::ptr::null_mut(), &mut err), -1);
+            assert_eq!(err, 3000 + usage::CALL_SEQUENCE);
+            assert_eq!(scda_fwrite_inline(std::ptr::null_mut(), [0u8; 32].as_ptr(), std::ptr::null(), 0, &mut err), -1);
+        }
+    }
+}

@@ -1,0 +1,103 @@
+//! Minimal argument parser (the offline build environment has no `clap`;
+//! this covers exactly what the `scda` tool needs: a subcommand,
+//! positional arguments, `--flag` booleans and `--key value` options).
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`. The first non-flag token is the subcommand.
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err("unexpected bare --".into());
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else {
+                    // `--key value` unless the next token is another flag
+                    // or absent (then boolean).
+                    match it.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = it.next().unwrap();
+                            out.flags.insert(name.to_string(), v);
+                        }
+                        _ => {
+                            out.flags.insert(name.to_string(), "true".to_string());
+                        }
+                    }
+                }
+            } else if out.command.is_empty() {
+                out.command = tok;
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        matches!(self.flags.get(name).map(String::as_str), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(String::as_str)
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, String> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("invalid value for --{name}: {v}")),
+        }
+    }
+
+    pub fn positional(&self, i: usize, what: &str) -> Result<&str, String> {
+        self.positional.get(i).map(String::as_str).ok_or_else(|| format!("missing {what}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(words: &[&str]) -> Args {
+        Args::parse(words.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_positionals_and_flags() {
+        let a = parse(&["info", "file.scda", "--decode", "--ranks", "4", "--level=9"]);
+        assert_eq!(a.command, "info");
+        assert_eq!(a.positional, vec!["file.scda"]);
+        assert!(a.flag("decode"));
+        assert_eq!(a.get_parse("ranks", 1usize).unwrap(), 4);
+        assert_eq!(a.get_parse("level", 0u8).unwrap(), 9);
+        assert_eq!(a.get_parse("missing", 7i32).unwrap(), 7);
+    }
+
+    #[test]
+    fn boolean_flag_before_positional() {
+        // `--verify file` consumes "file" as the value; `--verify --x f`
+        // treats verify as boolean. Documented behavior: put boolean
+        // flags last or use `--flag=true`.
+        let a = parse(&["verify", "--strict", "--file", "f.scda"]);
+        assert!(a.flag("strict"));
+        assert_eq!(a.get("file"), Some("f.scda"));
+    }
+
+    #[test]
+    fn errors_on_bad_values() {
+        let a = parse(&["x", "--ranks", "notanumber"]);
+        assert!(a.get_parse("ranks", 1usize).is_err());
+        assert!(a.positional(0, "file").is_err());
+    }
+}

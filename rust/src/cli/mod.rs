@@ -1,0 +1,317 @@
+//! The `scda` command-line tool: inspect, verify, dump, and produce scda
+//! files, plus a self-contained checkpoint/restart demo over simulated
+//! ranks. Every subcommand reports errors through the §A.6 error model
+//! (numeric code + `ferror_string` rendering) and never panics on bad
+//! files.
+
+pub mod args;
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use crate::api::ScdaFile;
+use crate::coordinator::checkpoint::{self, Field, FieldPayload};
+use crate::coordinator::metrics::Metrics;
+use crate::error::ScdaError;
+use crate::mesh;
+use crate::par::{run_parallel, Communicator, Partition, SerialComm};
+use crate::runtime::{PrecondService, Preconditioner};
+use args::Args;
+
+const USAGE: &str = "\
+scda — minimal, serial-equivalent format for parallel I/O
+
+USAGE: scda <command> [args]
+
+COMMANDS:
+  info <file> [--raw]          list sections (logical view; --raw shows
+                               convention pairs as their raw sections)
+  verify <file>                strict byte-level structural verification
+  cat <file> <index> [--raw]   dump a section's payload to stdout
+  demo-write <file> [--ranks P] [--encode] [--precondition]
+                               write an AMR demo checkpoint on P simulated
+                               ranks (base/max level via --base/--max)
+  restart <file> [--ranks P]   read a checkpoint on P ranks and report
+  version                      print version and backend information
+
+Errors exit nonzero and print `scda error <code>: <message>`.";
+
+/// Entry point for the binary; returns the process exit code.
+pub fn run(argv: impl IntoIterator<Item = String>) -> i32 {
+    let args = match Args::parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n{USAGE}");
+            return 2;
+        }
+    };
+    let result = match args.command.as_str() {
+        "info" | "ls" => cmd_info(&args),
+        "verify" => cmd_verify(&args),
+        "cat" => cmd_cat(&args),
+        "demo-write" => cmd_demo_write(&args),
+        "restart" => cmd_restart(&args),
+        "version" => {
+            println!(
+                "scda 0.1.0 (format scdata0; vendor {:?})",
+                String::from_utf8_lossy(crate::format::limits::VENDOR_STRING)
+            );
+            let pre = Preconditioner::auto(&artifacts_dir());
+            println!("precondition backend: {}", pre.backend_name());
+            Ok(())
+        }
+        "" | "help" | "--help" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command {other:?}\n{USAGE}");
+            return 2;
+        }
+    };
+    match result {
+        Ok(()) => 0,
+        Err(CliError::Usage(msg)) => {
+            eprintln!("error: {msg}");
+            2
+        }
+        Err(CliError::Scda(e)) => {
+            eprintln!("{e}");
+            eprintln!("({})", crate::error::ferror_string(e.code()).unwrap_or("unknown code"));
+            1
+        }
+    }
+}
+
+enum CliError {
+    Usage(String),
+    Scda(ScdaError),
+}
+
+impl From<ScdaError> for CliError {
+    fn from(e: ScdaError) -> Self {
+        CliError::Scda(e)
+    }
+}
+
+impl From<String> for CliError {
+    fn from(s: String) -> Self {
+        CliError::Usage(s)
+    }
+}
+
+type CliResult = Result<(), CliError>;
+
+/// Artifacts directory: `$SCDA_ARTIFACTS` or `<repo>/artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var_os("SCDA_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+}
+
+fn cmd_info(args: &Args) -> CliResult {
+    let path = args.positional(0, "file argument")?;
+    let mut f = ScdaFile::open(SerialComm::new(), path)?;
+    println!(
+        "file    {path}\nvendor  {:?}\nuser    {:?}",
+        String::from_utf8_lossy(f.header_vendor_string().unwrap_or(b"")),
+        String::from_utf8_lossy(f.header_user_string().unwrap_or(b"")),
+    );
+    let toc = f.toc(!args.flag("raw"))?;
+    println!("{:>4} {:>4} {:>12} {:>14} {:>14}  {}", "#", "type", "elements", "elem bytes", "file bytes", "user string");
+    for (i, e) in toc.iter().enumerate() {
+        println!(
+            "{:>4} {:>4} {:>12} {:>14} {:>14}  {:?}{}",
+            i,
+            e.header.kind.to_string(),
+            e.header.elem_count,
+            e.header.elem_size,
+            e.byte_len,
+            String::from_utf8_lossy(&e.header.user),
+            if e.header.decoded { " [compressed]" } else { "" },
+        );
+    }
+    f.close()?;
+    Ok(())
+}
+
+fn cmd_verify(args: &Args) -> CliResult {
+    let path = args.positional(0, "file argument")?;
+    let sections = crate::api::verify_file(Path::new(path))?;
+    println!("{path}: OK ({sections} raw sections, every byte validated)");
+    Ok(())
+}
+
+fn cmd_cat(args: &Args) -> CliResult {
+    let path = args.positional(0, "file argument")?;
+    let index: usize = args
+        .positional(1, "section index")?
+        .parse()
+        .map_err(|_| "section index must be a number".to_string())?;
+    let decode = !args.flag("raw");
+    let mut f = ScdaFile::open(SerialComm::new(), path)?;
+    let part1 = |n: u64| Partition::uniform(1, n);
+    let mut i = 0usize;
+    while !f.at_end()? {
+        let h = f.read_section_header(decode)?;
+        if i != index {
+            f.skip_section_data()?;
+            i += 1;
+            continue;
+        }
+        use crate::format::section::SectionKind::*;
+        use std::io::Write;
+        let stdout = std::io::stdout();
+        let mut out = stdout.lock();
+        match h.kind {
+            Inline => {
+                let d = f.read_inline_data(0, true)?.unwrap();
+                out.write_all(&d).ok();
+            }
+            Block => {
+                let d = f.read_block_data(0, true)?.unwrap();
+                out.write_all(&d).ok();
+            }
+            Array => {
+                let d = f.read_array_data(&part1(h.elem_count), h.elem_size, true)?.unwrap();
+                out.write_all(&d).ok();
+            }
+            Varray => {
+                let p = part1(h.elem_count);
+                let sizes = f.read_varray_sizes(&p)?;
+                let d = f.read_varray_data(&p, &sizes, true)?.unwrap();
+                out.write_all(&d).ok();
+            }
+        }
+        f.close()?;
+        return Ok(());
+    }
+    Err(CliError::Usage(format!("section {index} not found ({i} sections)")))
+}
+
+fn cmd_demo_write(args: &Args) -> CliResult {
+    let path = PathBuf::from(args.positional(0, "file argument")?);
+    let ranks: usize = args.get_parse("ranks", 4)?;
+    let base: u8 = args.get_parse("base", 4)?;
+    let max: u8 = args.get_parse("max", 7)?;
+    let encode = args.flag("encode");
+    let precondition = args.flag("precondition");
+    let leaves = Arc::new(mesh::ring_mesh(base, max, (0.5, 0.5), 0.3));
+    let n = leaves.len() as u64;
+    println!("mesh: {n} elements (levels {base}..{max}), ranks {ranks}, encode={encode} precondition={precondition}");
+    let part = Arc::new(Partition::uniform(ranks, n));
+    let metrics = Arc::new(Metrics::new());
+    let adir = artifacts_dir();
+    let pre: Arc<PrecondService> = Arc::new(if precondition {
+        PrecondService::auto(adir)
+    } else {
+        PrecondService::spawn(Preconditioner::native)
+    });
+    let pathc = path.clone();
+    let (leaves2, part2, metrics2, pre2) =
+        (Arc::clone(&leaves), Arc::clone(&part), Arc::clone(&metrics), Arc::clone(&pre));
+    let errors: Vec<Option<String>> = run_parallel(ranks, move |comm| {
+        let rank = comm.rank();
+        let r = part2.local_range(rank);
+        let range = r.start as usize..r.end as usize;
+        let rho = mesh::fields::local_fixed_field(&leaves2, range.clone(), 5);
+        let (hp_sizes, hp_data) = mesh::fields::local_hp_field(&leaves2, range, 6);
+        let fields = vec![
+            Field {
+                name: "rho:f64x5".into(),
+                encode,
+                precondition,
+                payload: FieldPayload::Fixed { elem_size: 40, data: rho },
+            },
+            Field {
+                name: "hp:coeffs".into(),
+                encode,
+                precondition,
+                payload: FieldPayload::Var { sizes: hp_sizes, data: hp_data },
+            },
+        ];
+        checkpoint::write_checkpoint(comm, &pathc, "scda-demo", 1, &part2, &fields, &*pre2, &metrics2)
+            .err()
+            .map(|e| e.to_string())
+    });
+    if let Some(e) = errors.into_iter().flatten().next() {
+        return Err(CliError::Usage(e));
+    }
+    let bytes = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+    println!("wrote {} ({bytes} bytes)", path.display());
+    println!("{}", metrics.report());
+    Ok(())
+}
+
+fn cmd_restart(args: &Args) -> CliResult {
+    let path = PathBuf::from(args.positional(0, "file argument")?);
+    let ranks: usize = args.get_parse("ranks", 2)?;
+    // Serial probe for the manifest to learn N.
+    let (probe, info) = checkpoint::open_checkpoint(SerialComm::new(), &path)?;
+    probe.close()?;
+    let n = info.fields.first().map(|f| f.elem_count).unwrap_or(0);
+    println!("checkpoint app={} step={} fields={} elements={n}", info.app, info.step, info.fields.len());
+    let part = Arc::new(Partition::uniform(ranks, n));
+    let pre = Arc::new(PrecondService::auto(artifacts_dir()));
+    let (p2, pre2) = (Arc::clone(&part), Arc::clone(&pre));
+    let sums: Vec<Result<u64, String>> = run_parallel(ranks, move |comm| {
+        checkpoint::read_checkpoint(comm, &path, &p2, &*pre2)
+            .map(|(_, fields)| {
+                fields
+                    .iter()
+                    .map(|f| match &f.payload {
+                        FieldPayload::Fixed { data, .. } | FieldPayload::Var { data, .. } => data.len() as u64,
+                    })
+                    .sum::<u64>()
+            })
+            .map_err(|e| e.to_string())
+    });
+    let mut total = 0u64;
+    for (rank, s) in sums.into_iter().enumerate() {
+        match s {
+            Ok(b) => {
+                println!("rank {rank}: {b} payload bytes restored");
+                total += b;
+            }
+            Err(e) => return Err(CliError::Usage(e)),
+        }
+    }
+    println!("restart on {ranks} ranks: {total} bytes total");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("scda-cli");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(format!("{name}-{}.scda", std::process::id()))
+    }
+
+    fn run_words(words: &[&str]) -> i32 {
+        run(words.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn demo_write_verify_info_restart() {
+        let path = tmpfile("cli-demo");
+        let p = path.to_str().unwrap();
+        assert_eq!(run_words(&["demo-write", p, "--ranks", "3", "--base", "2", "--max", "4", "--encode"]), 0);
+        assert_eq!(run_words(&["verify", p]), 0);
+        assert_eq!(run_words(&["info", p]), 0);
+        assert_eq!(run_words(&["info", p, "--raw"]), 0);
+        assert_eq!(run_words(&["restart", p, "--ranks", "5"]), 0);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn errors_are_clean() {
+        assert_ne!(run_words(&["verify", "/nonexistent.scda"]), 0);
+        assert_ne!(run_words(&["bogus-command"]), 0);
+        assert_ne!(run_words(&["info"]), 0);
+        assert_eq!(run_words(&["help"]), 0);
+        assert_eq!(run_words(&["version"]), 0);
+    }
+}

@@ -1,0 +1,87 @@
+//! Adler-32 checksum (RFC 1950 §2.2), the integrity check inside every
+//! zlib stream written by the compression convention (§3.1). One of the
+//! paper's "three redundant checks" on reading compressed data.
+
+const MOD_ADLER: u32 = 65_521;
+/// Largest n such that 255 n (n+1) / 2 + (n+1)(MOD-1) stays below 2^32:
+/// lets us defer the expensive modulo to every NMAX bytes (zlib's trick).
+const NMAX: usize = 5552;
+
+/// Streaming Adler-32 state.
+#[derive(Debug, Clone)]
+pub struct Adler32 {
+    a: u32,
+    b: u32,
+}
+
+impl Default for Adler32 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Adler32 {
+    pub fn new() -> Self {
+        Adler32 { a: 1, b: 0 }
+    }
+
+    pub fn update(&mut self, data: &[u8]) {
+        for chunk in data.chunks(NMAX) {
+            for &byte in chunk {
+                self.a += byte as u32;
+                self.b += self.a;
+            }
+            self.a %= MOD_ADLER;
+            self.b %= MOD_ADLER;
+        }
+    }
+
+    pub fn finish(&self) -> u32 {
+        (self.b << 16) | self.a
+    }
+}
+
+/// One-shot Adler-32 of `data`.
+pub fn adler32(data: &[u8]) -> u32 {
+    let mut s = Adler32::new();
+    s.update(data);
+    s.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // RFC 1950: checksum of the empty stream is 1.
+        assert_eq!(adler32(b""), 1);
+        // Classic test vector.
+        assert_eq!(adler32(b"Wikipedia"), 0x11E6_0398);
+        assert_eq!(adler32(b"a"), 0x0062_0062);
+        assert_eq!(adler32(b"abc"), 0x024d_0127);
+        assert_eq!(adler32(b"message digest"), 0x29750586);
+    }
+
+    #[test]
+    fn streaming_equals_oneshot() {
+        let data: Vec<u8> = (0..100_000u32).map(|i| i.wrapping_mul(2_654_435_761) as u8).collect();
+        let mut s = Adler32::new();
+        for chunk in data.chunks(777) {
+            s.update(chunk);
+        }
+        assert_eq!(s.finish(), adler32(&data));
+    }
+
+    #[test]
+    fn deferred_modulo_is_safe_on_all_ones() {
+        let data = vec![0xffu8; 4 * NMAX + 13];
+        // Cross-check against a naive mod-every-byte implementation.
+        let (mut a, mut b) = (1u64, 0u64);
+        for &x in &data {
+            a = (a + x as u64) % MOD_ADLER as u64;
+            b = (b + a) % MOD_ADLER as u64;
+        }
+        assert_eq!(adler32(&data), ((b as u32) << 16) | a as u32);
+    }
+}

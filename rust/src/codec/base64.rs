@@ -1,0 +1,231 @@
+//! Base64 with the line discipline of §3.1: the encoded stream is broken
+//! into lines of 76 code bytes followed by a two-byte line break — `"\r\n"`
+//! for MIME style, `"=\n"` for Unix style — and "the same two bytes are
+//! added after the last line of encoding if it is short of 76 bytes".
+//! (Reading accepts either style, and a final full line also carries the
+//! terminator so the compressed size is a pure function of the payload.)
+
+use crate::error::{corrupt, Result, ScdaError};
+use crate::format::limits::BASE64_LINE_COLS;
+use crate::format::padding::LineStyle;
+
+const ALPHABET: &[u8; 64] = b"ABCDEFGHIJKLMNOPQRSTUVWXYZabcdefghijklmnopqrstuvwxyz0123456789+/";
+
+fn decode_table() -> [i8; 256] {
+    let mut t = [-1i8; 256];
+    let mut i = 0u8;
+    while (i as usize) < 64 {
+        t[ALPHABET[i as usize] as usize] = i as i8;
+        i += 1;
+    }
+    t
+}
+
+/// Raw base64 encoding without line breaks (RFC 4648 with `=` padding).
+pub fn encode_plain(data: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(data.len().div_ceil(3) * 4);
+    for chunk in data.chunks(3) {
+        let b = [chunk[0], *chunk.get(1).unwrap_or(&0), *chunk.get(2).unwrap_or(&0)];
+        let v = ((b[0] as u32) << 16) | ((b[1] as u32) << 8) | b[2] as u32;
+        out.push(ALPHABET[(v >> 18) as usize & 63]);
+        out.push(ALPHABET[(v >> 12) as usize & 63]);
+        out.push(if chunk.len() > 1 { ALPHABET[(v >> 6) as usize & 63] } else { b'=' });
+        out.push(if chunk.len() > 2 { ALPHABET[v as usize & 63] } else { b'=' });
+    }
+    out
+}
+
+/// Encode with the §3.1 line discipline. The result length — the
+/// convention's "compressed size" — is deterministic:
+/// `ceil(n/3)*4` code bytes plus 2 bytes per (possibly partial) line.
+pub fn encode_lines(data: &[u8], style: LineStyle) -> Vec<u8> {
+    let code = encode_plain(data);
+    let brk: &[u8; 2] = match style {
+        LineStyle::Unix => b"=\n",
+        LineStyle::Mime => b"\r\n",
+    };
+    let nlines = code.len().div_ceil(BASE64_LINE_COLS).max(1);
+    let mut out = Vec::with_capacity(code.len() + 2 * nlines);
+    if code.is_empty() {
+        // Zero-byte payload: a single empty line still gets its terminator
+        // so that even empty data is visibly delimited.
+        out.extend_from_slice(brk);
+        return out;
+    }
+    for line in code.chunks(BASE64_LINE_COLS) {
+        out.extend_from_slice(line);
+        out.extend_from_slice(brk);
+    }
+    out
+}
+
+/// Exact encoded length produced by [`encode_lines`] for `n` input bytes.
+pub fn encoded_len(n: usize) -> usize {
+    let code = n.div_ceil(3) * 4;
+    code + 2 * code.div_ceil(BASE64_LINE_COLS).max(1)
+}
+
+/// Decode a §3.1 base64 stream.
+///
+/// The line geometry is fully determined by the total length `L`: every
+/// line, including the last (possibly partial or empty) one, carries a
+/// 2-byte terminator, so `lines = ceil(L / 78)` and the number of code
+/// bytes is `L - 2 * lines`. The terminator bytes themselves are "arbitrary"
+/// per the spec and are not interpreted; code bytes are strict RFC 4648.
+pub fn decode_lines(data: &[u8]) -> Result<Vec<u8>> {
+    if data.len() < 2 {
+        return Err(ScdaError::corrupt(corrupt::BAD_BASE64, "base64 stream shorter than one terminator"));
+    }
+    let lines = data.len().div_ceil(BASE64_LINE_COLS + 2);
+    let code_len = data
+        .len()
+        .checked_sub(2 * lines)
+        .ok_or_else(|| ScdaError::corrupt(corrupt::BAD_BASE64, "base64 stream length inconsistent"))?;
+    if code_len % 4 != 0 {
+        return Err(ScdaError::corrupt(
+            corrupt::BAD_BASE64,
+            format!("base64 code length {code_len} not a multiple of 4"),
+        ));
+    }
+    let table = decode_table();
+    let mut out = Vec::with_capacity(code_len / 4 * 3);
+    let mut quad = [0u8; 4];
+    let mut qi = 0usize;
+    let mut pad = 0usize;
+    let mut consumed_code = 0usize;
+    let mut i = 0usize;
+    while consumed_code < code_len {
+        // Skip the 2-byte terminator after each full line.
+        if consumed_code > 0 && consumed_code % BASE64_LINE_COLS == 0 && i % (BASE64_LINE_COLS + 2) != 0 {
+            i += 2;
+            continue;
+        }
+        let b = data[i];
+        i += 1;
+        consumed_code += 1;
+        let v = table[b as usize];
+        if v >= 0 {
+            if pad > 0 {
+                return Err(ScdaError::corrupt(corrupt::BAD_BASE64, "base64 code byte after padding"));
+            }
+            quad[qi] = v as u8;
+            qi += 1;
+        } else if b == b'=' && qi >= 2 && consumed_code + (3 - qi) >= code_len {
+            // Pad only legal in the trailing positions of the final group.
+            pad += 1;
+            quad[qi] = 0;
+            qi += 1;
+        } else {
+            return Err(ScdaError::corrupt(
+                corrupt::BAD_BASE64,
+                format!("invalid base64 byte {b:#04x} at offset {}", i - 1),
+            ));
+        }
+        if qi == 4 {
+            out.push((quad[0] << 2) | (quad[1] >> 4));
+            if pad < 2 {
+                out.push((quad[1] << 4) | (quad[2] >> 2));
+            }
+            if pad < 1 {
+                out.push((quad[2] << 6) | quad[3]);
+            }
+            qi = 0;
+        }
+    }
+    if qi != 0 {
+        return Err(ScdaError::corrupt(corrupt::BAD_BASE64, "base64 stream ends mid-group"));
+    }
+    if i + 2 != data.len() {
+        return Err(ScdaError::corrupt(corrupt::BAD_BASE64, "base64 stream length inconsistent"));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plain_rfc_vectors() {
+        assert_eq!(encode_plain(b""), b"");
+        assert_eq!(encode_plain(b"f"), b"Zg==");
+        assert_eq!(encode_plain(b"fo"), b"Zm8=");
+        assert_eq!(encode_plain(b"foo"), b"Zm9v");
+        assert_eq!(encode_plain(b"foob"), b"Zm9vYg==");
+        assert_eq!(encode_plain(b"fooba"), b"Zm9vYmE=");
+        assert_eq!(encode_plain(b"foobar"), b"Zm9vYmFy");
+    }
+
+    #[test]
+    fn lines_are_76_plus_terminator() {
+        let data = vec![0xabu8; 100]; // 136 code chars -> 1 full + 1 partial line
+        for style in [LineStyle::Unix, LineStyle::Mime] {
+            let enc = encode_lines(&data, style);
+            assert_eq!(enc.len(), encoded_len(100));
+            let term: &[u8] = match style {
+                LineStyle::Unix => b"=\n",
+                LineStyle::Mime => b"\r\n",
+            };
+            assert_eq!(&enc[76..78], term);
+            assert_eq!(&enc[enc.len() - 2..], term);
+        }
+    }
+
+    #[test]
+    fn full_line_also_terminated() {
+        // 57 bytes -> exactly 76 code chars -> one line + terminator.
+        let data = vec![7u8; 57];
+        let enc = encode_lines(&data, LineStyle::Unix);
+        assert_eq!(enc.len(), 78);
+        assert_eq!(encoded_len(57), 78);
+        assert_eq!(decode_lines(&enc).unwrap(), data);
+    }
+
+    #[test]
+    fn roundtrip_sizes() {
+        let mut x = 0xdeadbeefu64;
+        for n in [0usize, 1, 2, 3, 4, 56, 57, 58, 75, 76, 100, 1000, 10_000] {
+            let data: Vec<u8> = (0..n)
+                .map(|_| {
+                    x = x.wrapping_mul(6364136223846793005).wrapping_add(1);
+                    (x >> 33) as u8
+                })
+                .collect();
+            for style in [LineStyle::Unix, LineStyle::Mime] {
+                let enc = encode_lines(&data, style);
+                assert_eq!(enc.len(), encoded_len(n), "n={n}");
+                assert_eq!(decode_lines(&enc).unwrap(), data, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_payload_is_single_terminator() {
+        let enc = encode_lines(b"", LineStyle::Unix);
+        assert_eq!(enc, b"=\n");
+        assert_eq!(encoded_len(0), 2);
+        assert_eq!(decode_lines(&enc).unwrap(), b"");
+        assert_eq!(decode_lines(b"\r\n").unwrap(), b"");
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let enc = encode_lines(b"hello world", LineStyle::Unix);
+        let mut bad = enc.clone();
+        bad[0] = b'!';
+        assert!(decode_lines(&bad).is_err());
+        // Truncation mid-group.
+        assert!(decode_lines(&enc[..enc.len() - 3]).is_err());
+    }
+
+    #[test]
+    fn cross_style_decoding() {
+        let data = vec![42u8; 200];
+        let unix = encode_lines(&data, LineStyle::Unix);
+        let mime = encode_lines(&data, LineStyle::Mime);
+        assert_eq!(decode_lines(&unix).unwrap(), data);
+        assert_eq!(decode_lines(&mime).unwrap(), data);
+        assert_ne!(unix, mime);
+        assert_eq!(unix.len(), mime.len());
+    }
+}

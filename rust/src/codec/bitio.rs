@@ -1,0 +1,237 @@
+//! LSB-first bit I/O as used by DEFLATE (RFC 1951 §3.1.1): data elements
+//! are packed starting from the least-significant bit of each byte; Huffman
+//! codes are packed most-significant-bit first (i.e. bit-reversed before
+//! writing through this LSB-first writer).
+
+use crate::error::{corrupt, Result, ScdaError};
+
+/// Bit-level writer accumulating into a byte vector.
+#[derive(Debug, Default)]
+pub struct BitWriter {
+    out: Vec<u8>,
+    bitbuf: u64,
+    bitcount: u32,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Write the low `n` bits of `value`, LSB first. `n <= 57` per call.
+    #[inline]
+    pub fn write_bits(&mut self, value: u32, n: u32) {
+        debug_assert!(n <= 32);
+        debug_assert!(n == 32 || value < (1u32 << n));
+        self.bitbuf |= (value as u64) << self.bitcount;
+        self.bitcount += n;
+        while self.bitcount >= 8 {
+            self.out.push((self.bitbuf & 0xff) as u8);
+            self.bitbuf >>= 8;
+            self.bitcount -= 8;
+        }
+    }
+
+    /// Write a Huffman code of `len` bits: DEFLATE packs codes MSB-first,
+    /// so the canonical code is bit-reversed into the LSB-first stream.
+    #[inline]
+    pub fn write_code(&mut self, code: u32, len: u32) {
+        self.write_bits(reverse_bits(code, len), len);
+    }
+
+    /// Pad with zero bits to the next byte boundary.
+    pub fn align_byte(&mut self) {
+        if self.bitcount > 0 {
+            self.out.push((self.bitbuf & 0xff) as u8);
+            self.bitbuf = 0;
+            self.bitcount = 0;
+        }
+    }
+
+    /// Append raw bytes; the stream must be byte-aligned.
+    pub fn write_bytes(&mut self, bytes: &[u8]) {
+        debug_assert_eq!(self.bitcount, 0, "write_bytes requires byte alignment");
+        self.out.extend_from_slice(bytes);
+    }
+
+    pub fn finish(mut self) -> Vec<u8> {
+        self.align_byte();
+        self.out
+    }
+
+    pub fn len_bytes(&self) -> usize {
+        self.out.len() + if self.bitcount > 0 { 1 } else { 0 }
+    }
+}
+
+/// Reverse the low `n` bits of `v`.
+#[inline]
+pub fn reverse_bits(v: u32, n: u32) -> u32 {
+    v.reverse_bits() >> (32 - n)
+}
+
+/// Bit-level reader over a byte slice.
+#[derive(Debug)]
+pub struct BitReader<'a> {
+    data: &'a [u8],
+    pos: usize,
+    bitbuf: u64,
+    bitcount: u32,
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(data: &'a [u8]) -> Self {
+        BitReader { data, pos: 0, bitbuf: 0, bitcount: 0 }
+    }
+
+    #[inline]
+    fn refill(&mut self) {
+        while self.bitcount <= 56 && self.pos < self.data.len() {
+            self.bitbuf |= (self.data[self.pos] as u64) << self.bitcount;
+            self.pos += 1;
+            self.bitcount += 8;
+        }
+    }
+
+    /// Read `n` bits LSB-first. Fails at end of input.
+    #[inline]
+    pub fn read_bits(&mut self, n: u32) -> Result<u32> {
+        debug_assert!(n <= 32);
+        if self.bitcount < n {
+            self.refill();
+            if self.bitcount < n {
+                return Err(ScdaError::corrupt(corrupt::BAD_ZLIB, "deflate stream ends mid-symbol"));
+            }
+        }
+        let mask = if n == 32 { u64::MAX >> 32 } else { (1u64 << n) - 1 };
+        let v = (self.bitbuf & mask) as u32;
+        self.bitbuf >>= n;
+        self.bitcount -= n;
+        Ok(v)
+    }
+
+    /// Peek up to `n` bits without consuming (may return fewer near EOF;
+    /// missing high bits read as zero).
+    #[inline]
+    pub fn peek_bits(&mut self, n: u32) -> u32 {
+        if self.bitcount < n {
+            self.refill();
+        }
+        let mask = if n >= 32 { u64::MAX >> 32 } else { (1u64 << n) - 1 };
+        (self.bitbuf & mask) as u32
+    }
+
+    /// Consume `n` bits previously peeked (must be available).
+    #[inline]
+    pub fn consume(&mut self, n: u32) -> Result<()> {
+        if self.bitcount < n {
+            return Err(ScdaError::corrupt(corrupt::BAD_ZLIB, "deflate stream ends mid-symbol"));
+        }
+        self.bitbuf >>= n;
+        self.bitcount -= n;
+        Ok(())
+    }
+
+    /// Number of whole bits still available (including unread bytes).
+    pub fn bits_remaining(&self) -> usize {
+        self.bitcount as usize + 8 * (self.data.len() - self.pos)
+    }
+
+    /// Discard bits to the next byte boundary and return the byte offset
+    /// into the underlying slice.
+    pub fn align_byte(&mut self) -> usize {
+        let drop = self.bitcount % 8;
+        self.bitbuf >>= drop;
+        self.bitcount -= drop;
+        // Bytes buffered but unconsumed:
+        let buffered = (self.bitcount / 8) as usize;
+        self.pos - buffered
+    }
+
+    /// Read `len` raw bytes after aligning to a byte boundary.
+    pub fn read_aligned_bytes(&mut self, len: usize) -> Result<&'a [u8]> {
+        let start = self.align_byte();
+        if start + len > self.data.len() {
+            return Err(ScdaError::corrupt(corrupt::BAD_ZLIB, "stored block overruns stream"));
+        }
+        // Reset buffering to read from `start`.
+        self.pos = start + len;
+        self.bitbuf = 0;
+        self.bitcount = 0;
+        Ok(&self.data[start..start + len])
+    }
+
+    /// Byte offset of the next unconsumed bit's byte (after alignment).
+    pub fn byte_position(&mut self) -> usize {
+        self.align_byte()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_bits() {
+        let mut w = BitWriter::new();
+        w.write_bits(0b101, 3);
+        w.write_bits(0xffff, 16);
+        w.write_bits(0, 1);
+        w.write_bits(0b1100_1010, 8);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read_bits(3).unwrap(), 0b101);
+        assert_eq!(r.read_bits(16).unwrap(), 0xffff);
+        assert_eq!(r.read_bits(1).unwrap(), 0);
+        assert_eq!(r.read_bits(8).unwrap(), 0b1100_1010);
+        assert!(r.read_bits(8).is_err());
+    }
+
+    #[test]
+    fn reverse_bits_examples() {
+        assert_eq!(reverse_bits(0b1, 1), 0b1);
+        assert_eq!(reverse_bits(0b100, 3), 0b001);
+        assert_eq!(reverse_bits(0b0111, 4), 0b1110);
+        for n in 1..=16u32 {
+            for v in [0u32, 1, 3, (1 << n) - 1] {
+                if v < (1 << n) {
+                    assert_eq!(reverse_bits(reverse_bits(v, n), n), v);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn aligned_byte_reads() {
+        let mut w = BitWriter::new();
+        w.write_bits(0b11, 2);
+        w.align_byte();
+        w.write_bytes(b"abc");
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read_bits(2).unwrap(), 0b11);
+        assert_eq!(r.read_aligned_bytes(3).unwrap(), b"abc");
+        assert_eq!(r.bits_remaining(), 0);
+    }
+
+    #[test]
+    fn peek_and_consume() {
+        let mut w = BitWriter::new();
+        w.write_bits(0xabcd, 16);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.peek_bits(4), 0xd);
+        assert_eq!(r.peek_bits(16), 0xabcd);
+        r.consume(4).unwrap();
+        assert_eq!(r.read_bits(12).unwrap(), 0xabc);
+    }
+
+    #[test]
+    fn peek_past_eof_zero_fills() {
+        let bytes = [0xffu8];
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.peek_bits(16), 0x00ff);
+        assert_eq!(r.read_bits(8).unwrap(), 0xff);
+        assert!(r.read_bits(1).is_err());
+    }
+}

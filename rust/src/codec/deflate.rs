@@ -1,0 +1,394 @@
+//! DEFLATE compressor (RFC 1951), written from scratch for the compression
+//! convention of §3.1 ("an RFC 1950/1951 deflate stream using any legal
+//! compression level").
+//!
+//! Strategy: the input is processed in segments; each segment is LZ77-
+//! tokenized ([`crate::codec::lz77`]) and emitted as one block, choosing
+//! per block among *stored*, *fixed-Huffman*, and *dynamic-Huffman*
+//! encodings by exact bit cost. Level 0 hardcodes stored blocks — the
+//! paper's zlib-free fallback.
+
+use crate::codec::bitio::BitWriter;
+use crate::codec::huffman::{build_lengths, lengths_to_codes};
+use crate::codec::lz77::{Matcher, MatchParams, Token, MAX_MATCH, MIN_MATCH};
+
+/// Length code table: (symbol - 257) -> (base length, extra bits).
+pub const LENGTH_TABLE: [(u16, u8); 29] = [
+    (3, 0), (4, 0), (5, 0), (6, 0), (7, 0), (8, 0), (9, 0), (10, 0),
+    (11, 1), (13, 1), (15, 1), (17, 1),
+    (19, 2), (23, 2), (27, 2), (31, 2),
+    (35, 3), (43, 3), (51, 3), (59, 3),
+    (67, 4), (83, 4), (99, 4), (115, 4),
+    (131, 5), (163, 5), (195, 5), (227, 5),
+    (258, 0),
+];
+
+/// Distance code table: symbol -> (base distance, extra bits).
+pub const DIST_TABLE: [(u16, u8); 30] = [
+    (1, 0), (2, 0), (3, 0), (4, 0), (5, 1), (7, 1), (9, 2), (13, 2),
+    (17, 3), (25, 3), (33, 4), (49, 4), (65, 5), (97, 5), (129, 6), (193, 6),
+    (257, 7), (385, 7), (513, 8), (769, 8), (1025, 9), (1537, 9),
+    (2049, 10), (3073, 10), (4097, 11), (6145, 11), (8193, 12), (12289, 12),
+    (16385, 13), (24577, 13),
+];
+
+/// Order in which code-length code lengths are transmitted (RFC 1951).
+pub const CLCL_ORDER: [usize; 19] = [16, 17, 18, 0, 8, 7, 9, 6, 10, 5, 11, 4, 12, 3, 13, 2, 14, 1, 15];
+
+const NUM_LIT: usize = 286; // 0..=285 (286/287 never emitted)
+const NUM_DIST: usize = 30;
+const STORED_MAX: usize = 65_535;
+/// Input bytes per block. Matches do not cross segment boundaries, which
+/// costs a little ratio but bounds memory and lets per-block Huffman
+/// tables adapt.
+const SEGMENT: usize = 256 * 1024;
+
+/// Direct length -> symbol lookup (259 entries, built once).
+static LEN_SYM: [u8; 259] = {
+    let mut t = [0u8; 259];
+    let mut sym = 0usize;
+    let mut len = 3usize;
+    while len <= 258 {
+        while sym + 1 < 29 && LENGTH_TABLE[sym + 1].0 as usize <= len {
+            sym += 1;
+        }
+        t[len] = sym as u8;
+        len += 1;
+    }
+    t[258] = 28; // length 258 uses symbol 285 (0 extra bits)
+    t
+};
+
+#[inline]
+pub fn length_to_symbol(len: usize) -> (u16, u32, u8) {
+    debug_assert!((MIN_MATCH..=MAX_MATCH).contains(&len));
+    let sym = LEN_SYM[len] as usize;
+    let (base, extra) = LENGTH_TABLE[sym];
+    (257 + sym as u16, (len - base as usize) as u32, extra)
+}
+
+#[inline]
+pub fn dist_to_symbol(dist: usize) -> (u16, u32, u8) {
+    debug_assert!((1..=32768).contains(&dist));
+    let sym = match DIST_TABLE.binary_search_by(|&(base, _)| base.cmp(&(dist as u16))) {
+        Ok(i) => i,
+        Err(i) => i - 1,
+    };
+    let (base, extra) = DIST_TABLE[sym];
+    (sym as u16, (dist - base as usize) as u32, extra)
+}
+
+/// Fixed-Huffman literal/length code lengths (RFC 1951 §3.2.6).
+fn fixed_lit_lengths() -> Vec<u8> {
+    let mut l = vec![8u8; 288];
+    l[144..256].iter_mut().for_each(|x| *x = 9);
+    l[256..280].iter_mut().for_each(|x| *x = 7);
+    l
+}
+
+fn fixed_dist_lengths() -> Vec<u8> {
+    vec![5u8; 30]
+}
+
+/// Histogram of literal/length and distance symbols for a token run.
+fn count_freqs(tokens: &[Token]) -> ([u32; NUM_LIT], [u32; NUM_DIST]) {
+    let mut lit = [0u32; NUM_LIT];
+    let mut dist = [0u32; NUM_DIST];
+    for t in tokens {
+        match *t {
+            Token::Literal(b) => lit[b as usize] += 1,
+            Token::Match { len, dist: d } => {
+                lit[length_to_symbol(len as usize).0 as usize] += 1;
+                dist[dist_to_symbol(d as usize).0 as usize] += 1;
+            }
+        }
+    }
+    lit[256] += 1; // end-of-block
+    (lit, dist)
+}
+
+/// Exact bit cost of encoding `tokens` with the given code lengths
+/// (header cost excluded).
+fn token_bits(tokens: &[Token], lit_len: &[u8], dist_len: &[u8]) -> u64 {
+    let mut bits = 0u64;
+    for t in tokens {
+        match *t {
+            Token::Literal(b) => bits += lit_len[b as usize] as u64,
+            Token::Match { len, dist } => {
+                let (ls, _, le) = length_to_symbol(len as usize);
+                let (ds, _, de) = dist_to_symbol(dist as usize);
+                bits += lit_len[ls as usize] as u64 + le as u64;
+                bits += dist_len[ds as usize] as u64 + de as u64;
+            }
+        }
+    }
+    bits + lit_len[256] as u64
+}
+
+/// Run-length encode the concatenated code lengths with symbols 16/17/18.
+/// Returns (cl_symbol, extra_value, extra_bits) triples.
+fn rle_code_lengths(lengths: &[u8]) -> Vec<(u8, u32, u8)> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < lengths.len() {
+        let v = lengths[i];
+        let mut run = 1;
+        while i + run < lengths.len() && lengths[i + run] == v {
+            run += 1;
+        }
+        if v == 0 {
+            let mut left = run;
+            while left >= 11 {
+                let take = left.min(138);
+                out.push((18, (take - 11) as u32, 7));
+                left -= take;
+            }
+            if left >= 3 {
+                out.push((17, (left - 3) as u32, 3));
+                left = 0;
+            }
+            for _ in 0..left {
+                out.push((0, 0, 0));
+            }
+        } else {
+            out.push((v, 0, 0));
+            let mut left = run - 1;
+            while left >= 3 {
+                let take = left.min(6);
+                out.push((16, (take - 3) as u32, 2));
+                left -= take;
+            }
+            for _ in 0..left {
+                out.push((v, 0, 0));
+            }
+        }
+        i += run;
+    }
+    out
+}
+
+/// Force at least two non-zero frequencies so both trees are complete
+/// codes — mirrors zlib, and keeps strict inflaters (including CPython's)
+/// happy with our dynamic headers.
+fn force_two(freqs: &mut [u32]) {
+    let mut used = freqs.iter().filter(|&&f| f > 0).count();
+    let mut i = 0;
+    while used < 2 && i < freqs.len() {
+        if freqs[i] == 0 {
+            freqs[i] = 1;
+            used += 1;
+        }
+        i += 1;
+    }
+}
+
+struct DynHeader {
+    lit_len: Vec<u8>,
+    dist_len: Vec<u8>,
+    cl_len: Vec<u8>,
+    cl_seq: Vec<(u8, u32, u8)>,
+    hlit: usize,
+    hdist: usize,
+    hclen: usize,
+    header_bits: u64,
+}
+
+fn build_dynamic_header(lit_freq: &mut [u32; NUM_LIT], dist_freq: &mut [u32; NUM_DIST]) -> DynHeader {
+    force_two(&mut lit_freq[..]); // literal tree always has 256 anyway
+    force_two(&mut dist_freq[..]);
+    let lit_len = build_lengths(&lit_freq[..], 15);
+    let dist_len = build_lengths(&dist_freq[..], 15);
+    let hlit = (257..=NUM_LIT).rev().find(|&n| n == 257 || lit_len[n - 1] != 0).unwrap_or(257);
+    let hdist = (1..=NUM_DIST).rev().find(|&n| n == 1 || dist_len[n - 1] != 0).unwrap_or(1);
+    let mut all = Vec::with_capacity(hlit + hdist);
+    all.extend_from_slice(&lit_len[..hlit]);
+    all.extend_from_slice(&dist_len[..hdist]);
+    let cl_seq = rle_code_lengths(&all);
+    let mut cl_freq = [0u32; 19];
+    for &(sym, _, _) in &cl_seq {
+        cl_freq[sym as usize] += 1;
+    }
+    force_two(&mut cl_freq);
+    let cl_len = build_lengths(&cl_freq, 7);
+    let hclen = (4..=19).rev().find(|&n| n == 4 || cl_len[CLCL_ORDER[n - 1]] != 0).unwrap_or(4);
+    let mut header_bits = 5 + 5 + 4 + 3 * hclen as u64;
+    for &(sym, _, extra) in &cl_seq {
+        header_bits += cl_len[sym as usize] as u64 + extra as u64;
+    }
+    DynHeader { lit_len, dist_len, cl_len, cl_seq, hlit, hdist, hclen, header_bits }
+}
+
+fn write_tokens(w: &mut BitWriter, tokens: &[Token], lit_codes: &[u16], lit_len: &[u8], dist_codes: &[u16], dist_len: &[u8]) {
+    for t in tokens {
+        match *t {
+            Token::Literal(b) => {
+                w.write_code(lit_codes[b as usize] as u32, lit_len[b as usize] as u32);
+            }
+            Token::Match { len, dist } => {
+                let (ls, lex, leb) = length_to_symbol(len as usize);
+                w.write_code(lit_codes[ls as usize] as u32, lit_len[ls as usize] as u32);
+                if leb > 0 {
+                    w.write_bits(lex, leb as u32);
+                }
+                let (ds, dex, deb) = dist_to_symbol(dist as usize);
+                w.write_code(dist_codes[ds as usize] as u32, dist_len[ds as usize] as u32);
+                if deb > 0 {
+                    w.write_bits(dex, deb as u32);
+                }
+            }
+        }
+    }
+    // end of block
+    w.write_code(lit_codes[256] as u32, lit_len[256] as u32);
+}
+
+fn write_stored(w: &mut BitWriter, data: &[u8], final_chunk: bool) {
+    let mut chunks = data.chunks(STORED_MAX).peekable();
+    if data.is_empty() {
+        // A stored block of zero length is legal and serves as an empty
+        // (possibly final) block.
+        w.write_bits(final_chunk as u32, 1);
+        w.write_bits(0b00, 2);
+        w.align_byte();
+        w.write_bytes(&0u16.to_le_bytes());
+        w.write_bytes(&0xffffu16.to_le_bytes());
+        return;
+    }
+    while let Some(chunk) = chunks.next() {
+        let last = chunks.peek().is_none() && final_chunk;
+        w.write_bits(last as u32, 1);
+        w.write_bits(0b00, 2); // BTYPE=00
+        w.align_byte();
+        let len = chunk.len() as u16;
+        w.write_bytes(&len.to_le_bytes());
+        w.write_bytes(&(!len).to_le_bytes());
+        w.write_bytes(chunk);
+    }
+}
+
+/// Compress `data` into a raw DEFLATE stream at the given level (0..=9).
+///
+/// The LZ77 matcher's hash table and chain buffers are reused through a
+/// thread-local (per-element compression calls this at high frequency —
+/// the original allocate-per-call cost dominated small-element encodes;
+/// see EXPERIMENTS.md §Perf).
+pub fn deflate(data: &[u8], level: u8) -> Vec<u8> {
+    thread_local! {
+        static MATCHER: std::cell::RefCell<Matcher> =
+            std::cell::RefCell::new(Matcher::new(MatchParams::from_level(6)));
+    }
+    MATCHER.with(|m| {
+        let mut m = m.borrow_mut();
+        m.set_params(MatchParams::from_level(level));
+        deflate_with(&mut m, data, level)
+    })
+}
+
+/// [`deflate`] with an explicit matcher (no thread-local), for callers
+/// that manage reuse themselves.
+pub fn deflate_with(matcher: &mut Matcher, data: &[u8], level: u8) -> Vec<u8> {
+    let mut w = BitWriter::new();
+    if level == 0 {
+        write_stored(&mut w, data, true);
+        return w.finish();
+    }
+    let fixed_lit = fixed_lit_lengths();
+    let fixed_dist = fixed_dist_lengths();
+    let fixed_lit_codes = lengths_to_codes(&fixed_lit).expect("fixed code");
+    let fixed_dist_codes = lengths_to_codes(&fixed_dist).expect("fixed code");
+
+    if data.is_empty() {
+        // Single final fixed block with only end-of-block.
+        w.write_bits(1, 1);
+        w.write_bits(0b01, 2);
+        w.write_code(fixed_lit_codes[256] as u32, fixed_lit[256] as u32);
+        return w.finish();
+    }
+
+    let mut tokens: Vec<Token> = Vec::new();
+    let nseg = data.len().div_ceil(SEGMENT);
+    for (si, seg) in data.chunks(SEGMENT).enumerate() {
+        let is_final = si + 1 == nseg;
+        tokens.clear();
+        matcher.tokenize(seg, |t| tokens.push(t));
+        let (mut lit_freq, mut dist_freq) = count_freqs(&tokens);
+        let dh = build_dynamic_header(&mut lit_freq, &mut dist_freq);
+        let dyn_bits = dh.header_bits + token_bits(&tokens, &dh.lit_len, &dh.dist_len);
+        let fixed_bits = token_bits(&tokens, &fixed_lit, &fixed_dist);
+        // Stored cost: 3 bits + align (<=7) + 32 bit LEN/NLEN per 64 KiB + bytes.
+        let stored_bits = (seg.len() as u64) * 8 + 40 * seg.len().div_ceil(STORED_MAX).max(1) as u64;
+
+        if stored_bits < dyn_bits.min(fixed_bits) {
+            write_stored(&mut w, seg, is_final);
+        } else if fixed_bits <= dyn_bits {
+            w.write_bits(is_final as u32, 1);
+            w.write_bits(0b01, 2);
+            write_tokens(&mut w, &tokens, &fixed_lit_codes, &fixed_lit, &fixed_dist_codes, &fixed_dist);
+        } else {
+            w.write_bits(is_final as u32, 1);
+            w.write_bits(0b10, 2);
+            w.write_bits((dh.hlit - 257) as u32, 5);
+            w.write_bits((dh.hdist - 1) as u32, 5);
+            w.write_bits((dh.hclen - 4) as u32, 4);
+            for i in 0..dh.hclen {
+                w.write_bits(dh.cl_len[CLCL_ORDER[i]] as u32, 3);
+            }
+            let cl_codes = lengths_to_codes(&dh.cl_len).expect("cl code");
+            for &(sym, extra_val, extra_bits) in &dh.cl_seq {
+                w.write_code(cl_codes[sym as usize] as u32, dh.cl_len[sym as usize] as u32);
+                if extra_bits > 0 {
+                    w.write_bits(extra_val, extra_bits as u32);
+                }
+            }
+            let lit_codes = lengths_to_codes(&dh.lit_len).expect("lit code");
+            let dist_codes = lengths_to_codes(&dh.dist_len).expect("dist code");
+            write_tokens(&mut w, &tokens, &lit_codes, &dh.lit_len, &dist_codes, &dh.dist_len);
+        }
+    }
+    w.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn length_symbol_table() {
+        assert_eq!(length_to_symbol(3), (257, 0, 0));
+        assert_eq!(length_to_symbol(4), (258, 0, 0));
+        assert_eq!(length_to_symbol(10), (264, 0, 0));
+        assert_eq!(length_to_symbol(11), (265, 0, 1));
+        assert_eq!(length_to_symbol(12), (265, 1, 1));
+        assert_eq!(length_to_symbol(257), (284, 30, 5));
+        assert_eq!(length_to_symbol(258), (285, 0, 0));
+    }
+
+    #[test]
+    fn dist_symbol_table() {
+        assert_eq!(dist_to_symbol(1), (0, 0, 0));
+        assert_eq!(dist_to_symbol(4), (3, 0, 0));
+        assert_eq!(dist_to_symbol(5), (4, 0, 1));
+        assert_eq!(dist_to_symbol(6), (4, 1, 1));
+        assert_eq!(dist_to_symbol(24577), (29, 0, 13));
+        assert_eq!(dist_to_symbol(32768), (29, 8191, 13));
+    }
+
+    #[test]
+    fn rle_examples() {
+        // 4 zeros -> one 17 with extra 1.
+        assert_eq!(rle_code_lengths(&[0, 0, 0, 0]), vec![(17, 1, 3)]);
+        // 2 zeros -> two literal zeros.
+        assert_eq!(rle_code_lengths(&[0, 0]), vec![(0, 0, 0), (0, 0, 0)]);
+        // value + 4 repeats -> value, 16(x3), value... no: 5 total = v + rep 4 -> (16,1,2) covers 4.
+        assert_eq!(rle_code_lengths(&[5, 5, 5, 5, 5]), vec![(5, 0, 0), (16, 1, 2)]);
+        // 139 zeros -> 18(138) + 0.
+        let v = vec![0u8; 139];
+        assert_eq!(rle_code_lengths(&v), vec![(18, 127, 7), (0, 0, 0)]);
+        // long nonzero run: 1 + 6 + 6 ... values
+        assert_eq!(rle_code_lengths(&[7; 14]), vec![(7, 0, 0), (16, 3, 2), (16, 3, 2), (7, 0, 0)]);
+    }
+
+    // Full roundtrip tests live next to the inflater in inflate.rs and in
+    // the zlib module; conformance against miniz/CPython is exercised by
+    // rust/tests/compression_conformance.rs and python interop tests.
+}

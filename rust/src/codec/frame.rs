@@ -1,0 +1,156 @@
+//! The two-stage compression algorithm of §3.1, applied to a data block or
+//! to each array element individually:
+//!
+//! stage 1 — concatenate
+//!   1. the uncompressed size as an 8-byte big-endian unsigned integer,
+//!   2. the byte `'z'`,
+//!   3. the data as an RFC 1950/1951 deflate stream (any legal level);
+//!
+//! stage 2 — base64-encode stage 1 to 76-column lines (§ [`crate::codec::base64`]).
+//!
+//! Reading reverses the stages and performs the paper's three redundant
+//! checks: the Adler-32 inside zlib, the uncompressed-size comparison, and
+//! the `'z'` marker byte ("verifying that the ninth byte of the decoded
+//! base64 data is indeed 'z'").
+
+use crate::codec::base64::{decode_lines, encode_lines};
+use crate::codec::zlib::{zlib_compress, zlib_decompress};
+use crate::error::{corrupt, Result, ScdaError};
+use crate::format::padding::LineStyle;
+
+/// Compression settings for the convention layer.
+#[derive(Debug, Clone, Copy)]
+pub struct CodecOptions {
+    /// Deflate effort 0..=9; the paper recommends zlib's best compression,
+    /// and level 0 (stored) is the hardcodable no-zlib fallback.
+    pub level: u8,
+    /// Line-break style for base64 lines and surrounding padding.
+    pub style: LineStyle,
+}
+
+impl Default for CodecOptions {
+    fn default() -> Self {
+        CodecOptions { level: 9, style: LineStyle::Unix }
+    }
+}
+
+/// Apply both stages to one datum; the result's length is the datum's
+/// "compressed size" in the enclosing scda section.
+pub fn encode_element(data: &[u8], opts: CodecOptions) -> Vec<u8> {
+    let mut stage1 = Vec::with_capacity(9 + data.len() / 2 + 64);
+    stage1.extend_from_slice(&(data.len() as u64).to_be_bytes());
+    stage1.push(b'z');
+    stage1.extend_from_slice(&zlib_compress(data, opts.level));
+    encode_lines(&stage1, opts.style)
+}
+
+/// Invert [`encode_element`]. The compressed length is known from file
+/// context (the enclosing section's size entries), hence `encoded` is the
+/// exact stream. Verifies all three redundant checks.
+pub fn decode_element(encoded: &[u8]) -> Result<Vec<u8>> {
+    let stage1 = decode_lines(encoded)?;
+    if stage1.len() < 9 {
+        return Err(ScdaError::corrupt(
+            corrupt::BAD_CONVENTION,
+            "decoded compression frame shorter than size+marker",
+        ));
+    }
+    let usize_bytes: [u8; 8] = stage1[..8].try_into().unwrap();
+    let uncompressed = u64::from_be_bytes(usize_bytes);
+    if stage1[8] != b'z' {
+        return Err(ScdaError::corrupt(
+            corrupt::BAD_CONVENTION,
+            format!("ninth byte of compression frame is {:#04x}, expected 'z'", stage1[8]),
+        ));
+    }
+    let expected = usize::try_from(uncompressed).map_err(|_| {
+        ScdaError::corrupt(corrupt::COUNT_OVERFLOW, "uncompressed size exceeds addressable memory")
+    })?;
+    // zlib's own Adler-32 verification plus the size comparison happen here.
+    let out = zlib_decompress(&stage1[9..], Some(expected))?;
+    debug_assert_eq!(out.len(), expected);
+    Ok(out)
+}
+
+/// Uncompressed size recorded in an encoded element without inflating it
+/// (used by skip paths and `scda info`).
+pub fn peek_uncompressed_size(encoded: &[u8]) -> Result<u64> {
+    let stage1 = decode_lines(encoded)?;
+    if stage1.len() < 9 || stage1[8] != b'z' {
+        return Err(ScdaError::corrupt(corrupt::BAD_CONVENTION, "malformed compression frame"));
+    }
+    Ok(u64::from_be_bytes(stage1[..8].try_into().unwrap()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn opts(level: u8, style: LineStyle) -> CodecOptions {
+        CodecOptions { level, style }
+    }
+
+    #[test]
+    fn roundtrip_various_payloads() {
+        let payloads: Vec<Vec<u8>> = vec![
+            vec![],
+            b"x".to_vec(),
+            b"ASCII armored user data\n".to_vec(),
+            vec![0u8; 10_000],
+            (0..60_000u32).map(|i| (i % 256) as u8).collect(),
+        ];
+        for style in [LineStyle::Unix, LineStyle::Mime] {
+            for level in [0u8, 6, 9] {
+                for p in &payloads {
+                    let enc = encode_element(p, opts(level, style));
+                    assert_eq!(decode_element(&enc).unwrap(), *p);
+                    assert_eq!(peek_uncompressed_size(&enc).unwrap(), p.len() as u64);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn encoded_stream_is_ascii() {
+        // "the result is in ASCII (as long as the line breaks are)".
+        let data: Vec<u8> = (0..=255u8).collect();
+        let enc = encode_element(&data, CodecOptions::default());
+        assert!(enc.iter().all(|&b| b.is_ascii()));
+    }
+
+    #[test]
+    fn marker_byte_checked() {
+        let enc = encode_element(b"data", CodecOptions::default());
+        let mut stage1 = crate::codec::base64::decode_lines(&enc).unwrap();
+        stage1[8] = b'q';
+        let bad = crate::codec::base64::encode_lines(&stage1, LineStyle::Unix);
+        let err = decode_element(&bad).unwrap_err();
+        assert_eq!(err.code(), 1000 + corrupt::BAD_CONVENTION);
+    }
+
+    #[test]
+    fn recorded_size_checked() {
+        let enc = encode_element(b"data", CodecOptions::default());
+        let mut stage1 = crate::codec::base64::decode_lines(&enc).unwrap();
+        stage1[7] = 99; // claim 99 bytes uncompressed
+        let bad = crate::codec::base64::encode_lines(&stage1, LineStyle::Unix);
+        assert!(decode_element(&bad).is_err());
+    }
+
+    #[test]
+    fn level_zero_is_conforming() {
+        // "it is possible to conform by using level 0 (no compression)".
+        let data = b"no zlib available on this machine".to_vec();
+        let enc = encode_element(&data, opts(0, LineStyle::Unix));
+        assert_eq!(decode_element(&enc).unwrap(), data);
+        // Level 0 output is larger than input (stored + framing overhead).
+        assert!(enc.len() > data.len());
+    }
+
+    #[test]
+    fn compresses_compressible_data() {
+        let data = vec![b'a'; 100_000];
+        let enc = encode_element(&data, CodecOptions::default());
+        assert!(enc.len() < data.len() / 50, "len {}", enc.len());
+    }
+}

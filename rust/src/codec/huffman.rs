@@ -1,0 +1,365 @@
+//! Canonical Huffman codes for DEFLATE (RFC 1951 §3.2.2).
+//!
+//! * [`lengths_to_codes`] — assign canonical codes from code lengths, the
+//!   procedure printed verbatim in the RFC.
+//! * [`build_lengths`] — length-limited Huffman code construction from
+//!   symbol frequencies via the package-merge algorithm (optimal under the
+//!   15-bit DEFLATE limit).
+//! * [`HuffDecoder`] — table-driven decoder: a single-level lookup table of
+//!   `PEEK_BITS` bits with an overflow path for longer codes.
+
+use crate::error::{corrupt, Result, ScdaError};
+use crate::codec::bitio::{reverse_bits, BitReader};
+
+/// Maximum code length in DEFLATE.
+pub const MAX_BITS: usize = 15;
+
+/// Assign canonical codes to `lengths` (0 = symbol unused). Returns codes
+/// aligned with `lengths` (MSB-first values as in the RFC; writers must
+/// bit-reverse, which [`crate::codec::bitio::BitWriter::write_code`] does).
+pub fn lengths_to_codes(lengths: &[u8]) -> Result<Vec<u16>> {
+    let mut bl_count = [0u32; MAX_BITS + 1];
+    for &l in lengths {
+        if l as usize > MAX_BITS {
+            return Err(ScdaError::corrupt(corrupt::BAD_ZLIB, "code length exceeds 15"));
+        }
+        bl_count[l as usize] += 1;
+    }
+    bl_count[0] = 0;
+    let mut next_code = [0u32; MAX_BITS + 2];
+    let mut code = 0u32;
+    for bits in 1..=MAX_BITS {
+        code = (code + bl_count[bits - 1]) << 1;
+        next_code[bits] = code;
+    }
+    // Over-subscribed codes would overflow the code space; detect.
+    let mut kraft: u64 = 0;
+    for &l in lengths {
+        if l > 0 {
+            kraft += 1u64 << (MAX_BITS - l as usize);
+        }
+    }
+    if kraft > 1 << MAX_BITS {
+        return Err(ScdaError::corrupt(corrupt::BAD_ZLIB, "over-subscribed Huffman code"));
+    }
+    let mut codes = vec![0u16; lengths.len()];
+    for (i, &l) in lengths.iter().enumerate() {
+        if l > 0 {
+            codes[i] = next_code[l as usize] as u16;
+            next_code[l as usize] += 1;
+        }
+    }
+    Ok(codes)
+}
+
+/// Build optimal length-limited code lengths for the given frequencies,
+/// capped at `limit` bits. Symbols with zero frequency get length 0. If
+/// fewer than two symbols occur, the single present symbol is assigned
+/// length 1 (DEFLATE requires at least one bit per code).
+///
+/// Fast path: plain array-based Huffman (two-queue construction, no
+/// allocations beyond three scratch vectors). Only when the resulting
+/// depth exceeds `limit` — rare outside adversarial frequency skews —
+/// does the optimal package-merge fallback run.
+pub fn build_lengths(freqs: &[u32], limit: usize) -> Vec<u8> {
+    if let Some(lengths) = huffman_lengths_fast(freqs, limit) {
+        return lengths;
+    }
+    build_lengths_package_merge(freqs, limit)
+}
+
+/// Two-queue Huffman over the used symbols; `None` if any code length
+/// would exceed `limit`.
+fn huffman_lengths_fast(freqs: &[u32], limit: usize) -> Option<Vec<u8>> {
+    let n = freqs.len();
+    let mut used: Vec<u32> = (0..n as u32).filter(|&i| freqs[i as usize] > 0).collect();
+    let mut lengths = vec![0u8; n];
+    match used.len() {
+        0 => return Some(lengths),
+        1 => {
+            lengths[used[0] as usize] = 1;
+            return Some(lengths);
+        }
+        _ => {}
+    }
+    used.sort_unstable_by_key(|&i| freqs[i as usize]);
+    let m = used.len();
+    // Nodes: 0..m leaves (sorted), m.. internal. parent[] links upward.
+    let total_nodes = 2 * m - 1;
+    let mut weight: Vec<u64> = used.iter().map(|&i| freqs[i as usize] as u64).collect();
+    weight.resize(total_nodes, 0);
+    let mut parent = vec![0u32; total_nodes];
+    let (mut leaf_at, mut node_at) = (0usize, m);
+    let mut next = m;
+    while next < total_nodes {
+        // Pick the two smallest among remaining leaves and internal nodes.
+        let pick = |leaf_at: &mut usize, node_at: &mut usize| -> usize {
+            if *leaf_at < m && (*node_at >= next || weight[*leaf_at] <= weight[*node_at]) {
+                *leaf_at += 1;
+                *leaf_at - 1
+            } else {
+                *node_at += 1;
+                *node_at - 1
+            }
+        };
+        let a = pick(&mut leaf_at, &mut node_at);
+        let b = pick(&mut leaf_at, &mut node_at);
+        weight[next] = weight[a] + weight[b];
+        parent[a] = next as u32;
+        parent[b] = next as u32;
+        next += 1;
+    }
+    // Depths: root (last node) has depth 0; walk down in reverse order.
+    let mut depth = vec![0u8; total_nodes];
+    for i in (0..total_nodes - 1).rev() {
+        depth[i] = depth[parent[i] as usize] + 1;
+        if i < m && depth[i] as usize > limit {
+            return None;
+        }
+    }
+    for (j, &sym) in used.iter().enumerate() {
+        lengths[sym as usize] = depth[j];
+    }
+    Some(lengths)
+}
+
+/// Optimal length-limited construction (package-merge), used as the
+/// fallback when the unconstrained tree exceeds the depth limit.
+fn build_lengths_package_merge(freqs: &[u32], limit: usize) -> Vec<u8> {
+    debug_assert!(limit <= MAX_BITS);
+    let n = freqs.len();
+    let mut used: Vec<usize> = (0..n).filter(|&i| freqs[i] > 0).collect();
+    // Package-merge requires the leaf list sorted by weight.
+    used.sort_by_key(|&i| freqs[i]);
+    let mut lengths = vec![0u8; n];
+    match used.len() {
+        0 => return lengths,
+        1 => {
+            lengths[used[0]] = 1;
+            return lengths;
+        }
+        _ => {}
+    }
+    // Package-merge over the used symbols.
+    // items: (weight, set of leaf indices) — we track leaf multiplicity via
+    // counting how many times each leaf appears among chosen packages.
+    #[derive(Clone)]
+    struct Node {
+        weight: u64,
+        leaves: Vec<u32>, // indices into `used`
+    }
+    let leaves: Vec<Node> = used
+        .iter()
+        .enumerate()
+        .map(|(j, &i)| Node { weight: freqs[i] as u64, leaves: vec![j as u32] })
+        .collect();
+    let mut prev: Vec<Node> = Vec::new();
+    for _level in 0..limit {
+        // merge leaves with packaged pairs from prev, sorted by weight
+        let mut merged: Vec<Node> = Vec::with_capacity(leaves.len() + prev.len() / 2);
+        let mut pairs = prev.chunks_exact(2).map(|p| {
+            let mut l = p[0].leaves.clone();
+            l.extend_from_slice(&p[1].leaves);
+            Node { weight: p[0].weight + p[1].weight, leaves: l }
+        });
+        let mut li = leaves.iter();
+        let (mut a, mut b) = (li.next(), pairs.next());
+        loop {
+            match (a, b.as_ref()) {
+                (Some(x), Some(y)) => {
+                    if x.weight <= y.weight {
+                        merged.push(x.clone());
+                        a = li.next();
+                    } else {
+                        merged.push(b.take().unwrap());
+                        b = pairs.next();
+                    }
+                }
+                (Some(x), None) => {
+                    merged.push(x.clone());
+                    a = li.next();
+                }
+                (None, Some(_)) => {
+                    merged.push(b.take().unwrap());
+                    b = pairs.next();
+                }
+                (None, None) => break,
+            }
+        }
+        prev = merged;
+    }
+    // Take the first 2*(m-1) items; each leaf occurrence increments length.
+    let m = used.len();
+    let mut lens = vec![0u32; m];
+    for node in prev.iter().take(2 * (m - 1)) {
+        for &j in &node.leaves {
+            lens[j as usize] += 1;
+        }
+    }
+    for (j, &i) in used.iter().enumerate() {
+        debug_assert!(lens[j] >= 1 && lens[j] as usize <= limit);
+        lengths[i] = lens[j] as u8;
+    }
+    lengths
+}
+
+const PEEK_BITS: u32 = 9;
+
+/// Table-driven canonical Huffman decoder.
+pub struct HuffDecoder {
+    /// Primary table indexed by `PEEK_BITS` reversed bits:
+    /// `(symbol, len)` for codes of length <= PEEK_BITS, or a sentinel for
+    /// longer codes resolved through `long`.
+    table: Vec<(u16, u8)>,
+    /// Sorted (reversed_code, len, symbol) for codes longer than PEEK_BITS.
+    long: Vec<(u32, u8, u16)>,
+    max_len: u8,
+}
+
+impl HuffDecoder {
+    /// Build a decoder from code lengths.
+    pub fn new(lengths: &[u8]) -> Result<Self> {
+        let codes = lengths_to_codes(lengths)?;
+        let mut table = vec![(u16::MAX, 0u8); 1 << PEEK_BITS];
+        let mut long = Vec::new();
+        let mut max_len = 0u8;
+        for (sym, (&len, &code)) in lengths.iter().zip(codes.iter()).enumerate() {
+            if len == 0 {
+                continue;
+            }
+            max_len = max_len.max(len);
+            let rev = reverse_bits(code as u32, len as u32);
+            if (len as u32) <= PEEK_BITS {
+                // Fill all table slots whose low `len` bits equal `rev`.
+                let step = 1u32 << len;
+                let mut idx = rev;
+                while idx < (1 << PEEK_BITS) {
+                    table[idx as usize] = (sym as u16, len);
+                    idx += step;
+                }
+            } else {
+                long.push((rev, len, sym as u16));
+            }
+        }
+        long.sort_unstable();
+        Ok(HuffDecoder { table, long, max_len })
+    }
+
+    /// Decode one symbol from the reader.
+    #[inline]
+    pub fn decode(&self, r: &mut BitReader<'_>) -> Result<u16> {
+        let peek = r.peek_bits(PEEK_BITS);
+        let (sym, len) = self.table[peek as usize];
+        if len > 0 {
+            r.consume(len as u32)?;
+            return Ok(sym);
+        }
+        // Long path: try lengths PEEK_BITS+1..=max_len.
+        let peek_long = r.peek_bits(self.max_len as u32);
+        for &(rev, len, sym) in &self.long {
+            let mask = (1u32 << len) - 1;
+            if peek_long & mask == rev {
+                r.consume(len as u32)?;
+                return Ok(sym);
+            }
+        }
+        Err(ScdaError::corrupt(corrupt::BAD_ZLIB, "invalid Huffman code in deflate stream"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::bitio::BitWriter;
+
+    #[test]
+    fn rfc_example_codes() {
+        // RFC 1951 §3.2.2 example: lengths (3,3,3,3,3,2,4,4) ->
+        // codes 010,011,100,101,110,00,1110,1111.
+        let lengths = [3u8, 3, 3, 3, 3, 2, 4, 4];
+        let codes = lengths_to_codes(&lengths).unwrap();
+        assert_eq!(codes, vec![0b010, 0b011, 0b100, 0b101, 0b110, 0b00, 0b1110, 0b1111]);
+    }
+
+    #[test]
+    fn build_lengths_simple() {
+        // Highly skewed frequencies yield shorter codes for frequent syms.
+        let freqs = [100u32, 10, 10, 1];
+        let lens = build_lengths(&freqs, 15);
+        assert!(lens[0] <= lens[1] && lens[1] <= lens[3]);
+        // Kraft equality for an optimal complete code.
+        let kraft: f64 = lens.iter().filter(|&&l| l > 0).map(|&l| 2f64.powi(-(l as i32))).sum();
+        assert!((kraft - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn build_lengths_respects_limit() {
+        // Fibonacci-like frequencies force long codes without a limit.
+        let mut freqs = vec![0u32; 20];
+        let (mut a, mut b) = (1u32, 1u32);
+        for f in freqs.iter_mut() {
+            *f = a;
+            let c = a + b;
+            a = b;
+            b = c;
+        }
+        for limit in [7usize, 9, 15] {
+            let lens = build_lengths(&freqs, limit);
+            assert!(lens.iter().all(|&l| (l as usize) <= limit));
+            let kraft: f64 = lens.iter().filter(|&&l| l > 0).map(|&l| 2f64.powi(-(l as i32))).sum();
+            assert!(kraft <= 1.0 + 1e-9, "limit={limit} kraft={kraft}");
+            lengths_to_codes(&lens).unwrap();
+        }
+    }
+
+    #[test]
+    fn single_symbol_gets_one_bit() {
+        let mut freqs = vec![0u32; 10];
+        freqs[7] = 42;
+        let lens = build_lengths(&freqs, 15);
+        assert_eq!(lens[7], 1);
+        assert_eq!(lens.iter().filter(|&&l| l > 0).count(), 1);
+    }
+
+    #[test]
+    fn decoder_roundtrips_all_symbols() {
+        let lengths = [3u8, 3, 3, 3, 3, 2, 4, 4];
+        let codes = lengths_to_codes(&lengths).unwrap();
+        let dec = HuffDecoder::new(&lengths).unwrap();
+        let mut w = BitWriter::new();
+        let syms: Vec<u16> = (0..8).chain((0..8).rev()).collect();
+        for &s in &syms {
+            w.write_code(codes[s as usize] as u32, lengths[s as usize] as u32);
+        }
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        for &s in &syms {
+            assert_eq!(dec.decode(&mut r).unwrap(), s);
+        }
+    }
+
+    #[test]
+    fn decoder_handles_long_codes() {
+        // Create codes longer than PEEK_BITS: 600 symbols, near-uniform.
+        let freqs = vec![1u32; 600];
+        let lens = build_lengths(&freqs, 15);
+        assert!(lens.iter().any(|&l| l as u32 > 9));
+        let codes = lengths_to_codes(&lens).unwrap();
+        let dec = HuffDecoder::new(&lens).unwrap();
+        let mut w = BitWriter::new();
+        for s in (0..600u16).step_by(7) {
+            w.write_code(codes[s as usize] as u32, lens[s as usize] as u32);
+        }
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        for s in (0..600u16).step_by(7) {
+            assert_eq!(dec.decode(&mut r).unwrap(), s);
+        }
+    }
+
+    #[test]
+    fn oversubscribed_rejected() {
+        let lengths = [1u8, 1, 1];
+        assert!(lengths_to_codes(&lengths).is_err());
+    }
+}

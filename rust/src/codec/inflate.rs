@@ -1,0 +1,284 @@
+//! DEFLATE decompressor (RFC 1951), the read side of the compression
+//! convention. Accepts streams produced by any conforming compressor
+//! (ours, zlib, miniz), validating block structure strictly.
+
+use crate::codec::bitio::BitReader;
+use crate::codec::deflate::{CLCL_ORDER, DIST_TABLE, LENGTH_TABLE};
+use crate::codec::huffman::HuffDecoder;
+use crate::error::{corrupt, Result, ScdaError};
+
+/// Inflate a raw DEFLATE stream. `expected_size`, when known (the scda
+/// convention always records it), preallocates and bounds the output;
+/// exceeding it is a corruption error.
+pub fn inflate(data: &[u8], expected_size: Option<usize>) -> Result<Vec<u8>> {
+    Ok(inflate_with_consumed(data, expected_size)?.0)
+}
+
+/// Number of bytes of `data` consumed by the deflate stream (for embedded
+/// streams followed by a trailer, e.g. the zlib Adler-32).
+pub fn inflate_with_consumed(data: &[u8], expected_size: Option<usize>) -> Result<(Vec<u8>, usize)> {
+    // Re-run header parsing but track position: simplest correct approach
+    // is to parse once with a reader we keep.
+    let mut r = BitReader::new(data);
+    let mut out: Vec<u8> = Vec::with_capacity(expected_size.unwrap_or(0).min(1 << 30));
+    let limit = expected_size.map(|s| s as u64);
+    loop {
+        let bfinal = r.read_bits(1)?;
+        let btype = r.read_bits(2)?;
+        match btype {
+            0b00 => {
+                let hdr = r.read_aligned_bytes(4)?;
+                let len = u16::from_le_bytes([hdr[0], hdr[1]]);
+                let nlen = u16::from_le_bytes([hdr[2], hdr[3]]);
+                if len != !nlen {
+                    return Err(ScdaError::corrupt(corrupt::BAD_ZLIB, "stored block LEN/NLEN mismatch"));
+                }
+                let bytes = r.read_aligned_bytes(len as usize)?;
+                check_limit(out.len() as u64 + bytes.len() as u64, limit)?;
+                out.extend_from_slice(bytes);
+            }
+            0b01 => {
+                let (lit, dist) = fixed_decoders()?;
+                inflate_block(&mut r, &lit, &dist, &mut out, limit)?;
+            }
+            0b10 => {
+                let (lit, dist) = read_dynamic_header(&mut r)?;
+                inflate_block(&mut r, &lit, &dist, &mut out, limit)?;
+            }
+            _ => return Err(ScdaError::corrupt(corrupt::BAD_ZLIB, "reserved block type 11")),
+        }
+        if bfinal == 1 {
+            break;
+        }
+    }
+    let consumed = r.byte_position();
+    if let Some(s) = expected_size {
+        if out.len() != s {
+            return Err(ScdaError::corrupt(
+                corrupt::SIZE_MISMATCH,
+                format!("inflated {} bytes, expected {}", out.len(), s),
+            ));
+        }
+    }
+    Ok((out, consumed))
+}
+
+fn check_limit(total: u64, limit: Option<u64>) -> Result<()> {
+    if let Some(l) = limit {
+        if total > l {
+            return Err(ScdaError::corrupt(
+                corrupt::SIZE_MISMATCH,
+                "inflated data exceeds recorded uncompressed size",
+            ));
+        }
+    }
+    // Hard backstop against decompression bombs when no size is known.
+    if total > 1 << 40 {
+        return Err(ScdaError::corrupt(corrupt::BAD_ZLIB, "refusing to inflate beyond 1 TiB"));
+    }
+    Ok(())
+}
+
+fn fixed_decoders() -> Result<(HuffDecoder, HuffDecoder)> {
+    let mut lit = vec![8u8; 288];
+    lit[144..256].iter_mut().for_each(|x| *x = 9);
+    lit[256..280].iter_mut().for_each(|x| *x = 7);
+    Ok((HuffDecoder::new(&lit)?, HuffDecoder::new(&vec![5u8; 30])?))
+}
+
+fn read_dynamic_header(r: &mut BitReader<'_>) -> Result<(HuffDecoder, HuffDecoder)> {
+    let hlit = r.read_bits(5)? as usize + 257;
+    let hdist = r.read_bits(5)? as usize + 1;
+    let hclen = r.read_bits(4)? as usize + 4;
+    if hlit > 286 || hdist > 30 {
+        return Err(ScdaError::corrupt(corrupt::BAD_ZLIB, "dynamic header HLIT/HDIST out of range"));
+    }
+    let mut cl_len = [0u8; 19];
+    for i in 0..hclen {
+        cl_len[CLCL_ORDER[i]] = r.read_bits(3)? as u8;
+    }
+    let cl_dec = HuffDecoder::new(&cl_len)?;
+    let mut lengths = vec![0u8; hlit + hdist];
+    let mut i = 0usize;
+    while i < lengths.len() {
+        let sym = cl_dec.decode(r)?;
+        match sym {
+            0..=15 => {
+                lengths[i] = sym as u8;
+                i += 1;
+            }
+            16 => {
+                if i == 0 {
+                    return Err(ScdaError::corrupt(corrupt::BAD_ZLIB, "repeat with no previous length"));
+                }
+                let rep = 3 + r.read_bits(2)? as usize;
+                let v = lengths[i - 1];
+                fill(&mut lengths, &mut i, v, rep)?;
+            }
+            17 => {
+                let rep = 3 + r.read_bits(3)? as usize;
+                fill(&mut lengths, &mut i, 0, rep)?;
+            }
+            18 => {
+                let rep = 11 + r.read_bits(7)? as usize;
+                fill(&mut lengths, &mut i, 0, rep)?;
+            }
+            _ => return Err(ScdaError::corrupt(corrupt::BAD_ZLIB, "invalid code-length symbol")),
+        }
+    }
+    if lengths[256] == 0 {
+        return Err(ScdaError::corrupt(corrupt::BAD_ZLIB, "dynamic code lacks end-of-block symbol"));
+    }
+    let lit = HuffDecoder::new(&lengths[..hlit])?;
+    let dist = HuffDecoder::new(&lengths[hlit..])?;
+    Ok((lit, dist))
+}
+
+fn fill(lengths: &mut [u8], i: &mut usize, v: u8, rep: usize) -> Result<()> {
+    if *i + rep > lengths.len() {
+        return Err(ScdaError::corrupt(corrupt::BAD_ZLIB, "code-length repeat overruns header"));
+    }
+    lengths[*i..*i + rep].iter_mut().for_each(|x| *x = v);
+    *i += rep;
+    Ok(())
+}
+
+fn inflate_block(
+    r: &mut BitReader<'_>,
+    lit: &HuffDecoder,
+    dist: &HuffDecoder,
+    out: &mut Vec<u8>,
+    limit: Option<u64>,
+) -> Result<()> {
+    loop {
+        let sym = lit.decode(r)?;
+        match sym {
+            0..=255 => {
+                check_limit(out.len() as u64 + 1, limit)?;
+                out.push(sym as u8);
+            }
+            256 => return Ok(()),
+            257..=285 => {
+                let (base, extra) = LENGTH_TABLE[sym as usize - 257];
+                let len = base as usize + r.read_bits(extra as u32)? as usize;
+                let dsym = dist.decode(r)?;
+                if dsym as usize >= DIST_TABLE.len() {
+                    return Err(ScdaError::corrupt(corrupt::BAD_ZLIB, "invalid distance symbol"));
+                }
+                let (dbase, dextra) = DIST_TABLE[dsym as usize];
+                let d = dbase as usize + r.read_bits(dextra as u32)? as usize;
+                if d > out.len() {
+                    return Err(ScdaError::corrupt(corrupt::BAD_ZLIB, "distance reaches before stream start"));
+                }
+                check_limit(out.len() as u64 + len as u64, limit)?;
+                let start = out.len() - d;
+                // Overlapping copy must proceed byte-wise (RLE semantics).
+                if d >= len {
+                    out.extend_from_within(start..start + len);
+                } else {
+                    for k in 0..len {
+                        let b = out[start + k];
+                        out.push(b);
+                    }
+                }
+            }
+            _ => return Err(ScdaError::corrupt(corrupt::BAD_ZLIB, "literal/length symbol 286/287")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::deflate::deflate;
+
+    fn roundtrip(data: &[u8], level: u8) {
+        let compressed = deflate(data, level);
+        let out = inflate(&compressed, Some(data.len())).unwrap();
+        assert_eq!(out, data, "level {level} len {}", data.len());
+        let out2 = inflate(&compressed, None).unwrap();
+        assert_eq!(out2, data);
+    }
+
+    fn corpus() -> Vec<Vec<u8>> {
+        let mut x = 88172645463325252u64;
+        let mut rnd = |n: usize, alphabet: u64| -> Vec<u8> {
+            (0..n)
+                .map(|_| {
+                    x ^= x << 13;
+                    x ^= x >> 7;
+                    x ^= x << 17;
+                    (x % alphabet) as u8
+                })
+                .collect()
+        };
+        vec![
+            b"".to_vec(),
+            b"a".to_vec(),
+            b"hello hello hello hello".to_vec(),
+            vec![0u8; 100_000],
+            (0u32..70_000).map(|i| (i % 251) as u8).collect(),
+            rnd(300_000, 256), // incompressible -> stored blocks
+            rnd(300_000, 4),   // tiny alphabet -> heavy matching
+            b"The scda format is serial-equivalent by design. ".repeat(2000),
+        ]
+    }
+
+    #[test]
+    fn roundtrips_all_levels() {
+        for data in corpus() {
+            for level in [0u8, 1, 6, 9] {
+                roundtrip(&data, level);
+            }
+        }
+    }
+
+    #[test]
+    fn multi_segment_inputs() {
+        // > SEGMENT bytes forces multiple blocks incl. final-flag logic.
+        let data: Vec<u8> = (0..600_000u32).map(|i| ((i / 7) % 256) as u8).collect();
+        for level in [0u8, 6] {
+            roundtrip(&data, level);
+        }
+    }
+
+    #[test]
+    fn wrong_expected_size_detected() {
+        let c = deflate(b"abcdef", 6);
+        let err = inflate(&c, Some(5)).unwrap_err();
+        assert_eq!(err.kind(), crate::error::ScdaErrorKind::CorruptFile);
+        let err = inflate(&c, Some(7)).unwrap_err();
+        assert_eq!(err.code(), 1000 + corrupt::SIZE_MISMATCH);
+    }
+
+    #[test]
+    fn garbage_rejected() {
+        assert!(inflate(&[], None).is_err());
+        assert!(inflate(&[0x07], None).is_err()); // btype 11
+        assert!(inflate(&[0xff, 0xff, 0xff], None).is_err());
+        // Stored block with corrupted NLEN.
+        let mut c = deflate(&vec![9u8; 10], 0);
+        c[2] ^= 0xff;
+        assert!(inflate(&c, None).is_err());
+    }
+
+    #[test]
+    fn truncation_rejected() {
+        let data = b"some reasonably compressible data data data data".repeat(10);
+        let c = deflate(&data, 6);
+        for cut in [1, c.len() / 2, c.len() - 1] {
+            assert!(inflate(&c[..cut], Some(data.len())).is_err(), "cut {cut}");
+        }
+    }
+
+    #[test]
+    fn consumed_reports_stream_end() {
+        let data = b"trailing bytes follow".to_vec();
+        let mut c = deflate(&data, 6);
+        let stream_len = c.len();
+        c.extend_from_slice(&[0xAA; 4]); // fake adler trailer
+        let (out, consumed) = inflate_with_consumed(&c, Some(data.len())).unwrap();
+        assert_eq!(out, data);
+        assert_eq!(consumed, stream_len);
+    }
+}

@@ -1,0 +1,283 @@
+//! Greedy-with-lazy-evaluation LZ77 match finder over a 32 KiB window,
+//! hash-chained as in zlib. Produces the token stream consumed by the
+//! DEFLATE block encoder.
+
+/// Maximum backward distance (RFC 1951).
+pub const MAX_DIST: usize = 32 * 1024;
+/// Minimum and maximum match lengths.
+pub const MIN_MATCH: usize = 3;
+pub const MAX_MATCH: usize = 258;
+
+const MAX_HASH_BITS: u32 = 15;
+const MIN_HASH_BITS: u32 = 9;
+
+/// One LZ77 token: a literal byte or a (length, distance) back-reference.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Token {
+    Literal(u8),
+    Match { len: u16, dist: u16 },
+}
+
+/// Effort knobs, roughly zlib's levels.
+#[derive(Debug, Clone, Copy)]
+pub struct MatchParams {
+    /// Upper bound on hash-chain traversal per position.
+    pub max_chain: usize,
+    /// Stop searching early once a match of this length is found.
+    pub good_len: usize,
+    /// Enable one-step lazy matching.
+    pub lazy: bool,
+}
+
+impl MatchParams {
+    pub fn from_level(level: u8) -> Self {
+        match level {
+            0 | 1 => MatchParams { max_chain: 4, good_len: 8, lazy: false },
+            2..=5 => MatchParams { max_chain: 32, good_len: 32, lazy: true },
+            6..=7 => MatchParams { max_chain: 128, good_len: 128, lazy: true },
+            _ => MatchParams { max_chain: 1024, good_len: MAX_MATCH, lazy: true },
+        }
+    }
+}
+
+#[inline]
+fn hash3(data: &[u8], i: usize, bits: u32) -> usize {
+    // Multiplicative hash of 3 bytes (sufficient: chains verify bytes).
+    let v = (data[i] as u32) | ((data[i + 1] as u32) << 8) | ((data[i + 2] as u32) << 16);
+    (v.wrapping_mul(0x9E37_79B1) >> (32 - bits)) as usize
+}
+
+/// Hash-chain match finder with reusable buffers.
+///
+/// The hash table is sized to the input (2^9..2^15 entries) so that
+/// compressing many small elements — the scda per-element convention's
+/// hot path — does not pay a fixed 32K-entry reset per element, and the
+/// buffers are reused across calls (see `deflate`'s thread-local).
+pub struct Matcher {
+    head: Vec<i32>,
+    prev: Vec<i32>,
+    hash_bits: u32,
+    params: MatchParams,
+}
+
+impl Matcher {
+    pub fn new(params: MatchParams) -> Self {
+        Matcher { head: Vec::new(), prev: Vec::new(), hash_bits: 0, params }
+    }
+
+    /// Reconfigure the effort level (used by the thread-local reuse path).
+    pub fn set_params(&mut self, params: MatchParams) {
+        self.params = params;
+    }
+
+    fn prepare(&mut self, len: usize) {
+        let bits = (usize::BITS - len.max(2).leading_zeros()).clamp(MIN_HASH_BITS, MAX_HASH_BITS);
+        if self.hash_bits != bits || self.head.len() != 1 << bits {
+            self.hash_bits = bits;
+            self.head.clear();
+            self.head.resize(1 << bits, -1);
+        } else {
+            self.head.iter_mut().for_each(|h| *h = -1);
+        }
+        self.prev.clear();
+        self.prev.resize(len, -1);
+    }
+
+    #[inline]
+    fn longest_match(&self, data: &[u8], pos: usize, best_so_far: usize) -> Option<(usize, usize)> {
+        let max_len = (data.len() - pos).min(MAX_MATCH);
+        if max_len < MIN_MATCH {
+            return None;
+        }
+        let mut best_len = best_so_far.max(MIN_MATCH - 1);
+        let mut best_dist = 0usize;
+        let mut cand = self.head[hash3(data, pos, self.hash_bits)];
+        let min_pos = pos.saturating_sub(MAX_DIST) as i32;
+        let mut chain = self.params.max_chain;
+        while cand >= min_pos && chain > 0 {
+            let c = cand as usize;
+            debug_assert!(c < pos);
+            // Quick reject: compare the byte that would extend the match.
+            if best_len < max_len
+                && data[c + best_len] == data[pos + best_len]
+                && data[c] == data[pos]
+            {
+                let mut l = 0usize;
+                while l < max_len && data[c + l] == data[pos + l] {
+                    l += 1;
+                }
+                if l > best_len {
+                    best_len = l;
+                    best_dist = pos - c;
+                    if l >= self.params.good_len || l == max_len {
+                        break;
+                    }
+                }
+            }
+            cand = self.prev[c];
+            chain -= 1;
+        }
+        if best_dist > 0 && best_len >= MIN_MATCH {
+            Some((best_len, best_dist))
+        } else {
+            None
+        }
+    }
+
+    /// Tokenize `data`, invoking `emit` for each token in order.
+    /// `data.len()` must fit in i32 (callers segment at 256 KiB).
+    pub fn tokenize(&mut self, data: &[u8], mut emit: impl FnMut(Token)) {
+        let n = data.len();
+        debug_assert!(n <= i32::MAX as usize);
+        self.prepare(n);
+        let bits = self.hash_bits;
+
+        let insert = |head: &mut Vec<i32>, prev: &mut Vec<i32>, data: &[u8], i: usize| {
+            if i + MIN_MATCH <= data.len() {
+                let h = hash3(data, i, bits);
+                prev[i] = head[h];
+                head[h] = i as i32;
+            }
+        };
+
+        let mut i = 0usize;
+        while i < n {
+            let cur = self.longest_match(data, i, 0);
+            match cur {
+                None => {
+                    emit(Token::Literal(data[i]));
+                    insert(&mut self.head, &mut self.prev, data, i);
+                    i += 1;
+                }
+                Some((len, dist)) => {
+                    // Lazy evaluation: if the next position holds a strictly
+                    // better match, emit a literal here instead.
+                    let mut take = (len, dist);
+                    let mut start = i;
+                    if self.params.lazy && len < self.params.good_len && i + 1 < n {
+                        insert(&mut self.head, &mut self.prev, data, i);
+                        if let Some((nlen, ndist)) = self.longest_match(data, i + 1, len) {
+                            if nlen > len {
+                                emit(Token::Literal(data[i]));
+                                take = (nlen, ndist);
+                                start = i + 1;
+                            }
+                        }
+                    } else if self.params.lazy {
+                        insert(&mut self.head, &mut self.prev, data, i);
+                    } else {
+                        insert(&mut self.head, &mut self.prev, data, i);
+                    }
+                    let (mlen, mdist) = take;
+                    emit(Token::Match { len: mlen as u16, dist: mdist as u16 });
+                    // Insert hash entries for covered positions.
+                    let end = start + mlen;
+                    let from = if start == i { start + 1 } else { start };
+                    for j in from..end.min(n.saturating_sub(MIN_MATCH - 1)) {
+                        insert(&mut self.head, &mut self.prev, data, j);
+                    }
+                    i = end;
+                }
+            }
+        }
+    }
+}
+
+/// Reconstruct the original bytes from a token stream (used by tests and
+/// as the reference semantics of [`Token`]).
+pub fn detokenize(tokens: &[Token]) -> Vec<u8> {
+    let mut out = Vec::new();
+    for t in tokens {
+        match *t {
+            Token::Literal(b) => out.push(b),
+            Token::Match { len, dist } => {
+                let start = out.len() - dist as usize;
+                for k in 0..len as usize {
+                    let b = out[start + k];
+                    out.push(b);
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tokens_for(data: &[u8], level: u8) -> Vec<Token> {
+        let mut m = Matcher::new(MatchParams::from_level(level));
+        let mut v = Vec::new();
+        m.tokenize(data, |t| v.push(t));
+        v
+    }
+
+    #[test]
+    fn tokens_reconstruct_input() {
+        let cases: Vec<Vec<u8>> = vec![
+            b"".to_vec(),
+            b"a".to_vec(),
+            b"abcabcabcabcabc".to_vec(),
+            b"aaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaa".to_vec(),
+            (0..255u8).collect(),
+            b"the quick brown fox jumps over the lazy dog the quick brown fox".to_vec(),
+        ];
+        for level in [1u8, 5, 9] {
+            for data in &cases {
+                assert_eq!(detokenize(&tokens_for(data, level)), *data);
+            }
+        }
+    }
+
+    #[test]
+    fn repetitive_input_compresses_to_matches() {
+        let data = b"abcdefgh".repeat(100);
+        let toks = tokens_for(&data, 9);
+        let matches = toks.iter().filter(|t| matches!(t, Token::Match { .. })).count();
+        assert!(matches >= 1);
+        // Token count far below byte count.
+        assert!(toks.len() < data.len() / 4, "{} tokens for {} bytes", toks.len(), data.len());
+        assert_eq!(detokenize(&toks), data);
+    }
+
+    #[test]
+    fn long_runs_use_max_match() {
+        let data = vec![b'x'; 4096];
+        let toks = tokens_for(&data, 9);
+        assert!(toks
+            .iter()
+            .any(|t| matches!(t, Token::Match { len, .. } if *len as usize == MAX_MATCH)));
+        assert_eq!(detokenize(&toks), data);
+    }
+
+    #[test]
+    fn distances_respect_window() {
+        let mut data = b"UNIQUEPREFIX".to_vec();
+        data.extend(std::iter::repeat(b'.').take(MAX_DIST + 100));
+        data.extend_from_slice(b"UNIQUEPREFIX");
+        let toks = tokens_for(&data, 9);
+        for t in &toks {
+            if let Token::Match { dist, .. } = t {
+                assert!((*dist as usize) <= MAX_DIST);
+            }
+        }
+        assert_eq!(detokenize(&toks), data);
+    }
+
+    #[test]
+    fn pseudorandom_roundtrip() {
+        let mut x = 0x1234_5678_9abc_def0u64;
+        let data: Vec<u8> = (0..50_000)
+            .map(|_| {
+                x ^= x << 13;
+                x ^= x >> 7;
+                x ^= x << 17;
+                (x & 0x3f) as u8 // small alphabet -> plenty of matches
+            })
+            .collect();
+        for level in [1u8, 6, 9] {
+            assert_eq!(detokenize(&tokens_for(&data, level)), data);
+        }
+    }
+}

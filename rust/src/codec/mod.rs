@@ -1,0 +1,24 @@
+//! Compression substrate for the scda convention (§3), implemented from
+//! scratch: Adler-32, LSB-first bit I/O, canonical/length-limited Huffman
+//! codes, an LZ77 hash-chain matcher, a DEFLATE encoder/decoder, the zlib
+//! (RFC 1950) wrapper, 76-column base64, and the two-stage element framing.
+//!
+//! Conformance is cross-checked against miniz_oxide (via flate2, tests
+//! only) and CPython's zlib (interop integration tests): streams we write
+//! inflate elsewhere, streams zlib writes inflate here.
+
+pub mod adler32;
+pub mod base64;
+pub mod bitio;
+pub mod deflate;
+pub mod frame;
+pub mod huffman;
+pub mod inflate;
+pub mod lz77;
+pub mod zlib;
+
+pub use adler32::adler32;
+pub use deflate::deflate;
+pub use frame::{decode_element, encode_element, peek_uncompressed_size, CodecOptions};
+pub use inflate::inflate;
+pub use zlib::{zlib_compress, zlib_decompress};

@@ -1,0 +1,139 @@
+//! zlib stream format (RFC 1950): 2-byte header, DEFLATE body, Adler-32
+//! trailer. §3.1 of the paper requires exactly this framing ("an RFC
+//! 1950/1951 deflate stream using any legal compression level") and names
+//! the Adler-32 as one of the three redundant read-side checks.
+
+use crate::codec::adler32::adler32;
+use crate::codec::deflate::deflate;
+use crate::codec::inflate::inflate_with_consumed;
+use crate::error::{corrupt, Result, ScdaError};
+
+/// Compress `data` into a zlib stream (the paper recommends zlib's best
+/// compression; our default level is 9 accordingly).
+pub fn zlib_compress(data: &[u8], level: u8) -> Vec<u8> {
+    // CMF: CM=8 (deflate), CINFO=7 (32K window) -> 0x78.
+    let cmf: u8 = 0x78;
+    // FLG: FLEVEL per level, FDICT=0, FCHECK makes (CMF<<8 | FLG) % 31 == 0.
+    let flevel: u8 = match level {
+        0..=1 => 0,
+        2..=5 => 1,
+        6..=7 => 2,
+        _ => 3,
+    };
+    let mut flg: u8 = flevel << 6;
+    let rem = ((cmf as u16) << 8 | flg as u16) % 31;
+    if rem != 0 {
+        flg += (31 - rem) as u8;
+    }
+    let mut out = Vec::with_capacity(data.len() / 2 + 64);
+    out.push(cmf);
+    out.push(flg);
+    out.extend_from_slice(&deflate(data, level));
+    out.extend_from_slice(&adler32(data).to_be_bytes());
+    out
+}
+
+/// Decompress a zlib stream, verifying header consistency and the Adler-32
+/// trailer. `expected_size` bounds and verifies the output when known.
+pub fn zlib_decompress(data: &[u8], expected_size: Option<usize>) -> Result<Vec<u8>> {
+    if data.len() < 6 {
+        return Err(ScdaError::corrupt(corrupt::BAD_ZLIB, "zlib stream shorter than minimal framing"));
+    }
+    let cmf = data[0];
+    let flg = data[1];
+    if cmf & 0x0f != 8 {
+        return Err(ScdaError::corrupt(corrupt::BAD_ZLIB, "zlib CM is not deflate"));
+    }
+    if (cmf >> 4) > 7 {
+        return Err(ScdaError::corrupt(corrupt::BAD_ZLIB, "zlib CINFO window exceeds 32K"));
+    }
+    if ((cmf as u16) << 8 | flg as u16) % 31 != 0 {
+        return Err(ScdaError::corrupt(corrupt::BAD_ZLIB, "zlib header check bits invalid"));
+    }
+    if flg & 0x20 != 0 {
+        return Err(ScdaError::corrupt(corrupt::BAD_ZLIB, "zlib preset dictionary unsupported"));
+    }
+    let (out, consumed) = inflate_with_consumed(&data[2..], expected_size)?;
+    let trailer_at = 2 + consumed;
+    if trailer_at + 4 > data.len() {
+        return Err(ScdaError::corrupt(corrupt::BAD_ZLIB, "zlib stream missing Adler-32 trailer"));
+    }
+    let stored = u32::from_be_bytes(data[trailer_at..trailer_at + 4].try_into().unwrap());
+    let actual = adler32(&out);
+    if stored != actual {
+        return Err(ScdaError::corrupt(
+            corrupt::BAD_CHECKSUM,
+            format!("Adler-32 mismatch: stored {stored:#010x}, computed {actual:#010x}"),
+        ));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_levels() {
+        let data = b"serial-equivalent parallel I/O ".repeat(500);
+        for level in [0u8, 1, 6, 9] {
+            let z = zlib_compress(&data, level);
+            // Header check bits valid by construction.
+            assert_eq!(((z[0] as u16) << 8 | z[1] as u16) % 31, 0);
+            assert_eq!(z[0], 0x78);
+            assert_eq!(zlib_decompress(&z, Some(data.len())).unwrap(), data);
+            assert_eq!(zlib_decompress(&z, None).unwrap(), data);
+        }
+    }
+
+    #[test]
+    fn adler_mismatch_detected() {
+        let data = b"check the checksum";
+        let mut z = zlib_compress(data, 9);
+        let n = z.len();
+        z[n - 1] ^= 0x01;
+        let err = zlib_decompress(&z, Some(data.len())).unwrap_err();
+        assert_eq!(err.code(), 1000 + corrupt::BAD_CHECKSUM);
+    }
+
+    #[test]
+    fn header_corruption_detected() {
+        let data = b"xyz";
+        let z = zlib_compress(data, 9);
+        let mut bad = z.clone();
+        bad[0] = 0x79; // CM=9
+        assert!(zlib_decompress(&bad, None).is_err());
+        let mut bad = z.clone();
+        bad[1] ^= 0x1f; // break FCHECK
+        assert!(zlib_decompress(&bad, None).is_err());
+        let mut bad = z;
+        bad[1] |= 0x20; // FDICT
+        assert!(zlib_decompress(&bad, None).is_err());
+    }
+
+    #[test]
+    fn short_input_rejected() {
+        assert!(zlib_decompress(&[], None).is_err());
+        assert!(zlib_decompress(&[0x78, 0x9c, 0x03], None).is_err());
+    }
+
+    #[test]
+    fn matches_flate2_both_directions() {
+        // Our compressor -> flate2 decompressor and vice versa. This is the
+        // in-process conformance oracle; CPython's zlib is exercised by the
+        // interop integration tests.
+        use std::io::{Read, Write};
+        let data: Vec<u8> = (0..100_000u32).map(|i| (i.wrapping_mul(i) >> 3) as u8).collect();
+        for level in [0u8, 6, 9] {
+            let ours = zlib_compress(&data, level);
+            let mut d = flate2::read::ZlibDecoder::new(&ours[..]);
+            let mut out = Vec::new();
+            d.read_to_end(&mut out).expect("flate2 must accept our zlib stream");
+            assert_eq!(out, data);
+        }
+        let mut e = flate2::write::ZlibEncoder::new(Vec::new(), flate2::Compression::best());
+        e.write_all(&data).unwrap();
+        let theirs = e.finish().unwrap();
+        assert_eq!(zlib_decompress(&theirs, Some(data.len())).unwrap(), data);
+    }
+}

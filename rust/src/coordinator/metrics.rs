@@ -1,0 +1,109 @@
+//! Lightweight counters and timers for the I/O pipeline — the paper's
+//! use case is batch HPC jobs, so metrics are in-process, lock-free, and
+//! rendered as a table on demand (no network dependencies).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Pipeline-wide counters; cheap to share behind an `Arc`.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub bytes_in: AtomicU64,
+    pub bytes_transformed: AtomicU64,
+    pub bytes_compressed: AtomicU64,
+    pub bytes_written: AtomicU64,
+    pub bytes_read: AtomicU64,
+    pub elements_written: AtomicU64,
+    pub sections_written: AtomicU64,
+    pub chunks_skipped_incompressible: AtomicU64,
+    /// Nanoseconds per stage.
+    pub ns_generate: AtomicU64,
+    pub ns_precondition: AtomicU64,
+    pub ns_compress: AtomicU64,
+    pub ns_write: AtomicU64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn add(counter: &AtomicU64, v: u64) {
+        counter.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Time `f`, accumulating elapsed nanoseconds into `counter`.
+    #[inline]
+    pub fn timed<T>(counter: &AtomicU64, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        counter.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        out
+    }
+
+    /// Render a human-readable report.
+    pub fn report(&self) -> String {
+        let g = |c: &AtomicU64| c.load(Ordering::Relaxed);
+        let mb = |b: u64| b as f64 / (1024.0 * 1024.0);
+        let ms = |n: u64| n as f64 / 1e6;
+        let bw = |b: u64, n: u64| {
+            if n == 0 {
+                0.0
+            } else {
+                (b as f64 / (1024.0 * 1024.0)) / (n as f64 / 1e9)
+            }
+        };
+        format!(
+            "pipeline metrics:\n\
+             \x20 in            {:>10.2} MiB\n\
+             \x20 transformed   {:>10.2} MiB  ({:.1} ms, {:.0} MiB/s)\n\
+             \x20 compressed    {:>10.2} MiB  ({:.1} ms, {:.0} MiB/s, ratio {:.3})\n\
+             \x20 written       {:>10.2} MiB  ({:.1} ms, {:.0} MiB/s)\n\
+             \x20 sections {}  elements {}  incompressible-chunks {}",
+            mb(g(&self.bytes_in)),
+            mb(g(&self.bytes_transformed)),
+            ms(g(&self.ns_precondition)),
+            bw(g(&self.bytes_transformed), g(&self.ns_precondition)),
+            mb(g(&self.bytes_compressed)),
+            ms(g(&self.ns_compress)),
+            bw(g(&self.bytes_in), g(&self.ns_compress)),
+            if g(&self.bytes_in) == 0 { 0.0 } else { g(&self.bytes_compressed) as f64 / g(&self.bytes_in) as f64 },
+            mb(g(&self.bytes_written)),
+            ms(g(&self.ns_write)),
+            bw(g(&self.bytes_written), g(&self.ns_write)),
+            g(&self.sections_written),
+            g(&self.elements_written),
+            g(&self.chunks_skipped_incompressible),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        Metrics::add(&m.bytes_in, 100);
+        Metrics::add(&m.bytes_in, 23);
+        assert_eq!(m.bytes_in.load(Ordering::Relaxed), 123);
+        let v = Metrics::timed(&m.ns_compress, || {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            42
+        });
+        assert_eq!(v, 42);
+        assert!(m.ns_compress.load(Ordering::Relaxed) >= 2_000_000);
+    }
+
+    #[test]
+    fn report_renders() {
+        let m = Metrics::new();
+        Metrics::add(&m.bytes_in, 1024 * 1024);
+        Metrics::add(&m.bytes_compressed, 512 * 1024);
+        let r = m.report();
+        assert!(r.contains("ratio 0.500"));
+        assert!(r.contains("1.00 MiB"));
+    }
+}

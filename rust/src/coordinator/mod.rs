@@ -1,0 +1,15 @@
+//! L3 coordination on top of the scda API: checkpoint/restart management,
+//! the staged streaming pipeline with backpressure, byte-balanced
+//! partition rebalancing, write aggregation, and metrics.
+
+pub mod checkpoint;
+pub mod metrics;
+pub mod pipeline;
+pub mod rebalance;
+pub mod scheduler;
+
+pub use checkpoint::{open_checkpoint, read_checkpoint, write_checkpoint, CheckpointInfo, Field, FieldInfo, FieldPayload};
+pub use metrics::Metrics;
+pub use pipeline::{map_ordered, PipelineOpts, Stage};
+pub use rebalance::{by_bytes, by_count, exchange};
+pub use scheduler::WriteCoalescer;

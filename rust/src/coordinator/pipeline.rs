@@ -1,0 +1,252 @@
+//! Staged streaming pipeline with bounded-queue backpressure.
+//!
+//! The per-element compression convention makes the write path a classic
+//! three-stage pipeline per rank: generate/ingest element payloads →
+//! precondition + deflate (CPU-bound, parallelizable per element) →
+//! ordered write. [`map_ordered`] implements the middle stage: a worker
+//! pool over an input iterator whose results are yielded *in input
+//! order*, with a bounded in-flight window so memory stays proportional
+//! to `workers + depth` items however large the stream is (backpressure).
+
+use std::collections::BTreeMap;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
+
+/// Configuration for the parallel stage.
+#[derive(Debug, Clone, Copy)]
+pub struct PipelineOpts {
+    /// Worker threads for the compute stage.
+    pub workers: usize,
+    /// Extra in-flight items beyond the workers (reorder slack).
+    pub depth: usize,
+}
+
+impl Default for PipelineOpts {
+    fn default() -> Self {
+        let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16);
+        PipelineOpts { workers, depth: 2 * workers }
+    }
+}
+
+/// Apply `f` to every item of `input` using a worker pool, yielding
+/// results in input order with bounded memory. Both `f` and the items
+/// cross threads; the returned iterator drives the pool lazily.
+pub fn map_ordered<T, U, F>(
+    input: impl Iterator<Item = T> + Send + 'static,
+    f: F,
+    opts: PipelineOpts,
+) -> impl Iterator<Item = U>
+where
+    T: Send + 'static,
+    U: Send + 'static,
+    F: Fn(T) -> U + Send + Sync + 'static,
+{
+    let workers = opts.workers.max(1);
+    let capacity = workers + opts.depth;
+    // Feed channel: bounded -> producers block when the pool is saturated.
+    let (feed_tx, feed_rx) = sync_channel::<(u64, T)>(capacity);
+    let feed_rx = Arc::new(Mutex::new(feed_rx));
+    // Result channel: bounded by the same capacity.
+    let (out_tx, out_rx) = sync_channel::<(u64, U)>(capacity);
+    let f = Arc::new(f);
+
+    // Producer thread: enumerate the input (the input iterator may not be
+    // Sync, so it is moved here wholesale).
+    let producer = std::thread::Builder::new()
+        .name("scda-pipe-feed".into())
+        .spawn(move || {
+            for (i, item) in input.enumerate() {
+                if feed_tx.send((i as u64, item)).is_err() {
+                    break; // consumer dropped
+                }
+            }
+        })
+        .expect("spawn producer");
+
+    let mut worker_handles = Vec::with_capacity(workers);
+    for w in 0..workers {
+        let feed_rx = Arc::clone(&feed_rx);
+        let out_tx = out_tx.clone();
+        let f = Arc::clone(&f);
+        worker_handles.push(
+            std::thread::Builder::new()
+                .name(format!("scda-pipe-{w}"))
+                .spawn(move || loop {
+                    let item = feed_rx.lock().unwrap().recv();
+                    match item {
+                        Ok((i, t)) => {
+                            if out_tx.send((i, f(t))).is_err() {
+                                break;
+                            }
+                        }
+                        Err(_) => break,
+                    }
+                })
+                .expect("spawn worker"),
+        );
+    }
+    drop(out_tx);
+
+    OrderedDrain {
+        rx: out_rx,
+        next: 0,
+        hold: BTreeMap::new(),
+        _threads: ThreadBag { handles: Some((producer, worker_handles)) },
+    }
+}
+
+struct ThreadBag {
+    handles: Option<(std::thread::JoinHandle<()>, Vec<std::thread::JoinHandle<()>>)>,
+}
+
+impl Drop for ThreadBag {
+    fn drop(&mut self) {
+        if let Some((p, ws)) = self.handles.take() {
+            // Receiver is dropped by now; senders unblock with SendError.
+            let _ = p.join();
+            for w in ws {
+                let _ = w.join();
+            }
+        }
+    }
+}
+
+struct OrderedDrain<U> {
+    rx: Receiver<(u64, U)>,
+    next: u64,
+    hold: BTreeMap<u64, U>,
+    _threads: ThreadBag,
+}
+
+impl<U> Iterator for OrderedDrain<U> {
+    type Item = U;
+
+    fn next(&mut self) -> Option<U> {
+        loop {
+            if let Some(u) = self.hold.remove(&self.next) {
+                self.next += 1;
+                return Some(u);
+            }
+            match self.rx.recv() {
+                Ok((i, u)) => {
+                    if i == self.next {
+                        self.next += 1;
+                        return Some(u);
+                    }
+                    self.hold.insert(i, u);
+                }
+                Err(_) => {
+                    // Workers done; drain the hold map (must be in order).
+                    return self.hold.remove(&self.next).inspect(|_| {
+                        self.next += 1;
+                    });
+                }
+            }
+        }
+    }
+}
+
+/// A bounded single-producer/single-consumer stage connector with
+/// blocking semantics — the glue for hand-built pipelines (used by the
+/// AMR example to overlap generation and writing).
+pub struct Stage<T> {
+    tx: SyncSender<T>,
+}
+
+impl<T: Send + 'static> Stage<T> {
+    /// Spawn `consumer` on its own thread fed by a queue of `depth`.
+    /// Returns the sending half and the consumer's join handle.
+    pub fn spawn<R: Send + 'static>(
+        depth: usize,
+        consumer: impl FnOnce(Receiver<T>) -> R + Send + 'static,
+    ) -> (Self, std::thread::JoinHandle<R>) {
+        let (tx, rx) = sync_channel(depth);
+        let h = std::thread::Builder::new()
+            .name("scda-stage".into())
+            .spawn(move || consumer(rx))
+            .expect("spawn stage");
+        (Stage { tx }, h)
+    }
+
+    /// Blocks when the downstream queue is full (backpressure).
+    pub fn send(&self, item: T) -> bool {
+        self.tx.send(item).is_ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn preserves_order_under_parallelism() {
+        let out: Vec<u64> = map_ordered(
+            0..1000u64,
+            |i| {
+                // Uneven work to force reordering pressure.
+                if i % 7 == 0 {
+                    std::thread::sleep(std::time::Duration::from_micros(200));
+                }
+                i * 2
+            },
+            PipelineOpts { workers: 8, depth: 4 },
+        )
+        .collect();
+        assert_eq!(out, (0..1000u64).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn bounded_in_flight() {
+        // Track max simultaneous in-flight items; must stay <= capacity.
+        static IN_FLIGHT: AtomicUsize = AtomicUsize::new(0);
+        static MAX_SEEN: AtomicUsize = AtomicUsize::new(0);
+        let opts = PipelineOpts { workers: 4, depth: 2 };
+        let out: Vec<usize> = map_ordered(
+            0..200usize,
+            |i| {
+                let now = IN_FLIGHT.fetch_add(1, Ordering::SeqCst) + 1;
+                MAX_SEEN.fetch_max(now, Ordering::SeqCst);
+                std::thread::sleep(std::time::Duration::from_micros(50));
+                IN_FLIGHT.fetch_sub(1, Ordering::SeqCst);
+                i
+            },
+            opts,
+        )
+        .collect();
+        assert_eq!(out.len(), 200);
+        // Only `workers` items execute f concurrently.
+        assert!(MAX_SEEN.load(Ordering::SeqCst) <= opts.workers, "{}", MAX_SEEN.load(Ordering::SeqCst));
+    }
+
+    #[test]
+    fn works_with_single_worker_and_empty_input() {
+        let out: Vec<i32> = map_ordered(std::iter::empty::<i32>(), |x| x, PipelineOpts { workers: 1, depth: 0 }).collect();
+        assert!(out.is_empty());
+        let out: Vec<i32> = map_ordered(vec![3].into_iter(), |x| x + 1, PipelineOpts { workers: 1, depth: 0 }).collect();
+        assert_eq!(out, vec![4]);
+    }
+
+    #[test]
+    fn early_drop_does_not_hang() {
+        let mut it = map_ordered(0..100_000u64, |i| i, PipelineOpts { workers: 4, depth: 2 });
+        assert_eq!(it.next(), Some(0));
+        drop(it); // must join cleanly without consuming the rest
+    }
+
+    #[test]
+    fn stage_backpressure_delivers_in_order() {
+        let (stage, handle) = Stage::spawn(2, |rx: std::sync::mpsc::Receiver<u32>| {
+            let mut got = Vec::new();
+            while let Ok(v) = rx.recv() {
+                got.push(v);
+            }
+            got
+        });
+        for i in 0..50 {
+            assert!(stage.send(i));
+        }
+        drop(stage);
+        assert_eq!(handle.join().unwrap(), (0..50).collect::<Vec<_>>());
+    }
+}

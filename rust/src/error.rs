@@ -1,0 +1,214 @@
+//! Error model for the scda API, following §A.6 of the paper.
+//!
+//! The paper mandates that file errors never crash a batch job: every API
+//! call reports a *code* that can be translated to a human-readable string
+//! (`scda_ferror_string`). We map the paper's three checked runtime error
+//! groups onto [`ScdaErrorKind`]:
+//!
+//! 1. **corrupt file contents** — [`ScdaErrorKind::CorruptFile`],
+//! 2. **file system errors** — [`ScdaErrorKind::Io`] (wrapping
+//!    `std::io::Error`, the stand-in for MPI I/O error classes / `errno`),
+//! 3. **semantically invalid input parameters or call sequence** —
+//!    [`ScdaErrorKind::Usage`].
+//!
+//! In idiomatic Rust the code travels inside a `Result`; the numeric code of
+//! the C API is preserved via [`ScdaError::code`] and the reverse mapping
+//! [`ferror_string`].
+
+use std::fmt;
+
+/// The three checked error groups of §A.6, plus `Ok` for code 0.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ScdaErrorKind {
+    /// Invalid file section metadata, bad magic, malformed padding, or a
+    /// violation of the compression convention (§3) announced by a matching
+    /// magic user string.
+    CorruptFile,
+    /// Any error reported by the file system access functions.
+    Io,
+    /// Parameters without legal meaning, or improperly composed calls
+    /// (e.g. reading array data before its section header).
+    Usage,
+}
+
+impl ScdaErrorKind {
+    /// Base numeric code for the group (codes within a group are
+    /// `base + detail`).
+    pub fn base_code(self) -> i32 {
+        match self {
+            ScdaErrorKind::CorruptFile => 1000,
+            ScdaErrorKind::Io => 2000,
+            ScdaErrorKind::Usage => 3000,
+        }
+    }
+}
+
+/// An scda error: group, stable numeric code, and a rendered message.
+#[derive(Debug)]
+pub struct ScdaError {
+    kind: ScdaErrorKind,
+    detail: i32,
+    message: String,
+    source: Option<std::io::Error>,
+}
+
+impl ScdaError {
+    pub fn corrupt(detail: i32, message: impl Into<String>) -> Self {
+        ScdaError { kind: ScdaErrorKind::CorruptFile, detail, message: message.into(), source: None }
+    }
+
+    pub fn usage(detail: i32, message: impl Into<String>) -> Self {
+        ScdaError { kind: ScdaErrorKind::Usage, detail, message: message.into(), source: None }
+    }
+
+    pub fn io(err: std::io::Error, context: impl Into<String>) -> Self {
+        ScdaError {
+            kind: ScdaErrorKind::Io,
+            detail: err.raw_os_error().unwrap_or(0),
+            message: context.into(),
+            source: Some(err),
+        }
+    }
+
+    pub fn kind(&self) -> ScdaErrorKind {
+        self.kind
+    }
+
+    /// The stable numeric error code (0 is reserved for success and never
+    /// produced by an `ScdaError`).
+    pub fn code(&self) -> i32 {
+        self.kind.base_code() + self.detail.clamp(0, 999)
+    }
+
+    pub fn message(&self) -> &str {
+        &self.message
+    }
+}
+
+impl fmt::Display for ScdaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let group = match self.kind {
+            ScdaErrorKind::CorruptFile => "corrupt file",
+            ScdaErrorKind::Io => "file system",
+            ScdaErrorKind::Usage => "usage",
+        };
+        write!(f, "scda error {} [{}]: {}", self.code(), group, self.message)?;
+        if let Some(src) = &self.source {
+            write!(f, ": {src}")?;
+        }
+        Ok(())
+    }
+}
+
+impl std::error::Error for ScdaError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        self.source.as_ref().map(|e| e as _)
+    }
+}
+
+impl From<std::io::Error> for ScdaError {
+    fn from(e: std::io::Error) -> Self {
+        ScdaError::io(e, "I/O operation failed")
+    }
+}
+
+/// Result alias used throughout the crate.
+pub type Result<T> = std::result::Result<T, ScdaError>;
+
+// Detail codes for corrupt-file errors (stable across releases; used by
+// failure-injection tests to assert we detect *which* corruption occurred).
+pub mod corrupt {
+    pub const BAD_MAGIC: i32 = 1;
+    pub const BAD_VERSION: i32 = 2;
+    pub const BAD_STRING_PADDING: i32 = 3;
+    pub const BAD_DATA_PADDING: i32 = 4;
+    pub const BAD_COUNT_ENTRY: i32 = 5;
+    pub const BAD_SECTION_TYPE: i32 = 6;
+    pub const TRUNCATED: i32 = 7;
+    pub const BAD_CONVENTION: i32 = 8;
+    pub const BAD_BASE64: i32 = 9;
+    pub const BAD_ZLIB: i32 = 10;
+    pub const BAD_CHECKSUM: i32 = 11;
+    pub const SIZE_MISMATCH: i32 = 12;
+    pub const COUNT_OVERFLOW: i32 = 13;
+}
+
+// Detail codes for usage errors.
+pub mod usage {
+    pub const BAD_MODE: i32 = 1;
+    pub const STRING_TOO_LONG: i32 = 2;
+    pub const INLINE_SIZE: i32 = 3;
+    pub const PARTITION_MISMATCH: i32 = 4;
+    pub const CALL_SEQUENCE: i32 = 5;
+    pub const COUNT_TOO_LARGE: i32 = 6;
+    pub const NOT_COLLECTIVE: i32 = 7;
+    pub const WRONG_SECTION: i32 = 8;
+    pub const BUFFER_SIZE: i32 = 9;
+}
+
+/// Translate an error code to a string, mirroring `scda_ferror_string`
+/// (§A.6.1). Returns `None` for codes that are not valid scda codes;
+/// code 0 translates to `"success"`.
+pub fn ferror_string(code: i32) -> Option<&'static str> {
+    Some(match code {
+        0 => "success",
+        c if c == 1000 + corrupt::BAD_MAGIC => "corrupt file: bad magic bytes",
+        c if c == 1000 + corrupt::BAD_VERSION => "corrupt file: unsupported format version",
+        c if c == 1000 + corrupt::BAD_STRING_PADDING => "corrupt file: malformed string padding",
+        c if c == 1000 + corrupt::BAD_DATA_PADDING => "corrupt file: malformed data padding",
+        c if c == 1000 + corrupt::BAD_COUNT_ENTRY => "corrupt file: malformed count entry",
+        c if c == 1000 + corrupt::BAD_SECTION_TYPE => "corrupt file: unknown section type",
+        c if c == 1000 + corrupt::TRUNCATED => "corrupt file: unexpected end of file",
+        c if c == 1000 + corrupt::BAD_CONVENTION => "corrupt file: compression convention violated",
+        c if c == 1000 + corrupt::BAD_BASE64 => "corrupt file: invalid base64 stream",
+        c if c == 1000 + corrupt::BAD_ZLIB => "corrupt file: invalid zlib stream",
+        c if c == 1000 + corrupt::BAD_CHECKSUM => "corrupt file: checksum mismatch",
+        c if c == 1000 + corrupt::SIZE_MISMATCH => "corrupt file: uncompressed size mismatch",
+        c if c == 1000 + corrupt::COUNT_OVERFLOW => "corrupt file: count exceeds 26 decimal digits",
+        c if (1000..2000).contains(&c) => "corrupt file contents",
+        c if (2000..3000).contains(&c) => "file system error",
+        c if c == 3000 + usage::BAD_MODE => "usage: invalid open mode",
+        c if c == 3000 + usage::STRING_TOO_LONG => "usage: user string exceeds maximum length",
+        c if c == 3000 + usage::INLINE_SIZE => "usage: inline data must be exactly 32 bytes",
+        c if c == 3000 + usage::PARTITION_MISMATCH => "usage: partition does not sum to element count",
+        c if c == 3000 + usage::CALL_SEQUENCE => "usage: improperly composed call sequence",
+        c if c == 3000 + usage::COUNT_TOO_LARGE => "usage: count exceeds 26 decimal digits",
+        c if c == 3000 + usage::NOT_COLLECTIVE => "usage: collective parameter mismatch",
+        c if c == 3000 + usage::WRONG_SECTION => "usage: call does not match current section type",
+        c if c == 3000 + usage::BUFFER_SIZE => "usage: buffer size inconsistent with metadata",
+        c if (3000..4000).contains(&c) => "semantically invalid input or call sequence",
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codes_roundtrip_to_strings() {
+        assert_eq!(ferror_string(0), Some("success"));
+        let e = ScdaError::corrupt(corrupt::BAD_MAGIC, "x");
+        assert_eq!(ferror_string(e.code()), Some("corrupt file: bad magic bytes"));
+        let u = ScdaError::usage(usage::INLINE_SIZE, "x");
+        assert!(ferror_string(u.code()).unwrap().contains("32 bytes"));
+        assert_eq!(ferror_string(-1), None);
+        assert_eq!(ferror_string(99999), None);
+    }
+
+    #[test]
+    fn io_errors_carry_source() {
+        let ioe = std::io::Error::new(std::io::ErrorKind::PermissionDenied, "denied");
+        let e = ScdaError::io(ioe, "opening checkpoint");
+        assert_eq!(e.kind(), ScdaErrorKind::Io);
+        assert!(e.to_string().contains("opening checkpoint"));
+        assert!(std::error::Error::source(&e).is_some());
+    }
+
+    #[test]
+    fn group_ranges_have_fallback_strings() {
+        assert_eq!(ferror_string(1999), Some("corrupt file contents"));
+        assert_eq!(ferror_string(2500), Some("file system error"));
+        assert_eq!(ferror_string(3999), Some("semantically invalid input or call sequence"));
+    }
+}

@@ -1,0 +1,154 @@
+//! The file header section **F** (§2.2, Figure 1): exactly 128 bytes.
+//!
+//! Layout (32-byte rows):
+//! 1. `scdata0` magic (7), one space, vendor string padded `'-' to 24`;
+//! 2. `F`, one space, user string padded `'-' to 62` (rows 2–3);
+//! 3. zero data bytes plus `padding('=' mod 32)` (32 bytes), so the header
+//!    concludes with a blank line.
+
+use crate::error::{corrupt, Result, ScdaError};
+use crate::format::limits::*;
+use crate::format::padding::{check_data_pad, pad_data, pad_str, unpad_str, LineStyle};
+
+/// Parsed contents of a file header.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FileHeader {
+    /// The format version byte parsed from the magic (`0xa0..=0xff`).
+    pub version: u8,
+    /// Vendor string (0 to 20 raw bytes).
+    pub vendor: Vec<u8>,
+    /// User string (0 to 58 raw bytes).
+    pub user: Vec<u8>,
+}
+
+/// Encode the 128-byte file header.
+pub fn encode_file_header(vendor: &[u8], user: &[u8], style: LineStyle) -> Result<Vec<u8>> {
+    let mut out = Vec::with_capacity(FILE_HEADER_BYTES);
+    out.extend_from_slice(MAGIC);
+    out.push(b' ');
+    pad_str(&mut out, vendor, VENDOR_PADDED, style)?;
+    out.push(b'F');
+    out.push(b' ');
+    pad_str(&mut out, user, USER_STRING_PADDED, style)?;
+    pad_data(&mut out, 0, None, style);
+    debug_assert_eq!(out.len(), FILE_HEADER_BYTES);
+    Ok(out)
+}
+
+/// Parse and validate a 128-byte file header.
+///
+/// `strict` additionally validates the trailing data padding bytes (the
+/// spec allows arbitrary bytes there; `scda verify` uses strict mode).
+pub fn parse_file_header(bytes: &[u8], strict: bool) -> Result<FileHeader> {
+    if bytes.len() != FILE_HEADER_BYTES {
+        return Err(ScdaError::corrupt(
+            corrupt::TRUNCATED,
+            format!("file header has {} bytes, expected {}", bytes.len(), FILE_HEADER_BYTES),
+        ));
+    }
+    // Magic: sc%02xt%02x. Fixed prefix "scdat" per identifier 0xda... note
+    // the identifier renders as "da" inside "sc" + "da" + "t" + version.
+    if &bytes[..5] != b"scdat" {
+        return Err(ScdaError::corrupt(corrupt::BAD_MAGIC, "file does not start with scda magic"));
+    }
+    let version = parse_hex_byte(&bytes[5..7])
+        .ok_or_else(|| ScdaError::corrupt(corrupt::BAD_MAGIC, "magic version digits are not lowercase hex"))?;
+    if !(VERSION..=MAX_VERSION).contains(&version) {
+        return Err(ScdaError::corrupt(
+            corrupt::BAD_VERSION,
+            format!("format version {version:#04x} outside supported range a0..ff"),
+        ));
+    }
+    if bytes[7] != b' ' {
+        return Err(ScdaError::corrupt(corrupt::BAD_MAGIC, "missing separator after magic"));
+    }
+    let vendor = unpad_str(&bytes[8..32], VENDOR_PADDED)?.to_vec();
+    if bytes[32] != b'F' || bytes[33] != b' ' {
+        return Err(ScdaError::corrupt(corrupt::BAD_MAGIC, "file header section letter is not 'F'"));
+    }
+    let user = unpad_str(&bytes[34..96], USER_STRING_PADDED)?.to_vec();
+    check_data_pad(&bytes[96..128], 0, None, strict)?;
+    Ok(FileHeader { version, vendor, user })
+}
+
+fn parse_hex_byte(two: &[u8]) -> Option<u8> {
+    let hex = |c: u8| match c {
+        b'0'..=b'9' => Some(c - b'0'),
+        b'a'..=b'f' => Some(c - b'a' + 10),
+        _ => None,
+    };
+    Some(hex(two[0])? * 16 + hex(two[1])?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn header_is_128_bytes_and_roundtrips() {
+        for style in [LineStyle::Unix, LineStyle::Mime] {
+            let h = encode_file_header(b"scda-rs 0.1", b"my checkpoint", style).unwrap();
+            assert_eq!(h.len(), 128);
+            let parsed = parse_file_header(&h, true).unwrap();
+            assert_eq!(parsed.version, VERSION);
+            assert_eq!(parsed.vendor, b"scda-rs 0.1");
+            assert_eq!(parsed.user, b"my checkpoint");
+        }
+    }
+
+    #[test]
+    fn header_starts_with_scdata0_and_ends_blank() {
+        let h = encode_file_header(b"v", b"u", LineStyle::Unix).unwrap();
+        assert!(h.starts_with(b"scdata0 "));
+        // Concludes with a blank line (§ Figure 1 caption).
+        assert_eq!(&h[126..], b"\n\n");
+    }
+
+    #[test]
+    fn empty_strings_allowed() {
+        let h = encode_file_header(b"", b"", LineStyle::Unix).unwrap();
+        let parsed = parse_file_header(&h, true).unwrap();
+        assert!(parsed.vendor.is_empty());
+        assert!(parsed.user.is_empty());
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_version() {
+        let mut h = encode_file_header(b"v", b"u", LineStyle::Unix).unwrap();
+        h[0] = b'S';
+        assert_eq!(parse_file_header(&h, true).unwrap_err().code(), 1000 + corrupt::BAD_MAGIC);
+        // Version below a0.
+        let mut h = encode_file_header(b"v", b"u", LineStyle::Unix).unwrap();
+        h[5] = b'0';
+        h[6] = b'0';
+        assert_eq!(parse_file_header(&h, true).unwrap_err().code(), 1000 + corrupt::BAD_VERSION);
+        // Uppercase hex is not the printf %02x output.
+        let mut h = encode_file_header(b"v", b"u", LineStyle::Unix).unwrap();
+        h[5] = b'A';
+        assert!(parse_file_header(&h, true).is_err());
+    }
+
+    #[test]
+    fn future_versions_within_range_accepted() {
+        let mut h = encode_file_header(b"v", b"u", LineStyle::Unix).unwrap();
+        h[5] = b'f';
+        h[6] = b'f'; // scdatff
+        assert_eq!(parse_file_header(&h, true).unwrap().version, 0xff);
+    }
+
+    #[test]
+    fn vendor_too_long_rejected_on_write() {
+        assert!(encode_file_header(&[b'x'; 21], b"", LineStyle::Unix).is_err());
+        assert!(encode_file_header(b"", &[b'x'; 59], LineStyle::Unix).is_err());
+        // Boundary values fit.
+        encode_file_header(&[b'x'; 20], &[b'y'; 58], LineStyle::Unix).unwrap();
+    }
+
+    #[test]
+    fn strict_padding_check() {
+        let mut h = encode_file_header(b"v", b"u", LineStyle::Unix).unwrap();
+        h[100] = b'?';
+        assert!(parse_file_header(&h, true).is_err());
+        assert!(parse_file_header(&h, false).is_ok());
+    }
+}

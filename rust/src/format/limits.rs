@@ -1,0 +1,104 @@
+//! Constants of the scda format specification (§2).
+//!
+//! All byte counts below are fixed by the paper; changing any of them
+//! produces a different (non-conforming) format.
+
+/// The magic bytes of the present format version: `sc%02xt%02x` with
+/// identifier `(da)_16` and version `(a0)_16`, i.e. `scdata0` (7 bytes).
+pub const MAGIC: &[u8; 7] = b"scdata0";
+
+/// Format identifier byte encoded in the magic (`(da)_16 = 218`).
+pub const FORMAT_ID: u8 = 0xda;
+
+/// The present format version `(a0)_16 = 160`. Versions run to `(ff)_16`,
+/// offering a range of 96 values.
+pub const VERSION: u8 = 0xa0;
+
+/// Last version accepted by this implementation when reading.
+pub const MAX_VERSION: u8 = 0xff;
+
+/// Divisor for data-byte padding (§2.1.2): "which, for the purpose of this
+/// format, is always 32".
+pub const DATA_PAD_DIV: usize = 32;
+
+/// Minimum number of data padding bytes (§2.1.2).
+pub const DATA_PAD_MIN: usize = 7;
+
+/// Maximum number of data padding bytes: `DATA_PAD_DIV + 6`.
+pub const DATA_PAD_MAX: usize = DATA_PAD_DIV + 6;
+
+/// Byte length of the magic-plus-separator entry in the file header.
+pub const MAGIC_ENTRY_BYTES: usize = 8;
+
+/// Padded length of the vendor string field (§2.2, Figure 1).
+pub const VENDOR_PADDED: usize = 24;
+
+/// Maximum vendor string length: `VENDOR_PADDED - 4` (padding needs >= 4).
+pub const VENDOR_MAX: usize = VENDOR_PADDED - 4; // 20
+
+/// Padded length of the user string field in every section header.
+pub const USER_STRING_PADDED: usize = 62;
+
+/// Maximum user string length (`62 - 4 = 58`).
+pub const USER_STRING_MAX: usize = USER_STRING_PADDED - 4; // 58
+
+/// Total byte length of a section-type + user-string header row.
+pub const SECTION_HEADER_BYTES: usize = 2 + USER_STRING_PADDED; // 64
+
+/// Total byte length of the file header section **F**.
+pub const FILE_HEADER_BYTES: usize = 128;
+
+/// Byte length of a count entry row (letter, space, digits, padding).
+pub const COUNT_ENTRY_BYTES: usize = 32;
+
+/// Padded length of the decimal digits inside a count entry.
+pub const COUNT_DIGITS_PADDED: usize = 30;
+
+/// Maximum number of decimal digits of a count (§2: "up to 26 decimal
+/// digits"), hence counts are `< 10^26` and require 128-bit arithmetic.
+pub const COUNT_MAX_DIGITS: usize = 26;
+
+/// Exclusive upper bound for any count in the format: `10^26`.
+pub const COUNT_LIMIT: u128 = 100_000_000_000_000_000_000_000_000;
+
+/// Exact byte count of the data of an inline section **I** (§2.3).
+pub const INLINE_DATA_BYTES: usize = 32;
+
+/// Total byte length of an inline section (64-byte header + 32 data bytes).
+pub const INLINE_SECTION_BYTES: usize = SECTION_HEADER_BYTES + INLINE_DATA_BYTES; // 96
+
+/// Columns per base64 line in the compression convention (§3.1).
+pub const BASE64_LINE_COLS: usize = 76;
+
+/// Vendor string written by this implementation (must fit `VENDOR_MAX`).
+pub const VENDOR_STRING: &[u8] = b"scda-rs 0.1";
+
+/// Magic user strings of the compression convention (§3.2–§3.4).
+pub const CONV_BLOCK: &[u8] = b"B compressed scda 00";
+pub const CONV_ARRAY: &[u8] = b"A compressed scda 00";
+pub const CONV_VARRAY: &[u8] = b"V compressed scda 00";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn derived_constants_match_spec_figures() {
+        // Figure 1: 8 + 24 = 32-byte first row; 128-byte header total.
+        assert_eq!(MAGIC_ENTRY_BYTES + VENDOR_PADDED, 32);
+        assert_eq!(32 + SECTION_HEADER_BYTES + DATA_PAD_DIV, FILE_HEADER_BYTES);
+        // Figure 2: inline section is 96 bytes.
+        assert_eq!(INLINE_SECTION_BYTES, 96);
+        // Count entries: 2 + 30 = 32.
+        assert_eq!(2 + COUNT_DIGITS_PADDED, COUNT_ENTRY_BYTES);
+        // 26 digits fit in the padded digit field with >= 4 bytes padding.
+        assert!(COUNT_MAX_DIGITS <= COUNT_DIGITS_PADDED - 4);
+        // The magic spells out identifier and version.
+        assert_eq!(MAGIC, b"scdata0");
+        assert_eq!(format!("sc{:02x}t{:02x}", FORMAT_ID, VERSION).as_bytes(), b"scdata0".as_slice());
+        assert!(VENDOR_STRING.len() <= VENDOR_MAX);
+        // COUNT_LIMIT is 10^26.
+        assert_eq!(COUNT_LIMIT.to_string().len(), 27);
+        assert_eq!(COUNT_LIMIT.to_string(), format!("1{}", "0".repeat(26)));
+    }
+}

@@ -1,0 +1,18 @@
+//! Byte-level implementation of the scda format specification (§2).
+//!
+//! Everything in this module is pure: functions map user input to the exact
+//! bytes the specification mandates, independent of any I/O backend or
+//! parallel partition. The serial-equivalence guarantee of the format rests
+//! on this purity — the parallel layers merely decide *who* writes which of
+//! these bytes *where*.
+
+pub mod header;
+pub mod limits;
+pub mod number;
+pub mod padding;
+pub mod section;
+
+pub use header::{encode_file_header, parse_file_header, FileHeader};
+pub use limits::*;
+pub use padding::LineStyle;
+pub use section::{SectionKind, SectionMeta};

@@ -1,0 +1,290 @@
+//! The two padding rules of §2.1.
+//!
+//! * [`pad_str`] / [`unpad_str`] — `padding('-' to d)` (§2.1.1): extend a
+//!   byte sequence of length `0 <= n <= d - 4` to exactly `d` bytes with
+//!   `' ', (p-3) x '-', q`, where the two-byte tail `q` is `"-\n"` for Unix
+//!   and `"\r\n"` for MIME style. The original length is inferable from the
+//!   right on reading.
+//! * [`pad_data`] / [`data_pad_len`] — `padding('=' mod D)` (§2.1.2) with
+//!   `D = 32`: extend data of length `n` by `p in [7, 38]` bytes such that
+//!   `n + p` is divisible by 32. The pad is `P, Q x '=', R` per Table 1,
+//!   with `P` depending on whether the input already ends in a line feed.
+//!
+//! The reader *validates* padding by default (any deviation is a
+//! corrupt-file error), with a relaxed mode that only checks lengths — the
+//! spec allows arbitrary data-padding bytes when neither MIME nor Unix line
+//! endings are desired.
+
+use crate::error::{corrupt, Result, ScdaError};
+use crate::format::limits::{DATA_PAD_DIV, DATA_PAD_MAX, DATA_PAD_MIN};
+
+/// Line-break convention used when *writing* (§2.1). Reading accepts both.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum LineStyle {
+    /// `"-\n"` string-padding tail, `"\n="`/`"\n\n"` data padding, `"=\n"`
+    /// base64 line breaks. The authors' reference implementation writes
+    /// Unix line breaks; so do we by default.
+    #[default]
+    Unix,
+    /// `"\r\n"` everywhere.
+    Mime,
+}
+
+/// Append `padding('-' to d)` of `input` to `out`.
+///
+/// # Errors
+/// [`ScdaError`] (usage) if `input.len() > d - 4`.
+pub fn pad_str(out: &mut Vec<u8>, input: &[u8], d: usize, style: LineStyle) -> Result<()> {
+    debug_assert!(d >= 4);
+    if input.len() + 4 > d {
+        return Err(ScdaError::usage(
+            crate::error::usage::STRING_TOO_LONG,
+            format!("string of {} bytes exceeds maximum of {} for a {}-byte field", input.len(), d - 4, d),
+        ));
+    }
+    let p = d - input.len();
+    out.extend_from_slice(input);
+    out.push(b' ');
+    out.extend(std::iter::repeat(b'-').take(p - 3));
+    match style {
+        LineStyle::Unix => out.extend_from_slice(b"-\n"),
+        LineStyle::Mime => out.extend_from_slice(b"\r\n"),
+    }
+    Ok(())
+}
+
+/// Parse a `d`-byte field padded by [`pad_str`]; return the original bytes.
+///
+/// Scans from the right: the final two bytes must be `"-\n"` or `"\r\n"`,
+/// preceded by a (possibly empty) run of `'-'` and then exactly one space.
+/// The scan is unambiguous because the padding always contributes the
+/// space terminating the dash run (see §2.1.1).
+pub fn unpad_str(field: &[u8], d: usize) -> Result<&[u8]> {
+    if field.len() != d {
+        return Err(ScdaError::corrupt(
+            corrupt::BAD_STRING_PADDING,
+            format!("padded string field has {} bytes, expected {}", field.len(), d),
+        ));
+    }
+    let bad = || {
+        ScdaError::corrupt(
+            corrupt::BAD_STRING_PADDING,
+            "malformed '-' padding: expected <data> ' ' '-'* ('-\\n' | '\\r\\n')",
+        )
+    };
+    let tail = &field[d - 2..];
+    if tail != b"-\n" && tail != b"\r\n" {
+        return Err(bad());
+    }
+    // Scan dashes right-to-left starting before q.
+    let mut i = d - 2;
+    while i > 0 && field[i - 1] == b'-' {
+        i -= 1;
+    }
+    if i == 0 || field[i - 1] != b' ' {
+        return Err(bad());
+    }
+    let n = i - 1;
+    // p = d - n must be at least 4.
+    if d - n < 4 {
+        return Err(bad());
+    }
+    Ok(&field[..n])
+}
+
+/// Number of data padding bytes for `n` input bytes: the unique
+/// `p in [7, 38]` with `(n + p) % 32 == 0` (§2.1.2).
+pub fn data_pad_len(n: u128) -> usize {
+    let rem = (n % DATA_PAD_DIV as u128) as usize;
+    let mut p = DATA_PAD_DIV - rem; // in [1, 32]
+    if p < DATA_PAD_MIN {
+        p += DATA_PAD_DIV;
+    }
+    debug_assert!((DATA_PAD_MIN..=DATA_PAD_MAX).contains(&p));
+    p
+}
+
+/// Append `padding('=' mod 32)` for data whose byte count is `n` and whose
+/// last byte (if any) is `last`.
+pub fn pad_data(out: &mut Vec<u8>, n: u128, last: Option<u8>, style: LineStyle) {
+    let p = data_pad_len(n);
+    // P: two bytes.
+    if n > 0 && last == Some(b'\n') {
+        out.extend_from_slice(b"==");
+    } else {
+        match style {
+            LineStyle::Unix => out.extend_from_slice(b"\n="),
+            LineStyle::Mime => out.extend_from_slice(b"\r\n"),
+        }
+    }
+    // Q x '=' and R per Table 1.
+    match style {
+        LineStyle::Unix => {
+            out.extend(std::iter::repeat(b'=').take(p - 4));
+            out.extend_from_slice(b"\n\n");
+        }
+        LineStyle::Mime => {
+            out.extend(std::iter::repeat(b'=').take(p - 6));
+            out.extend_from_slice(b"\r\n\r\n");
+        }
+    }
+}
+
+/// Validate a data padding of `pad.len() == data_pad_len(n)` bytes.
+///
+/// With `strict`, the padding must match either the MIME or the Unix form
+/// of (2); otherwise only the length is checked ("the data padding may
+/// consist of p arbitrary bytes" — §2.1.2), which is how the paper says the
+/// bytes are treated on reading ("ignored"). We default to strict when
+/// verifying files and relaxed when merely reading data.
+pub fn check_data_pad(pad: &[u8], n: u128, last: Option<u8>, strict: bool) -> Result<()> {
+    let p = data_pad_len(n);
+    if pad.len() != p {
+        return Err(ScdaError::corrupt(
+            corrupt::BAD_DATA_PADDING,
+            format!("data padding is {} bytes, expected {}", pad.len(), p),
+        ));
+    }
+    if !strict {
+        return Ok(());
+    }
+    let mut ok = false;
+    for style in [LineStyle::Unix, LineStyle::Mime] {
+        let mut expect = Vec::with_capacity(p);
+        pad_data(&mut expect, n, last, style);
+        if expect == pad {
+            ok = true;
+            break;
+        }
+    }
+    if ok {
+        Ok(())
+    } else {
+        Err(ScdaError::corrupt(corrupt::BAD_DATA_PADDING, "data padding matches neither MIME nor Unix form"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pad_str_vec(input: &[u8], d: usize, style: LineStyle) -> Vec<u8> {
+        let mut v = Vec::new();
+        pad_str(&mut v, input, d, style).unwrap();
+        v
+    }
+
+    #[test]
+    fn str_padding_matches_spec_shape() {
+        // n = 0, d = 8: ' ' + 3 dashes... p = 8: ' ', (p-3)=5 x '-'? No:
+        // padding is ' ', (p-3) x '-', q  -> 1 + (p-3) + 2 = p bytes.
+        // p = 8: ' ' + (p-3)=5 dashes + q="-\n" -> one space, six dashes, \n.
+        let v = pad_str_vec(b"", 8, LineStyle::Unix);
+        assert_eq!(v, b" ------\n".to_vec());
+        assert_eq!(v.len(), 8);
+        let v = pad_str_vec(b"abc", 8, LineStyle::Mime);
+        assert_eq!(&v[..3], b"abc");
+        assert_eq!(&v[3..4], b" ");
+        assert_eq!(&v[4..6], b"--");
+        assert_eq!(&v[6..], b"\r\n");
+    }
+
+    #[test]
+    fn str_padding_roundtrips() {
+        for style in [LineStyle::Unix, LineStyle::Mime] {
+            for d in [8usize, 24, 30, 62] {
+                for n in 0..=(d - 4) {
+                    let input: Vec<u8> = (0..n).map(|i| b'a' + (i % 26) as u8).collect();
+                    let v = pad_str_vec(&input, d, style);
+                    assert_eq!(v.len(), d);
+                    assert_eq!(unpad_str(&v, d).unwrap(), &input[..]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn str_padding_roundtrips_with_adversarial_tails() {
+        // User strings ending in dashes/spaces must still parse to the
+        // exact original (§2.1.1's right-to-left inference).
+        for tail in ["a-", "a--", "a ", "a -", "x--- ", "- ", " ", "--"] {
+            let v = pad_str_vec(tail.as_bytes(), 30, LineStyle::Unix);
+            assert_eq!(unpad_str(&v, 30).unwrap(), tail.as_bytes());
+        }
+    }
+
+    #[test]
+    fn str_too_long_is_usage_error() {
+        let mut v = Vec::new();
+        let long = vec![b'x'; 59];
+        let err = pad_str(&mut v, &long, 62, LineStyle::Unix).unwrap_err();
+        assert_eq!(err.kind(), crate::error::ScdaErrorKind::Usage);
+    }
+
+    #[test]
+    fn unpad_rejects_corruption() {
+        let mut v = pad_str_vec(b"hello", 30, LineStyle::Unix);
+        v[29] = b'x'; // destroy the newline
+        assert!(unpad_str(&v, 30).is_err());
+        let mut v = pad_str_vec(b"hello", 30, LineStyle::Unix);
+        v[5] = b'-'; // destroy the boundary space -> dash run hits data, no space
+        // "hello" + '-' ... scanning dashes reaches 'o' which is not ' '.
+        assert!(unpad_str(&v, 30).is_err());
+        assert!(unpad_str(b"ab", 30).is_err());
+    }
+
+    #[test]
+    fn data_pad_len_range_and_divisibility() {
+        for n in 0u128..200 {
+            let p = data_pad_len(n);
+            assert!((7..=38).contains(&p));
+            assert_eq!((n + p as u128) % 32, 0);
+        }
+        assert_eq!(data_pad_len(0), 32);
+        assert_eq!(data_pad_len(26), 38); // 26 + 6 = 32 would give p=6 < 7
+        assert_eq!(data_pad_len(25), 7);
+    }
+
+    #[test]
+    fn data_padding_forms() {
+        // n ends with newline: P = "==".
+        let mut v = Vec::new();
+        pad_data(&mut v, 1, Some(b'\n'), LineStyle::Unix);
+        let p = data_pad_len(1);
+        assert_eq!(v.len(), p);
+        assert_eq!(&v[..2], b"==");
+        assert_eq!(&v[v.len() - 2..], b"\n\n");
+        // Unix, no trailing newline: P = "\n=".
+        let mut v = Vec::new();
+        pad_data(&mut v, 1, Some(b'x'), LineStyle::Unix);
+        assert_eq!(&v[..2], b"\n=");
+        // MIME: P = "\r\n", R = "\r\n\r\n".
+        let mut v = Vec::new();
+        pad_data(&mut v, 1, Some(b'x'), LineStyle::Mime);
+        assert_eq!(&v[..2], b"\r\n");
+        assert_eq!(&v[v.len() - 4..], b"\r\n\r\n");
+        // Empty data behaves like "no last byte".
+        let mut v = Vec::new();
+        pad_data(&mut v, 0, None, LineStyle::Unix);
+        assert_eq!(v.len(), 32);
+        assert_eq!(&v[..2], b"\n=");
+    }
+
+    #[test]
+    fn data_padding_checks() {
+        for style in [LineStyle::Unix, LineStyle::Mime] {
+            for (n, last) in [(0u128, None), (5, Some(b'q')), (31, Some(b'\n')), (32, Some(b'z'))] {
+                let mut v = Vec::new();
+                pad_data(&mut v, n, last, style);
+                check_data_pad(&v, n, last, true).unwrap();
+                check_data_pad(&v, n, last, false).unwrap();
+            }
+        }
+        // Wrong length fails even relaxed.
+        assert!(check_data_pad(b"1234567", 0, None, false).is_err());
+        // Garbage of the right length passes relaxed, fails strict.
+        let junk = vec![b'?'; 32];
+        check_data_pad(&junk, 0, None, false).unwrap();
+        assert!(check_data_pad(&junk, 0, None, true).is_err());
+    }
+}

@@ -1,0 +1,323 @@
+//! Data section headers (§2.3–§2.6): the type/user-string row shared by all
+//! sections plus the per-type count entries.
+//!
+//! The format layer is purely byte-oriented: it encodes and parses header
+//! *rows*; placing them at file offsets — possibly from many processes — is
+//! the job of `crate::api` on top of `crate::par`. This split keeps the
+//! serial-equivalence property trivially auditable: every byte of a section
+//! is produced by these pure functions of the user input alone.
+
+use crate::error::{corrupt, usage, Result, ScdaError};
+use crate::format::limits::*;
+use crate::format::number::{decode_count, encode_count};
+use crate::format::padding::{data_pad_len, pad_str, unpad_str, LineStyle};
+
+/// The four data section types, in ascending generality (§2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SectionKind {
+    /// `I` — 32 bytes of unpadded inline data.
+    Inline,
+    /// `B` — a data block of given size.
+    Block,
+    /// `A` — array of `N` elements of fixed size `E`.
+    Array,
+    /// `V` — array of `N` elements of variable sizes `E_i`.
+    Varray,
+}
+
+impl SectionKind {
+    pub fn letter(self) -> u8 {
+        match self {
+            SectionKind::Inline => b'I',
+            SectionKind::Block => b'B',
+            SectionKind::Array => b'A',
+            SectionKind::Varray => b'V',
+        }
+    }
+
+    pub fn from_letter(letter: u8) -> Option<Self> {
+        Some(match letter {
+            b'I' => SectionKind::Inline,
+            b'B' => SectionKind::Block,
+            b'A' => SectionKind::Array,
+            b'V' => SectionKind::Varray,
+            _ => return None,
+        })
+    }
+}
+
+impl std::fmt::Display for SectionKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.letter() as char)
+    }
+}
+
+/// Encode the 64-byte section type + user string row.
+pub fn encode_type_row(kind: SectionKind, user: &[u8], style: LineStyle) -> Result<Vec<u8>> {
+    let mut out = Vec::with_capacity(SECTION_HEADER_BYTES);
+    out.push(kind.letter());
+    out.push(b' ');
+    pad_str(&mut out, user, USER_STRING_PADDED, style)?;
+    debug_assert_eq!(out.len(), SECTION_HEADER_BYTES);
+    Ok(out)
+}
+
+/// Parse a 64-byte section type + user string row.
+pub fn parse_type_row(row: &[u8]) -> Result<(SectionKind, Vec<u8>)> {
+    if row.len() != SECTION_HEADER_BYTES {
+        return Err(ScdaError::corrupt(
+            corrupt::TRUNCATED,
+            format!("section header row has {} bytes, expected {}", row.len(), SECTION_HEADER_BYTES),
+        ));
+    }
+    let kind = SectionKind::from_letter(row[0]).ok_or_else(|| {
+        ScdaError::corrupt(corrupt::BAD_SECTION_TYPE, format!("unknown section type byte {:#04x}", row[0]))
+    })?;
+    if row[1] != b' ' {
+        return Err(ScdaError::corrupt(corrupt::BAD_SECTION_TYPE, "missing separator after section type"));
+    }
+    let user = unpad_str(&row[2..], USER_STRING_PADDED)?.to_vec();
+    Ok((kind, user))
+}
+
+/// Metadata of one section as needed to size and traverse it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SectionMeta {
+    pub kind: SectionKind,
+    pub user: Vec<u8>,
+    /// Number of array elements for A/V; 0 for I/B (matching the read API
+    /// conventions of §A.5.1).
+    pub elem_count: u128,
+    /// Bytes per element for A; total block bytes for B; 0 for I/V (V's
+    /// per-element sizes live in `var_sizes` / the file body).
+    pub elem_size: u128,
+}
+
+impl SectionMeta {
+    pub fn inline(user: impl Into<Vec<u8>>) -> Self {
+        SectionMeta { kind: SectionKind::Inline, user: user.into(), elem_count: 0, elem_size: 0 }
+    }
+    pub fn block(user: impl Into<Vec<u8>>, bytes: u128) -> Self {
+        SectionMeta { kind: SectionKind::Block, user: user.into(), elem_count: 0, elem_size: bytes }
+    }
+    pub fn array(user: impl Into<Vec<u8>>, n: u128, e: u128) -> Self {
+        SectionMeta { kind: SectionKind::Array, user: user.into(), elem_count: n, elem_size: e }
+    }
+    pub fn varray(user: impl Into<Vec<u8>>, n: u128) -> Self {
+        SectionMeta { kind: SectionKind::Varray, user: user.into(), elem_count: n, elem_size: 0 }
+    }
+
+    /// Byte length of this section's header part (everything before the
+    /// data bytes): type row plus count entries.
+    pub fn header_len(&self) -> u128 {
+        let rows: u128 = match self.kind {
+            SectionKind::Inline => 0,
+            SectionKind::Block => 1,
+            SectionKind::Array => 2,
+            SectionKind::Varray => 1 + self.elem_count,
+        };
+        SECTION_HEADER_BYTES as u128 + rows * COUNT_ENTRY_BYTES as u128
+    }
+
+    /// Total data byte count (excluding padding). For V this needs the
+    /// element sizes' sum, passed by the caller.
+    pub fn data_len(&self, var_total: Option<u128>) -> u128 {
+        match self.kind {
+            SectionKind::Inline => INLINE_DATA_BYTES as u128,
+            SectionKind::Block => self.elem_size,
+            SectionKind::Array => self.elem_count * self.elem_size,
+            SectionKind::Varray => var_total.expect("varray data_len requires the total of element sizes"),
+        }
+    }
+
+    /// Total byte length of the section in the file, data padding included.
+    /// Inline data is the single exception that is never padded (§2.3).
+    pub fn total_len(&self, var_total: Option<u128>) -> u128 {
+        let data = self.data_len(var_total);
+        let pad = match self.kind {
+            SectionKind::Inline => 0,
+            _ => data_pad_len(data) as u128,
+        };
+        self.header_len() + data + pad
+    }
+}
+
+/// Encode all header rows of a section. For V sections, `var_sizes` must
+/// hold all `N` element sizes (use the streaming encoders in `crate::api`
+/// for partitioned writes, which emit each rank's count rows separately).
+pub fn encode_section_header(
+    meta: &SectionMeta,
+    var_sizes: Option<&[u128]>,
+    style: LineStyle,
+) -> Result<Vec<u8>> {
+    let mut out = encode_type_row(meta.kind, &meta.user, style)?;
+    match meta.kind {
+        SectionKind::Inline => {}
+        SectionKind::Block => {
+            encode_count(&mut out, b'E', meta.elem_size, style)?;
+        }
+        SectionKind::Array => {
+            encode_count(&mut out, b'N', meta.elem_count, style)?;
+            encode_count(&mut out, b'E', meta.elem_size, style)?;
+        }
+        SectionKind::Varray => {
+            let sizes = var_sizes.ok_or_else(|| {
+                ScdaError::usage(usage::CALL_SEQUENCE, "varray header encoding requires element sizes")
+            })?;
+            if sizes.len() as u128 != meta.elem_count {
+                return Err(ScdaError::usage(
+                    usage::PARTITION_MISMATCH,
+                    format!("varray has {} element sizes for N = {}", sizes.len(), meta.elem_count),
+                ));
+            }
+            encode_count(&mut out, b'N', meta.elem_count, style)?;
+            for &e in sizes {
+                encode_count(&mut out, b'E', e, style)?;
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Parse the fixed-size leading part of a section header: the type row and,
+/// depending on the type, the `E` / `N`+`E` / `N` count rows. Returns the
+/// metadata and the number of bytes consumed. For V sections the `N`
+/// per-element `E_i` rows follow at the returned offset.
+pub fn parse_section_prefix(bytes: &[u8]) -> Result<(SectionMeta, usize)> {
+    let need = |n: usize| -> Result<()> {
+        if bytes.len() < n {
+            Err(ScdaError::corrupt(corrupt::TRUNCATED, "section header truncated"))
+        } else {
+            Ok(())
+        }
+    };
+    need(SECTION_HEADER_BYTES)?;
+    let (kind, user) = parse_type_row(&bytes[..SECTION_HEADER_BYTES])?;
+    let mut off = SECTION_HEADER_BYTES;
+    let mut meta = SectionMeta { kind, user, elem_count: 0, elem_size: 0 };
+    match kind {
+        SectionKind::Inline => {}
+        SectionKind::Block => {
+            need(off + COUNT_ENTRY_BYTES)?;
+            meta.elem_size = decode_count(&bytes[off..off + COUNT_ENTRY_BYTES], b'E')?;
+            off += COUNT_ENTRY_BYTES;
+        }
+        SectionKind::Array => {
+            need(off + 2 * COUNT_ENTRY_BYTES)?;
+            meta.elem_count = decode_count(&bytes[off..off + COUNT_ENTRY_BYTES], b'N')?;
+            off += COUNT_ENTRY_BYTES;
+            meta.elem_size = decode_count(&bytes[off..off + COUNT_ENTRY_BYTES], b'E')?;
+            off += COUNT_ENTRY_BYTES;
+        }
+        SectionKind::Varray => {
+            need(off + COUNT_ENTRY_BYTES)?;
+            meta.elem_count = decode_count(&bytes[off..off + COUNT_ENTRY_BYTES], b'N')?;
+            off += COUNT_ENTRY_BYTES;
+        }
+    }
+    Ok((meta, off))
+}
+
+/// Longest section-header prefix (in bytes) that [`parse_section_prefix`]
+/// may need: type row plus two count entries.
+pub const SECTION_PREFIX_MAX: usize = SECTION_HEADER_BYTES + 2 * COUNT_ENTRY_BYTES;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn type_rows_roundtrip() {
+        for kind in [SectionKind::Inline, SectionKind::Block, SectionKind::Array, SectionKind::Varray] {
+            let row = encode_type_row(kind, b"hello world", LineStyle::Unix).unwrap();
+            assert_eq!(row.len(), 64);
+            let (k, u) = parse_type_row(&row).unwrap();
+            assert_eq!(k, kind);
+            assert_eq!(u, b"hello world");
+        }
+    }
+
+    #[test]
+    fn unknown_type_rejected() {
+        let mut row = encode_type_row(SectionKind::Block, b"x", LineStyle::Unix).unwrap();
+        row[0] = b'Q';
+        let err = parse_type_row(&row).unwrap_err();
+        assert_eq!(err.code(), 1000 + corrupt::BAD_SECTION_TYPE);
+        // 'F' is a section letter but not a *data* section letter.
+        row[0] = b'F';
+        assert!(parse_type_row(&row).is_err());
+    }
+
+    #[test]
+    fn header_lengths_match_encoded_bytes() {
+        let cases = [
+            SectionMeta::inline("i"),
+            SectionMeta::block("b", 12345),
+            SectionMeta::array("a", 10, 8),
+            SectionMeta::varray("v", 3),
+        ];
+        let sizes: Vec<u128> = vec![1, 2, 3];
+        for meta in &cases {
+            let var = if meta.kind == SectionKind::Varray { Some(&sizes[..]) } else { None };
+            let enc = encode_section_header(meta, var, LineStyle::Unix).unwrap();
+            assert_eq!(enc.len() as u128, meta.header_len(), "{:?}", meta.kind);
+        }
+    }
+
+    #[test]
+    fn section_total_lengths() {
+        // Inline: 64 + 32, never padded.
+        assert_eq!(SectionMeta::inline("x").total_len(None), 96);
+        // Block of 0 bytes: 64 + 32 + 0 + 32 pad.
+        assert_eq!(SectionMeta::block("x", 0).total_len(None), 128);
+        // Block of 25 bytes: pad 7.
+        assert_eq!(SectionMeta::block("x", 25).total_len(None), 64 + 32 + 25 + 7);
+        // Array 4 x 8 = 32 data, pad 32.
+        assert_eq!(SectionMeta::array("x", 4, 8).total_len(None), 64 + 64 + 32 + 32);
+        // Varray with sizes summing to 10: header 64 + (1+3)*32, data 10, pad 22.
+        assert_eq!(SectionMeta::varray("x", 3).total_len(Some(10)), 64 + 4 * 32 + 10 + 22);
+    }
+
+    #[test]
+    fn prefix_parse_roundtrips() {
+        let metas = [
+            SectionMeta::inline("in"),
+            SectionMeta::block("bl", 7),
+            SectionMeta::array("ar", 1000, 24),
+            SectionMeta::varray("va", 5),
+        ];
+        let sizes = vec![0u128, 1, 2, 3, 4];
+        for meta in &metas {
+            let var = if meta.kind == SectionKind::Varray { Some(&sizes[..]) } else { None };
+            let mut enc = encode_section_header(meta, var, LineStyle::Unix).unwrap();
+            enc.extend_from_slice(&[0u8; 64]); // trailing junk must not confuse the prefix parser
+            let (parsed, off) = parse_section_prefix(&enc).unwrap();
+            assert_eq!(&parsed, meta);
+            let expected_off = match meta.kind {
+                SectionKind::Inline => 64,
+                SectionKind::Block => 96,
+                SectionKind::Array => 128,
+                SectionKind::Varray => 96,
+            };
+            assert_eq!(off, expected_off);
+        }
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let meta = SectionMeta::array("a", 2, 2);
+        let enc = encode_section_header(&meta, None, LineStyle::Unix).unwrap();
+        for cut in [0, 10, 63, 64, 95, 127] {
+            assert!(parse_section_prefix(&enc[..cut]).is_err(), "cut={cut}");
+        }
+        assert!(parse_section_prefix(&enc).is_ok());
+    }
+
+    #[test]
+    fn varray_requires_matching_sizes() {
+        let meta = SectionMeta::varray("v", 3);
+        assert!(encode_section_header(&meta, None, LineStyle::Unix).is_err());
+        assert!(encode_section_header(&meta, Some(&[1, 2]), LineStyle::Unix).is_err());
+        assert!(encode_section_header(&meta, Some(&[1, 2, 3]), LineStyle::Unix).is_ok());
+    }
+}

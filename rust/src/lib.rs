@@ -1,0 +1,43 @@
+//! # scda — a minimal, serial-equivalent format for parallel I/O
+//!
+//! Rust implementation of the scda file format (Griesbach & Burstedde,
+//! 2023): a file-oriented container for parallel, partition-independent
+//! disk I/O. The file contents are invariant under linear repartition of
+//! the data before writing — indistinguishable from writing in serial —
+//! and a file can be read on any number of processes agreeing on any
+//! partition of the stored element counts.
+//!
+//! The crate is layered exactly like the specification:
+//!
+//! * [`format`] — the byte-level layout of §2 (padding, count entries, the
+//!   file header `F`, and the `I`/`B`/`A`/`V` data sections);
+//! * [`codec`] — the optional per-element compression convention of §3
+//!   (zlib/deflate + 76-column base64), built from scratch;
+//! * [`par`] — the parallel substrate: partitions (§A.1), an MPI-like
+//!   communicator abstraction, and a single shared file with positional
+//!   window I/O;
+//! * [`api`] — the functional interface of Appendix A
+//!   (`fopen`/`fwrite_*`/`fread_*`/`fclose` with collective semantics);
+//! * [`coordinator`] — checkpoint/restart management, a staged streaming
+//!   write pipeline with backpressure, partition rebalancing, and metrics;
+//! * [`runtime`] — the PJRT bridge that executes the AOT-compiled JAX/
+//!   Pallas preconditioning graphs from `artifacts/*.hlo.txt` on the I/O
+//!   hot path (with a bit-exact native fallback);
+//! * [`mesh`] — a Morton-order AMR workload generator used by examples,
+//!   tests and benchmarks.
+
+pub mod api;
+pub mod codec;
+pub mod coordinator;
+pub mod error;
+pub mod format;
+pub mod mesh;
+pub mod par;
+pub mod runtime;
+
+pub mod bench_support;
+pub mod capi;
+pub mod cli;
+pub mod testutil;
+
+pub use error::{ferror_string, Result, ScdaError, ScdaErrorKind};

@@ -1,0 +1,6 @@
+//! `scda` — the command-line front end. See `scda help`.
+
+fn main() {
+    let code = scda::cli::run(std::env::args().skip(1));
+    std::process::exit(code);
+}

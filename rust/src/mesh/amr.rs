@@ -1,0 +1,81 @@
+//! Adaptive quadtree meshes in Morton order: the synthetic stand-in for
+//! the paper's p4est/t8code workloads. A refinement indicator drives
+//! depth-first subdivision; the resulting leaf sequence *is* the
+//! space-filling-curve order, so contiguous partitions of it are exactly
+//! the "contiguous indexed partitions" scda assumes.
+
+use crate::mesh::morton::Quadrant;
+
+/// Depth-first adaptive refinement: `refine(q)` decides subdivision;
+/// leaves are appended in Morton order.
+pub fn refine_mesh(max_level: u8, refine: impl Fn(&Quadrant) -> bool) -> Vec<Quadrant> {
+    let mut leaves = Vec::new();
+    fn walk(q: Quadrant, max_level: u8, refine: &impl Fn(&Quadrant) -> bool, out: &mut Vec<Quadrant>) {
+        if q.level < max_level && refine(&q) {
+            for c in 0..4 {
+                walk(q.child(c), max_level, refine, out);
+            }
+        } else {
+            out.push(q);
+        }
+    }
+    walk(Quadrant::ROOT, max_level, &refine, &mut leaves);
+    leaves
+}
+
+/// The standard demo mesh: uniform base level plus extra refinement in an
+/// annulus around a circle (mimics a shock/interface tracker). Element
+/// count grows roughly as `4^base + ring resolution`.
+pub fn ring_mesh(base_level: u8, max_level: u8, center: (f64, f64), radius: f64) -> Vec<Quadrant> {
+    refine_mesh(max_level, |q| {
+        if q.level < base_level {
+            return true;
+        }
+        let (cx, cy) = q.center();
+        let d = ((cx - center.0).powi(2) + (cy - center.1).powi(2)).sqrt();
+        // Refine when the quadrant may intersect the circle line.
+        (d - radius).abs() < q.side() * 0.75
+    })
+}
+
+/// Verify Morton ordering (strictly ascending SFC keys) and geometric
+/// tiling (leaf areas sum to 1). Used by tests and `scda demo-write`.
+pub fn check_mesh(leaves: &[Quadrant]) -> bool {
+    let ordered = leaves.windows(2).all(|w| w[0].sfc_key() < w[1].sfc_key());
+    let area: f64 = leaves.iter().map(|q| q.side() * q.side()).sum();
+    ordered && (area - 1.0).abs() < 1e-9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_mesh_has_4_pow_level_leaves() {
+        for level in 0..=4u8 {
+            let leaves = refine_mesh(level, |_| true);
+            assert_eq!(leaves.len(), 4usize.pow(level as u32));
+            assert!(check_mesh(&leaves));
+        }
+    }
+
+    #[test]
+    fn ring_mesh_is_adaptive_ordered_and_tiling() {
+        let leaves = ring_mesh(3, 7, (0.5, 0.5), 0.3);
+        assert!(check_mesh(&leaves));
+        // Adaptive: multiple levels present.
+        let min = leaves.iter().map(|q| q.level).min().unwrap();
+        let max = leaves.iter().map(|q| q.level).max().unwrap();
+        assert!(min >= 3 && max == 7, "levels {min}..{max}");
+        // More than uniform base, less than uniform max.
+        assert!(leaves.len() > 4usize.pow(3));
+        assert!(leaves.len() < 4usize.pow(7));
+    }
+
+    #[test]
+    fn indicator_false_keeps_root() {
+        let leaves = refine_mesh(5, |_| false);
+        assert_eq!(leaves.len(), 1);
+        assert_eq!(leaves[0], Quadrant::ROOT);
+    }
+}

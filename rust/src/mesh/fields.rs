@@ -1,0 +1,124 @@
+//! Synthetic per-element field data over an AMR mesh: smooth f64/f32
+//! fields (the compressible case the precondition filter targets) and
+//! hp-style variable-size payloads (the V-section workload).
+
+use crate::mesh::morton::Quadrant;
+
+/// Sample a smooth scalar function at a quadrant center.
+pub fn smooth_scalar(q: &Quadrant) -> f64 {
+    let (x, y) = q.center();
+    (2.0 * std::f64::consts::PI * x).sin() * (3.0 * std::f64::consts::PI * y).cos()
+        + 0.1 * (8.0 * x * y)
+        + 10.0
+}
+
+/// Fixed-size payload: `k` f64 samples per element (function + simple
+/// derived quantities) — a typical conservative-variable block.
+pub fn fixed_payload(q: &Quadrant, k: usize) -> Vec<u8> {
+    let base = smooth_scalar(q);
+    let mut out = Vec::with_capacity(k * 8);
+    for j in 0..k {
+        let v = base * (1.0 + 0.001 * j as f64) + j as f64;
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+/// Fixed-size payload of `k` f32 samples — the preconditioner's design
+/// dtype (the shuffle/delta kernel works on u32 words, which is exactly
+/// one f32; f64 fields need a stride-2 variant, see DESIGN.md §Future).
+pub fn fixed_payload_f32(q: &Quadrant, k: usize) -> Vec<u8> {
+    let base = smooth_scalar(q) as f32;
+    let mut out = Vec::with_capacity(k * 4);
+    for j in 0..k {
+        let v = base * (1.0 + 0.001 * j as f32) + j as f32;
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+/// Assemble this rank's contiguous payload for a fixed-size f32 field.
+pub fn local_fixed_field_f32(leaves: &[Quadrant], range: std::ops::Range<usize>, k: usize) -> Vec<u8> {
+    let mut out = Vec::with_capacity((range.end - range.start) * k * 4);
+    for q in &leaves[range] {
+        out.extend_from_slice(&fixed_payload_f32(q, k));
+    }
+    out
+}
+
+/// hp-adaptive payload size: a degree-`p` element carries `(p+1)^2`
+/// coefficients; degree grows with refinement level (capped). This is the
+/// paper's "data of hp-adaptive element methods" varray workload.
+pub fn hp_payload_size(q: &Quadrant, max_degree: u32) -> u64 {
+    let p = (q.level as u32 + 1).min(max_degree);
+    ((p + 1) * (p + 1)) as u64 * 8
+}
+
+/// Variable-size payload: smooth coefficients of the hp expansion.
+pub fn hp_payload(q: &Quadrant, max_degree: u32) -> Vec<u8> {
+    let n = hp_payload_size(q, max_degree) as usize / 8;
+    let base = smooth_scalar(q);
+    let mut out = Vec::with_capacity(n * 8);
+    for j in 0..n {
+        // Spectral-like decay of coefficients.
+        let v = base / (1.0 + j as f64).powi(2);
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+/// Assemble this rank's contiguous payload for a fixed-size field.
+pub fn local_fixed_field(leaves: &[Quadrant], range: std::ops::Range<usize>, k: usize) -> Vec<u8> {
+    let mut out = Vec::with_capacity((range.end - range.start) * k * 8);
+    for q in &leaves[range] {
+        out.extend_from_slice(&fixed_payload(q, k));
+    }
+    out
+}
+
+/// Assemble this rank's sizes + payload for the hp varray field.
+pub fn local_hp_field(leaves: &[Quadrant], range: std::ops::Range<usize>, max_degree: u32) -> (Vec<u64>, Vec<u8>) {
+    let mut sizes = Vec::with_capacity(range.end - range.start);
+    let mut data = Vec::new();
+    for q in &leaves[range] {
+        sizes.push(hp_payload_size(q, max_degree));
+        data.extend_from_slice(&hp_payload(q, max_degree));
+    }
+    (sizes, data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::amr::ring_mesh;
+
+    #[test]
+    fn payload_sizes_consistent() {
+        let mesh = ring_mesh(2, 5, (0.5, 0.5), 0.25);
+        for q in &mesh {
+            assert_eq!(fixed_payload(q, 5).len(), 40);
+            assert_eq!(hp_payload(q, 6).len() as u64, hp_payload_size(q, 6));
+        }
+    }
+
+    #[test]
+    fn local_assembly_matches_per_element() {
+        let mesh = ring_mesh(2, 4, (0.3, 0.6), 0.2);
+        let k = 3;
+        let all = local_fixed_field(&mesh, 0..mesh.len(), k);
+        let mut manual = Vec::new();
+        for q in &mesh {
+            manual.extend_from_slice(&fixed_payload(q, k));
+        }
+        assert_eq!(all, manual);
+        let (sizes, data) = local_hp_field(&mesh, 0..mesh.len(), 5);
+        assert_eq!(sizes.len(), mesh.len());
+        assert_eq!(data.len() as u64, sizes.iter().sum::<u64>());
+    }
+
+    #[test]
+    fn smooth_field_is_deterministic() {
+        let mesh = ring_mesh(2, 4, (0.5, 0.5), 0.3);
+        assert_eq!(local_fixed_field(&mesh, 0..10, 4), local_fixed_field(&mesh, 0..10, 4));
+    }
+}

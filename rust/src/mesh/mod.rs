@@ -1,0 +1,10 @@
+//! AMR workload substrate: Morton-order quadtrees and synthetic fields —
+//! the mesh-shaped data the paper's motivating applications (p4est,
+//! t8code, ForestClaw) write through scda.
+
+pub mod amr;
+pub mod fields;
+pub mod morton;
+
+pub use amr::{check_mesh, refine_mesh, ring_mesh};
+pub use morton::Quadrant;

@@ -1,0 +1,142 @@
+//! Morton (Z-order) space-filling-curve indexing for quadtree quadrants —
+//! the "contiguous indexed partitions, such as those arising from
+//! space-filling-curve partitions" the paper names as its canonical mesh
+//! workload (p4est-style).
+
+/// Maximum refinement level representable (30 keeps 2*level+5 bits in u64).
+pub const MAX_LEVEL: u8 = 30;
+
+/// Interleave the low 32 bits of `x` and `y` (x in even bit positions).
+#[inline]
+pub fn interleave2(x: u32, y: u32) -> u64 {
+    (spread(x as u64)) | (spread(y as u64) << 1)
+}
+
+#[inline]
+fn spread(mut v: u64) -> u64 {
+    v &= 0xffff_ffff;
+    v = (v | (v << 16)) & 0x0000_ffff_0000_ffff;
+    v = (v | (v << 8)) & 0x00ff_00ff_00ff_00ff;
+    v = (v | (v << 4)) & 0x0f0f_0f0f_0f0f_0f0f;
+    v = (v | (v << 2)) & 0x3333_3333_3333_3333;
+    v = (v | (v << 1)) & 0x5555_5555_5555_5555;
+    v
+}
+
+#[inline]
+fn compact(mut v: u64) -> u32 {
+    v &= 0x5555_5555_5555_5555;
+    v = (v | (v >> 1)) & 0x3333_3333_3333_3333;
+    v = (v | (v >> 2)) & 0x0f0f_0f0f_0f0f_0f0f;
+    v = (v | (v >> 4)) & 0x00ff_00ff_00ff_00ff;
+    v = (v | (v >> 8)) & 0x0000_ffff_0000_ffff;
+    v = (v | (v >> 16)) & 0x0000_0000_ffff_ffff;
+    v as u32
+}
+
+/// Inverse of [`interleave2`].
+#[inline]
+pub fn deinterleave2(m: u64) -> (u32, u32) {
+    (compact(m), compact(m >> 1))
+}
+
+/// A quadtree quadrant addressed by its level and integer anchor
+/// coordinates on the level grid (`0 <= x, y < 2^level`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Quadrant {
+    pub x: u32,
+    pub y: u32,
+    pub level: u8,
+}
+
+impl Quadrant {
+    pub const ROOT: Quadrant = Quadrant { x: 0, y: 0, level: 0 };
+
+    /// Child `c in 0..4` in Morton order.
+    pub fn child(&self, c: u8) -> Quadrant {
+        debug_assert!(c < 4 && self.level < MAX_LEVEL);
+        Quadrant {
+            x: (self.x << 1) | (c as u32 & 1),
+            y: (self.y << 1) | ((c as u32 >> 1) & 1),
+            level: self.level + 1,
+        }
+    }
+
+    /// Total SFC ordering key: depth-first Morton position, comparable
+    /// across levels (ancestors sort before descendants' successors).
+    pub fn sfc_key(&self) -> u128 {
+        // Normalize coordinates to MAX_LEVEL resolution, then append the
+        // level so a parent sorts immediately before its first child.
+        // (The normalized Morton index needs 2 * MAX_LEVEL = 60 bits, so
+        // the level tag pushes the key into u128 territory.)
+        let shift = (MAX_LEVEL - self.level) as u32;
+        let m = interleave2(self.x << shift, self.y << shift);
+        ((m as u128) << 5) | self.level as u128
+    }
+
+    /// Center coordinates in the unit square.
+    pub fn center(&self) -> (f64, f64) {
+        let h = 1.0 / (1u64 << self.level) as f64;
+        ((self.x as f64 + 0.5) * h, (self.y as f64 + 0.5) * h)
+    }
+
+    /// Side length in the unit square.
+    pub fn side(&self) -> f64 {
+        1.0 / (1u64 << self.level) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::Rng;
+
+    #[test]
+    fn interleave_roundtrips() {
+        let mut rng = Rng::new(1);
+        for _ in 0..1000 {
+            let x = rng.next_u64() as u32;
+            let y = rng.next_u64() as u32;
+            assert_eq!(deinterleave2(interleave2(x, y)), (x, y));
+        }
+        assert_eq!(interleave2(0, 0), 0);
+        assert_eq!(interleave2(1, 0), 1);
+        assert_eq!(interleave2(0, 1), 2);
+        assert_eq!(interleave2(u32::MAX, u32::MAX), u64::MAX);
+    }
+
+    #[test]
+    fn morton_order_is_z_pattern() {
+        // At level 1 the Morton order of (x, y) anchors is
+        // (0,0), (1,0), (0,1), (1,1).
+        let keys: Vec<u128> = [(0u32, 0u32), (1, 0), (0, 1), (1, 1)]
+            .iter()
+            .map(|&(x, y)| Quadrant { x, y, level: 1 }.sfc_key())
+            .collect();
+        assert!(keys.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn children_sort_after_parent_and_before_uncle() {
+        let p = Quadrant { x: 1, y: 1, level: 2 };
+        let parent_key = p.sfc_key();
+        let mut prev = parent_key;
+        for c in 0..4 {
+            let k = p.child(c).sfc_key();
+            assert!(k > prev);
+            prev = k;
+        }
+        // Next quadrant at the parent's level.
+        let uncle = Quadrant { x: 2, y: 1, level: 2 };
+        assert!(prev < uncle.sfc_key());
+    }
+
+    #[test]
+    fn geometry() {
+        let q = Quadrant { x: 3, y: 1, level: 2 };
+        assert_eq!(q.side(), 0.25);
+        assert_eq!(q.center(), (0.875, 0.375));
+        let c = q.child(3);
+        assert_eq!((c.x, c.y, c.level), (7, 3, 3));
+    }
+}

@@ -1,0 +1,70 @@
+//! The communicator abstraction: the small set of collectives scda needs.
+//!
+//! The paper implements its API over MPI (broadcast / allgather semantics,
+//! §A.4). This trait captures exactly that surface so the format layer is
+//! oblivious to the transport; implementations are [`crate::par::serial`]
+//! (one process) and [`crate::par::thread`] (in-process ranks — the
+//! simulation substrate standing in for MPI, per DESIGN.md §1).
+//!
+//! All collective calls must be invoked by *every* rank of the
+//! communicator in the same order — exactly the MPI contract. As in the
+//! paper ("it is an unchecked runtime error if they are indeed not
+//! collective"), mismatched use is undefined (here: deadlock or panic,
+//! never memory unsafety).
+
+/// Collectives over a fixed group of `size()` ranks.
+pub trait Communicator: Send {
+    fn rank(&self) -> usize;
+    fn size(&self) -> usize;
+
+    /// Synchronize all ranks.
+    fn barrier(&self);
+
+    /// Broadcast `data` from `root` (which must pass `Some`) to all ranks.
+    fn bcast_bytes(&self, root: usize, data: Option<Vec<u8>>) -> Vec<u8>;
+
+    /// Gather one `u64` from every rank, delivered to all (MPI_Allgather).
+    fn allgather_u64(&self, value: u64) -> Vec<u64>;
+
+    /// Gather a byte buffer from every rank, delivered to all
+    /// (MPI_Allgatherv).
+    fn allgather_bytes(&self, data: Vec<u8>) -> Vec<Vec<u8>>;
+
+    /// Logical AND reduction delivered to all ranks (used to agree on
+    /// error state before touching the file, keeping failures collective).
+    fn alland(&self, value: bool) -> bool {
+        self.allgather_u64(value as u64).iter().all(|&v| v != 0)
+    }
+
+    /// Minimum reduction delivered to all ranks.
+    fn allmin_u64(&self, value: u64) -> u64 {
+        self.allgather_u64(value).into_iter().min().unwrap_or(u64::MAX)
+    }
+
+    /// Sum reduction delivered to all ranks.
+    fn allsum_u64(&self, value: u64) -> u64 {
+        self.allgather_u64(value).into_iter().sum()
+    }
+
+    /// Broadcast a `u64` from `root`.
+    fn bcast_u64(&self, root: usize, value: Option<u64>) -> u64 {
+        let bytes = self.bcast_bytes(root, value.map(|v| v.to_le_bytes().to_vec()));
+        u64::from_le_bytes(bytes.try_into().expect("bcast_u64 payload"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::par::serial::SerialComm;
+
+    #[test]
+    fn default_reductions_on_serial() {
+        let c = SerialComm::new();
+        assert!(c.alland(true));
+        assert!(!c.alland(false));
+        assert_eq!(c.allmin_u64(17), 17);
+        assert_eq!(c.allsum_u64(17), 17);
+        assert_eq!(c.bcast_u64(0, Some(5)), 5);
+    }
+}

@@ -1,0 +1,16 @@
+//! Parallel substrate: partitions (§A.1), the communicator abstraction,
+//! in-process rank simulation, and the single shared file with positional
+//! window I/O. Together these stand in for MPI + MPI I/O (see DESIGN.md
+//! §1 for why the substitution preserves the paper's claims).
+
+pub mod comm;
+pub mod partition;
+pub mod pfile;
+pub mod serial;
+pub mod thread;
+
+pub use comm::Communicator;
+pub use partition::Partition;
+pub use pfile::ParallelFile;
+pub use serial::SerialComm;
+pub use thread::{run_parallel, ThreadComm};

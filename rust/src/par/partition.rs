@@ -1,0 +1,230 @@
+//! The parallel partition of §A.1: a disjoint, ordered, rank-monotone
+//! assignment of `N` array elements to `P` processes, encoded as
+//! per-process counts `(N_q)_{<P}` with offsets `C_p = sum_{q<p} N_q`
+//! (so `C_0 = 0` and `C_P = N`), and the derived byte sizes `S_p` for
+//! variable element sizes `(E_i)`.
+
+use crate::error::{usage, Result, ScdaError};
+
+/// Per-process element counts plus precomputed offsets.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Partition {
+    counts: Vec<u64>,
+    /// `offsets[p] = C_p`; length `P + 1`, `offsets[P] = N`.
+    offsets: Vec<u64>,
+}
+
+impl Partition {
+    /// Build from per-process counts `(N_q)_{<P}` (collective input — all
+    /// ranks must pass identical arrays; see §A.2).
+    pub fn from_counts(counts: &[u64]) -> Self {
+        let mut offsets = Vec::with_capacity(counts.len() + 1);
+        let mut acc = 0u64;
+        offsets.push(0);
+        for &c in counts {
+            acc += c;
+            offsets.push(acc);
+        }
+        Partition { counts: counts.to_vec(), offsets }
+    }
+
+    /// The canonical balanced partition of `total` over `ranks` processes:
+    /// the first `total % ranks` ranks receive one extra element. This is
+    /// the partition p4est-style SFC codes use for uniform element data.
+    pub fn uniform(ranks: usize, total: u64) -> Self {
+        assert!(ranks >= 1);
+        let base = total / ranks as u64;
+        let extra = (total % ranks as u64) as usize;
+        let counts: Vec<u64> =
+            (0..ranks).map(|p| base + if p < extra { 1 } else { 0 }).collect();
+        Partition::from_counts(&counts)
+    }
+
+    /// Everything on one rank (rank 0 of `ranks`).
+    pub fn root_only(ranks: usize, total: u64) -> Self {
+        let mut counts = vec![0u64; ranks];
+        counts[0] = total;
+        Partition::from_counts(&counts)
+    }
+
+    pub fn num_ranks(&self) -> usize {
+        self.counts.len()
+    }
+
+    /// Global element count `N`.
+    pub fn total(&self) -> u64 {
+        *self.offsets.last().unwrap()
+    }
+
+    /// `N_p`.
+    pub fn count(&self, rank: usize) -> u64 {
+        self.counts[rank]
+    }
+
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// `C_p`.
+    pub fn offset(&self, rank: usize) -> u64 {
+        self.offsets[rank]
+    }
+
+    /// The element index range `[C_p, C_{p+1})` owned by `rank`.
+    pub fn local_range(&self, rank: usize) -> std::ops::Range<u64> {
+        self.offsets[rank]..self.offsets[rank + 1]
+    }
+
+    /// Owner of the global element `idx` (binary search over offsets;
+    /// when several empty ranks share an offset, the owner is the one
+    /// whose half-open range contains `idx`).
+    pub fn owner_of(&self, idx: u64) -> usize {
+        debug_assert!(idx < self.total());
+        // partition_point: first p with offsets[p+1] > idx.
+        let mut lo = 0usize;
+        let mut hi = self.counts.len() - 1;
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            if self.offsets[mid + 1] > idx {
+                hi = mid;
+            } else {
+                lo = mid + 1;
+            }
+        }
+        lo
+    }
+
+    /// Validate against a global element count (usage error group: the
+    /// reading partition "must satisfy `sum N_q = N`", §A.5.4).
+    pub fn check_total(&self, n: u64) -> Result<()> {
+        if self.total() != n {
+            return Err(ScdaError::usage(
+                usage::PARTITION_MISMATCH,
+                format!("partition sums to {} but the section holds {} elements", self.total(), n),
+            ));
+        }
+        Ok(())
+    }
+
+    /// Per-process byte counts `S_p` for fixed element size `E`:
+    /// `S_p = N_p * E` (13).
+    pub fn byte_counts_fixed(&self, elem_size: u64) -> Vec<u64> {
+        self.counts.iter().map(|&n| n * elem_size).collect()
+    }
+
+    /// Per-process byte counts `S_p = sum_{i in [C_p, C_{p+1})} E_i` (12),
+    /// computed from the *global* size array.
+    pub fn byte_counts_var(&self, elem_sizes: &[u64]) -> Result<Vec<u64>> {
+        if elem_sizes.len() as u64 != self.total() {
+            return Err(ScdaError::usage(
+                usage::PARTITION_MISMATCH,
+                format!("{} element sizes for {} elements", elem_sizes.len(), self.total()),
+            ));
+        }
+        Ok((0..self.num_ranks())
+            .map(|p| {
+                let r = self.local_range(p);
+                elem_sizes[r.start as usize..r.end as usize].iter().sum()
+            })
+            .collect())
+    }
+}
+
+/// A rebalancing *plan*: for each destination rank, the list of
+/// `(source_rank, first_global_elem, count)` transfers that assemble its
+/// new local range from the old partition. Pure index arithmetic — the
+/// coordinator uses it both for in-memory repartitioning and to derive
+/// read windows when restarting on a different process count.
+pub fn transfer_plan(old: &Partition, new: &Partition) -> Vec<Vec<(usize, u64, u64)>> {
+    assert_eq!(old.total(), new.total());
+    let mut plan = vec![Vec::new(); new.num_ranks()];
+    for dst in 0..new.num_ranks() {
+        let range = new.local_range(dst);
+        let mut at = range.start;
+        while at < range.end {
+            let src = old.owner_of(at);
+            let src_end = old.local_range(src).end;
+            let take = (range.end - at).min(src_end - at);
+            plan[dst].push((src, at, take));
+            at += take;
+        }
+    }
+    plan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::Rng;
+
+    #[test]
+    fn offsets_satisfy_eleven() {
+        // (11): C_0 = 0, C_P = N.
+        let p = Partition::from_counts(&[3, 0, 5, 2]);
+        assert_eq!(p.offset(0), 0);
+        assert_eq!(p.total(), 10);
+        assert_eq!(p.offset(3), 8);
+        assert_eq!(p.local_range(2), 3..8);
+    }
+
+    #[test]
+    fn uniform_balances() {
+        let p = Partition::uniform(4, 10);
+        assert_eq!(p.counts(), &[3, 3, 2, 2]);
+        assert_eq!(p.total(), 10);
+        let p = Partition::uniform(3, 0);
+        assert_eq!(p.counts(), &[0, 0, 0]);
+    }
+
+    #[test]
+    fn owner_lookup_with_empty_ranks() {
+        let p = Partition::from_counts(&[2, 0, 0, 3, 0, 1]);
+        assert_eq!(p.owner_of(0), 0);
+        assert_eq!(p.owner_of(1), 0);
+        assert_eq!(p.owner_of(2), 3);
+        assert_eq!(p.owner_of(4), 3);
+        assert_eq!(p.owner_of(5), 5);
+    }
+
+    #[test]
+    fn byte_counts_match_twelve_and_thirteen() {
+        let p = Partition::from_counts(&[2, 1, 0]);
+        assert_eq!(p.byte_counts_fixed(8), vec![16, 8, 0]);
+        let sizes = vec![5u64, 7, 100];
+        assert_eq!(p.byte_counts_var(&sizes).unwrap(), vec![12, 100, 0]);
+        assert!(p.byte_counts_var(&[1, 2]).is_err());
+    }
+
+    #[test]
+    fn check_total_is_usage_error() {
+        let p = Partition::from_counts(&[1, 2]);
+        assert!(p.check_total(3).is_ok());
+        let err = p.check_total(4).unwrap_err();
+        assert_eq!(err.kind(), crate::error::ScdaErrorKind::Usage);
+    }
+
+    #[test]
+    fn transfer_plan_covers_every_destination_exactly_once() {
+        let mut rng = Rng::new(99);
+        for _ in 0..100 {
+            let total = rng.range(0, 500);
+            let old_ranks = rng.range(1, 8) as usize;
+            let new_ranks = rng.range(1, 8) as usize;
+            let old = Partition::from_counts(&rng.partition(total, old_ranks));
+            let new = Partition::from_counts(&rng.partition(total, new_ranks));
+            let plan = transfer_plan(&old, &new);
+            for dst in 0..new.num_ranks() {
+                let mut covered = new.local_range(dst).start;
+                for &(src, start, count) in &plan[dst] {
+                    assert_eq!(start, covered);
+                    assert!(count > 0);
+                    // Every transferred element belongs to src in `old`.
+                    let sr = old.local_range(src);
+                    assert!(start >= sr.start && start + count <= sr.end);
+                    covered += count;
+                }
+                assert_eq!(covered, new.local_range(dst).end);
+            }
+        }
+    }
+}

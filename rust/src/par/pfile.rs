@@ -1,0 +1,194 @@
+//! One big parallel file (feature (1) of the paper): all ranks address the
+//! same file through positional reads/writes on disjoint windows. This is
+//! the POSIX stand-in for MPI I/O — `pwrite`/`pread` never touch a shared
+//! cursor, so concurrent rank windows compose without locks, and because
+//! the windows are disjoint by the partition arithmetic, the resulting
+//! bytes equal the serial write.
+
+use std::fs::{File, OpenOptions};
+use std::os::unix::fs::FileExt;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Result, ScdaError};
+use crate::par::comm::Communicator;
+
+/// A shared file handle for collective window I/O.
+#[derive(Debug)]
+pub struct ParallelFile {
+    file: File,
+    path: PathBuf,
+    writable: bool,
+}
+
+impl ParallelFile {
+    /// Collectively create (truncate) the file for writing. Rank 0 creates;
+    /// the others open after the barrier. Mirrors `scda_fopen(..., 'w')`:
+    /// "the only possibility to write to a file is to create a new one or
+    /// to overwrite an existing one" (§A.3).
+    pub fn create<C: Communicator>(comm: &C, path: &Path) -> Result<Self> {
+        let file = if comm.rank() == 0 {
+            let f = OpenOptions::new()
+                .read(true)
+                .write(true)
+                .create(true)
+                .truncate(true)
+                .open(path)
+                .map_err(|e| ScdaError::io(e, format!("creating {}", path.display())));
+            // Propagate create success/failure collectively before anyone
+            // opens, so all ranks agree on the error.
+            let ok = comm.alland(f.is_ok());
+            if !ok {
+                return Err(f.err().unwrap_or_else(|| {
+                    ScdaError::io(std::io::Error::other("peer failed"), "collective create failed")
+                }));
+            }
+            f?
+        } else {
+            let ok = comm.alland(true);
+            if !ok {
+                return Err(ScdaError::io(
+                    std::io::Error::other("root failed to create file"),
+                    format!("creating {}", path.display()),
+                ));
+            }
+            OpenOptions::new()
+                .read(true)
+                .write(true)
+                .open(path)
+                .map_err(|e| ScdaError::io(e, format!("opening {}", path.display())))?
+        };
+        Ok(ParallelFile { file, path: path.to_path_buf(), writable: true })
+    }
+
+    /// Collectively open an existing file read-only.
+    pub fn open_read<C: Communicator>(comm: &C, path: &Path) -> Result<Self> {
+        let f = OpenOptions::new().read(true).open(path);
+        let ok = comm.alland(f.is_ok());
+        if !ok {
+            return Err(match f {
+                Err(e) => ScdaError::io(e, format!("opening {}", path.display())),
+                Ok(_) => ScdaError::io(std::io::Error::other("peer failed"), "collective open failed"),
+            });
+        }
+        Ok(ParallelFile { file: f.unwrap(), path: path.to_path_buf(), writable: false })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Write `buf` at absolute `offset` (this rank's window).
+    pub fn write_at(&self, offset: u64, buf: &[u8]) -> Result<()> {
+        debug_assert!(self.writable);
+        self.file
+            .write_all_at(buf, offset)
+            .map_err(|e| ScdaError::io(e, format!("writing {} bytes at offset {offset}", buf.len())))
+    }
+
+    /// Read exactly `buf.len()` bytes at absolute `offset`.
+    pub fn read_at(&self, offset: u64, buf: &mut [u8]) -> Result<()> {
+        self.file.read_exact_at(buf, offset).map_err(|e| {
+            if e.kind() == std::io::ErrorKind::UnexpectedEof {
+                ScdaError::corrupt(
+                    crate::error::corrupt::TRUNCATED,
+                    format!("file ends before {} bytes at offset {offset}", buf.len()),
+                )
+            } else {
+                ScdaError::io(e, format!("reading {} bytes at offset {offset}", buf.len()))
+            }
+        })
+    }
+
+    /// Read `len` bytes at `offset` into a fresh buffer.
+    pub fn read_vec(&self, offset: u64, len: usize) -> Result<Vec<u8>> {
+        let mut v = vec![0u8; len];
+        self.read_at(offset, &mut v)?;
+        Ok(v)
+    }
+
+    /// File size in bytes.
+    pub fn len(&self) -> Result<u64> {
+        Ok(self.file.metadata().map_err(|e| ScdaError::io(e, "stat"))?.len())
+    }
+
+    pub fn is_empty(&self) -> Result<bool> {
+        Ok(self.len()? == 0)
+    }
+
+    /// Flush file contents to stable storage (collective close path; only
+    /// rank 0 needs to call it since all ranks share the same inode).
+    pub fn sync(&self) -> Result<()> {
+        self.file.sync_all().map_err(|e| ScdaError::io(e, "fsync"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::par::serial::SerialComm;
+    use crate::par::thread::run_parallel;
+    use std::sync::Arc;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("scda-pfile-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(format!("{name}-{}", std::process::id()))
+    }
+
+    #[test]
+    fn serial_write_read() {
+        let path = tmp("serial");
+        let c = SerialComm::new();
+        let f = ParallelFile::create(&c, &path).unwrap();
+        f.write_at(0, b"hello").unwrap();
+        f.write_at(5, b" world").unwrap();
+        assert_eq!(f.read_vec(0, 11).unwrap(), b"hello world");
+        assert_eq!(f.len().unwrap(), 11);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn disjoint_parallel_windows_compose() {
+        let path = Arc::new(tmp("parallel"));
+        let p = Arc::clone(&path);
+        run_parallel(8, move |comm| {
+            let f = ParallelFile::create(&comm, &p).unwrap();
+            // Each rank writes 100 bytes of its rank id at its window.
+            let buf = vec![comm.rank() as u8; 100];
+            f.write_at(comm.rank() as u64 * 100, &buf).unwrap();
+            comm.barrier();
+        });
+        let data = std::fs::read(&*path).unwrap();
+        assert_eq!(data.len(), 800);
+        for (i, &b) in data.iter().enumerate() {
+            assert_eq!(b as usize, i / 100);
+        }
+        std::fs::remove_file(&*path).unwrap();
+    }
+
+    #[test]
+    fn read_past_end_is_corrupt_error() {
+        let path = tmp("short");
+        let c = SerialComm::new();
+        let f = ParallelFile::create(&c, &path).unwrap();
+        f.write_at(0, b"xy").unwrap();
+        let err = f.read_vec(0, 10).unwrap_err();
+        assert_eq!(err.kind(), crate::error::ScdaErrorKind::CorruptFile);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn open_missing_file_is_io_error() {
+        let c = SerialComm::new();
+        let err = ParallelFile::open_read(&c, Path::new("/nonexistent/scda")).unwrap_err();
+        assert_eq!(err.kind(), crate::error::ScdaErrorKind::Io);
+    }
+
+    #[test]
+    fn collective_open_failure_agrees_across_ranks() {
+        let results = run_parallel(4, |comm| {
+            ParallelFile::open_read(&comm, Path::new("/nonexistent/scda")).is_err()
+        });
+        assert!(results.iter().all(|&e| e));
+    }
+}

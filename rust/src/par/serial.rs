@@ -1,0 +1,57 @@
+//! The trivial single-process communicator. Writing through it is the
+//! literal "writing in serial" of the paper's serial-equivalence claim;
+//! the T1 experiment compares its output byte-for-byte against every
+//! parallel partition.
+
+use crate::par::comm::Communicator;
+
+/// One rank, no synchronization.
+#[derive(Debug, Default, Clone)]
+pub struct SerialComm;
+
+impl SerialComm {
+    pub fn new() -> Self {
+        SerialComm
+    }
+}
+
+impl Communicator for SerialComm {
+    fn rank(&self) -> usize {
+        0
+    }
+
+    fn size(&self) -> usize {
+        1
+    }
+
+    fn barrier(&self) {}
+
+    fn bcast_bytes(&self, root: usize, data: Option<Vec<u8>>) -> Vec<u8> {
+        assert_eq!(root, 0, "serial communicator has only rank 0");
+        data.expect("root must provide broadcast data")
+    }
+
+    fn allgather_u64(&self, value: u64) -> Vec<u64> {
+        vec![value]
+    }
+
+    fn allgather_bytes(&self, data: Vec<u8>) -> Vec<Vec<u8>> {
+        vec![data]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collectives_are_identity() {
+        let c = SerialComm::new();
+        assert_eq!(c.rank(), 0);
+        assert_eq!(c.size(), 1);
+        c.barrier();
+        assert_eq!(c.bcast_bytes(0, Some(vec![1, 2, 3])), vec![1, 2, 3]);
+        assert_eq!(c.allgather_u64(9), vec![9]);
+        assert_eq!(c.allgather_bytes(vec![7]), vec![vec![7]]);
+    }
+}

@@ -1,0 +1,208 @@
+//! In-process rank simulation: `P` OS threads sharing a lock-and-condvar
+//! collective state. This is the MPI stand-in substrate (DESIGN.md §1):
+//! each thread behaves exactly like an MPI rank — same collective call
+//! discipline, same partition arithmetic, same positional file windows —
+//! so the format code above it cannot tell the difference.
+
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::par::comm::Communicator;
+
+struct Shared {
+    size: usize,
+    state: Mutex<CollectiveState>,
+    cv: Condvar,
+}
+
+struct CollectiveState {
+    // Generation-counting barrier.
+    arrived: usize,
+    generation: u64,
+    // Deposit slots for gather/bcast payloads. Each rank only ever writes
+    // its own slot, so no clearing between collectives is needed: stale
+    // values are overwritten by the next deposit before the barrier.
+    slots: Vec<Option<Vec<u8>>>,
+}
+
+/// Handle owned by one rank.
+pub struct ThreadComm {
+    rank: usize,
+    shared: Arc<Shared>,
+}
+
+impl ThreadComm {
+    /// Create handles for all ranks of a group of `size`.
+    pub fn group(size: usize) -> Vec<ThreadComm> {
+        assert!(size >= 1);
+        let shared = Arc::new(Shared {
+            size,
+            state: Mutex::new(CollectiveState { arrived: 0, generation: 0, slots: vec![None; size] }),
+            cv: Condvar::new(),
+        });
+        (0..size).map(|rank| ThreadComm { rank, shared: Arc::clone(&shared) }).collect()
+    }
+
+    fn barrier_impl(&self) {
+        let mut st = self.shared.state.lock().unwrap();
+        let gen = st.generation;
+        st.arrived += 1;
+        if st.arrived == self.shared.size {
+            st.arrived = 0;
+            st.generation += 1;
+            self.shared.cv.notify_all();
+        } else {
+            while st.generation == gen {
+                st = self.shared.cv.wait(st).unwrap();
+            }
+        }
+    }
+
+    /// Deposit this rank's payload, wait for all, and read all slots.
+    ///
+    /// Two barriers delimit the collective: the first guarantees every
+    /// deposit happened before any read; the second guarantees every read
+    /// happened before any rank can deposit into the *next* collective.
+    /// Because a rank only writes its own slot, stale values never leak.
+    fn exchange(&self, payload: Option<Vec<u8>>) -> Vec<Option<Vec<u8>>> {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.slots[self.rank] = payload;
+        }
+        self.barrier_impl();
+        let view = {
+            let st = self.shared.state.lock().unwrap();
+            st.slots.clone()
+        };
+        self.barrier_impl();
+        view
+    }
+}
+
+impl Communicator for ThreadComm {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn size(&self) -> usize {
+        self.shared.size
+    }
+
+    fn barrier(&self) {
+        self.barrier_impl();
+    }
+
+    fn bcast_bytes(&self, root: usize, data: Option<Vec<u8>>) -> Vec<u8> {
+        assert!(root < self.shared.size);
+        if self.rank == root {
+            assert!(data.is_some(), "broadcast root must provide data");
+        }
+        let view = self.exchange(if self.rank == root { data } else { None });
+        view[root].clone().expect("root deposited broadcast payload")
+    }
+
+    fn allgather_u64(&self, value: u64) -> Vec<u64> {
+        let view = self.exchange(Some(value.to_le_bytes().to_vec()));
+        view.into_iter()
+            .map(|s| u64::from_le_bytes(s.expect("all ranks deposit").try_into().unwrap()))
+            .collect()
+    }
+
+    fn allgather_bytes(&self, data: Vec<u8>) -> Vec<Vec<u8>> {
+        let view = self.exchange(Some(data));
+        view.into_iter().map(|s| s.expect("all ranks deposit")).collect()
+    }
+}
+
+/// Run `f(comm)` on `ranks` threads, one rank each; returns the per-rank
+/// results in rank order. Panics in any rank propagate.
+pub fn run_parallel<R, F>(ranks: usize, f: F) -> Vec<R>
+where
+    R: Send + 'static,
+    F: Fn(ThreadComm) -> R + Send + Sync + 'static,
+{
+    let f = Arc::new(f);
+    let comms = ThreadComm::group(ranks);
+    let mut handles = Vec::with_capacity(ranks);
+    for comm in comms {
+        let f = Arc::clone(&f);
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("scda-rank-{}", comm.rank()))
+                .spawn(move || f(comm))
+                .expect("spawn rank thread"),
+        );
+    }
+    handles
+        .into_iter()
+        .map(|h| h.join().unwrap_or_else(|e| std::panic::resume_unwind(e)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn barrier_synchronizes() {
+        static BEFORE: AtomicUsize = AtomicUsize::new(0);
+        let results = run_parallel(8, |comm| {
+            BEFORE.fetch_add(1, Ordering::SeqCst);
+            comm.barrier();
+            // After the barrier every rank observes all 8 arrivals.
+            BEFORE.load(Ordering::SeqCst)
+        });
+        assert!(results.iter().all(|&r| r == 8), "{results:?}");
+    }
+
+    #[test]
+    fn bcast_delivers_to_all() {
+        let results = run_parallel(5, |comm| {
+            let data = if comm.rank() == 2 { Some(vec![42, 43]) } else { None };
+            comm.bcast_bytes(2, data)
+        });
+        assert!(results.iter().all(|r| r == &[42, 43]));
+    }
+
+    #[test]
+    fn allgather_orders_by_rank() {
+        let results = run_parallel(6, |comm| comm.allgather_u64(comm.rank() as u64 * 10));
+        for r in &results {
+            assert_eq!(r, &[0, 10, 20, 30, 40, 50]);
+        }
+        let results = run_parallel(3, |comm| comm.allgather_bytes(vec![comm.rank() as u8; comm.rank() + 1]));
+        for r in &results {
+            assert_eq!(r, &vec![vec![0u8], vec![1, 1], vec![2, 2, 2]]);
+        }
+    }
+
+    #[test]
+    fn repeated_collectives_do_not_cross_talk() {
+        let results = run_parallel(4, |comm| {
+            let mut acc = Vec::new();
+            for round in 0..50u64 {
+                let g = comm.allgather_u64(round * 100 + comm.rank() as u64);
+                acc.push(g);
+                comm.barrier();
+                let b = comm.bcast_u64(round as usize % 4, if comm.rank() == round as usize % 4 { Some(round) } else { None });
+                assert_eq!(b, round);
+            }
+            acc
+        });
+        for r in &results {
+            for (round, g) in r.iter().enumerate() {
+                let round = round as u64;
+                assert_eq!(g, &[round * 100, round * 100 + 1, round * 100 + 2, round * 100 + 3]);
+            }
+        }
+    }
+
+    #[test]
+    fn single_rank_group_works() {
+        let results = run_parallel(1, |comm| {
+            comm.barrier();
+            comm.allgather_u64(7)
+        });
+        assert_eq!(results, vec![vec![7]]);
+    }
+}

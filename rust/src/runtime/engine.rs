@@ -1,0 +1,125 @@
+//! PJRT bridge: load the AOT-compiled JAX/Pallas graphs from
+//! `artifacts/*.hlo.txt` and execute them on the CPU PJRT client.
+//!
+//! HLO *text* is the interchange format (see python/compile/aot.py and
+//! /opt/xla-example/README.md): jax >= 0.5 emits serialized protos with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Result, ScdaError};
+
+fn xe(e: xla::Error, what: &str) -> ScdaError {
+    ScdaError::io(std::io::Error::other(format!("{e:?}")), format!("PJRT: {what}"))
+}
+
+/// One compiled graph pair for a given chunk size (u32 elements).
+struct ChunkGraphs {
+    fwd: xla::PjRtLoadedExecutable,
+    inv: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT execution engine holding all compiled preconditioner graphs.
+pub struct Engine {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    graphs: BTreeMap<usize, ChunkGraphs>,
+}
+
+impl Engine {
+    /// Discover and compile all `precond_{fwd,inv}_<N>.hlo.txt` pairs in
+    /// `artifacts_dir`. Errors if none are found — run `make artifacts`.
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| xe(e, "creating CPU client"))?;
+        let mut sizes = Vec::new();
+        let entries = std::fs::read_dir(artifacts_dir)
+            .map_err(|e| ScdaError::io(e, format!("reading {}", artifacts_dir.display())))?;
+        for entry in entries {
+            let name = entry.map_err(|e| ScdaError::io(e, "readdir"))?.file_name();
+            let name = name.to_string_lossy().into_owned();
+            if let Some(rest) = name.strip_prefix("precond_fwd_") {
+                if let Some(num) = rest.strip_suffix(".hlo.txt") {
+                    if let Ok(n) = num.parse::<usize>() {
+                        sizes.push(n);
+                    }
+                }
+            }
+        }
+        sizes.sort_unstable();
+        if sizes.is_empty() {
+            return Err(ScdaError::io(
+                std::io::Error::new(std::io::ErrorKind::NotFound, "no precond_fwd_*.hlo.txt"),
+                format!("no AOT artifacts in {} — run `make artifacts`", artifacts_dir.display()),
+            ));
+        }
+        let mut graphs = BTreeMap::new();
+        for n in sizes {
+            let fwd = Self::compile(&client, &artifacts_dir.join(format!("precond_fwd_{n}.hlo.txt")))?;
+            let inv = Self::compile(&client, &artifacts_dir.join(format!("precond_inv_{n}.hlo.txt")))?;
+            graphs.insert(n, ChunkGraphs { fwd, inv });
+        }
+        Ok(Engine { client, graphs })
+    }
+
+    fn compile(client: &xla::PjRtClient, path: &PathBuf) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .map_err(|e| xe(e, &format!("parsing {}", path.display())))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        client.compile(&comp).map_err(|e| xe(e, &format!("compiling {}", path.display())))
+    }
+
+    /// Compiled chunk sizes, ascending.
+    pub fn chunk_sizes(&self) -> Vec<usize> {
+        self.graphs.keys().copied().collect()
+    }
+
+    /// Smallest compiled chunk that holds `m` u32 values (or the largest
+    /// available if `m` exceeds all).
+    pub fn pick_chunk(&self, m: usize) -> usize {
+        for (&n, _) in self.graphs.iter() {
+            if m <= n {
+                return n;
+            }
+        }
+        *self.graphs.keys().last().unwrap()
+    }
+
+    /// Run the forward graph for exactly one compiled chunk size. `x`
+    /// must have length equal to a compiled size. Returns the flattened
+    /// `u8[4 * n]` planes (plane-major) and the byte-entropy estimate.
+    pub fn forward_chunk(&self, x: &[u32]) -> Result<(Vec<u8>, f32)> {
+        let g = self
+            .graphs
+            .get(&x.len())
+            .ok_or_else(|| ScdaError::usage(crate::error::usage::BUFFER_SIZE, "no graph for chunk size"))?;
+        let lit = xla::Literal::vec1(x);
+        let results = g.fwd.execute::<xla::Literal>(&[lit]).map_err(|e| xe(e, "forward execute"))?;
+        let tuple = results[0][0].to_literal_sync().map_err(|e| xe(e, "fetch result"))?;
+        let (planes, entropy) = tuple.to_tuple2().map_err(|e| xe(e, "untuple"))?;
+        let bytes = planes.to_vec::<u8>().map_err(|e| xe(e, "planes to_vec"))?;
+        let ent = entropy.to_vec::<f32>().map_err(|e| xe(e, "entropy to_vec"))?;
+        Ok((bytes, ent.first().copied().unwrap_or(8.0)))
+    }
+
+    /// Run the inverse graph: `planes` is `u8[4 * n]` plane-major for a
+    /// compiled chunk size `n`; returns the reconstructed `u32[n]`.
+    pub fn inverse_chunk(&self, planes: &[u8]) -> Result<Vec<u32>> {
+        let n = planes.len() / 4;
+        let g = self
+            .graphs
+            .get(&n)
+            .ok_or_else(|| ScdaError::usage(crate::error::usage::BUFFER_SIZE, "no graph for chunk size"))?;
+        let lit = xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::U8,
+            &[4, n],
+            planes,
+        )
+        .map_err(|e| xe(e, "building planes literal"))?;
+        let results = g.inv.execute::<xla::Literal>(&[lit]).map_err(|e| xe(e, "inverse execute"))?;
+        let tuple = results[0][0].to_literal_sync().map_err(|e| xe(e, "fetch result"))?;
+        let out = tuple.to_tuple1().map_err(|e| xe(e, "untuple"))?;
+        out.to_vec::<u32>().map_err(|e| xe(e, "to_vec"))
+    }
+}

@@ -1,0 +1,11 @@
+//! Runtime bridge between the rust coordinator and the AOT-compiled
+//! JAX/Pallas graphs: a PJRT CPU engine plus a bit-identical native
+//! fallback for the preconditioning transform.
+
+pub mod engine;
+pub mod precond;
+pub mod service;
+
+pub use engine::Engine;
+pub use precond::{entropy_estimate, native_forward, native_inverse, Preconditioner, CHUNK, TILE};
+pub use service::{Identity, NativeTransform, PrecondService, Transform};

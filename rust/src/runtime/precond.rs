@@ -1,0 +1,281 @@
+//! The preconditioning transform on the I/O hot path: tile-local XOR
+//! delta + byte-plane shuffle (see python/compile/kernels/shuffle_delta.py
+//! for the specification and DESIGN.md §Hardware-Adaptation for why).
+//!
+//! Two interchangeable backends produce bit-identical bytes:
+//! * [`Backend::Pjrt`] executes the AOT-compiled JAX/Pallas graphs;
+//! * [`Backend::Native`] is the hand-written Rust fallback (also used for
+//!   sub-chunk tails and when `artifacts/` is absent).
+//!
+//! Canonical stream layout for arbitrary byte payloads: the payload is
+//! split into spans of up to [`CHUNK`] u32 words; each span contributes
+//! its four byte planes (plane-major), and a trailing `len % 4` raw bytes
+//! pass through untouched. Output length always equals input length.
+
+use std::path::Path;
+
+use crate::error::Result;
+use crate::runtime::engine::Engine;
+
+/// Tile length in u32 words — must match `shuffle_delta.TILE`.
+pub const TILE: usize = 2048;
+/// Steady-state span length in u32 words — the largest AOT chunk.
+pub const CHUNK: usize = 65536;
+
+/// Execution backend for the transform.
+pub enum Backend {
+    Pjrt(Engine),
+    Native,
+}
+
+/// The preconditioner applied by the coordinator before per-element
+/// compression (and after decompression, inverted).
+pub struct Preconditioner {
+    backend: Backend,
+}
+
+impl Preconditioner {
+    /// Load the PJRT backend from `artifacts/`, falling back to the
+    /// native implementation when artifacts are missing.
+    pub fn auto(artifacts_dir: &Path) -> Self {
+        match Engine::load(artifacts_dir) {
+            Ok(engine) => Preconditioner { backend: Backend::Pjrt(engine) },
+            Err(_) => Preconditioner { backend: Backend::Native },
+        }
+    }
+
+    pub fn native() -> Self {
+        Preconditioner { backend: Backend::Native }
+    }
+
+    pub fn pjrt(artifacts_dir: &Path) -> Result<Self> {
+        Ok(Preconditioner { backend: Backend::Pjrt(Engine::load(artifacts_dir)?) })
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        match self.backend {
+            Backend::Pjrt(_) => "pjrt",
+            Backend::Native => "native",
+        }
+    }
+
+    /// Forward transform of an arbitrary byte payload. Returns the
+    /// transformed bytes (same length) and the byte-entropy estimate of
+    /// the first span (bits/byte; 8.0 = incompressible).
+    pub fn forward(&self, data: &[u8]) -> Result<(Vec<u8>, f32)> {
+        let words = data.len() / 4;
+        let tail = &data[words * 4..];
+        let mut out = Vec::with_capacity(data.len());
+        let mut entropy = None;
+        let mut at = 0usize;
+        while at < words {
+            let span = (words - at).min(CHUNK);
+            let src = &data[at * 4..(at + span) * 4];
+            let x: Vec<u32> = src.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect();
+            let (planes, ent) = match &self.backend {
+                Backend::Pjrt(engine) if span == CHUNK => engine.forward_chunk(&x)?,
+                // Sub-chunk spans: PJRT would pad to a compiled shape and
+                // burn interpret-mode cycles on padding; only worthwhile
+                // when the span fills most of the smallest graph.
+                Backend::Pjrt(engine) if 2 * span >= engine.pick_chunk(span) => {
+                    let n = engine.pick_chunk(span);
+                    let mut padded = x.clone();
+                    padded.resize(n, 0);
+                    let (full, ent) = engine.forward_chunk(&padded)?;
+                    let mut planes = Vec::with_capacity(4 * span);
+                    for k in 0..4 {
+                        planes.extend_from_slice(&full[k * n..k * n + span]);
+                    }
+                    (planes, ent)
+                }
+                _ => native_forward(&x),
+            };
+            if entropy.is_none() {
+                entropy = Some(ent);
+            }
+            out.extend_from_slice(&planes);
+            at += span;
+        }
+        out.extend_from_slice(tail);
+        debug_assert_eq!(out.len(), data.len());
+        Ok((out, entropy.unwrap_or(8.0)))
+    }
+
+    /// Exact inverse of [`Self::forward`].
+    pub fn inverse(&self, data: &[u8]) -> Result<Vec<u8>> {
+        let words = data.len() / 4;
+        let tail = &data[words * 4..];
+        let mut out = Vec::with_capacity(data.len());
+        let mut at = 0usize;
+        while at < words {
+            let span = (words - at).min(CHUNK);
+            let planes = &data[at * 4..(at + span) * 4];
+            let x: Vec<u32> = match &self.backend {
+                Backend::Pjrt(engine) if span == CHUNK => engine.inverse_chunk(planes)?,
+                Backend::Pjrt(engine) if 2 * span >= engine.pick_chunk(span) => {
+                    let n = engine.pick_chunk(span);
+                    // Re-pad plane-major columns with zeros.
+                    let mut padded = vec![0u8; 4 * n];
+                    for k in 0..4 {
+                        padded[k * n..k * n + span].copy_from_slice(&planes[k * span..(k + 1) * span]);
+                    }
+                    let mut full = engine.inverse_chunk(&padded)?;
+                    full.truncate(span);
+                    full
+                }
+                _ => native_inverse(planes, span),
+            };
+            for v in &x {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+            at += span;
+        }
+        out.extend_from_slice(tail);
+        debug_assert_eq!(out.len(), data.len());
+        Ok(out)
+    }
+}
+
+/// Native forward: tile-local XOR delta + plane split over one span.
+/// Bit-identical to the Pallas kernel (`_fwd_kernel`).
+pub fn native_forward(x: &[u32]) -> (Vec<u8>, f32) {
+    let n = x.len();
+    let mut planes = vec![0u8; 4 * n];
+    let (p0, rest) = planes.split_at_mut(n);
+    let (p1, rest) = rest.split_at_mut(n);
+    let (p2, p3) = rest.split_at_mut(n);
+    let mut prev = 0u32;
+    for (i, &v) in x.iter().enumerate() {
+        if i % TILE == 0 {
+            prev = 0;
+        }
+        let d = v ^ prev;
+        prev = v;
+        p0[i] = d as u8;
+        p1[i] = (d >> 8) as u8;
+        p2[i] = (d >> 16) as u8;
+        p3[i] = (d >> 24) as u8;
+    }
+    let ent = entropy_estimate(&planes);
+    (planes, ent)
+}
+
+/// Native inverse: plane merge + tile-local prefix-XOR scan.
+pub fn native_inverse(planes: &[u8], n: usize) -> Vec<u32> {
+    debug_assert_eq!(planes.len(), 4 * n);
+    let mut out = Vec::with_capacity(n);
+    let mut acc = 0u32;
+    for i in 0..n {
+        if i % TILE == 0 {
+            acc = 0;
+        }
+        let d = planes[i] as u32
+            | (planes[n + i] as u32) << 8
+            | (planes[2 * n + i] as u32) << 16
+            | (planes[3 * n + i] as u32) << 24;
+        acc ^= d;
+        out.push(acc);
+    }
+    out
+}
+
+/// Shannon entropy (bits/byte) over a leading sample — the native analog
+/// of `model.byte_entropy_estimate` (decision heuristic; approximate
+/// equality with the PJRT value is sufficient).
+pub fn entropy_estimate(bytes: &[u8]) -> f32 {
+    const SAMPLE: usize = 8192;
+    let s = &bytes[..bytes.len().min(SAMPLE)];
+    if s.is_empty() {
+        return 0.0;
+    }
+    let mut counts = [0u32; 256];
+    for &b in s {
+        counts[b as usize] += 1;
+    }
+    let total = s.len() as f32;
+    let mut ent = 0.0f32;
+    for &c in &counts {
+        if c > 0 {
+            let p = c as f32 / total;
+            ent -= p * p.log2();
+        }
+    }
+    ent
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::Rng;
+
+    #[test]
+    fn native_roundtrips_all_lengths() {
+        let mut rng = Rng::new(11);
+        for n in [0usize, 1, 2, TILE - 1, TILE, TILE + 1, 3 * TILE + 17] {
+            let x: Vec<u32> = (0..n).map(|_| rng.next_u64() as u32).collect();
+            let (planes, _) = native_forward(&x);
+            assert_eq!(planes.len(), 4 * n);
+            assert_eq!(native_inverse(&planes, n), x);
+        }
+    }
+
+    #[test]
+    fn preconditioner_native_roundtrips_bytes() {
+        let p = Preconditioner::native();
+        let mut rng = Rng::new(5);
+        for len in [0usize, 1, 3, 4, 5, 8191, 8192, 8193, 4 * CHUNK + 7, 4 * CHUNK * 2 + 13] {
+            let data = rng.bytes(len, 256);
+            let (t, ent) = p.forward(&data).unwrap();
+            assert_eq!(t.len(), len);
+            assert!((0.0..=8.01).contains(&ent));
+            assert_eq!(p.inverse(&t).unwrap(), data, "len {len}");
+        }
+    }
+
+    #[test]
+    fn smooth_data_transforms_compressible() {
+        // A smooth f32 field: after delta+shuffle the high-significance
+        // planes are near-constant, so deflate does strictly better than
+        // on the raw float bytes. (The entropy estimate samples the low
+        // plane and is only a go/no-go heuristic, not asserted here.)
+        let vals: Vec<f32> = (0..CHUNK).map(|i| (i as f32 * 1e-4).sin() + 10.0).collect();
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let p = Preconditioner::native();
+        let (t, _ent) = p.forward(&bytes).unwrap();
+        let z_raw = crate::codec::zlib_compress(&bytes, 6).len();
+        let z_t = crate::codec::zlib_compress(&t, 6).len();
+        assert!(
+            (z_t as f64) < 0.9 * z_raw as f64,
+            "shuffled {z_t} vs raw {z_raw} of {} input bytes",
+            bytes.len()
+        );
+    }
+
+    #[test]
+    fn tile_locality_makes_output_chunking_invariant() {
+        // The span decomposition must not change the bytes: transform of
+        // a 2.5-chunk payload equals concatenation of per-span transforms.
+        let mut rng = Rng::new(9);
+        let words = 2 * CHUNK + CHUNK / 2;
+        let x: Vec<u32> = (0..words).map(|_| rng.next_u64() as u32).collect();
+        let bytes: Vec<u8> = x.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let p = Preconditioner::native();
+        let (whole, _) = p.forward(&bytes).unwrap();
+        let mut parts = Vec::new();
+        for span in [CHUNK, CHUNK, CHUNK / 2] {
+            let at = parts.len() / 4;
+            let (t, _) = native_forward(&x[at..at + span]);
+            parts.extend_from_slice(&t);
+        }
+        assert_eq!(whole, parts);
+    }
+
+    #[test]
+    fn entropy_estimate_extremes() {
+        assert_eq!(entropy_estimate(&[]), 0.0);
+        assert_eq!(entropy_estimate(&[7u8; 4096]), 0.0);
+        let uniform: Vec<u8> = (0..8192u32).map(|i| (i % 256) as u8).collect();
+        let e = entropy_estimate(&uniform);
+        assert!((e - 8.0).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,182 @@
+//! Thread-safe access to the preconditioner: the PJRT client (and hence
+//! [`Preconditioner`]) is single-threaded by construction (`Rc` inside
+//! the xla bindings), so parallel ranks reach it through a dedicated
+//! engine thread — the same shape as a real accelerator-offload service
+//! where exactly one owner talks to the device.
+
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Mutex;
+
+use crate::error::{Result, ScdaError};
+use crate::runtime::precond::Preconditioner;
+
+/// Requests served by the engine thread.
+enum Req {
+    Fwd(Vec<u8>, Sender<Result<(Vec<u8>, f32)>>),
+    Inv(Vec<u8>, Sender<Result<Vec<u8>>>),
+}
+
+/// The abstraction checkpoint/pipeline code programs against: a forward/
+/// inverse byte transform usable from any thread.
+pub trait Transform: Send + Sync {
+    fn forward(&self, data: &[u8]) -> Result<(Vec<u8>, f32)>;
+    fn inverse(&self, data: &[u8]) -> Result<Vec<u8>>;
+    fn name(&self) -> &'static str;
+}
+
+/// The identity transform (preconditioning disabled).
+pub struct Identity;
+
+impl Transform for Identity {
+    fn forward(&self, data: &[u8]) -> Result<(Vec<u8>, f32)> {
+        Ok((data.to_vec(), 8.0))
+    }
+
+    fn inverse(&self, data: &[u8]) -> Result<Vec<u8>> {
+        Ok(data.to_vec())
+    }
+
+    fn name(&self) -> &'static str {
+        "identity"
+    }
+}
+
+/// Pure-native transform — stateless, trivially shareable.
+pub struct NativeTransform;
+
+impl Transform for NativeTransform {
+    fn forward(&self, data: &[u8]) -> Result<(Vec<u8>, f32)> {
+        // A fresh native preconditioner is free to construct.
+        Preconditioner::native().forward(data)
+    }
+
+    fn inverse(&self, data: &[u8]) -> Result<Vec<u8>> {
+        Preconditioner::native().inverse(data)
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// Channel front-end to a dedicated engine thread owning a
+/// [`Preconditioner`] (typically the PJRT backend).
+pub struct PrecondService {
+    tx: Mutex<Sender<Req>>,
+    backend: &'static str,
+}
+
+impl PrecondService {
+    /// Spawn the engine thread; `make` runs *on that thread* so the
+    /// non-Send PJRT state never crosses threads.
+    pub fn spawn(make: impl FnOnce() -> Preconditioner + Send + 'static) -> Self {
+        let (tx, rx) = channel::<Req>();
+        let (name_tx, name_rx) = channel();
+        std::thread::Builder::new()
+            .name("scda-precond".into())
+            .spawn(move || {
+                let pre = make();
+                let _ = name_tx.send(pre.backend_name());
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Req::Fwd(data, reply) => {
+                            let _ = reply.send(pre.forward(&data));
+                        }
+                        Req::Inv(data, reply) => {
+                            let _ = reply.send(pre.inverse(&data));
+                        }
+                    }
+                }
+            })
+            .expect("spawn precond service");
+        let backend = name_rx.recv().unwrap_or("unknown");
+        PrecondService { tx: Mutex::new(tx), backend }
+    }
+
+    /// Convenience: PJRT when artifacts exist, else native.
+    pub fn auto(artifacts_dir: std::path::PathBuf) -> Self {
+        Self::spawn(move || Preconditioner::auto(&artifacts_dir))
+    }
+
+    fn send(&self, req: Req) -> Result<()> {
+        self.tx
+            .lock()
+            .unwrap()
+            .send(req)
+            .map_err(|_| ScdaError::io(std::io::Error::other("engine thread gone"), "precondition service"))
+    }
+}
+
+impl Transform for PrecondService {
+    fn forward(&self, data: &[u8]) -> Result<(Vec<u8>, f32)> {
+        let (reply_tx, reply_rx) = channel();
+        self.send(Req::Fwd(data.to_vec(), reply_tx))?;
+        reply_rx
+            .recv()
+            .map_err(|_| ScdaError::io(std::io::Error::other("engine thread gone"), "precondition service"))?
+    }
+
+    fn inverse(&self, data: &[u8]) -> Result<Vec<u8>> {
+        let (reply_tx, reply_rx) = channel();
+        self.send(Req::Inv(data.to_vec(), reply_tx))?;
+        reply_rx
+            .recv()
+            .map_err(|_| ScdaError::io(std::io::Error::other("engine thread gone"), "precondition service"))?
+    }
+
+    fn name(&self) -> &'static str {
+        self.backend
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::Rng;
+    use std::sync::Arc;
+
+    #[test]
+    fn service_native_matches_direct() {
+        let svc = PrecondService::spawn(Preconditioner::native);
+        assert_eq!(svc.name(), "native");
+        let mut rng = Rng::new(77);
+        let data = rng.bytes(100_000, 256);
+        let (a, ea) = svc.forward(&data).unwrap();
+        let (b, eb) = Preconditioner::native().forward(&data).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(ea, eb);
+        assert_eq!(svc.inverse(&a).unwrap(), data);
+    }
+
+    #[test]
+    fn service_is_shareable_across_threads() {
+        let svc = Arc::new(PrecondService::spawn(Preconditioner::native));
+        let handles: Vec<_> = (0..8)
+            .map(|i| {
+                let svc = Arc::clone(&svc);
+                std::thread::spawn(move || {
+                    let mut rng = Rng::new(i);
+                    let data = rng.bytes(10_000 + i as usize, 256);
+                    let (t, _) = svc.forward(&data).unwrap();
+                    assert_eq!(svc.inverse(&t).unwrap(), data);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn identity_and_native_transforms() {
+        let data = b"hello transform".to_vec();
+        let id = Identity;
+        let (t, e) = id.forward(&data).unwrap();
+        assert_eq!(t, data);
+        assert_eq!(e, 8.0);
+        assert_eq!(id.inverse(&t).unwrap(), data);
+        let nt = NativeTransform;
+        let (t, _) = nt.forward(&data).unwrap();
+        assert_eq!(nt.inverse(&t).unwrap(), data);
+    }
+}

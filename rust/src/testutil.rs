@@ -1,0 +1,126 @@
+//! Minimal property-testing support (the build environment has no crate
+//! network, so `proptest` is unavailable; this module provides the small
+//! subset we need: a fast deterministic PRNG and helpers for generating
+//! partitions, byte buffers and section scripts).
+//!
+//! Used by unit tests, the integration property tests, and the benchmark
+//! workload generators — deterministic by seed so every reported number
+//! is reproducible.
+
+/// SplitMix64: tiny, high-quality, deterministic. Not for cryptography.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Rng { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `[0, n)`; `n > 0`.
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        // Multiply-shift rejection-free approximation is fine for tests;
+        // use widening multiply to avoid modulo bias beyond 2^-64.
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Uniform in `[lo, hi]` inclusive.
+    #[inline]
+    pub fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        lo + self.below(hi - lo + 1)
+    }
+
+    pub fn f64_unit(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.next_u64() & 1 == 1
+    }
+
+    /// `len` bytes drawn from an alphabet of `alphabet` symbols (256 for
+    /// incompressible noise, small values for compressible streams).
+    pub fn bytes(&mut self, len: usize, alphabet: u16) -> Vec<u8> {
+        debug_assert!((1..=256).contains(&(alphabet as usize)));
+        (0..len).map(|_| self.below(alphabet as u64) as u8).collect()
+    }
+
+    /// A random partition of `total` elements over `ranks` processes
+    /// (non-negative counts summing to `total`; empty ranks allowed —
+    /// the spec explicitly permits `N_p = 0`).
+    pub fn partition(&mut self, total: u64, ranks: usize) -> Vec<u64> {
+        assert!(ranks >= 1);
+        // Draw `ranks - 1` cut points with repetition, sort, take deltas.
+        let mut cuts: Vec<u64> = (0..ranks - 1).map(|_| self.below(total + 1)).collect();
+        cuts.sort_unstable();
+        let mut out = Vec::with_capacity(ranks);
+        let mut prev = 0u64;
+        for c in cuts {
+            out.push(c - prev);
+            prev = c;
+        }
+        out.push(total - prev);
+        out
+    }
+
+    /// A plausible user string (printable ASCII, length 0..=58).
+    pub fn user_string(&mut self) -> Vec<u8> {
+        let len = self.below(59) as usize;
+        (0..len).map(|_| self.range(0x20, 0x7e) as u8).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_by_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Rng::new(43);
+        assert_ne!(Rng::new(42).next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn partition_sums() {
+        let mut rng = Rng::new(7);
+        for _ in 0..200 {
+            let total = rng.below(10_000);
+            let ranks = rng.range(1, 16) as usize;
+            let p = rng.partition(total, ranks);
+            assert_eq!(p.len(), ranks);
+            assert_eq!(p.iter().sum::<u64>(), total);
+        }
+    }
+
+    #[test]
+    fn bounds_respected() {
+        let mut rng = Rng::new(1);
+        for _ in 0..1000 {
+            let v = rng.range(5, 9);
+            assert!((5..=9).contains(&v));
+            assert!(rng.below(3) < 3);
+            let u = rng.f64_unit();
+            assert!((0.0..1.0).contains(&u));
+        }
+        let s = rng.user_string();
+        assert!(s.len() <= 58);
+        assert!(s.iter().all(|b| b.is_ascii_graphic() || *b == b' '));
+    }
+}

@@ -1,0 +1,150 @@
+//! Coordinator-level checkpoint/restart: write on P_w, restart on P_r
+//! with count- and byte-balanced partitions, preconditioned and encoded
+//! fields, manifest integrity.
+
+use scda::coordinator::checkpoint::{open_checkpoint, read_checkpoint, write_checkpoint, Field, FieldPayload};
+use scda::coordinator::{by_bytes, Metrics};
+use scda::mesh::{self, fields};
+use scda::par::{run_parallel, Communicator, Partition, SerialComm};
+use scda::runtime::NativeTransform;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("scda-ckpt-test");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(format!("{name}-{}.scda", std::process::id()))
+}
+
+struct Workload {
+    n: u64,
+    rho: Vec<u8>,
+    hp_sizes: Vec<u64>,
+    hp: Vec<u8>,
+}
+
+fn workload() -> Workload {
+    let leaves = mesh::ring_mesh(3, 6, (0.5, 0.5), 0.3);
+    let n = leaves.len() as u64;
+    let rho = fields::local_fixed_field(&leaves, 0..leaves.len(), 4);
+    let (hp_sizes, hp) = fields::local_hp_field(&leaves, 0..leaves.len(), 5);
+    Workload { n, rho, hp_sizes, hp }
+}
+
+fn write_on(path: &PathBuf, ranks: usize, w: &Arc<Workload>, encode: bool, precondition: bool) {
+    let part = Arc::new(Partition::uniform(ranks, w.n));
+    let metrics = Arc::new(Metrics::new());
+    let (path, w2, part2, m2) = (path.clone(), Arc::clone(w), Arc::clone(&part), Arc::clone(&metrics));
+    run_parallel(ranks, move |comm| {
+        let r = part2.local_range(comm.rank());
+        let flds = vec![
+            Field {
+                name: "rho".into(),
+                encode,
+                precondition,
+                payload: FieldPayload::Fixed {
+                    elem_size: 32,
+                    data: w2.rho[(r.start * 32) as usize..(r.end * 32) as usize].to_vec(),
+                },
+            },
+            Field {
+                name: "hp".into(),
+                encode,
+                precondition,
+                payload: {
+                    let sizes = w2.hp_sizes[r.start as usize..r.end as usize].to_vec();
+                    let lo: u64 = w2.hp_sizes[..r.start as usize].iter().sum();
+                    let len: u64 = sizes.iter().sum();
+                    FieldPayload::Var { sizes, data: w2.hp[lo as usize..(lo + len) as usize].to_vec() }
+                },
+            },
+        ];
+        write_checkpoint(comm, &path, "test-app", 33, &part2, &flds, &NativeTransform, &m2).unwrap();
+    });
+}
+
+fn verify_on(path: &PathBuf, part: Arc<Partition>, w: &Arc<Workload>) {
+    let ranks = part.num_ranks();
+    let (path, w2) = (path.clone(), Arc::clone(w));
+    run_parallel(ranks, move |comm| {
+        let rank = comm.rank();
+        let (info, restored) = read_checkpoint(comm, &path, &part, &NativeTransform).unwrap();
+        assert_eq!((info.app.as_str(), info.step), ("test-app", 33));
+        assert_eq!(info.fields.len(), 2);
+        let r = part.local_range(rank);
+        match &restored[0].payload {
+            FieldPayload::Fixed { elem_size: 32, data } => {
+                assert_eq!(data, &w2.rho[(r.start * 32) as usize..(r.end * 32) as usize]);
+            }
+            other => panic!("bad rho payload {other:?}"),
+        }
+        match &restored[1].payload {
+            FieldPayload::Var { sizes, data } => {
+                assert_eq!(sizes, &w2.hp_sizes[r.start as usize..r.end as usize]);
+                let lo: u64 = w2.hp_sizes[..r.start as usize].iter().sum();
+                let len: u64 = sizes.iter().sum();
+                assert_eq!(data, &w2.hp[lo as usize..(lo + len) as usize]);
+            }
+            other => panic!("bad hp payload {other:?}"),
+        }
+    });
+}
+
+#[test]
+fn restart_matrix_over_ranks_and_policies() {
+    let w = Arc::new(workload());
+    for (encode, precondition) in [(false, false), (true, false), (true, true)] {
+        let path = tmp(&format!("matrix-{encode}-{precondition}"));
+        write_on(&path, 3, &w, encode, precondition);
+        scda::api::verify_file(&path).unwrap();
+        for p_r in [1usize, 2, 5] {
+            verify_on(&path, Arc::new(Partition::uniform(p_r, w.n)), &w);
+        }
+        // Byte-balanced restart partition over the skewed hp sizes.
+        verify_on(&path, Arc::new(by_bytes(&w.hp_sizes, 4)), &w);
+        std::fs::remove_file(&path).unwrap();
+    }
+}
+
+#[test]
+fn checkpoints_are_serial_equivalent() {
+    let w = Arc::new(workload());
+    let mut hashes = Vec::new();
+    for ranks in [1usize, 2, 4, 6] {
+        let path = tmp(&format!("sereq-{ranks}"));
+        write_on(&path, ranks, &w, true, true);
+        hashes.push(scda::bench_support::sha256(&std::fs::read(&path).unwrap()));
+        std::fs::remove_file(&path).unwrap();
+    }
+    assert!(hashes.windows(2).all(|h| h[0] == h[1]), "checkpoint bytes depend on job size");
+}
+
+#[test]
+fn manifest_probe_without_reading_fields() {
+    let w = Arc::new(workload());
+    let path = tmp("probe");
+    write_on(&path, 2, &w, true, false);
+    let (f, info) = open_checkpoint(SerialComm::new(), &path).unwrap();
+    f.close().unwrap();
+    assert_eq!(info.fields.len(), 2);
+    assert_eq!(info.fields[0].name, "rho");
+    assert_eq!(info.fields[0].fixed_elem, Some(32));
+    assert_eq!(info.fields[0].elem_count, w.n);
+    assert_eq!(info.fields[1].fixed_elem, None);
+    assert!(info.fields[0].encode);
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn non_checkpoint_file_rejected() {
+    let path = tmp("notckpt");
+    let mut f = scda::api::ScdaFile::create(SerialComm::new(), &path, b"plain").unwrap();
+    f.write_block(b"data", Some(b"whatever")).unwrap();
+    f.close().unwrap();
+    let err = match open_checkpoint(SerialComm::new(), &path) {
+        Err(e) => e,
+        Ok(_) => panic!("plain file accepted as checkpoint"),
+    };
+    assert_eq!(err.kind(), scda::ScdaErrorKind::CorruptFile);
+    std::fs::remove_file(&path).unwrap();
+}

@@ -1,0 +1,138 @@
+//! Property tests on coordinator invariants (hand-rolled proptest-style
+//! sweeps with `testutil::Rng`): pipeline ordering/backpressure under
+//! randomized workloads, byte-balanced rebalancing quality, write
+//! coalescing correctness against a reference file image, and
+//! checkpoint manifests as pure functions of collective inputs.
+
+use scda::coordinator::{by_bytes, map_ordered, PipelineOpts, WriteCoalescer};
+use scda::par::{Communicator, ParallelFile, Partition, SerialComm};
+use scda::testutil::Rng;
+
+#[test]
+fn prop_pipeline_is_a_pure_ordered_map() {
+    let mut rng = Rng::new(0xF00D);
+    for case in 0..20 {
+        let n = rng.below(500) as usize;
+        let workers = rng.range(1, 8) as usize;
+        let depth = rng.below(8) as usize;
+        let items: Vec<u64> = (0..n as u64).map(|_| rng.next_u64()).collect();
+        let expect: Vec<u64> = items.iter().map(|x| x.wrapping_mul(31).rotate_left(7)).collect();
+        let got: Vec<u64> = map_ordered(
+            items.into_iter(),
+            |x| x.wrapping_mul(31).rotate_left(7),
+            PipelineOpts { workers, depth },
+        )
+        .collect();
+        assert_eq!(got, expect, "case {case} workers {workers} depth {depth}");
+    }
+}
+
+#[test]
+fn prop_by_bytes_is_contiguous_complete_and_balanced() {
+    let mut rng = Rng::new(0xBEEF);
+    for _ in 0..100 {
+        let n = rng.below(2000) as usize;
+        let ranks = rng.range(1, 16) as usize;
+        // Mix of uniform and heavy-tailed sizes.
+        let sizes: Vec<u64> = (0..n)
+            .map(|_| if rng.below(10) == 0 { rng.below(10_000) } else { rng.below(50) })
+            .collect();
+        let part = by_bytes(&sizes, ranks);
+        // Complete and contiguous by construction of Partition; check totals.
+        assert_eq!(part.total(), n as u64);
+        assert_eq!(part.num_ranks(), ranks);
+        // Quality: max rank load <= ideal + max element size (the bound
+        // for contiguous linear partitions).
+        let total: u64 = sizes.iter().sum();
+        let ideal = total as f64 / ranks as f64;
+        let max_elem = sizes.iter().copied().max().unwrap_or(0);
+        for r in 0..ranks {
+            let range = part.local_range(r);
+            let load: u64 = sizes[range.start as usize..range.end as usize].iter().sum();
+            assert!(
+                load as f64 <= ideal + max_elem as f64 + 1.0,
+                "rank {r} load {load} ideal {ideal} max_elem {max_elem}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_write_coalescer_equals_direct_writes() {
+    let mut rng = Rng::new(0xC0DE);
+    let dir = std::env::temp_dir().join("scda-coalprop");
+    std::fs::create_dir_all(&dir).unwrap();
+    for case in 0..20 {
+        let comm = SerialComm::new();
+        assert_eq!(comm.rank(), 0);
+        let pa = dir.join(format!("a-{case}-{}", std::process::id()));
+        let pb = dir.join(format!("b-{case}-{}", std::process::id()));
+        let fa = ParallelFile::create(&comm, &pa).unwrap();
+        let fb = ParallelFile::create(&comm, &pb).unwrap();
+        let mut co = WriteCoalescer::new(&fa);
+        co.high_water = rng.range(64, 4096) as usize;
+        // Random writes into a 16 KiB window; sequential semantics: the
+        // coalescer must match issuing the same writes directly in order.
+        let mut n_writes = 0;
+        for _ in 0..rng.range(1, 60) {
+            let off = rng.below(16 * 1024);
+            let len = rng.range(1, 200) as usize;
+            let data = rng.bytes(len, 256);
+            co.write_at(off, &data).unwrap();
+            fb.write_at(off, &data).unwrap();
+            n_writes += 1;
+        }
+        co.flush().unwrap();
+        assert!(co.flushes <= n_writes);
+        let la = fa.len().unwrap();
+        let lb = fb.len().unwrap();
+        assert_eq!(la, lb, "case {case}");
+        if la > 0 {
+            assert_eq!(fa.read_vec(0, la as usize).unwrap(), fb.read_vec(0, lb as usize).unwrap(), "case {case}");
+        }
+        std::fs::remove_file(&pa).unwrap();
+        std::fs::remove_file(&pb).unwrap();
+    }
+}
+
+#[test]
+fn prop_partition_roundtrip_owner_consistency() {
+    // Routing invariant: owner_of is the inverse of local_range for every
+    // element, for arbitrary partitions including empty ranks.
+    let mut rng = Rng::new(0xAB);
+    for _ in 0..200 {
+        let total = rng.below(300);
+        let ranks = rng.range(1, 12) as usize;
+        let part = Partition::from_counts(&rng.partition(total, ranks));
+        for rank in 0..ranks {
+            for idx in part.local_range(rank) {
+                assert_eq!(part.owner_of(idx), rank);
+            }
+        }
+        let sum: u64 = (0..ranks).map(|r| part.count(r)).sum();
+        assert_eq!(sum, total);
+    }
+}
+
+#[test]
+fn prop_transform_stream_stability_under_chunk_reslicing() {
+    // Coordinator invariant for preconditioned payloads: transforming a
+    // concatenation element-by-element equals concatenating transforms
+    // (the whole reason checkpoints can decode per element on restart).
+    use scda::runtime::{NativeTransform, Transform};
+    let t = NativeTransform;
+    let mut rng = Rng::new(0x77);
+    for _ in 0..30 {
+        let n_elems = rng.range(1, 10) as usize;
+        let sizes: Vec<usize> = (0..n_elems).map(|_| rng.below(5000) as usize).collect();
+        let elems: Vec<Vec<u8>> = sizes.iter().map(|&s| rng.bytes(s, 256)).collect();
+        let per_elem: Vec<u8> = elems.iter().flat_map(|e| t.forward(e).unwrap().0).collect();
+        // Roundtrip element-wise.
+        let mut at = 0;
+        for e in &elems {
+            let back = t.inverse(&per_elem[at..at + e.len()]).unwrap();
+            assert_eq!(&back, e);
+            at += e.len();
+        }
+    }
+}

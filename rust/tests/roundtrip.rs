@@ -1,0 +1,409 @@
+//! End-to-end write/read roundtrips over all four section types, raw and
+//! encoded, in serial and across thread-rank groups, with read partitions
+//! differing from write partitions.
+
+use scda::api::{DataSrc, ScdaFile, SectionHeader};
+use scda::format::section::SectionKind;
+use scda::par::{run_parallel, Communicator, Partition, SerialComm};
+use scda::testutil::Rng;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("scda-roundtrip");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(format!("{name}-{}.scda", std::process::id()))
+}
+
+#[test]
+fn serial_all_section_types_raw() {
+    let path = tmp("serial-raw");
+    let mut f = ScdaFile::create(SerialComm::new(), &path, b"roundtrip test").unwrap();
+    f.write_inline(b"0123456789abcdef0123456789abcdef", Some(b"inline")).unwrap();
+    f.write_block(b"a global configuration block", Some(b"block")).unwrap();
+    let part = Partition::uniform(1, 5);
+    let data: Vec<u8> = (0..40).collect();
+    f.write_array(DataSrc::Contiguous(&data), &part, 8, Some(b"array"), false).unwrap();
+    let sizes = [3u64, 0, 7, 1, 4];
+    let vdata: Vec<u8> = (0..15).collect();
+    f.write_varray(DataSrc::Contiguous(&vdata), &part, &sizes, Some(b"varray"), false).unwrap();
+    f.close().unwrap();
+
+    // Strict structural verification of every byte.
+    assert_eq!(scda::api::verify_file(&path).unwrap(), 4);
+
+    let mut f = ScdaFile::open(SerialComm::new(), &path).unwrap();
+    assert_eq!(f.header_user_string().unwrap(), b"roundtrip test");
+
+    let h = f.read_section_header(false).unwrap();
+    assert_eq!(
+        h,
+        SectionHeader { kind: SectionKind::Inline, user: b"inline".to_vec(), elem_count: 0, elem_size: 0, decoded: false }
+    );
+    let inline = f.read_inline_data(0, true).unwrap().unwrap();
+    assert_eq!(&inline[..], b"0123456789abcdef0123456789abcdef");
+
+    let h = f.read_section_header(false).unwrap();
+    assert_eq!(h.kind, SectionKind::Block);
+    assert_eq!(h.elem_size, 28);
+    let block = f.read_block_data(0, true).unwrap().unwrap();
+    assert_eq!(block, b"a global configuration block");
+
+    let h = f.read_section_header(false).unwrap();
+    assert_eq!((h.kind, h.elem_count, h.elem_size), (SectionKind::Array, 5, 8));
+    let arr = f.read_array_data(&part, 8, true).unwrap().unwrap();
+    assert_eq!(arr, data);
+
+    let h = f.read_section_header(false).unwrap();
+    assert_eq!((h.kind, h.elem_count), (SectionKind::Varray, 5));
+    let rsizes = f.read_varray_sizes(&part).unwrap();
+    assert_eq!(rsizes, sizes);
+    let v = f.read_varray_data(&part, &rsizes, true).unwrap().unwrap();
+    assert_eq!(v, vdata);
+
+    assert!(f.at_end().unwrap());
+    f.close().unwrap();
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn serial_encoded_sections_roundtrip() {
+    let path = tmp("serial-enc");
+    let mut f = ScdaFile::create(SerialComm::new(), &path, b"encoded").unwrap();
+    let blob: Vec<u8> = b"compressible ".repeat(500);
+    f.write_block_from(0, Some(&blob), blob.len() as u64, Some(b"zblock"), true).unwrap();
+    let part = Partition::uniform(1, 16);
+    let adata: Vec<u8> = (0..16 * 100).map(|i| (i / 100) as u8).collect();
+    f.write_array(DataSrc::Contiguous(&adata), &part, 100, Some(b"zarray"), true).unwrap();
+    let vsizes: Vec<u64> = (0..16u64).map(|i| i * 10).collect();
+    let vtotal: usize = vsizes.iter().sum::<u64>() as usize;
+    let vdata: Vec<u8> = (0..vtotal).map(|i| (i % 7) as u8).collect();
+    f.write_varray(DataSrc::Contiguous(&vdata), &part, &vsizes, Some(b"zvarray"), true).unwrap();
+    f.close().unwrap();
+
+    assert_eq!(scda::api::verify_file(&path).unwrap(), 6); // 3 logical = 6 raw sections
+
+    let mut f = ScdaFile::open(SerialComm::new(), &path).unwrap();
+    let h = f.read_section_header(true).unwrap();
+    assert_eq!((h.kind, h.elem_size, h.decoded), (SectionKind::Block, blob.len() as u64, true));
+    assert_eq!(h.user, b"zblock");
+    assert_eq!(f.read_block_data(0, true).unwrap().unwrap(), blob);
+
+    let h = f.read_section_header(true).unwrap();
+    assert_eq!((h.kind, h.elem_count, h.elem_size, h.decoded), (SectionKind::Array, 16, 100, true));
+    assert_eq!(f.read_array_data(&part, 100, true).unwrap().unwrap(), adata);
+
+    let h = f.read_section_header(true).unwrap();
+    assert_eq!((h.kind, h.elem_count, h.decoded), (SectionKind::Varray, 16, true));
+    let rsizes = f.read_varray_sizes(&part).unwrap();
+    assert_eq!(rsizes, vsizes);
+    assert_eq!(f.read_varray_data(&part, &rsizes, true).unwrap().unwrap(), vdata);
+    assert!(f.at_end().unwrap());
+    f.close().unwrap();
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn encoded_sections_read_raw_when_decode_false() {
+    // Table 2, row "input 0 / compression header": the two raw sections
+    // are visible individually and readable raw.
+    let path = tmp("raw-view");
+    let mut f = ScdaFile::create(SerialComm::new(), &path, b"").unwrap();
+    let blob = b"payload".repeat(100);
+    f.write_block_from(0, Some(&blob), blob.len() as u64, Some(b"user"), true).unwrap();
+    f.close().unwrap();
+
+    let mut f = ScdaFile::open(SerialComm::new(), &path).unwrap();
+    let h = f.read_section_header(false).unwrap();
+    assert_eq!((h.kind, h.decoded), (SectionKind::Inline, false));
+    assert_eq!(h.user, b"B compressed scda 00");
+    let meta = f.read_inline_data(0, true).unwrap().unwrap();
+    assert!(meta.starts_with(b"U 700 ")); // uncompressed size entry
+    let h = f.read_section_header(false).unwrap();
+    assert_eq!((h.kind, h.decoded), (SectionKind::Block, false));
+    let raw = f.read_block_data(0, true).unwrap().unwrap();
+    assert!(raw.is_ascii()); // base64 armored
+    assert_ne!(raw, blob);
+    assert!(f.at_end().unwrap());
+    f.close().unwrap();
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn decode_true_on_plain_sections_reads_raw() {
+    // Table 2, row "input 1 / non-compression header": output false.
+    let path = tmp("decode-noop");
+    let mut f = ScdaFile::create(SerialComm::new(), &path, b"").unwrap();
+    f.write_block(b"plain", Some(b"user")).unwrap();
+    f.close().unwrap();
+    let mut f = ScdaFile::open(SerialComm::new(), &path).unwrap();
+    let h = f.read_section_header(true).unwrap();
+    assert!(!h.decoded);
+    assert_eq!(f.read_block_data(0, true).unwrap().unwrap(), b"plain");
+    f.close().unwrap();
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn parallel_write_read_different_partitions() {
+    let path = Arc::new(tmp("par"));
+    let n = 1000u64;
+    let elem = 12u64;
+    let data: Arc<Vec<u8>> = Arc::new((0..n * elem).map(|i| (i % 251) as u8).collect());
+    // Write on 4 ranks with an uneven partition.
+    let wpart = Partition::from_counts(&[100, 0, 650, 250]);
+    {
+        let path = Arc::clone(&path);
+        let data = Arc::clone(&data);
+        let wpart2 = wpart.clone();
+        run_parallel(4, move |comm| {
+            let rank = comm.rank();
+            let mut f = ScdaFile::create(comm, &*path, b"parallel").unwrap();
+            let r = wpart2.local_range(rank);
+            let local = &data[(r.start * elem) as usize..(r.end * elem) as usize];
+            f.write_array(DataSrc::Contiguous(local), &wpart2, elem, Some(b"field"), false).unwrap();
+            f.close().unwrap();
+        });
+    }
+    // Read on 7 ranks with a uniform partition; each rank checks its piece.
+    {
+        let path = Arc::clone(&path);
+        let data = Arc::clone(&data);
+        run_parallel(7, move |comm| {
+            let rank = comm.rank();
+            let rpart = Partition::uniform(7, n);
+            let mut f = ScdaFile::open(comm, &*path).unwrap();
+            let h = f.read_section_header(false).unwrap();
+            assert_eq!(h.elem_count, n);
+            let local = f.read_array_data(&rpart, elem, true).unwrap().unwrap();
+            let r = rpart.local_range(rank);
+            assert_eq!(local, &data[(r.start * elem) as usize..(r.end * elem) as usize]);
+            f.close().unwrap();
+        });
+    }
+    std::fs::remove_file(&*path).unwrap();
+}
+
+#[test]
+fn parallel_varray_with_skips_and_indirect() {
+    let path = Arc::new(tmp("par-varray"));
+    let n = 257u64;
+    let mut rng = Rng::new(2024);
+    let sizes: Arc<Vec<u64>> = Arc::new((0..n).map(|_| rng.below(40)).collect());
+    let total: u64 = sizes.iter().sum();
+    let data: Arc<Vec<u8>> = Arc::new((0..total).map(|i| (i % 13) as u8).collect());
+    let offsets: Arc<Vec<u64>> = Arc::new(
+        sizes
+            .iter()
+            .scan(0u64, |acc, &s| {
+                let o = *acc;
+                *acc += s;
+                Some(o)
+            })
+            .collect(),
+    );
+    {
+        // Write with indirect addressing on 3 ranks.
+        let (path, sizes, data, offsets) = (Arc::clone(&path), Arc::clone(&sizes), Arc::clone(&data), Arc::clone(&offsets));
+        run_parallel(3, move |comm| {
+            let rank = comm.rank();
+            let part = Partition::uniform(3, n);
+            let r = part.local_range(rank);
+            let slices: Vec<&[u8]> = (r.start..r.end)
+                .map(|i| {
+                    let o = offsets[i as usize] as usize;
+                    &data[o..o + sizes[i as usize] as usize]
+                })
+                .collect();
+            let local_sizes: Vec<u64> = sizes[r.start as usize..r.end as usize].to_vec();
+            let mut f = ScdaFile::create(comm, &*path, b"v").unwrap();
+            f.write_varray(DataSrc::Indirect(&slices), &part, &local_sizes, Some(b"hp-data"), false).unwrap();
+            f.close().unwrap();
+        });
+    }
+    {
+        // Read on 5 ranks; rank 2 skips its data (NULL read).
+        let (path, sizes, data) = (Arc::clone(&path), Arc::clone(&sizes), Arc::clone(&data));
+        run_parallel(5, move |comm| {
+            let rank = comm.rank();
+            let part = Partition::uniform(5, n);
+            let mut f = ScdaFile::open(comm, &*path).unwrap();
+            let h = f.read_section_header(false).unwrap();
+            assert_eq!(h.elem_count, n);
+            let rsizes = f.read_varray_sizes(&part).unwrap();
+            let r = part.local_range(rank);
+            assert_eq!(rsizes, &sizes[r.start as usize..r.end as usize]);
+            let want = rank != 2;
+            let out = f.read_varray_data(&part, &rsizes, want).unwrap();
+            if want {
+                let start: u64 = sizes[..r.start as usize].iter().sum();
+                let len: u64 = rsizes.iter().sum();
+                assert_eq!(out.unwrap(), &data[start as usize..(start + len) as usize]);
+            } else {
+                assert!(out.is_none());
+            }
+            f.close().unwrap();
+        });
+    }
+    std::fs::remove_file(&*path).unwrap();
+}
+
+#[test]
+fn parallel_encoded_array_roundtrip() {
+    let path = Arc::new(tmp("par-enc"));
+    let n = 64u64;
+    let elem = 512u64;
+    let data: Arc<Vec<u8>> = Arc::new((0..n * elem).map(|i| ((i / 97) % 251) as u8).collect());
+    {
+        let (path, data) = (Arc::clone(&path), Arc::clone(&data));
+        run_parallel(4, move |comm| {
+            let rank = comm.rank();
+            let part = Partition::uniform(4, n);
+            let r = part.local_range(rank);
+            let local = &data[(r.start * elem) as usize..(r.end * elem) as usize];
+            let mut f = ScdaFile::create(comm, &*path, b"enc").unwrap();
+            f.write_array(DataSrc::Contiguous(local), &part, elem, Some(b"zfield"), true).unwrap();
+            f.close().unwrap();
+        });
+    }
+    {
+        let (path, data) = (Arc::clone(&path), Arc::clone(&data));
+        run_parallel(2, move |comm| {
+            let rank = comm.rank();
+            let part = Partition::uniform(2, n);
+            let mut f = ScdaFile::open(comm, &*path).unwrap();
+            let h = f.read_section_header(true).unwrap();
+            assert!(h.decoded);
+            assert_eq!((h.elem_count, h.elem_size), (n, elem));
+            let local = f.read_array_data(&part, elem, true).unwrap().unwrap();
+            let r = part.local_range(rank);
+            assert_eq!(local, &data[(r.start * elem) as usize..(r.end * elem) as usize]);
+            f.close().unwrap();
+        });
+    }
+    std::fs::remove_file(&*path).unwrap();
+}
+
+#[test]
+fn toc_lists_logical_and_raw_views() {
+    let path = tmp("toc");
+    let mut f = ScdaFile::create(SerialComm::new(), &path, b"toc").unwrap();
+    f.write_inline(&[b'x'; 32], Some(b"one")).unwrap();
+    f.write_block_from(0, Some(b"data"), 4, Some(b"two"), true).unwrap();
+    let part = Partition::uniform(1, 3);
+    f.write_array(DataSrc::Contiguous(&[0u8; 12]), &part, 4, Some(b"three"), false).unwrap();
+    f.close().unwrap();
+
+    let mut f = ScdaFile::open(SerialComm::new(), &path).unwrap();
+    let toc = f.toc(true).unwrap();
+    assert_eq!(toc.len(), 3);
+    assert_eq!(toc[0].header.kind, SectionKind::Inline);
+    assert_eq!(toc[1].header.kind, SectionKind::Block);
+    assert!(toc[1].header.decoded);
+    assert_eq!(toc[2].header.kind, SectionKind::Array);
+    // Sections tile the file exactly.
+    let flen = std::fs::metadata(&path).unwrap().len();
+    assert_eq!(toc.last().unwrap().offset + toc.last().unwrap().byte_len, flen);
+    f.close().unwrap();
+
+    let mut f = ScdaFile::open(SerialComm::new(), &path).unwrap();
+    let raw = f.toc(false).unwrap();
+    assert_eq!(raw.len(), 4); // convention pair visible raw
+    f.close().unwrap();
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn empty_sections_roundtrip() {
+    let path = tmp("empty");
+    let mut f = ScdaFile::create(SerialComm::new(), &path, b"").unwrap();
+    f.write_block(b"", Some(b"empty block")).unwrap();
+    let part = Partition::uniform(1, 0);
+    f.write_array(DataSrc::Contiguous(&[]), &part, 8, Some(b"empty array"), false).unwrap();
+    f.write_varray(DataSrc::Contiguous(&[]), &part, &[], Some(b"empty varray"), false).unwrap();
+    // Zero-size elements in a non-empty varray.
+    let part3 = Partition::uniform(1, 3);
+    f.write_varray(DataSrc::Contiguous(&[]), &part3, &[0, 0, 0], Some(b"zeros"), false).unwrap();
+    f.close().unwrap();
+
+    assert_eq!(scda::api::verify_file(&path).unwrap(), 4);
+
+    let mut f = ScdaFile::open(SerialComm::new(), &path).unwrap();
+    let h = f.read_section_header(false).unwrap();
+    assert_eq!(h.elem_size, 0);
+    assert_eq!(f.read_block_data(0, true).unwrap().unwrap(), b"");
+    let h = f.read_section_header(false).unwrap();
+    assert_eq!(h.elem_count, 0);
+    assert_eq!(f.read_array_data(&part, 8, true).unwrap().unwrap(), b"");
+    f.read_section_header(false).unwrap();
+    let s = f.read_varray_sizes(&part).unwrap();
+    assert!(s.is_empty());
+    assert_eq!(f.read_varray_data(&part, &s, true).unwrap().unwrap(), b"");
+    f.read_section_header(false).unwrap();
+    let s = f.read_varray_sizes(&part3).unwrap();
+    assert_eq!(s, &[0, 0, 0]);
+    assert_eq!(f.read_varray_data(&part3, &s, true).unwrap().unwrap(), b"");
+    assert!(f.at_end().unwrap());
+    f.close().unwrap();
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn mime_style_files_roundtrip_and_verify() {
+    // §2.1: "The type of line break written may be chosen by the user to
+    // MIME or Unix. On reading, this choice (or lack of it) has no effect."
+    let path = tmp("mime");
+    let mut f = ScdaFile::create(SerialComm::new(), &path, b"mime style").unwrap();
+    f.set_style(scda::format::LineStyle::Mime);
+    f.write_inline(&[b'm'; 32], Some(b"inline")).unwrap();
+    f.write_block(b"carriage returns everywhere", Some(b"block")).unwrap();
+    let part = Partition::uniform(1, 6);
+    f.write_array(DataSrc::Contiguous(&[9u8; 48]), &part, 8, Some(b"arr"), true).unwrap();
+    f.write_varray(DataSrc::Contiguous(&[1, 2, 3]), &part, &[1, 1, 1, 0, 0, 0], Some(b"v"), true).unwrap();
+    f.close().unwrap();
+
+    // Strict verification accepts the MIME form.
+    assert_eq!(scda::api::verify_file(&path).unwrap(), 6);
+    // The bytes differ from a Unix-style file of the same content...
+    let mime_bytes = std::fs::read(&path).unwrap();
+    assert!(mime_bytes.windows(2).any(|w| w == b"\r\n"));
+
+    // ...but reading is style-oblivious.
+    let mut f = ScdaFile::open(SerialComm::new(), &path).unwrap();
+    let h = f.read_section_header(false).unwrap();
+    assert_eq!(h.user, b"inline");
+    assert_eq!(f.read_inline_data(0, true).unwrap().unwrap(), [b'm'; 32]);
+    f.read_section_header(false).unwrap();
+    assert_eq!(f.read_block_data(0, true).unwrap().unwrap(), b"carriage returns everywhere");
+    let h = f.read_section_header(true).unwrap();
+    assert!(h.decoded);
+    assert_eq!(f.read_array_data(&part, 8, true).unwrap().unwrap(), vec![9u8; 48]);
+    let h = f.read_section_header(true).unwrap();
+    assert!(h.decoded);
+    let sizes = f.read_varray_sizes(&part).unwrap();
+    assert_eq!(sizes, [1, 1, 1, 0, 0, 0]);
+    assert_eq!(f.read_varray_data(&part, &sizes, true).unwrap().unwrap(), vec![1, 2, 3]);
+    assert!(f.at_end().unwrap());
+    f.close().unwrap();
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn mixed_styles_within_one_file() {
+    // Nothing in the format requires a single style per file; a writer
+    // may switch styles between sections and readers must not care.
+    let path = tmp("mixed-style");
+    let mut f = ScdaFile::create(SerialComm::new(), &path, b"").unwrap();
+    f.write_block(b"unix section", Some(b"u")).unwrap();
+    f.set_style(scda::format::LineStyle::Mime);
+    f.write_block(b"mime section", Some(b"m")).unwrap();
+    f.close().unwrap();
+    assert_eq!(scda::api::verify_file(&path).unwrap(), 2);
+    let mut f = ScdaFile::open(SerialComm::new(), &path).unwrap();
+    f.read_section_header(false).unwrap();
+    assert_eq!(f.read_block_data(0, true).unwrap().unwrap(), b"unix section");
+    f.read_section_header(false).unwrap();
+    assert_eq!(f.read_block_data(0, true).unwrap().unwrap(), b"mime section");
+    f.close().unwrap();
+    std::fs::remove_file(&path).unwrap();
+}

@@ -1,0 +1,83 @@
+//! PJRT-vs-native equivalence: the AOT-compiled JAX/Pallas graphs must
+//! produce byte-identical transforms to the native fallback. Skips (with
+//! a loud message) when `artifacts/` has not been built.
+
+use scda::runtime::{native_forward, Preconditioner, CHUNK, TILE};
+use scda::testutil::Rng;
+use std::path::PathBuf;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn pjrt() -> Option<Preconditioner> {
+    match Preconditioner::pjrt(&artifacts_dir()) {
+        Ok(p) => Some(p),
+        Err(e) => {
+            eprintln!("SKIP: no AOT artifacts ({e}); run `make artifacts`");
+            None
+        }
+    }
+}
+
+#[test]
+fn pjrt_forward_matches_native() {
+    let Some(p) = pjrt() else { return };
+    assert_eq!(p.backend_name(), "pjrt");
+    let native = Preconditioner::native();
+    let mut rng = Rng::new(0xA0);
+    for len in [4 * CHUNK, 4 * CHUNK + 40, 16, 4 * TILE, 123, 0, 9 * CHUNK + 3] {
+        let data = rng.bytes(len, 256);
+        let (t_pjrt, ent_pjrt) = p.forward(&data).unwrap();
+        let (t_native, ent_native) = native.forward(&data).unwrap();
+        assert_eq!(t_pjrt, t_native, "forward bytes differ at len {len}");
+        // The entropy heuristic samples the (PJRT-side zero-padded) chunk,
+        // so exact agreement only holds for full chunks.
+        if len >= 4 * CHUNK {
+            assert!((ent_pjrt - ent_native).abs() < 0.05, "entropy {ent_pjrt} vs {ent_native}");
+        } else {
+            assert!((0.0..=8.01).contains(&ent_pjrt));
+        }
+    }
+}
+
+#[test]
+fn pjrt_inverse_matches_native_and_roundtrips() {
+    let Some(p) = pjrt() else { return };
+    let mut rng = Rng::new(0xA1);
+    for len in [4 * CHUNK, 1000, 4 * CHUNK * 2 + 17] {
+        let data = rng.bytes(len, 256);
+        let (t, _) = p.forward(&data).unwrap();
+        assert_eq!(p.inverse(&t).unwrap(), data, "pjrt roundtrip at len {len}");
+    }
+}
+
+#[test]
+fn pjrt_entropy_is_sane() {
+    let Some(p) = pjrt() else { return };
+    // Constant input -> near-zero entropy after transform.
+    let zeros = vec![0u8; 4 * CHUNK];
+    let (_, ent) = p.forward(&zeros).unwrap();
+    assert!(ent < 0.1, "constant input entropy {ent}");
+    // Uniform noise -> near 8 bits/byte.
+    let mut rng = Rng::new(0xA2);
+    let noise = rng.bytes(4 * CHUNK, 256);
+    let (_, ent) = p.forward(&noise).unwrap();
+    assert!(ent > 7.5, "noise entropy {ent}");
+}
+
+#[test]
+fn native_chunk_equals_kernel_contract() {
+    // Pin the kernel contract: d[i] = x[i] ^ x[i-1] tile-locally, planes
+    // in little-endian significance order. A hand-computed vector guards
+    // against accidental contract drift on either side of the AOT fence.
+    let x = [0x01020304u32, 0x01020305, 0xff000000];
+    let (planes, _) = native_forward(&x);
+    let n = 3;
+    assert_eq!(planes.len(), 4 * n);
+    // d = [0x01020304, 0x00000001, 0xfe020305]
+    assert_eq!(&planes[..n], &[0x04, 0x01, 0x05]); // plane 0 (LSB)
+    assert_eq!(&planes[n..2 * n], &[0x03, 0x00, 0x03]);
+    assert_eq!(&planes[2 * n..3 * n], &[0x02, 0x00, 0x02]);
+    assert_eq!(&planes[3 * n..], &[0x01, 0x00, 0xfe]);
+}

@@ -1,0 +1,211 @@
+//! T1 — the paper's core claim: "the format is designed such that the file
+//! contents are invariant under linear (i.e., unpermuted), parallel
+//! repartition of the data prior to writing. The file contents are
+//! indistinguishable from writing in serial."
+//!
+//! Property test: a randomized script of sections is written (a) in serial
+//! and (b) on every P in a set of process counts under random partitions;
+//! all resulting files must be byte-identical.
+
+use scda::api::{DataSrc, ScdaFile};
+use scda::par::{run_parallel, Communicator, Partition, SerialComm};
+use scda::testutil::Rng;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("scda-sereq");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(format!("{name}-{}.scda", std::process::id()))
+}
+
+/// One section of a randomized write script (global data + user string).
+#[derive(Debug, Clone)]
+enum Cmd {
+    Inline { data: Vec<u8>, user: Vec<u8> },
+    Block { data: Vec<u8>, user: Vec<u8>, encode: bool },
+    Array { data: Vec<u8>, n: u64, e: u64, user: Vec<u8>, encode: bool },
+    Varray { data: Vec<u8>, sizes: Vec<u64>, user: Vec<u8>, encode: bool },
+}
+
+fn random_script(rng: &mut Rng, sections: usize) -> Vec<Cmd> {
+    let mut script = Vec::new();
+    for _ in 0..sections {
+        let user = rng.user_string();
+        match rng.below(4) {
+            0 => script.push(Cmd::Inline { data: rng.bytes(32, 256), user }),
+            1 => {
+                let len = rng.below(5000) as usize;
+                script.push(Cmd::Block { data: rng.bytes(len, 64), user, encode: rng.bool() })
+            }
+            2 => {
+                let n = rng.below(300);
+                let e = rng.range(1, 64);
+                script.push(Cmd::Array {
+                    data: rng.bytes((n * e) as usize, 16),
+                    n,
+                    e,
+                    user,
+                    encode: rng.bool(),
+                })
+            }
+            _ => {
+                let n = rng.below(200);
+                let sizes: Vec<u64> = (0..n).map(|_| rng.below(100)).collect();
+                let total: u64 = sizes.iter().sum();
+                script.push(Cmd::Varray { data: rng.bytes(total as usize, 16), sizes, user, encode: rng.bool() })
+            }
+        }
+    }
+    script
+}
+
+/// Execute the script on an open file; array data is contributed by this
+/// rank's window of the given partitions (one partition per array cmd).
+fn run_script<C: scda::par::Communicator>(
+    f: &mut ScdaFile<C>,
+    script: &[Cmd],
+    parts: &[Partition],
+    rank: usize,
+) {
+    let mut pi = 0usize;
+    for cmd in script {
+        match cmd {
+            Cmd::Inline { data, user } => f.write_inline(data, Some(user)).unwrap(),
+            Cmd::Block { data, user, encode } => {
+                f.write_block_from(0, Some(data), data.len() as u64, Some(user), *encode).unwrap()
+            }
+            Cmd::Array { data, e, user, encode, .. } => {
+                let part = &parts[pi];
+                pi += 1;
+                let r = part.local_range(rank);
+                let local = &data[(r.start * e) as usize..(r.end * e) as usize];
+                f.write_array(DataSrc::Contiguous(local), part, *e, Some(user), *encode).unwrap();
+            }
+            Cmd::Varray { data, sizes, user, encode } => {
+                let part = &parts[pi];
+                pi += 1;
+                let r = part.local_range(rank);
+                let local_sizes = &sizes[r.start as usize..r.end as usize];
+                let start: u64 = sizes[..r.start as usize].iter().sum();
+                let len: u64 = local_sizes.iter().sum();
+                let local = &data[start as usize..(start + len) as usize];
+                f.write_varray(DataSrc::Contiguous(local), part, local_sizes, Some(user), *encode).unwrap();
+            }
+        }
+    }
+}
+
+/// Partitions for the script's array-ish commands under P ranks.
+fn partitions_for(rng: &mut Rng, script: &[Cmd], ranks: usize) -> Vec<Partition> {
+    script
+        .iter()
+        .filter_map(|cmd| match cmd {
+            Cmd::Array { n, .. } => Some(*n),
+            Cmd::Varray { sizes, .. } => Some(sizes.len() as u64),
+            _ => None,
+        })
+        .map(|n| Partition::from_counts(&rng.partition(n, ranks)))
+        .collect()
+}
+
+#[test]
+fn file_bytes_invariant_under_repartition() {
+    let mut rng = Rng::new(0x5cda);
+    for case in 0..6 {
+        let script = Arc::new(random_script(&mut rng, 6));
+        // Serial reference.
+        let ref_path = tmp(&format!("ref-{case}"));
+        {
+            let mut f = ScdaFile::create(SerialComm::new(), &ref_path, b"sereq").unwrap();
+            let parts = partitions_for(&mut rng, &script, 1);
+            run_script(&mut f, &script, &parts, 0);
+            f.close().unwrap();
+        }
+        let reference = std::fs::read(&ref_path).unwrap();
+        scda::api::verify_bytes(&reference).unwrap();
+
+        for ranks in [2usize, 3, 5, 8] {
+            let par_path = Arc::new(tmp(&format!("par-{case}-{ranks}")));
+            let parts = Arc::new(partitions_for(&mut rng, &script, ranks));
+            let script2 = Arc::clone(&script);
+            let pp = Arc::clone(&par_path);
+            let parts2 = Arc::clone(&parts);
+            run_parallel(ranks, move |comm| {
+                let rank = comm.rank();
+                let mut f = ScdaFile::create(comm, &*pp, b"sereq").unwrap();
+                run_script(&mut f, &script2, &parts2, rank);
+                f.close().unwrap();
+            });
+            let written = std::fs::read(&*par_path).unwrap();
+            assert_eq!(
+                written, reference,
+                "case {case}: file bytes differ between serial and P={ranks}"
+            );
+            std::fs::remove_file(&*par_path).unwrap();
+        }
+        std::fs::remove_file(&ref_path).unwrap();
+    }
+}
+
+#[test]
+fn root_placement_does_not_change_bytes() {
+    // Inline/block data may live on any root rank; the bytes must not
+    // depend on which.
+    let mut images = Vec::new();
+    for root in 0..4usize {
+        let path = Arc::new(tmp(&format!("root-{root}")));
+        let pp = Arc::clone(&path);
+        run_parallel(4, move |comm| {
+            let rank = comm.rank();
+            let mut f = ScdaFile::create(comm, &*pp, b"roots").unwrap();
+            let inline = [b'q'; 32];
+            f.write_inline_from(root, if rank == root { Some(&inline) } else { None }, Some(b"i")).unwrap();
+            let block = b"root-independent".to_vec();
+            f.write_block_from(root, if rank == root { Some(&block) } else { None }, block.len() as u64, Some(b"b"), true)
+                .unwrap();
+            f.close().unwrap();
+        });
+        images.push(std::fs::read(&*path).unwrap());
+        std::fs::remove_file(&*path).unwrap();
+    }
+    for w in images.windows(2) {
+        assert_eq!(w[0], w[1]);
+    }
+}
+
+#[test]
+fn reading_is_partition_free() {
+    // Write once on 3 ranks; read the same array on 1..=6 ranks under
+    // random partitions; reassembled bytes must match.
+    let n = 444u64;
+    let e = 7u64;
+    let mut rng = Rng::new(7777);
+    let data: Arc<Vec<u8>> = Arc::new(rng.bytes((n * e) as usize, 256));
+    let path = Arc::new(tmp("readfree"));
+    {
+        let (pp, dd) = (Arc::clone(&path), Arc::clone(&data));
+        run_parallel(3, move |comm| {
+            let part = Partition::uniform(3, n);
+            let r = part.local_range(comm.rank());
+            let local = &dd[(r.start * e) as usize..(r.end * e) as usize];
+            let mut f = ScdaFile::create(comm, &*pp, b"").unwrap();
+            f.write_array(DataSrc::Contiguous(local), &part, e, Some(b"x"), false).unwrap();
+            f.close().unwrap();
+        });
+    }
+    for ranks in 1..=6usize {
+        let part = Arc::new(Partition::from_counts(&rng.partition(n, ranks)));
+        let (pp, dd, part2) = (Arc::clone(&path), Arc::clone(&data), Arc::clone(&part));
+        let pieces = run_parallel(ranks, move |comm| {
+            let mut f = ScdaFile::open(comm, &*pp).unwrap();
+            f.read_section_header(false).unwrap();
+            let out = f.read_array_data(&part2, e, true).unwrap().unwrap();
+            f.close().unwrap();
+            out
+        });
+        let reassembled: Vec<u8> = pieces.concat();
+        assert_eq!(&reassembled, &*data, "ranks={ranks}");
+    }
+    std::fs::remove_file(&*path).unwrap();
+}
