@@ -55,4 +55,23 @@ fn main() {
         assert_eq!(model as u64, real, "model mismatch at {payload}");
     }
     println!("closed-form size model verified against real files.");
+
+    // --- encoded-section throughput (the codec pipeline's hot path) ---
+    // Quick numbers here so a single f1 run records the codec trajectory;
+    // t4 measures the same shape at full size.
+    let t = scda::bench_support::codec_bench::run_quick();
+    println!(
+        "\nF1 codec pipeline quick check ({} MiB, {} lanes): encoded write {:.0} -> {:.0} MiB/s ({:.2}x), read {:.0} -> {:.0} MiB/s ({:.2}x)",
+        t.payload_bytes >> 20,
+        t.lanes,
+        t.write_serial,
+        t.write_pooled,
+        t.write_speedup(),
+        t.read_serial,
+        t.read_pooled,
+        t.read_speedup(),
+    );
+    let json = scda::bench_support::bench_json_path();
+    t.report().write(&json).unwrap();
+    println!("wrote {}", json.display());
 }

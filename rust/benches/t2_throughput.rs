@@ -21,7 +21,16 @@ fn main() {
     let dir = std::env::temp_dir().join("scda-t2");
     std::fs::create_dir_all(&dir).unwrap();
 
-    let mut table = Table::new(&["P", "scda write MiB/s", "scda +fsync MiB/s", "scda read MiB/s", "file-per-rank write MiB/s", "files"]);
+    let mut table = Table::new(&[
+        "P",
+        "scda write MiB/s",
+        "scda +fsync MiB/s",
+        "scda read MiB/s",
+        "enc write MiB/s",
+        "enc read MiB/s",
+        "file-per-rank write MiB/s",
+        "files",
+    ]);
     for p in [1usize, 2, 4, 8, 16] {
         let part = Arc::new(Partition::uniform(p, n));
         // --- scda single-file write ---
@@ -70,6 +79,37 @@ fn main() {
             })
         };
         std::fs::remove_file(&*path).ok();
+        // --- encoded write/read: the per-element codec pipeline on every
+        // rank (each rank fans its elements out to the shared pool) ---
+        let epath = Arc::new(dir.join(format!("t2-enc-{p}.scda")));
+        let we = {
+            let (epath, payload, part) = (Arc::clone(&epath), Arc::clone(&payload), Arc::clone(&part));
+            measure(1, reps, move || {
+                let (epath, payload, part) = (Arc::clone(&epath), Arc::clone(&payload), Arc::clone(&part));
+                run_parallel(p, move |comm| {
+                    let r = part.local_range(comm.rank());
+                    let local = &payload[(r.start * elem) as usize..(r.end * elem) as usize];
+                    let mut f = ScdaFile::create(comm, &*epath, b"t2").unwrap();
+                    f.set_sync_on_close(false);
+                    f.write_array(DataSrc::Contiguous(local), &part, elem, Some(b"payload"), true).unwrap();
+                    f.close().unwrap();
+                });
+            })
+        };
+        let re = {
+            let (epath, part) = (Arc::clone(&epath), Arc::clone(&part));
+            measure(1, reps, move || {
+                let (epath, part) = (Arc::clone(&epath), Arc::clone(&part));
+                run_parallel(p, move |comm| {
+                    let mut f = ScdaFile::open(comm, &*epath).unwrap();
+                    let h = f.read_section_header(true).unwrap();
+                    assert!(h.decoded);
+                    let _ = f.read_array_data(&part, elem, true).unwrap();
+                    f.close().unwrap();
+                });
+            })
+        };
+        std::fs::remove_file(&*epath).ok();
         // --- baseline: one private file per rank (not serial-equivalent,
         // not partition-independent; P files to manage downstream) ---
         let dirb = dir.clone();
@@ -92,6 +132,8 @@ fn main() {
             format!("{:.0}", w.mib_per_s(total_bytes)),
             format!("{:.0}", wd.mib_per_s(total_bytes)),
             format!("{:.0}", r.mib_per_s(total_bytes)),
+            format!("{:.0}", we.mib_per_s(total_bytes)),
+            format!("{:.0}", re.mib_per_s(total_bytes)),
             format!("{:.0}", b.mib_per_s(total_bytes)),
             format!("1 vs {p}"),
         ]);

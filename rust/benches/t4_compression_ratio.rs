@@ -55,4 +55,34 @@ fn main() {
     table.print();
     println!("\nT4 shape check: per-element ratio approaches monolithic as elem size grows;");
     println!("the 4/3 base64 factor is the floor of the per-element overhead (paper §3.1).");
+
+    // --- codec pipeline: encoded section throughput, serial vs pooled ---
+    let t = if quick {
+        scda::bench_support::codec_bench::run_quick()
+    } else {
+        scda::bench_support::codec_bench::run(4, 32 << 20, 64 << 10, reps)
+    };
+    println!(
+        "\nT4 codec pipeline ({} MiB compressible, {} KiB elems, {} lanes):",
+        t.payload_bytes >> 20,
+        t.elem_bytes >> 10,
+        t.lanes
+    );
+    let mut pt = Table::new(&["path", "serial MiB/s", "pooled MiB/s", "speedup"]);
+    pt.row(&[
+        "encoded write_array".into(),
+        format!("{:.0}", t.write_serial),
+        format!("{:.0}", t.write_pooled),
+        format!("{:.2}x", t.write_speedup()),
+    ]);
+    pt.row(&[
+        "encoded read_array".into(),
+        format!("{:.0}", t.read_serial),
+        format!("{:.0}", t.read_pooled),
+        format!("{:.2}x", t.read_speedup()),
+    ]);
+    pt.print();
+    let json = scda::bench_support::bench_json_path();
+    t.report().write(&json).unwrap();
+    println!("wrote {}", json.display());
 }

@@ -9,6 +9,8 @@
 
 use std::path::Path;
 
+use std::sync::Arc;
+
 use crate::codec::CodecOptions;
 use crate::error::{usage, Result, ScdaError};
 use crate::format::header::{encode_file_header, parse_file_header, FileHeader};
@@ -17,12 +19,55 @@ use crate::format::padding::LineStyle;
 use crate::format::section::SectionMeta;
 use crate::par::comm::Communicator;
 use crate::par::pfile::ParallelFile;
+use crate::par::pool::CodecPool;
 
 /// Open mode, matching `scda_fopen`'s `'w'` / `'r'`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum OpenMode {
     Write,
     Read,
+}
+
+/// How `encode = true` writes and decoded reads run the per-element codec.
+#[derive(Clone, Default)]
+pub enum CodecParallel {
+    /// Strictly serial (the reference path; also the fallback the pool
+    /// paths must be bit-identical to).
+    Serial,
+    /// The process-wide shared pool ([`CodecPool::global`]) — the default.
+    #[default]
+    Shared,
+    /// A caller-owned pool (tests pin worker counts this way).
+    Pool(Arc<CodecPool>),
+}
+
+/// Split `elems` into contiguous batch ranges for the codec pool: about
+/// four batches per lane for dynamic load balance, but never batches so
+/// small that claim overhead beats compression work. Returns ranges in
+/// element order (the stitch order).
+pub(crate) fn chunk_ranges(elems: &[&[u8]], total_bytes: usize, lanes: usize) -> Vec<(usize, usize)> {
+    // Below MIN_PAR_BYTES of payload a fan-out costs more than it saves.
+    const MIN_PAR_BYTES: usize = 64 * 1024;
+    const MIN_CHUNK_BYTES: usize = 16 * 1024;
+    if elems.len() < 2 || total_bytes < MIN_PAR_BYTES || lanes < 2 {
+        return Vec::new();
+    }
+    let target = (total_bytes / (lanes * 4)).max(MIN_CHUNK_BYTES);
+    let mut out = Vec::new();
+    let mut start = 0usize;
+    let mut acc = 0usize;
+    for (i, e) in elems.iter().enumerate() {
+        acc += e.len();
+        if acc >= target {
+            out.push((start, i + 1));
+            start = i + 1;
+            acc = 0;
+        }
+    }
+    if start < elems.len() {
+        out.push((start, elems.len()));
+    }
+    out
 }
 
 /// Reader-side state: what the last `read_section_header` promised and
@@ -60,6 +105,8 @@ pub struct ScdaFile<C: Communicator> {
     pub(crate) style: LineStyle,
     /// Compression settings for `encode = true` writes.
     pub(crate) codec: CodecOptions,
+    /// Codec pool selection for encoded writes / decoded reads.
+    pub(crate) codec_par: CodecParallel,
     pub(crate) pending: Pending,
     /// Parsed file header (populated on read).
     pub(crate) header: Option<FileHeader>,
@@ -97,6 +144,7 @@ impl<C: Communicator> ScdaFile<C> {
             mode: OpenMode::Write,
             style,
             codec: CodecOptions::default(),
+            codec_par: CodecParallel::default(),
             pending: Pending::None,
             header: None,
             sync_on_close: true,
@@ -116,6 +164,7 @@ impl<C: Communicator> ScdaFile<C> {
             mode: OpenMode::Read,
             style: LineStyle::Unix,
             codec: CodecOptions::default(),
+            codec_par: CodecParallel::default(),
             pending: Pending::None,
             header: Some(header),
             sync_on_close: false,
@@ -151,6 +200,23 @@ impl<C: Communicator> ScdaFile<C> {
     pub fn set_level(&mut self, level: u8) -> &mut Self {
         self.codec.level = level.min(9);
         self
+    }
+
+    /// Configure how the per-element codec runs (serial, the shared
+    /// process pool, or a caller-owned pool). The produced and returned
+    /// bytes are identical under every choice; only wall-clock changes.
+    pub fn set_codec_parallel(&mut self, par: CodecParallel) -> &mut Self {
+        self.codec_par = par;
+        self
+    }
+
+    /// The pool to fan element batches out to, if any.
+    pub(crate) fn codec_pool(&self) -> Option<&CodecPool> {
+        match &self.codec_par {
+            CodecParallel::Serial => None,
+            CodecParallel::Shared => Some(CodecPool::global()),
+            CodecParallel::Pool(p) => Some(p.as_ref()),
+        }
     }
 
     pub fn comm(&self) -> &C {

@@ -30,7 +30,7 @@ pub mod query;
 pub mod reader;
 pub mod writer;
 
-pub use context::{OpenMode, ScdaFile};
+pub use context::{CodecParallel, OpenMode, ScdaFile};
 pub use query::{verify_bytes, verify_file, TocEntry};
 pub use reader::SectionHeader;
 pub use writer::DataSrc;

@@ -9,7 +9,7 @@
 //! (type, `N`, uncompressed `E`) is returned and the data calls inflate
 //! per element; otherwise the data is read raw.
 
-use crate::codec::frame::decode_element;
+use crate::codec::frame::{decode_element, decode_element_into, with_scratch};
 use crate::error::{corrupt, usage, Result, ScdaError};
 use crate::format::limits::*;
 use crate::format::number::{count_to_usize, decode_count};
@@ -460,13 +460,20 @@ impl<C: Communicator> ScdaFile<C> {
     /// compressed-size rows, locate its byte window via an allgather
     /// prefix, inflate each element, and verify the uncompressed sizes.
     /// Returns (local decoded payload, total compressed bytes).
+    ///
+    /// Elements are independent streams, so batches fan out to the codec
+    /// pool and the per-batch plaintexts are stitched back in element
+    /// order: the returned buffer is byte-identical to the serial decode
+    /// at any worker count. The output is assembled once at its exact
+    /// size (the sum of the recorded uncompressed sizes), one memcpy per
+    /// batch.
     fn read_compressed_elements(
         &self,
         part: &Partition,
         erows_off: u64,
         n: u64,
         want: bool,
-        expected_size: impl Fn(usize) -> u64,
+        expected_size: impl Fn(usize) -> u64 + Sync,
     ) -> Result<(Option<Vec<u8>>, u64)> {
         let rank = self.comm.rank();
         let comp_sizes = self.read_size_rows(erows_off, part.offset(rank), part.count(rank), b'E')?;
@@ -475,30 +482,57 @@ impl<C: Communicator> ScdaFile<C> {
         let my_off: u64 = sq[..rank].iter().sum();
         let total: u64 = sq.iter().sum();
         let data_off = erows_off + n * COUNT_ENTRY_BYTES as u64;
-        let out = if want {
-            let blob = self.file.read_vec(data_off + my_off, local_comp as usize)?;
-            let mut decoded = Vec::new();
-            let mut at = 0usize;
-            for (i, &cs) in comp_sizes.iter().enumerate() {
-                let elem = decode_element(&blob[at..at + cs as usize])?;
-                if elem.len() as u64 != expected_size(i) {
-                    return Err(ScdaError::corrupt(
-                        corrupt::SIZE_MISMATCH,
-                        format!(
-                            "element {i} inflated to {} bytes, metadata says {}",
-                            elem.len(),
-                            expected_size(i)
-                        ),
-                    ));
+        if !want {
+            return Ok((None, total));
+        }
+        let blob = self.file.read_vec(data_off + my_off, local_comp as usize)?;
+        // Per-element views into the blob, in element order.
+        let mut elems: Vec<&[u8]> = Vec::with_capacity(comp_sizes.len());
+        let mut at = 0usize;
+        for &cs in &comp_sizes {
+            elems.push(&blob[at..at + cs as usize]);
+            at += cs as usize;
+        }
+        let decode_chunk = |range: std::ops::Range<usize>| -> Result<Vec<u8>> {
+            with_scratch(|scratch| {
+                let mut buf = Vec::new();
+                for (i, elem) in elems[range.clone()].iter().enumerate() {
+                    let i = range.start + i;
+                    let got = decode_element_into(elem, scratch, &mut buf)?;
+                    if got as u64 != expected_size(i) {
+                        return Err(ScdaError::corrupt(
+                            corrupt::SIZE_MISMATCH,
+                            format!("element {i} inflated to {got} bytes, metadata says {}", expected_size(i)),
+                        ));
+                    }
                 }
-                decoded.extend_from_slice(&elem);
-                at += cs as usize;
-            }
-            Some(decoded)
-        } else {
-            None
+                Ok(buf)
+            })
         };
-        Ok((out, total))
+        let pool = self.codec_pool().filter(|p| p.lanes() > 1);
+        let chunks = match pool {
+            Some(p) => super::context::chunk_ranges(&elems, local_comp as usize, p.lanes()),
+            None => Vec::new(),
+        };
+        let parts: Vec<Result<Vec<u8>>> = if chunks.len() <= 1 {
+            vec![decode_chunk(0..elems.len())]
+        } else {
+            pool.unwrap().run_ordered(chunks.len(), |ci| {
+                let (start, end) = chunks[ci];
+                decode_chunk(start..end)
+            })
+        };
+        // Errors surface in element order, matching the serial path.
+        let mut bufs = Vec::with_capacity(parts.len());
+        for p in parts {
+            bufs.push(p?);
+        }
+        let total_out: usize = bufs.iter().map(|b| b.len()).sum();
+        let mut decoded = Vec::with_capacity(total_out);
+        for b in &bufs {
+            decoded.extend_from_slice(b);
+        }
+        Ok((Some(decoded), total))
     }
 }
 

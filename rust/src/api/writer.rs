@@ -11,7 +11,7 @@
 //! * rank 0 writes the final data padding, whose bytes depend only on the
 //!   total data length and the globally last data byte (gathered).
 
-use crate::codec::frame::encode_element;
+use crate::codec::frame::{encode_element, encode_element_into, with_scratch};
 use crate::error::{usage, Result, ScdaError};
 use crate::format::limits::*;
 use crate::format::number::encode_count;
@@ -19,6 +19,8 @@ use crate::format::padding::pad_data;
 use crate::format::section::{encode_type_row, SectionKind, SectionMeta};
 use crate::par::comm::Communicator;
 use crate::par::partition::Partition;
+
+use super::context::chunk_ranges;
 
 use super::context::{OpenMode, Pending, ScdaFile};
 
@@ -63,6 +65,29 @@ impl<'a> DataSrc<'a> {
             }
         }
         Ok(())
+    }
+
+    /// The per-element views, in element order (borrowing `self`'s data);
+    /// the unit of work the codec pipeline fans out.
+    fn element_slices(&self, sizes: impl Iterator<Item = u64>) -> Vec<&'a [u8]> {
+        match self {
+            DataSrc::Contiguous(b) => {
+                let mut out = Vec::new();
+                let mut at = 0usize;
+                for s in sizes {
+                    let s = s as usize;
+                    out.push(&b[at..at + s]);
+                    at += s;
+                }
+                out
+            }
+            DataSrc::Indirect(parts) => {
+                for (p, s) in parts.iter().zip(sizes) {
+                    debug_assert_eq!(p.len() as u64, s, "indirect part length disagrees with declared size");
+                }
+                parts.to_vec()
+            }
+        }
     }
 }
 
@@ -344,20 +369,62 @@ impl<C: Communicator> ScdaFile<C> {
 
     /// Compress each local element individually (§3.1); returns the
     /// compressed sizes and the concatenated compressed payload.
+    ///
+    /// Elements are independent streams, so batches fan out to the codec
+    /// pool and the per-batch outputs are stitched back *in element
+    /// order*: the blob — and therefore the file bytes — are identical to
+    /// the serial path at any worker count (the serial-equivalence
+    /// invariant, extended to the codec layer). The blob is allocated
+    /// once at its exact final size after the batch lengths are known, so
+    /// stitching is one memcpy per batch with no reallocation.
     fn encode_local_elements(
         &self,
         data: &DataSrc<'_>,
         sizes: impl Iterator<Item = u64>,
     ) -> Result<(Vec<u64>, Vec<u8>)> {
-        let mut out_sizes = Vec::new();
-        let mut blob = Vec::new();
         let codec = self.codec;
-        data.for_each_element(sizes, |elem| {
-            let enc = encode_element(elem, codec);
-            out_sizes.push(enc.len() as u64);
-            blob.extend_from_slice(&enc);
-            Ok(())
-        })?;
+        let elems = data.element_slices(sizes);
+        let total_in: usize = elems.iter().map(|e| e.len()).sum();
+        let pool = self.codec_pool().filter(|p| p.lanes() > 1);
+        let chunks = match pool {
+            Some(p) => chunk_ranges(&elems, total_in, p.lanes()),
+            None => Vec::new(),
+        };
+        if chunks.len() <= 1 {
+            // Serial path (also taken for payloads too small to amortize
+            // a fan-out): same code per element, same bytes.
+            let mut out_sizes = Vec::with_capacity(elems.len());
+            let mut blob = Vec::with_capacity(total_in / 2 + 64 * elems.len().max(1));
+            with_scratch(|scratch| {
+                for elem in &elems {
+                    let before = blob.len();
+                    encode_element_into(elem, codec, scratch, &mut blob);
+                    out_sizes.push((blob.len() - before) as u64);
+                }
+            });
+            return Ok((out_sizes, blob));
+        }
+        let pool = pool.unwrap();
+        let parts = pool.run_ordered(chunks.len(), |ci| {
+            let (start, end) = chunks[ci];
+            with_scratch(|scratch| {
+                let mut sizes = Vec::with_capacity(end - start);
+                let mut buf = Vec::new();
+                for elem in &elems[start..end] {
+                    let before = buf.len();
+                    encode_element_into(elem, codec, scratch, &mut buf);
+                    sizes.push((buf.len() - before) as u64);
+                }
+                (buf, sizes)
+            })
+        });
+        let total_out: usize = parts.iter().map(|(b, _)| b.len()).sum();
+        let mut blob = Vec::with_capacity(total_out);
+        let mut out_sizes = Vec::with_capacity(elems.len());
+        for (buf, sizes) in parts {
+            blob.extend_from_slice(&buf);
+            out_sizes.extend_from_slice(&sizes);
+        }
         Ok((out_sizes, blob))
     }
 

@@ -126,6 +126,242 @@ pub fn quick() -> bool {
     std::env::var_os("SCDA_BENCH_QUICK").is_some()
 }
 
+// ---------------------------------------------------------------------
+// Machine-readable bench output (offline environment: no serde — a
+// minimal JSON emitter suffices for the flat report shape).
+// ---------------------------------------------------------------------
+
+/// A JSON scalar for [`BenchReport`] fields.
+#[derive(Debug, Clone)]
+pub enum JsonVal {
+    Num(f64),
+    Int(i64),
+    Str(String),
+    Bool(bool),
+}
+
+impl JsonVal {
+    fn render(&self) -> String {
+        match self {
+            // JSON has no NaN/Inf; clamp to null.
+            JsonVal::Num(v) if !v.is_finite() => "null".into(),
+            JsonVal::Num(v) => format!("{v:.3}"),
+            JsonVal::Int(v) => v.to_string(),
+            JsonVal::Str(s) => {
+                let mut out = String::with_capacity(s.len() + 2);
+                out.push('"');
+                for c in s.chars() {
+                    match c {
+                        '"' => out.push_str("\\\""),
+                        '\\' => out.push_str("\\\\"),
+                        '\n' => out.push_str("\\n"),
+                        '\r' => out.push_str("\\r"),
+                        '\t' => out.push_str("\\t"),
+                        c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+                        c => out.push(c),
+                    }
+                }
+                out.push('"');
+                out
+            }
+            JsonVal::Bool(b) => b.to_string(),
+        }
+    }
+}
+
+fn render_fields(fields: &[(String, JsonVal)], indent: &str) -> String {
+    let inner: Vec<String> =
+        fields.iter().map(|(k, v)| format!("{indent}{}: {}", JsonVal::Str(k.clone()).render(), v.render())).collect();
+    inner.join(",\n")
+}
+
+/// One benchmark report: top-level metadata plus a flat list of entries,
+/// written as pretty-printed JSON so perf trajectories can be tracked
+/// across PRs (`BENCH_codec.json`).
+#[derive(Debug, Default)]
+pub struct BenchReport {
+    pub bench: String,
+    pub meta: Vec<(String, JsonVal)>,
+    pub entries: Vec<Vec<(String, JsonVal)>>,
+}
+
+impl BenchReport {
+    pub fn new(bench: &str) -> Self {
+        BenchReport { bench: bench.to_string(), meta: Vec::new(), entries: Vec::new() }
+    }
+
+    pub fn meta(&mut self, key: &str, val: JsonVal) -> &mut Self {
+        self.meta.push((key.to_string(), val));
+        self
+    }
+
+    pub fn entry(&mut self, fields: Vec<(&str, JsonVal)>) -> &mut Self {
+        self.entries.push(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect());
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::from("{\n");
+        out.push_str(&format!("  \"bench\": {},\n", JsonVal::Str(self.bench.clone()).render()));
+        if !self.meta.is_empty() {
+            out.push_str(&render_fields(&self.meta, "  "));
+            out.push_str(",\n");
+        }
+        out.push_str("  \"entries\": [\n");
+        let rows: Vec<String> =
+            self.entries.iter().map(|e| format!("    {{\n{}\n    }}", render_fields(e, "      "))).collect();
+        out.push_str(&rows.join(",\n"));
+        out.push_str("\n  ]\n}\n");
+        out
+    }
+
+    /// Write to `path`, creating parent directories as needed.
+    pub fn write(&self, path: &std::path::Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, self.render())
+    }
+}
+
+/// Where codec bench numbers land (`SCDA_BENCH_JSON` overrides).
+pub fn bench_json_path() -> std::path::PathBuf {
+    std::env::var_os("SCDA_BENCH_JSON")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| std::path::PathBuf::from("BENCH_codec.json"))
+}
+
+/// Encoded write/read throughput of the per-element codec pipeline,
+/// serial vs pooled — the perf-trajectory numbers this PR's acceptance
+/// criterion tracks. Shared by the f1/t4 benches and the ignored-by-
+/// default smoke test so every consumer reports the same shape.
+pub mod codec_bench {
+    use super::{measure, JsonVal};
+    use crate::api::{CodecParallel, DataSrc, ScdaFile};
+    use crate::par::{CodecPool, Partition, SerialComm};
+    use std::sync::Arc;
+
+    /// Median MiB/s (of uncompressed payload) for one configuration.
+    #[derive(Debug, Clone)]
+    pub struct CodecThroughput {
+        pub lanes: usize,
+        pub payload_bytes: u64,
+        pub elem_bytes: u64,
+        pub write_serial: f64,
+        pub write_pooled: f64,
+        pub read_serial: f64,
+        pub read_pooled: f64,
+    }
+
+    impl CodecThroughput {
+        pub fn write_speedup(&self) -> f64 {
+            self.write_pooled / self.write_serial
+        }
+
+        pub fn read_speedup(&self) -> f64 {
+            self.read_pooled / self.read_serial
+        }
+
+        /// The standard `BENCH_codec.json` report for these numbers.
+        pub fn report(&self) -> super::BenchReport {
+            let mut r = super::BenchReport::new("codec");
+            r.meta("quick", JsonVal::Bool(super::quick()))
+                .meta("lanes", JsonVal::Int(self.lanes as i64))
+                .meta("payload_bytes", JsonVal::Int(self.payload_bytes as i64))
+                .meta("elem_bytes", JsonVal::Int(self.elem_bytes as i64));
+            for (name, serial, pooled) in [
+                ("encoded_write", self.write_serial, self.write_pooled),
+                ("encoded_read", self.read_serial, self.read_pooled),
+            ] {
+                r.entry(vec![
+                    ("name", JsonVal::Str(name.into())),
+                    ("serial_mib_per_s", JsonVal::Num(serial)),
+                    ("pooled_mib_per_s", JsonVal::Num(pooled)),
+                    ("speedup", JsonVal::Num(pooled / serial)),
+                ]);
+            }
+            r
+        }
+    }
+
+    /// A compressible payload (the convention's favorable case: deflate
+    /// does real work, so the codec — not the disk — is the bottleneck).
+    pub fn compressible_payload(len: usize) -> Vec<u8> {
+        let phrase = b"The scda per-element codec pipeline is serial-equivalent by construction. ";
+        phrase.iter().cycle().take(len).copied().collect()
+    }
+
+    fn roundtrip_file(
+        path: &std::path::Path,
+        data: &[u8],
+        part: &Partition,
+        elem: u64,
+        par: &CodecParallel,
+        write: bool,
+    ) {
+        if write {
+            let mut f = ScdaFile::create(SerialComm::new(), path, b"codec-bench").unwrap();
+            f.set_sync_on_close(false);
+            f.set_codec_parallel(par.clone());
+            f.write_array(DataSrc::Contiguous(data), part, elem, Some(b"payload"), true).unwrap();
+            f.close().unwrap();
+        } else {
+            let mut f = ScdaFile::open(SerialComm::new(), path).unwrap();
+            f.set_codec_parallel(par.clone());
+            let h = f.read_section_header(true).unwrap();
+            assert!(h.decoded);
+            let got = f.read_array_data(part, elem, true).unwrap().unwrap();
+            assert_eq!(got.len(), data.len());
+            f.close().unwrap();
+        }
+    }
+
+    /// Measure encoded `write_array`/`read_array` throughput for the
+    /// serial codec path and a `lanes`-wide pool on one rank.
+    pub fn run(lanes: usize, total_bytes: usize, elem_bytes: usize, reps: usize) -> CodecThroughput {
+        let data = compressible_payload(total_bytes);
+        let elem = elem_bytes as u64;
+        let n = (total_bytes as u64) / elem;
+        let data = &data[..(n * elem) as usize];
+        let part = Partition::uniform(1, n);
+        let pool = CodecParallel::Pool(Arc::new(CodecPool::new(lanes)));
+        let serial = CodecParallel::Serial;
+        let dir = std::env::temp_dir().join("scda-codec-bench");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("codec-{}.scda", std::process::id()));
+
+        let mut mib = |par: &CodecParallel, write: bool| {
+            let s = measure(1, reps, || roundtrip_file(&path, data, &part, elem, par, write));
+            s.mib_per_s(data.len() as u64)
+        };
+        // Writes leave the file in place for the read measurements; the
+        // file bytes are identical under both codec paths (the pipeline's
+        // serial-equivalence invariant), so read order doesn't matter.
+        let write_serial = mib(&serial, true);
+        let read_serial = mib(&serial, false);
+        let write_pooled = mib(&pool, true);
+        let read_pooled = mib(&pool, false);
+        std::fs::remove_file(&path).ok();
+        CodecThroughput {
+            lanes,
+            payload_bytes: data.len() as u64,
+            elem_bytes: elem,
+            write_serial,
+            write_pooled,
+            read_serial,
+            read_pooled,
+        }
+    }
+
+    /// Quick-mode defaults: 8 MiB of compressible payload, 64 KiB
+    /// elements, 4 codec lanes.
+    pub fn run_quick() -> CodecThroughput {
+        run(4, 8 << 20, 64 << 10, 3)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -146,6 +382,26 @@ mod tests {
         let r = t.render();
         assert!(r.contains("| a | bee |") || r.contains("|   a | bee |") || r.contains("| a |"));
         assert!(r.lines().count() == 3);
+    }
+
+    #[test]
+    fn bench_report_renders_valid_json_shape() {
+        let mut r = BenchReport::new("codec");
+        r.meta("quick", JsonVal::Bool(true)).meta("lanes", JsonVal::Int(4));
+        r.entry(vec![
+            ("name", JsonVal::Str("encoded \"write\"".into())),
+            ("serial_mib_per_s", JsonVal::Num(10.5)),
+            ("speedup", JsonVal::Num(f64::NAN)),
+        ]);
+        let s = r.render();
+        assert!(s.contains("\"bench\": \"codec\""));
+        assert!(s.contains("\"lanes\": 4"));
+        assert!(s.contains("\\\"write\\\""));
+        assert!(s.contains("\"speedup\": null"));
+        assert!(s.contains("\"serial_mib_per_s\": 10.500"));
+        // Balanced braces/brackets (cheap structural sanity).
+        assert_eq!(s.matches('{').count(), s.matches('}').count());
+        assert_eq!(s.matches('[').count(), s.matches(']').count());
     }
 
     #[test]

@@ -39,24 +39,47 @@ pub fn encode_plain(data: &[u8]) -> Vec<u8> {
 /// convention's "compressed size" — is deterministic:
 /// `ceil(n/3)*4` code bytes plus 2 bytes per (possibly partial) line.
 pub fn encode_lines(data: &[u8], style: LineStyle) -> Vec<u8> {
-    let code = encode_plain(data);
+    let mut out = Vec::with_capacity(encoded_len(data.len()));
+    encode_lines_into(data, style, &mut out);
+    out
+}
+
+/// [`encode_lines`] appending to `out` — no intermediate code buffer: the
+/// base64 groups stream directly into the caller's buffer with line
+/// terminators interleaved (the codec pipeline's write-into contract).
+pub fn encode_lines_into(data: &[u8], style: LineStyle, out: &mut Vec<u8>) {
     let brk: &[u8; 2] = match style {
         LineStyle::Unix => b"=\n",
         LineStyle::Mime => b"\r\n",
     };
-    let nlines = code.len().div_ceil(BASE64_LINE_COLS).max(1);
-    let mut out = Vec::with_capacity(code.len() + 2 * nlines);
-    if code.is_empty() {
+    out.reserve(encoded_len(data.len()));
+    if data.is_empty() {
         // Zero-byte payload: a single empty line still gets its terminator
         // so that even empty data is visibly delimited.
         out.extend_from_slice(brk);
-        return out;
+        return;
     }
-    for line in code.chunks(BASE64_LINE_COLS) {
-        out.extend_from_slice(line);
-        out.extend_from_slice(brk);
+    let mut col = 0usize;
+    for chunk in data.chunks(3) {
+        let b = [chunk[0], *chunk.get(1).unwrap_or(&0), *chunk.get(2).unwrap_or(&0)];
+        let v = ((b[0] as u32) << 16) | ((b[1] as u32) << 8) | b[2] as u32;
+        let quad = [
+            ALPHABET[(v >> 18) as usize & 63],
+            ALPHABET[(v >> 12) as usize & 63],
+            if chunk.len() > 1 { ALPHABET[(v >> 6) as usize & 63] } else { b'=' },
+            if chunk.len() > 2 { ALPHABET[v as usize & 63] } else { b'=' },
+        ];
+        for code in quad {
+            if col == BASE64_LINE_COLS {
+                out.extend_from_slice(brk);
+                col = 0;
+            }
+            out.push(code);
+            col += 1;
+        }
     }
-    out
+    // Every line carries a terminator, including a final full one.
+    out.extend_from_slice(brk);
 }
 
 /// Exact encoded length produced by [`encode_lines`] for `n` input bytes.
@@ -73,6 +96,15 @@ pub fn encoded_len(n: usize) -> usize {
 /// bytes is `L - 2 * lines`. The terminator bytes themselves are "arbitrary"
 /// per the spec and are not interpreted; code bytes are strict RFC 4648.
 pub fn decode_lines(data: &[u8]) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    decode_lines_into(data, &mut out)?;
+    Ok(out)
+}
+
+/// [`decode_lines`] appending to `out` (the codec pipeline's reusable
+/// stage buffers). On error, `out` may hold a partial decode; callers
+/// that reuse buffers clear them per element.
+pub fn decode_lines_into(data: &[u8], out: &mut Vec<u8>) -> Result<()> {
     if data.len() < 2 {
         return Err(ScdaError::corrupt(corrupt::BAD_BASE64, "base64 stream shorter than one terminator"));
     }
@@ -88,7 +120,7 @@ pub fn decode_lines(data: &[u8]) -> Result<Vec<u8>> {
         ));
     }
     let table = decode_table();
-    let mut out = Vec::with_capacity(code_len / 4 * 3);
+    out.reserve(code_len / 4 * 3);
     let mut quad = [0u8; 4];
     let mut qi = 0usize;
     let mut pad = 0usize;
@@ -138,7 +170,7 @@ pub fn decode_lines(data: &[u8]) -> Result<Vec<u8>> {
     if i + 2 != data.len() {
         return Err(ScdaError::corrupt(corrupt::BAD_BASE64, "base64 stream length inconsistent"));
     }
-    Ok(out)
+    Ok(())
 }
 
 #[cfg(test)]

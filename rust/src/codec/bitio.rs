@@ -18,6 +18,13 @@ impl BitWriter {
         Self::default()
     }
 
+    /// A writer that appends to `buf` (which may already hold bytes, e.g.
+    /// a zlib header), reusing its allocation. Part of the codec layer's
+    /// write-into contract: `finish` hands the same buffer back.
+    pub fn with_buffer(buf: Vec<u8>) -> Self {
+        BitWriter { out: buf, bitbuf: 0, bitcount: 0 }
+    }
+
     /// Write the low `n` bits of `value`, LSB first. `n <= 57` per call.
     #[inline]
     pub fn write_bits(&mut self, value: u32, n: u32) {

@@ -67,13 +67,46 @@ pub fn length_to_symbol(len: usize) -> (u16, u32, u8) {
     (257 + sym as u16, (len - base as usize) as u32, extra)
 }
 
+/// Linear scan of [`DIST_TABLE`] — the reference used to build the
+/// lookup tables below at compile time (and to cross-check them in tests).
+const fn dist_sym_scan(dist: usize) -> u8 {
+    let mut s = DIST_TABLE.len() - 1;
+    loop {
+        if DIST_TABLE[s].0 as usize <= dist {
+            return s as u8;
+        }
+        s -= 1;
+    }
+}
+
+/// Direct distance -> symbol lookup, zlib-style: a 512-entry table indexed
+/// by `dist - 1` for short distances, and a high table indexed by
+/// `(dist - 1) >> 7` for the rest (every symbol range above 512 is a
+/// multiple of 128 wide, so the 7-bit shift never straddles a symbol).
+static DIST_SYM_LOW: [u8; 512] = {
+    let mut t = [0u8; 512];
+    let mut d = 1usize;
+    while d <= 512 {
+        t[d - 1] = dist_sym_scan(d);
+        d += 1;
+    }
+    t
+};
+
+static DIST_SYM_HIGH: [u8; 256] = {
+    let mut t = [0u8; 256];
+    let mut i = 0usize;
+    while i < 256 {
+        t[i] = dist_sym_scan((i << 7) + 1);
+        i += 1;
+    }
+    t
+};
+
 #[inline]
 pub fn dist_to_symbol(dist: usize) -> (u16, u32, u8) {
     debug_assert!((1..=32768).contains(&dist));
-    let sym = match DIST_TABLE.binary_search_by(|&(base, _)| base.cmp(&(dist as u16))) {
-        Ok(i) => i,
-        Err(i) => i - 1,
-    };
+    let sym = if dist <= 512 { DIST_SYM_LOW[dist - 1] } else { DIST_SYM_HIGH[(dist - 1) >> 7] } as usize;
     let (base, extra) = DIST_TABLE[sym];
     (sym as u16, (dist - base as usize) as u32, extra)
 }
@@ -90,39 +123,60 @@ fn fixed_dist_lengths() -> Vec<u8> {
     vec![5u8; 30]
 }
 
-/// Histogram of literal/length and distance symbols for a token run.
-fn count_freqs(tokens: &[Token]) -> ([u32; NUM_LIT], [u32; NUM_DIST]) {
+struct FixedTables {
+    lit_len: Vec<u8>,
+    dist_len: Vec<u8>,
+    lit_codes: Vec<u16>,
+    dist_codes: Vec<u16>,
+}
+
+/// The fixed code tables are level- and data-independent; build them once
+/// per process instead of once per element.
+fn fixed_tables() -> &'static FixedTables {
+    static T: std::sync::OnceLock<FixedTables> = std::sync::OnceLock::new();
+    T.get_or_init(|| {
+        let lit_len = fixed_lit_lengths();
+        let dist_len = fixed_dist_lengths();
+        let lit_codes = lengths_to_codes(&lit_len).expect("fixed code");
+        let dist_codes = lengths_to_codes(&dist_len).expect("fixed code");
+        FixedTables { lit_len, dist_len, lit_codes, dist_codes }
+    })
+}
+
+/// Everything block encoding needs to know about a token run, gathered in
+/// a single pass: symbol histograms (end-of-block included) and the total
+/// extra-bits cost, which is the same under any Huffman code.
+struct TokenStats {
+    lit: [u32; NUM_LIT],
+    dist: [u32; NUM_DIST],
+    extra_bits: u64,
+}
+
+fn analyze_tokens(tokens: &[Token]) -> TokenStats {
     let mut lit = [0u32; NUM_LIT];
     let mut dist = [0u32; NUM_DIST];
+    let mut extra_bits = 0u64;
     for t in tokens {
         match *t {
             Token::Literal(b) => lit[b as usize] += 1,
             Token::Match { len, dist: d } => {
-                lit[length_to_symbol(len as usize).0 as usize] += 1;
-                dist[dist_to_symbol(d as usize).0 as usize] += 1;
+                let (ls, _, le) = length_to_symbol(len as usize);
+                let (ds, _, de) = dist_to_symbol(d as usize);
+                lit[ls as usize] += 1;
+                dist[ds as usize] += 1;
+                extra_bits += le as u64 + de as u64;
             }
         }
     }
     lit[256] += 1; // end-of-block
-    (lit, dist)
+    TokenStats { lit, dist, extra_bits }
 }
 
-/// Exact bit cost of encoding `tokens` with the given code lengths
-/// (header cost excluded).
-fn token_bits(tokens: &[Token], lit_len: &[u8], dist_len: &[u8]) -> u64 {
-    let mut bits = 0u64;
-    for t in tokens {
-        match *t {
-            Token::Literal(b) => bits += lit_len[b as usize] as u64,
-            Token::Match { len, dist } => {
-                let (ls, _, le) = length_to_symbol(len as usize);
-                let (ds, _, de) = dist_to_symbol(dist as usize);
-                bits += lit_len[ls as usize] as u64 + le as u64;
-                bits += dist_len[ds as usize] as u64 + de as u64;
-            }
-        }
-    }
-    bits + lit_len[256] as u64
+/// Code-dependent bit cost from a histogram: `sum(freq * len)`. Combined
+/// with [`TokenStats::extra_bits`] this reproduces the exact per-token
+/// cost without a second pass over the token stream.
+fn code_bits(freqs: &[u32], lens: &[u8]) -> u64 {
+    freqs.iter().zip(lens).map(|(&f, &l)| f as u64 * l as u64).sum()
 }
 
 /// Run-length encode the concatenated code lengths with symbols 16/17/18.
@@ -273,36 +327,52 @@ fn write_stored(w: &mut BitWriter, data: &[u8], final_chunk: bool) {
 /// the original allocate-per-call cost dominated small-element encodes;
 /// see EXPERIMENTS.md §Perf).
 pub fn deflate(data: &[u8], level: u8) -> Vec<u8> {
+    with_default_matcher(|m| {
+        let mut out = Vec::new();
+        deflate_into(m, data, level, &mut out);
+        out
+    })
+}
+
+/// Run `f` with this thread's reusable matcher (hash table + chains
+/// allocated once per thread).
+pub fn with_default_matcher<R>(f: impl FnOnce(&mut Matcher) -> R) -> R {
     thread_local! {
         static MATCHER: std::cell::RefCell<Matcher> =
             std::cell::RefCell::new(Matcher::new(MatchParams::from_level(6)));
     }
-    MATCHER.with(|m| {
-        let mut m = m.borrow_mut();
-        m.set_params(MatchParams::from_level(level));
-        deflate_with(&mut m, data, level)
-    })
+    MATCHER.with(|m| f(&mut m.borrow_mut()))
 }
 
 /// [`deflate`] with an explicit matcher (no thread-local), for callers
 /// that manage reuse themselves.
 pub fn deflate_with(matcher: &mut Matcher, data: &[u8], level: u8) -> Vec<u8> {
-    let mut w = BitWriter::new();
+    let mut out = Vec::new();
+    deflate_into(matcher, data, level, &mut out);
+    out
+}
+
+/// [`deflate`] appending to `out`, reusing both the matcher and the
+/// output allocation (the codec pipeline's write-into contract). The
+/// matcher's effort is set from `level`; its buffers persist across
+/// calls, so per-element encodes pay no setup allocations.
+pub fn deflate_into(matcher: &mut Matcher, data: &[u8], level: u8, out: &mut Vec<u8>) {
+    matcher.set_params(MatchParams::from_level(level));
+    let mut w = BitWriter::with_buffer(std::mem::take(out));
     if level == 0 {
         write_stored(&mut w, data, true);
-        return w.finish();
+        *out = w.finish();
+        return;
     }
-    let fixed_lit = fixed_lit_lengths();
-    let fixed_dist = fixed_dist_lengths();
-    let fixed_lit_codes = lengths_to_codes(&fixed_lit).expect("fixed code");
-    let fixed_dist_codes = lengths_to_codes(&fixed_dist).expect("fixed code");
+    let ft = fixed_tables();
 
     if data.is_empty() {
         // Single final fixed block with only end-of-block.
         w.write_bits(1, 1);
         w.write_bits(0b01, 2);
-        w.write_code(fixed_lit_codes[256] as u32, fixed_lit[256] as u32);
-        return w.finish();
+        w.write_code(ft.lit_codes[256] as u32, ft.lit_len[256] as u32);
+        *out = w.finish();
+        return;
     }
 
     let mut tokens: Vec<Token> = Vec::new();
@@ -311,10 +381,18 @@ pub fn deflate_with(matcher: &mut Matcher, data: &[u8], level: u8) -> Vec<u8> {
         let is_final = si + 1 == nseg;
         tokens.clear();
         matcher.tokenize(seg, |t| tokens.push(t));
-        let (mut lit_freq, mut dist_freq) = count_freqs(&tokens);
+        let stats = analyze_tokens(&tokens);
+        let mut lit_freq = stats.lit;
+        let mut dist_freq = stats.dist;
         let dh = build_dynamic_header(&mut lit_freq, &mut dist_freq);
-        let dyn_bits = dh.header_bits + token_bits(&tokens, &dh.lit_len, &dh.dist_len);
-        let fixed_bits = token_bits(&tokens, &fixed_lit, &fixed_dist);
+        // Costs from the (pre-force_two) histograms: one pass over the
+        // token stream covers both candidate codes.
+        let dyn_bits = dh.header_bits
+            + code_bits(&stats.lit, &dh.lit_len)
+            + code_bits(&stats.dist, &dh.dist_len)
+            + stats.extra_bits;
+        let fixed_bits =
+            code_bits(&stats.lit, &ft.lit_len) + code_bits(&stats.dist, &ft.dist_len) + stats.extra_bits;
         // Stored cost: 3 bits + align (<=7) + 32 bit LEN/NLEN per 64 KiB + bytes.
         let stored_bits = (seg.len() as u64) * 8 + 40 * seg.len().div_ceil(STORED_MAX).max(1) as u64;
 
@@ -323,7 +401,7 @@ pub fn deflate_with(matcher: &mut Matcher, data: &[u8], level: u8) -> Vec<u8> {
         } else if fixed_bits <= dyn_bits {
             w.write_bits(is_final as u32, 1);
             w.write_bits(0b01, 2);
-            write_tokens(&mut w, &tokens, &fixed_lit_codes, &fixed_lit, &fixed_dist_codes, &fixed_dist);
+            write_tokens(&mut w, &tokens, &ft.lit_codes, &ft.lit_len, &ft.dist_codes, &ft.dist_len);
         } else {
             w.write_bits(is_final as u32, 1);
             w.write_bits(0b10, 2);
@@ -345,7 +423,7 @@ pub fn deflate_with(matcher: &mut Matcher, data: &[u8], level: u8) -> Vec<u8> {
             write_tokens(&mut w, &tokens, &lit_codes, &dh.lit_len, &dist_codes, &dh.dist_len);
         }
     }
-    w.finish()
+    *out = w.finish();
 }
 
 #[cfg(test)]
@@ -371,6 +449,49 @@ mod tests {
         assert_eq!(dist_to_symbol(6), (4, 1, 1));
         assert_eq!(dist_to_symbol(24577), (29, 0, 13));
         assert_eq!(dist_to_symbol(32768), (29, 8191, 13));
+    }
+
+    #[test]
+    fn dist_lut_matches_table_scan_everywhere() {
+        for dist in 1usize..=32768 {
+            let (sym, extra_val, extra_bits) = dist_to_symbol(dist);
+            let scan = dist_sym_scan(dist) as u16;
+            assert_eq!(sym, scan, "dist {dist}");
+            let (base, eb) = DIST_TABLE[sym as usize];
+            assert_eq!(extra_bits, eb, "dist {dist}");
+            assert_eq!(extra_val as usize, dist - base as usize, "dist {dist}");
+            // Within the symbol's extra-bit range.
+            assert!(extra_val < (1u32 << eb.max(1)) || eb == 0 && extra_val == 0, "dist {dist}");
+        }
+    }
+
+    #[test]
+    fn analyze_matches_two_pass_costs() {
+        // The fused single-pass stats must reproduce the old two-pass
+        // (count + cost) bit accounting for both candidate codes.
+        let data = b"fused histogram and bit-cost accounting ".repeat(50);
+        let mut m = Matcher::new(MatchParams::from_level(9));
+        let mut tokens = Vec::new();
+        m.tokenize(&data, |t| tokens.push(t));
+        let stats = analyze_tokens(&tokens);
+        let ft = fixed_tables();
+        // Reference: walk the tokens again.
+        let mut bits = 0u64;
+        for t in &tokens {
+            match *t {
+                Token::Literal(b) => bits += ft.lit_len[b as usize] as u64,
+                Token::Match { len, dist } => {
+                    let (ls, _, le) = length_to_symbol(len as usize);
+                    let (ds, _, de) = dist_to_symbol(dist as usize);
+                    bits += ft.lit_len[ls as usize] as u64 + le as u64;
+                    bits += ft.dist_len[ds as usize] as u64 + de as u64;
+                }
+            }
+        }
+        bits += ft.lit_len[256] as u64;
+        assert_eq!(code_bits(&stats.lit, &ft.lit_len) + code_bits(&stats.dist, &ft.dist_len) + stats.extra_bits, bits);
+        let total: u32 = stats.lit.iter().chain(stats.dist.iter()).sum();
+        assert_eq!(total as usize, tokens.len() + 1 + tokens.iter().filter(|t| matches!(t, Token::Match { .. })).count());
     }
 
     #[test]

@@ -13,8 +13,9 @@
 //! the `'z'` marker byte ("verifying that the ninth byte of the decoded
 //! base64 data is indeed 'z'").
 
-use crate::codec::base64::{decode_lines, encode_lines};
-use crate::codec::zlib::{zlib_compress, zlib_decompress};
+use crate::codec::base64::{decode_lines, encode_lines_into, encoded_len};
+use crate::codec::lz77::{MatchParams, Matcher};
+use crate::codec::zlib::{zlib_compress_into, zlib_decompress_into};
 use crate::error::{corrupt, Result, ScdaError};
 use crate::format::padding::LineStyle;
 
@@ -34,21 +35,78 @@ impl Default for CodecOptions {
     }
 }
 
+/// Reusable per-worker state for element encode/decode: the LZ77 matcher
+/// (hash table + chains) and the stage-1 buffer (size + marker + zlib
+/// stream). One scratch per codec lane means zero steady-state
+/// allocations on the per-element hot path; [`with_scratch`] supplies a
+/// thread-local instance, which on the persistent worker pool *is*
+/// per-worker state surviving across jobs.
+#[derive(Default)]
+pub struct CodecScratch {
+    matcher: Option<Matcher>,
+    stage1: Vec<u8>,
+}
+
+impl CodecScratch {
+    pub fn new() -> Self {
+        CodecScratch::default()
+    }
+}
+
+/// Run `f` with this thread's codec scratch.
+pub fn with_scratch<R>(f: impl FnOnce(&mut CodecScratch) -> R) -> R {
+    thread_local! {
+        static SCRATCH: std::cell::RefCell<CodecScratch> = std::cell::RefCell::new(CodecScratch::new());
+    }
+    SCRATCH.with(|s| f(&mut s.borrow_mut()))
+}
+
 /// Apply both stages to one datum; the result's length is the datum's
 /// "compressed size" in the enclosing scda section.
 pub fn encode_element(data: &[u8], opts: CodecOptions) -> Vec<u8> {
-    let mut stage1 = Vec::with_capacity(9 + data.len() / 2 + 64);
+    with_scratch(|scratch| {
+        let mut out = Vec::new();
+        encode_element_into(data, opts, scratch, &mut out);
+        out
+    })
+}
+
+/// [`encode_element`] appending to `out` with explicit scratch — the
+/// codec pipeline's write-into contract: the only allocations are growth
+/// of `out` and of the reused scratch buffers. Output bytes are a pure
+/// function of `(data, opts)`, independent of scratch history — the
+/// invariant that makes parallel per-element encoding bit-identical to
+/// the serial path.
+pub fn encode_element_into(data: &[u8], opts: CodecOptions, scratch: &mut CodecScratch, out: &mut Vec<u8>) {
+    let CodecScratch { matcher, stage1 } = scratch;
+    let matcher = matcher.get_or_insert_with(|| Matcher::new(MatchParams::from_level(9)));
+    stage1.clear();
+    stage1.reserve(9 + data.len() / 2 + 64);
     stage1.extend_from_slice(&(data.len() as u64).to_be_bytes());
     stage1.push(b'z');
-    stage1.extend_from_slice(&zlib_compress(data, opts.level));
-    encode_lines(&stage1, opts.style)
+    zlib_compress_into(data, opts.level, matcher, stage1);
+    out.reserve(encoded_len(stage1.len()));
+    encode_lines_into(stage1, opts.style, out);
 }
 
 /// Invert [`encode_element`]. The compressed length is known from file
 /// context (the enclosing section's size entries), hence `encoded` is the
 /// exact stream. Verifies all three redundant checks.
 pub fn decode_element(encoded: &[u8]) -> Result<Vec<u8>> {
-    let stage1 = decode_lines(encoded)?;
+    with_scratch(|scratch| {
+        let mut out = Vec::new();
+        decode_element_into(encoded, scratch, &mut out)?;
+        Ok(out)
+    })
+}
+
+/// [`decode_element`] appending to `out` (which may hold previously
+/// decoded elements) with explicit scratch; returns the number of bytes
+/// appended. On error `out`'s length is restored (capacity may grow).
+pub fn decode_element_into(encoded: &[u8], scratch: &mut CodecScratch, out: &mut Vec<u8>) -> Result<usize> {
+    let stage1 = &mut scratch.stage1;
+    stage1.clear();
+    crate::codec::base64::decode_lines_into(encoded, stage1)?;
     if stage1.len() < 9 {
         return Err(ScdaError::corrupt(
             corrupt::BAD_CONVENTION,
@@ -67,9 +125,9 @@ pub fn decode_element(encoded: &[u8]) -> Result<Vec<u8>> {
         ScdaError::corrupt(corrupt::COUNT_OVERFLOW, "uncompressed size exceeds addressable memory")
     })?;
     // zlib's own Adler-32 verification plus the size comparison happen here.
-    let out = zlib_decompress(&stage1[9..], Some(expected))?;
-    debug_assert_eq!(out.len(), expected);
-    Ok(out)
+    let appended = zlib_decompress_into(&stage1[9..], Some(expected), out)?;
+    debug_assert_eq!(appended, expected);
+    Ok(appended)
 }
 
 /// Uncompressed size recorded in an encoded element without inflating it
@@ -108,6 +166,60 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn into_variants_append_and_reuse_scratch() {
+        // One scratch, many elements, one output buffer: the _into
+        // contract. The bytes must equal per-element encode_element
+        // results concatenated (scratch history leaks nothing).
+        let elements: Vec<Vec<u8>> = vec![
+            vec![],
+            b"abc".to_vec(),
+            vec![7u8; 5000],
+            (0..4096u32).flat_map(|i| i.to_le_bytes()).collect(),
+        ];
+        for level in [0u8, 9] {
+            let o = opts(level, LineStyle::Unix);
+            let mut scratch = CodecScratch::new();
+            let mut joined = Vec::new();
+            let mut sizes = Vec::new();
+            for e in &elements {
+                let before = joined.len();
+                encode_element_into(e, o, &mut scratch, &mut joined);
+                sizes.push(joined.len() - before);
+            }
+            let reference: Vec<u8> = elements.iter().flat_map(|e| encode_element(e, o)).collect();
+            assert_eq!(joined, reference, "level {level}");
+            // Decode them back out of the joined stream with one scratch
+            // into one buffer.
+            let mut decoded = Vec::new();
+            let mut at = 0usize;
+            for (e, s) in elements.iter().zip(&sizes) {
+                let n = decode_element_into(&joined[at..at + s], &mut scratch, &mut decoded).unwrap();
+                assert_eq!(n, e.len());
+                at += s;
+            }
+            assert_eq!(decoded, elements.concat());
+        }
+    }
+
+    #[test]
+    fn decode_into_restores_length_on_error() {
+        let good = encode_element(b"good data here", CodecOptions::default());
+        let mut out = b"prefix".to_vec();
+        let mut scratch = CodecScratch::new();
+        // Corrupt the zlib body (flip a bit past the frame header).
+        let mut stage1 = crate::codec::base64::decode_lines(&good).unwrap();
+        let n = stage1.len();
+        stage1[n - 1] ^= 0x01; // adler trailer
+        let bad = crate::codec::base64::encode_lines(&stage1, LineStyle::Unix);
+        assert!(decode_element_into(&bad, &mut scratch, &mut out).is_err());
+        assert_eq!(out, b"prefix");
+        // And a clean decode into the same buffer still appends.
+        decode_element_into(&good, &mut scratch, &mut out).unwrap();
+        assert_eq!(&out[..6], b"prefix");
+        assert_eq!(&out[6..], b"good data here");
     }
 
     #[test]

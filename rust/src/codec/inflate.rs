@@ -17,10 +17,22 @@ pub fn inflate(data: &[u8], expected_size: Option<usize>) -> Result<Vec<u8>> {
 /// Number of bytes of `data` consumed by the deflate stream (for embedded
 /// streams followed by a trailer, e.g. the zlib Adler-32).
 pub fn inflate_with_consumed(data: &[u8], expected_size: Option<usize>) -> Result<(Vec<u8>, usize)> {
+    let mut out: Vec<u8> = Vec::new();
+    let consumed = inflate_into(data, expected_size, &mut out)?;
+    Ok((out, consumed))
+}
+
+/// [`inflate_with_consumed`] appending to `out`, which may already hold
+/// unrelated bytes (the codec pipeline's reusable chunk buffers): all
+/// size accounting and back-reference windows are relative to the
+/// position where this stream's output begins, so prior contents are
+/// never read or altered. Returns the number of `data` bytes consumed.
+pub fn inflate_into(data: &[u8], expected_size: Option<usize>, out: &mut Vec<u8>) -> Result<usize> {
     // Re-run header parsing but track position: simplest correct approach
     // is to parse once with a reader we keep.
     let mut r = BitReader::new(data);
-    let mut out: Vec<u8> = Vec::with_capacity(expected_size.unwrap_or(0).min(1 << 30));
+    let base = out.len();
+    out.reserve(expected_size.unwrap_or(0).min(1 << 30));
     let limit = expected_size.map(|s| s as u64);
     loop {
         let bfinal = r.read_bits(1)?;
@@ -34,16 +46,16 @@ pub fn inflate_with_consumed(data: &[u8], expected_size: Option<usize>) -> Resul
                     return Err(ScdaError::corrupt(corrupt::BAD_ZLIB, "stored block LEN/NLEN mismatch"));
                 }
                 let bytes = r.read_aligned_bytes(len as usize)?;
-                check_limit(out.len() as u64 + bytes.len() as u64, limit)?;
+                check_limit((out.len() - base) as u64 + bytes.len() as u64, limit)?;
                 out.extend_from_slice(bytes);
             }
             0b01 => {
                 let (lit, dist) = fixed_decoders()?;
-                inflate_block(&mut r, &lit, &dist, &mut out, limit)?;
+                inflate_block(&mut r, &lit, &dist, out, base, limit)?;
             }
             0b10 => {
                 let (lit, dist) = read_dynamic_header(&mut r)?;
-                inflate_block(&mut r, &lit, &dist, &mut out, limit)?;
+                inflate_block(&mut r, &lit, &dist, out, base, limit)?;
             }
             _ => return Err(ScdaError::corrupt(corrupt::BAD_ZLIB, "reserved block type 11")),
         }
@@ -53,14 +65,14 @@ pub fn inflate_with_consumed(data: &[u8], expected_size: Option<usize>) -> Resul
     }
     let consumed = r.byte_position();
     if let Some(s) = expected_size {
-        if out.len() != s {
+        if out.len() - base != s {
             return Err(ScdaError::corrupt(
                 corrupt::SIZE_MISMATCH,
-                format!("inflated {} bytes, expected {}", out.len(), s),
+                format!("inflated {} bytes, expected {}", out.len() - base, s),
             ));
         }
     }
-    Ok((out, consumed))
+    Ok(consumed)
 }
 
 fn check_limit(total: u64, limit: Option<u64>) -> Result<()> {
@@ -148,13 +160,14 @@ fn inflate_block(
     lit: &HuffDecoder,
     dist: &HuffDecoder,
     out: &mut Vec<u8>,
+    stream_base: usize,
     limit: Option<u64>,
 ) -> Result<()> {
     loop {
         let sym = lit.decode(r)?;
         match sym {
             0..=255 => {
-                check_limit(out.len() as u64 + 1, limit)?;
+                check_limit((out.len() - stream_base) as u64 + 1, limit)?;
                 out.push(sym as u8);
             }
             256 => return Ok(()),
@@ -167,10 +180,10 @@ fn inflate_block(
                 }
                 let (dbase, dextra) = DIST_TABLE[dsym as usize];
                 let d = dbase as usize + r.read_bits(dextra as u32)? as usize;
-                if d > out.len() {
+                if d > out.len() - stream_base {
                     return Err(ScdaError::corrupt(corrupt::BAD_ZLIB, "distance reaches before stream start"));
                 }
-                check_limit(out.len() as u64 + len as u64, limit)?;
+                check_limit((out.len() - stream_base) as u64 + len as u64, limit)?;
                 let start = out.len() - d;
                 // Overlapping copy must proceed byte-wise (RLE semantics).
                 if d >= len {
@@ -269,6 +282,26 @@ mod tests {
         for cut in [1, c.len() / 2, c.len() - 1] {
             assert!(inflate(&c[..cut], Some(data.len())).is_err(), "cut {cut}");
         }
+    }
+
+    #[test]
+    fn inflate_into_preserves_prior_contents() {
+        // The pipeline appends many elements into one chunk buffer; the
+        // decoder must neither read nor disturb bytes before its base.
+        let a = b"first element first element first element".to_vec();
+        let b = b"second element second element".to_vec();
+        let ca = deflate(&a, 9);
+        let cb = deflate(&b, 9);
+        let mut out = Vec::new();
+        inflate_into(&ca, Some(a.len()), &mut out).unwrap();
+        inflate_into(&cb, Some(b.len()), &mut out).unwrap();
+        assert_eq!(out, [a.clone(), b].concat());
+        // A back-reference that would reach before the base is corrupt
+        // even when earlier bytes exist in the buffer.
+        let mut prefixed = vec![0xEEu8; 64];
+        inflate_into(&ca, Some(a.len()), &mut prefixed).unwrap();
+        assert_eq!(&prefixed[..64], &[0xEEu8; 64][..]);
+        assert_eq!(&prefixed[64..], &a[..]);
     }
 
     #[test]

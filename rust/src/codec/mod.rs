@@ -18,7 +18,10 @@ pub mod lz77;
 pub mod zlib;
 
 pub use adler32::adler32;
-pub use deflate::deflate;
-pub use frame::{decode_element, encode_element, peek_uncompressed_size, CodecOptions};
-pub use inflate::inflate;
-pub use zlib::{zlib_compress, zlib_decompress};
+pub use deflate::{deflate, deflate_into};
+pub use frame::{
+    decode_element, decode_element_into, encode_element, encode_element_into, peek_uncompressed_size,
+    with_scratch, CodecOptions, CodecScratch,
+};
+pub use inflate::{inflate, inflate_into};
+pub use zlib::{zlib_compress, zlib_compress_into, zlib_decompress, zlib_decompress_into};

@@ -4,13 +4,25 @@
 //! the Adler-32 as one of the three redundant read-side checks.
 
 use crate::codec::adler32::adler32;
-use crate::codec::deflate::deflate;
-use crate::codec::inflate::inflate_with_consumed;
+use crate::codec::deflate::{deflate_into, with_default_matcher};
+use crate::codec::inflate::inflate_into;
+use crate::codec::lz77::Matcher;
 use crate::error::{corrupt, Result, ScdaError};
 
 /// Compress `data` into a zlib stream (the paper recommends zlib's best
 /// compression; our default level is 9 accordingly).
 pub fn zlib_compress(data: &[u8], level: u8) -> Vec<u8> {
+    with_default_matcher(|m| {
+        let mut out = Vec::with_capacity(data.len() / 2 + 64);
+        zlib_compress_into(data, level, m, &mut out);
+        out
+    })
+}
+
+/// [`zlib_compress`] appending to `out` with an explicit matcher — the
+/// per-worker write-into path of the codec pipeline: no allocation beyond
+/// growing `out`, and the header/body/trailer stream directly into it.
+pub fn zlib_compress_into(data: &[u8], level: u8, matcher: &mut Matcher, out: &mut Vec<u8>) {
     // CMF: CM=8 (deflate), CINFO=7 (32K window) -> 0x78.
     let cmf: u8 = 0x78;
     // FLG: FLEVEL per level, FDICT=0, FCHECK makes (CMF<<8 | FLG) % 31 == 0.
@@ -25,17 +37,34 @@ pub fn zlib_compress(data: &[u8], level: u8) -> Vec<u8> {
     if rem != 0 {
         flg += (31 - rem) as u8;
     }
-    let mut out = Vec::with_capacity(data.len() / 2 + 64);
     out.push(cmf);
     out.push(flg);
-    out.extend_from_slice(&deflate(data, level));
+    deflate_into(matcher, data, level, out);
     out.extend_from_slice(&adler32(data).to_be_bytes());
-    out
 }
 
 /// Decompress a zlib stream, verifying header consistency and the Adler-32
 /// trailer. `expected_size` bounds and verifies the output when known.
 pub fn zlib_decompress(data: &[u8], expected_size: Option<usize>) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    zlib_decompress_into(data, expected_size, &mut out)?;
+    Ok(out)
+}
+
+/// [`zlib_decompress`] appending to `out`; returns the number of bytes
+/// appended. `out` may already hold earlier elements (the pipeline's
+/// chunk buffers) — back-references and the Adler-32 are confined to this
+/// stream's own bytes, and on error `out`'s length is restored.
+pub fn zlib_decompress_into(data: &[u8], expected_size: Option<usize>, out: &mut Vec<u8>) -> Result<usize> {
+    let restore = out.len();
+    let r = zlib_decompress_into_inner(data, expected_size, out);
+    if r.is_err() {
+        out.truncate(restore);
+    }
+    r
+}
+
+fn zlib_decompress_into_inner(data: &[u8], expected_size: Option<usize>, out: &mut Vec<u8>) -> Result<usize> {
     if data.len() < 6 {
         return Err(ScdaError::corrupt(corrupt::BAD_ZLIB, "zlib stream shorter than minimal framing"));
     }
@@ -53,20 +82,21 @@ pub fn zlib_decompress(data: &[u8], expected_size: Option<usize>) -> Result<Vec<
     if flg & 0x20 != 0 {
         return Err(ScdaError::corrupt(corrupt::BAD_ZLIB, "zlib preset dictionary unsupported"));
     }
-    let (out, consumed) = inflate_with_consumed(&data[2..], expected_size)?;
+    let start = out.len();
+    let consumed = inflate_into(&data[2..], expected_size, out)?;
     let trailer_at = 2 + consumed;
     if trailer_at + 4 > data.len() {
         return Err(ScdaError::corrupt(corrupt::BAD_ZLIB, "zlib stream missing Adler-32 trailer"));
     }
     let stored = u32::from_be_bytes(data[trailer_at..trailer_at + 4].try_into().unwrap());
-    let actual = adler32(&out);
+    let actual = adler32(&out[start..]);
     if stored != actual {
         return Err(ScdaError::corrupt(
             corrupt::BAD_CHECKSUM,
             format!("Adler-32 mismatch: stored {stored:#010x}, computed {actual:#010x}"),
         ));
     }
-    Ok(out)
+    Ok(out.len() - start)
 }
 
 #[cfg(test)]
@@ -118,6 +148,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg(feature = "conformance")]
     fn matches_flate2_both_directions() {
         // Our compressor -> flate2 decompressor and vice versa. This is the
         // in-process conformance oracle; CPython's zlib is exercised by the

@@ -3,14 +3,22 @@
 //! The per-element compression convention makes the write path a classic
 //! three-stage pipeline per rank: generate/ingest element payloads →
 //! precondition + deflate (CPU-bound, parallelizable per element) →
-//! ordered write. [`map_ordered`] implements the middle stage: a worker
-//! pool over an input iterator whose results are yielded *in input
-//! order*, with a bounded in-flight window so memory stays proportional
-//! to `workers + depth` items however large the stream is (backpressure).
+//! ordered write. [`map_ordered`] implements the middle stage: the
+//! compute runs on the shared codec worker pool
+//! ([`crate::par::pool::CodecPool`]) — the same pool the writer/reader
+//! element paths fan out to, so one set of persistent threads serves
+//! every codec consumer in the process — and results are yielded *in
+//! input order*, with a bounded in-flight window so memory stays
+//! proportional to `workers + depth` items however large the stream is
+//! (backpressure).
 
-use std::collections::BTreeMap;
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
-use std::sync::{Arc, Mutex};
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TryRecvError, TrySendError};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::par::pool::{CodecPool, ParJob, Step, SUBMITTER};
 
 /// Configuration for the parallel stage.
 #[derive(Debug, Clone, Copy)]
@@ -28,9 +36,16 @@ impl Default for PipelineOpts {
     }
 }
 
-/// Apply `f` to every item of `input` using a worker pool, yielding
+/// Apply `f` to every item of `input` on the shared codec pool, yielding
 /// results in input order with bounded memory. Both `f` and the items
-/// cross threads; the returned iterator drives the pool lazily.
+/// cross threads; the returned iterator drives the pipeline lazily.
+///
+/// `opts.workers` caps how many items are computed concurrently, but the
+/// effective parallelism is `min(opts.workers, pool lanes)`: the compute
+/// runs on [`CodecPool::global`] (sized by `SCDA_CODEC_WORKERS`, default
+/// `min(cores, 8)`) plus the pipeline's own driver thread, and the pool
+/// is shared with the writer/reader codec paths. `opts.depth` adds
+/// reorder slack to the bounded queues.
 pub fn map_ordered<T, U, F>(
     input: impl Iterator<Item = T> + Send + 'static,
     f: F,
@@ -45,10 +60,8 @@ where
     let capacity = workers + opts.depth;
     // Feed channel: bounded -> producers block when the pool is saturated.
     let (feed_tx, feed_rx) = sync_channel::<(u64, T)>(capacity);
-    let feed_rx = Arc::new(Mutex::new(feed_rx));
     // Result channel: bounded by the same capacity.
     let (out_tx, out_rx) = sync_channel::<(u64, U)>(capacity);
-    let f = Arc::new(f);
 
     // Producer thread: enumerate the input (the input iterator may not be
     // Sync, so it is moved here wholesale).
@@ -63,35 +76,211 @@ where
         })
         .expect("spawn producer");
 
-    let mut worker_handles = Vec::with_capacity(workers);
-    for w in 0..workers {
-        let feed_rx = Arc::clone(&feed_rx);
-        let out_tx = out_tx.clone();
-        let f = Arc::clone(&f);
-        worker_handles.push(
-            std::thread::Builder::new()
-                .name(format!("scda-pipe-{w}"))
-                .spawn(move || loop {
-                    let item = feed_rx.lock().unwrap().recv();
-                    match item {
-                        Ok((i, t)) => {
-                            if out_tx.send((i, f(t))).is_err() {
-                                break;
-                            }
-                        }
-                        Err(_) => break,
-                    }
-                })
-                .expect("spawn worker"),
-        );
-    }
-    drop(out_tx);
+    // Driver thread: publishes the streaming job on the shared pool and
+    // acts as its submitter (so the stream progresses even when every
+    // pool worker is busy elsewhere). Returns when the input is exhausted
+    // or the consumer hangs up; dropping the job closes `out_tx`.
+    let driver = std::thread::Builder::new()
+        .name("scda-pipe-drive".into())
+        .spawn(move || {
+            let job = StreamJob {
+                feed: Mutex::new(feed_rx),
+                out: out_tx,
+                pending: Mutex::new(VecDeque::new()),
+                f,
+                active: AtomicUsize::new(0),
+                cap: workers,
+                input_done: AtomicBool::new(false),
+                output_closed: AtomicBool::new(false),
+            };
+            CodecPool::global().run(&job);
+        })
+        .expect("spawn driver");
 
     OrderedDrain {
         rx: out_rx,
         next: 0,
         hold: BTreeMap::new(),
-        _threads: ThreadBag { handles: Some((producer, worker_handles)) },
+        _threads: ThreadBag { handles: Some((producer, vec![driver])) },
+    }
+}
+
+/// The streaming [`ParJob`]: each step claims one item from the feed,
+/// computes it, and pushes the indexed result; `cap` bounds concurrent
+/// computations so `PipelineOpts::workers` keeps its meaning on a wider
+/// pool.
+///
+/// Only the submitter (the dedicated driver thread) ever *blocks* on the
+/// result channel; pool workers are shared process-wide, so when the
+/// consumer is slower than compute they stash results in `pending`
+/// (bounded by `cap` via the claim gate) and stay available to other
+/// codec jobs instead of sitting inside a full `send`.
+struct StreamJob<T, U, F> {
+    feed: Mutex<Receiver<(u64, T)>>,
+    out: SyncSender<(u64, U)>,
+    /// Results a non-blocking worker could not deliver yet; drained by
+    /// every step, with blocking sends from the submitter only.
+    pending: Mutex<VecDeque<(u64, U)>>,
+    f: F,
+    active: AtomicUsize,
+    cap: usize,
+    input_done: AtomicBool,
+    output_closed: AtomicBool,
+}
+
+struct LaneGuard<'a>(&'a AtomicUsize);
+
+impl Drop for LaneGuard<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+impl<T, U, F> StreamJob<T, U, F>
+where
+    T: Send,
+    U: Send,
+    F: Fn(T) -> U + Sync,
+{
+    fn status(&self) -> Step {
+        if self.output_closed.load(Ordering::Acquire) {
+            return Step::Done;
+        }
+        if self.input_done.load(Ordering::Acquire)
+            && self.active.load(Ordering::Acquire) == 0
+            && self.pending.lock().unwrap().is_empty()
+        {
+            return Step::Done;
+        }
+        Step::Idle
+    }
+
+    /// Hand one result to the consumer. Returns false when the consumer
+    /// hung up (stream retired).
+    fn deliver(&self, worker: usize, item: (u64, U)) -> bool {
+        if worker == SUBMITTER {
+            if self.out.send(item).is_err() {
+                self.output_closed.store(true, Ordering::Release);
+                return false;
+            }
+            return true;
+        }
+        match self.out.try_send(item) {
+            Ok(()) => true,
+            Err(TrySendError::Full(item)) => {
+                self.pending.lock().unwrap().push_back(item);
+                true
+            }
+            Err(TrySendError::Disconnected(_)) => {
+                self.output_closed.store(true, Ordering::Release);
+                false
+            }
+        }
+    }
+
+    /// Push stashed results out; only the submitter blocks for space.
+    fn drain_pending(&self, worker: usize) -> bool {
+        loop {
+            // Hold an `active` ticket around the pop→send window so a
+            // popped-but-undelivered item can never be invisible to
+            // `status` (which would let the job retire and lose it).
+            self.active.fetch_add(1, Ordering::AcqRel);
+            let _limbo = LaneGuard(&self.active);
+            let item = self.pending.lock().unwrap().pop_front();
+            let Some(item) = item else { return true };
+            if worker != SUBMITTER {
+                match self.out.try_send(item) {
+                    Ok(()) => continue,
+                    Err(TrySendError::Full(item)) => {
+                        self.pending.lock().unwrap().push_front(item);
+                        return true;
+                    }
+                    Err(TrySendError::Disconnected(_)) => {
+                        self.output_closed.store(true, Ordering::Release);
+                        return false;
+                    }
+                }
+            }
+            if self.out.send(item).is_err() {
+                self.output_closed.store(true, Ordering::Release);
+                return false;
+            }
+        }
+    }
+}
+
+impl<T, U, F> ParJob for StreamJob<T, U, F>
+where
+    T: Send,
+    U: Send,
+    F: Fn(T) -> U + Sync,
+{
+    fn step(&self, worker: usize) -> Step {
+        if self.output_closed.load(Ordering::Acquire) {
+            return Step::Done;
+        }
+        if !self.drain_pending(worker) {
+            return Step::Done;
+        }
+        // Don't claim new input while stashed results are waiting for
+        // the consumer — keeps memory bounded by the lane cap.
+        if self.pending.lock().unwrap().len() >= self.cap {
+            return Step::Idle;
+        }
+        // Claim a lane under the cap.
+        let mut cur = self.active.load(Ordering::Acquire);
+        loop {
+            if cur >= self.cap {
+                return self.status();
+            }
+            match self.active.compare_exchange(cur, cur + 1, Ordering::AcqRel, Ordering::Acquire) {
+                Ok(_) => break,
+                Err(c) => cur = c,
+            }
+        }
+        let _lane = LaneGuard(&self.active);
+        // The submitter is a dedicated thread: it waits on the feed so an
+        // idle stream costs no busy-polling (it releases the feed lock
+        // before computing, so workers claim items during its compute).
+        // Shared pool workers only take what is immediately available —
+        // `try_lock`, because the submitter holds the lock for up to the
+        // wait timeout while the feed is empty, and a worker stuck on
+        // the mutex would be a worker stolen from other codec jobs.
+        let item = if worker == SUBMITTER {
+            let feed = self.feed.lock().unwrap();
+            feed.recv_timeout(Duration::from_millis(5)).map_err(|e| match e {
+                RecvTimeoutError::Timeout => TryRecvError::Empty,
+                RecvTimeoutError::Disconnected => TryRecvError::Disconnected,
+            })
+        } else {
+            match self.feed.try_lock() {
+                Ok(feed) => feed.try_recv(),
+                Err(_) => return Step::Idle,
+            }
+        };
+        match item {
+            Ok((i, t)) => {
+                let u = (self.f)(t);
+                if self.deliver(worker, (i, u)) {
+                    Step::Ran
+                } else {
+                    Step::Done
+                }
+            }
+            Err(TryRecvError::Empty) => Step::Idle,
+            Err(TryRecvError::Disconnected) => {
+                self.input_done.store(true, Ordering::Release);
+                drop(_lane);
+                self.status()
+            }
+        }
+    }
+
+    fn park(&self) {
+        // Reached only when every lane is busy or results are stashed
+        // awaiting the consumer; the submitter's feed wait inside `step`
+        // handles the idle-stream case without polling.
+        std::thread::sleep(Duration::from_micros(100));
     }
 }
 

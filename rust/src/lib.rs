@@ -25,6 +25,49 @@
 //!   hot path (with a bit-exact native fallback);
 //! * [`mesh`] — a Morton-order AMR workload generator used by examples,
 //!   tests and benchmarks.
+//!
+//! # Codec pipeline
+//!
+//! The compression convention of §3.1 is *per element*: every element is
+//! an independent `size + 'z' + zlib` frame, base64-armored. That makes
+//! the codec the one embarrassingly parallel stage of the I/O path, and
+//! this crate runs it on a shared worker pool
+//! ([`par::pool::CodecPool`]):
+//!
+//! * **Architecture.** One persistent pool per process (lazily created,
+//!   sized by `SCDA_CODEC_WORKERS` or the machine). Encoded writes
+//!   ([`api::ScdaFile::write_array`] / `write_varray`), decoded reads,
+//!   and the coordinator's streaming stage
+//!   ([`coordinator::pipeline::map_ordered`]) all publish *jobs* of
+//!   claimable element batches; idle workers steal batches from any
+//!   published job, and the submitting thread always participates, so
+//!   nested or concurrent submissions cannot deadlock. Per-file policy
+//!   is [`api::CodecParallel`] (serial / shared pool / caller-owned
+//!   pool).
+//! * **Buffer-reuse contract.** Every codec stage has a `*_into`
+//!   variant — [`codec::frame::encode_element_into`] /
+//!   [`codec::frame::decode_element_into`],
+//!   [`codec::zlib::zlib_compress_into`] /
+//!   [`codec::zlib::zlib_decompress_into`],
+//!   [`codec::deflate::deflate_into`], [`codec::inflate::inflate_into`],
+//!   [`codec::base64::encode_lines_into`] — that appends to a
+//!   caller-supplied buffer instead of allocating. Per-worker
+//!   [`codec::frame::CodecScratch`] (LZ77 matcher + stage-1 buffer,
+//!   thread-local on the persistent workers) makes the steady-state
+//!   per-element allocation count zero; output bytes are a pure function
+//!   of `(data, options)`, never of scratch history.
+//! * **Serial equivalence.** Batches are formed in element order and
+//!   their outputs stitched back in element order into a buffer sized
+//!   once at its exact total. Since each element's encoding depends only
+//!   on that element's bytes and the codec options, the concatenation is
+//!   bit-identical to the serial loop at any worker count — and because
+//!   a rank's elements are a contiguous range of the global element
+//!   order, the same argument that makes the *format*
+//!   partition-independent (offsets are pure functions of collective
+//!   inputs, §2) extends to the codec layer: worker count and partition
+//!   both drop out of the file bytes. `rust/tests/pipeline_equivalence.rs`
+//!   asserts this property; `BENCH_codec.json` (emitted by the f1/t4
+//!   benches and the ignored smoke test) tracks the throughput it buys.
 
 pub mod api;
 pub mod codec;

@@ -6,11 +6,13 @@
 pub mod comm;
 pub mod partition;
 pub mod pfile;
+pub mod pool;
 pub mod serial;
 pub mod thread;
 
 pub use comm::Communicator;
 pub use partition::Partition;
 pub use pfile::ParallelFile;
+pub use pool::{CodecPool, ParJob, Step};
 pub use serial::SerialComm;
 pub use thread::{run_parallel, ThreadComm};

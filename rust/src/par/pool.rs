@@ -1,0 +1,441 @@
+//! Persistent codec worker pool: the compute substrate of the per-element
+//! codec pipeline (ISSUE: parallel per-element codec with zero-copy buffer
+//! reuse).
+//!
+//! The paper's compression convention (§3.1) is per-element by design —
+//! every element is an independent deflate+base64 stream — so the codec
+//! hot path is embarrassingly parallel *within* a rank. This module
+//! provides the small persistent pool that `encode_local_elements`
+//! (writer), the decoded-array/varray read paths (reader), and the
+//! coordinator's streaming pipeline all fan element batches out to.
+//!
+//! Design:
+//!
+//! * **Jobs, not threads.** A job ([`ParJob`]) is a bag of claimable work
+//!   units; `CodecPool::run` publishes it to the pool, and every idle
+//!   worker *steals* units from any published job (`step`). Units are
+//!   claimed with an atomic cursor inside the job, so load balance is
+//!   dynamic: a worker that finishes its unit early immediately claims
+//!   the next one, wherever it lives.
+//! * **The submitter helps.** `run` blocks, but the submitting thread
+//!   executes units itself while it waits. This makes the pool
+//!   deadlock-free under nesting and under concurrent submissions from
+//!   many rank threads: a job never waits for a worker, because its own
+//!   submitter is always a worker of last resort.
+//! * **Scoped borrows without scoped threads.** Jobs may borrow the
+//!   caller's stack (element slices, scratch tables). `run` erases the
+//!   lifetime to publish the job, and guarantees before returning that
+//!   the job is unpublished and no worker is still inside `step` (a
+//!   per-job stepper count, waited on after removal). Workers only obtain
+//!   the job reference under the pool lock while it is published, so no
+//!   reference outlives `run`.
+//! * **Per-worker scratch.** Workers are persistent OS threads, so
+//!   thread-local codec scratch ([`crate::codec::frame::with_scratch`])
+//!   is per-worker state that survives across jobs — the matcher hash
+//!   chains, bit writer, and stage buffers are allocated once per worker,
+//!   not once per element.
+//!
+//! Serial equivalence: the pool never reorders *results* — batch jobs
+//! stitch per-unit outputs back by index ([`CodecPool::run_ordered`]), so
+//! the bytes produced are identical to the serial path at any worker
+//! count. The property test `rust/tests/pipeline_equivalence.rs` asserts
+//! this for the full writer/reader paths.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::Duration;
+
+/// Worker id passed to [`ParJob::step`] for the submitting thread.
+pub const SUBMITTER: usize = usize::MAX;
+
+/// Outcome of one [`ParJob::step`] call.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Step {
+    /// A unit was claimed and executed; call again immediately.
+    Ran,
+    /// Nothing claimable right now, but the job is not finished (units in
+    /// flight elsewhere, or a streaming source is momentarily empty).
+    Idle,
+    /// Every unit is finished; the job can be retired.
+    Done,
+}
+
+/// A bag of claimable work units executed cooperatively by the pool.
+///
+/// Implementations own their claiming state (typically an atomic cursor)
+/// and their completion accounting. `step` must be safe to call from many
+/// threads concurrently and must not panic on data errors — report those
+/// through the job's own result slots instead.
+pub trait ParJob: Sync {
+    /// Claim and execute at most one unit.
+    fn step(&self, worker: usize) -> Step;
+
+    /// Block briefly until the job's state may have advanced; called by
+    /// the submitter when `step` returns [`Step::Idle`]. Implementations
+    /// with a completion condvar should wait on it here.
+    fn park(&self) {
+        std::thread::sleep(Duration::from_micros(50));
+    }
+}
+
+#[derive(Default)]
+struct SlotCtl {
+    /// Workers currently inside `step` for this job.
+    steppers: Mutex<usize>,
+    cv: Condvar,
+}
+
+struct Slot {
+    /// Lifetime-erased job reference; valid exactly while the slot is
+    /// published (the submitter removes it and drains steppers before
+    /// its `run` call returns).
+    job: &'static (dyn ParJob + 'static),
+    id: u64,
+    ctl: Arc<SlotCtl>,
+}
+
+struct PoolState {
+    slots: Vec<Slot>,
+    next_id: u64,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    work_cv: Condvar,
+}
+
+/// Decrements the per-job stepper count on drop (panic-safe).
+struct StepTicket(Arc<SlotCtl>);
+
+impl Drop for StepTicket {
+    fn drop(&mut self) {
+        let mut g = self.0.steppers.lock().unwrap();
+        *g -= 1;
+        if *g == 0 {
+            self.0.cv.notify_all();
+        }
+    }
+}
+
+/// A persistent pool of codec workers; see the module docs.
+pub struct CodecPool {
+    shared: Arc<PoolShared>,
+    lanes: usize,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl CodecPool {
+    /// A pool with `lanes` concurrent codec lanes. The submitting thread
+    /// always participates, so `lanes.saturating_sub(1)` helper threads
+    /// are spawned; `lanes <= 1` spawns none (serial execution with the
+    /// same code path — the serial-equivalence baseline).
+    pub fn new(lanes: usize) -> Self {
+        let lanes = lanes.max(1);
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState { slots: Vec::new(), next_id: 0, shutdown: false }),
+            work_cv: Condvar::new(),
+        });
+        let mut handles = Vec::new();
+        for w in 0..lanes - 1 {
+            let shared = Arc::clone(&shared);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("scda-codec-{w}"))
+                    .spawn(move || worker_loop(&shared, w))
+                    .expect("spawn codec worker"),
+            );
+        }
+        CodecPool { shared, lanes, handles: Mutex::new(handles) }
+    }
+
+    /// Maximum concurrent codec lanes per job (helpers + submitter).
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// The process-wide shared pool, sized by `SCDA_CODEC_WORKERS` or the
+    /// machine's parallelism (capped at 8 — the codec saturates memory
+    /// bandwidth before it saturates very wide machines). Created lazily
+    /// on first use; its threads park on a condvar when idle.
+    pub fn global() -> &'static CodecPool {
+        static POOL: OnceLock<CodecPool> = OnceLock::new();
+        POOL.get_or_init(|| CodecPool::new(default_lanes()))
+    }
+
+    /// Publish `job`, execute it cooperatively, and return once every
+    /// unit is finished and no worker still holds a reference to it.
+    pub fn run(&self, job: &dyn ParJob) {
+        // Lifetime erasure: sound because this function does not return
+        // until the slot is removed and its stepper count has drained —
+        // see the module docs.
+        let job_static: &'static (dyn ParJob + 'static) =
+            unsafe { std::mem::transmute::<&dyn ParJob, &'static (dyn ParJob + 'static)>(job) };
+        let ctl = Arc::new(SlotCtl::default());
+        let id = {
+            let mut st = self.shared.state.lock().unwrap();
+            let id = st.next_id;
+            st.next_id += 1;
+            st.slots.push(Slot { job: job_static, id, ctl: Arc::clone(&ctl) });
+            id
+        };
+        self.shared.work_cv.notify_all();
+        loop {
+            match job.step(SUBMITTER) {
+                Step::Ran => {}
+                Step::Idle => job.park(),
+                Step::Done => break,
+            }
+        }
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.slots.retain(|s| s.id != id);
+        }
+        let mut g = ctl.steppers.lock().unwrap();
+        while *g > 0 {
+            g = ctl.cv.wait(g).unwrap();
+        }
+    }
+
+    /// Run `f(0..n)` across the pool and return the results in index
+    /// order — the ordered-stitch primitive underlying the codec
+    /// pipeline's serial-equivalence guarantee.
+    pub fn run_ordered<U, F>(&self, n: usize, f: F) -> Vec<U>
+    where
+        U: Send,
+        F: Fn(usize) -> U + Sync,
+    {
+        if n == 0 {
+            return Vec::new();
+        }
+        let job = BatchJob {
+            f,
+            n,
+            next: AtomicUsize::new(0),
+            results: (0..n).map(|_| Mutex::new(None)).collect(),
+            finished: Mutex::new(0),
+            done_cv: Condvar::new(),
+        };
+        self.run(&job);
+        job.results
+            .into_iter()
+            .map(|m| match m.into_inner().unwrap().expect("batch unit completed") {
+                Ok(u) => u,
+                // Re-raise the first (in index order) unit panic here, on
+                // the submitting thread.
+                Err(panic) => std::panic::resume_unwind(panic),
+            })
+            .collect()
+    }
+}
+
+impl Drop for CodecPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
+        for h in self.handles.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn default_lanes() -> usize {
+    if let Some(v) = std::env::var_os("SCDA_CODEC_WORKERS") {
+        if let Some(n) = v.to_str().and_then(|s| s.trim().parse::<usize>().ok()) {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(8)
+}
+
+fn worker_loop(shared: &PoolShared, worker: usize) {
+    let mut rr = worker; // stagger the first pick across workers
+    let mut dry = 0usize;
+    let mut st = shared.state.lock().unwrap();
+    loop {
+        if st.shutdown {
+            return;
+        }
+        if st.slots.is_empty() {
+            dry = 0;
+            st = shared.work_cv.wait(st).unwrap();
+            continue;
+        }
+        let n = st.slots.len();
+        let slot = &st.slots[rr % n];
+        rr = rr.wrapping_add(1);
+        let job = slot.job;
+        let ctl = Arc::clone(&slot.ctl);
+        *ctl.steppers.lock().unwrap() += 1;
+        let ticket = StepTicket(ctl);
+        drop(st);
+        let mut any = false;
+        loop {
+            match job.step(worker) {
+                Step::Ran => any = true,
+                Step::Idle | Step::Done => break,
+            }
+        }
+        drop(ticket);
+        st = shared.state.lock().unwrap();
+        if any {
+            dry = 0;
+            continue;
+        }
+        dry += 1;
+        if dry >= st.slots.len().max(1) {
+            // Every published job is momentarily idle (streaming sources
+            // refill without notifying the pool), so park with a timeout
+            // rather than spinning.
+            dry = 0;
+            let (g, _) = shared.work_cv.wait_timeout(st, Duration::from_millis(1)).unwrap();
+            st = g;
+        }
+    }
+}
+
+/// Fixed-size job: `n` independent units, results stitched by index.
+/// Unit panics are caught and re-raised on the submitting thread (so a
+/// bug in a codec closure propagates instead of hanging the pool or
+/// killing a worker thread).
+struct BatchJob<U, F> {
+    f: F,
+    n: usize,
+    next: AtomicUsize,
+    results: Vec<Mutex<Option<std::thread::Result<U>>>>,
+    finished: Mutex<usize>,
+    done_cv: Condvar,
+}
+
+impl<U, F> ParJob for BatchJob<U, F>
+where
+    U: Send,
+    F: Fn(usize) -> U + Sync,
+{
+    fn step(&self, _worker: usize) -> Step {
+        let i = self.next.fetch_add(1, Ordering::Relaxed);
+        if i >= self.n {
+            // Avoid cursor overflow under pathological re-polling.
+            self.next.store(self.n, Ordering::Relaxed);
+            let done = *self.finished.lock().unwrap() == self.n;
+            return if done { Step::Done } else { Step::Idle };
+        }
+        let u = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| (self.f)(i)));
+        *self.results[i].lock().unwrap() = Some(u);
+        let mut fin = self.finished.lock().unwrap();
+        *fin += 1;
+        if *fin == self.n {
+            self.done_cv.notify_all();
+        }
+        Step::Ran
+    }
+
+    fn park(&self) {
+        let fin = self.finished.lock().unwrap();
+        if *fin < self.n {
+            // Woken by the last unit's completion (every unit finishes:
+            // panics are caught into result slots); the timeout is pure
+            // defense in depth.
+            let _ = self.done_cv.wait_timeout(fin, Duration::from_millis(10)).unwrap();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_ordered_preserves_index_order() {
+        let pool = CodecPool::new(4);
+        let out = pool.run_ordered(100, |i| {
+            if i % 13 == 0 {
+                std::thread::sleep(Duration::from_micros(200));
+            }
+            i * 3
+        });
+        assert_eq!(out, (0..100).map(|i| i * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn serial_pool_runs_on_submitter() {
+        let pool = CodecPool::new(1);
+        let me = std::thread::current().id();
+        let out = pool.run_ordered(10, move |i| {
+            assert_eq!(std::thread::current().id(), me);
+            i
+        });
+        assert_eq!(out.len(), 10);
+    }
+
+    #[test]
+    fn empty_job_returns_immediately() {
+        let pool = CodecPool::new(2);
+        let out: Vec<usize> = pool.run_ordered(0, |i| i);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn concurrent_submitters_share_the_pool() {
+        let pool = Arc::new(CodecPool::new(4));
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let pool = Arc::clone(&pool);
+            handles.push(std::thread::spawn(move || {
+                pool.run_ordered(50, move |i| t * 1000 + i as u64)
+            }));
+        }
+        for (t, h) in handles.into_iter().enumerate() {
+            let got = h.join().unwrap();
+            assert_eq!(got, (0..50).map(|i| t as u64 * 1000 + i).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn nested_submission_does_not_deadlock() {
+        // A unit of an outer job submits an inner job to the same pool.
+        // The helping scheduler guarantees progress even when every
+        // worker is parked inside the outer job.
+        let pool = Arc::new(CodecPool::new(2));
+        let p2 = Arc::clone(&pool);
+        let out = pool.run_ordered(4, move |i| p2.run_ordered(8, |j| j).len() + i);
+        assert_eq!(out, vec![8, 9, 10, 11]);
+    }
+
+    #[test]
+    fn unit_panic_propagates_and_pool_survives() {
+        let pool = CodecPool::new(4);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run_ordered(16, |i| {
+                if i == 7 {
+                    panic!("unit bug");
+                }
+                i
+            })
+        }));
+        assert!(r.is_err());
+        // The panic was caught in the worker and re-raised here; every
+        // pool thread is still alive and the pool stays usable.
+        let out = pool.run_ordered(8, |i| i * 2);
+        assert_eq!(out, (0..8).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn borrowed_state_is_safe_across_run() {
+        let pool = CodecPool::new(4);
+        let data: Vec<u64> = (0..1000).collect();
+        let sums = pool.run_ordered(10, |i| data[i * 100..(i + 1) * 100].iter().sum::<u64>());
+        assert_eq!(sums.iter().sum::<u64>(), data.iter().sum::<u64>());
+    }
+
+    #[test]
+    fn global_pool_is_shared_and_sized() {
+        let p1 = CodecPool::global();
+        let p2 = CodecPool::global();
+        assert!(std::ptr::eq(p1, p2));
+        assert!(p1.lanes() >= 1);
+    }
+}

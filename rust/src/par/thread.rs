@@ -21,7 +21,12 @@ struct CollectiveState {
     // Deposit slots for gather/bcast payloads. Each rank only ever writes
     // its own slot, so no clearing between collectives is needed: stale
     // values are overwritten by the next deposit before the barrier.
-    slots: Vec<Option<Vec<u8>>>,
+    //
+    // Slots hold `Arc<[u8]>` so that reading the collective view clones
+    // P reference counts, not P payload vectors: the previous
+    // `Vec<Vec<u8>>` snapshot copied every rank's bytes on every rank —
+    // O(P²) payload copying per allgather under the lock.
+    slots: Vec<Option<Arc<[u8]>>>,
 }
 
 /// Handle owned by one rank.
@@ -63,10 +68,12 @@ impl ThreadComm {
     /// deposit happened before any read; the second guarantees every read
     /// happened before any rank can deposit into the *next* collective.
     /// Because a rank only writes its own slot, stale values never leak.
-    fn exchange(&self, payload: Option<Vec<u8>>) -> Vec<Option<Vec<u8>>> {
+    /// The returned view shares the deposited buffers (`Arc` clones);
+    /// ranks copy only the slots they actually consume.
+    fn exchange(&self, payload: Option<Vec<u8>>) -> Vec<Option<Arc<[u8]>>> {
         {
             let mut st = self.shared.state.lock().unwrap();
-            st.slots[self.rank] = payload;
+            st.slots[self.rank] = payload.map(|v| Arc::<[u8]>::from(v));
         }
         self.barrier_impl();
         let view = {
@@ -96,20 +103,22 @@ impl Communicator for ThreadComm {
         if self.rank == root {
             assert!(data.is_some(), "broadcast root must provide data");
         }
+        // Only the root slot is read; the other ranks' deposits (all
+        // `None` here) are never copied.
         let view = self.exchange(if self.rank == root { data } else { None });
-        view[root].clone().expect("root deposited broadcast payload")
+        view[root].as_ref().expect("root deposited broadcast payload").to_vec()
     }
 
     fn allgather_u64(&self, value: u64) -> Vec<u64> {
         let view = self.exchange(Some(value.to_le_bytes().to_vec()));
         view.into_iter()
-            .map(|s| u64::from_le_bytes(s.expect("all ranks deposit").try_into().unwrap()))
+            .map(|s| u64::from_le_bytes(s.expect("all ranks deposit").as_ref().try_into().unwrap()))
             .collect()
     }
 
     fn allgather_bytes(&self, data: Vec<u8>) -> Vec<Vec<u8>> {
         let view = self.exchange(Some(data));
-        view.into_iter().map(|s| s.expect("all ranks deposit")).collect()
+        view.into_iter().map(|s| s.expect("all ranks deposit").to_vec()).collect()
     }
 }
 

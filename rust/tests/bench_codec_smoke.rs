@@ -1,0 +1,47 @@
+//! Quick-mode codec bench smoke: exercises the measurement harness end
+//! to end and records `BENCH_codec.json` so the perf trajectory is
+//! tracked from this PR onward.
+//!
+//! `#[ignore]`d by default so `cargo test -q` stays fast and
+//! timing-insensitive; run explicitly with
+//! `cargo test --test bench_codec_smoke -- --ignored`.
+
+use scda::bench_support::{bench_json_path, codec_bench};
+
+#[test]
+#[ignore = "perf smoke; run with -- --ignored"]
+fn codec_bench_quick_records_json() {
+    // Small quick-mode workload: 2 MiB, 32 KiB elements, 4 lanes.
+    let t = codec_bench::run(4, 2 << 20, 32 << 10, 2);
+    assert!(t.write_serial > 0.0 && t.write_pooled > 0.0);
+    assert!(t.read_serial > 0.0 && t.read_pooled > 0.0);
+    let path = bench_json_path();
+    t.report().write(&path).unwrap();
+    let written = std::fs::read_to_string(&path).unwrap();
+    assert!(written.contains("\"bench\": \"codec\""));
+    assert!(written.contains("encoded_write"));
+    assert!(written.contains("encoded_read"));
+    println!(
+        "codec quick: write {:.0} -> {:.0} MiB/s ({:.2}x), read {:.0} -> {:.0} MiB/s ({:.2}x); wrote {}",
+        t.write_serial,
+        t.write_pooled,
+        t.write_speedup(),
+        t.read_serial,
+        t.read_pooled,
+        t.read_speedup(),
+        path.display(),
+    );
+}
+
+#[test]
+fn codec_bench_harness_roundtrips_tiny_workload() {
+    // Non-ignored correctness pass through the same harness at a size
+    // too small to be a benchmark: verifies the encode/decode round
+    // trip and the report shape without timing assertions.
+    let t = codec_bench::run(2, 256 << 10, 16 << 10, 1);
+    assert_eq!(t.lanes, 2);
+    assert_eq!(t.elem_bytes, 16 << 10);
+    let r = t.report().render();
+    assert!(r.contains("\"pooled_mib_per_s\""));
+    assert!(r.contains("\"speedup\""));
+}

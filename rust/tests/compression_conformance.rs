@@ -1,6 +1,10 @@
 //! Conformance of the from-scratch codec against an independent
 //! implementation (miniz_oxide via flate2) and randomized stress of the
 //! §3.1 element framing across styles and levels.
+//!
+//! Requires the `conformance` feature (flate2 is an optional, registry-
+//! fetched dependency; the default offline build skips this file).
+#![cfg(feature = "conformance")]
 
 use scda::codec::{decode_element, encode_element, zlib_compress, zlib_decompress, CodecOptions};
 use scda::format::padding::LineStyle;

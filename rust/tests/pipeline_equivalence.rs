@@ -1,0 +1,225 @@
+//! Serial equivalence of the parallel per-element codec pipeline: the
+//! encoded section bytes and the decoded payloads must be bit-identical
+//! to the serial codec path at every worker count and under every
+//! partition — the paper's core invariant (T1) extended to the codec
+//! layer. Covers A/B/V sections, empty elements, empty sections, and
+//! level 0 (the no-zlib fallback).
+
+use scda::api::{CodecParallel, DataSrc, ScdaFile};
+use scda::par::{run_parallel, CodecPool, Communicator, Partition, SerialComm};
+use scda::testutil::Rng;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("scda-pipe-eq");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(format!("{name}-{}.scda", std::process::id()))
+}
+
+/// Element sizes exercising the interesting shapes: empty elements,
+/// one-byte elements, sizes straddling the base64 line length and the
+/// parallel chunking threshold.
+fn varray_sizes(rng: &mut Rng, n: u64) -> Vec<u64> {
+    (0..n)
+        .map(|i| match i % 5 {
+            0 => 0,
+            1 => 1,
+            2 => rng.below(57),
+            3 => rng.range(57, 2000),
+            _ => rng.range(2000, 40_000),
+        })
+        .collect()
+}
+
+/// Write one file holding an encoded A section, an encoded B section,
+/// and an encoded V section, from `ranks` ranks under `part`s, with the
+/// given codec parallelism and level. Returns the file bytes.
+fn write_encoded_file(
+    name: &str,
+    level: u8,
+    ranks: usize,
+    par_factory: impl Fn() -> CodecParallel + Send + Sync + 'static,
+    arr: Arc<Vec<u8>>,
+    elem: u64,
+    apart: Arc<Partition>,
+    vdata: Arc<Vec<u8>>,
+    vsizes: Arc<Vec<u64>>,
+    vpart: Arc<Partition>,
+    block: Arc<Vec<u8>>,
+) -> Vec<u8> {
+    let path = tmp(name);
+    {
+        let path = path.clone();
+        run_parallel(ranks, move |comm| {
+            let rank = comm.rank();
+            let mut f = ScdaFile::create(comm, &path, b"pipe-eq").unwrap();
+            f.set_level(level);
+            f.set_codec_parallel(par_factory());
+            // A section.
+            let r = apart.local_range(rank);
+            let local = &arr[(r.start * elem) as usize..(r.end * elem) as usize];
+            f.write_array(DataSrc::Contiguous(local), &apart, elem, Some(b"a"), true).unwrap();
+            // B section (root-held).
+            f.write_block_from(0, Some(&block), block.len() as u64, Some(b"b"), true).unwrap();
+            // V section, including empty elements.
+            let r = vpart.local_range(rank);
+            let local_sizes = &vsizes[r.start as usize..r.end as usize];
+            let start: u64 = vsizes[..r.start as usize].iter().sum();
+            let len: u64 = local_sizes.iter().sum();
+            let local = &vdata[start as usize..(start + len) as usize];
+            f.write_varray(DataSrc::Contiguous(local), &vpart, local_sizes, Some(b"v"), true).unwrap();
+            // Empty V section (zero elements).
+            let empty = Partition::uniform(vpart.num_ranks(), 0);
+            f.write_varray(DataSrc::Contiguous(&[]), &empty, &[], Some(b"empty"), true).unwrap();
+            f.close().unwrap();
+        });
+    }
+    let bytes = std::fs::read(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    bytes
+}
+
+#[test]
+fn encoded_bytes_identical_across_worker_counts_and_partitions() {
+    let mut rng = Rng::new(0xC0DEC);
+    for (case, level) in [(0usize, 9u8), (1, 9), (2, 0), (3, 6)] {
+        let elem = [64u64, 1, 4096, 997][case % 4];
+        let an = rng.range(20, 200);
+        let arr = Arc::new(rng.bytes((an * elem) as usize, 7));
+        let vn = rng.range(10, 120);
+        let vsizes = Arc::new(varray_sizes(&mut rng, vn));
+        let vdata = Arc::new(rng.bytes(vsizes.iter().sum::<u64>() as usize, 13));
+        let block = Arc::new(rng.bytes(10_000, 5));
+
+        // Reference: one rank, strictly serial codec.
+        let reference = write_encoded_file(
+            &format!("ref-{case}"),
+            level,
+            1,
+            || CodecParallel::Serial,
+            Arc::clone(&arr),
+            elem,
+            Arc::new(Partition::uniform(1, an)),
+            Arc::clone(&vdata),
+            Arc::clone(&vsizes),
+            Arc::new(Partition::uniform(1, vn)),
+            Arc::clone(&block),
+        );
+
+        for ranks in [1usize, 2, 3] {
+            let apart = Arc::new(Partition::from_counts(&rng.partition(an, ranks)));
+            let vpart = Arc::new(Partition::from_counts(&rng.partition(vn, ranks)));
+            for lanes in [1usize, 2, 8] {
+                // One caller-owned pool shared by all ranks of the group.
+                let pool = Arc::new(CodecPool::new(lanes));
+                let pool2 = Arc::clone(&pool);
+                let got = write_encoded_file(
+                    &format!("got-{case}-{ranks}-{lanes}"),
+                    level,
+                    ranks,
+                    move || CodecParallel::Pool(Arc::clone(&pool2)),
+                    Arc::clone(&arr),
+                    elem,
+                    Arc::clone(&apart),
+                    Arc::clone(&vdata),
+                    Arc::clone(&vsizes),
+                    Arc::clone(&vpart),
+                    Arc::clone(&block),
+                );
+                assert_eq!(
+                    got, reference,
+                    "case {case} level {level}: bytes differ at ranks={ranks} lanes={lanes}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn decoded_payloads_identical_across_worker_counts_and_partitions() {
+    let mut rng = Rng::new(0xDEC0DE);
+    let elem = 512u64;
+    let an = 150u64;
+    let arr = Arc::new(rng.bytes((an * elem) as usize, 6));
+    let vn = 90u64;
+    let vsizes = Arc::new(varray_sizes(&mut rng, vn));
+    let vdata = Arc::new(rng.bytes(vsizes.iter().sum::<u64>() as usize, 9));
+    let block = Arc::new(rng.bytes(5000, 4));
+
+    // Write once (serial reference path).
+    let path = tmp("decode-src");
+    {
+        let mut f = ScdaFile::create(SerialComm::new(), &path, b"pipe-eq").unwrap();
+        f.set_codec_parallel(CodecParallel::Serial);
+        f.write_array(DataSrc::Contiguous(&arr), &Partition::uniform(1, an), elem, Some(b"a"), true).unwrap();
+        f.write_block_from(0, Some(&block), block.len() as u64, Some(b"b"), true).unwrap();
+        f.write_varray(DataSrc::Contiguous(&vdata), &Partition::uniform(1, vn), &vsizes, Some(b"v"), true)
+            .unwrap();
+        f.close().unwrap();
+    }
+
+    // Read back under differing partitions and worker counts; the
+    // stitched plaintext must equal the original data bit-for-bit.
+    for ranks in [1usize, 2, 4] {
+        let apart = Arc::new(Partition::from_counts(&rng.partition(an, ranks)));
+        let vpart = Arc::new(Partition::from_counts(&rng.partition(vn, ranks)));
+        for lanes in [1usize, 2, 8] {
+            let pool = Arc::new(CodecPool::new(lanes));
+            let (arr2, vdata2, vsizes2, block2, path2) =
+                (Arc::clone(&arr), Arc::clone(&vdata), Arc::clone(&vsizes), Arc::clone(&block), path.clone());
+            let (apart2, vpart2) = (Arc::clone(&apart), Arc::clone(&vpart));
+            run_parallel(ranks, move |comm| {
+                let rank = comm.rank();
+                let mut f = ScdaFile::open(comm, &path2).unwrap();
+                f.set_codec_parallel(CodecParallel::Pool(Arc::clone(&pool)));
+                let h = f.read_section_header(true).unwrap();
+                assert!(h.decoded);
+                let got = f.read_array_data(&apart2, elem, true).unwrap().unwrap();
+                let r = apart2.local_range(rank);
+                assert_eq!(got, arr2[(r.start * elem) as usize..(r.end * elem) as usize], "A lanes mismatch");
+                let h = f.read_section_header(true).unwrap();
+                assert!(h.decoded);
+                let b = f.read_block_data(0, true).unwrap();
+                if rank == 0 {
+                    assert_eq!(b.unwrap(), *block2);
+                }
+                let h = f.read_section_header(true).unwrap();
+                assert!(h.decoded);
+                let sizes = f.read_varray_sizes(&vpart2).unwrap();
+                let r = vpart2.local_range(rank);
+                assert_eq!(sizes, vsizes2[r.start as usize..r.end as usize]);
+                let got = f.read_varray_data(&vpart2, &sizes, true).unwrap().unwrap();
+                let start: u64 = vsizes2[..r.start as usize].iter().sum();
+                let len: u64 = sizes.iter().sum();
+                assert_eq!(got, vdata2[start as usize..(start + len) as usize], "V lanes mismatch");
+                f.close().unwrap();
+            });
+        }
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn shared_pool_default_matches_serial_bytes() {
+    // The default configuration (shared global pool) must also be
+    // byte-identical to the serial path.
+    let mut rng = Rng::new(0x51AB);
+    let elem = 300u64;
+    let n = 64u64;
+    let data = rng.bytes((n * elem) as usize, 11);
+    let part = Partition::uniform(1, n);
+    let write = |par: CodecParallel, name: &str| -> Vec<u8> {
+        let path = tmp(name);
+        let mut f = ScdaFile::create(SerialComm::new(), &path, b"pipe-eq").unwrap();
+        f.set_codec_parallel(par);
+        f.write_array(DataSrc::Contiguous(&data), &part, elem, Some(b"a"), true).unwrap();
+        f.close().unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        bytes
+    };
+    let serial = write(CodecParallel::Serial, "shared-serial");
+    let shared = write(CodecParallel::Shared, "shared-pool");
+    assert_eq!(serial, shared);
+}
