@@ -74,4 +74,26 @@ fn main() {
     let json = scda::bench_support::bench_json_path();
     t.report().write(&json).unwrap();
     println!("wrote {}", json.display());
+
+    // --- raw I/O syscall shape (write aggregation + read sieving) ---
+    let io = scda::bench_support::io_bench::run_quick();
+    println!(
+        "\nF1 I/O aggregation quick check ({} MiB, {} ranks, {} sections): write {:.0} -> {:.0} MiB/s, \
+         {} -> {} write syscalls ({:.0}x fewer); read {:.0} -> {:.0} MiB/s, {} -> {} read syscalls",
+        io.payload_bytes >> 20,
+        io.ranks,
+        io.sections,
+        io.write_direct_mib_s,
+        io.write_agg_mib_s,
+        io.write_calls_direct,
+        io.write_calls_agg,
+        io.write_syscall_reduction(),
+        io.read_direct_mib_s,
+        io.read_sieved_mib_s,
+        io.read_calls_direct,
+        io.read_calls_sieved,
+    );
+    let io_json = scda::bench_support::bench_io_json_path();
+    io.report().write(&io_json).unwrap();
+    println!("wrote {}", io_json.display());
 }

@@ -140,4 +140,41 @@ fn main() {
     }
     table.print();
     println!("\nT2 note: identical storage substrate; scda additionally guarantees one partition-independent file.");
+
+    // --- small-element varray I/O: where write aggregation pays ---
+    // The table above writes one huge contiguous A window per rank (already
+    // ~one syscall); the aggregation win is on metadata-interleaved
+    // sections with small indirect elements. Full-size comparison here,
+    // recorded to BENCH_io.json.
+    let (sections, elems, ebytes, ioreps) = if quick { (8, 128, 4 << 10, 2) } else { (16, 512, 8 << 10, 3) };
+    let mut iot = Table::new(&[
+        "P",
+        "direct write MiB/s",
+        "agg write MiB/s",
+        "direct read MiB/s",
+        "sieved read MiB/s",
+        "write syscalls direct/agg",
+        "read syscalls direct/sieved",
+    ]);
+    let mut last = None;
+    for p in [1usize, 4] {
+        let io = scda::bench_support::io_bench::run(p, sections, elems, ebytes, ioreps);
+        iot.row(&[
+            p.to_string(),
+            format!("{:.0}", io.write_direct_mib_s),
+            format!("{:.0}", io.write_agg_mib_s),
+            format!("{:.0}", io.read_direct_mib_s),
+            format!("{:.0}", io.read_sieved_mib_s),
+            format!("{}/{} ({:.0}x)", io.write_calls_direct, io.write_calls_agg, io.write_syscall_reduction()),
+            format!("{}/{} ({:.0}x)", io.read_calls_direct, io.read_calls_sieved, io.read_syscall_reduction()),
+        ]);
+        last = Some(io);
+    }
+    println!("\nT2b: {sections} varray sections of {elems} x {} KiB indirect elements per rank\n", ebytes >> 10);
+    iot.print();
+    if let Some(io) = last {
+        let io_json = scda::bench_support::bench_io_json_path();
+        io.report().write(&io_json).unwrap();
+        println!("\nwrote {}", io_json.display());
+    }
 }

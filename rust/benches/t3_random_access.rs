@@ -78,4 +78,23 @@ fn main() {
     }
     table.print();
     println!("\nT3 shape check: per-elem latency ~flat in N; monolithic grows ~linearly (who wins: per-element, by O(N/k)).");
+
+    // --- selective access also needs cheap metadata scans: toc() with
+    // the read sieve vs direct per-row reads ---
+    println!("\nT3b: full-file section scan (toc) of S small V sections, read sieve vs direct\n");
+    let mut scan_table = Table::new(&["S", "direct ms", "sieved ms", "direct preads", "sieved preads", "fstats"]);
+    let scan_sizes: &[usize] = if quick { &[64, 256] } else { &[64, 256, 1024] };
+    for &s in scan_sizes {
+        let p = scda::bench_support::io_bench::toc_scan(s, reps);
+        scan_table.row(&[
+            s.to_string(),
+            format!("{:.3}", p.direct_ms),
+            format!("{:.3}", p.sieved_ms),
+            p.direct_read_calls.to_string(),
+            p.sieved_read_calls.to_string(),
+            p.stat_calls.to_string(),
+        ]);
+    }
+    scan_table.print();
+    println!("\nT3b shape check: sieved preads ~= bytes/window (flat-ish); direct grows with S; fstats stay O(1) (cached length).");
 }

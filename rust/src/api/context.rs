@@ -17,8 +17,9 @@ use crate::format::header::{encode_file_header, parse_file_header, FileHeader};
 use crate::format::limits::{FILE_HEADER_BYTES, VENDOR_STRING};
 use crate::format::padding::LineStyle;
 use crate::format::section::SectionMeta;
+use crate::io::{IoTuning, ReadSieve, WriteAggregator};
 use crate::par::comm::Communicator;
-use crate::par::pfile::ParallelFile;
+use crate::par::pfile::{IoStats, ParallelFile};
 use crate::par::pool::CodecPool;
 
 /// Open mode, matching `scda_fopen`'s `'w'` / `'r'`.
@@ -112,6 +113,12 @@ pub struct ScdaFile<C: Communicator> {
     pub(crate) header: Option<FileHeader>,
     /// Whether `close` fsyncs (checkpoint durability; default true).
     pub(crate) sync_on_close: bool,
+    /// I/O aggregation knobs (see [`crate::io`]).
+    pub(crate) tuning: IoTuning,
+    /// Write-side staging buffer (this rank's pending extents).
+    pub(crate) agg: WriteAggregator,
+    /// Read-side buffered window (read mode with a nonzero sieve window).
+    pub(crate) sieve: Option<ReadSieve>,
 }
 
 impl<C: Communicator> std::fmt::Debug for ScdaFile<C> {
@@ -133,11 +140,7 @@ impl<C: Communicator> ScdaFile<C> {
         let file = ParallelFile::create(&comm, path.as_ref())?;
         let style = LineStyle::Unix;
         let header = encode_file_header(VENDOR_STRING, user, style)?;
-        if comm.rank() == 0 {
-            file.write_at(0, &header)?;
-        }
-        comm.barrier();
-        Ok(ScdaFile {
+        let mut f = ScdaFile {
             comm,
             file,
             cursor: FILE_HEADER_BYTES as u64,
@@ -148,14 +151,32 @@ impl<C: Communicator> ScdaFile<C> {
             pending: Pending::None,
             header: None,
             sync_on_close: true,
-        })
+            tuning: IoTuning::default(),
+            agg: WriteAggregator::new(),
+            sieve: None,
+        };
+        // The file header is just the first staged extent: it coalesces
+        // with the first section's rows into one write.
+        if f.comm.rank() == 0 {
+            f.stage_write(0, &header)?;
+        }
+        f.comm.barrier();
+        Ok(f)
     }
 
     /// `scda_fopen(comm, filename, 'r', userstr)`: collectively open and
     /// validate the file header; the cursor lands after it.
     pub fn open(comm: C, path: impl AsRef<Path>) -> Result<Self> {
         let file = ParallelFile::open_read(&comm, path.as_ref())?;
-        let bytes = file.read_vec(0, FILE_HEADER_BYTES)?;
+        let tuning = IoTuning::default();
+        let mut sieve =
+            if tuning.sieve_window > 0 { Some(ReadSieve::new(tuning.sieve_window, file.len()?)) } else { None };
+        // Route the header read through the sieve: the same window also
+        // covers the first sections' header rows.
+        let bytes = match &mut sieve {
+            Some(s) => s.read_vec(&file, 0, FILE_HEADER_BYTES)?,
+            None => file.read_vec(0, FILE_HEADER_BYTES)?,
+        };
         let header = parse_file_header(&bytes, false)?;
         Ok(ScdaFile {
             comm,
@@ -168,6 +189,9 @@ impl<C: Communicator> ScdaFile<C> {
             pending: Pending::None,
             header: Some(header),
             sync_on_close: false,
+            tuning,
+            agg: WriteAggregator::new(),
+            sieve,
         })
     }
 
@@ -210,6 +234,63 @@ impl<C: Communicator> ScdaFile<C> {
         self
     }
 
+    /// Configure the I/O aggregation knobs (see [`crate::io`]). In write
+    /// mode any staged extents are flushed first, so retuning mid-file is
+    /// safe; in read mode the sieve window is rebuilt. The file bytes are
+    /// identical under every tuning — [`IoTuning::direct`] is the
+    /// reference path; only the syscall shape changes.
+    pub fn set_io_tuning(&mut self, tuning: IoTuning) -> Result<&mut Self> {
+        self.flush_staged()?;
+        self.tuning = tuning;
+        self.sieve = if self.mode == OpenMode::Read && tuning.sieve_window > 0 {
+            Some(ReadSieve::new(tuning.sieve_window, self.file.len()?))
+        } else {
+            None
+        };
+        Ok(self)
+    }
+
+    /// The active I/O aggregation knobs.
+    pub fn io_tuning(&self) -> IoTuning {
+        self.tuning
+    }
+
+    /// Syscall counters of this rank's file handle (staged writes count
+    /// only once flushed).
+    pub fn io_stats(&self) -> IoStats {
+        self.file.io_stats()
+    }
+
+    /// Force all staged writes to the file (write mode). `close` does
+    /// this implicitly; call it to make bytes visible mid-file, e.g.
+    /// before sampling [`Self::io_stats`].
+    pub fn flush(&mut self) -> Result<()> {
+        self.flush_staged()
+    }
+
+    /// Stage a positional write, or issue it directly when aggregation is
+    /// off or the payload alone reaches the staging capacity (it is
+    /// already a single syscall). Draining the staged extents before a
+    /// direct write preserves stage order, so the bytes equal the direct
+    /// path under any interleaving.
+    pub(crate) fn stage_write(&mut self, offset: u64, data: &[u8]) -> Result<()> {
+        let cap = self.tuning.aggregation_buffer;
+        if cap == 0 || data.len() >= cap {
+            self.flush_staged()?;
+            return self.file.write_at(offset, data);
+        }
+        if self.agg.staged_bytes() + data.len() > cap {
+            self.flush_staged()?;
+        }
+        self.agg.stage(offset, data);
+        Ok(())
+    }
+
+    pub(crate) fn flush_staged(&mut self) -> Result<()> {
+        self.agg.flush_to(&self.file)?;
+        Ok(())
+    }
+
     /// The pool to fan element batches out to, if any.
     pub(crate) fn codec_pool(&self) -> Option<&CodecPool> {
         match &self.codec_par {
@@ -223,8 +304,8 @@ impl<C: Communicator> ScdaFile<C> {
         &self.comm
     }
 
-    /// Absolute offset of the next section (equals current file length in
-    /// write mode).
+    /// Absolute offset of the next section (in write mode, the file
+    /// length once all staged writes are flushed).
     pub fn position(&self) -> u64 {
         self.cursor
     }
@@ -249,10 +330,12 @@ impl<C: Communicator> ScdaFile<C> {
         Ok(())
     }
 
-    /// `scda_fclose`: collective; flushes in write mode. The context is
-    /// consumed (deallocation is automatic in Rust, error or not).
-    pub fn close(self) -> Result<()> {
+    /// `scda_fclose`: collective; flushes in write mode (staged extents
+    /// first, then optionally to stable storage). The context is consumed
+    /// (deallocation is automatic in Rust, error or not).
+    pub fn close(mut self) -> Result<()> {
         if self.mode == OpenMode::Write {
+            self.flush_staged()?;
             self.comm.barrier();
             if self.sync_on_close && self.comm.rank() == 0 {
                 self.file.sync()?;

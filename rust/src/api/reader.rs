@@ -40,6 +40,11 @@ impl<C: Communicator> ScdaFile<C> {
     /// A cursor *past* the end means the previous section's trailing
     /// bytes (typically its data padding) are missing — a truncated file.
     pub fn at_end(&self) -> Result<bool> {
+        if self.mode == OpenMode::Write {
+            // The write cursor *is* the end: staged extents may not have
+            // reached the disk yet, so the file length can lag it.
+            return Ok(true);
+        }
         let flen = self.file.len()?;
         if self.cursor > flen {
             return Err(ScdaError::corrupt(
@@ -78,20 +83,39 @@ impl<C: Communicator> ScdaFile<C> {
         Ok(header)
     }
 
-    fn parse_prefix_at(&self, off: u64) -> Result<(SectionMeta, usize)> {
+    /// Parse the section prefix at `off`. The file length comes from the
+    /// open-time cache (no per-section `fstat`), and the prefix bytes are
+    /// served from the read sieve's window when one is attached — for a
+    /// sequential section scan the window refills once per `sieve_window`
+    /// bytes instead of once per section.
+    fn parse_prefix_at(&mut self, off: u64) -> Result<(SectionMeta, usize)> {
         let flen = self.file.len()?;
         if off >= flen {
             return Err(ScdaError::corrupt(corrupt::TRUNCATED, "no further section in file"));
         }
         let take = (flen - off).min(SECTION_PREFIX_MAX as u64) as usize;
-        let bytes = self.file.read_vec(off, take)?;
-        parse_section_prefix(&bytes)
+        match &mut self.sieve {
+            Some(s) => parse_section_prefix(s.view(&self.file, off, take)?),
+            None => parse_section_prefix(&self.file.read_vec(off, take)?),
+        }
+    }
+
+    /// Read `len` bytes at `off`: small reads are served from the sieve
+    /// window, large ones (or all reads without a sieve) go straight to
+    /// the file into an exactly-sized buffer.
+    fn read_sieved(&mut self, off: u64, len: usize) -> Result<Vec<u8>> {
+        if let Some(s) = &mut self.sieve {
+            if len < s.window() {
+                return s.read_vec(&self.file, off, len);
+            }
+        }
+        self.file.read_vec(off, len)
     }
 
     /// Convention (8): the inline data is a `U` count entry with the
     /// uncompressed size; the next raw section must be a `B`.
     fn begin_decoded_block(&mut self, u_off: u64) -> Result<SectionHeader> {
-        let entry = self.file.read_vec(u_off, COUNT_ENTRY_BYTES)?;
+        let entry = self.read_sieved(u_off, COUNT_ENTRY_BYTES)?;
         let uncompressed = decode_count(&entry, b'U')?;
         let next = u_off + INLINE_DATA_BYTES as u64;
         let (meta_b, prefix_len) = self.parse_prefix_at(next)?;
@@ -120,7 +144,7 @@ impl<C: Communicator> ScdaFile<C> {
     /// Convention (9): inline `U` entry holds the fixed uncompressed
     /// element size; the next raw section must be a `V` with the same `N`.
     fn begin_decoded_array(&mut self, u_off: u64) -> Result<SectionHeader> {
-        let entry = self.file.read_vec(u_off, COUNT_ENTRY_BYTES)?;
+        let entry = self.read_sieved(u_off, COUNT_ENTRY_BYTES)?;
         let uncomp_elem = decode_count(&entry, b'U')?;
         let next = u_off + INLINE_DATA_BYTES as u64;
         let (v_meta, prefix_len) = self.parse_prefix_at(next)?;
@@ -196,7 +220,7 @@ impl<C: Communicator> ScdaFile<C> {
             return Err(wrong_section("read_inline_data", meta.kind));
         }
         let out = if self.comm.rank() == root && want {
-            let v = self.file.read_vec(payload_off, INLINE_DATA_BYTES)?;
+            let v = self.read_sieved(payload_off, INLINE_DATA_BYTES)?;
             Some(<[u8; 32]>::try_from(v.as_slice()).unwrap())
         } else {
             None
@@ -216,7 +240,7 @@ impl<C: Communicator> ScdaFile<C> {
                     return Err(wrong_section("read_block_data", meta.kind));
                 }
                 let out = if self.comm.rank() == root && want {
-                    Some(self.file.read_vec(payload_off, count_to_usize(meta.elem_size, "block")?)?)
+                    Some(self.read_sieved(payload_off, count_to_usize(meta.elem_size, "block")?)?)
                 } else {
                     None
                 };
@@ -226,7 +250,7 @@ impl<C: Communicator> ScdaFile<C> {
             }
             Pending::DecodedBlock { meta, payload_off, uncompressed } => {
                 let out = if self.comm.rank() == root && want {
-                    let comp = self.file.read_vec(payload_off, count_to_usize(meta.elem_size, "block")?)?;
+                    let comp = self.read_sieved(payload_off, count_to_usize(meta.elem_size, "block")?)?;
                     let data = decode_element(&comp)?;
                     if data.len() as u64 != uncompressed {
                         return Err(ScdaError::corrupt(
@@ -269,7 +293,7 @@ impl<C: Communicator> ScdaFile<C> {
                 let out = if want {
                     let np = part.count(rank);
                     let off = payload_off + part.offset(rank) * elem_size;
-                    Some(self.file.read_vec(off, (np * elem_size) as usize)?)
+                    Some(self.read_sieved(off, (np * elem_size) as usize)?)
                 } else {
                     None
                 };
@@ -300,6 +324,63 @@ impl<C: Communicator> ScdaFile<C> {
                 Ok(out)
             }
             _ => Err(call_seq("read_array_data without a pending array section")),
+        }
+    }
+
+    /// [`Self::read_array_data`] into a caller-supplied buffer of exactly
+    /// `N_p · E` bytes: the raw path reads straight from the file into
+    /// `buf` — no intermediate allocation, no zero-fill — which is the
+    /// restart-loop shape (one persistent buffer per field, reused every
+    /// step). Decoded sections inflate first and then copy. Collective
+    /// like `read_array_data` with `want = true` on every rank; ranks
+    /// with no local elements pass an empty buffer.
+    pub fn read_array_data_into(&mut self, part: &Partition, elem_size: u64, buf: &mut [u8]) -> Result<()> {
+        self.check_partition(part)?;
+        let rank = self.comm.rank();
+        let np = part.count(rank);
+        if buf.len() as u64 != np * elem_size {
+            return Err(ScdaError::usage(
+                usage::BUFFER_SIZE,
+                format!("buffer has {} bytes for {np} elements of {elem_size}", buf.len()),
+            ));
+        }
+        let pending = std::mem::replace(&mut self.pending, Pending::None);
+        match pending {
+            Pending::Raw { meta, payload_off } => {
+                if meta.kind != SectionKind::Array {
+                    return Err(wrong_section("read_array_data_into", meta.kind));
+                }
+                part.check_total(to_u64(meta.elem_count, "N")?)?;
+                if elem_size as u128 != meta.elem_size {
+                    return Err(ScdaError::usage(
+                        usage::BUFFER_SIZE,
+                        format!("element size {elem_size} does not match section's {}", meta.elem_size),
+                    ));
+                }
+                if !buf.is_empty() {
+                    let off = payload_off + part.offset(rank) * elem_size;
+                    self.file.read_at(off, buf)?;
+                }
+                self.cursor += meta.total_len(None) as u64;
+                self.comm.barrier();
+                Ok(())
+            }
+            decoded @ Pending::DecodedArray { .. } => {
+                // Decoded sections inflate through the shared path of
+                // read_array_data (validation, cursor advance, barrier),
+                // then copy into the caller's buffer.
+                self.pending = decoded;
+                let out = self.read_array_data(part, elem_size, true)?.unwrap_or_default();
+                if out.len() != buf.len() {
+                    return Err(ScdaError::corrupt(
+                        corrupt::SIZE_MISMATCH,
+                        format!("decoded payload is {} bytes, buffer expects {}", out.len(), buf.len()),
+                    ));
+                }
+                buf.copy_from_slice(&out);
+                Ok(())
+            }
+            _ => Err(call_seq("read_array_data_into without a pending array section")),
         }
     }
 
@@ -358,7 +439,7 @@ impl<C: Communicator> ScdaFile<C> {
                 let my_off: u64 = sq[..rank].iter().sum();
                 let total: u64 = sq.iter().sum();
                 let out = if want {
-                    Some(self.file.read_vec(data_off + my_off, local_bytes as usize)?)
+                    Some(self.read_sieved(data_off + my_off, local_bytes as usize)?)
                 } else {
                     None
                 };
@@ -383,7 +464,7 @@ impl<C: Communicator> ScdaFile<C> {
     /// all file section headers but skips the data bytes".
     pub fn skip_section_data(&mut self) -> Result<()> {
         let pending = std::mem::replace(&mut self.pending, Pending::None);
-        let adv = |this: &Self, meta: &SectionMeta, payload_off: u64| -> Result<u64> {
+        let adv = |this: &mut Self, meta: &SectionMeta, payload_off: u64| -> Result<u64> {
             match meta.kind {
                 SectionKind::Varray => {
                     let n = to_u64(meta.elem_count, "N")?;
@@ -426,15 +507,15 @@ impl<C: Communicator> ScdaFile<C> {
     // Internals
     // ------------------------------------------------------------------
 
-    /// Read `count` 32-byte size rows starting at global row `first`.
-    fn read_size_rows(&self, rows_off: u64, first: u64, count: u64, letter: u8) -> Result<Vec<u64>> {
+    /// Read `count` 32-byte size rows starting at global row `first`
+    /// (served from the sieve window when small).
+    fn read_size_rows(&mut self, rows_off: u64, first: u64, count: u64, letter: u8) -> Result<Vec<u64>> {
         let mut sizes = Vec::with_capacity(count as usize);
         if count == 0 {
             return Ok(sizes);
         }
-        let bytes = self
-            .file
-            .read_vec(rows_off + first * COUNT_ENTRY_BYTES as u64, (count as usize) * COUNT_ENTRY_BYTES)?;
+        let bytes =
+            self.read_sieved(rows_off + first * COUNT_ENTRY_BYTES as u64, (count as usize) * COUNT_ENTRY_BYTES)?;
         for row in bytes.chunks_exact(COUNT_ENTRY_BYTES) {
             sizes.push(to_u64(decode_count(row, letter)?, "element size")?);
         }
@@ -442,7 +523,7 @@ impl<C: Communicator> ScdaFile<C> {
     }
 
     /// Sum all `n` size rows (used by skip paths; reads in 8 KiB chunks).
-    fn sum_size_rows(&self, rows_off: u64, n: u64) -> Result<u64> {
+    fn sum_size_rows(&mut self, rows_off: u64, n: u64) -> Result<u64> {
         let mut total = 0u64;
         let chunk_rows = 256u64;
         let mut at = 0u64;
@@ -468,7 +549,7 @@ impl<C: Communicator> ScdaFile<C> {
     /// size (the sum of the recorded uncompressed sizes), one memcpy per
     /// batch.
     fn read_compressed_elements(
-        &self,
+        &mut self,
         part: &Partition,
         erows_off: u64,
         n: u64,
@@ -485,7 +566,7 @@ impl<C: Communicator> ScdaFile<C> {
         if !want {
             return Ok((None, total));
         }
-        let blob = self.file.read_vec(data_off + my_off, local_comp as usize)?;
+        let blob = self.read_sieved(data_off + my_off, local_comp as usize)?;
         // Per-element views into the blob, in element order.
         let mut elems: Vec<&[u8]> = Vec::with_capacity(comp_sizes.len());
         let mut at = 0usize;

@@ -114,10 +114,10 @@ impl<C: Communicator> ScdaFile<C> {
         }
         let row = encode_type_row(SectionKind::Inline, user, self.style)?;
         if self.comm.rank() == 0 {
-            self.file.write_at(self.cursor, &row)?;
+            self.stage_write(self.cursor, &row)?;
         }
         if self.comm.rank() == root {
-            self.file.write_at(self.cursor + SECTION_HEADER_BYTES as u64, data.unwrap())?;
+            self.stage_write(self.cursor + SECTION_HEADER_BYTES as u64, data.unwrap())?;
         }
         self.comm.barrier();
         self.cursor += INLINE_SECTION_BYTES as u64;
@@ -183,15 +183,15 @@ impl<C: Communicator> ScdaFile<C> {
         let mut head = encode_type_row(SectionKind::Block, user, self.style)?;
         encode_count(&mut head, b'E', len as u128, self.style)?;
         if self.comm.rank() == 0 {
-            self.file.write_at(self.cursor, &head)?;
+            self.stage_write(self.cursor, &head)?;
         }
         let data_off = self.cursor + meta.header_len() as u64;
         if self.comm.rank() == root {
             let d = data.unwrap();
-            self.file.write_at(data_off, d)?;
+            self.stage_write(data_off, d)?;
             let mut pad = Vec::new();
             pad_data(&mut pad, len as u128, d.last().copied(), self.style);
-            self.file.write_at(data_off + len, &pad)?;
+            self.stage_write(data_off + len, &pad)?;
         }
         self.comm.barrier();
         self.cursor += meta.total_len(None) as u64;
@@ -237,7 +237,7 @@ impl<C: Communicator> ScdaFile<C> {
         encode_count(&mut head, b'N', part.total() as u128, self.style)?;
         encode_count(&mut head, b'E', elem_size as u128, self.style)?;
         if self.comm.rank() == 0 {
-            self.file.write_at(self.cursor, &head)?;
+            self.stage_write(self.cursor, &head)?;
         }
         let data_off = self.cursor + meta.header_len() as u64;
         let my_off = data_off + part.offset(self.comm.rank()) * elem_size;
@@ -249,7 +249,7 @@ impl<C: Communicator> ScdaFile<C> {
         if self.comm.rank() == 0 {
             let mut pad = Vec::new();
             pad_data(&mut pad, total as u128, last, self.style);
-            self.file.write_at(data_off + total, &pad)?;
+            self.stage_write(data_off + total, &pad)?;
         }
         self.comm.barrier();
         self.cursor += meta.total_len(None) as u64;
@@ -323,7 +323,7 @@ impl<C: Communicator> ScdaFile<C> {
         let mut head = encode_type_row(SectionKind::Varray, user, self.style)?;
         encode_count(&mut head, b'N', n as u128, self.style)?;
         if self.comm.rank() == 0 {
-            self.file.write_at(self.cursor, &head)?;
+            self.stage_write(self.cursor, &head)?;
         }
         // Per-rank E_i rows.
         let erows_off = self.cursor + (SECTION_HEADER_BYTES + COUNT_ENTRY_BYTES) as u64;
@@ -333,7 +333,8 @@ impl<C: Communicator> ScdaFile<C> {
         }
         let my_rank = self.comm.rank();
         if !rows.is_empty() {
-            self.file.write_at(erows_off + part.offset(my_rank) * COUNT_ENTRY_BYTES as u64, &rows)?;
+            let off = erows_off + part.offset(my_rank) * COUNT_ENTRY_BYTES as u64;
+            self.stage_write(off, &rows)?;
         }
         // Per-rank data windows from the S_q prefix.
         let local_bytes: u64 = local_sizes.iter().sum();
@@ -346,7 +347,7 @@ impl<C: Communicator> ScdaFile<C> {
         if self.comm.rank() == 0 {
             let mut pad = Vec::new();
             pad_data(&mut pad, total_bytes as u128, last, self.style);
-            self.file.write_at(data_off + total_bytes, &pad)?;
+            self.stage_write(data_off + total_bytes, &pad)?;
         }
         self.comm.barrier();
         self.cursor += meta.total_len(Some(total_bytes as u128)) as u64;
@@ -429,9 +430,13 @@ impl<C: Communicator> ScdaFile<C> {
     }
 
     /// Write this rank's element data starting at `offset` (contiguous in
-    /// the file even when indirectly addressed in memory).
+    /// the file even when indirectly addressed in memory). Staged through
+    /// the aggregator: an `Indirect` element list gathers into contiguous
+    /// staged runs, so scattered in-memory elements reach the file with
+    /// one syscall per run — the `pwritev` effect — instead of one per
+    /// element.
     fn write_windows(
-        &self,
+        &mut self,
         offset: u64,
         data: &DataSrc<'_>,
         sizes: impl Iterator<Item = u64>,
@@ -439,7 +444,7 @@ impl<C: Communicator> ScdaFile<C> {
         match data {
             DataSrc::Contiguous(b) => {
                 if !b.is_empty() {
-                    self.file.write_at(offset, b)?;
+                    self.stage_write(offset, b)?;
                 }
                 Ok(())
             }
@@ -447,7 +452,7 @@ impl<C: Communicator> ScdaFile<C> {
                 let mut at = offset;
                 data.for_each_element(sizes, |elem| {
                     if !elem.is_empty() {
-                        self.file.write_at(at, elem)?;
+                        self.stage_write(at, elem)?;
                     }
                     at += elem.len() as u64;
                     Ok(())

@@ -233,6 +233,13 @@ pub fn bench_json_path() -> std::path::PathBuf {
         .unwrap_or_else(|| std::path::PathBuf::from("BENCH_codec.json"))
 }
 
+/// Where I/O bench numbers land (`SCDA_BENCH_IO_JSON` overrides).
+pub fn bench_io_json_path() -> std::path::PathBuf {
+    std::env::var_os("SCDA_BENCH_IO_JSON")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| std::path::PathBuf::from("BENCH_io.json"))
+}
+
 /// Encoded write/read throughput of the per-element codec pipeline,
 /// serial vs pooled — the perf-trajectory numbers this PR's acceptance
 /// criterion tracks. Shared by the f1/t4 benches and the ignored-by-
@@ -359,6 +366,247 @@ pub mod codec_bench {
     /// elements, 4 codec lanes.
     pub fn run_quick() -> CodecThroughput {
         run(4, 8 << 20, 64 << 10, 3)
+    }
+}
+
+/// Raw I/O throughput and syscall shape of the section paths, aggregated
+/// ([`crate::io`], the default tuning) vs direct (one syscall per
+/// logical access) — the numbers `BENCH_io.json` tracks. The workload is
+/// the aggregation-adversarial one: multi-section varrays of small
+/// *indirectly addressed* elements, so the direct path pays one `pwrite`
+/// per element and the aggregated path one per contiguous run. Shared by
+/// the f1/t2/t3 benches and the ignored-by-default smoke test.
+pub mod io_bench {
+    use super::{measure, JsonVal};
+    use crate::api::{DataSrc, IoTuning, ScdaFile};
+    use crate::par::{run_parallel, Communicator, IoStats, Partition, SerialComm};
+    use std::path::PathBuf;
+    use std::sync::Arc;
+
+    /// One aggregated-vs-direct comparison (syscalls from an instrumented
+    /// pass, MiB/s medians from `reps` timed passes).
+    #[derive(Debug, Clone)]
+    pub struct IoProfile {
+        pub ranks: usize,
+        pub sections: usize,
+        pub payload_bytes: u64,
+        pub write_direct_mib_s: f64,
+        pub write_agg_mib_s: f64,
+        pub read_direct_mib_s: f64,
+        pub read_sieved_mib_s: f64,
+        /// Syscalls summed over all ranks for one whole-file pass.
+        pub write_calls_direct: u64,
+        pub write_calls_agg: u64,
+        pub read_calls_direct: u64,
+        pub read_calls_sieved: u64,
+    }
+
+    impl IoProfile {
+        /// How many times fewer write syscalls aggregation issues.
+        pub fn write_syscall_reduction(&self) -> f64 {
+            self.write_calls_direct as f64 / self.write_calls_agg.max(1) as f64
+        }
+
+        pub fn read_syscall_reduction(&self) -> f64 {
+            self.read_calls_direct as f64 / self.read_calls_sieved.max(1) as f64
+        }
+
+        /// The standard `BENCH_io.json` report for these numbers.
+        pub fn report(&self) -> super::BenchReport {
+            let mut r = super::BenchReport::new("io");
+            r.meta("quick", JsonVal::Bool(super::quick()))
+                .meta("ranks", JsonVal::Int(self.ranks as i64))
+                .meta("sections", JsonVal::Int(self.sections as i64))
+                .meta("payload_bytes", JsonVal::Int(self.payload_bytes as i64));
+            r.entry(vec![
+                ("name", JsonVal::Str("varray_write".into())),
+                ("direct_mib_per_s", JsonVal::Num(self.write_direct_mib_s)),
+                ("aggregated_mib_per_s", JsonVal::Num(self.write_agg_mib_s)),
+                ("speedup", JsonVal::Num(self.write_agg_mib_s / self.write_direct_mib_s)),
+                ("direct_write_calls", JsonVal::Int(self.write_calls_direct as i64)),
+                ("aggregated_write_calls", JsonVal::Int(self.write_calls_agg as i64)),
+                ("syscall_reduction", JsonVal::Num(self.write_syscall_reduction())),
+            ]);
+            r.entry(vec![
+                ("name", JsonVal::Str("varray_read".into())),
+                ("direct_mib_per_s", JsonVal::Num(self.read_direct_mib_s)),
+                ("sieved_mib_per_s", JsonVal::Num(self.read_sieved_mib_s)),
+                ("speedup", JsonVal::Num(self.read_sieved_mib_s / self.read_direct_mib_s)),
+                ("direct_read_calls", JsonVal::Int(self.read_calls_direct as i64)),
+                ("sieved_read_calls", JsonVal::Int(self.read_calls_sieved as i64)),
+                ("syscall_reduction", JsonVal::Num(self.read_syscall_reduction())),
+            ]);
+            r
+        }
+    }
+
+    fn pattern_elem(rank: usize, i: usize, len: usize) -> Vec<u8> {
+        (0..len).map(|b| (rank * 131 + i * 7 + b) as u8).collect()
+    }
+
+    /// Write the whole benchmark file once; per-rank syscall stats.
+    pub fn write_once(
+        path: &Arc<PathBuf>,
+        ranks: usize,
+        sections: usize,
+        elems_per_rank: usize,
+        elem_bytes: usize,
+        tuning: IoTuning,
+    ) -> Vec<IoStats> {
+        let path = Arc::clone(path);
+        run_parallel(ranks, move |comm| {
+            let rank = comm.rank();
+            let part = Partition::uniform(ranks, (ranks * elems_per_rank) as u64);
+            let owned: Vec<Vec<u8>> = (0..elems_per_rank).map(|i| pattern_elem(rank, i, elem_bytes)).collect();
+            let views: Vec<&[u8]> = owned.iter().map(|e| e.as_slice()).collect();
+            let sizes = vec![elem_bytes as u64; elems_per_rank];
+            let mut f = ScdaFile::create(comm, &**path, b"io-bench").unwrap();
+            f.set_sync_on_close(false);
+            f.set_io_tuning(tuning).unwrap();
+            for _ in 0..sections {
+                f.write_varray(DataSrc::Indirect(&views), &part, &sizes, Some(b"w"), false).unwrap();
+            }
+            f.flush().unwrap();
+            let st = f.io_stats();
+            f.close().unwrap();
+            st
+        })
+    }
+
+    /// Read the whole benchmark file once; per-rank syscall stats.
+    pub fn read_once(
+        path: &Arc<PathBuf>,
+        ranks: usize,
+        sections: usize,
+        elems_per_rank: usize,
+        elem_bytes: usize,
+        tuning: IoTuning,
+    ) -> Vec<IoStats> {
+        let path = Arc::clone(path);
+        run_parallel(ranks, move |comm| {
+            let part = Partition::uniform(ranks, (ranks * elems_per_rank) as u64);
+            let mut f = ScdaFile::open(comm, &**path).unwrap();
+            f.set_io_tuning(tuning).unwrap();
+            for _ in 0..sections {
+                f.read_section_header(false).unwrap();
+                let sizes = f.read_varray_sizes(&part).unwrap();
+                let data = f.read_varray_data(&part, &sizes, true).unwrap().unwrap();
+                assert_eq!(data.len(), elems_per_rank * elem_bytes);
+            }
+            let st = f.io_stats();
+            f.close().unwrap();
+            st
+        })
+    }
+
+    /// Measure write/read MiB/s and syscall counts for both tunings.
+    pub fn run(ranks: usize, sections: usize, elems_per_rank: usize, elem_bytes: usize, reps: usize) -> IoProfile {
+        let dir = std::env::temp_dir().join("scda-io-bench");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = Arc::new(dir.join(format!("io-{ranks}-{}.scda", std::process::id())));
+        let payload = (sections * ranks * elems_per_rank * elem_bytes) as u64;
+        let agg = IoTuning::default();
+        let direct = IoTuning::direct();
+
+        // Instrumented passes for the syscall shape (file bytes are
+        // identical under both tunings; rust/tests/io_coalescing.rs
+        // asserts that, so the read passes below see the same file).
+        let sum_w = |v: &[IoStats]| v.iter().map(|s| s.write_calls).sum::<u64>();
+        let sum_r = |v: &[IoStats]| v.iter().map(|s| s.read_calls).sum::<u64>();
+        let write_calls_agg = sum_w(&write_once(&path, ranks, sections, elems_per_rank, elem_bytes, agg));
+        let read_calls_sieved = sum_r(&read_once(&path, ranks, sections, elems_per_rank, elem_bytes, agg));
+        let write_calls_direct = sum_w(&write_once(&path, ranks, sections, elems_per_rank, elem_bytes, direct));
+        let read_calls_direct = sum_r(&read_once(&path, ranks, sections, elems_per_rank, elem_bytes, direct));
+
+        // Timed passes.
+        let mib = |write: bool, tuning: IoTuning| {
+            let s = measure(1, reps, || {
+                if write {
+                    write_once(&path, ranks, sections, elems_per_rank, elem_bytes, tuning);
+                } else {
+                    read_once(&path, ranks, sections, elems_per_rank, elem_bytes, tuning);
+                }
+            });
+            s.mib_per_s(payload)
+        };
+        let write_direct_mib_s = mib(true, direct);
+        let read_direct_mib_s = mib(false, direct);
+        let write_agg_mib_s = mib(true, agg);
+        let read_sieved_mib_s = mib(false, agg);
+        std::fs::remove_file(&*path).ok();
+        IoProfile {
+            ranks,
+            sections,
+            payload_bytes: payload,
+            write_direct_mib_s,
+            write_agg_mib_s,
+            read_direct_mib_s,
+            read_sieved_mib_s,
+            write_calls_direct,
+            write_calls_agg,
+            read_calls_direct,
+            read_calls_sieved,
+        }
+    }
+
+    /// Quick-mode defaults: 2 ranks, 8 varray sections of 64 x 4 KiB
+    /// indirect elements per rank (4 MiB total payload).
+    pub fn run_quick() -> IoProfile {
+        run(2, 8, 64, 4 << 10, 2)
+    }
+
+    /// Sequential metadata scan (`toc`) of a many-section file, sieved vs
+    /// direct: the read-sieve shape for the t3 selective-access story.
+    #[derive(Debug, Clone)]
+    pub struct ScanProfile {
+        pub sections: usize,
+        pub direct_ms: f64,
+        pub sieved_ms: f64,
+        pub direct_read_calls: u64,
+        pub sieved_read_calls: u64,
+        pub stat_calls: u64,
+    }
+
+    pub fn toc_scan(sections: usize, reps: usize) -> ScanProfile {
+        let dir = std::env::temp_dir().join("scda-io-bench");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("scan-{sections}-{}.scda", std::process::id()));
+        {
+            let mut f = ScdaFile::create(SerialComm::new(), &path, b"scan").unwrap();
+            f.set_sync_on_close(false);
+            let part = Partition::uniform(1, 4);
+            let sizes = vec![8u64; 4];
+            let data = vec![0xABu8; 32];
+            for _ in 0..sections {
+                f.write_varray(DataSrc::Contiguous(&data), &part, &sizes, Some(b"s"), false).unwrap();
+            }
+            f.close().unwrap();
+        }
+        let pass = |tuning: IoTuning| {
+            let s = measure(1, reps, || {
+                let mut f = ScdaFile::open(SerialComm::new(), &path).unwrap();
+                f.set_io_tuning(tuning).unwrap();
+                assert_eq!(f.toc(false).unwrap().len(), sections);
+                f.close().unwrap();
+            });
+            let mut f = ScdaFile::open(SerialComm::new(), &path).unwrap();
+            f.set_io_tuning(tuning).unwrap();
+            f.toc(false).unwrap();
+            let st = f.io_stats();
+            f.close().unwrap();
+            (s.median * 1e3, st)
+        };
+        let (direct_ms, st_d) = pass(IoTuning::direct());
+        let (sieved_ms, st_s) = pass(IoTuning::default());
+        std::fs::remove_file(&path).ok();
+        ScanProfile {
+            sections,
+            direct_ms,
+            sieved_ms,
+            direct_read_calls: st_d.read_calls,
+            sieved_read_calls: st_s.read_calls,
+            stat_calls: st_d.stat_calls.max(st_s.stat_calls),
+        }
     }
 }
 

@@ -13,6 +13,9 @@ pub struct Metrics {
     pub bytes_compressed: AtomicU64,
     pub bytes_written: AtomicU64,
     pub bytes_read: AtomicU64,
+    /// Positional write syscalls issued by the file layer (after
+    /// aggregation — see `crate::io`), per `ScdaFile::io_stats`.
+    pub write_calls: AtomicU64,
     pub elements_written: AtomicU64,
     pub sections_written: AtomicU64,
     pub chunks_skipped_incompressible: AtomicU64,
@@ -59,7 +62,7 @@ impl Metrics {
              \x20 in            {:>10.2} MiB\n\
              \x20 transformed   {:>10.2} MiB  ({:.1} ms, {:.0} MiB/s)\n\
              \x20 compressed    {:>10.2} MiB  ({:.1} ms, {:.0} MiB/s, ratio {:.3})\n\
-             \x20 written       {:>10.2} MiB  ({:.1} ms, {:.0} MiB/s)\n\
+             \x20 written       {:>10.2} MiB  ({:.1} ms, {:.0} MiB/s, {} pwrites)\n\
              \x20 sections {}  elements {}  incompressible-chunks {}",
             mb(g(&self.bytes_in)),
             mb(g(&self.bytes_transformed)),
@@ -72,6 +75,7 @@ impl Metrics {
             mb(g(&self.bytes_written)),
             ms(g(&self.ns_write)),
             bw(g(&self.bytes_written), g(&self.ns_write)),
+            g(&self.write_calls),
             g(&self.sections_written),
             g(&self.elements_written),
             g(&self.chunks_skipped_incompressible),

@@ -8,7 +8,10 @@ pub mod pipeline;
 pub mod rebalance;
 pub mod scheduler;
 
-pub use checkpoint::{open_checkpoint, read_checkpoint, write_checkpoint, CheckpointInfo, Field, FieldInfo, FieldPayload};
+pub use checkpoint::{
+    open_checkpoint, read_checkpoint, write_checkpoint, write_checkpoint_tuned, CheckpointInfo, Field, FieldInfo,
+    FieldPayload,
+};
 pub use metrics::Metrics;
 pub use pipeline::{map_ordered, PipelineOpts, Stage};
 pub use rebalance::{by_bytes, by_count, exchange};

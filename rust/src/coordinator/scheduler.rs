@@ -1,183 +1,9 @@
-//! Write aggregation: coalescing a rank's many small positional writes
-//! (section header rows, per-element count rows, data windows) into few
-//! large ones before they hit the file. On a parallel file system each
-//! `pwrite` is a round-trip; on the local substrate it is a syscall —
-//! either way, batching adjacent extents is the classic MPI-I/O
-//! "data sieving / collective buffering" optimization, scoped per rank.
+//! Write scheduling for the coordinator layer.
+//!
+//! The write-aggregation machinery that used to live here was promoted
+//! to [`crate::io`] when the API's section paths were rewired through it
+//! (staging, run merging, and the `pwritev`-style gather now serve every
+//! writer, not just the coordinator). This module re-exports the
+//! coordinator-facing surface so existing call sites keep working.
 
-use crate::error::Result;
-use crate::par::pfile::ParallelFile;
-
-/// A buffered, offset-addressed writer over a [`ParallelFile`].
-///
-/// Writes accumulate in an ordered staging buffer; adjacent or
-/// overlapping extents merge. `flush` issues one `write_at` per merged
-/// extent. The caller must flush before any barrier that publishes the
-/// bytes to other ranks.
-pub struct WriteCoalescer<'a> {
-    file: &'a ParallelFile,
-    staged: Vec<(u64, Vec<u8>)>,
-    staged_bytes: usize,
-    /// Flush automatically when staged bytes exceed this.
-    pub high_water: usize,
-    /// Number of write_at calls issued (observability for benches).
-    pub flushes: u64,
-}
-
-impl<'a> WriteCoalescer<'a> {
-    pub fn new(file: &'a ParallelFile) -> Self {
-        WriteCoalescer { file, staged: Vec::new(), staged_bytes: 0, high_water: 8 * 1024 * 1024, flushes: 0 }
-    }
-
-    /// Stage `data` at absolute `offset`.
-    ///
-    /// Overlapping extents never coexist in the staging buffer: a write
-    /// that overlaps staged bytes first flushes them, preserving the
-    /// temporal last-writer-wins semantics of direct `pwrite`s.
-    pub fn write_at(&mut self, offset: u64, data: &[u8]) -> Result<()> {
-        if data.is_empty() {
-            return Ok(());
-        }
-        // Fast path: append to the last extent if contiguous.
-        if let Some((o, buf)) = self.staged.last_mut() {
-            if *o + buf.len() as u64 == offset {
-                buf.extend_from_slice(data);
-                self.staged_bytes += data.len();
-                if self.staged_bytes >= self.high_water {
-                    self.flush()?;
-                }
-                return Ok(());
-            }
-        }
-        let end = offset + data.len() as u64;
-        let overlaps = self
-            .staged
-            .iter()
-            .any(|(o, buf)| offset < *o + buf.len() as u64 && *o < end);
-        if overlaps {
-            self.flush()?;
-        }
-        self.staged.push((offset, data.to_vec()));
-        self.staged_bytes += data.len();
-        if self.staged_bytes >= self.high_water {
-            self.flush()?;
-        }
-        Ok(())
-    }
-
-    /// Merge adjacent staged extents and issue the minimal set of writes.
-    pub fn flush(&mut self) -> Result<()> {
-        if self.staged.is_empty() {
-            return Ok(());
-        }
-        let mut staged = std::mem::take(&mut self.staged);
-        self.staged_bytes = 0;
-        staged.sort_by_key(|(o, _)| *o);
-        let mut merged: Vec<(u64, Vec<u8>)> = Vec::with_capacity(staged.len());
-        for (o, buf) in staged {
-            match merged.last_mut() {
-                // Extents are non-overlapping by the write_at invariant,
-                // so only exact adjacency merges.
-                Some((mo, mbuf)) if *mo + mbuf.len() as u64 == o => {
-                    mbuf.extend_from_slice(&buf);
-                }
-                _ => merged.push((o, buf)),
-            }
-        }
-        for (o, buf) in merged {
-            self.file.write_at(o, &buf)?;
-            self.flushes += 1;
-        }
-        Ok(())
-    }
-}
-
-impl Drop for WriteCoalescer<'_> {
-    fn drop(&mut self) {
-        // Best-effort: callers should flush explicitly to observe errors.
-        let _ = self.flush();
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::par::{Communicator, SerialComm};
-    use std::path::PathBuf;
-
-    fn tmp(name: &str) -> PathBuf {
-        let dir = std::env::temp_dir().join("scda-sched");
-        std::fs::create_dir_all(&dir).unwrap();
-        dir.join(format!("{name}-{}", std::process::id()))
-    }
-
-    fn comm() -> SerialComm {
-        let c = SerialComm::new();
-        assert_eq!(c.size(), 1);
-        c
-    }
-
-    #[test]
-    fn contiguous_writes_merge_into_one() {
-        let path = tmp("contig");
-        let f = ParallelFile::create(&comm(), &path).unwrap();
-        let mut w = WriteCoalescer::new(&f);
-        for i in 0..100u64 {
-            w.write_at(i * 10, &[i as u8; 10]).unwrap();
-        }
-        w.flush().unwrap();
-        assert_eq!(w.flushes, 1);
-        let data = f.read_vec(0, 1000).unwrap();
-        for i in 0..100 {
-            assert!(data[i * 10..(i + 1) * 10].iter().all(|&b| b == i as u8));
-        }
-        std::fs::remove_file(&path).unwrap();
-    }
-
-    #[test]
-    fn out_of_order_and_gapped_writes() {
-        let path = tmp("gaps");
-        let f = ParallelFile::create(&comm(), &path).unwrap();
-        f.write_at(0, &[0u8; 64]).unwrap(); // pre-extend
-        let mut w = WriteCoalescer::new(&f);
-        w.write_at(40, b"dd").unwrap();
-        w.write_at(0, b"aa").unwrap();
-        w.write_at(2, b"bb").unwrap();
-        w.write_at(20, b"cc").unwrap();
-        w.flush().unwrap();
-        assert_eq!(w.flushes, 3); // [0..4), [20..22), [40..42)
-        let data = f.read_vec(0, 42).unwrap();
-        assert_eq!(&data[0..4], b"aabb");
-        assert_eq!(&data[20..22], b"cc");
-        assert_eq!(&data[40..42], b"dd");
-        std::fs::remove_file(&path).unwrap();
-    }
-
-    #[test]
-    fn overlapping_writes_latest_wins() {
-        let path = tmp("overlap");
-        let f = ParallelFile::create(&comm(), &path).unwrap();
-        let mut w = WriteCoalescer::new(&f);
-        w.write_at(0, b"xxxxxxxx").unwrap();
-        w.write_at(2, b"YY").unwrap();
-        w.flush().unwrap();
-        let data = f.read_vec(0, 8).unwrap();
-        assert_eq!(&data, b"xxYYxxxx");
-        std::fs::remove_file(&path).unwrap();
-    }
-
-    #[test]
-    fn high_water_triggers_flush() {
-        let path = tmp("hiwater");
-        let f = ParallelFile::create(&comm(), &path).unwrap();
-        let mut w = WriteCoalescer::new(&f);
-        w.high_water = 100;
-        w.write_at(0, &[1u8; 60]).unwrap();
-        assert_eq!(w.flushes, 0);
-        w.write_at(60, &[2u8; 60]).unwrap();
-        assert!(w.flushes >= 1); // crossed high water
-        w.flush().unwrap();
-        assert_eq!(f.read_vec(0, 120).unwrap().len(), 120);
-        std::fs::remove_file(&path).unwrap();
-    }
-}
+pub use crate::io::aggregate::{WriteAggregator, WriteCoalescer};

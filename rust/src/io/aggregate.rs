@@ -1,0 +1,293 @@
+//! Write aggregation: coalescing a rank's many small positional writes
+//! (section header rows, per-element count rows, data windows, padding)
+//! into few large ones before they hit the file. On a parallel file
+//! system each `pwrite` is a round-trip; on the local substrate it is a
+//! syscall — either way, batching adjacent extents is the classic MPI-IO
+//! "collective buffering" optimization, scoped per rank.
+//!
+//! Two layers:
+//!
+//! * [`WriteAggregator`] — file-less staging state. The API writer owns
+//!   one per open file (it cannot borrow the file it lives next to), and
+//!   callers flush explicitly with [`WriteAggregator::flush_to`].
+//! * [`WriteCoalescer`] — the borrowing convenience wrapper used by the
+//!   coordinator layer and ablation benches: holds `&ParallelFile`,
+//!   auto-flushes at a high-water mark and on drop.
+
+use crate::error::Result;
+use crate::par::pfile::ParallelFile;
+
+/// Staged positional writes, merged into contiguous runs at flush time.
+///
+/// Extents are recorded in stage order. A *run* is a maximal group of
+/// extents whose byte ranges touch or overlap; flushing materializes each
+/// run by replaying its extents **in stage order** into one buffer and
+/// issuing a single `write_at` — so overlapping stages resolve exactly
+/// like the equivalent sequence of direct `pwrite`s (last writer wins),
+/// and the file bytes never depend on the flush schedule.
+#[derive(Debug, Default)]
+pub struct WriteAggregator {
+    /// Staged extents in stage order.
+    extents: Vec<(u64, Vec<u8>)>,
+    staged_bytes: usize,
+}
+
+impl WriteAggregator {
+    pub fn new() -> Self {
+        WriteAggregator { extents: Vec::new(), staged_bytes: 0 }
+    }
+
+    /// Total staged payload bytes.
+    pub fn staged_bytes(&self) -> usize {
+        self.staged_bytes
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.extents.is_empty()
+    }
+
+    /// Stage `data` at absolute `offset`. Contiguous with the previously
+    /// staged extent, the bytes append in place (the common pattern:
+    /// header row, count rows, data window of one section in file order).
+    pub fn stage(&mut self, offset: u64, data: &[u8]) {
+        if data.is_empty() {
+            return;
+        }
+        if let Some((o, buf)) = self.extents.last_mut() {
+            if *o + buf.len() as u64 == offset {
+                buf.extend_from_slice(data);
+                self.staged_bytes += data.len();
+                return;
+            }
+        }
+        self.extents.push((offset, data.to_vec()));
+        self.staged_bytes += data.len();
+    }
+
+    /// Drain the staged extents into merged contiguous runs, each run a
+    /// single `(offset, bytes)` ready for one `write_at`.
+    pub fn take_runs(&mut self) -> Vec<(u64, Vec<u8>)> {
+        let mut staged = std::mem::take(&mut self.extents);
+        self.staged_bytes = 0;
+        if staged.is_empty() {
+            return Vec::new();
+        }
+        // Sort extent indices by offset (stable: equal offsets keep stage
+        // order) to find runs; replay each run's members in stage order.
+        let mut order: Vec<usize> = (0..staged.len()).collect();
+        order.sort_by_key(|&i| staged[i].0);
+        let mut out: Vec<(u64, Vec<u8>)> = Vec::new();
+        let mut i = 0usize;
+        while i < order.len() {
+            let start = staged[order[i]].0;
+            let mut end = start + staged[order[i]].1.len() as u64;
+            let mut j = i + 1;
+            while j < order.len() {
+                let (o, b) = &staged[order[j]];
+                if *o <= end {
+                    end = end.max(*o + b.len() as u64);
+                    j += 1;
+                } else {
+                    break;
+                }
+            }
+            if j == i + 1 {
+                // Single-extent run: move the staged buffer out, no copy.
+                let (o, b) = &mut staged[order[i]];
+                out.push((*o, std::mem::take(b)));
+            } else {
+                // Every byte of [start, end) is covered: a run only grows
+                // while the next extent starts at or before its end.
+                let mut buf = vec![0u8; (end - start) as usize];
+                let mut members: Vec<usize> = order[i..j].to_vec();
+                members.sort_unstable(); // back to stage order
+                for m in members {
+                    let (o, b) = &staged[m];
+                    let rel = (*o - start) as usize;
+                    buf[rel..rel + b.len()].copy_from_slice(b);
+                }
+                out.push((start, buf));
+            }
+            i = j;
+        }
+        out
+    }
+
+    /// Flush all staged extents to `file`, one `write_at` per merged run.
+    /// Returns the number of writes issued.
+    pub fn flush_to(&mut self, file: &ParallelFile) -> Result<u64> {
+        let mut writes = 0u64;
+        for (o, buf) in self.take_runs() {
+            file.write_at(o, &buf)?;
+            writes += 1;
+        }
+        Ok(writes)
+    }
+}
+
+/// A buffered, offset-addressed writer over a borrowed [`ParallelFile`]:
+/// [`WriteAggregator`] plus the file handle, a high-water auto-flush, and
+/// a best-effort flush on drop. The staging/merge semantics (stage-order
+/// replay, last-writer-wins on overlap) are the aggregator's.
+pub struct WriteCoalescer<'a> {
+    file: &'a ParallelFile,
+    agg: WriteAggregator,
+    /// Flush automatically when staged bytes reach this.
+    pub high_water: usize,
+    /// Number of `write_at` calls issued (observability for benches).
+    pub flushes: u64,
+}
+
+impl<'a> WriteCoalescer<'a> {
+    pub fn new(file: &'a ParallelFile) -> Self {
+        WriteCoalescer { file, agg: WriteAggregator::new(), high_water: 8 * 1024 * 1024, flushes: 0 }
+    }
+
+    /// Stage `data` at absolute `offset`; auto-flush past the high-water
+    /// mark. Equivalent to a direct `file.write_at` stream: the bytes on
+    /// disk after `flush` match issuing the same writes directly in order.
+    pub fn write_at(&mut self, offset: u64, data: &[u8]) -> Result<()> {
+        self.agg.stage(offset, data);
+        if self.agg.staged_bytes() >= self.high_water {
+            self.flush()?;
+        }
+        Ok(())
+    }
+
+    /// Merge adjacent staged extents and issue the minimal set of writes.
+    pub fn flush(&mut self) -> Result<()> {
+        self.flushes += self.agg.flush_to(self.file)?;
+        Ok(())
+    }
+}
+
+impl Drop for WriteCoalescer<'_> {
+    fn drop(&mut self) {
+        // Best-effort: callers should flush explicitly to observe errors.
+        let _ = self.flush();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::par::{Communicator, SerialComm};
+    use std::path::PathBuf;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("scda-ioagg");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(format!("{name}-{}", std::process::id()))
+    }
+
+    fn comm() -> SerialComm {
+        let c = SerialComm::new();
+        assert_eq!(c.size(), 1);
+        c
+    }
+
+    #[test]
+    fn contiguous_writes_merge_into_one() {
+        let path = tmp("contig");
+        let f = ParallelFile::create(&comm(), &path).unwrap();
+        let mut w = WriteCoalescer::new(&f);
+        for i in 0..100u64 {
+            w.write_at(i * 10, &[i as u8; 10]).unwrap();
+        }
+        w.flush().unwrap();
+        assert_eq!(w.flushes, 1);
+        let data = f.read_vec(0, 1000).unwrap();
+        for i in 0..100 {
+            assert!(data[i * 10..(i + 1) * 10].iter().all(|&b| b == i as u8));
+        }
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn out_of_order_and_gapped_writes() {
+        let path = tmp("gaps");
+        let f = ParallelFile::create(&comm(), &path).unwrap();
+        f.write_at(0, &[0u8; 64]).unwrap(); // pre-extend
+        let mut w = WriteCoalescer::new(&f);
+        w.write_at(40, b"dd").unwrap();
+        w.write_at(0, b"aa").unwrap();
+        w.write_at(2, b"bb").unwrap();
+        w.write_at(20, b"cc").unwrap();
+        w.flush().unwrap();
+        assert_eq!(w.flushes, 3); // [0..4), [20..22), [40..42)
+        let data = f.read_vec(0, 42).unwrap();
+        assert_eq!(&data[0..4], b"aabb");
+        assert_eq!(&data[20..22], b"cc");
+        assert_eq!(&data[40..42], b"dd");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn overlapping_writes_latest_wins() {
+        let path = tmp("overlap");
+        let f = ParallelFile::create(&comm(), &path).unwrap();
+        let mut w = WriteCoalescer::new(&f);
+        w.write_at(0, b"xxxxxxxx").unwrap();
+        w.write_at(2, b"YY").unwrap();
+        w.flush().unwrap();
+        let data = f.read_vec(0, 8).unwrap();
+        assert_eq!(&data, b"xxYYxxxx");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn overlap_replay_is_stage_ordered_across_runs() {
+        // Three mutually overlapping extents staged out of offset order:
+        // the merged run must equal the direct pwrite sequence.
+        let path = tmp("replay");
+        let f = ParallelFile::create(&comm(), &path).unwrap();
+        let mut w = WriteCoalescer::new(&f);
+        w.write_at(4, b"BBBB").unwrap();
+        w.write_at(0, b"AAAAAA").unwrap(); // overwrites 4..6
+        w.write_at(2, b"CC").unwrap(); // overwrites 2..4
+        w.flush().unwrap();
+        assert_eq!(w.flushes, 1);
+        let data = f.read_vec(0, 8).unwrap();
+        assert_eq!(&data, b"AACCAABB");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn high_water_triggers_flush() {
+        let path = tmp("hiwater");
+        let f = ParallelFile::create(&comm(), &path).unwrap();
+        let mut w = WriteCoalescer::new(&f);
+        w.high_water = 100;
+        w.write_at(0, &[1u8; 60]).unwrap();
+        assert_eq!(w.flushes, 0);
+        w.write_at(60, &[2u8; 60]).unwrap();
+        assert!(w.flushes >= 1); // crossed high water
+        w.flush().unwrap();
+        assert_eq!(f.read_vec(0, 120).unwrap().len(), 120);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn take_runs_drains_and_merges() {
+        let mut a = WriteAggregator::new();
+        assert!(a.is_empty());
+        a.stage(10, b"cc");
+        a.stage(0, b"aa");
+        a.stage(2, b"bb");
+        assert_eq!(a.staged_bytes(), 6);
+        let runs = a.take_runs();
+        assert!(a.is_empty());
+        assert_eq!(a.staged_bytes(), 0);
+        assert_eq!(runs.len(), 2);
+        assert_eq!(runs[0], (0, b"aabb".to_vec()));
+        assert_eq!(runs[1], (10, b"cc".to_vec()));
+    }
+
+    #[test]
+    fn empty_stage_is_a_no_op() {
+        let mut a = WriteAggregator::new();
+        a.stage(5, b"");
+        assert!(a.is_empty());
+        assert!(a.take_runs().is_empty());
+    }
+}

@@ -1,0 +1,148 @@
+//! Read sieving: the read-side dual of write aggregation. A section read
+//! touches a handful of small, nearby regions — the 64-byte type row, one
+//! or two 32-byte count rows, per-element size rows, small payloads. The
+//! sieve fetches one large aligned window with a single `pread` and
+//! serves those small reads from the buffer; only genuinely large payload
+//! reads go to the file directly.
+//!
+//! The sieve is only attached to read-mode files, which cannot change
+//! underneath it (scda files are create-once: "the only possibility to
+//! write to a file is to create a new one", §A.3) — so the window and the
+//! cached file length never go stale.
+
+use crate::error::{corrupt, Result, ScdaError};
+use crate::par::pfile::ParallelFile;
+
+/// Window alignment: refills start on a 4 KiB boundary so the buffered
+/// range also covers bytes shortly *before* the requested offset (the V
+/// pattern: size rows just behind a payload read).
+const WINDOW_ALIGN: u64 = 4096;
+
+/// A buffered window over a read-only [`ParallelFile`].
+#[derive(Debug)]
+pub struct ReadSieve {
+    buf: Vec<u8>,
+    /// Absolute file offset of `buf[0]`.
+    buf_off: u64,
+    /// Nominal window size; refills read at least this much when the file
+    /// has it.
+    window: usize,
+    /// File length, fixed at open (read-only files cannot grow).
+    file_len: u64,
+    /// Number of window refills issued (observability).
+    refills: u64,
+}
+
+impl ReadSieve {
+    pub fn new(window: usize, file_len: u64) -> Self {
+        assert!(window > 0, "a zero sieve window means 'no sieve' (use None)");
+        ReadSieve { buf: Vec::new(), buf_off: 0, window, file_len, refills: 0 }
+    }
+
+    /// The nominal window size (callers route reads >= this directly).
+    pub fn window(&self) -> usize {
+        self.window
+    }
+
+    pub fn refills(&self) -> u64 {
+        self.refills
+    }
+
+    /// A view of `len` bytes at absolute `off`, refilling the window from
+    /// `file` if the range is not buffered. Errors with the same corrupt
+    /// kind as a direct short read if the range exceeds the file.
+    pub fn view(&mut self, file: &ParallelFile, off: u64, len: usize) -> Result<&[u8]> {
+        let end = off
+            .checked_add(len as u64)
+            .ok_or_else(|| ScdaError::corrupt(corrupt::COUNT_OVERFLOW, "read range overflows u64"))?;
+        if end > self.file_len {
+            return Err(ScdaError::corrupt(
+                corrupt::TRUNCATED,
+                format!("file ends before {len} bytes at offset {off}"),
+            ));
+        }
+        let cached = off >= self.buf_off && end <= self.buf_off + self.buf.len() as u64;
+        if !cached {
+            let start = (off / WINDOW_ALIGN) * WINDOW_ALIGN;
+            let win_end = (start + self.window as u64).max(end).min(self.file_len);
+            let take = (win_end - start) as usize;
+            self.buf.resize(take, 0);
+            file.read_at(start, &mut self.buf)?;
+            self.buf_off = start;
+            self.refills += 1;
+        }
+        let rel = (off - self.buf_off) as usize;
+        Ok(&self.buf[rel..rel + len])
+    }
+
+    /// [`Self::view`] into a fresh buffer.
+    pub fn read_vec(&mut self, file: &ParallelFile, off: u64, len: usize) -> Result<Vec<u8>> {
+        Ok(self.view(file, off, len)?.to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::par::{Communicator, SerialComm};
+    use std::path::PathBuf;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("scda-sieve");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(format!("{name}-{}", std::process::id()))
+    }
+
+    fn file_with(n: usize, name: &str) -> (ParallelFile, PathBuf) {
+        let path = tmp(name);
+        let c = SerialComm::new();
+        assert_eq!(c.rank(), 0);
+        let f = ParallelFile::create(&c, &path).unwrap();
+        let data: Vec<u8> = (0..n).map(|i| (i % 251) as u8).collect();
+        f.write_at(0, &data).unwrap();
+        (f, path)
+    }
+
+    #[test]
+    fn serves_many_small_reads_from_one_window() {
+        let (f, path) = file_with(64 * 1024, "small");
+        let before = f.io_stats().read_calls;
+        let mut s = ReadSieve::new(16 * 1024, 64 * 1024);
+        for off in (0..8 * 1024u64).step_by(32) {
+            let v = s.view(&f, off, 32).unwrap().to_vec();
+            let expect: Vec<u8> = (off..off + 32).map(|i| (i % 251) as u8).collect();
+            assert_eq!(v, expect, "off {off}");
+        }
+        assert_eq!(s.refills(), 1);
+        assert_eq!(f.io_stats().read_calls - before, 1);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn window_slides_forward_and_clamps_to_eof() {
+        let (f, path) = file_with(10_000, "slide");
+        let mut s = ReadSieve::new(4096, 10_000);
+        assert_eq!(s.view(&f, 0, 10).unwrap()[0], 0);
+        // Past the first window: refill, aligned down.
+        let v = s.view(&f, 9_990, 10).unwrap().to_vec();
+        let expect: Vec<u8> = (9_990..10_000u64).map(|i| (i % 251) as u8).collect();
+        assert_eq!(v, expect);
+        assert_eq!(s.refills(), 2);
+        // Request larger than the window still works.
+        let big = s.view(&f, 100, 8000).unwrap().to_vec();
+        assert_eq!(big.len(), 8000);
+        assert_eq!(big[0], 100 % 251);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn past_eof_is_corrupt_error() {
+        let (f, path) = file_with(100, "eof");
+        let mut s = ReadSieve::new(4096, 100);
+        let err = s.view(&f, 90, 20).unwrap_err();
+        assert_eq!(err.kind(), crate::error::ScdaErrorKind::CorruptFile);
+        // In-bounds still fine afterwards.
+        assert_eq!(s.view(&f, 90, 10).unwrap().len(), 10);
+        std::fs::remove_file(&path).unwrap();
+    }
+}

@@ -68,12 +68,54 @@
 //!   both drop out of the file bytes. `rust/tests/pipeline_equivalence.rs`
 //!   asserts this property; `BENCH_codec.json` (emitted by the f1/t4
 //!   benches and the ignored smoke test) tracks the throughput it buys.
+//!
+//! # I/O aggregation
+//!
+//! Serial equivalence constrains the *file bytes*, not the *syscall
+//! shape*: a section may reach the file through any sequence of
+//! positional writes, as long as the final bytes equal the serial
+//! write's. The [`io`] subsystem exploits that freedom on both paths:
+//!
+//! * **Staging/flush contract (writes).** Every write the section paths
+//!   issue — header rows, count rows, per-element data windows, padding
+//!   — is *staged* as an `(offset, bytes)` extent in a per-rank
+//!   [`io::WriteAggregator`] instead of hitting the file. Extents drain
+//!   when the staging buffer would overflow, on [`api::ScdaFile::flush`],
+//!   and on `close`; at drain time extents merge into maximal contiguous
+//!   runs and each run is one `write_at`. Indirectly addressed element
+//!   lists ([`api::DataSrc::Indirect`]) thereby gather into one syscall
+//!   per contiguous file run — the `pwritev` effect. Writes at least as
+//!   large as the buffer bypass staging (they are already one syscall),
+//!   after draining the staged extents to keep write order.
+//! * **Why serial equivalence is preserved.** Each staged extent is
+//!   exactly a write the direct path would have issued; runs replay
+//!   their extents in stage order, so overlaps resolve like direct
+//!   `pwrite`s; and a rank only stages extents inside its own disjoint
+//!   windows, so no cross-rank order exists to violate. The flushed file
+//!   is therefore byte-identical to the unaggregated path at any buffer
+//!   size, flush schedule and rank count
+//!   (`rust/tests/io_coalescing.rs` asserts this at 1, 2 and 4 ranks).
+//! * **Read sieving.** Read-mode files attach an [`io::ReadSieve`]: one
+//!   large aligned `pread` fills a window that serves the many small
+//!   section reads (prefixes, count rows, small payloads); large payload
+//!   reads bypass it into exactly-sized buffers — or into a caller-owned
+//!   buffer with no allocation at all via
+//!   `api::ScdaFile::read_array_data_into` — and the file length is
+//!   cached at open (read-only files cannot grow), eliminating the
+//!   per-section `fstat`.
+//! * **Tuning & observability.** [`io::IoTuning`] on
+//!   [`api::ScdaFile::set_io_tuning`] sets the staging capacity and
+//!   sieve window (`IoTuning::direct()` is the reference path);
+//!   [`api::ScdaFile::io_stats`] exposes per-rank syscall counters, and
+//!   `BENCH_io.json` (f1/t2 benches, ignored smoke test) tracks
+//!   aggregated-vs-direct syscall counts and MiB/s.
 
 pub mod api;
 pub mod codec;
 pub mod coordinator;
 pub mod error;
 pub mod format;
+pub mod io;
 pub mod mesh;
 pub mod par;
 pub mod runtime;

@@ -12,7 +12,7 @@ pub mod thread;
 
 pub use comm::Communicator;
 pub use partition::Partition;
-pub use pfile::ParallelFile;
+pub use pfile::{IoStats, ParallelFile};
 pub use pool::{CodecPool, ParJob, Step};
 pub use serial::SerialComm;
 pub use thread::{run_parallel, ThreadComm};

@@ -8,9 +8,46 @@
 use std::fs::{File, OpenOptions};
 use std::os::unix::fs::FileExt;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::error::{Result, ScdaError};
 use crate::par::comm::Communicator;
+
+/// Syscall-level instrumentation of one [`ParallelFile`] handle (i.e. of
+/// one rank): every positional read/write and every `fstat` counts. The
+/// I/O aggregation layer (`crate::io`) is tuned and tested against these
+/// numbers, and `BENCH_io.json` reports them.
+#[derive(Debug, Default)]
+struct IoCounters {
+    writes: AtomicU64,
+    write_bytes: AtomicU64,
+    reads: AtomicU64,
+    read_bytes: AtomicU64,
+    stats: AtomicU64,
+}
+
+/// Snapshot of a handle's [`IoCounters`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct IoStats {
+    pub write_calls: u64,
+    pub write_bytes: u64,
+    pub read_calls: u64,
+    pub read_bytes: u64,
+    pub stat_calls: u64,
+}
+
+impl IoStats {
+    /// Counter deltas since an earlier snapshot of the same handle.
+    pub fn since(&self, earlier: &IoStats) -> IoStats {
+        IoStats {
+            write_calls: self.write_calls - earlier.write_calls,
+            write_bytes: self.write_bytes - earlier.write_bytes,
+            read_calls: self.read_calls - earlier.read_calls,
+            read_bytes: self.read_bytes - earlier.read_bytes,
+            stat_calls: self.stat_calls - earlier.stat_calls,
+        }
+    }
+}
 
 /// A shared file handle for collective window I/O.
 #[derive(Debug)]
@@ -18,6 +55,10 @@ pub struct ParallelFile {
     file: File,
     path: PathBuf,
     writable: bool,
+    /// Length cached at open for read-only handles (read-only scda files
+    /// cannot grow, §A.3), so `len()` needs no per-section `fstat`.
+    cached_len: Option<u64>,
+    counters: IoCounters,
 }
 
 impl ParallelFile {
@@ -57,7 +98,13 @@ impl ParallelFile {
                 .open(path)
                 .map_err(|e| ScdaError::io(e, format!("opening {}", path.display())))?
         };
-        Ok(ParallelFile { file, path: path.to_path_buf(), writable: true })
+        Ok(ParallelFile {
+            file,
+            path: path.to_path_buf(),
+            writable: true,
+            cached_len: None,
+            counters: IoCounters::default(),
+        })
     }
 
     /// Collectively open an existing file read-only.
@@ -70,7 +117,19 @@ impl ParallelFile {
                 Ok(_) => ScdaError::io(std::io::Error::other("peer failed"), "collective open failed"),
             });
         }
-        Ok(ParallelFile { file: f.unwrap(), path: path.to_path_buf(), writable: false })
+        let file = f.unwrap();
+        // One fstat for the whole life of the handle: read-only files
+        // cannot grow, so every later `len()` is served from the cache.
+        let counters = IoCounters::default();
+        counters.stats.fetch_add(1, Ordering::Relaxed);
+        let cached_len = file.metadata().map_err(|e| ScdaError::io(e, "stat")).map(|m| m.len())?;
+        Ok(ParallelFile {
+            file,
+            path: path.to_path_buf(),
+            writable: false,
+            cached_len: Some(cached_len),
+            counters,
+        })
     }
 
     pub fn path(&self) -> &Path {
@@ -80,6 +139,8 @@ impl ParallelFile {
     /// Write `buf` at absolute `offset` (this rank's window).
     pub fn write_at(&self, offset: u64, buf: &[u8]) -> Result<()> {
         debug_assert!(self.writable);
+        self.counters.writes.fetch_add(1, Ordering::Relaxed);
+        self.counters.write_bytes.fetch_add(buf.len() as u64, Ordering::Relaxed);
         self.file
             .write_all_at(buf, offset)
             .map_err(|e| ScdaError::io(e, format!("writing {} bytes at offset {offset}", buf.len())))
@@ -87,6 +148,8 @@ impl ParallelFile {
 
     /// Read exactly `buf.len()` bytes at absolute `offset`.
     pub fn read_at(&self, offset: u64, buf: &mut [u8]) -> Result<()> {
+        self.counters.reads.fetch_add(1, Ordering::Relaxed);
+        self.counters.read_bytes.fetch_add(buf.len() as u64, Ordering::Relaxed);
         self.file.read_exact_at(buf, offset).map_err(|e| {
             if e.kind() == std::io::ErrorKind::UnexpectedEof {
                 ScdaError::corrupt(
@@ -99,16 +162,39 @@ impl ParallelFile {
         })
     }
 
-    /// Read `len` bytes at `offset` into a fresh buffer.
+    /// Read `len` bytes at `offset` into a fresh exactly-sized buffer.
+    ///
+    /// The `vec![0; len]` allocation is `alloc_zeroed` under the hood —
+    /// for large buffers the zeroed pages come straight from the kernel
+    /// and are first touched by the read itself, so there is no
+    /// double-write. (Reading into genuinely uninitialized memory is
+    /// documented UB for the `Read` family; for a caller-owned buffer
+    /// with no allocation at all, use [`Self::read_at`] or the API
+    /// layer's `read_array_data_into`.)
     pub fn read_vec(&self, offset: u64, len: usize) -> Result<Vec<u8>> {
         let mut v = vec![0u8; len];
         self.read_at(offset, &mut v)?;
         Ok(v)
     }
 
-    /// File size in bytes.
+    /// File size in bytes (cached for read-only handles).
     pub fn len(&self) -> Result<u64> {
+        if let Some(l) = self.cached_len {
+            return Ok(l);
+        }
+        self.counters.stats.fetch_add(1, Ordering::Relaxed);
         Ok(self.file.metadata().map_err(|e| ScdaError::io(e, "stat"))?.len())
+    }
+
+    /// Snapshot of this handle's syscall counters.
+    pub fn io_stats(&self) -> IoStats {
+        IoStats {
+            write_calls: self.counters.writes.load(Ordering::Relaxed),
+            write_bytes: self.counters.write_bytes.load(Ordering::Relaxed),
+            read_calls: self.counters.reads.load(Ordering::Relaxed),
+            read_bytes: self.counters.read_bytes.load(Ordering::Relaxed),
+            stat_calls: self.counters.stats.load(Ordering::Relaxed),
+        }
     }
 
     pub fn is_empty(&self) -> Result<bool> {
@@ -174,6 +260,29 @@ mod tests {
         f.write_at(0, b"xy").unwrap();
         let err = f.read_vec(0, 10).unwrap_err();
         assert_eq!(err.kind(), crate::error::ScdaErrorKind::CorruptFile);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn counters_and_cached_len() {
+        let path = tmp("counters");
+        let c = SerialComm::new();
+        let f = ParallelFile::create(&c, &path).unwrap();
+        f.write_at(0, b"0123456789").unwrap();
+        assert_eq!(f.read_vec(2, 5).unwrap(), b"23456");
+        let st = f.io_stats();
+        assert_eq!((st.write_calls, st.write_bytes), (1, 10));
+        assert_eq!((st.read_calls, st.read_bytes), (1, 5));
+        // Writable handles stat on every len().
+        f.len().unwrap();
+        assert_eq!(f.io_stats().since(&st).stat_calls, 1);
+        // Read-only handles serve len() from the open-time cache: exactly
+        // the one fstat issued at open, no matter how often len() runs.
+        let r = ParallelFile::open_read(&c, &path).unwrap();
+        assert_eq!(r.io_stats().stat_calls, 1);
+        assert_eq!(r.len().unwrap(), 10);
+        r.len().unwrap();
+        assert_eq!(r.io_stats().stat_calls, 1);
         std::fs::remove_file(&path).unwrap();
     }
 

@@ -1,0 +1,59 @@
+//! Quick-mode I/O bench smoke: exercises the aggregated-vs-direct
+//! measurement harness end to end and records `BENCH_io.json` so the
+//! raw-I/O perf trajectory is tracked from this PR onward.
+//!
+//! `#[ignore]`d by default so `cargo test -q` stays fast and
+//! timing-insensitive; run explicitly with
+//! `cargo test --test bench_io_smoke -- --ignored`.
+
+use scda::bench_support::{bench_io_json_path, io_bench};
+
+#[test]
+#[ignore = "perf smoke; run with -- --ignored"]
+fn io_bench_quick_records_json() {
+    // Small quick-mode workload: 2 ranks, 4 varray sections of 64 x 4 KiB
+    // indirect elements per rank.
+    let p = io_bench::run(2, 4, 64, 4 << 10, 2);
+    assert!(p.write_direct_mib_s > 0.0 && p.write_agg_mib_s > 0.0);
+    assert!(p.read_direct_mib_s > 0.0 && p.read_sieved_mib_s > 0.0);
+    // The acceptance shape: aggregation collapses the per-element write
+    // storm by at least 5x.
+    assert!(p.write_syscall_reduction() >= 5.0, "only {:.1}x fewer writes", p.write_syscall_reduction());
+    let path = bench_io_json_path();
+    p.report().write(&path).unwrap();
+    let written = std::fs::read_to_string(&path).unwrap();
+    assert!(written.contains("\"bench\": \"io\""));
+    assert!(written.contains("varray_write"));
+    assert!(written.contains("varray_read"));
+    println!(
+        "io quick: write {:.0} -> {:.0} MiB/s ({} -> {} syscalls, {:.0}x), read {:.0} -> {:.0} MiB/s \
+         ({} -> {} syscalls); wrote {}",
+        p.write_direct_mib_s,
+        p.write_agg_mib_s,
+        p.write_calls_direct,
+        p.write_calls_agg,
+        p.write_syscall_reduction(),
+        p.read_direct_mib_s,
+        p.read_sieved_mib_s,
+        p.read_calls_direct,
+        p.read_calls_sieved,
+        path.display(),
+    );
+}
+
+#[test]
+fn io_bench_harness_roundtrips_tiny_workload() {
+    // Non-ignored correctness pass through the same harness at a size too
+    // small to be a benchmark: verifies the workload roundtrip, the
+    // syscall accounting, and the report shape without timing assertions.
+    let p = io_bench::run(1, 2, 16, 1 << 10, 1);
+    assert_eq!(p.ranks, 1);
+    assert_eq!(p.sections, 2);
+    assert!(p.write_calls_agg >= 1);
+    assert!(p.write_calls_direct > p.write_calls_agg);
+    assert!(p.read_calls_sieved <= p.read_calls_direct);
+    let r = p.report().render();
+    assert!(r.contains("\"aggregated_write_calls\""));
+    assert!(r.contains("\"sieved_read_calls\""));
+    assert!(r.contains("\"syscall_reduction\""));
+}

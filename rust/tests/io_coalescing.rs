@@ -1,0 +1,199 @@
+//! The I/O aggregation contract (see `crate::io`): with aggregation on,
+//! a representative A/V/B section sequence reaches the file in a small,
+//! fixed number of writes per rank, and the file bytes are identical to
+//! the unaggregated (direct) path at 1, 2 and 4 ranks. The syscall
+//! counts come from the instrumented `ParallelFile` counters
+//! (`ScdaFile::io_stats`).
+
+use scda::api::{DataSrc, IoTuning, ScdaFile};
+use scda::par::{run_parallel, Communicator, IoStats, Partition, SerialComm};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+const SECTIONS: usize = 4;
+const ELEMS_TOTAL: usize = 64;
+const ELEM_BYTES: usize = 48;
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("scda-io-coalescing");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(format!("{name}-{}.scda", std::process::id()))
+}
+
+/// The representative workload: one inline, one block, one fixed array,
+/// then `SECTIONS` varrays of small *indirect* elements (the per-element
+/// write storm on the direct path). Returns per-rank syscall stats.
+fn write_workload(path: &Arc<PathBuf>, ranks: usize, tuning: IoTuning) -> Vec<IoStats> {
+    let path = Arc::clone(path);
+    run_parallel(ranks, move |comm| {
+        let rank = comm.rank();
+        let part = Partition::uniform(ranks, ELEMS_TOTAL as u64);
+        let local = part.count(rank) as usize;
+        let first = part.offset(rank) as usize;
+        let mut f = ScdaFile::create(comm, &**path, b"io-coalescing").unwrap();
+        f.set_sync_on_close(false);
+        f.set_io_tuning(tuning).unwrap();
+        f.write_inline(&[b'i'; 32], Some(b"inline")).unwrap();
+        let block: Vec<u8> = (0..500usize).map(|i| i as u8).collect();
+        f.write_block_from(0, Some(&block), 500, Some(b"block"), false).unwrap();
+        // A section: one contiguous local window per rank.
+        let adata: Vec<u8> = (0..local * 8).map(|i| ((first * 8 + i) % 251) as u8).collect();
+        f.write_array(DataSrc::Contiguous(&adata), &part, 8, Some(b"arr"), false).unwrap();
+        // V sections: indirectly addressed small elements.
+        let owned: Vec<Vec<u8>> = (0..local).map(|i| vec![((first + i) % 251) as u8; ELEM_BYTES]).collect();
+        let views: Vec<&[u8]> = owned.iter().map(|e| e.as_slice()).collect();
+        let sizes = vec![ELEM_BYTES as u64; local];
+        for _ in 0..SECTIONS {
+            f.write_varray(DataSrc::Indirect(&views), &part, &sizes, Some(b"var"), false).unwrap();
+        }
+        // Flush so the counters cover the whole file before snapshotting.
+        f.flush().unwrap();
+        let st = f.io_stats();
+        f.close().unwrap();
+        st
+    })
+}
+
+#[test]
+fn aggregated_writes_are_coalesced_and_byte_identical() {
+    for ranks in [1usize, 2, 4] {
+        let pa = Arc::new(tmp(&format!("agg-{ranks}")));
+        let pd = Arc::new(tmp(&format!("dir-{ranks}")));
+        let agg_stats = write_workload(&pa, ranks, IoTuning::default());
+        let dir_stats = write_workload(&pd, ranks, IoTuning::direct());
+        // Byte identity against the unaggregated path.
+        let a = std::fs::read(&*pa).unwrap();
+        let d = std::fs::read(&*pd).unwrap();
+        assert_eq!(a, d, "aggregated file differs from direct at ranks={ranks}");
+        scda::api::verify_bytes(&a).unwrap();
+        // Coalescing: a fixed small number of writes per rank (each rank's
+        // extents merge into at most a few runs per section), and >= 5x
+        // fewer write syscalls in total than the direct path.
+        let bound = (3 * SECTIONS + 8) as u64;
+        for (r, st) in agg_stats.iter().enumerate() {
+            assert!(st.write_calls <= bound, "rank {r}/{ranks}: {} writes > {bound}", st.write_calls);
+        }
+        let agg_total: u64 = agg_stats.iter().map(|s| s.write_calls).sum();
+        let dir_total: u64 = dir_stats.iter().map(|s| s.write_calls).sum();
+        assert!(
+            dir_total >= 5 * agg_total,
+            "ranks={ranks}: direct {dir_total} writes vs aggregated {agg_total} (< 5x)"
+        );
+        std::fs::remove_file(&*pa).unwrap();
+        std::fs::remove_file(&*pd).unwrap();
+    }
+}
+
+/// Read the whole workload back serially, returning every payload.
+fn read_all(path: &Arc<PathBuf>, tuning: IoTuning) -> (Vec<Vec<u8>>, IoStats) {
+    let path: &PathBuf = path;
+    let mut f = ScdaFile::open(SerialComm::new(), path).unwrap();
+    f.set_io_tuning(tuning).unwrap();
+    let part = Partition::uniform(1, ELEMS_TOTAL as u64);
+    let mut out = Vec::new();
+    let h = f.read_section_header(false).unwrap();
+    assert_eq!(h.user, b"inline");
+    out.push(f.read_inline_data(0, true).unwrap().unwrap().to_vec());
+    let h = f.read_section_header(false).unwrap();
+    assert_eq!(h.user, b"block");
+    out.push(f.read_block_data(0, true).unwrap().unwrap());
+    let h = f.read_section_header(false).unwrap();
+    assert_eq!(h.user, b"arr");
+    out.push(f.read_array_data(&part, 8, true).unwrap().unwrap());
+    for _ in 0..SECTIONS {
+        let h = f.read_section_header(false).unwrap();
+        assert_eq!(h.user, b"var");
+        let sizes = f.read_varray_sizes(&part).unwrap();
+        out.push(f.read_varray_data(&part, &sizes, true).unwrap().unwrap());
+    }
+    assert!(f.at_end().unwrap());
+    let st = f.io_stats();
+    f.close().unwrap();
+    (out, st)
+}
+
+#[test]
+fn read_sieve_matches_direct_and_reduces_syscalls() {
+    let path = Arc::new(tmp("sieve"));
+    write_workload(&path, 2, IoTuning::default());
+    let (sieved, st_s) = read_all(&path, IoTuning::default());
+    let (direct, st_d) = read_all(&path, IoTuning::direct());
+    assert_eq!(sieved, direct);
+    assert!(
+        st_s.read_calls < st_d.read_calls,
+        "sieved {} reads, direct {}",
+        st_s.read_calls,
+        st_d.read_calls
+    );
+    // The whole file fits one sieve window: a single pread serves it.
+    assert!(st_s.read_calls <= 2, "{} reads through the sieve", st_s.read_calls);
+    // Cached file length: exactly the one open-time fstat on either
+    // path, never one per section.
+    assert_eq!((st_s.stat_calls, st_d.stat_calls), (1, 1));
+    std::fs::remove_file(&*path).unwrap();
+}
+
+#[test]
+fn read_array_data_into_fills_caller_buffer() {
+    let path = tmp("into");
+    let n = 32u64;
+    let elem = 16u64;
+    let part = Partition::uniform(1, n);
+    let data: Vec<u8> = (0..(n * elem) as usize).map(|i| (i % 253) as u8).collect();
+    let mut f = ScdaFile::create(SerialComm::new(), &path, b"into").unwrap();
+    f.set_sync_on_close(false);
+    f.write_array(DataSrc::Contiguous(&data), &part, elem, Some(b"raw"), false).unwrap();
+    f.write_array(DataSrc::Contiguous(&data), &part, elem, Some(b"enc"), true).unwrap();
+    f.close().unwrap();
+
+    let mut f = ScdaFile::open(SerialComm::new(), &path).unwrap();
+    // Raw section straight into the caller's (reusable) buffer.
+    let mut buf = vec![0u8; (n * elem) as usize];
+    f.read_section_header(false).unwrap();
+    f.read_array_data_into(&part, elem, &mut buf).unwrap();
+    assert_eq!(buf, data);
+    // Decoded section through the same API.
+    buf.fill(0);
+    let h = f.read_section_header(true).unwrap();
+    assert!(h.decoded);
+    f.read_array_data_into(&part, elem, &mut buf).unwrap();
+    assert_eq!(buf, data);
+    assert!(f.at_end().unwrap());
+    // Wrong buffer size is a usage error.
+    f.close().unwrap();
+    let mut f = ScdaFile::open(SerialComm::new(), &path).unwrap();
+    f.read_section_header(false).unwrap();
+    let mut short = vec![0u8; 8];
+    assert_eq!(
+        f.read_array_data_into(&part, elem, &mut short).unwrap_err().kind(),
+        scda::ScdaErrorKind::Usage
+    );
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn retuning_mid_write_keeps_bytes_identical() {
+    // Flip aggregation off halfway through: bytes must match a file
+    // written fully direct (the tuning is invisible in the bytes).
+    let p1 = tmp("retune-a");
+    let p2 = tmp("retune-b");
+    let part = Partition::uniform(1, 8);
+    let sizes = vec![5u64; 8];
+    let payload: Vec<u8> = (0..40u8).collect();
+    for (path, retune) in [(&p1, true), (&p2, false)] {
+        let mut f = ScdaFile::create(SerialComm::new(), path, b"retune").unwrap();
+        f.set_sync_on_close(false);
+        if !retune {
+            f.set_io_tuning(IoTuning::direct()).unwrap();
+        }
+        f.write_varray(DataSrc::Contiguous(&payload), &part, &sizes, Some(b"v1"), false).unwrap();
+        if retune {
+            f.set_io_tuning(IoTuning::direct()).unwrap();
+        }
+        f.write_varray(DataSrc::Contiguous(&payload), &part, &sizes, Some(b"v2"), false).unwrap();
+        f.close().unwrap();
+    }
+    assert_eq!(std::fs::read(&p1).unwrap(), std::fs::read(&p2).unwrap());
+    std::fs::remove_file(&p1).unwrap();
+    std::fs::remove_file(&p2).unwrap();
+}
