@@ -93,6 +93,13 @@ fn main() {
         io.read_calls_direct,
         io.read_calls_sieved,
     );
+    println!("\nF1 engine sweep (write side):");
+    for e in &io.engines {
+        println!(
+            "  {:>17}: {:>7.0} MiB/s, {:>5} write syscalls, {:>8} B shipped",
+            e.name, e.write_mib_s, e.write_calls, e.shipped_bytes
+        );
+    }
     let io_json = scda::bench_support::bench_io_json_path();
     io.report().write(&io_json).unwrap();
     println!("wrote {}", io_json.display());

@@ -173,6 +173,17 @@ fn main() {
     println!("\nT2b: {sections} varray sections of {elems} x {} KiB indirect elements per rank\n", ebytes >> 10);
     iot.print();
     if let Some(io) = last {
+        let mut et = Table::new(&["engine", "write MiB/s", "write syscalls", "shipped MiB"]);
+        for e in &io.engines {
+            et.row(&[
+                e.name.clone(),
+                format!("{:.0}", e.write_mib_s),
+                e.write_calls.to_string(),
+                format!("{:.2}", e.shipped_bytes as f64 / (1024.0 * 1024.0)),
+            ]);
+        }
+        println!("\nT2c: engine sweep at P=4 (direct / aggregated / collective, sync and async)\n");
+        et.print();
         let io_json = scda::bench_support::bench_io_json_path();
         io.report().write(&io_json).unwrap();
         println!("\nwrote {}", io_json.display());

@@ -97,4 +97,16 @@ fn main() {
     }
     scan_table.print();
     println!("\nT3b shape check: sieved preads ~= bytes/window (flat-ish); direct grows with S; fstats stay O(1) (cached length).");
+
+    // --- write-side engine sweep at quick size: random access cares
+    // about syscall counts, and the collective engine pins them to the
+    // stripe count regardless of section interleaving ---
+    let io = scda::bench_support::io_bench::run_quick();
+    println!("\nT3c: engine write sweep ({} MiB, {} ranks):", io.payload_bytes >> 20, io.ranks);
+    for e in &io.engines {
+        println!(
+            "  {:>17}: {:>7.0} MiB/s, {:>5} write syscalls, {:>8} B shipped",
+            e.name, e.write_mib_s, e.write_calls, e.shipped_bytes
+        );
+    }
 }

@@ -17,7 +17,8 @@ use crate::format::header::{encode_file_header, parse_file_header, FileHeader};
 use crate::format::limits::{FILE_HEADER_BYTES, VENDOR_STRING};
 use crate::format::padding::LineStyle;
 use crate::format::section::SectionMeta;
-use crate::io::{IoTuning, ReadSieve, WriteAggregator};
+use crate::io::engine::{build_engine, EngineStats, IoEngine};
+use crate::io::IoTuning;
 use crate::par::comm::Communicator;
 use crate::par::pfile::{IoStats, ParallelFile};
 use crate::par::pool::CodecPool;
@@ -98,7 +99,8 @@ pub(crate) enum Pending {
 /// The scda file context (`f` in the paper's API).
 pub struct ScdaFile<C: Communicator> {
     pub(crate) comm: C,
-    pub(crate) file: ParallelFile,
+    /// Shared so background flush jobs on the codec pool can hold it.
+    pub(crate) file: Arc<ParallelFile>,
     pub(crate) cursor: u64,
     pub(crate) mode: OpenMode,
     /// Line-break style used when writing (§2.1; our default is Unix like
@@ -113,12 +115,12 @@ pub struct ScdaFile<C: Communicator> {
     pub(crate) header: Option<FileHeader>,
     /// Whether `close` fsyncs (checkpoint durability; default true).
     pub(crate) sync_on_close: bool,
-    /// I/O aggregation knobs (see [`crate::io`]).
+    /// I/O engine knobs (see [`crate::io`]).
     pub(crate) tuning: IoTuning,
-    /// Write-side staging buffer (this rank's pending extents).
-    pub(crate) agg: WriteAggregator,
-    /// Read-side buffered window (read mode with a nonzero sieve window).
-    pub(crate) sieve: Option<ReadSieve>,
+    /// The transport every positional read/write routes through.
+    pub(crate) engine: Box<dyn IoEngine>,
+    /// Set by `close`; guards the drop-path drain.
+    pub(crate) closed: bool,
 }
 
 impl<C: Communicator> std::fmt::Debug for ScdaFile<C> {
@@ -137,9 +139,11 @@ impl<C: Communicator> ScdaFile<C> {
     /// `scda_fopen(comm, filename, 'w', userstr)`: collectively create the
     /// file and write its 128-byte header section.
     pub fn create(comm: C, path: impl AsRef<Path>, user: &[u8]) -> Result<Self> {
-        let file = ParallelFile::create(&comm, path.as_ref())?;
+        let file = Arc::new(ParallelFile::create(&comm, path.as_ref())?);
         let style = LineStyle::Unix;
         let header = encode_file_header(VENDOR_STRING, user, style)?;
+        let tuning = IoTuning::default();
+        let engine = build_engine(&tuning, false, &file)?;
         let mut f = ScdaFile {
             comm,
             file,
@@ -151,9 +155,9 @@ impl<C: Communicator> ScdaFile<C> {
             pending: Pending::None,
             header: None,
             sync_on_close: true,
-            tuning: IoTuning::default(),
-            agg: WriteAggregator::new(),
-            sieve: None,
+            tuning,
+            engine,
+            closed: false,
         };
         // The file header is just the first staged extent: it coalesces
         // with the first section's rows into one write.
@@ -167,16 +171,12 @@ impl<C: Communicator> ScdaFile<C> {
     /// `scda_fopen(comm, filename, 'r', userstr)`: collectively open and
     /// validate the file header; the cursor lands after it.
     pub fn open(comm: C, path: impl AsRef<Path>) -> Result<Self> {
-        let file = ParallelFile::open_read(&comm, path.as_ref())?;
+        let file = Arc::new(ParallelFile::open_read(&comm, path.as_ref())?);
         let tuning = IoTuning::default();
-        let mut sieve =
-            if tuning.sieve_window > 0 { Some(ReadSieve::new(tuning.sieve_window, file.len()?)) } else { None };
-        // Route the header read through the sieve: the same window also
-        // covers the first sections' header rows.
-        let bytes = match &mut sieve {
-            Some(s) => s.read_vec(&file, 0, FILE_HEADER_BYTES)?,
-            None => file.read_vec(0, FILE_HEADER_BYTES)?,
-        };
+        let mut engine = build_engine(&tuning, true, &file)?;
+        // Route the header read through the engine: a sieved engine's
+        // window also covers the first sections' header rows.
+        let bytes = engine.read_vec(&file, 0, FILE_HEADER_BYTES)?;
         let header = parse_file_header(&bytes, false)?;
         Ok(ScdaFile {
             comm,
@@ -190,8 +190,8 @@ impl<C: Communicator> ScdaFile<C> {
             header: Some(header),
             sync_on_close: false,
             tuning,
-            agg: WriteAggregator::new(),
-            sieve,
+            engine,
+            closed: false,
         })
     }
 
@@ -234,23 +234,21 @@ impl<C: Communicator> ScdaFile<C> {
         self
     }
 
-    /// Configure the I/O aggregation knobs (see [`crate::io`]). In write
-    /// mode any staged extents are flushed first, so retuning mid-file is
-    /// safe; in read mode the sieve window is rebuilt. The file bytes are
-    /// identical under every tuning — [`IoTuning::direct`] is the
+    /// Configure the I/O engine (see [`crate::io`]): which transport
+    /// (direct / aggregating / collective), its staging capacity, sieve
+    /// window, stripe size and async flush. Collective like every other
+    /// scda call: the current engine is fully drained first (two-phase
+    /// engines exchange), so retuning mid-file is safe. The file bytes
+    /// are identical under every tuning — [`IoTuning::direct`] is the
     /// reference path; only the syscall shape changes.
     pub fn set_io_tuning(&mut self, tuning: IoTuning) -> Result<&mut Self> {
-        self.flush_staged()?;
+        self.engine.flush(&self.file, &self.comm)?;
         self.tuning = tuning;
-        self.sieve = if self.mode == OpenMode::Read && tuning.sieve_window > 0 {
-            Some(ReadSieve::new(tuning.sieve_window, self.file.len()?))
-        } else {
-            None
-        };
+        self.engine = build_engine(&tuning, self.mode == OpenMode::Read, &self.file)?;
         Ok(self)
     }
 
-    /// The active I/O aggregation knobs.
+    /// The active I/O engine knobs.
     pub fn io_tuning(&self) -> IoTuning {
         self.tuning
     }
@@ -261,33 +259,51 @@ impl<C: Communicator> ScdaFile<C> {
         self.file.io_stats()
     }
 
-    /// Force all staged writes to the file (write mode). `close` does
-    /// this implicitly; call it to make bytes visible mid-file, e.g.
-    /// before sampling [`Self::io_stats`].
+    /// The active engine's own counters (shipped bytes, exchanges, drain
+    /// batches, sieve refills).
+    pub fn engine_stats(&self) -> EngineStats {
+        self.engine.stats()
+    }
+
+    /// Fault-injection hook for tests and failure drills: after `after`
+    /// more successful writes, this rank's handle fails every subsequent
+    /// `pwrite` with an injected I/O error (`u64::MAX` disarms) — the way
+    /// to exercise the staged/background flush error paths end to end.
+    pub fn inject_write_failure(&self, after: u64) {
+        self.file.inject_write_failure(after);
+    }
+
+    /// Take a deferred background-flush error that has been recorded but
+    /// not yet surfaced through a `flush`/`close` result. Returns `None`
+    /// when nothing failed (or the failure was already reported).
+    pub fn take_error(&mut self) -> Option<ScdaError> {
+        self.engine.take_error()
+    }
+
+    /// Force all staged writes to the file (write mode). Collective (the
+    /// collective engine exchanges extents here). `close` does this
+    /// implicitly; call it to make bytes visible mid-file, e.g. before
+    /// sampling [`Self::io_stats`]. Any deferred background-flush error
+    /// surfaces here.
     pub fn flush(&mut self) -> Result<()> {
-        self.flush_staged()
+        self.engine.flush(&self.file, &self.comm)
     }
 
-    /// Stage a positional write, or issue it directly when aggregation is
-    /// off or the payload alone reaches the staging capacity (it is
-    /// already a single syscall). Draining the staged extents before a
-    /// direct write preserves stage order, so the bytes equal the direct
-    /// path under any interleaving.
+    /// Route a positional write through the engine (stage, ship or issue
+    /// per the engine's policy).
     pub(crate) fn stage_write(&mut self, offset: u64, data: &[u8]) -> Result<()> {
-        let cap = self.tuning.aggregation_buffer;
-        if cap == 0 || data.len() >= cap {
-            self.flush_staged()?;
-            return self.file.write_at(offset, data);
-        }
-        if self.agg.staged_bytes() + data.len() > cap {
-            self.flush_staged()?;
-        }
-        self.agg.stage(offset, data);
-        Ok(())
+        self.engine.write(&self.file, offset, data)
     }
 
-    pub(crate) fn flush_staged(&mut self) -> Result<()> {
-        self.agg.flush_to(&self.file)?;
+    /// The collective section boundary: gives the engine its collective
+    /// hook (two-phase exchange scheduling), then synchronizes — the
+    /// barrier every section write ended with before engines existed.
+    /// Engines whose hook already ran a collective report so, and the
+    /// redundant barrier round is skipped.
+    pub(crate) fn section_end(&mut self) -> Result<()> {
+        if !self.engine.section_end(&self.file, &self.comm)? {
+            self.comm.barrier();
+        }
         Ok(())
     }
 
@@ -331,11 +347,15 @@ impl<C: Communicator> ScdaFile<C> {
     }
 
     /// `scda_fclose`: collective; flushes in write mode (staged extents
-    /// first, then optionally to stable storage). The context is consumed
+    /// first — surfacing any deferred background-flush error — then
+    /// optionally to stable storage). The context is consumed
     /// (deallocation is automatic in Rust, error or not).
     pub fn close(mut self) -> Result<()> {
+        // Mark closed up front: whatever happens below was reported
+        // in-band, so the drop path must not double-handle it.
+        self.closed = true;
         if self.mode == OpenMode::Write {
-            self.flush_staged()?;
+            self.engine.flush(&self.file, &self.comm)?;
             self.comm.barrier();
             if self.sync_on_close && self.comm.rank() == 0 {
                 self.file.sync()?;
@@ -343,5 +363,26 @@ impl<C: Communicator> ScdaFile<C> {
             self.comm.barrier();
         }
         Ok(())
+    }
+}
+
+impl<C: Communicator> Drop for ScdaFile<C> {
+    /// Dropping a write-mode file without `close` (forgotten, or an error
+    /// unwound past it) must not lose staged or in-flight writes — nor
+    /// swallow their failures. Collective shipping is impossible here
+    /// (drop is per-rank), but every staged extent lies in this rank's
+    /// own window, so a local drain is always byte-correct. Failures are
+    /// recorded for [`crate::io::take_drop_error`] (§A.6: file errors are
+    /// never silently lost).
+    fn drop(&mut self) {
+        if self.closed || self.mode != OpenMode::Write {
+            return;
+        }
+        if let Err(e) = self.engine.drain_local(&self.file) {
+            crate::io::engine::record_drop_error(self.file.path(), e);
+        }
+        if let Some(e) = self.engine.take_error() {
+            crate::io::engine::record_drop_error(self.file.path(), e);
+        }
     }
 }

@@ -31,7 +31,7 @@ pub mod reader;
 pub mod writer;
 
 pub use context::{CodecParallel, OpenMode, ScdaFile};
-pub use crate::io::IoTuning;
+pub use crate::io::{EngineStats, IoEngineKind, IoTuning};
 pub use query::{verify_bytes, verify_file, TocEntry};
 pub use reader::SectionHeader;
 pub use writer::DataSrc;

@@ -85,31 +85,24 @@ impl<C: Communicator> ScdaFile<C> {
 
     /// Parse the section prefix at `off`. The file length comes from the
     /// open-time cache (no per-section `fstat`), and the prefix bytes are
-    /// served from the read sieve's window when one is attached — for a
-    /// sequential section scan the window refills once per `sieve_window`
-    /// bytes instead of once per section.
+    /// served from the engine's metadata view — a sieved engine's window
+    /// refills once per window of sequential scan instead of once per
+    /// section (and the window itself adapts to the scan pattern).
     fn parse_prefix_at(&mut self, off: u64) -> Result<(SectionMeta, usize)> {
         let flen = self.file.len()?;
         if off >= flen {
             return Err(ScdaError::corrupt(corrupt::TRUNCATED, "no further section in file"));
         }
         let take = (flen - off).min(SECTION_PREFIX_MAX as u64) as usize;
-        match &mut self.sieve {
-            Some(s) => parse_section_prefix(s.view(&self.file, off, take)?),
-            None => parse_section_prefix(&self.file.read_vec(off, take)?),
-        }
+        parse_section_prefix(self.engine.view(&self.file, off, take)?)
     }
 
-    /// Read `len` bytes at `off`: small reads are served from the sieve
-    /// window, large ones (or all reads without a sieve) go straight to
-    /// the file into an exactly-sized buffer.
+    /// Read `len` bytes at `off` through the engine: small reads are
+    /// served from the sieve window, large ones (or all reads on the
+    /// direct engine) go straight to the file into an exactly-sized
+    /// buffer.
     fn read_sieved(&mut self, off: u64, len: usize) -> Result<Vec<u8>> {
-        if let Some(s) = &mut self.sieve {
-            if len < s.window() {
-                return s.read_vec(&self.file, off, len);
-            }
-        }
-        self.file.read_vec(off, len)
+        self.engine.read_vec(&self.file, off, len)
     }
 
     /// Convention (8): the inline data is a `U` count entry with the
@@ -359,7 +352,7 @@ impl<C: Communicator> ScdaFile<C> {
                 }
                 if !buf.is_empty() {
                     let off = payload_off + part.offset(rank) * elem_size;
-                    self.file.read_at(off, buf)?;
+                    self.engine.read_into(&self.file, off, buf)?;
                 }
                 self.cursor += meta.total_len(None) as u64;
                 self.comm.barrier();
@@ -456,6 +449,74 @@ impl<C: Communicator> ScdaFile<C> {
                 Ok(out)
             }
             _ => Err(call_seq("read_varray_data state mismatch")),
+        }
+    }
+
+    /// [`Self::read_varray_data`] into a caller-supplied buffer of exactly
+    /// `sum(local_sizes)` bytes — the varray counterpart of
+    /// [`Self::read_array_data_into`], completing the allocation-free
+    /// caller-buffer read surface. The raw path reads this rank's byte
+    /// window straight from the file into `buf` (no intermediate
+    /// allocation, no zero-fill on the direct route); decoded sections
+    /// inflate first and then copy. Collective like `read_varray_data`
+    /// with `want = true` on every rank; ranks with no local bytes pass an
+    /// empty buffer.
+    pub fn read_varray_data_into(
+        &mut self,
+        part: &Partition,
+        local_sizes: &[u64],
+        buf: &mut [u8],
+    ) -> Result<()> {
+        self.check_partition(part)?;
+        let rank = self.comm.rank();
+        if local_sizes.len() as u64 != part.count(rank) {
+            return Err(ScdaError::usage(
+                usage::PARTITION_MISMATCH,
+                format!("{} sizes for {} local elements", local_sizes.len(), part.count(rank)),
+            ));
+        }
+        let local_bytes: u64 = local_sizes.iter().sum();
+        if buf.len() as u64 != local_bytes {
+            return Err(ScdaError::usage(
+                usage::BUFFER_SIZE,
+                format!("buffer has {} bytes, sizes sum to {local_bytes}", buf.len()),
+            ));
+        }
+        let pending = std::mem::replace(&mut self.pending, Pending::None);
+        let Pending::VarraySized(inner) = pending else {
+            return Err(call_seq("read_varray_data_into before read_varray_sizes"));
+        };
+        match *inner {
+            Pending::Raw { meta, payload_off } => {
+                let n = to_u64(meta.elem_count, "N")?;
+                part.check_total(n)?;
+                let data_off = payload_off + n * COUNT_ENTRY_BYTES as u64;
+                let sq = self.comm.allgather_u64(local_bytes);
+                let my_off: u64 = sq[..rank].iter().sum();
+                let total: u64 = sq.iter().sum();
+                if !buf.is_empty() {
+                    self.engine.read_into(&self.file, data_off + my_off, buf)?;
+                }
+                self.cursor += meta.total_len(Some(total as u128)) as u64;
+                self.comm.barrier();
+                Ok(())
+            }
+            decoded @ Pending::DecodedVarray { .. } => {
+                // Decoded sections inflate through the shared path of
+                // read_varray_data (validation, cursor advance, barrier),
+                // then copy into the caller's buffer.
+                self.pending = Pending::VarraySized(Box::new(decoded));
+                let out = self.read_varray_data(part, local_sizes, true)?.unwrap_or_default();
+                if out.len() != buf.len() {
+                    return Err(ScdaError::corrupt(
+                        corrupt::SIZE_MISMATCH,
+                        format!("decoded payload is {} bytes, buffer expects {}", out.len(), buf.len()),
+                    ));
+                }
+                buf.copy_from_slice(&out);
+                Ok(())
+            }
+            _ => Err(call_seq("read_varray_data_into state mismatch")),
         }
     }
 

@@ -119,7 +119,7 @@ impl<C: Communicator> ScdaFile<C> {
         if self.comm.rank() == root {
             self.stage_write(self.cursor + SECTION_HEADER_BYTES as u64, data.unwrap())?;
         }
-        self.comm.barrier();
+        self.section_end()?;
         self.cursor += INLINE_SECTION_BYTES as u64;
         Ok(())
     }
@@ -193,7 +193,7 @@ impl<C: Communicator> ScdaFile<C> {
             pad_data(&mut pad, len as u128, d.last().copied(), self.style);
             self.stage_write(data_off + len, &pad)?;
         }
-        self.comm.barrier();
+        self.section_end()?;
         self.cursor += meta.total_len(None) as u64;
         Ok(())
     }
@@ -251,7 +251,7 @@ impl<C: Communicator> ScdaFile<C> {
             pad_data(&mut pad, total as u128, last, self.style);
             self.stage_write(data_off + total, &pad)?;
         }
-        self.comm.barrier();
+        self.section_end()?;
         self.cursor += meta.total_len(None) as u64;
         Ok(())
     }
@@ -349,7 +349,7 @@ impl<C: Communicator> ScdaFile<C> {
             pad_data(&mut pad, total_bytes as u128, last, self.style);
             self.stage_write(data_off + total_bytes, &pad)?;
         }
-        self.comm.barrier();
+        self.section_end()?;
         self.cursor += meta.total_len(Some(total_bytes as u128)) as u64;
         Ok(())
     }

@@ -369,22 +369,49 @@ pub mod codec_bench {
     }
 }
 
-/// Raw I/O throughput and syscall shape of the section paths, aggregated
-/// ([`crate::io`], the default tuning) vs direct (one syscall per
-/// logical access) — the numbers `BENCH_io.json` tracks. The workload is
-/// the aggregation-adversarial one: multi-section varrays of small
-/// *indirectly addressed* elements, so the direct path pays one `pwrite`
-/// per element and the aggregated path one per contiguous run. Shared by
-/// the f1/t2/t3 benches and the ignored-by-default smoke test.
+/// Raw I/O throughput and syscall shape of the section paths across the
+/// three engines ([`crate::io`]): direct (one syscall per logical
+/// access), aggregated (per-rank staging, the default) and collective
+/// (two-phase stripe exchange), each sync and async — the numbers
+/// `BENCH_io.json` tracks. The workload is the aggregation-adversarial
+/// one: multi-section varrays of small *indirectly addressed* elements,
+/// so the direct path pays one `pwrite` per element and the staged paths
+/// one per contiguous run. Shared by the f1/t2/t3 benches and the
+/// ignored-by-default smoke test.
 pub mod io_bench {
     use super::{measure, JsonVal};
-    use crate::api::{DataSrc, IoTuning, ScdaFile};
+    use crate::api::{DataSrc, EngineStats, IoTuning, ScdaFile};
     use crate::par::{run_parallel, Communicator, IoStats, Partition, SerialComm};
     use std::path::PathBuf;
     use std::sync::Arc;
 
+    /// One engine configuration's write-side numbers.
+    #[derive(Debug, Clone)]
+    pub struct EngineProfile {
+        /// "direct", "aggregated", "aggregated_async", "collective",
+        /// "collective_async".
+        pub name: String,
+        pub write_mib_s: f64,
+        /// Write syscalls summed over all ranks for one whole-file pass.
+        pub write_calls: u64,
+        /// Bytes shipped between ranks (collective two-phase only).
+        pub shipped_bytes: u64,
+    }
+
+    /// The engine configurations the sweep covers (name, tuning).
+    pub fn engine_configs() -> Vec<(&'static str, IoTuning)> {
+        vec![
+            ("direct", IoTuning::direct()),
+            ("aggregated", IoTuning::default()),
+            ("aggregated_async", IoTuning::default().with_async_flush(true)),
+            ("collective", IoTuning::collective()),
+            ("collective_async", IoTuning::collective().with_async_flush(true)),
+        ]
+    }
+
     /// One aggregated-vs-direct comparison (syscalls from an instrumented
-    /// pass, MiB/s medians from `reps` timed passes).
+    /// pass, MiB/s medians from `reps` timed passes), plus the full
+    /// per-engine sweep in `engines`.
     #[derive(Debug, Clone)]
     pub struct IoProfile {
         pub ranks: usize,
@@ -399,6 +426,9 @@ pub mod io_bench {
         pub write_calls_agg: u64,
         pub read_calls_direct: u64,
         pub read_calls_sieved: u64,
+        /// Write-side numbers for every engine configuration
+        /// ([`engine_configs`]).
+        pub engines: Vec<EngineProfile>,
     }
 
     impl IoProfile {
@@ -436,6 +466,15 @@ pub mod io_bench {
                 ("sieved_read_calls", JsonVal::Int(self.read_calls_sieved as i64)),
                 ("syscall_reduction", JsonVal::Num(self.read_syscall_reduction())),
             ]);
+            for e in &self.engines {
+                r.entry(vec![
+                    ("name", JsonVal::Str(format!("engine_{}", e.name))),
+                    ("engine", JsonVal::Str(e.name.clone())),
+                    ("write_mib_per_s", JsonVal::Num(e.write_mib_s)),
+                    ("write_calls", JsonVal::Int(e.write_calls as i64)),
+                    ("shipped_bytes", JsonVal::Int(e.shipped_bytes as i64)),
+                ]);
+            }
             r
         }
     }
@@ -444,7 +483,8 @@ pub mod io_bench {
         (0..len).map(|b| (rank * 131 + i * 7 + b) as u8).collect()
     }
 
-    /// Write the whole benchmark file once; per-rank syscall stats.
+    /// Write the whole benchmark file once; per-rank (syscall, engine)
+    /// stats.
     pub fn write_once(
         path: &Arc<PathBuf>,
         ranks: usize,
@@ -452,7 +492,7 @@ pub mod io_bench {
         elems_per_rank: usize,
         elem_bytes: usize,
         tuning: IoTuning,
-    ) -> Vec<IoStats> {
+    ) -> Vec<(IoStats, EngineStats)> {
         let path = Arc::clone(path);
         run_parallel(ranks, move |comm| {
             let rank = comm.rank();
@@ -467,7 +507,7 @@ pub mod io_bench {
                 f.write_varray(DataSrc::Indirect(&views), &part, &sizes, Some(b"w"), false).unwrap();
             }
             f.flush().unwrap();
-            let st = f.io_stats();
+            let st = (f.io_stats(), f.engine_stats());
             f.close().unwrap();
             st
         })
@@ -509,9 +549,10 @@ pub mod io_bench {
         let direct = IoTuning::direct();
 
         // Instrumented passes for the syscall shape (file bytes are
-        // identical under both tunings; rust/tests/io_coalescing.rs
-        // asserts that, so the read passes below see the same file).
-        let sum_w = |v: &[IoStats]| v.iter().map(|s| s.write_calls).sum::<u64>();
+        // identical under every engine; rust/tests/io_engines.rs asserts
+        // that, so the read passes below see the same file).
+        let sum_w = |v: &[(IoStats, EngineStats)]| v.iter().map(|(s, _)| s.write_calls).sum::<u64>();
+        let sum_ship = |v: &[(IoStats, EngineStats)]| v.iter().map(|(_, e)| e.shipped_bytes).sum::<u64>();
         let sum_r = |v: &[IoStats]| v.iter().map(|s| s.read_calls).sum::<u64>();
         let write_calls_agg = sum_w(&write_once(&path, ranks, sections, elems_per_rank, elem_bytes, agg));
         let read_calls_sieved = sum_r(&read_once(&path, ranks, sections, elems_per_rank, elem_bytes, agg));
@@ -533,6 +574,21 @@ pub mod io_bench {
         let read_direct_mib_s = mib(false, direct);
         let write_agg_mib_s = mib(true, agg);
         let read_sieved_mib_s = mib(false, agg);
+
+        // Full engine sweep (write side): syscall counts and shipped
+        // bytes from an instrumented pass, MiB/s from timed passes.
+        let mut engines = Vec::new();
+        for (name, tuning) in engine_configs() {
+            let (write_mib_s, write_calls, shipped_bytes) = match name {
+                "direct" => (write_direct_mib_s, write_calls_direct, 0),
+                "aggregated" => (write_agg_mib_s, write_calls_agg, 0),
+                _ => {
+                    let st = write_once(&path, ranks, sections, elems_per_rank, elem_bytes, tuning);
+                    (mib(true, tuning), sum_w(&st), sum_ship(&st))
+                }
+            };
+            engines.push(EngineProfile { name: name.to_string(), write_mib_s, write_calls, shipped_bytes });
+        }
         std::fs::remove_file(&*path).ok();
         IoProfile {
             ranks,
@@ -546,6 +602,7 @@ pub mod io_bench {
             write_calls_agg,
             read_calls_direct,
             read_calls_sieved,
+            engines,
         }
     }
 

@@ -235,14 +235,16 @@ pub fn write_checkpoint_tuned<C: Communicator>(
         Metrics::add(&metrics.sections_written, 1);
         Metrics::add(&metrics.elements_written, part.count(file.comm().rank()));
     }
-    // Drain staged extents inside the write timer — with aggregation on,
-    // this flush is where the actual pwrites happen — so ns_write (and
-    // the MiB/s derived from it) covers the real I/O, and the syscall
-    // counters cover the whole file.
+    // Drain the engine inside the write timer — with staging on, this
+    // flush is where the actual pwrites happen (and where the collective
+    // engine ships extents) — so ns_write (and the MiB/s derived from it)
+    // covers the real I/O, and the syscall counters cover the whole file.
     Metrics::timed(&metrics.ns_write, || file.flush())?;
     let io = file.io_stats();
+    let engine = file.engine_stats();
     Metrics::add(&metrics.bytes_written, io.write_bytes);
     Metrics::add(&metrics.write_calls, io.write_calls);
+    Metrics::add(&metrics.bytes_shipped, engine.shipped_bytes);
     file.close()
 }
 

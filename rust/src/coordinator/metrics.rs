@@ -13,9 +13,13 @@ pub struct Metrics {
     pub bytes_compressed: AtomicU64,
     pub bytes_written: AtomicU64,
     pub bytes_read: AtomicU64,
-    /// Positional write syscalls issued by the file layer (after
-    /// aggregation — see `crate::io`), per `ScdaFile::io_stats`.
+    /// Positional write syscalls issued by the file layer (after the
+    /// engine's staging/merging — see `crate::io`), per
+    /// `ScdaFile::io_stats`.
     pub write_calls: AtomicU64,
+    /// Bytes shipped to other ranks' stripes by the collective two-phase
+    /// engine (0 for per-rank engines), per `ScdaFile::engine_stats`.
+    pub bytes_shipped: AtomicU64,
     pub elements_written: AtomicU64,
     pub sections_written: AtomicU64,
     pub chunks_skipped_incompressible: AtomicU64,
@@ -63,6 +67,7 @@ impl Metrics {
              \x20 transformed   {:>10.2} MiB  ({:.1} ms, {:.0} MiB/s)\n\
              \x20 compressed    {:>10.2} MiB  ({:.1} ms, {:.0} MiB/s, ratio {:.3})\n\
              \x20 written       {:>10.2} MiB  ({:.1} ms, {:.0} MiB/s, {} pwrites)\n\
+             \x20 shipped       {:>10.2} MiB  (collective two-phase exchange)\n\
              \x20 sections {}  elements {}  incompressible-chunks {}",
             mb(g(&self.bytes_in)),
             mb(g(&self.bytes_transformed)),
@@ -76,6 +81,7 @@ impl Metrics {
             ms(g(&self.ns_write)),
             bw(g(&self.bytes_written), g(&self.ns_write)),
             g(&self.write_calls),
+            mb(g(&self.bytes_shipped)),
             g(&self.sections_written),
             g(&self.elements_written),
             g(&self.chunks_skipped_incompressible),

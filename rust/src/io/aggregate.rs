@@ -64,6 +64,15 @@ impl WriteAggregator {
         self.staged_bytes += data.len();
     }
 
+    /// Drain the raw staged extents in stage order, unmerged — the
+    /// collective engine ships these to stripe owners, who merge on
+    /// arrival (merging before the split would only be undone by the
+    /// stripe boundaries).
+    pub fn take_extents(&mut self) -> Vec<(u64, Vec<u8>)> {
+        self.staged_bytes = 0;
+        std::mem::take(&mut self.extents)
+    }
+
     /// Drain the staged extents into merged contiguous runs, each run a
     /// single `(offset, bytes)` ready for one `write_at`.
     pub fn take_runs(&mut self) -> Vec<(u64, Vec<u8>)> {
@@ -163,8 +172,12 @@ impl<'a> WriteCoalescer<'a> {
 
 impl Drop for WriteCoalescer<'_> {
     fn drop(&mut self) {
-        // Best-effort: callers should flush explicitly to observe errors.
-        let _ = self.flush();
+        // Callers should flush explicitly to observe errors in-band; a
+        // failure here is recorded for `crate::io::take_drop_error` so it
+        // is never silently swallowed (§A.6).
+        if let Err(e) = self.flush() {
+            crate::io::engine::record_drop_error(self.file.path(), e);
+        }
     }
 }
 

@@ -1,0 +1,615 @@
+//! The pluggable I/O engine: one write/read transport behind all section
+//! paths.
+//!
+//! The serial-equivalence invariant (§2) pins down the *file bytes*, not
+//! the *syscall schedule* — any agent may issue any positional write as
+//! long as the final bytes equal the serial write's. An [`IoEngine`] is
+//! one policy for exploiting that freedom. Three ship with the crate:
+//!
+//! * [`DirectEngine`] — the reference path: one syscall per logical
+//!   access, nothing buffered. Every other engine is asserted
+//!   byte-identical to it.
+//! * [`AggregatingEngine`] — PR 2's per-rank staging
+//!   ([`crate::io::WriteAggregator`]) and read sieving
+//!   ([`crate::io::ReadSieve`]) rehomed behind the trait: extents merge
+//!   into contiguous runs, one `pwrite` per run.
+//! * [`crate::io::CollectiveEngine`] — two-phase collective buffering:
+//!   staged extents ship over [`Communicator::alltoall_bytes`] to the
+//!   aggregator rank owning each file stripe, so each stripe is written
+//!   by exactly one rank regardless of how sections interleave ranks.
+//!
+//! # Contract
+//!
+//! * `write` may stage or issue the bytes; after a successful collective
+//!   `flush` every staged byte is in the file.
+//! * A rank only writes inside its own disjoint windows (the partition
+//!   arithmetic guarantees this), and the section paths write every file
+//!   byte **exactly once** — which is what lets engines reorder, merge,
+//!   re-home (collective) and background (async) the writes without the
+//!   bytes ever depending on the schedule.
+//! * `flush` is collective (every rank, same order, like any other scda
+//!   call); `drain_local` is the per-rank fallback used on drop, correct
+//!   because staged extents are always the rank's own window writes.
+//! * With `async_flush`, staged runs execute on the shared
+//!   [`CodecPool`] so `pwrite`s overlap codec work; errors are recorded,
+//!   never dropped, and re-surface at the next `flush`/`close` — or, if
+//!   the file is dropped without either, through [`take_drop_error`].
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::error::{Result, ScdaError};
+use crate::io::aggregate::WriteAggregator;
+use crate::io::sieve::ReadSieve;
+use crate::io::{IoEngineKind, IoTuning};
+use crate::par::comm::Communicator;
+use crate::par::pfile::ParallelFile;
+use crate::par::pool::{CodecPool, ParJob, Step, SUBMITTER};
+
+/// Per-engine observability counters ([`crate::api::ScdaFile::engine_stats`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct EngineStats {
+    /// The engine's name: "direct", "aggregated" or "collective".
+    pub engine: &'static str,
+    /// Bytes this rank shipped to other ranks' stripes (collective
+    /// two-phase exchange; 0 for per-rank engines).
+    pub shipped_bytes: u64,
+    /// Collective extent exchanges performed.
+    pub exchanges: u64,
+    /// Staged-run drain batches issued (sync or async).
+    pub flush_batches: u64,
+    /// Read-sieve window refills.
+    pub sieve_refills: u64,
+}
+
+/// One write/read transport for an open scda file; see the module docs
+/// for the contract. Object-safe: `ScdaFile` holds a `Box<dyn IoEngine>`
+/// and communicators cross as `&dyn Communicator`.
+pub trait IoEngine: Send {
+    /// The engine's stable name (for stats, benches, reports).
+    fn name(&self) -> &'static str;
+
+    /// Stage or issue `data` at absolute `offset` (this rank's window).
+    fn write(&mut self, file: &Arc<ParallelFile>, offset: u64, data: &[u8]) -> Result<()>;
+
+    /// A borrowed view of `len` bytes at `offset` — the metadata read
+    /// primitive (section prefixes, count rows). Sieved engines serve it
+    /// from the window; the direct engine reads into scratch.
+    fn view(&mut self, file: &Arc<ParallelFile>, offset: u64, len: usize) -> Result<&[u8]>;
+
+    /// Read `len` bytes at `offset` into a fresh buffer; engines route
+    /// small reads through the sieve and large ones straight to the file.
+    fn read_vec(&mut self, file: &Arc<ParallelFile>, offset: u64, len: usize) -> Result<Vec<u8>>;
+
+    /// Read exactly `buf.len()` bytes at `offset` into a caller buffer
+    /// (no allocation on the direct route).
+    fn read_into(&mut self, file: &Arc<ParallelFile>, offset: u64, buf: &mut [u8]) -> Result<()>;
+
+    /// Collective hook invoked by every rank at each section boundary.
+    /// Two-phase engines use it to agree — collectively — when to
+    /// exchange staged extents. Returns whether the hook itself already
+    /// synchronized all ranks (a collective ran), letting the caller
+    /// skip the section barrier instead of paying two rounds.
+    fn section_end(&mut self, _file: &Arc<ParallelFile>, _comm: &dyn Communicator) -> Result<bool> {
+        Ok(false)
+    }
+
+    /// Collective full drain: after it returns on all ranks, every staged
+    /// byte is in the file and any deferred background-flush error has
+    /// been surfaced (returned here, not dropped).
+    fn flush(&mut self, file: &Arc<ParallelFile>, comm: &dyn Communicator) -> Result<()>;
+
+    /// Per-rank drain (no communicator): writes this rank's staged
+    /// extents locally and waits out background work. Always
+    /// byte-correct — staged extents are the rank's own window writes —
+    /// but skips the collective re-homing. Used by drop paths.
+    fn drain_local(&mut self, file: &Arc<ParallelFile>) -> Result<()>;
+
+    /// Take a recorded-but-unsurfaced deferred error (background flush),
+    /// if any. Once taken it is considered reported.
+    fn take_error(&mut self) -> Option<ScdaError> {
+        None
+    }
+
+    /// Snapshot of the engine's counters.
+    fn stats(&self) -> EngineStats;
+}
+
+/// Build the engine an [`IoTuning`] selects. `read_mode` files get the
+/// sieve (when the tuning has one); write-mode files get staging state.
+pub(crate) fn build_engine(
+    tuning: &IoTuning,
+    read_mode: bool,
+    file: &Arc<ParallelFile>,
+) -> Result<Box<dyn IoEngine>> {
+    let sieve = if read_mode && tuning.sieve_window > 0 && tuning.engine != IoEngineKind::Direct {
+        Some(ReadSieve::new(tuning.sieve_window, file.len()?))
+    } else {
+        None
+    };
+    Ok(match tuning.engine {
+        IoEngineKind::Direct => Box::new(DirectEngine::new()),
+        IoEngineKind::Aggregating => {
+            Box::new(AggregatingEngine::new(tuning.aggregation_buffer, sieve, tuning.async_flush))
+        }
+        IoEngineKind::Collective => Box::new(crate::io::collective::CollectiveEngine::new(
+            tuning.aggregation_buffer,
+            tuning.stripe_size,
+            sieve,
+            tuning.async_flush,
+        )),
+    })
+}
+
+// ---------------------------------------------------------------------
+// Dropped-flush error sink
+// ---------------------------------------------------------------------
+
+static DROP_ERRORS: Mutex<Vec<ScdaError>> = Mutex::new(Vec::new());
+
+/// Bound on the sink: it is an escape hatch for a polling error sweep,
+/// not a log — a process that never polls must not grow it forever.
+const DROP_ERRORS_CAP: usize = 64;
+
+/// Record a flush error detected on a drop path (no `Result` channel left
+/// to return it through), attributed to the file it happened on.
+/// Surfaced later via [`take_drop_error`]. Oldest entries are evicted
+/// past [`DROP_ERRORS_CAP`].
+pub(crate) fn record_drop_error(path: &std::path::Path, e: ScdaError) {
+    let mut g = DROP_ERRORS.lock().unwrap();
+    if g.len() >= DROP_ERRORS_CAP {
+        g.remove(0);
+    }
+    g.push(ScdaError::io(
+        std::io::Error::other(e.to_string()),
+        format!("flush on drop of {}", path.display()),
+    ));
+}
+
+/// Take the most recent flush error recorded by a drop path
+/// (`ScdaFile`/`WriteCoalescer` dropped with staged or in-flight writes
+/// that then failed). Drop paths cannot return a `Result`, but per §A.6
+/// file errors must never be silently lost — this is the escape hatch a
+/// runtime's error sweep polls. Returns `None` when nothing failed.
+pub fn take_drop_error() -> Option<ScdaError> {
+    DROP_ERRORS.lock().unwrap().pop()
+}
+
+// ---------------------------------------------------------------------
+// Shared sieve-or-direct read routing
+// ---------------------------------------------------------------------
+
+pub(crate) fn route_view<'a>(
+    sieve: Option<&'a mut ReadSieve>,
+    scratch: &'a mut Vec<u8>,
+    file: &ParallelFile,
+    offset: u64,
+    len: usize,
+) -> Result<&'a [u8]> {
+    match sieve {
+        Some(s) => s.view(file, offset, len),
+        None => {
+            scratch.clear();
+            scratch.resize(len, 0);
+            file.read_at(offset, scratch)?;
+            Ok(&scratch[..])
+        }
+    }
+}
+
+pub(crate) fn route_read_vec(
+    sieve: &mut Option<ReadSieve>,
+    file: &ParallelFile,
+    offset: u64,
+    len: usize,
+) -> Result<Vec<u8>> {
+    if let Some(s) = sieve {
+        if len < s.base_window() {
+            return s.read_vec(file, offset, len);
+        }
+    }
+    file.read_vec(offset, len)
+}
+
+pub(crate) fn route_read_into(
+    sieve: &mut Option<ReadSieve>,
+    file: &ParallelFile,
+    offset: u64,
+    buf: &mut [u8],
+) -> Result<()> {
+    if let Some(s) = sieve {
+        if buf.len() < s.base_window() {
+            buf.copy_from_slice(s.view(file, offset, buf.len())?);
+            return Ok(());
+        }
+    }
+    file.read_at(offset, buf)
+}
+
+// ---------------------------------------------------------------------
+// DirectEngine
+// ---------------------------------------------------------------------
+
+/// The reference transport: every logical access is one syscall, nothing
+/// is staged or buffered. All other engines are property-tested
+/// byte-identical to this one.
+#[derive(Debug, Default)]
+pub struct DirectEngine {
+    scratch: Vec<u8>,
+}
+
+impl DirectEngine {
+    pub fn new() -> Self {
+        DirectEngine { scratch: Vec::new() }
+    }
+}
+
+impl IoEngine for DirectEngine {
+    fn name(&self) -> &'static str {
+        "direct"
+    }
+
+    fn write(&mut self, file: &Arc<ParallelFile>, offset: u64, data: &[u8]) -> Result<()> {
+        file.write_at(offset, data)
+    }
+
+    fn view(&mut self, file: &Arc<ParallelFile>, offset: u64, len: usize) -> Result<&[u8]> {
+        route_view(None, &mut self.scratch, file, offset, len)
+    }
+
+    fn read_vec(&mut self, file: &Arc<ParallelFile>, offset: u64, len: usize) -> Result<Vec<u8>> {
+        file.read_vec(offset, len)
+    }
+
+    fn read_into(&mut self, file: &Arc<ParallelFile>, offset: u64, buf: &mut [u8]) -> Result<()> {
+        file.read_at(offset, buf)
+    }
+
+    fn flush(&mut self, _file: &Arc<ParallelFile>, _comm: &dyn Communicator) -> Result<()> {
+        Ok(())
+    }
+
+    fn drain_local(&mut self, _file: &Arc<ParallelFile>) -> Result<()> {
+        Ok(())
+    }
+
+    fn stats(&self) -> EngineStats {
+        EngineStats { engine: "direct", ..EngineStats::default() }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Background flush on the codec pool
+// ---------------------------------------------------------------------
+
+struct FlushCtl {
+    /// Runs submitted and not yet completed (success or failure).
+    outstanding: Mutex<usize>,
+    cv: Condvar,
+    /// First error observed by any background write; taken exactly once.
+    error: Mutex<Option<ScdaError>>,
+}
+
+/// One drained batch of merged runs, executed cooperatively on the codec
+/// pool: each unit is one `pwrite`. Runs within and across batches are
+/// disjoint byte ranges (the section paths write each byte exactly once),
+/// so any execution order produces the same file.
+struct FlushBatch {
+    file: Arc<ParallelFile>,
+    runs: Vec<(u64, Vec<u8>)>,
+    next: AtomicUsize,
+    done: AtomicUsize,
+    ctl: Arc<FlushCtl>,
+}
+
+impl ParJob for FlushBatch {
+    fn step(&self, _worker: usize) -> Step {
+        let i = self.next.fetch_add(1, Ordering::Relaxed);
+        if i >= self.runs.len() {
+            self.next.store(self.runs.len(), Ordering::Relaxed);
+            return if self.done.load(Ordering::Acquire) == self.runs.len() {
+                Step::Done
+            } else {
+                Step::Idle
+            };
+        }
+        let (off, buf) = &self.runs[i];
+        if let Err(e) = self.file.write_at(*off, buf) {
+            let mut g = self.ctl.error.lock().unwrap();
+            if g.is_none() {
+                *g = Some(e);
+            }
+        }
+        self.done.fetch_add(1, Ordering::AcqRel);
+        let mut out = self.ctl.outstanding.lock().unwrap();
+        *out -= 1;
+        if *out == 0 {
+            self.ctl.cv.notify_all();
+        }
+        Step::Ran
+    }
+}
+
+/// Overlapped flush: merged runs are handed to the shared [`CodecPool`]
+/// as owned background jobs and execute while the submitting rank keeps
+/// staging/encoding. `wait` drains everything (helping) and returns the
+/// first recorded error.
+pub(crate) struct AsyncFlusher {
+    ctl: Arc<FlushCtl>,
+    /// Live batches, kept so `wait` can help execute them.
+    batches: Vec<Arc<FlushBatch>>,
+}
+
+impl AsyncFlusher {
+    pub(crate) fn new() -> Self {
+        AsyncFlusher {
+            ctl: Arc::new(FlushCtl {
+                outstanding: Mutex::new(0),
+                cv: Condvar::new(),
+                error: Mutex::new(None),
+            }),
+            batches: Vec::new(),
+        }
+    }
+
+    pub(crate) fn submit(&mut self, file: &Arc<ParallelFile>, runs: Vec<(u64, Vec<u8>)>) {
+        if runs.is_empty() {
+            return;
+        }
+        // Prune batches whose every run has completed, releasing their
+        // buffers: live memory stays proportional to in-flight writes,
+        // not to the total bytes ever written between flushes.
+        self.batches.retain(|b| b.done.load(Ordering::Acquire) < b.runs.len());
+        {
+            let mut out = self.ctl.outstanding.lock().unwrap();
+            *out += runs.len();
+        }
+        let batch = Arc::new(FlushBatch {
+            file: Arc::clone(file),
+            runs,
+            next: AtomicUsize::new(0),
+            done: AtomicUsize::new(0),
+            ctl: Arc::clone(&self.ctl),
+        });
+        self.batches.push(Arc::clone(&batch));
+        CodecPool::global().spawn(batch);
+    }
+
+    /// Block until every submitted run has executed, helping from the
+    /// calling thread, and surface the first recorded error.
+    pub(crate) fn wait(&mut self) -> Result<()> {
+        for b in self.batches.drain(..) {
+            loop {
+                match b.step(SUBMITTER) {
+                    Step::Ran => {}
+                    Step::Idle | Step::Done => break,
+                }
+            }
+        }
+        let mut out = self.ctl.outstanding.lock().unwrap();
+        while *out > 0 {
+            out = self.ctl.cv.wait(out).unwrap();
+        }
+        drop(out);
+        match self.ctl.error.lock().unwrap().take() {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    /// Take a recorded error without waiting (drop-path polling).
+    pub(crate) fn try_take_error(&self) -> Option<ScdaError> {
+        self.ctl.error.lock().unwrap().take()
+    }
+}
+
+/// Write `runs` now (sync) or hand them to the background flusher.
+pub(crate) fn dispatch_runs(
+    flusher: &mut Option<AsyncFlusher>,
+    file: &Arc<ParallelFile>,
+    runs: Vec<(u64, Vec<u8>)>,
+) -> Result<()> {
+    match flusher {
+        Some(fl) => {
+            fl.submit(file, runs);
+            Ok(())
+        }
+        None => {
+            for (off, buf) in runs {
+                file.write_at(off, &buf)?;
+            }
+            Ok(())
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// AggregatingEngine
+// ---------------------------------------------------------------------
+
+/// Per-rank write aggregation + read sieving (PR 2's transport) behind
+/// the engine trait: extents stage until the buffer would overflow, then
+/// merge into contiguous runs written with one syscall each — on the
+/// calling thread, or on the codec pool with `async_flush`.
+pub struct AggregatingEngine {
+    agg: WriteAggregator,
+    /// Staging capacity; 0 disables staging (direct writes, but sieved
+    /// reads — the two sides are independent).
+    capacity: usize,
+    sieve: Option<ReadSieve>,
+    scratch: Vec<u8>,
+    flusher: Option<AsyncFlusher>,
+    drains: u64,
+}
+
+impl AggregatingEngine {
+    pub fn new(capacity: usize, sieve: Option<ReadSieve>, async_flush: bool) -> Self {
+        AggregatingEngine {
+            agg: WriteAggregator::new(),
+            capacity,
+            sieve,
+            scratch: Vec::new(),
+            flusher: async_flush.then(AsyncFlusher::new),
+            drains: 0,
+        }
+    }
+
+    fn drain_staged(&mut self, file: &Arc<ParallelFile>) -> Result<()> {
+        if self.agg.is_empty() {
+            return Ok(());
+        }
+        let runs = self.agg.take_runs();
+        self.drains += 1;
+        dispatch_runs(&mut self.flusher, file, runs)
+    }
+}
+
+impl IoEngine for AggregatingEngine {
+    fn name(&self) -> &'static str {
+        "aggregated"
+    }
+
+    fn write(&mut self, file: &Arc<ParallelFile>, offset: u64, data: &[u8]) -> Result<()> {
+        let cap = self.capacity;
+        if cap == 0 || data.len() >= cap {
+            // Already one syscall's worth: drain staged extents first to
+            // preserve stage order, then write directly.
+            self.drain_staged(file)?;
+            return file.write_at(offset, data);
+        }
+        if self.agg.staged_bytes() + data.len() > cap {
+            self.drain_staged(file)?;
+        }
+        self.agg.stage(offset, data);
+        Ok(())
+    }
+
+    fn view(&mut self, file: &Arc<ParallelFile>, offset: u64, len: usize) -> Result<&[u8]> {
+        route_view(self.sieve.as_mut(), &mut self.scratch, file, offset, len)
+    }
+
+    fn read_vec(&mut self, file: &Arc<ParallelFile>, offset: u64, len: usize) -> Result<Vec<u8>> {
+        route_read_vec(&mut self.sieve, file, offset, len)
+    }
+
+    fn read_into(&mut self, file: &Arc<ParallelFile>, offset: u64, buf: &mut [u8]) -> Result<()> {
+        route_read_into(&mut self.sieve, file, offset, buf)
+    }
+
+    fn flush(&mut self, file: &Arc<ParallelFile>, _comm: &dyn Communicator) -> Result<()> {
+        self.drain_local(file)
+    }
+
+    fn drain_local(&mut self, file: &Arc<ParallelFile>) -> Result<()> {
+        self.drain_staged(file)?;
+        match &mut self.flusher {
+            Some(fl) => fl.wait(),
+            None => Ok(()),
+        }
+    }
+
+    fn take_error(&mut self) -> Option<ScdaError> {
+        self.flusher.as_ref().and_then(|fl| fl.try_take_error())
+    }
+
+    fn stats(&self) -> EngineStats {
+        EngineStats {
+            engine: "aggregated",
+            shipped_bytes: 0,
+            exchanges: 0,
+            flush_batches: self.drains,
+            sieve_refills: self.sieve.as_ref().map(|s| s.refills()).unwrap_or(0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::par::SerialComm;
+    use std::path::PathBuf;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("scda-engine");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(format!("{name}-{}", std::process::id()))
+    }
+
+    fn create(name: &str) -> (Arc<ParallelFile>, PathBuf) {
+        let path = tmp(name);
+        (Arc::new(ParallelFile::create(&SerialComm::new(), &path).unwrap()), path)
+    }
+
+    #[test]
+    fn direct_engine_is_one_syscall_per_access() {
+        let (f, path) = create("direct");
+        let mut e = DirectEngine::new();
+        e.write(&f, 0, b"abcd").unwrap();
+        e.write(&f, 4, b"efgh").unwrap();
+        assert_eq!(f.io_stats().write_calls, 2);
+        assert_eq!(e.read_vec(&f, 2, 4).unwrap(), b"cdef");
+        assert_eq!(e.view(&f, 0, 3).unwrap(), b"abc");
+        let mut buf = [0u8; 4];
+        e.read_into(&f, 4, &mut buf).unwrap();
+        assert_eq!(&buf, b"efgh");
+        e.flush(&f, &SerialComm::new()).unwrap();
+        assert_eq!(e.stats().engine, "direct");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn aggregating_engine_merges_and_flushes() {
+        let (f, path) = create("agg");
+        let mut e = AggregatingEngine::new(1 << 20, None, false);
+        for i in 0..50u64 {
+            e.write(&f, i * 4, &[i as u8; 4]).unwrap();
+        }
+        assert_eq!(f.io_stats().write_calls, 0, "everything staged");
+        e.flush(&f, &SerialComm::new()).unwrap();
+        assert_eq!(f.io_stats().write_calls, 1, "one merged run");
+        let got = f.read_vec(0, 200).unwrap();
+        for i in 0..50usize {
+            assert!(got[i * 4..(i + 1) * 4].iter().all(|&b| b == i as u8));
+        }
+        assert_eq!(e.stats().flush_batches, 1);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn async_flush_overlaps_and_surfaces_errors_at_flush() {
+        let (f, path) = create("async-err");
+        let mut e = AggregatingEngine::new(1 << 20, None, true);
+        e.write(&f, 0, &[1u8; 128]).unwrap();
+        f.inject_write_failure(0);
+        let err = e.flush(&f, &SerialComm::new()).unwrap_err();
+        assert_eq!(err.kind(), crate::error::ScdaErrorKind::Io);
+        // Error was surfaced at the barrier, not left behind.
+        assert!(e.take_error().is_none());
+        f.inject_write_failure(u64::MAX);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn async_flush_writes_the_same_bytes() {
+        let (f, path) = create("async-ok");
+        let mut e = AggregatingEngine::new(4096, None, true);
+        let mut expect = vec![0u8; 64 * 113];
+        for i in 0..64u64 {
+            let b = vec![(i % 251) as u8; 113];
+            expect[(i as usize) * 113..(i as usize + 1) * 113].copy_from_slice(&b);
+            e.write(&f, i * 113, &b).unwrap();
+        }
+        e.flush(&f, &SerialComm::new()).unwrap();
+        assert_eq!(f.read_vec(0, expect.len()).unwrap(), expect);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn drop_error_sink_attributes_and_drains() {
+        let p = std::path::Path::new("/tmp/sink-test.scda");
+        record_drop_error(p, ScdaError::io(std::io::Error::other("x"), "sink test"));
+        let e = take_drop_error().expect("recorded error present");
+        assert_eq!(e.kind(), crate::error::ScdaErrorKind::Io);
+        assert!(e.message().contains("sink-test.scda"), "error names the file: {e}");
+    }
+}

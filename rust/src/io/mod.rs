@@ -1,66 +1,140 @@
-//! I/O aggregation: coalescing the section paths' many small positional
-//! accesses into few large ones.
+//! I/O engines: pluggable write/read transports under the section paths.
 //!
 //! The serial-equivalence invariant of the format (§2) constrains the
 //! *file bytes*, not the *syscall shape*: a section may be materialized
-//! by any sequence of positional writes as long as the final bytes are
-//! those of the serial write. This module exploits that freedom:
+//! by any sequence of positional writes — issued by any rank — as long
+//! as the final bytes are those of the serial write. This module turns
+//! that freedom into a policy choice, the [`IoEngine`] trait
+//! ([`engine`]), with three implementations:
 //!
-//! * [`aggregate::WriteAggregator`] — a per-rank staging buffer of
-//!   `(offset, bytes)` extents. The API writer stages every header row,
-//!   count row, data window and padding extent instead of issuing a
-//!   `pwrite` each; at flush time adjacent/overlapping extents merge into
-//!   contiguous runs and each run is written with a single `write_at`
-//!   (a `pwritev`-style gather: scattered in-memory element lists become
-//!   one syscall per contiguous file run).
-//! * [`sieve::ReadSieve`] — the read-side dual ("data sieving"): one
-//!   large aligned window read covers a section's prefix, count rows and
-//!   small payloads; subsequent small reads are served from the buffer.
-//! * [`IoTuning`] — the per-file knobs, settable via
-//!   [`crate::api::ScdaFile::set_io_tuning`].
+//! * [`DirectEngine`] — the reference path: one syscall per logical
+//!   access. Everything else is property-tested byte-identical to it.
+//! * [`AggregatingEngine`] — per-rank staging ([`WriteAggregator`]) and
+//!   read sieving ([`ReadSieve`]): adjacent extents merge into contiguous
+//!   runs, one `pwrite` per run; one aligned window `pread` serves the
+//!   many small metadata reads, with the window adapting to the access
+//!   pattern (sequential scans grow it, random seeks shrink it).
+//! * [`CollectiveEngine`] — two-phase collective buffering
+//!   ([`collective`]): staged extents ship over
+//!   `Communicator::alltoall_bytes` to the aggregator rank owning each
+//!   file stripe, so each stripe is written by exactly one rank with one
+//!   syscall per contiguous run, regardless of section interleaving.
 //!
-//! Correctness argument: every staged extent is a write the direct path
-//! would have issued, runs replay their extents in stage order (so
-//! overlaps resolve exactly like direct `pwrite`s), and ranks only ever
-//! stage extents inside their own disjoint windows — so the flushed file
-//! bytes are identical to the unaggregated path at any flush schedule,
-//! buffer size, and rank count. `rust/tests/io_coalescing.rs` asserts
-//! byte-identity against the direct path at 1, 2 and 4 ranks.
+//! Any engine can additionally run its drains on the shared codec pool
+//! (`async_flush`): `pwrite`s overlap encoding, and errors surface at
+//! the next `flush`/`close` — or via [`take_drop_error`] if the file is
+//! dropped first. [`IoTuning`] selects and parameterizes the engine per
+//! file ([`crate::api::ScdaFile::set_io_tuning`]).
 
 pub mod aggregate;
+pub mod collective;
+pub mod engine;
 pub mod sieve;
 
 pub use aggregate::{WriteAggregator, WriteCoalescer};
+pub use collective::CollectiveEngine;
+pub use engine::{take_drop_error, AggregatingEngine, DirectEngine, EngineStats, IoEngine};
 pub use sieve::ReadSieve;
 
-/// Per-file I/O aggregation knobs (the `ScdaFile` tuning surface).
+/// Which transport an [`IoTuning`] selects.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IoEngineKind {
+    /// One syscall per logical access; no staging, no sieve. The
+    /// reference path every other engine is asserted against.
+    Direct,
+    /// Per-rank write aggregation + read sieving (the default).
+    Aggregating,
+    /// Two-phase collective buffering over stripe-owning aggregator
+    /// ranks.
+    Collective,
+}
+
+/// Per-file I/O engine knobs (the `ScdaFile` tuning surface). The file
+/// bytes are identical under every tuning; only the syscall shape, the
+/// memory footprint and who issues the writes change.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct IoTuning {
+    /// Which transport to route reads and writes through.
+    pub engine: IoEngineKind,
     /// Write-side staging capacity in bytes. Extents accumulate until the
     /// buffer would overflow (or the file is flushed/closed), then merge
     /// into contiguous runs written with one syscall each. Writes of at
     /// least this size bypass staging (they are already one syscall).
-    /// `0` disables aggregation: every write goes straight to the file
-    /// (the reference path aggregation must be byte-identical to).
+    /// `0` disables staging: every write goes straight to the file.
     pub aggregation_buffer: usize,
-    /// Read-side sieve window in bytes. Reads smaller than this are
-    /// served from one window-sized buffered read; reads of at least
-    /// this size go straight to the file into an exactly-sized buffer.
+    /// Read-side sieve window in bytes (the *initial* window: it adapts
+    /// within [4 KiB, 8x] to the observed access pattern). Reads smaller
+    /// than the current window are served from one buffered window read;
+    /// larger reads go straight to the file into an exactly-sized buffer.
     /// `0` disables the sieve.
     pub sieve_window: usize,
+    /// Collective engine: the file-stripe size. Stripe `s` (bytes
+    /// `[s*stripe_size, (s+1)*stripe_size)`) is written exclusively by
+    /// rank `s % P` after the extent exchange.
+    pub stripe_size: usize,
+    /// Drain staged runs on the shared codec pool so `pwrite`s overlap
+    /// codec work; errors surface at the next `flush`/`close`, never
+    /// dropped (see [`take_drop_error`] for the drop path).
+    ///
+    /// Background flush always rides the process-wide shared pool
+    /// ([`crate::par::pool::CodecPool::global`]); the per-file
+    /// `CodecParallel` knob governs only the codec stages.
+    ///
+    /// Caveat: background runs execute in no particular order relative
+    /// to each other or to bypass writes, so the async path assumes a
+    /// *write-once* stream — every file byte written at most once
+    /// between flushes. The section paths guarantee this by
+    /// construction; engine users re-writing a range must flush between
+    /// the writes or keep `async_flush` off (the sync path replays
+    /// overlaps in stage order).
+    pub async_flush: bool,
 }
 
 impl Default for IoTuning {
     fn default() -> Self {
-        IoTuning { aggregation_buffer: 4 << 20, sieve_window: 128 << 10 }
+        IoTuning {
+            engine: IoEngineKind::Aggregating,
+            aggregation_buffer: 4 << 20,
+            sieve_window: 128 << 10,
+            stripe_size: 1 << 20,
+            async_flush: false,
+        }
     }
 }
 
 impl IoTuning {
-    /// No aggregation, no sieving: one syscall per logical access. This
-    /// is the reference path the aggregated one is asserted against.
+    /// No staging, no sieving: one syscall per logical access. This is
+    /// the reference path the other engines must be byte-identical to.
     pub fn direct() -> Self {
-        IoTuning { aggregation_buffer: 0, sieve_window: 0 }
+        IoTuning {
+            engine: IoEngineKind::Direct,
+            aggregation_buffer: 0,
+            sieve_window: 0,
+            ..IoTuning::default()
+        }
+    }
+
+    /// Two-phase collective buffering with the default knobs.
+    pub fn collective() -> Self {
+        IoTuning { engine: IoEngineKind::Collective, ..IoTuning::default() }
+    }
+
+    /// Builder: toggle the overlapped (codec-pool) flush.
+    pub fn with_async_flush(mut self, on: bool) -> Self {
+        self.async_flush = on;
+        self
+    }
+
+    /// Builder: set the collective stripe size.
+    pub fn with_stripe_size(mut self, bytes: usize) -> Self {
+        self.stripe_size = bytes;
+        self
+    }
+
+    /// Builder: set the write-staging capacity.
+    pub fn with_aggregation_buffer(mut self, bytes: usize) -> Self {
+        self.aggregation_buffer = bytes;
+        self
     }
 }
 
@@ -71,10 +145,23 @@ mod tests {
     #[test]
     fn tuning_defaults_are_sane() {
         let t = IoTuning::default();
+        assert_eq!(t.engine, IoEngineKind::Aggregating);
         assert!(t.aggregation_buffer >= 1 << 20);
         assert!(t.sieve_window >= 4 << 10);
+        assert!(t.stripe_size >= 64 << 10);
+        assert!(!t.async_flush);
         let d = IoTuning::direct();
+        assert_eq!(d.engine, IoEngineKind::Direct);
         assert_eq!(d.aggregation_buffer, 0);
         assert_eq!(d.sieve_window, 0);
+    }
+
+    #[test]
+    fn tuning_builders_compose() {
+        let t = IoTuning::collective().with_async_flush(true).with_stripe_size(64 << 10);
+        assert_eq!(t.engine, IoEngineKind::Collective);
+        assert!(t.async_flush);
+        assert_eq!(t.stripe_size, 64 << 10);
+        assert_eq!(t.with_aggregation_buffer(123).aggregation_buffer, 123);
     }
 }

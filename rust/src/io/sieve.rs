@@ -9,6 +9,24 @@
 //! underneath it (scda files are create-once: "the only possibility to
 //! write to a file is to create a new one", §A.3) — so the window and the
 //! cached file length never go stale.
+//!
+//! # Window adaptivity
+//!
+//! The window size adapts to the observed access pattern with hysteresis:
+//!
+//! * **Sequential scans** (toc-style: every refill starts right after the
+//!   previous window) double the window after [`GROW_AFTER`] consecutive
+//!   sequential refills, up to [`MAX_GROWTH`]× the configured size — a
+//!   long metadata scan converges to `log` many refills instead of
+//!   `bytes / window`.
+//! * **Non-contiguous seeks** (random section access) halve the window
+//!   after [`SHRINK_AFTER`] consecutive jumps, down to the 4 KiB
+//!   alignment — a random-access reader stops paying for window bytes it
+//!   never uses.
+//!
+//! The streak counters mean one stray seek inside a scan (or one local
+//! run inside random access) never flips the window — that is the
+//! hysteresis `grow_and_shrink_have_hysteresis` asserts.
 
 use crate::error::{corrupt, Result, ScdaError};
 use crate::par::pfile::ParallelFile;
@@ -18,34 +36,116 @@ use crate::par::pfile::ParallelFile;
 /// pattern: size rows just behind a payload read).
 const WINDOW_ALIGN: u64 = 4096;
 
+/// Consecutive sequential refills before the window doubles.
+const GROW_AFTER: u32 = 2;
+
+/// Consecutive non-contiguous refills before the window halves.
+const SHRINK_AFTER: u32 = 2;
+
+/// The window never grows past this multiple of the configured size.
+const MAX_GROWTH: usize = 8;
+
 /// A buffered window over a read-only [`ParallelFile`].
 #[derive(Debug)]
 pub struct ReadSieve {
     buf: Vec<u8>,
     /// Absolute file offset of `buf[0]`.
     buf_off: u64,
-    /// Nominal window size; refills read at least this much when the file
-    /// has it.
+    /// Current (adaptive) window size; refills read at least this much
+    /// when the file has it.
     window: usize,
+    /// The configured window size the adaptivity is anchored to.
+    base: usize,
     /// File length, fixed at open (read-only files cannot grow).
     file_len: u64,
     /// Number of window refills issued (observability).
     refills: u64,
+    seq_streak: u32,
+    jump_streak: u32,
+    grows: u64,
+    shrinks: u64,
 }
 
 impl ReadSieve {
     pub fn new(window: usize, file_len: u64) -> Self {
         assert!(window > 0, "a zero sieve window means 'no sieve' (use None)");
-        ReadSieve { buf: Vec::new(), buf_off: 0, window, file_len, refills: 0 }
+        ReadSieve {
+            buf: Vec::new(),
+            buf_off: 0,
+            window,
+            base: window,
+            file_len,
+            refills: 0,
+            seq_streak: 0,
+            jump_streak: 0,
+            grows: 0,
+            shrinks: 0,
+        }
     }
 
-    /// The nominal window size (callers route reads >= this directly).
+    /// The current window size (what the next refill fetches).
     pub fn window(&self) -> usize {
         self.window
     }
 
+    /// The configured window size. Payload-read routing gates on this,
+    /// not the adaptive current size: window growth should amortize
+    /// *metadata* refills, never pull large payload reads (one exact
+    /// pread each) through the window's extra copy.
+    pub fn base_window(&self) -> usize {
+        self.base
+    }
+
     pub fn refills(&self) -> u64 {
         self.refills
+    }
+
+    /// How often the window doubled (sequential-scan adaptivity).
+    pub fn grows(&self) -> u64 {
+        self.grows
+    }
+
+    /// How often the window halved (random-access adaptivity).
+    pub fn shrinks(&self) -> u64 {
+        self.shrinks
+    }
+
+    /// Classify a refill against the current window and adapt the window
+    /// size; see the module docs for the hysteresis rules.
+    fn adapt(&mut self, off: u64) {
+        if self.buf.is_empty() {
+            return; // first refill: no pattern yet
+        }
+        let prev_end = self.buf_off + self.buf.len() as u64;
+        // Sequential = forward progress within reach of the window. The
+        // triggering read of a dense scan usually *starts* inside the
+        // current window (the boundary falls mid-read), so any `off >=
+        // buf_off` short of a window-sized leap counts as sequential;
+        // only backward seeks and far-forward leaps are jumps.
+        let sequential = off >= self.buf_off && off < prev_end + self.window as u64;
+        if sequential {
+            self.seq_streak += 1;
+            self.jump_streak = 0;
+            if self.seq_streak >= GROW_AFTER {
+                let grown = (self.window * 2).min(self.base * MAX_GROWTH);
+                if grown > self.window {
+                    self.window = grown;
+                    self.grows += 1;
+                }
+                self.seq_streak = 0;
+            }
+        } else {
+            self.jump_streak += 1;
+            self.seq_streak = 0;
+            if self.jump_streak >= SHRINK_AFTER {
+                let shrunk = (self.window / 2).max(WINDOW_ALIGN as usize);
+                if shrunk < self.window {
+                    self.window = shrunk;
+                    self.shrinks += 1;
+                }
+                self.jump_streak = 0;
+            }
+        }
     }
 
     /// A view of `len` bytes at absolute `off`, refilling the window from
@@ -63,6 +163,7 @@ impl ReadSieve {
         }
         let cached = off >= self.buf_off && end <= self.buf_off + self.buf.len() as u64;
         if !cached {
+            self.adapt(off);
             let start = (off / WINDOW_ALIGN) * WINDOW_ALIGN;
             let win_end = (start + self.window as u64).max(end).min(self.file_len);
             let take = (win_end - start) as usize;
@@ -143,6 +244,70 @@ mod tests {
         assert_eq!(err.kind(), crate::error::ScdaErrorKind::CorruptFile);
         // In-bounds still fine afterwards.
         assert_eq!(s.view(&f, 90, 10).unwrap().len(), 10);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn sequential_scan_doubles_window() {
+        let len = 512 * 1024;
+        let (f, path) = file_with(len, "grow");
+        let base = 8 * 1024;
+        let mut s = ReadSieve::new(base, len as u64);
+        // Walk the file forward in small steps: every refill is
+        // sequential, so the window doubles every GROW_AFTER refills up
+        // to the 8x cap.
+        for off in (0..len as u64).step_by(1024) {
+            s.view(&f, off, 512).unwrap();
+        }
+        assert!(s.grows() >= 3, "only {} grows over a long scan", s.grows());
+        assert_eq!(s.window(), base * MAX_GROWTH, "long scan converges to the cap");
+        assert_eq!(s.shrinks(), 0);
+        // Growth pays: far fewer refills than bytes/base.
+        assert!(s.refills() < (len / base) as u64, "{} refills", s.refills());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn random_seeks_shrink_window() {
+        let len = 512 * 1024;
+        let (f, path) = file_with(len, "shrink");
+        let base = 64 * 1024;
+        let mut s = ReadSieve::new(base, len as u64);
+        // Alternate between two far-apart regions: every refill is a
+        // jump, so the window halves every SHRINK_AFTER refills down to
+        // the 4 KiB alignment floor.
+        for i in 0..16u64 {
+            let off = if i % 2 == 0 { 0 } else { 400 * 1024 };
+            s.view(&f, off + i, 16).unwrap();
+        }
+        assert!(s.shrinks() >= 3, "only {} shrinks under random access", s.shrinks());
+        assert_eq!(s.window(), WINDOW_ALIGN as usize);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn grow_and_shrink_have_hysteresis() {
+        let len = 1024 * 1024;
+        let (f, path) = file_with(len, "hysteresis");
+        let base = 8 * 1024;
+        let mut s = ReadSieve::new(base, len as u64);
+        s.view(&f, 0, 16).unwrap(); // first refill: neutral
+        // One sequential refill alone must not grow the window...
+        s.view(&f, base as u64 + 16, 16).unwrap();
+        assert_eq!((s.window(), s.grows()), (base, 0));
+        // ...and one jump resets the streak without shrinking.
+        s.view(&f, 900 * 1024, 16).unwrap();
+        assert_eq!((s.window(), s.shrinks()), (base, 0));
+        // A second consecutive jump is a pattern: shrink.
+        s.view(&f, 16, 16).unwrap();
+        assert_eq!((s.window(), s.shrinks()), (base / 2, 1));
+        // Two consecutive sequential refills after the shrink: grow once.
+        let e1 = s.buf_off + s.buf.len() as u64;
+        s.view(&f, e1, 16).unwrap();
+        assert_eq!(s.grows(), 0, "one sequential refill is not yet a pattern");
+        let e2 = s.buf_off + s.buf.len() as u64;
+        s.view(&f, e2, 16).unwrap();
+        assert_eq!(s.grows(), 1);
         std::fs::remove_file(&path).unwrap();
     }
 }

@@ -69,46 +69,62 @@
 //!   asserts this property; `BENCH_codec.json` (emitted by the f1/t4
 //!   benches and the ignored smoke test) tracks the throughput it buys.
 //!
-//! # I/O aggregation
+//! # I/O engines
 //!
 //! Serial equivalence constrains the *file bytes*, not the *syscall
 //! shape*: a section may reach the file through any sequence of
-//! positional writes, as long as the final bytes equal the serial
-//! write's. The [`io`] subsystem exploits that freedom on both paths:
+//! positional writes — issued by any rank — as long as the final bytes
+//! equal the serial write's. The [`io`] subsystem makes that freedom a
+//! pluggable policy: every positional access of the section paths routes
+//! through one [`io::IoEngine`] per open file, selected and parameterized
+//! by [`io::IoTuning`] on [`api::ScdaFile::set_io_tuning`].
 //!
-//! * **Staging/flush contract (writes).** Every write the section paths
-//!   issue — header rows, count rows, per-element data windows, padding
-//!   — is *staged* as an `(offset, bytes)` extent in a per-rank
-//!   [`io::WriteAggregator`] instead of hitting the file. Extents drain
-//!   when the staging buffer would overflow, on [`api::ScdaFile::flush`],
-//!   and on `close`; at drain time extents merge into maximal contiguous
-//!   runs and each run is one `write_at`. Indirectly addressed element
-//!   lists ([`api::DataSrc::Indirect`]) thereby gather into one syscall
-//!   per contiguous file run — the `pwritev` effect. Writes at least as
-//!   large as the buffer bypass staging (they are already one syscall),
-//!   after draining the staged extents to keep write order.
-//! * **Why serial equivalence is preserved.** Each staged extent is
-//!   exactly a write the direct path would have issued; runs replay
-//!   their extents in stage order, so overlaps resolve like direct
-//!   `pwrite`s; and a rank only stages extents inside its own disjoint
-//!   windows, so no cross-rank order exists to violate. The flushed file
-//!   is therefore byte-identical to the unaggregated path at any buffer
-//!   size, flush schedule and rank count
-//!   (`rust/tests/io_coalescing.rs` asserts this at 1, 2 and 4 ranks).
-//! * **Read sieving.** Read-mode files attach an [`io::ReadSieve`]: one
-//!   large aligned `pread` fills a window that serves the many small
-//!   section reads (prefixes, count rows, small payloads); large payload
-//!   reads bypass it into exactly-sized buffers — or into a caller-owned
-//!   buffer with no allocation at all via
-//!   `api::ScdaFile::read_array_data_into` — and the file length is
-//!   cached at open (read-only files cannot grow), eliminating the
-//!   per-section `fstat`.
-//! * **Tuning & observability.** [`io::IoTuning`] on
-//!   [`api::ScdaFile::set_io_tuning`] sets the staging capacity and
-//!   sieve window (`IoTuning::direct()` is the reference path);
-//!   [`api::ScdaFile::io_stats`] exposes per-rank syscall counters, and
-//!   `BENCH_io.json` (f1/t2 benches, ignored smoke test) tracks
-//!   aggregated-vs-direct syscall counts and MiB/s.
+//! * **Trait contract.** `write` may stage, ship or issue the bytes;
+//!   after a collective `flush` (every rank, same order — `close` implies
+//!   it) every staged byte is in the file and any deferred error has
+//!   surfaced. Engines get a collective hook at each section boundary
+//!   (`section_end`) — the natural synchronization points the API already
+//!   has. Reads route through `view`/`read_vec`/`read_into` so one
+//!   engine owns both directions of the transport.
+//! * **[`io::DirectEngine`]** is the reference path: one syscall per
+//!   logical access. Every other engine is property-tested byte-identical
+//!   to it (`rust/tests/io_engines.rs`, at 1/2/4/8 ranks).
+//! * **[`io::AggregatingEngine`]** (default) stages every write — header
+//!   rows, count rows, element windows, padding — as an `(offset,
+//!   bytes)` extent in a per-rank [`io::WriteAggregator`]; at drain time
+//!   extents merge into maximal contiguous runs, one `write_at` each
+//!   (indirect element lists gather into the `pwritev` effect). Reads
+//!   attach an [`io::ReadSieve`]: one aligned window `pread` serves the
+//!   many small metadata reads, and the window *adapts* — sequential
+//!   scans double it (up to 8x), non-contiguous seeks halve it, with
+//!   streak hysteresis so one stray access never flips it. Caller-buffer
+//!   reads (`read_array_data_into` / `read_varray_data_into`) skip
+//!   allocation entirely on the raw route.
+//! * **[`io::CollectiveEngine`]** is two-phase collective buffering: the
+//!   file is cut into stripes (stripe `s` owned by rank `s mod P`), and
+//!   at collective points ranks ship staged extents over
+//!   `Communicator::alltoall_bytes` to each stripe's owner, which merges
+//!   all ranks' fragments and issues one syscall per contiguous run. Who
+//!   writes a byte is invisible in the bytes (the same §2 argument that
+//!   makes the format partition-independent), fragments of different
+//!   ranks never overlap (disjoint windows), and one rank's fragments
+//!   replay in stage order — so the re-homing is exact. Payoff: write
+//!   syscalls become a function of file size, not of section
+//!   interleaving (asserted in `rust/tests/io_engines.rs`).
+//! * **Async (overlapped) flush.** With `IoTuning::async_flush`, drained
+//!   runs execute as owned background jobs on the shared codec pool
+//!   ([`par::pool::CodecPool::spawn`]), so `pwrite`s overlap encoding.
+//!   Safe because the section paths write every byte exactly once, so
+//!   concurrent runs are disjoint. Errors are recorded, never dropped:
+//!   they surface at the next `flush`/`close`, via
+//!   [`api::ScdaFile::take_error`], or — if the file is dropped first —
+//!   through [`io::take_drop_error`] (§A.6: file errors must never be
+//!   silently lost).
+//! * **Observability.** [`api::ScdaFile::io_stats`] counts this rank's
+//!   syscalls; [`api::ScdaFile::engine_stats`] adds shipped bytes,
+//!   exchanges, drain batches and sieve refills; `BENCH_io.json`
+//!   (f1/t2/t3 benches, smoke tests) tracks MiB/s and syscall counts for
+//!   all three engines, sync and async.
 
 pub mod api;
 pub mod codec;

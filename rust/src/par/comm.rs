@@ -51,6 +51,54 @@ pub trait Communicator: Send {
         let bytes = self.bcast_bytes(root, value.map(|v| v.to_le_bytes().to_vec()));
         u64::from_le_bytes(bytes.try_into().expect("bcast_u64 payload"))
     }
+
+    /// Personalized exchange (MPI_Alltoallv): `outgoing[d]` is delivered
+    /// to rank `d`; returns `incoming`, where `incoming[s]` is the payload
+    /// rank `s` addressed to this rank. `outgoing.len()` must equal
+    /// `size()`. This is the transport of the two-phase collective I/O
+    /// engine (`crate::io::collective`): ranks ship staged file extents to
+    /// the aggregator rank owning each file stripe.
+    ///
+    /// The default implementation frames the per-destination payloads into
+    /// one buffer and allgathers it; substrates with a cheaper transport
+    /// override it (the thread substrate copies only the fragments
+    /// addressed to the caller out of the shared deposit slots).
+    fn alltoall_bytes(&self, outgoing: Vec<Vec<u8>>) -> Vec<Vec<u8>> {
+        assert_eq!(outgoing.len(), self.size(), "one outgoing payload per destination rank");
+        let me = self.rank();
+        let size = self.size();
+        self.allgather_bytes(frame_alltoall(&outgoing))
+            .into_iter()
+            .map(|src| extract_alltoall_fragment(&src, me, size))
+            .collect()
+    }
+}
+
+/// Wire format shared by every `alltoall_bytes` implementation: for each
+/// destination rank in order, an 8-byte LE length followed by the payload.
+pub(crate) fn frame_alltoall(outgoing: &[Vec<u8>]) -> Vec<u8> {
+    let mut framed = Vec::with_capacity(outgoing.iter().map(|d| d.len() + 8).sum());
+    for d in outgoing {
+        framed.extend_from_slice(&(d.len() as u64).to_le_bytes());
+        framed.extend_from_slice(d);
+    }
+    framed
+}
+
+/// Pull the fragment addressed to `dest` out of one source's framed
+/// deposit (see [`frame_alltoall`]); only that fragment is copied.
+pub(crate) fn extract_alltoall_fragment(framed: &[u8], dest: usize, size: usize) -> Vec<u8> {
+    let mut at = 0usize;
+    for d in 0..size {
+        let len =
+            u64::from_le_bytes(framed[at..at + 8].try_into().expect("alltoall frame header")) as usize;
+        at += 8;
+        if d == dest {
+            return framed[at..at + len].to_vec();
+        }
+        at += len;
+    }
+    panic!("alltoall frame missing destination {dest}");
 }
 
 #[cfg(test)]
@@ -66,5 +114,20 @@ mod tests {
         assert_eq!(c.allmin_u64(17), 17);
         assert_eq!(c.allsum_u64(17), 17);
         assert_eq!(c.bcast_u64(0, Some(5)), 5);
+    }
+
+    #[test]
+    fn alltoall_frame_roundtrips() {
+        let outgoing = vec![vec![1u8, 2], vec![], vec![3u8, 4, 5]];
+        let framed = frame_alltoall(&outgoing);
+        for (d, expect) in outgoing.iter().enumerate() {
+            assert_eq!(&extract_alltoall_fragment(&framed, d, 3), expect);
+        }
+    }
+
+    #[test]
+    fn alltoall_on_serial_is_identity() {
+        let c = SerialComm::new();
+        assert_eq!(c.alltoall_bytes(vec![vec![9, 8, 7]]), vec![vec![9, 8, 7]]);
     }
 }

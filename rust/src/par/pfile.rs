@@ -59,6 +59,9 @@ pub struct ParallelFile {
     /// cannot grow, §A.3), so `len()` needs no per-section `fstat`.
     cached_len: Option<u64>,
     counters: IoCounters,
+    /// Fault injection (see [`Self::inject_write_failure`]); `u64::MAX`
+    /// means disarmed.
+    fail_writes_after: AtomicU64,
 }
 
 impl ParallelFile {
@@ -104,6 +107,7 @@ impl ParallelFile {
             writable: true,
             cached_len: None,
             counters: IoCounters::default(),
+            fail_writes_after: AtomicU64::new(u64::MAX),
         })
     }
 
@@ -129,6 +133,7 @@ impl ParallelFile {
             writable: false,
             cached_len: Some(cached_len),
             counters,
+            fail_writes_after: AtomicU64::new(u64::MAX),
         })
     }
 
@@ -136,11 +141,39 @@ impl ParallelFile {
         &self.path
     }
 
+    /// Fault-injection hook for failure drills and tests of the staged /
+    /// background flush error paths: after `after` more successful
+    /// `write_at` calls on this handle, every subsequent write fails with
+    /// an injected I/O error. `u64::MAX` disarms. The hook is per handle
+    /// (never global) and the injected failure is indistinguishable from a
+    /// real `pwrite` error to everything above the file layer.
+    pub fn inject_write_failure(&self, after: u64) {
+        self.fail_writes_after.store(after, Ordering::SeqCst);
+    }
+
     /// Write `buf` at absolute `offset` (this rank's window).
     pub fn write_at(&self, offset: u64, buf: &[u8]) -> Result<()> {
         debug_assert!(self.writable);
         self.counters.writes.fetch_add(1, Ordering::Relaxed);
         self.counters.write_bytes.fetch_add(buf.len() as u64, Ordering::Relaxed);
+        if self.fail_writes_after.load(Ordering::Relaxed) != u64::MAX {
+            // Atomic countdown: concurrent writers (async-flush pool
+            // workers) must each consume exactly one tick, and the
+            // armed-at-zero state must fail every write until disarmed.
+            let armed = self.fail_writes_after.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+                if v == u64::MAX || v == 0 {
+                    None
+                } else {
+                    Some(v - 1)
+                }
+            });
+            if armed == Err(0) {
+                return Err(ScdaError::io(
+                    std::io::Error::other("injected write failure"),
+                    format!("writing {} bytes at offset {offset}", buf.len()),
+                ));
+            }
+        }
         self.file
             .write_all_at(buf, offset)
             .map_err(|e| ScdaError::io(e, format!("writing {} bytes at offset {offset}", buf.len())))
@@ -283,6 +316,23 @@ mod tests {
         assert_eq!(r.len().unwrap(), 10);
         r.len().unwrap();
         assert_eq!(r.io_stats().stat_calls, 1);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn injected_write_failure_fires_after_n_writes() {
+        let path = tmp("inject");
+        let c = SerialComm::new();
+        let f = ParallelFile::create(&c, &path).unwrap();
+        f.inject_write_failure(2);
+        f.write_at(0, b"ok").unwrap();
+        f.write_at(2, b"ok").unwrap();
+        let err = f.write_at(4, b"boom").unwrap_err();
+        assert_eq!(err.kind(), crate::error::ScdaErrorKind::Io);
+        // Stays failed until disarmed.
+        assert!(f.write_at(4, b"boom").is_err());
+        f.inject_write_failure(u64::MAX);
+        f.write_at(4, b"ok").unwrap();
         std::fs::remove_file(&path).unwrap();
     }
 

@@ -85,11 +85,39 @@ struct SlotCtl {
     cv: Condvar,
 }
 
+/// How a published job is held by the pool.
+enum SlotJob {
+    /// Lifetime-erased borrow; valid exactly while the slot is published
+    /// (the submitter removes it and drains steppers before its `run`
+    /// call returns).
+    Borrowed(&'static (dyn ParJob + 'static)),
+    /// Pool-owned background job ([`CodecPool::spawn`]): workers retire
+    /// the slot themselves once `step` reports [`Step::Done`].
+    Owned(Arc<dyn ParJob + Send + Sync>),
+}
+
+impl SlotJob {
+    fn clone_ref(&self) -> SlotJob {
+        match self {
+            SlotJob::Borrowed(j) => SlotJob::Borrowed(*j),
+            SlotJob::Owned(a) => SlotJob::Owned(Arc::clone(a)),
+        }
+    }
+
+    fn job(&self) -> &dyn ParJob {
+        match self {
+            SlotJob::Borrowed(j) => *j,
+            SlotJob::Owned(a) => a.as_ref(),
+        }
+    }
+
+    fn is_owned(&self) -> bool {
+        matches!(self, SlotJob::Owned(_))
+    }
+}
+
 struct Slot {
-    /// Lifetime-erased job reference; valid exactly while the slot is
-    /// published (the submitter removes it and drains steppers before
-    /// its `run` call returns).
-    job: &'static (dyn ParJob + 'static),
+    job: SlotJob,
     id: u64,
     ctl: Arc<SlotCtl>,
 }
@@ -176,7 +204,7 @@ impl CodecPool {
             let mut st = self.shared.state.lock().unwrap();
             let id = st.next_id;
             st.next_id += 1;
-            st.slots.push(Slot { job: job_static, id, ctl: Arc::clone(&ctl) });
+            st.slots.push(Slot { job: SlotJob::Borrowed(job_static), id, ctl: Arc::clone(&ctl) });
             id
         };
         self.shared.work_cv.notify_all();
@@ -195,6 +223,37 @@ impl CodecPool {
         while *g > 0 {
             g = ctl.cv.wait(g).unwrap();
         }
+    }
+
+    /// Publish an *owned* job and return immediately: the pool's workers
+    /// drain it like any published job and retire the slot once `step`
+    /// reports [`Step::Done`]. This is the fire-and-forget primitive the
+    /// async I/O flush rides on (`crate::io::engine`): staged `pwrite`
+    /// runs execute on the codec workers while the submitting rank keeps
+    /// encoding. Completion and errors are the job's own business —
+    /// implementations expose a handle the submitter can wait on.
+    ///
+    /// With no helper threads (`lanes <= 1`) the job executes
+    /// synchronously on the caller before returning, so background work
+    /// degrades to the serial path instead of stalling forever.
+    pub fn spawn(&self, job: Arc<dyn ParJob + Send + Sync + 'static>) {
+        if self.lanes <= 1 {
+            loop {
+                match job.step(SUBMITTER) {
+                    Step::Ran => {}
+                    Step::Idle => job.park(),
+                    Step::Done => break,
+                }
+            }
+            return;
+        }
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            let id = st.next_id;
+            st.next_id += 1;
+            st.slots.push(Slot { job: SlotJob::Owned(job), id, ctl: Arc::new(SlotCtl::default()) });
+        }
+        self.shared.work_cv.notify_all();
     }
 
     /// Run `f(0..n)` across the pool and return the results in index
@@ -267,20 +326,31 @@ fn worker_loop(shared: &PoolShared, worker: usize) {
         let n = st.slots.len();
         let slot = &st.slots[rr % n];
         rr = rr.wrapping_add(1);
-        let job = slot.job;
+        let job = slot.job.clone_ref();
+        let id = slot.id;
         let ctl = Arc::clone(&slot.ctl);
         *ctl.steppers.lock().unwrap() += 1;
         let ticket = StepTicket(ctl);
         drop(st);
         let mut any = false;
+        let mut finished = false;
         loop {
-            match job.step(worker) {
+            match job.job().step(worker) {
                 Step::Ran => any = true,
-                Step::Idle | Step::Done => break,
+                Step::Idle => break,
+                Step::Done => {
+                    finished = true;
+                    break;
+                }
             }
         }
         drop(ticket);
         st = shared.state.lock().unwrap();
+        if finished && job.is_owned() {
+            // Owned jobs have no submitter to retire them; the worker that
+            // observes completion removes the slot (idempotent by id).
+            st.slots.retain(|s| s.id != id);
+        }
         if any {
             dry = 0;
             continue;
@@ -429,6 +499,55 @@ mod tests {
         let data: Vec<u64> = (0..1000).collect();
         let sums = pool.run_ordered(10, |i| data[i * 100..(i + 1) * 100].iter().sum::<u64>());
         assert_eq!(sums.iter().sum::<u64>(), data.iter().sum::<u64>());
+    }
+
+    /// Minimal owned job for spawn tests: `n` units bump a counter.
+    struct CountJob {
+        n: usize,
+        next: AtomicUsize,
+        done: AtomicUsize,
+    }
+
+    impl CountJob {
+        fn new(n: usize) -> Self {
+            CountJob { n, next: AtomicUsize::new(0), done: AtomicUsize::new(0) }
+        }
+    }
+
+    impl ParJob for CountJob {
+        fn step(&self, _worker: usize) -> Step {
+            let i = self.next.fetch_add(1, Ordering::Relaxed);
+            if i >= self.n {
+                self.next.store(self.n, Ordering::Relaxed);
+                return if self.done.load(Ordering::Acquire) == self.n { Step::Done } else { Step::Idle };
+            }
+            self.done.fetch_add(1, Ordering::AcqRel);
+            Step::Ran
+        }
+    }
+
+    #[test]
+    fn spawned_job_runs_in_background_and_slot_retires() {
+        let pool = CodecPool::new(4);
+        let job = Arc::new(CountJob::new(64));
+        pool.spawn(Arc::clone(&job) as Arc<dyn ParJob + Send + Sync>);
+        let t0 = std::time::Instant::now();
+        while job.done.load(Ordering::Acquire) < 64 {
+            assert!(t0.elapsed() < Duration::from_secs(10), "spawned job never completed");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // The pool stays fully usable afterwards (the owned slot retires).
+        let out = pool.run_ordered(8, |i| i + 1);
+        assert_eq!(out, (1..=8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn spawn_on_serial_pool_executes_inline() {
+        let pool = CodecPool::new(1);
+        let job = Arc::new(CountJob::new(16));
+        pool.spawn(Arc::clone(&job) as Arc<dyn ParJob + Send + Sync>);
+        // No helpers: spawn must have completed the job before returning.
+        assert_eq!(job.done.load(Ordering::Acquire), 16);
     }
 
     #[test]

@@ -38,6 +38,11 @@ impl Communicator for SerialComm {
     fn allgather_bytes(&self, data: Vec<u8>) -> Vec<Vec<u8>> {
         vec![data]
     }
+
+    fn alltoall_bytes(&self, outgoing: Vec<Vec<u8>>) -> Vec<Vec<u8>> {
+        assert_eq!(outgoing.len(), 1, "serial communicator has only rank 0");
+        outgoing
+    }
 }
 
 #[cfg(test)]

@@ -120,6 +120,23 @@ impl Communicator for ThreadComm {
         let view = self.exchange(Some(data));
         view.into_iter().map(|s| s.expect("all ranks deposit").to_vec()).collect()
     }
+
+    fn alltoall_bytes(&self, outgoing: Vec<Vec<u8>>) -> Vec<Vec<u8>> {
+        assert_eq!(outgoing.len(), self.shared.size, "one outgoing payload per destination rank");
+        // One framed deposit per rank; each reader copies only the
+        // fragment addressed to it out of the shared `Arc` slots — the
+        // full P x P payload matrix is never materialized anywhere.
+        let view = self.exchange(Some(crate::par::comm::frame_alltoall(&outgoing)));
+        view.into_iter()
+            .map(|s| {
+                crate::par::comm::extract_alltoall_fragment(
+                    s.expect("all ranks deposit").as_ref(),
+                    self.rank,
+                    self.shared.size,
+                )
+            })
+            .collect()
+    }
 }
 
 /// Run `f(comm)` on `ranks` threads, one rank each; returns the per-rank
@@ -203,6 +220,27 @@ mod tests {
                 let round = round as u64;
                 assert_eq!(g, &[round * 100, round * 100 + 1, round * 100 + 2, round * 100 + 3]);
             }
+        }
+    }
+
+    #[test]
+    fn alltoall_delivers_personalized_payloads() {
+        // Rank r sends the payload [r, d] to destination d; every rank
+        // must receive [s, me] from each source s.
+        let results = run_parallel(4, |comm| {
+            let me = comm.rank();
+            let outgoing: Vec<Vec<u8>> = (0..4).map(|d| vec![me as u8, d as u8]).collect();
+            comm.alltoall_bytes(outgoing)
+        });
+        for (me, incoming) in results.iter().enumerate() {
+            for (s, payload) in incoming.iter().enumerate() {
+                assert_eq!(payload, &vec![s as u8, me as u8]);
+            }
+        }
+        // Empty payloads are legal (ranks with nothing to ship).
+        let results = run_parallel(3, |comm| comm.alltoall_bytes(vec![Vec::new(); 3]));
+        for incoming in results {
+            assert!(incoming.iter().all(|p| p.is_empty()));
         }
     }
 

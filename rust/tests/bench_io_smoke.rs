@@ -52,8 +52,21 @@ fn io_bench_harness_roundtrips_tiny_workload() {
     assert!(p.write_calls_agg >= 1);
     assert!(p.write_calls_direct > p.write_calls_agg);
     assert!(p.read_calls_sieved <= p.read_calls_direct);
+    // The acceptance shape: the report covers all three engines, sync
+    // and async.
+    let names: Vec<&str> = p.engines.iter().map(|e| e.name.as_str()).collect();
+    for expected in ["direct", "aggregated", "aggregated_async", "collective", "collective_async"] {
+        assert!(names.contains(&expected), "engine sweep missing {expected}: {names:?}");
+    }
+    for e in &p.engines {
+        assert!(e.write_calls >= 1, "{}: no writes counted", e.name);
+        assert!(e.write_mib_s > 0.0, "{}: no throughput", e.name);
+    }
     let r = p.report().render();
     assert!(r.contains("\"aggregated_write_calls\""));
     assert!(r.contains("\"sieved_read_calls\""));
     assert!(r.contains("\"syscall_reduction\""));
+    assert!(r.contains("\"engine_collective\""));
+    assert!(r.contains("\"engine_collective_async\""));
+    assert!(r.contains("\"engine_direct\""));
 }
