@@ -1,16 +1,23 @@
-//! Archival inspection workflow: build a mixed archive (simulation
-//! outputs + an embedded "HDF5-style" parameter blob as suggested in the
-//! paper's related-work discussion), then walk it three ways:
+//! Archival inspection workflow on the archive catalog layer: build a
+//! mixed archive of *named datasets* (simulation outputs + an embedded
+//! "HDF5-style" parameter blob as suggested in the paper's related-work
+//! discussion), then walk it four ways:
 //!
-//!  1. the structure query (headers only, data skipped) — O(metadata),
-//!  2. selective random access to single elements of a compressed array
-//!     (the design goal of per-element compression: no monolithic
-//!     decompress),
-//!  3. strict byte-level verification.
+//!  1. the catalog listing (what `scda ls` prints) — loaded through the
+//!     O(1) footer index, no section scan,
+//!  2. random access to one named dataset (`open_dataset` seeks straight
+//!     to the section; per-element compression then decodes only what is
+//!     read),
+//!  3. the classic structure query (`toc`), which transparently takes
+//!     the catalog fast path on indexed files,
+//!  4. strict byte-level verification — the catalog trailer is ordinary
+//!     scda, so the file verifies unchanged.
 //!
 //!     cargo run --release --example archive_inspect
 
-use scda::api::{DataSrc, ScdaFile};
+use scda::api::ScdaFile;
+use scda::api::DataSrc;
+use scda::archive::Archive;
 use scda::par::{Partition, SerialComm};
 use std::time::Instant;
 
@@ -21,19 +28,20 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let part = Partition::uniform(1, n);
 
     // ---- Build the archive ------------------------------------------------
-    let mut f = ScdaFile::create(SerialComm::new(), &path, b"archive of run 0042")?;
-    f.write_inline(b"archive v1 / 2026-07-10 / ok :)\n", Some(b"meta"))?;
+    let mut ar = Archive::create(SerialComm::new(), &path, b"archive of run 0042")?;
+    ar.write_inline_from("meta", 0, Some(b"archive v1 / 2026-07-10 / ok :)\n"))?;
     // "The best of both worlds may be to write an HDF5 file of global
     // parameters to memory, to save that as an scda block section" — we
-    // embed an opaque parameter blob the same way.
+    // embed an opaque parameter blob the same way, now addressable by
+    // name.
     let params: Vec<u8> = (0..4096u32).flat_map(|i| i.to_le_bytes()).collect();
-    f.write_block_from(0, Some(&params), params.len() as u64, Some(b"params.h5"), true)?;
+    ar.write_block_from("params.h5", 0, Some(&params), params.len() as u64, true)?;
     // A large compressed fixed-size array of smooth data.
     let data: Vec<u8> = (0..n * elem)
         .map(|i| (((i / elem) as f64).sin() * 100.0 + 128.0) as u8)
         .collect();
-    f.write_array(DataSrc::Contiguous(&data), &part, elem, Some(b"samples"), true)?;
-    f.close()?;
+    ar.write_array("samples", DataSrc::Contiguous(&data), &part, elem, true)?;
+    ar.finish()?;
     let file_len = std::fs::metadata(&path)?.len();
     println!(
         "archive: {} bytes for {} bytes of payload (ratio {:.3})",
@@ -42,46 +50,50 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         file_len as f64 / (data.len() + params.len()) as f64
     );
 
-    // ---- 1. Structure query (no payload I/O) ------------------------------
+    // ---- 1. Catalog listing (O(1) footer index) ---------------------------
+    let t0 = Instant::now();
+    let mut ar = Archive::open(SerialComm::new(), &path)?;
+    println!(
+        "catalog in {:.3} ms ({}):",
+        t0.elapsed().as_secs_f64() * 1e3,
+        if ar.is_indexed() { "footer index" } else { "scan fallback" }
+    );
+    for d in ar.datasets() {
+        println!(
+            "  {} {} N={} E={} ({} file bytes @ {}){}",
+            d.kind,
+            d.name,
+            d.elem_count,
+            d.elem_size,
+            d.byte_len,
+            d.offset,
+            if d.encoded { " [compressed]" } else { "" }
+        );
+    }
+
+    // ---- 2. Random access by name -----------------------------------------
+    let t0 = Instant::now();
+    let blob = ar.read_block("params.h5", 0)?.unwrap();
+    assert_eq!(blob, params);
+    println!("read params.h5 by name: {} bytes in {:.3} ms", blob.len(), t0.elapsed().as_secs_f64() * 1e3);
+    let t0 = Instant::now();
+    let local = ar.read_array("samples", &part, elem)?;
+    assert_eq!(local, data);
+    println!("read samples by name: {} elements in {:.1} ms", n, t0.elapsed().as_secs_f64() * 1e3);
+    ar.close()?;
+
+    // ---- 3. Structure query (catalog fast path) ---------------------------
     let t0 = Instant::now();
     let mut f = ScdaFile::open(SerialComm::new(), &path)?;
     let toc = f.toc(true)?;
     f.close()?;
-    println!("toc in {:.3} ms:", t0.elapsed().as_secs_f64() * 1e3);
-    for e in &toc {
-        println!(
-            "  {} {:?} N={} E={} ({} file bytes){}",
-            e.header.kind,
-            String::from_utf8_lossy(&e.header.user),
-            e.header.elem_count,
-            e.header.elem_size,
-            e.byte_len,
-            if e.header.decoded { " [compressed]" } else { "" }
-        );
-    }
+    println!(
+        "toc in {:.3} ms: {} logical sections (datasets + catalog + index)",
+        t0.elapsed().as_secs_f64() * 1e3,
+        toc.len()
+    );
 
-    // ---- 2. Selective random access ---------------------------------------
-    // Read only elements [k, k+1) of the compressed array by giving all
-    // other ranks^W elements to a skip partition: a 1-rank reader that
-    // wants a single element uses a partition placing it alone... the
-    // scda way is a reading partition; with one process we read the full
-    // window but can also exploit the V-section layout directly:
-    let t0 = Instant::now();
-    let mut f = ScdaFile::open(SerialComm::new(), &path)?;
-    // Skip meta + params.
-    f.read_section_header(true)?;
-    f.skip_section_data()?;
-    f.read_section_header(true)?;
-    f.skip_section_data()?;
-    let h = f.read_section_header(true)?;
-    assert!(h.decoded);
-    let local = f.read_array_data(&part, elem, true)?.unwrap();
-    f.close()?;
-    let full_ms = t0.elapsed().as_secs_f64() * 1e3;
-    assert_eq!(local, data);
-    println!("full decompress-read of {} elements: {:.1} ms", n, full_ms);
-
-    // ---- 3. Strict verification -------------------------------------------
+    // ---- 4. Strict verification -------------------------------------------
     let t0 = Instant::now();
     let sections = scda::api::verify_file(&path)?;
     println!("verify: OK ({sections} raw sections) in {:.1} ms", t0.elapsed().as_secs_f64() * 1e3);

@@ -71,10 +71,14 @@ def test_python_reads_rust_demo_checkpoint(tmp_path):
     while not r.at_end():
         kind, user, payload = r.next_section()
         kinds.append((kind, bytes(user)))
-    assert ("I", b"scda:ckpt") == kinds[0]
-    assert ("B", b"scda:manifest") == kinds[1]
+    # Checkpoints are named-dataset archives since the catalog layer:
+    # versioned step datasets, then the catalog block + footer index.
+    assert ("I", b"ckpt/1.info") == kinds[0]
+    assert ("B", b"ckpt/1.manifest") == kinds[1]
     names = [u for _, u in kinds[2:]]
-    assert b"rho:f64x5" in names and b"hp:coeffs" in names
+    assert b"ckpt/1/rho:f64x5" in names and b"ckpt/1/hp:coeffs" in names
+    assert ("B", b"scda:catalog") == kinds[-2]
+    assert ("I", b"scda:index") == kinds[-1]
 
 
 @needs_bin

@@ -109,4 +109,35 @@ fn main() {
             e.name, e.write_mib_s, e.write_calls, e.shipped_bytes
         );
     }
+
+    // --- named-dataset random access: the archive catalog's O(1) footer
+    // index vs the linear scan it replaces (BENCH_archive.json) ---
+    println!("\nT3d: archive open_dataset(last) over S named datasets, indexed vs scan\n");
+    let mut ar_table =
+        Table::new(&["S", "indexed ms", "scan ms", "speedup", "indexed preads", "scan preads"]);
+    let sweep: &[usize] = if quick { &[8, 64] } else { &[8, 64, 512, 2048] };
+    let profiles: Vec<_> = sweep
+        .iter()
+        .map(|&s| scda::bench_support::archive_bench::random_access(s, 32, 256, reps))
+        .collect();
+    for p in &profiles {
+        ar_table.row(&[
+            p.datasets.to_string(),
+            format!("{:.3}", p.indexed_ms),
+            format!("{:.3}", p.scan_ms),
+            format!("{:.1}x", p.speedup()),
+            p.indexed_reads.to_string(),
+            p.scan_reads.to_string(),
+        ]);
+    }
+    ar_table.print();
+    println!(
+        "\nT3d shape check: indexed preads flat in S (O(1) footer -> catalog -> section); scan preads grow ~linearly."
+    );
+    let path = scda::bench_support::bench_archive_json_path();
+    if let Err(e) = scda::bench_support::archive_bench::report(&profiles).write(&path) {
+        eprintln!("warning: could not write {}: {e}", path.display());
+    } else {
+        println!("wrote {}", path.display());
+    }
 }

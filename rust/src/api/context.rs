@@ -307,6 +307,29 @@ impl<C: Communicator> ScdaFile<C> {
         Ok(())
     }
 
+    /// Read `len` bytes at an absolute offset through the engine — the
+    /// archive layer's primitive for footer/catalog reads outside the
+    /// section cursor discipline (read mode only).
+    pub(crate) fn engine_read(&mut self, offset: u64, len: usize) -> Result<Vec<u8>> {
+        self.engine.read_vec(&self.file, offset, len)
+    }
+
+    /// File length in bytes (served from the open-time cache in read
+    /// mode — no fstat).
+    pub(crate) fn file_len(&self) -> Result<u64> {
+        self.file.len()
+    }
+
+    /// Reposition the section cursor at an absolute offset (read mode):
+    /// the archive layer's random-access entry point. Any pending header
+    /// state is discarded — the next call must be `read_section_header`.
+    pub(crate) fn seek_section(&mut self, offset: u64) -> Result<()> {
+        self.require_mode(OpenMode::Read, "seek_section")?;
+        self.pending = Pending::None;
+        self.cursor = offset;
+        Ok(())
+    }
+
     /// The pool to fan element batches out to, if any.
     pub(crate) fn codec_pool(&self) -> Option<&CodecPool> {
         match &self.codec_par {

@@ -2,6 +2,13 @@
 //! headers but skips the data bytes to identify the structure of the file"
 //! that §A.5.1 anticipates, plus a strict byte-level verifier used by
 //! `scda verify`.
+//!
+//! `toc` takes the archive catalog fast path when the file carries a
+//! footer index (`crate::archive`): the logical table of contents is
+//! reconstructed from the catalog section in O(1) header reads instead
+//! of a linear scan over every section header. Verification reads the
+//! file in bounded windows — headers, count rows and padding bytes, with
+//! data bytes skipped — so multi-GiB files verify in constant memory.
 
 use crate::error::{corrupt, Result, ScdaError};
 use crate::format::header::parse_file_header;
@@ -28,10 +35,26 @@ pub struct TocEntry {
 impl<C: Communicator> ScdaFile<C> {
     /// Read the table of contents: every logical section's header, with
     /// data bytes skipped. With `decode`, convention pairs are reported as
-    /// one logical compressed section.
+    /// one logical compressed section — and, when the file carries an
+    /// archive footer index, the table is served from the catalog section
+    /// in O(1) header reads instead of the linear scan (the entries are
+    /// identical: the catalog records exactly the logical headers).
     pub fn toc(&mut self, decode: bool) -> Result<Vec<TocEntry>> {
         self.require_mode(OpenMode::Read, "toc")?;
         self.require_no_pending("toc")?;
+        if decode && self.position() == FILE_HEADER_BYTES as u64 {
+            if let Some(entries) = self.toc_from_catalog()? {
+                return Ok(entries);
+            }
+        }
+        self.toc_scan(decode)
+    }
+
+    /// The linear-scan toc (the pre-archive behavior and the fallback for
+    /// files without a footer index): walk every section header from the
+    /// current cursor. The archive layer calls this directly when asked
+    /// to bypass the index.
+    pub(crate) fn toc_scan(&mut self, decode: bool) -> Result<Vec<TocEntry>> {
         let mut entries = Vec::new();
         while !self.at_end()? {
             let offset = self.cursor;
@@ -41,6 +64,158 @@ impl<C: Communicator> ScdaFile<C> {
         }
         Ok(entries)
     }
+
+    /// The catalog fast path: if the footer index is present, rebuild the
+    /// logical toc from the catalog plus the two trailer sections and
+    /// leave the cursor at end-of-file. `None` means scan instead —
+    /// either there is no index, or the catalog's entries do not tile
+    /// the section region exactly (a file that mixes named datasets
+    /// with uncataloged raw sections): the toc contract is *every*
+    /// section, so a partial catalog cannot serve it.
+    fn toc_from_catalog(&mut self) -> Result<Option<Vec<TocEntry>>> {
+        let Some(loaded) = crate::archive::index::load(self)? else {
+            return Ok(None);
+        };
+        let mut at = FILE_HEADER_BYTES as u64;
+        for d in &loaded.datasets {
+            if d.offset != at {
+                return Ok(None);
+            }
+            at = match at.checked_add(d.byte_len) {
+                Some(v) => v,
+                None => return Ok(None),
+            };
+        }
+        if at != loaded.catalog_off {
+            return Ok(None);
+        }
+        let flen = self.file_len()?;
+        let mut entries: Vec<TocEntry> = loaded
+            .datasets
+            .iter()
+            .map(|d| TocEntry {
+                header: SectionHeader {
+                    kind: d.kind,
+                    user: d.name.clone().into_bytes(),
+                    elem_count: d.elem_count,
+                    elem_size: d.elem_size,
+                    decoded: d.encoded,
+                },
+                offset: d.offset,
+                byte_len: d.byte_len,
+            })
+            .collect();
+        let index_off = flen - INLINE_SECTION_BYTES as u64;
+        entries.push(TocEntry {
+            header: SectionHeader {
+                kind: SectionKind::Block,
+                user: crate::archive::index::CATALOG_USER.to_vec(),
+                elem_count: 0,
+                elem_size: loaded.catalog_bytes,
+                decoded: false,
+            },
+            offset: loaded.catalog_off,
+            byte_len: index_off - loaded.catalog_off,
+        });
+        entries.push(TocEntry {
+            header: SectionHeader {
+                kind: SectionKind::Inline,
+                user: crate::archive::index::INDEX_USER.to_vec(),
+                elem_count: 0,
+                elem_size: 0,
+                decoded: false,
+            },
+            offset: index_off,
+            byte_len: INLINE_SECTION_BYTES as u64,
+        });
+        self.seek_section(flen)?;
+        Ok(Some(entries))
+    }
+}
+
+// ---------------------------------------------------------------------
+// Strict verification
+// ---------------------------------------------------------------------
+
+/// A positional byte source for the verifier: the whole point of the
+/// abstraction is that [`verify_file`] never materializes the file — it
+/// reads headers, count rows, padding and single boundary bytes through
+/// this interface and *skips* the data bytes in between.
+trait VerifySource {
+    fn src_len(&self) -> u64;
+    fn read_exact(&mut self, offset: u64, buf: &mut [u8]) -> Result<()>;
+}
+
+struct SliceSource<'a>(&'a [u8]);
+
+impl VerifySource for SliceSource<'_> {
+    fn src_len(&self) -> u64 {
+        self.0.len() as u64
+    }
+
+    fn read_exact(&mut self, offset: u64, buf: &mut [u8]) -> Result<()> {
+        let at = offset as usize;
+        // Callers bounds-check before reading; a miss here is a bug, but
+        // report it as truncation rather than panicking.
+        if at + buf.len() > self.0.len() {
+            return Err(ScdaError::corrupt(corrupt::TRUNCATED, "read past end of image"));
+        }
+        buf.copy_from_slice(&self.0[at..at + buf.len()]);
+        Ok(())
+    }
+}
+
+/// Window size of the buffered file source: consecutive header / size-row
+/// / padding reads of many small sections are served from one pread.
+const VERIFY_WINDOW: usize = 64 << 10;
+
+struct FileSource {
+    file: std::fs::File,
+    len: u64,
+    /// Buffered window covering `[win_off, win_off + win.len())`.
+    win: Vec<u8>,
+    win_off: u64,
+}
+
+fn pread_exact(file: &std::fs::File, offset: u64, buf: &mut [u8]) -> Result<()> {
+    use std::os::unix::fs::FileExt;
+    file.read_exact_at(buf, offset).map_err(|e| {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            ScdaError::corrupt(corrupt::TRUNCATED, format!("file ends before offset {offset}"))
+        } else {
+            ScdaError::io(e, format!("reading {} bytes at offset {offset}", buf.len()))
+        }
+    })
+}
+
+impl VerifySource for FileSource {
+    fn src_len(&self) -> u64 {
+        self.len
+    }
+
+    fn read_exact(&mut self, offset: u64, buf: &mut [u8]) -> Result<()> {
+        let n = buf.len();
+        if n >= VERIFY_WINDOW {
+            return pread_exact(&self.file, offset, buf);
+        }
+        let inside = offset >= self.win_off && offset + n as u64 <= self.win_off + self.win.len() as u64;
+        if !inside {
+            let avail = self.len.saturating_sub(offset);
+            if avail < n as u64 {
+                // Short window: let the direct read produce the
+                // truncation error.
+                return pread_exact(&self.file, offset, buf);
+            }
+            let take = (VERIFY_WINDOW as u64).min(avail) as usize;
+            self.win.resize(take, 0);
+            let (file, win) = (&self.file, &mut self.win);
+            pread_exact(file, offset, win)?;
+            self.win_off = offset;
+        }
+        let s = (offset - self.win_off) as usize;
+        buf.copy_from_slice(&self.win[s..s + n]);
+        Ok(())
+    }
 }
 
 /// Strict structural verification of a whole scda file, independent of any
@@ -48,57 +223,94 @@ impl<C: Communicator> ScdaFile<C> {
 /// every string padding *and* every data padding byte (MIME or Unix form),
 /// and that sections tile the file exactly. Returns the number of
 /// sections. This is the reference acceptance test for foreign writers.
+///
+/// Verification streams: the file is read in bounded windows (headers,
+/// size rows, padding, and the last data byte of each section — never the
+/// data itself), so memory use is constant in the file size and a
+/// multi-GiB archive verifies without file-sized RAM.
 pub fn verify_file(path: &std::path::Path) -> Result<usize> {
-    let bytes = std::fs::read(path).map_err(|e| ScdaError::io(e, format!("reading {}", path.display())))?;
-    verify_bytes(&bytes)
+    let file =
+        std::fs::File::open(path).map_err(|e| ScdaError::io(e, format!("reading {}", path.display())))?;
+    let len = file.metadata().map_err(|e| ScdaError::io(e, "stat"))?.len();
+    verify_source(&mut FileSource { file, len, win: Vec::new(), win_off: 0 })
 }
 
 /// [`verify_file`] over an in-memory image.
 pub fn verify_bytes(bytes: &[u8]) -> Result<usize> {
-    if bytes.len() < FILE_HEADER_BYTES {
+    verify_source(&mut SliceSource(bytes))
+}
+
+/// Rows of V-section size entries read per chunk while summing (bounds
+/// the verifier's buffer at 8 KiB).
+const VERIFY_CHUNK_ROWS: u64 = 256;
+
+fn verify_source(src: &mut dyn VerifySource) -> Result<usize> {
+    let len = src.src_len();
+    if len < FILE_HEADER_BYTES as u64 {
         return Err(ScdaError::corrupt(corrupt::TRUNCATED, "file shorter than the 128-byte header"));
     }
-    parse_file_header(&bytes[..FILE_HEADER_BYTES], true)?;
-    let mut at = FILE_HEADER_BYTES;
+    let mut head = [0u8; FILE_HEADER_BYTES];
+    src.read_exact(0, &mut head)?;
+    parse_file_header(&head, true)?;
+    let mut at = FILE_HEADER_BYTES as u64;
     let mut sections = 0usize;
-    while at < bytes.len() {
-        let take = (bytes.len() - at).min(SECTION_PREFIX_MAX);
-        let (meta, prefix) = parse_section_prefix(&bytes[at..at + take])?;
-        at += prefix;
+    let mut buf = vec![0u8; (VERIFY_CHUNK_ROWS as usize) * COUNT_ENTRY_BYTES];
+    while at < len {
+        let take = (len - at).min(SECTION_PREFIX_MAX as u64) as usize;
+        src.read_exact(at, &mut buf[..take])?;
+        let (meta, prefix) = parse_section_prefix(&buf[..take])?;
+        at += prefix as u64;
         let data_len: u128 = match meta.kind {
             SectionKind::Inline => INLINE_DATA_BYTES as u128,
             SectionKind::Block => meta.elem_size,
             SectionKind::Array => meta.elem_count * meta.elem_size,
             SectionKind::Varray => {
-                // Validate and sum all size rows.
+                // Validate and sum all size rows, a bounded chunk at a
+                // time.
                 let mut total: u128 = 0;
-                for _ in 0..meta.elem_count {
-                    if at + COUNT_ENTRY_BYTES > bytes.len() {
+                let mut row: u128 = 0;
+                while row < meta.elem_count {
+                    let rows = (meta.elem_count - row).min(VERIFY_CHUNK_ROWS as u128) as usize;
+                    let bytes = rows * COUNT_ENTRY_BYTES;
+                    if at + bytes as u64 > len {
                         return Err(ScdaError::corrupt(corrupt::TRUNCATED, "V size rows truncated"));
                     }
-                    total += decode_count(&bytes[at..at + COUNT_ENTRY_BYTES], b'E')?;
-                    at += COUNT_ENTRY_BYTES;
+                    src.read_exact(at, &mut buf[..bytes])?;
+                    for entry in buf[..bytes].chunks_exact(COUNT_ENTRY_BYTES) {
+                        total += decode_count(entry, b'E')?;
+                    }
+                    at += bytes as u64;
+                    row += rows as u128;
                 }
                 total
             }
         };
-        let data_len_us = usize::try_from(data_len)
-            .map_err(|_| ScdaError::corrupt(corrupt::COUNT_OVERFLOW, "section larger than memory"))?;
-        if at + data_len_us > bytes.len() {
+        if data_len > (len - at) as u128 {
             return Err(ScdaError::corrupt(corrupt::TRUNCATED, "section data truncated"));
         }
-        let last = if data_len_us > 0 { Some(bytes[at + data_len_us - 1]) } else { None };
-        at += data_len_us;
-        if meta.kind != SectionKind::Inline {
-            let p = data_pad_len(data_len);
-            if at + p > bytes.len() {
+        let data_len = data_len as u64;
+        if meta.kind == SectionKind::Inline {
+            // Inline data is opaque and never padded: nothing to read.
+            at += data_len;
+        } else {
+            let p = data_pad_len(data_len as u128);
+            if at + data_len + p as u64 > len {
                 return Err(ScdaError::corrupt(corrupt::TRUNCATED, "data padding truncated"));
             }
-            check_data_pad(&bytes[at..at + p], data_len, last, true)?;
-            at += p;
+            // The strict padding check needs the last data byte; one
+            // read covers it and the padding — all we read of the data.
+            let (last, pad_from) = if data_len > 0 {
+                src.read_exact(at + data_len - 1, &mut buf[..p + 1])?;
+                (Some(buf[0]), 1usize)
+            } else {
+                src.read_exact(at, &mut buf[..p])?;
+                (None, 0usize)
+            };
+            check_data_pad(&buf[pad_from..pad_from + p], data_len as u128, last, true)?;
+            at += data_len + p as u64;
         }
         sections += 1;
     }
-    debug_assert_eq!(at, bytes.len());
+    debug_assert_eq!(at, len);
     Ok(sections)
 }

@@ -1,0 +1,373 @@
+//! The [`Archive`] context: named, typed datasets over one scda file.
+//!
+//! Writing appends ordinary sections through the [`crate::api`] writers
+//! — the archive only *records* what it wrote — and [`Archive::finish`]
+//! serializes that record as the catalog block plus the footer index
+//! ([`crate::archive::index`]). Reading loads the catalog in O(1) header
+//! reads and [`Archive::open_dataset`] seeks straight to a named
+//! section, after which the ordinary collective read calls apply under
+//! *any* reading partition: the catalog adds addressing, not a new data
+//! path, so partition independence is inherited from the format layer.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::api::{DataSrc, ScdaFile, SectionHeader};
+use crate::archive::dataset::{parse_catalog, render_catalog, validate_name, DatasetInfo};
+use crate::archive::index::{self, encode_index_payload, CATALOG_USER, INDEX_USER};
+use crate::error::{corrupt, usage, Result, ScdaError};
+use crate::io::IoTuning;
+use crate::par::comm::Communicator;
+use crate::par::partition::Partition;
+
+/// A named-dataset archive over one scda file (all calls collective,
+/// like the `ScdaFile` they wrap).
+pub struct Archive<C: Communicator> {
+    file: ScdaFile<C>,
+    entries: Vec<DatasetInfo>,
+    by_name: BTreeMap<String, usize>,
+    /// Whether the catalog came from the footer index (false: linear
+    /// scan fallback on a file without one).
+    indexed: bool,
+    writing: bool,
+}
+
+impl<C: Communicator> Archive<C> {
+    // ------------------------------------------------------------------
+    // Open / create / finish
+    // ------------------------------------------------------------------
+
+    /// Collectively create an archive for writing (wraps
+    /// [`ScdaFile::create`]).
+    pub fn create(comm: C, path: impl AsRef<Path>, user: &[u8]) -> Result<Self> {
+        let file = ScdaFile::create(comm, path, user)?;
+        Ok(Archive { file, entries: Vec::new(), by_name: BTreeMap::new(), indexed: false, writing: true })
+    }
+
+    /// Collectively open an archive for reading. Files with a footer
+    /// index load their catalog in a constant number of header reads;
+    /// plain scda files fall back to a linear section scan, so any scda
+    /// file is a (possibly anonymous) archive.
+    pub fn open(comm: C, path: impl AsRef<Path>) -> Result<Self> {
+        Self::open_inner(ScdaFile::open(comm, path)?, true)
+    }
+
+    /// [`Archive::open`] with explicit I/O engine knobs (applied before
+    /// the catalog loads, so index reads themselves route through the
+    /// chosen engine) and an `use_index` switch — `false` forces the
+    /// linear scan, the reference path the index is benchmarked against.
+    pub fn open_with(comm: C, path: impl AsRef<Path>, tuning: IoTuning, use_index: bool) -> Result<Self> {
+        let mut file = ScdaFile::open(comm, path)?;
+        file.set_io_tuning(tuning)?;
+        Self::open_inner(file, use_index)
+    }
+
+    fn open_inner(mut file: ScdaFile<C>, use_index: bool) -> Result<Self> {
+        let loaded = if use_index { Self::load_collective(&mut file)? } else { None };
+        let (entries, indexed) = match loaded {
+            Some(datasets) => (datasets, true),
+            None => (index::scan(&mut file)?, false),
+        };
+        let mut by_name = BTreeMap::new();
+        for (i, e) in entries.iter().enumerate() {
+            if by_name.insert(e.name.clone(), i).is_some() {
+                return Err(ScdaError::corrupt(
+                    corrupt::BAD_CATALOG,
+                    format!("catalog lists dataset {:?} twice", e.name),
+                ));
+            }
+        }
+        Ok(Archive { file, entries, by_name, indexed, writing: false })
+    }
+
+    /// Load the catalog with rank 0 doing the footer/catalog reads and
+    /// everyone else receiving the parsed datasets (re-rendered as the
+    /// catalog's own ASCII form) over one broadcast: metadata I/O stays
+    /// O(1) in the rank count — the scalable-metadata shape the index
+    /// exists for. Rank 0's outcome (catalog / no index / error) ships
+    /// in-band so the collective never splits. `None` means no index.
+    fn load_collective(file: &mut ScdaFile<C>) -> Result<Option<Vec<DatasetInfo>>> {
+        if file.comm().size() == 1 {
+            return Ok(index::load(file)?.map(|l| l.datasets));
+        }
+        let wire: Option<Vec<u8>> = if file.comm().rank() == 0 {
+            Some(match index::load(file) {
+                Ok(Some(l)) => {
+                    // Ship the raw on-disk catalog text, not a re-render:
+                    // the file bytes stay the single authority everywhere.
+                    let mut w = vec![1u8];
+                    w.extend_from_slice(&l.payload);
+                    w
+                }
+                Ok(None) => vec![0u8],
+                Err(e) => {
+                    let mut w = vec![2u8];
+                    w.extend_from_slice(&e.code().to_le_bytes());
+                    w.extend_from_slice(e.message().as_bytes());
+                    w
+                }
+            })
+        } else {
+            None
+        };
+        let wire = file.comm().bcast_bytes(0, wire);
+        match wire.first().copied() {
+            Some(0) => Ok(None),
+            Some(1) => Ok(Some(parse_catalog(&wire[1..])?)),
+            Some(2) if wire.len() >= 5 => {
+                let code = i32::from_le_bytes(wire[1..5].try_into().unwrap());
+                let msg = String::from_utf8_lossy(&wire[5..]).into_owned();
+                Err(rebuild_error(code, msg))
+            }
+            _ => Err(ScdaError::corrupt(corrupt::BAD_CATALOG, "malformed catalog broadcast")),
+        }
+    }
+
+    /// Write the catalog block and footer index, then close the file.
+    /// Write-mode archives must end with this call (a bare drop loses
+    /// the catalog, leaving a valid but index-less scda file).
+    pub fn finish(mut self) -> Result<()> {
+        debug_assert!(self.writing, "finish is a write-mode call");
+        let text = render_catalog(&self.entries);
+        let catalog_off = self.file.position();
+        self.file.write_block_from(0, Some(&text), text.len() as u64, Some(CATALOG_USER), false)?;
+        let payload = encode_index_payload(catalog_off);
+        self.file.write_inline_from(0, Some(&payload), Some(INDEX_USER))?;
+        self.file.close()
+    }
+
+    /// Close without writing a catalog: the read-mode close, also usable
+    /// by a writer that decided against an index (the file stays plain
+    /// scda and reopens through the scan fallback).
+    pub fn close(self) -> Result<()> {
+        self.file.close()
+    }
+
+    // ------------------------------------------------------------------
+    // Introspection and escape hatches
+    // ------------------------------------------------------------------
+
+    /// The datasets in file order.
+    pub fn datasets(&self) -> &[DatasetInfo] {
+        &self.entries
+    }
+
+    /// Look up one dataset's catalog entry.
+    pub fn get(&self, name: &str) -> Option<&DatasetInfo> {
+        self.by_name.get(name).map(|&i| &self.entries[i])
+    }
+
+    /// Whether the catalog came from the O(1) footer index rather than a
+    /// linear scan.
+    pub fn is_indexed(&self) -> bool {
+        self.indexed
+    }
+
+    /// The wrapped file, for calls the archive does not mirror (tuning,
+    /// stats, style, or the raw section API after [`Self::open_dataset`]).
+    pub fn file_mut(&mut self) -> &mut ScdaFile<C> {
+        &mut self.file
+    }
+
+    pub fn file(&self) -> &ScdaFile<C> {
+        &self.file
+    }
+
+    // ------------------------------------------------------------------
+    // Writing named datasets
+    // ------------------------------------------------------------------
+
+    fn begin_dataset(&mut self, name: &str) -> Result<u64> {
+        validate_name(name)?;
+        if self.by_name.contains_key(name) {
+            return Err(ScdaError::usage(
+                usage::BAD_DATASET_NAME,
+                format!("archive already has a dataset named {name:?}"),
+            ));
+        }
+        Ok(self.file.position())
+    }
+
+    fn end_dataset(&mut self, info: DatasetInfo) {
+        self.by_name.insert(info.name.clone(), self.entries.len());
+        self.entries.push(info);
+    }
+
+    /// Write a named 32-byte inline dataset (data on `root`).
+    pub fn write_inline_from(&mut self, name: &str, root: usize, data: Option<&[u8]>) -> Result<()> {
+        let offset = self.begin_dataset(name)?;
+        self.file.write_inline_from(root, data, Some(name.as_bytes()))?;
+        self.end_dataset(DatasetInfo {
+            name: name.to_string(),
+            kind: crate::format::section::SectionKind::Inline,
+            offset,
+            byte_len: self.file.position() - offset,
+            elem_count: 0,
+            elem_size: 0,
+            encoded: false,
+        });
+        Ok(())
+    }
+
+    /// Write a named block dataset of `len` bytes (data on `root`).
+    pub fn write_block_from(
+        &mut self,
+        name: &str,
+        root: usize,
+        data: Option<&[u8]>,
+        len: u64,
+        encode: bool,
+    ) -> Result<()> {
+        let offset = self.begin_dataset(name)?;
+        self.file.write_block_from(root, data, len, Some(name.as_bytes()), encode)?;
+        self.end_dataset(DatasetInfo {
+            name: name.to_string(),
+            kind: crate::format::section::SectionKind::Block,
+            offset,
+            byte_len: self.file.position() - offset,
+            elem_count: 0,
+            elem_size: len,
+            encoded: encode,
+        });
+        Ok(())
+    }
+
+    /// Write a named fixed-size array dataset; this rank contributes its
+    /// partition window, exactly like [`ScdaFile::write_array`].
+    pub fn write_array(
+        &mut self,
+        name: &str,
+        data: DataSrc<'_>,
+        part: &Partition,
+        elem_size: u64,
+        encode: bool,
+    ) -> Result<()> {
+        let offset = self.begin_dataset(name)?;
+        self.file.write_array(data, part, elem_size, Some(name.as_bytes()), encode)?;
+        self.end_dataset(DatasetInfo {
+            name: name.to_string(),
+            kind: crate::format::section::SectionKind::Array,
+            offset,
+            byte_len: self.file.position() - offset,
+            elem_count: part.total(),
+            elem_size,
+            encoded: encode,
+        });
+        Ok(())
+    }
+
+    /// Write a named variable-size array dataset; `local_sizes` are this
+    /// rank's element byte sizes, like [`ScdaFile::write_varray`].
+    pub fn write_varray(
+        &mut self,
+        name: &str,
+        data: DataSrc<'_>,
+        part: &Partition,
+        local_sizes: &[u64],
+        encode: bool,
+    ) -> Result<()> {
+        let offset = self.begin_dataset(name)?;
+        self.file.write_varray(data, part, local_sizes, Some(name.as_bytes()), encode)?;
+        self.end_dataset(DatasetInfo {
+            name: name.to_string(),
+            kind: crate::format::section::SectionKind::Varray,
+            offset,
+            byte_len: self.file.position() - offset,
+            elem_count: part.total(),
+            elem_size: 0,
+            encoded: encode,
+        });
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // Reading named datasets
+    // ------------------------------------------------------------------
+
+    /// Seek to a named dataset and read its logical section header —
+    /// O(1) in the number of sections when the catalog is indexed. After
+    /// this, the ordinary data calls on [`Self::file_mut`] apply (or use
+    /// the typed read helpers below). The header's user string must
+    /// equal the name; a catalog that points elsewhere is corrupt (the
+    /// sections are authoritative, the catalog merely addresses them).
+    pub fn open_dataset(&mut self, name: &str) -> Result<SectionHeader> {
+        let entry = self.get(name).ok_or_else(|| {
+            ScdaError::usage(usage::NO_SUCH_DATASET, format!("archive has no dataset named {name:?}"))
+        })?;
+        let offset = entry.offset;
+        self.file.seek_section(offset)?;
+        let header = self.file.read_section_header(true)?;
+        if header.user != name.as_bytes() {
+            return Err(ScdaError::corrupt(
+                corrupt::BAD_CATALOG,
+                format!(
+                    "catalog maps {name:?} to offset {offset}, but the section there is named {:?}",
+                    String::from_utf8_lossy(&header.user)
+                ),
+            ));
+        }
+        Ok(header)
+    }
+
+    /// Read a named inline dataset's 32 bytes on `root`.
+    pub fn read_inline(&mut self, name: &str, root: usize) -> Result<Option<[u8; 32]>> {
+        let h = self.open_dataset(name)?;
+        expect_kind(name, h.kind, crate::format::section::SectionKind::Inline)?;
+        self.file.read_inline_data(root, true)
+    }
+
+    /// Read a named block dataset's bytes on `root` (decoded if it was
+    /// written encoded).
+    pub fn read_block(&mut self, name: &str, root: usize) -> Result<Option<Vec<u8>>> {
+        let h = self.open_dataset(name)?;
+        expect_kind(name, h.kind, crate::format::section::SectionKind::Block)?;
+        self.file.read_block_data(root, true)
+    }
+
+    /// Read this rank's window of a named fixed-size array dataset under
+    /// any reading partition with the right total (partition-independent
+    /// random access: the writer's rank count is invisible).
+    pub fn read_array(&mut self, name: &str, part: &Partition, elem_size: u64) -> Result<Vec<u8>> {
+        let h = self.open_dataset(name)?;
+        expect_kind(name, h.kind, crate::format::section::SectionKind::Array)?;
+        Ok(self.file.read_array_data(part, elem_size, true)?.unwrap_or_default())
+    }
+
+    /// Read this rank's element sizes and payload window of a named
+    /// variable-size array dataset under any reading partition.
+    pub fn read_varray(&mut self, name: &str, part: &Partition) -> Result<(Vec<u64>, Vec<u8>)> {
+        let h = self.open_dataset(name)?;
+        expect_kind(name, h.kind, crate::format::section::SectionKind::Varray)?;
+        let sizes = self.file.read_varray_sizes(part)?;
+        let data = self.file.read_varray_data(part, &sizes, true)?.unwrap_or_default();
+        Ok((sizes, data))
+    }
+}
+
+/// Rebuild a broadcast error on the receiving ranks (code ranges are the
+/// §A.6 groups; the message is carried verbatim). Every group
+/// round-trips its detail code, so all ranks report the same stable
+/// `code()` for one collective failure — io errors reconstruct their
+/// errno from the detail.
+fn rebuild_error(code: i32, msg: String) -> ScdaError {
+    match code {
+        1000..=1999 => ScdaError::corrupt(code - 1000, msg),
+        2000..=2999 => ScdaError::io(std::io::Error::from_raw_os_error(code - 2000), msg),
+        3000..=3999 => ScdaError::usage(code - 3000, msg),
+        _ => ScdaError::io(std::io::Error::other(msg.clone()), msg),
+    }
+}
+
+fn expect_kind(
+    name: &str,
+    got: crate::format::section::SectionKind,
+    want: crate::format::section::SectionKind,
+) -> Result<()> {
+    if got != want {
+        return Err(ScdaError::usage(
+            usage::WRONG_SECTION,
+            format!("dataset {name:?} is a {got} section, this call reads {want}"),
+        ));
+    }
+    Ok(())
+}

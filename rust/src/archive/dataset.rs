@@ -1,0 +1,267 @@
+//! Named, typed datasets: the descriptor each catalog entry carries and
+//! the ASCII serialization of the catalog itself.
+//!
+//! A *dataset* is one logical scda section (a compression-convention pair
+//! counts as one dataset) addressed by a name instead of a position. The
+//! name is exactly the section's user string, so the catalog never says
+//! anything the sections don't already say — it only says it in one
+//! place. The catalog text is plain ASCII, line-oriented like the
+//! checkpoint manifest, so a catalog-bearing file is ASCII wherever its
+//! data is ASCII and any scda reader can inspect the catalog with
+//! `scda cat`.
+
+use crate::error::{corrupt, usage, Result, ScdaError};
+use crate::format::limits::USER_STRING_MAX;
+use crate::format::section::SectionKind;
+
+/// The logical section type of a dataset (the letter a reader sees after
+/// convention resolution).
+pub type DatasetKind = SectionKind;
+
+/// One catalog entry: everything needed to seek to the dataset and read
+/// it without scanning the sections before it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DatasetInfo {
+    /// The dataset name == the section's user string (validated by
+    /// [`validate_name`]).
+    pub name: String,
+    /// Logical section kind (`A` for an encoded fixed-size array even
+    /// though its raw carrier is a `V` pair).
+    pub kind: DatasetKind,
+    /// Absolute offset of the first raw section byte.
+    pub offset: u64,
+    /// Total file bytes of the logical section (both raw sections of a
+    /// convention pair).
+    pub byte_len: u64,
+    /// Element count (`N`); 0 for inline/block datasets.
+    pub elem_count: u64,
+    /// Bytes per element for arrays (uncompressed when encoded), total
+    /// block bytes for blocks; 0 for inline/varray.
+    pub elem_size: u64,
+    /// Whether the dataset was written with the §3 compression
+    /// convention.
+    pub encoded: bool,
+}
+
+/// Names the archive layer claims for its own sections; user datasets
+/// cannot use them.
+pub const RESERVED_NAMES: [&str; 2] = ["scda:catalog", "scda:index"];
+
+/// Validate a dataset name: 1..=58 bytes (the user-string limit) of
+/// printable non-space ASCII, not one of the reserved archive names.
+/// Spaces are excluded because the catalog is token-oriented ASCII text.
+pub fn validate_name(name: &str) -> Result<()> {
+    if name.is_empty() || name.len() > USER_STRING_MAX {
+        return Err(ScdaError::usage(
+            usage::BAD_DATASET_NAME,
+            format!("dataset name must be 1..={USER_STRING_MAX} bytes, got {}", name.len()),
+        ));
+    }
+    if !name.bytes().all(|b| (0x21..=0x7e).contains(&b)) {
+        return Err(ScdaError::usage(
+            usage::BAD_DATASET_NAME,
+            format!("dataset name {name:?} contains whitespace or non-printable-ASCII bytes"),
+        ));
+    }
+    if RESERVED_NAMES.contains(&name) {
+        return Err(ScdaError::usage(
+            usage::BAD_DATASET_NAME,
+            format!("dataset name {name:?} is reserved for the archive layer"),
+        ));
+    }
+    Ok(())
+}
+
+fn kind_letter(kind: DatasetKind) -> char {
+    kind.letter() as char
+}
+
+fn kind_from_str(s: &str) -> Option<DatasetKind> {
+    let [b] = s.as_bytes() else { return None };
+    SectionKind::from_letter(*b)
+}
+
+/// Render the catalog text: a version line, an entry count (integrity
+/// check), then one `dataset` line per entry in file order. Every field
+/// is a pure function of collective inputs, so the text — and therefore
+/// the catalog section's bytes — is identical on every rank and at every
+/// writer rank count.
+pub fn render_catalog(entries: &[DatasetInfo]) -> Vec<u8> {
+    let mut s = String::new();
+    s.push_str("scda-catalog 1\n");
+    s.push_str(&format!("count {}\n", entries.len()));
+    for e in entries {
+        s.push_str(&format!(
+            "dataset name={} kind={} off={} len={} n={} e={} z={}\n",
+            e.name,
+            kind_letter(e.kind),
+            e.offset,
+            e.byte_len,
+            e.elem_count,
+            e.elem_size,
+            e.encoded as u8
+        ));
+    }
+    s.into_bytes()
+}
+
+fn bad(msg: impl Into<String>) -> ScdaError {
+    ScdaError::corrupt(corrupt::BAD_CATALOG, msg)
+}
+
+/// Parse a catalog rendered by [`render_catalog`]. Any malformed line,
+/// missing field, or count mismatch is a [`corrupt::BAD_CATALOG`] error
+/// (the catalog is authoritative once the footer index names it —
+/// disagreement means the file is damaged, never a panic).
+pub fn parse_catalog(bytes: &[u8]) -> Result<Vec<DatasetInfo>> {
+    let text = std::str::from_utf8(bytes).map_err(|_| bad("catalog is not UTF-8"))?;
+    let mut lines = text.lines();
+    let head = lines.next().unwrap_or("");
+    if head != "scda-catalog 1" {
+        return Err(bad(format!("bad catalog head {head:?}")));
+    }
+    let count_line = lines.next().unwrap_or("");
+    let declared: usize = count_line
+        .strip_prefix("count ")
+        .and_then(|v| v.parse().ok())
+        .ok_or_else(|| bad(format!("bad catalog count line {count_line:?}")))?;
+    let mut entries = Vec::with_capacity(declared.min(1 << 16));
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        let body = line
+            .strip_prefix("dataset ")
+            .ok_or_else(|| bad(format!("unexpected catalog line {line:?}")))?;
+        let mut name = None;
+        let mut kind = None;
+        let mut off = None;
+        let mut len = None;
+        let mut n = None;
+        let mut e = None;
+        let mut z = None;
+        for tok in body.split_whitespace() {
+            let (k, val) = tok.split_once('=').ok_or_else(|| bad(format!("bad catalog token {tok:?}")))?;
+            let parse_u64 = |what: &str| -> Result<u64> {
+                val.parse().map_err(|_| bad(format!("bad {what} value {val:?} in catalog")))
+            };
+            match k {
+                "name" => name = Some(val.to_string()),
+                "kind" => {
+                    kind = Some(kind_from_str(val).ok_or_else(|| bad(format!("bad dataset kind {val:?}")))?)
+                }
+                "off" => off = Some(parse_u64("off")?),
+                "len" => len = Some(parse_u64("len")?),
+                "n" => n = Some(parse_u64("n")?),
+                "e" => e = Some(parse_u64("e")?),
+                "z" => {
+                    z = Some(match val {
+                        "0" => false,
+                        "1" => true,
+                        _ => return Err(bad(format!("bad z value {val:?} in catalog"))),
+                    })
+                }
+                _ => {} // forward compatibility: unknown keys are ignored
+            }
+        }
+        let (Some(name), Some(kind), Some(off), Some(len), Some(n), Some(e), Some(z)) =
+            (name, kind, off, len, n, e, z)
+        else {
+            return Err(bad(format!("catalog entry missing fields: {line:?}")));
+        };
+        validate_name(&name).map_err(|err| bad(format!("catalog names invalid dataset: {err}")))?;
+        entries.push(DatasetInfo {
+            name,
+            kind,
+            offset: off,
+            byte_len: len,
+            elem_count: n,
+            elem_size: e,
+            encoded: z,
+        });
+    }
+    if entries.len() != declared {
+        return Err(bad(format!("catalog declares {declared} datasets but lists {}", entries.len())));
+    }
+    Ok(entries)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<DatasetInfo> {
+        vec![
+            DatasetInfo {
+                name: "rho:f64".into(),
+                kind: SectionKind::Array,
+                offset: 128,
+                byte_len: 4096,
+                elem_count: 100,
+                elem_size: 40,
+                encoded: true,
+            },
+            DatasetInfo {
+                name: "ckpt/7/hp".into(),
+                kind: SectionKind::Varray,
+                offset: 4224,
+                byte_len: 999,
+                elem_count: 3,
+                elem_size: 0,
+                encoded: false,
+            },
+        ]
+    }
+
+    #[test]
+    fn catalog_roundtrips() {
+        let entries = sample();
+        let text = render_catalog(&entries);
+        assert!(text.is_ascii());
+        assert_eq!(parse_catalog(&text).unwrap(), entries);
+        assert_eq!(parse_catalog(&render_catalog(&[])).unwrap(), Vec::new());
+    }
+
+    #[test]
+    fn catalog_rejects_garbage_with_the_catalog_code() {
+        let entries = sample();
+        let text = render_catalog(&entries);
+        for bad_bytes in [
+            b"not a catalog".to_vec(),
+            b"scda-catalog 1\ncount x".to_vec(),
+            b"scda-catalog 1\ncount 1\n".to_vec(),
+            b"scda-catalog 1\ncount 0\ndataset name=a kind=A off=1 len=1 n=1 e=1 z=1\n".to_vec(),
+            b"scda-catalog 1\ncount 1\ndataset name=a kind=Q off=1 len=1 n=1 e=1 z=1\n".to_vec(),
+            b"scda-catalog 1\ncount 1\ndataset kind=A off=1 len=1 n=1 e=1 z=1\n".to_vec(),
+            vec![0xff, 0xfe],
+        ] {
+            let err = parse_catalog(&bad_bytes).unwrap_err();
+            assert_eq!(err.code(), 1000 + crate::error::corrupt::BAD_CATALOG, "{bad_bytes:?}");
+        }
+        // Flipping any single byte of a real catalog must parse-fail or
+        // parse to something different — never panic.
+        for pos in 0..text.len() {
+            let mut t = text.clone();
+            t[pos] ^= 0x20;
+            match parse_catalog(&t) {
+                Ok(parsed) => assert_ne!(parsed, entries, "flip at {pos} invisible"),
+                Err(e) => assert_eq!(e.kind(), crate::ScdaErrorKind::CorruptFile),
+            }
+        }
+    }
+
+    #[test]
+    fn name_validation() {
+        validate_name("rho:f64x5").unwrap();
+        validate_name("ckpt/12/hp-coeffs_v2.1").unwrap();
+        assert!(validate_name("").is_err());
+        assert!(validate_name(&"x".repeat(59)).is_err());
+        assert!(validate_name("has space").is_err());
+        assert!(validate_name("tab\there").is_err());
+        assert!(validate_name("ümlaut").is_err());
+        assert!(validate_name("scda:catalog").is_err());
+        assert!(validate_name("scda:index").is_err());
+        let err = validate_name("nope nope").unwrap_err();
+        assert_eq!(err.code(), 3000 + crate::error::usage::BAD_DATASET_NAME);
+    }
+}

@@ -1,0 +1,193 @@
+//! The persisted footer index: O(1) location of the catalog section.
+//!
+//! A catalog-bearing archive ends with two ordinary scda sections,
+//! written after all user datasets:
+//!
+//! 1. a `B` section with user string `scda:catalog` whose payload is the
+//!    ASCII catalog text ([`crate::archive::dataset`]), and
+//! 2. an `I` section with user string `scda:index` whose 32 data bytes
+//!    are the catalog section's absolute offset, printed as
+//!    right-aligned ASCII decimal with a trailing newline.
+//!
+//! An inline section is exactly 96 bytes and is never padded (§2.3), so
+//! the index is always the *last 96 bytes of the file* — one positional
+//! read finds it, independent of how many sections precede it. That is
+//! the whole trick: the file stays pure scda (both trailer sections are
+//! ordinary sections that `query::verify_bytes` validates like any
+//! other), yet `Archive::open` needs a constant number of header reads
+//! where `toc()` pays a full linear scan.
+//!
+//! # Trust model
+//!
+//! The index is *advisory*, the catalog section is *authoritative*: if
+//! the last 96 bytes do not parse as an `scda:index` inline section the
+//! file simply has no index and readers fall back to the linear scan
+//! ([`scan`]) — plain scda files remain first-class. But once the footer
+//! declares itself, everything it points at must hold: a payload that is
+//! not a decimal offset, an offset that does not land on a well-formed
+//! `scda:catalog` block, or catalog text that fails to parse is a
+//! [`corrupt::BAD_CATALOG`] error, never a silent fallback (a damaged
+//! archive must be reported, not reinterpreted).
+
+use crate::api::ScdaFile;
+use crate::archive::dataset::{parse_catalog, DatasetInfo};
+use crate::error::{corrupt, Result, ScdaError};
+use crate::format::limits::{
+    FILE_HEADER_BYTES, INLINE_DATA_BYTES, INLINE_SECTION_BYTES, SECTION_HEADER_BYTES,
+};
+use crate::format::number::count_to_usize;
+use crate::format::section::{parse_section_prefix, parse_type_row, SectionKind, SECTION_PREFIX_MAX};
+use crate::par::comm::Communicator;
+
+/// User string of the catalog block section.
+pub const CATALOG_USER: &[u8] = b"scda:catalog";
+/// User string of the footer index inline section.
+pub const INDEX_USER: &[u8] = b"scda:index";
+
+/// Encode the 32-byte index payload: the catalog offset as right-aligned
+/// ASCII decimal plus a trailing newline (human-readable, pure ASCII).
+pub fn encode_index_payload(catalog_off: u64) -> [u8; 32] {
+    let s = format!("{catalog_off:>31}\n");
+    debug_assert_eq!(s.len(), INLINE_DATA_BYTES);
+    let mut out = [0u8; 32];
+    out.copy_from_slice(s.as_bytes());
+    out
+}
+
+/// Parse the payload written by [`encode_index_payload`].
+pub fn parse_index_payload(payload: &[u8]) -> Result<u64> {
+    let text = std::str::from_utf8(payload)
+        .map_err(|_| ScdaError::corrupt(corrupt::BAD_CATALOG, "index payload is not ASCII"))?;
+    text.trim().parse().map_err(|_| {
+        ScdaError::corrupt(corrupt::BAD_CATALOG, format!("index payload {text:?} is not an offset"))
+    })
+}
+
+/// Everything the footer index locates, as loaded by [`load`].
+#[derive(Debug, Clone)]
+pub struct LoadedCatalog {
+    pub datasets: Vec<DatasetInfo>,
+    /// Absolute offset of the catalog block section.
+    pub catalog_off: u64,
+    /// Byte length of the catalog text (the block's `E`).
+    pub catalog_bytes: u64,
+    /// The raw catalog text `datasets` was parsed from — what a
+    /// collective open broadcasts, so the on-disk bytes stay the single
+    /// authority on every rank.
+    pub payload: Vec<u8>,
+}
+
+/// Try to load the catalog through the footer index: `Ok(None)` when the
+/// file has no index (fall back to [`scan`]), `Err` when it has one that
+/// is inconsistent (see the module's trust model), `Ok(Some(..))` after
+/// a constant number of reads regardless of section count.
+pub fn load<C: Communicator>(file: &mut ScdaFile<C>) -> Result<Option<LoadedCatalog>> {
+    let flen = file.file_len()?;
+    // Smallest possible catalog-bearing file: header + catalog + index.
+    if flen < (FILE_HEADER_BYTES + INLINE_SECTION_BYTES) as u64 {
+        return Ok(None);
+    }
+    let tail_off = flen - INLINE_SECTION_BYTES as u64;
+    let tail = file.engine_read(tail_off, INLINE_SECTION_BYTES)?;
+    let Ok((kind, user)) = parse_type_row(&tail[..SECTION_HEADER_BYTES]) else {
+        return Ok(None);
+    };
+    if kind != SectionKind::Inline || user != INDEX_USER {
+        return Ok(None);
+    }
+    // From here on the footer is authoritative: inconsistency is
+    // corruption, not absence.
+    let catalog_off = parse_index_payload(&tail[SECTION_HEADER_BYTES..])?;
+    if catalog_off < FILE_HEADER_BYTES as u64 || catalog_off >= tail_off {
+        return Err(ScdaError::corrupt(
+            corrupt::BAD_CATALOG,
+            format!("index points at {catalog_off}, outside the section region"),
+        ));
+    }
+    let take = (tail_off - catalog_off).min(SECTION_PREFIX_MAX as u64) as usize;
+    // A parse failure here is the *index's* fault (it named this offset),
+    // so it reports as catalog corruption, not as a bad section — the
+    // sections themselves may be fine.
+    let (meta, prefix_len) = parse_section_prefix(&file.engine_read(catalog_off, take)?).map_err(|e| {
+        ScdaError::corrupt(
+            corrupt::BAD_CATALOG,
+            format!("index points at {catalog_off}, which is not a section header: {e}"),
+        )
+    })?;
+    if meta.kind != SectionKind::Block || meta.user != CATALOG_USER {
+        return Err(ScdaError::corrupt(
+            corrupt::BAD_CATALOG,
+            format!("index points at a {} {:?} section, expected the catalog block", meta.kind,
+                String::from_utf8_lossy(&meta.user)),
+        ));
+    }
+    let catalog_bytes = meta.elem_size;
+    // Compare in u128: a corrupt E count near 2^64 must fail *here*,
+    // not wrap around and pass into an impossible read/allocation.
+    if catalog_off as u128 + meta.total_len(None) != tail_off as u128 {
+        return Err(ScdaError::corrupt(
+            corrupt::BAD_CATALOG,
+            "catalog section does not reach the footer index",
+        ));
+    }
+    let payload =
+        file.engine_read(catalog_off + prefix_len as u64, count_to_usize(catalog_bytes, "catalog")?)?;
+    let datasets = parse_catalog(&payload)?;
+    Ok(Some(LoadedCatalog { datasets, catalog_off, catalog_bytes: catalog_bytes as u64, payload }))
+}
+
+/// The linear fallback for files without a footer index: walk every
+/// section header (`toc`) and name each logical section by its user
+/// string. Sections whose user string is not a valid dataset name, the
+/// archive's own trailer sections, and repeated names (first wins) are
+/// skipped — the result is best-effort discovery, not an error.
+pub fn scan<C: Communicator>(file: &mut ScdaFile<C>) -> Result<Vec<DatasetInfo>> {
+    let toc = file.toc_scan(true)?;
+    let mut out: Vec<DatasetInfo> = Vec::with_capacity(toc.len());
+    let mut seen = std::collections::BTreeSet::new();
+    for e in &toc {
+        let Ok(name) = std::str::from_utf8(&e.header.user) else { continue };
+        // Rejects anonymous/unnameable user strings and the archive's
+        // own trailer names (they are reserved).
+        if super::dataset::validate_name(name).is_err() {
+            continue;
+        }
+        if !seen.insert(name.to_string()) {
+            continue;
+        }
+        out.push(DatasetInfo {
+            name: name.to_string(),
+            kind: e.header.kind,
+            offset: e.offset,
+            byte_len: e.byte_len,
+            elem_count: e.header.elem_count,
+            elem_size: e.header.elem_size,
+            encoded: e.header.decoded,
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_payload_roundtrips() {
+        for off in [0u64, 128, 12345, u64::MAX] {
+            let p = encode_index_payload(off);
+            assert_eq!(p.len(), 32);
+            assert!(p.is_ascii());
+            assert_eq!(p[31], b'\n');
+            assert_eq!(parse_index_payload(&p).unwrap(), off);
+        }
+    }
+
+    #[test]
+    fn index_payload_rejects_garbage() {
+        for bad in [&b"not a number at all, not even  "[..], &[0xffu8; 32][..], b""] {
+            let err = parse_index_payload(bad).unwrap_err();
+            assert_eq!(err.code(), 1000 + corrupt::BAD_CATALOG);
+        }
+    }
+}

@@ -1,0 +1,47 @@
+//! The archive catalog layer: named, typed datasets over plain scda.
+//!
+//! The paper places scda "one layer below … the definition of variables
+//! … and self-describing headers, which may all be specified on top of
+//! scda". This module is that layer-on-top for this crate: it adds
+//! *addressing* — a dataset name per logical section, a catalog that
+//! maps names to `{offset, byte_len, kind, elem_count, elem_size}`, and
+//! a footer index that finds the catalog in O(1) — while changing
+//! nothing about the format underneath:
+//!
+//! * **Pure scda.** The catalog is the payload of an ordinary `B`
+//!   section (`scda:catalog`, ASCII text), the index an ordinary `I`
+//!   section (`scda:index`, ASCII decimal). A catalog-bearing file
+//!   passes `query::verify_bytes` unchanged and any scda reader — the
+//!   Python implementation, `scda cat` — sees two more sections.
+//! * **Serial-equivalent.** Every catalog field is a pure function of
+//!   collective inputs (names, section offsets, counts), so archive
+//!   bytes are identical at any writer rank count, like every other
+//!   section.
+//! * **O(1) random access.** An inline section is exactly 96 unpadded
+//!   bytes, so the index is always the last 96 bytes of the file:
+//!   [`Archive::open`] reads footer → catalog and
+//!   [`Archive::open_dataset`] seeks straight to the named section — a
+//!   constant number of header reads where `toc()` scans linearly
+//!   (`BENCH_archive.json` tracks the gap).
+//! * **Partition-independent.** After `open_dataset`, the ordinary
+//!   collective read calls apply under any reading partition: the
+//!   catalog adds addressing, not a data path, so readers on any rank
+//!   count agree on any partition of the named dataset's elements.
+//!
+//! Trust model ([`index`]): the footer index is advisory — absent or
+//! unrecognizable, readers fall back to a linear scan, so any scda file
+//! is an (anonymous) archive — but once present, the catalog section it
+//! names is authoritative, and disagreement between catalog and sections
+//! is a [`crate::error::corrupt::BAD_CATALOG`] error.
+//!
+//! [`restart`] builds versioned checkpoints on top: datasets named
+//! `ckpt/<n>/<field>` restore by name on any rank count, several steps
+//! per archive.
+
+pub mod catalog;
+pub mod dataset;
+pub mod index;
+pub mod restart;
+
+pub use catalog::Archive;
+pub use dataset::{DatasetInfo, DatasetKind};

@@ -1,0 +1,350 @@
+//! Checkpoint/restart on the archive layer: every checkpoint artifact is
+//! a *named dataset*, versioned by step — `ckpt/<n>.info` (32-byte step
+//! record), `ckpt/<n>.manifest` (the text manifest), and one
+//! `ckpt/<n>/<field>` dataset per field. Restart therefore addresses
+//! fields *by name* through the catalog instead of replaying the section
+//! stream: any field of any step, restored under any reading partition
+//! (and hence any rank count), in O(1) header reads per field.
+//!
+//! One archive can hold several steps (written in one create session —
+//! scda files are write-once, §A.3), which is what the versioned names
+//! buy: `list_steps` enumerates them, `read_step(None)` restores the
+//! latest. Files written by the pre-archive checkpoint writer (sections
+//! `scda:ckpt` / `scda:manifest` / bare field names) restore through the
+//! same calls: the scan fallback names their sections, and field lookup
+//! falls back from `ckpt/<n>/<field>` to the bare field name.
+
+use crate::api::DataSrc;
+use crate::archive::Archive;
+use crate::coordinator::checkpoint::{
+    invert_elements, parse_manifest, precondition_elements, render_manifest, CheckpointInfo, Field,
+    FieldInfo, FieldPayload,
+};
+use crate::coordinator::metrics::Metrics;
+use crate::error::{corrupt, Result, ScdaError};
+use crate::par::comm::Communicator;
+use crate::par::partition::Partition;
+use crate::runtime::service::Transform;
+
+/// Prefix shared by all checkpoint dataset names.
+pub const STEP_PREFIX: &str = "ckpt/";
+
+/// Name of a step's 32-byte info record.
+pub fn info_name(step: u64) -> String {
+    format!("{STEP_PREFIX}{step}.info")
+}
+
+/// Name of a step's manifest dataset. The '.' separator keeps meta
+/// datasets out of the `ckpt/<n>/<field>` namespace, so no field name
+/// can collide with them.
+pub fn manifest_name(step: u64) -> String {
+    format!("{STEP_PREFIX}{step}.manifest")
+}
+
+/// Name of one field's dataset within a step.
+pub fn field_name(step: u64, field: &str) -> String {
+    format!("{STEP_PREFIX}{step}/{field}")
+}
+
+/// Collectively write one checkpoint step into an open write-mode
+/// archive. All ranks pass the same `app`, `step`, field specs and
+/// `part`; payloads are each rank's partition window. May be called
+/// repeatedly with distinct steps before [`Archive::finish`].
+///
+/// Field names live inside the section user string together with the
+/// `ckpt/<n>/` prefix, so their budget is `58 - len("ckpt/<n>/")` bytes
+/// (51 for single-digit steps) — tighter than the bare 58 of the
+/// pre-archive layout. Every dataset name of the step is validated *up
+/// front*, before any section is written, so an over-long or invalid
+/// field name fails cleanly instead of leaving a partial step behind.
+pub fn write_step<C: Communicator>(
+    ar: &mut Archive<C>,
+    app: &str,
+    step: u64,
+    part: &Partition,
+    fields: &[Field],
+    pre: &dyn Transform,
+    metrics: &Metrics,
+) -> Result<()> {
+    let mut names = std::collections::BTreeSet::new();
+    for f in fields {
+        let name = field_name(step, &f.name);
+        crate::archive::dataset::validate_name(&name)?;
+        // Duplicates — within this step's field list or against datasets
+        // already in the archive (a rerun of the same step) — must also
+        // fail before anything is written: begin_dataset would reject
+        // them mid-step otherwise, stranding a manifest whose fields
+        // have no backing datasets.
+        if !names.insert(name.clone()) || ar.get(&name).is_some() {
+            return Err(ScdaError::usage(
+                crate::error::usage::BAD_DATASET_NAME,
+                format!("checkpoint step {step} would write dataset {name:?} twice"),
+            ));
+        }
+    }
+    if ar.get(&info_name(step)).is_some() || ar.get(&manifest_name(step)).is_some() {
+        return Err(ScdaError::usage(
+            crate::error::usage::BAD_DATASET_NAME,
+            format!("archive already holds checkpoint step {step}"),
+        ));
+    }
+    let info = CheckpointInfo {
+        app: app.to_string(),
+        step,
+        fields: fields
+            .iter()
+            .map(|f| FieldInfo {
+                name: f.name.clone(),
+                fixed_elem: match &f.payload {
+                    FieldPayload::Fixed { elem_size, .. } => Some(*elem_size),
+                    FieldPayload::Var { .. } => None,
+                },
+                elem_count: part.total(),
+                encode: f.encode,
+                precondition: f.precondition,
+            })
+            .collect(),
+    };
+    // 32-byte human-readable step record.
+    let mut inline = format!("step {step:>20} ok");
+    inline.truncate(31);
+    let mut inline = inline.into_bytes();
+    inline.resize(31, b' ');
+    inline.push(b'\n');
+    ar.write_inline_from(&info_name(step), 0, Some(&inline))?;
+    let manifest = render_manifest(&info);
+    ar.write_block_from(&manifest_name(step), 0, Some(&manifest), manifest.len() as u64, false)?;
+    for f in fields {
+        let name = field_name(step, &f.name);
+        match &f.payload {
+            FieldPayload::Fixed { elem_size, data } => {
+                Metrics::add(&metrics.bytes_in, data.len() as u64);
+                let np = data.len() as u64 / (*elem_size).max(1);
+                let owned;
+                let src = if f.precondition {
+                    owned = precondition_elements(
+                        pre,
+                        data,
+                        std::iter::repeat(*elem_size).take(np as usize),
+                        metrics,
+                    )?;
+                    DataSrc::Contiguous(&owned)
+                } else {
+                    DataSrc::Contiguous(data)
+                };
+                Metrics::timed(&metrics.ns_write, || ar.write_array(&name, src, part, *elem_size, f.encode))?;
+            }
+            FieldPayload::Var { sizes, data } => {
+                Metrics::add(&metrics.bytes_in, data.len() as u64);
+                let owned;
+                let src = if f.precondition {
+                    owned = precondition_elements(pre, data, sizes.iter().copied(), metrics)?;
+                    DataSrc::Contiguous(&owned)
+                } else {
+                    DataSrc::Contiguous(data)
+                };
+                Metrics::timed(&metrics.ns_write, || ar.write_varray(&name, src, part, sizes, f.encode))?;
+            }
+        }
+        Metrics::add(&metrics.sections_written, 1);
+        Metrics::add(&metrics.elements_written, part.count(ar.file().comm().rank()));
+    }
+    Ok(())
+}
+
+/// The steps recorded in an archive, ascending.
+pub fn list_steps<C: Communicator>(ar: &Archive<C>) -> Vec<u64> {
+    let mut steps: Vec<u64> = ar
+        .datasets()
+        .iter()
+        .filter_map(|d| {
+            d.name
+                .strip_prefix(STEP_PREFIX)
+                .and_then(|rest| rest.strip_suffix(".manifest"))
+                .and_then(|mid| mid.parse().ok())
+        })
+        .collect();
+    steps.sort_unstable();
+    steps.dedup();
+    steps
+}
+
+/// Read one step's manifest by name — or, with `step = None`, the
+/// latest step's (falling back to a legacy `scda:manifest` section for
+/// pre-archive checkpoint files). Errors with a corrupt-file code when
+/// the file holds no checkpoint at all.
+pub fn read_manifest<C: Communicator>(ar: &mut Archive<C>, step: Option<u64>) -> Result<CheckpointInfo> {
+    let name = match step {
+        Some(s) => {
+            let name = manifest_name(s);
+            // A missing *requested* step in an intact archive is a
+            // caller error, not file damage.
+            if ar.get(&name).is_none() {
+                return Err(ScdaError::usage(
+                    crate::error::usage::NO_SUCH_DATASET,
+                    format!("archive has no checkpoint step {s}"),
+                ));
+            }
+            name
+        }
+        None => match list_steps(ar).last() {
+            Some(&s) => manifest_name(s),
+            None if ar.get("scda:manifest").is_some() => "scda:manifest".to_string(),
+            None => {
+                return Err(ScdaError::corrupt(
+                    corrupt::BAD_CONVENTION,
+                    "not an scda checkpoint (no ckpt/<n>.manifest dataset and no scda:manifest section)",
+                ))
+            }
+        },
+    };
+    let bytes = ar.read_block(&name, 0)?;
+    let bytes = ar.file().comm().bcast_bytes(0, bytes);
+    parse_manifest(&bytes)
+}
+
+/// Restore one manifest field by name under any reading partition,
+/// inverting the preconditioner when the manifest says so.
+pub fn read_field<C: Communicator>(
+    ar: &mut Archive<C>,
+    step: u64,
+    fi: &FieldInfo,
+    part: &Partition,
+    pre: &dyn Transform,
+) -> Result<Field> {
+    part.check_total(fi.elem_count)?;
+    let versioned = field_name(step, &fi.name);
+    let name = if ar.get(&versioned).is_some() {
+        versioned
+    } else if ar.get(&manifest_name(step)).is_none() && ar.get(&fi.name).is_some() {
+        // Legacy layout only: the step has no versioned manifest dataset
+        // (its manifest was the pre-archive scda:manifest section), so
+        // fields live under bare names. A *versioned* step missing a
+        // field dataset must NOT resolve through an unrelated bare-named
+        // dataset — that is damage, reported below.
+        fi.name.clone()
+    } else {
+        return Err(ScdaError::corrupt(
+            corrupt::BAD_CONVENTION,
+            format!("manifest names field {:?} but the archive has no such dataset", fi.name),
+        ));
+    };
+    let payload = match fi.fixed_elem {
+        Some(e) => {
+            let data = ar.read_array(&name, part, e)?;
+            let data = if fi.precondition {
+                let np = part.count(ar.file().comm().rank()) as usize;
+                invert_elements(pre, &data, std::iter::repeat(e).take(np))?
+            } else {
+                data
+            };
+            FieldPayload::Fixed { elem_size: e, data }
+        }
+        None => {
+            let (sizes, data) = ar.read_varray(&name, part)?;
+            let data = if fi.precondition {
+                invert_elements(pre, &data, sizes.iter().copied())?
+            } else {
+                data
+            };
+            FieldPayload::Var { sizes, data }
+        }
+    };
+    Ok(Field { name: fi.name.clone(), encode: fi.encode, precondition: fi.precondition, payload })
+}
+
+/// Restore a whole step (the latest with `step = None`): manifest first,
+/// then every field by name, in manifest order.
+pub fn read_step<C: Communicator>(
+    ar: &mut Archive<C>,
+    step: Option<u64>,
+    part: &Partition,
+    pre: &dyn Transform,
+) -> Result<(CheckpointInfo, Vec<Field>)> {
+    let info = read_manifest(ar, step)?;
+    let fields = read_fields(ar, &info, part, pre)?;
+    Ok((info, fields))
+}
+
+/// Restore every field of an already-read manifest. Versioned steps
+/// restore by name through the catalog; legacy pre-archive checkpoints
+/// (no `ckpt/<n>.manifest` dataset) replay the section stream
+/// sequentially like the original reader did — which also preserves the
+/// old reader's tolerance for duplicate or non-conforming field names
+/// that the catalog scan cannot represent.
+pub fn read_fields<C: Communicator>(
+    ar: &mut Archive<C>,
+    info: &CheckpointInfo,
+    part: &Partition,
+    pre: &dyn Transform,
+) -> Result<Vec<Field>> {
+    if ar.get(&manifest_name(info.step)).is_none() {
+        return read_legacy_fields(ar, info, part, pre);
+    }
+    let mut fields = Vec::with_capacity(info.fields.len());
+    for fi in &info.fields {
+        fields.push(read_field(ar, info.step, fi, part, pre)?);
+    }
+    Ok(fields)
+}
+
+/// The pre-archive sequential restore: seek to the section after the
+/// legacy `scda:manifest` block and read each field's own section in
+/// manifest order, verifying user strings as the original reader did.
+fn read_legacy_fields<C: Communicator>(
+    ar: &mut Archive<C>,
+    info: &CheckpointInfo,
+    part: &Partition,
+    pre: &dyn Transform,
+) -> Result<Vec<Field>> {
+    let manifest = ar.get("scda:manifest").ok_or_else(|| {
+        ScdaError::corrupt(corrupt::BAD_CONVENTION, "legacy checkpoint without scda:manifest section")
+    })?;
+    let start = manifest.offset + manifest.byte_len;
+    let file = ar.file_mut();
+    file.seek_section(start)?;
+    let mut fields = Vec::with_capacity(info.fields.len());
+    for fi in &info.fields {
+        let h = file.read_section_header(true)?;
+        if h.user != fi.name.as_bytes() {
+            return Err(ScdaError::corrupt(
+                corrupt::BAD_CONVENTION,
+                format!(
+                    "manifest names field {:?} but section is {:?}",
+                    fi.name,
+                    String::from_utf8_lossy(&h.user)
+                ),
+            ));
+        }
+        part.check_total(h.elem_count)?;
+        let payload = match fi.fixed_elem {
+            Some(e) => {
+                let data = file.read_array_data(part, e, true)?.unwrap_or_default();
+                let data = if fi.precondition {
+                    let np = part.count(file.comm().rank()) as usize;
+                    invert_elements(pre, &data, std::iter::repeat(e).take(np))?
+                } else {
+                    data
+                };
+                FieldPayload::Fixed { elem_size: e, data }
+            }
+            None => {
+                let sizes = file.read_varray_sizes(part)?;
+                let data = file.read_varray_data(part, &sizes, true)?.unwrap_or_default();
+                let data = if fi.precondition {
+                    invert_elements(pre, &data, sizes.iter().copied())?
+                } else {
+                    data
+                };
+                FieldPayload::Var { sizes, data }
+            }
+        };
+        fields.push(Field {
+            name: fi.name.clone(),
+            encode: fi.encode,
+            precondition: fi.precondition,
+            payload,
+        });
+    }
+    Ok(fields)
+}

@@ -240,6 +240,13 @@ pub fn bench_io_json_path() -> std::path::PathBuf {
         .unwrap_or_else(|| std::path::PathBuf::from("BENCH_io.json"))
 }
 
+/// Where archive bench numbers land (`SCDA_BENCH_ARCHIVE_JSON` overrides).
+pub fn bench_archive_json_path() -> std::path::PathBuf {
+    std::env::var_os("SCDA_BENCH_ARCHIVE_JSON")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| std::path::PathBuf::from("BENCH_archive.json"))
+}
+
 /// Encoded write/read throughput of the per-element codec pipeline,
 /// serial vs pooled — the perf-trajectory numbers this PR's acceptance
 /// criterion tracks. Shared by the f1/t4 benches and the ignored-by-
@@ -396,6 +403,12 @@ pub mod io_bench {
         pub write_calls: u64,
         /// Bytes shipped between ranks (collective two-phase only).
         pub shipped_bytes: u64,
+        /// Collective exchanges summed over all ranks (0 for per-rank
+        /// engines).
+        pub exchanges: u64,
+        /// Largest single-exchange shipped volume seen on any rank (the
+        /// per-exchange history peak; 0 for per-rank engines).
+        pub shipped_exchange_max: u64,
     }
 
     /// The engine configurations the sweep covers (name, tuning).
@@ -473,6 +486,8 @@ pub mod io_bench {
                     ("write_mib_per_s", JsonVal::Num(e.write_mib_s)),
                     ("write_calls", JsonVal::Int(e.write_calls as i64)),
                     ("shipped_bytes", JsonVal::Int(e.shipped_bytes as i64)),
+                    ("exchanges", JsonVal::Int(e.exchanges as i64)),
+                    ("shipped_exchange_max", JsonVal::Int(e.shipped_exchange_max as i64)),
                 ]);
             }
             r
@@ -575,19 +590,31 @@ pub mod io_bench {
         let write_agg_mib_s = mib(true, agg);
         let read_sieved_mib_s = mib(false, agg);
 
-        // Full engine sweep (write side): syscall counts and shipped
-        // bytes from an instrumented pass, MiB/s from timed passes.
+        // Full engine sweep (write side): syscall counts, shipped bytes
+        // and the per-exchange history shape from an instrumented pass,
+        // MiB/s from timed passes.
+        let sum_ex = |v: &[(IoStats, EngineStats)]| v.iter().map(|(_, e)| e.exchanges).sum::<u64>();
+        let max_ex_ship = |v: &[(IoStats, EngineStats)]| {
+            v.iter().flat_map(|(_, e)| e.shipped_per_exchange.iter().copied()).max().unwrap_or(0)
+        };
         let mut engines = Vec::new();
         for (name, tuning) in engine_configs() {
-            let (write_mib_s, write_calls, shipped_bytes) = match name {
-                "direct" => (write_direct_mib_s, write_calls_direct, 0),
-                "aggregated" => (write_agg_mib_s, write_calls_agg, 0),
+            let (write_mib_s, write_calls, shipped_bytes, exchanges, shipped_exchange_max) = match name {
+                "direct" => (write_direct_mib_s, write_calls_direct, 0, 0, 0),
+                "aggregated" => (write_agg_mib_s, write_calls_agg, 0, 0, 0),
                 _ => {
                     let st = write_once(&path, ranks, sections, elems_per_rank, elem_bytes, tuning);
-                    (mib(true, tuning), sum_w(&st), sum_ship(&st))
+                    (mib(true, tuning), sum_w(&st), sum_ship(&st), sum_ex(&st), max_ex_ship(&st))
                 }
             };
-            engines.push(EngineProfile { name: name.to_string(), write_mib_s, write_calls, shipped_bytes });
+            engines.push(EngineProfile {
+                name: name.to_string(),
+                write_mib_s,
+                write_calls,
+                shipped_bytes,
+                exchanges,
+                shipped_exchange_max,
+            });
         }
         std::fs::remove_file(&*path).ok();
         IoProfile {
@@ -664,6 +691,118 @@ pub mod io_bench {
             sieved_read_calls: st_s.read_calls,
             stat_calls: st_d.stat_calls.max(st_s.stat_calls),
         }
+    }
+}
+
+/// Named-dataset random access through the archive catalog layer
+/// ([`crate::archive`]): open-plus-read latency and syscall shape of the
+/// O(1) footer index vs the linear section scan it replaces, swept over
+/// section count — the `BENCH_archive.json` numbers the t3 bench (and
+/// the archive smoke test) record. Syscall counts come from an
+/// instrumented pass under [`IoTuning::direct`] (one pread per logical
+/// access, so the counters *are* the access count); latencies are medians
+/// over `reps` timed passes under the default tuning.
+pub mod archive_bench {
+    use super::{measure, JsonVal};
+    use crate::api::{DataSrc, IoTuning};
+    use crate::archive::Archive;
+    use crate::par::{Partition, SerialComm};
+    use std::path::Path;
+
+    /// Indexed-vs-scan numbers for one section count.
+    #[derive(Debug, Clone)]
+    pub struct AccessProfile {
+        /// Named array datasets in the file (the scan cost driver).
+        pub datasets: usize,
+        /// Median ms to open the archive and read one named dataset.
+        pub indexed_ms: f64,
+        pub scan_ms: f64,
+        /// Read syscalls for that open+read under the direct engine.
+        pub indexed_reads: u64,
+        pub scan_reads: u64,
+    }
+
+    impl AccessProfile {
+        pub fn speedup(&self) -> f64 {
+            self.scan_ms / self.indexed_ms
+        }
+    }
+
+    fn build(path: &Path, datasets: usize, elems: u64, elem_bytes: u64) {
+        let part = Partition::uniform(1, elems);
+        let payload: Vec<u8> = (0..elems * elem_bytes).map(|i| (i % 251) as u8).collect();
+        let mut ar = Archive::create(SerialComm::new(), path, b"archive-bench").unwrap();
+        ar.file_mut().set_sync_on_close(false);
+        for d in 0..datasets {
+            ar.write_array(&format!("ds/{d}"), DataSrc::Contiguous(&payload), &part, elem_bytes, false)
+                .unwrap();
+        }
+        ar.finish().unwrap();
+    }
+
+    fn access(
+        path: &Path,
+        name: &str,
+        part: &Partition,
+        elem_bytes: u64,
+        tuning: IoTuning,
+        use_index: bool,
+    ) -> u64 {
+        let mut ar = Archive::open_with(SerialComm::new(), path, tuning, use_index).unwrap();
+        assert_eq!(ar.is_indexed(), use_index);
+        let got = ar.read_array(name, part, elem_bytes).unwrap();
+        assert_eq!(got.len() as u64, part.total() * elem_bytes);
+        let reads = ar.file().io_stats().read_calls;
+        ar.close().unwrap();
+        reads
+    }
+
+    /// Measure one section count: open + read the *last* dataset (the
+    /// scan's worst case, the index's indifferent case).
+    pub fn random_access(datasets: usize, elems: u64, elem_bytes: u64, reps: usize) -> AccessProfile {
+        let dir = std::env::temp_dir().join("scda-archive-bench");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("ar-{datasets}-{}.scda", std::process::id()));
+        build(&path, datasets, elems, elem_bytes);
+        let part = Partition::uniform(1, elems);
+        let name = format!("ds/{}", datasets - 1);
+        // Syscall shape under the direct engine: counters == accesses.
+        let indexed_reads = access(&path, &name, &part, elem_bytes, IoTuning::direct(), true);
+        let scan_reads = access(&path, &name, &part, elem_bytes, IoTuning::direct(), false);
+        // Latency under the default tuning (what a consumer gets).
+        let ms = |use_index: bool| {
+            let s = measure(1, reps, || {
+                access(&path, &name, &part, elem_bytes, IoTuning::default(), use_index);
+            });
+            s.median * 1e3
+        };
+        let indexed_ms = ms(true);
+        let scan_ms = ms(false);
+        std::fs::remove_file(&path).ok();
+        AccessProfile { datasets, indexed_ms, scan_ms, indexed_reads, scan_reads }
+    }
+
+    /// The standard `BENCH_archive.json` report for a sweep.
+    pub fn report(profiles: &[AccessProfile]) -> super::BenchReport {
+        let mut r = super::BenchReport::new("archive");
+        r.meta("quick", JsonVal::Bool(super::quick()));
+        for p in profiles {
+            r.entry(vec![
+                ("name", JsonVal::Str(format!("open_dataset_{}", p.datasets))),
+                ("datasets", JsonVal::Int(p.datasets as i64)),
+                ("indexed_ms", JsonVal::Num(p.indexed_ms)),
+                ("scan_ms", JsonVal::Num(p.scan_ms)),
+                ("speedup", JsonVal::Num(p.speedup())),
+                ("indexed_reads", JsonVal::Int(p.indexed_reads as i64)),
+                ("scan_reads", JsonVal::Int(p.scan_reads as i64)),
+            ]);
+        }
+        r
+    }
+
+    /// Quick-mode sweep: 8/64 datasets of 32 x 256 B elements.
+    pub fn run_quick() -> Vec<AccessProfile> {
+        [8usize, 64].iter().map(|&s| random_access(s, 32, 256, 2)).collect()
     }
 }
 

@@ -26,8 +26,16 @@ USAGE: scda <command> [args]
 COMMANDS:
   info <file> [--raw]          list sections (logical view; --raw shows
                                convention pairs as their raw sections)
+  ls <file>                    list named datasets via the archive catalog
+                               (O(1) footer index; falls back to a scan on
+                               plain scda files)
   verify <file>                strict byte-level structural verification
-  cat <file> <index> [--raw]   dump a section's payload to stdout
+  cat <file> <name|index> [--raw] [--name]
+                               dump a dataset (by catalog name) or section
+                               (by position) payload to stdout; --raw shows
+                               undecoded sections (positional form only);
+                               --name forces catalog lookup for datasets
+                               with numeric names
   demo-write <file> [--ranks P] [--encode] [--precondition]
                                write an AMR demo checkpoint on P simulated
                                ranks (base/max level via --base/--max)
@@ -46,7 +54,8 @@ pub fn run(argv: impl IntoIterator<Item = String>) -> i32 {
         }
     };
     let result = match args.command.as_str() {
-        "info" | "ls" => cmd_info(&args),
+        "info" => cmd_info(&args),
+        "ls" => cmd_ls(&args),
         "verify" => cmd_verify(&args),
         "cat" => cmd_cat(&args),
         "demo-write" => cmd_demo_write(&args),
@@ -135,6 +144,35 @@ fn cmd_info(args: &Args) -> CliResult {
     Ok(())
 }
 
+fn cmd_ls(args: &Args) -> CliResult {
+    let path = args.positional(0, "file argument")?;
+    let mut ar = crate::archive::Archive::open(SerialComm::new(), path)?;
+    println!(
+        "file    {path}\ncatalog {}",
+        if ar.is_indexed() { "footer index (O(1))" } else { "none — linear scan fallback" }
+    );
+    println!(
+        "{:>4} {:>12} {:>14} {:>14} {:>12}  {}",
+        "type", "elements", "elem bytes", "file bytes", "offset", "name"
+    );
+    for d in ar.datasets() {
+        println!(
+            "{:>4} {:>12} {:>14} {:>14} {:>12}  {}{}",
+            d.kind.to_string(),
+            d.elem_count,
+            d.elem_size,
+            d.byte_len,
+            d.offset,
+            d.name,
+            if d.encoded { " [compressed]" } else { "" },
+        );
+    }
+    let n = ar.datasets().len();
+    ar.close()?;
+    println!("{n} dataset(s)");
+    Ok(())
+}
+
 fn cmd_verify(args: &Args) -> CliResult {
     let path = args.positional(0, "file argument")?;
     let sections = crate::api::verify_file(Path::new(path))?;
@@ -144,13 +182,26 @@ fn cmd_verify(args: &Args) -> CliResult {
 
 fn cmd_cat(args: &Args) -> CliResult {
     let path = args.positional(0, "file argument")?;
-    let index: usize = args
-        .positional(1, "section index")?
-        .parse()
-        .map_err(|_| "section index must be a number".to_string())?;
+    let what = args.positional(1, "dataset name or section index")?;
     let decode = !args.flag("raw");
+    // A non-numeric argument is a dataset name, resolved through the
+    // archive catalog (O(1) on indexed files); `--name` forces catalog
+    // lookup for datasets whose names are themselves numeric. Datasets
+    // are logical sections, so the raw view only exists for positional
+    // access.
+    let index = match what.parse::<usize>() {
+        Ok(i) if !args.flag("name") => i,
+        _ => {
+            if !decode {
+                return Err(CliError::Usage(
+                    "--raw dumps raw sections and needs a numeric section index, not a dataset name"
+                        .into(),
+                ));
+            }
+            return cat_dataset(path, what);
+        }
+    };
     let mut f = ScdaFile::open(SerialComm::new(), path)?;
-    let part1 = |n: u64| Partition::uniform(1, n);
     let mut i = 0usize;
     while !f.at_end()? {
         let h = f.read_section_header(decode)?;
@@ -159,34 +210,51 @@ fn cmd_cat(args: &Args) -> CliResult {
             i += 1;
             continue;
         }
-        use crate::format::section::SectionKind::*;
-        use std::io::Write;
-        let stdout = std::io::stdout();
-        let mut out = stdout.lock();
-        match h.kind {
-            Inline => {
-                let d = f.read_inline_data(0, true)?.unwrap();
-                out.write_all(&d).ok();
-            }
-            Block => {
-                let d = f.read_block_data(0, true)?.unwrap();
-                out.write_all(&d).ok();
-            }
-            Array => {
-                let d = f.read_array_data(&part1(h.elem_count), h.elem_size, true)?.unwrap();
-                out.write_all(&d).ok();
-            }
-            Varray => {
-                let p = part1(h.elem_count);
-                let sizes = f.read_varray_sizes(&p)?;
-                let d = f.read_varray_data(&p, &sizes, true)?.unwrap();
-                out.write_all(&d).ok();
-            }
-        }
+        dump_section(&mut f, &h)?;
         f.close()?;
         return Ok(());
     }
     Err(CliError::Usage(format!("section {index} not found ({i} sections)")))
+}
+
+/// `scda cat <file> <name>`: seek to a named dataset through the catalog
+/// and dump its payload.
+fn cat_dataset(path: &str, name: &str) -> CliResult {
+    let mut ar = crate::archive::Archive::open(SerialComm::new(), path)?;
+    let h = ar.open_dataset(name)?;
+    dump_section(ar.file_mut(), &h)?;
+    ar.close()?;
+    Ok(())
+}
+
+/// Dump the pending section's payload to stdout (single-rank reader; the
+/// shared tail of both `cat` forms).
+fn dump_section(f: &mut ScdaFile<SerialComm>, h: &crate::api::SectionHeader) -> CliResult {
+    use crate::format::section::SectionKind::*;
+    use std::io::Write;
+    let part1 = Partition::uniform(1, h.elem_count);
+    let stdout = std::io::stdout();
+    let mut out = stdout.lock();
+    match h.kind {
+        Inline => {
+            let d = f.read_inline_data(0, true)?.unwrap();
+            out.write_all(&d).ok();
+        }
+        Block => {
+            let d = f.read_block_data(0, true)?.unwrap();
+            out.write_all(&d).ok();
+        }
+        Array => {
+            let d = f.read_array_data(&part1, h.elem_size, true)?.unwrap();
+            out.write_all(&d).ok();
+        }
+        Varray => {
+            let sizes = f.read_varray_sizes(&part1)?;
+            let d = f.read_varray_data(&part1, &sizes, true)?.unwrap();
+            out.write_all(&d).ok();
+        }
+    }
+    Ok(())
 }
 
 fn cmd_demo_write(args: &Args) -> CliResult {
@@ -302,6 +370,12 @@ mod tests {
         assert_eq!(run_words(&["verify", p]), 0);
         assert_eq!(run_words(&["info", p]), 0);
         assert_eq!(run_words(&["info", p, "--raw"]), 0);
+        // The demo checkpoint is a catalog-bearing archive: list it and
+        // address datasets by name.
+        assert_eq!(run_words(&["ls", p]), 0);
+        assert_eq!(run_words(&["cat", p, "ckpt/1.manifest"]), 0);
+        assert_eq!(run_words(&["cat", p, "ckpt/1/rho:f64x5"]), 0);
+        assert_ne!(run_words(&["cat", p, "no/such/dataset"]), 0);
         assert_eq!(run_words(&["restart", p, "--ranks", "5"]), 0);
         std::fs::remove_file(&path).unwrap();
     }

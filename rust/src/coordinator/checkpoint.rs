@@ -1,27 +1,36 @@
 //! Checkpoint/restart on top of scda — the paper's "main purpose ... a
 //! foundation for a generic and flexible archival and checkpoint/restart".
 //!
-//! A checkpoint file is plain scda:
+//! Since the archive catalog layer ([`crate::archive`]) landed, a
+//! checkpoint file is a named-dataset archive: per step `<n>`,
 //!
-//! 1. an inline section `scda:ckpt` with step/epoch info (32 bytes,
+//! 1. an inline dataset `ckpt/<n>.info` with step info (32 bytes,
 //!    human-readable),
-//! 2. a block section `scda:manifest` holding a small text manifest that
-//!    names every field and records its layout, compression and
+//! 2. a block dataset `ckpt/<n>.manifest` holding a small text manifest
+//!    that names every field and records its layout, compression and
 //!    preconditioning flags (everything needed to restart on any P),
-//! 3. one logical array section per field (`A` for fixed element size,
-//!    `V` for variable), optionally preconditioned per element
-//!    (runtime transform) and encoded per the §3 convention.
+//! 3. one array/varray dataset `ckpt/<n>/<field>` per field, optionally
+//!    preconditioned per element (runtime transform) and encoded per the
+//!    §3 convention,
 //!
-//! Because the manifest and all sections are ordinary scda, any scda
-//! reader can inspect a checkpoint (`scda ls`), and serial-equivalence
-//! makes checkpoints byte-identical regardless of the writing job size.
+//! followed by the archive's catalog + footer index trailer. Everything
+//! is ordinary scda, so any scda reader can inspect a checkpoint
+//! (`scda ls`), serial-equivalence makes checkpoints byte-identical
+//! regardless of the writing job size — and restart addresses fields *by
+//! name* through the catalog (O(1) seeks, any rank count) instead of
+//! replaying the section stream. Files written by the pre-archive layout
+//! (`scda:ckpt` / `scda:manifest` / bare field sections) still restore
+//! via the archive's scan fallback.
+//!
+//! The heavy lifting lives in [`crate::archive::restart`]; this module
+//! keeps the coordinator-facing types and one-call write/read entry
+//! points.
 
 use std::path::Path;
 
-use crate::api::{DataSrc, ScdaFile};
+use crate::archive::{restart, Archive};
 use crate::coordinator::metrics::Metrics;
-use crate::error::{corrupt, usage, Result, ScdaError};
-use crate::format::section::SectionKind;
+use crate::error::{corrupt, Result, ScdaError};
 use crate::io::IoTuning;
 use crate::par::comm::Communicator;
 use crate::par::partition::Partition;
@@ -65,7 +74,7 @@ pub struct FieldInfo {
     pub precondition: bool,
 }
 
-fn render_manifest(info: &CheckpointInfo) -> Vec<u8> {
+pub(crate) fn render_manifest(info: &CheckpointInfo) -> Vec<u8> {
     let mut s = String::new();
     s.push_str("scda-checkpoint 1\n");
     s.push_str(&format!("app {}\n", info.app));
@@ -83,7 +92,7 @@ fn render_manifest(info: &CheckpointInfo) -> Vec<u8> {
     s.into_bytes()
 }
 
-fn parse_manifest(bytes: &[u8]) -> Result<CheckpointInfo> {
+pub(crate) fn parse_manifest(bytes: &[u8]) -> Result<CheckpointInfo> {
     let text = std::str::from_utf8(bytes)
         .map_err(|_| ScdaError::corrupt(corrupt::BAD_CONVENTION, "manifest is not UTF-8"))?;
     let mut lines = text.lines();
@@ -172,83 +181,24 @@ pub fn write_checkpoint_tuned<C: Communicator>(
     metrics: &Metrics,
     tuning: IoTuning,
 ) -> Result<()> {
-    let info = CheckpointInfo {
-        app: app.to_string(),
-        step,
-        fields: fields
-            .iter()
-            .map(|f| FieldInfo {
-                name: f.name.clone(),
-                fixed_elem: match &f.payload {
-                    FieldPayload::Fixed { elem_size, .. } => Some(*elem_size),
-                    FieldPayload::Var { .. } => None,
-                },
-                elem_count: part.total(),
-                encode: f.encode,
-                precondition: f.precondition,
-            })
-            .collect(),
-    };
-    let mut file = ScdaFile::create(comm, path, format!("scda checkpoint: {app}").as_bytes())?;
-    file.set_io_tuning(tuning)?;
-    // 1. Inline step record, fixed 32 bytes, human-readable.
-    let mut inline = format!("step {step:>20} ok");
-    inline.truncate(31);
-    let mut inline = inline.into_bytes();
-    inline.resize(31, b' ');
-    inline.push(b'\n');
-    file.write_inline(&inline, Some(b"scda:ckpt"))?;
-    // 2. Manifest.
-    let manifest = render_manifest(&info);
-    file.write_block_from(0, Some(&manifest), manifest.len() as u64, Some(b"scda:manifest"), false)?;
-    // 3. Fields.
-    for f in fields {
-        let user = f.name.as_bytes();
-        if user.len() > crate::format::limits::USER_STRING_MAX {
-            return Err(ScdaError::usage(usage::STRING_TOO_LONG, "field name exceeds 58 bytes"));
-        }
-        match &f.payload {
-            FieldPayload::Fixed { elem_size, data } => {
-                Metrics::add(&metrics.bytes_in, data.len() as u64);
-                let np = data.len() as u64 / (*elem_size).max(1);
-                let owned;
-                let src = if f.precondition {
-                    owned = precondition_elements(pre, data, std::iter::repeat(*elem_size).take(np as usize), metrics)?;
-                    DataSrc::Contiguous(&owned)
-                } else {
-                    DataSrc::Contiguous(data)
-                };
-                Metrics::timed(&metrics.ns_write, || file.write_array(src, part, *elem_size, Some(user), f.encode))?;
-            }
-            FieldPayload::Var { sizes, data } => {
-                Metrics::add(&metrics.bytes_in, data.len() as u64);
-                let owned;
-                let src = if f.precondition {
-                    owned = precondition_elements(pre, data, sizes.iter().copied(), metrics)?;
-                    DataSrc::Contiguous(&owned)
-                } else {
-                    DataSrc::Contiguous(data)
-                };
-                Metrics::timed(&metrics.ns_write, || file.write_varray(src, part, sizes, Some(user), f.encode))?;
-            }
-        }
-        Metrics::add(&metrics.sections_written, 1);
-        Metrics::add(&metrics.elements_written, part.count(file.comm().rank()));
-    }
+    let mut ar = Archive::create(comm, path, format!("scda checkpoint: {app}").as_bytes())?;
+    ar.file_mut().set_io_tuning(tuning)?;
+    restart::write_step(&mut ar, app, step, part, fields, pre, metrics)?;
     // Drain the engine inside the write timer — with staging on, this
     // flush is where the actual pwrites happen (and where the collective
     // engine ships extents) — so ns_write (and the MiB/s derived from it)
-    // covers the real I/O, and the syscall counters cover the whole file.
-    Metrics::timed(&metrics.ns_write, || file.flush())?;
-    let io = file.io_stats();
-    let engine = file.engine_stats();
+    // covers the real I/O, and the syscall counters cover the fields.
+    // (`finish` then appends the catalog trailer, a few hundred bytes.)
+    Metrics::timed(&metrics.ns_write, || ar.file_mut().flush())?;
+    let io = ar.file().io_stats();
+    let engine = ar.file().engine_stats();
     Metrics::add(&metrics.bytes_written, io.write_bytes);
     Metrics::add(&metrics.write_calls, io.write_calls);
     Metrics::add(&metrics.bytes_shipped, engine.shipped_bytes);
-    file.close()
+    ar.finish()
 }
 
-fn precondition_elements(
+pub(crate) fn precondition_elements(
     pre: &dyn Transform,
     data: &[u8],
     sizes: impl Iterator<Item = u64>,
@@ -268,7 +218,11 @@ fn precondition_elements(
     })
 }
 
-fn invert_elements(pre: &dyn Transform, data: &[u8], sizes: impl Iterator<Item = u64>) -> Result<Vec<u8>> {
+pub(crate) fn invert_elements(
+    pre: &dyn Transform,
+    data: &[u8],
+    sizes: impl Iterator<Item = u64>,
+) -> Result<Vec<u8>> {
     let mut out = Vec::with_capacity(data.len());
     let mut at = 0usize;
     for s in sizes {
@@ -279,72 +233,27 @@ fn invert_elements(pre: &dyn Transform, data: &[u8], sizes: impl Iterator<Item =
     Ok(out)
 }
 
-/// Collectively read a checkpoint's manifest (cursor ends after it).
-pub fn open_checkpoint<C: Communicator>(comm: C, path: &Path) -> Result<(ScdaFile<C>, CheckpointInfo)> {
-    let mut file = ScdaFile::open(comm, path)?;
-    let h = file.read_section_header(false)?;
-    if h.kind != SectionKind::Inline || h.user != b"scda:ckpt" {
-        return Err(ScdaError::corrupt(corrupt::BAD_CONVENTION, "not an scda checkpoint (missing scda:ckpt)"));
-    }
-    file.read_inline_data(0, false)?;
-    let h = file.read_section_header(false)?;
-    if h.kind != SectionKind::Block || h.user != b"scda:manifest" {
-        return Err(ScdaError::corrupt(corrupt::BAD_CONVENTION, "missing scda:manifest section"));
-    }
-    let manifest = file.read_block_data(0, true)?;
-    let bytes = file.comm().bcast_bytes(0, manifest);
-    let info = parse_manifest(&bytes)?;
-    Ok((file, info))
+/// Collectively open a checkpoint archive and read the latest step's
+/// manifest. The returned [`Archive`] can then restore fields by name
+/// ([`restart::read_field`] / [`restart::read_fields`]) or inspect other
+/// steps ([`restart::list_steps`]).
+pub fn open_checkpoint<C: Communicator>(comm: C, path: &Path) -> Result<(Archive<C>, CheckpointInfo)> {
+    let mut ar = Archive::open(comm, path)?;
+    let info = restart::read_manifest(&mut ar, None)?;
+    Ok((ar, info))
 }
 
-/// Read all fields under a new partition (restart on any P). Returns the
-/// fields in manifest order with this rank's payloads.
+/// Read the latest step's fields under a new partition (restart on any
+/// P). Returns the fields in manifest order with this rank's payloads.
 pub fn read_checkpoint<C: Communicator>(
     comm: C,
     path: &Path,
     part: &Partition,
     pre: &dyn Transform,
 ) -> Result<(CheckpointInfo, Vec<Field>)> {
-    let (mut file, info) = open_checkpoint(comm, path)?;
-    let mut fields = Vec::with_capacity(info.fields.len());
-    for fi in &info.fields {
-        let h = file.read_section_header(true)?;
-        if h.user != fi.name.as_bytes() {
-            return Err(ScdaError::corrupt(
-                corrupt::BAD_CONVENTION,
-                format!("manifest names field {:?} but section is {:?}", fi.name, String::from_utf8_lossy(&h.user)),
-            ));
-        }
-        part.check_total(h.elem_count)?;
-        let payload = match fi.fixed_elem {
-            Some(e) => {
-                let data = file.read_array_data(part, e, true)?.unwrap_or_default();
-                let data = if fi.precondition {
-                    invert_elements(pre, &data, std::iter::repeat(e).take(part.count(file.comm().rank()) as usize))?
-                } else {
-                    data
-                };
-                FieldPayload::Fixed { elem_size: e, data }
-            }
-            None => {
-                let sizes = file.read_varray_sizes(part)?;
-                let data = file.read_varray_data(part, &sizes, true)?.unwrap_or_default();
-                let data = if fi.precondition {
-                    invert_elements(pre, &data, sizes.iter().copied())?
-                } else {
-                    data
-                };
-                FieldPayload::Var { sizes, data }
-            }
-        };
-        fields.push(Field {
-            name: fi.name.clone(),
-            encode: fi.encode,
-            precondition: fi.precondition,
-            payload,
-        });
-    }
-    file.close()?;
+    let (mut ar, info) = open_checkpoint(comm, path)?;
+    let fields = restart::read_fields(&mut ar, &info, part, pre)?;
+    ar.close()?;
     Ok((info, fields))
 }
 
@@ -372,5 +281,15 @@ mod tests {
         assert!(parse_manifest(b"scda-checkpoint 1\nfield kind=fixed n=1").is_err());
         assert!(parse_manifest(b"scda-checkpoint 1\nstep abc").is_err());
         assert!(parse_manifest(&[0xff, 0xfe]).is_err());
+    }
+
+    #[test]
+    fn checkpoint_dataset_names_are_versioned() {
+        use crate::archive::restart::{field_name, info_name, manifest_name};
+        assert_eq!(info_name(7), "ckpt/7.info");
+        assert_eq!(manifest_name(7), "ckpt/7.manifest");
+        assert_eq!(field_name(7, "rho:f64"), "ckpt/7/rho:f64");
+        // Meta names use '.', so no field name can collide with them.
+        assert_ne!(field_name(7, "manifest"), manifest_name(7));
     }
 }

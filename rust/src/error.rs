@@ -131,6 +131,10 @@ pub mod corrupt {
     pub const BAD_CHECKSUM: i32 = 11;
     pub const SIZE_MISMATCH: i32 = 12;
     pub const COUNT_OVERFLOW: i32 = 13;
+    /// The archive catalog section (`scda:catalog`) or the footer index
+    /// that locates it is malformed, or disagrees with the sections it
+    /// describes (see `crate::archive`).
+    pub const BAD_CATALOG: i32 = 14;
 }
 
 // Detail codes for usage errors.
@@ -144,6 +148,8 @@ pub mod usage {
     pub const NOT_COLLECTIVE: i32 = 7;
     pub const WRONG_SECTION: i32 = 8;
     pub const BUFFER_SIZE: i32 = 9;
+    pub const NO_SUCH_DATASET: i32 = 10;
+    pub const BAD_DATASET_NAME: i32 = 11;
 }
 
 /// Translate an error code to a string, mirroring `scda_ferror_string`
@@ -165,6 +171,7 @@ pub fn ferror_string(code: i32) -> Option<&'static str> {
         c if c == 1000 + corrupt::BAD_CHECKSUM => "corrupt file: checksum mismatch",
         c if c == 1000 + corrupt::SIZE_MISMATCH => "corrupt file: uncompressed size mismatch",
         c if c == 1000 + corrupt::COUNT_OVERFLOW => "corrupt file: count exceeds 26 decimal digits",
+        c if c == 1000 + corrupt::BAD_CATALOG => "corrupt file: malformed archive catalog",
         c if (1000..2000).contains(&c) => "corrupt file contents",
         c if (2000..3000).contains(&c) => "file system error",
         c if c == 3000 + usage::BAD_MODE => "usage: invalid open mode",
@@ -176,6 +183,8 @@ pub fn ferror_string(code: i32) -> Option<&'static str> {
         c if c == 3000 + usage::NOT_COLLECTIVE => "usage: collective parameter mismatch",
         c if c == 3000 + usage::WRONG_SECTION => "usage: call does not match current section type",
         c if c == 3000 + usage::BUFFER_SIZE => "usage: buffer size inconsistent with metadata",
+        c if c == 3000 + usage::NO_SUCH_DATASET => "usage: no dataset with that name in the archive",
+        c if c == 3000 + usage::BAD_DATASET_NAME => "usage: invalid or duplicate dataset name",
         c if (3000..4000).contains(&c) => "semantically invalid input or call sequence",
         _ => return None,
     })

@@ -63,7 +63,17 @@ pub struct CollectiveEngine {
     shipped_bytes: u64,
     exchanges: u64,
     flush_batches: u64,
+    /// Bytes shipped in each exchange, in exchange order (ROADMAP's
+    /// stripe-ownership follow-up wants this shape, not just the
+    /// total). Bounded at [`SHIPPED_HISTORY_CAP`] most-recent entries so
+    /// a long-lived file cannot grow it without limit.
+    shipped_history: std::collections::VecDeque<u64>,
 }
+
+/// Most-recent exchanges kept in [`EngineStats::shipped_per_exchange`];
+/// older entries are dropped (the running totals in `shipped_bytes` /
+/// `exchanges` are never truncated).
+pub const SHIPPED_HISTORY_CAP: usize = 1024;
 
 impl CollectiveEngine {
     pub fn new(capacity: usize, stripe_size: usize, sieve: Option<ReadSieve>, async_flush: bool) -> Self {
@@ -77,6 +87,7 @@ impl CollectiveEngine {
             shipped_bytes: 0,
             exchanges: 0,
             flush_batches: 0,
+            shipped_history: std::collections::VecDeque::new(),
         }
     }
 
@@ -100,6 +111,7 @@ impl CollectiveEngine {
         let p = comm.size();
         let me = comm.rank();
         self.exchanges += 1;
+        let shipped_before = self.shipped_bytes;
         let extents = self.agg.take_extents();
         let mut outgoing: Vec<Vec<u8>> = vec![Vec::new(); p];
         // This rank's fragments for its own stripes skip the wire — and
@@ -127,6 +139,10 @@ impl CollectiveEngine {
                 at += take;
             }
         }
+        if self.shipped_history.len() >= SHIPPED_HISTORY_CAP {
+            self.shipped_history.pop_front();
+        }
+        self.shipped_history.push_back(self.shipped_bytes - shipped_before);
         let incoming = comm.alltoall_bytes(outgoing);
         // Replay in source-rank order (fragments from different sources
         // are disjoint; within a source the wire preserves stage order).
@@ -253,6 +269,7 @@ impl IoEngine for CollectiveEngine {
             exchanges: self.exchanges,
             flush_batches: self.flush_batches,
             sieve_refills: self.sieve.as_ref().map(|s| s.refills()).unwrap_or(0),
+            shipped_per_exchange: self.shipped_history.iter().copied().collect(),
         }
     }
 }
@@ -306,7 +323,12 @@ mod tests {
             }
             e.flush(&f, &comm).unwrap();
             comm.barrier();
-            (f.io_stats().write_calls, e.stats().shipped_bytes)
+            let st = e.stats();
+            // The per-exchange history tiles the shipped total (this
+            // run stays far under SHIPPED_HISTORY_CAP).
+            assert_eq!(st.shipped_per_exchange.len() as u64, st.exchanges);
+            assert_eq!(st.shipped_per_exchange.iter().sum::<u64>(), st.shipped_bytes);
+            (f.io_stats().write_calls, st.shipped_bytes)
         });
         for (r, (writes, shipped)) in stats.iter().enumerate() {
             assert_eq!(*writes, 4, "rank {r}: one pwrite per owned stripe");

@@ -47,7 +47,7 @@ use crate::par::pfile::ParallelFile;
 use crate::par::pool::{CodecPool, ParJob, Step, SUBMITTER};
 
 /// Per-engine observability counters ([`crate::api::ScdaFile::engine_stats`]).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
 pub struct EngineStats {
     /// The engine's name: "direct", "aggregated" or "collective".
     pub engine: &'static str,
@@ -60,6 +60,14 @@ pub struct EngineStats {
     pub flush_batches: u64,
     /// Read-sieve window refills.
     pub sieve_refills: u64,
+    /// Bytes this rank shipped in *each* collective exchange, in
+    /// exchange order — the most recent
+    /// [`crate::io::collective::SHIPPED_HISTORY_CAP`] of them (while
+    /// under the cap, `len == exchanges` and the entries sum to
+    /// `shipped_bytes`; empty for per-rank engines). The per-exchange
+    /// shape is what the smarter-stripe-ownership work needs: a uniform
+    /// `s mod P` map shows up as consistently high per-exchange volume.
+    pub shipped_per_exchange: Vec<u64>,
 }
 
 /// One write/read transport for an open scda file; see the module docs
@@ -515,10 +523,9 @@ impl IoEngine for AggregatingEngine {
     fn stats(&self) -> EngineStats {
         EngineStats {
             engine: "aggregated",
-            shipped_bytes: 0,
-            exchanges: 0,
             flush_batches: self.drains,
             sieve_refills: self.sieve.as_ref().map(|s| s.refills()).unwrap_or(0),
+            ..EngineStats::default()
         }
     }
 }

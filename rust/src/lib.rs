@@ -121,12 +121,49 @@
 //!   through [`io::take_drop_error`] (§A.6: file errors must never be
 //!   silently lost).
 //! * **Observability.** [`api::ScdaFile::io_stats`] counts this rank's
-//!   syscalls; [`api::ScdaFile::engine_stats`] adds shipped bytes,
-//!   exchanges, drain batches and sieve refills; `BENCH_io.json`
-//!   (f1/t2/t3 benches, smoke tests) tracks MiB/s and syscall counts for
-//!   all three engines, sync and async.
+//!   syscalls; [`api::ScdaFile::engine_stats`] adds shipped bytes (total
+//!   and per exchange), exchanges, drain batches and sieve refills;
+//!   `BENCH_io.json` (f1/t2/t3 benches, smoke tests) tracks MiB/s and
+//!   syscall counts for all three engines, sync and async.
+//!
+//! # Archive layer
+//!
+//! The paper leaves "the definition of variables … and self-describing
+//! headers" to a layer *on top of* scda; [`archive`] is that layer. An
+//! [`archive::Archive`] names each logical section (the dataset name is
+//! exactly the section's user string) and, at
+//! [`archive::Archive::finish`], appends two ordinary sections: a `B`
+//! section `scda:catalog` whose payload is an ASCII table mapping each
+//! name to `{offset, byte_len, kind, elem_count, elem_size, encoded}`,
+//! and an `I` section `scda:index` whose 32 data bytes are the catalog's
+//! offset in ASCII decimal.
+//!
+//! * **Encoding rule.** Catalog and index are ASCII text inside ordinary
+//!   sections, so the file stays pure, verifiable scda
+//!   ([`api::verify_bytes`] accepts it unchanged; foreign readers see
+//!   two more sections) and stays ASCII wherever its data is ASCII.
+//! * **Why O(1).** An inline section is exactly 96 unpadded bytes, so
+//!   the index is always the file's last 96 bytes: open reads footer →
+//!   catalog, and [`archive::Archive::open_dataset`] seeks straight to
+//!   the named section — a constant number of header reads where
+//!   [`api::ScdaFile::toc`] scans every section (`toc` itself takes the
+//!   catalog fast path when an index is present). Reads on any rank
+//!   count then agree on any partition of the dataset's elements — the
+//!   catalog adds addressing, not a data path.
+//! * **Trust model.** The index is *advisory*: if the last 96 bytes are
+//!   not an `scda:index` section, readers fall back to a linear scan
+//!   (any scda file is an anonymous archive). Once the footer names a
+//!   catalog, the catalog section is *authoritative*, and catalog ↔
+//!   section disagreement is a `corrupt::BAD_CATALOG` error — never a
+//!   silent fallback, never a panic.
+//! * **Checkpoints.** [`archive::restart`] versions checkpoints as
+//!   named datasets (`ckpt/<n>/<field>`, several steps per archive);
+//!   [`coordinator::checkpoint`] writes and restores through it, so
+//!   restart addresses fields by name on any rank count.
+//!   `BENCH_archive.json` (t3 bench) tracks indexed-vs-scan access.
 
 pub mod api;
+pub mod archive;
 pub mod codec;
 pub mod coordinator;
 pub mod error;

@@ -1,0 +1,219 @@
+//! Archive catalog layer: named datasets round-trip through the catalog,
+//! the footer index makes `open_dataset` O(1) in the section count
+//! (asserted via the `IoStats` syscall counters), plain scda files fall
+//! back to the scan, and the `toc()` fast path agrees with the linear
+//! scan it replaces.
+
+use scda::api::{DataSrc, IoTuning, ScdaFile};
+use scda::archive::Archive;
+use scda::error::{corrupt, usage};
+use scda::par::{Partition, SerialComm};
+use scda::ScdaErrorKind;
+use std::path::{Path, PathBuf};
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("scda-archive-test");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(format!("{name}-{}.scda", std::process::id()))
+}
+
+fn payload(n: usize, seed: u8) -> Vec<u8> {
+    (0..n).map(|i| (i as u8).wrapping_mul(31).wrapping_add(seed)).collect()
+}
+
+#[test]
+fn named_datasets_roundtrip_all_kinds() {
+    let path = tmp("kinds");
+    let part = Partition::uniform(1, 10);
+    let arr = payload(10 * 16, 1);
+    let sizes: Vec<u64> = (1..=10u64).collect();
+    let var = payload(55, 2);
+    let block = payload(500, 3);
+    let inline = [7u8; 32];
+
+    let mut ar = Archive::create(SerialComm::new(), &path, b"kinds").unwrap();
+    ar.write_inline_from("meta", 0, Some(&inline)).unwrap();
+    ar.write_block_from("params", 0, Some(&block), block.len() as u64, false).unwrap();
+    ar.write_block_from("params.z", 0, Some(&block), block.len() as u64, true).unwrap();
+    ar.write_array("fixed", DataSrc::Contiguous(&arr), &part, 16, false).unwrap();
+    ar.write_array("fixed.z", DataSrc::Contiguous(&arr), &part, 16, true).unwrap();
+    ar.write_varray("var", DataSrc::Contiguous(&var), &part, &sizes, false).unwrap();
+    ar.write_varray("var.z", DataSrc::Contiguous(&var), &part, &sizes, true).unwrap();
+    ar.finish().unwrap();
+
+    // A catalog-bearing archive is a plain scda file: the strict
+    // verifier accepts it unchanged (acceptance criterion).
+    scda::api::verify_file(&path).unwrap();
+
+    let mut ar = Archive::open(SerialComm::new(), &path).unwrap();
+    assert!(ar.is_indexed(), "catalog should load through the footer index");
+    let names: Vec<&str> = ar.datasets().iter().map(|d| d.name.as_str()).collect();
+    assert_eq!(names, ["meta", "params", "params.z", "fixed", "fixed.z", "var", "var.z"]);
+    // Datasets read back by name, in arbitrary order.
+    assert_eq!(ar.read_varray("var.z", &part).unwrap(), (sizes.clone(), var.clone()));
+    assert_eq!(ar.read_inline("meta", 0).unwrap(), Some(inline));
+    assert_eq!(ar.read_array("fixed.z", &part, 16).unwrap(), arr);
+    assert_eq!(ar.read_block("params", 0).unwrap().unwrap(), block);
+    assert_eq!(ar.read_block("params.z", 0).unwrap().unwrap(), block);
+    assert_eq!(ar.read_array("fixed", &part, 16).unwrap(), arr);
+    assert_eq!(ar.read_varray("var", &part).unwrap(), (sizes.clone(), var.clone()));
+    // Encoded datasets are flagged.
+    assert!(ar.get("fixed.z").unwrap().encoded);
+    assert!(!ar.get("fixed").unwrap().encoded);
+    ar.close().unwrap();
+    std::fs::remove_file(&path).unwrap();
+}
+
+fn build_numbered(path: &Path, datasets: usize) -> Vec<u8> {
+    let part = Partition::uniform(1, 8);
+    let data = payload(8 * 32, 9);
+    let mut ar = Archive::create(SerialComm::new(), path, b"o1").unwrap();
+    ar.file_mut().set_sync_on_close(false);
+    for d in 0..datasets {
+        ar.write_array(&format!("ds/{d}"), DataSrc::Contiguous(&data), &part, 32, false).unwrap();
+    }
+    ar.finish().unwrap();
+    data
+}
+
+/// Open + read one named dataset under the direct engine (one pread per
+/// logical access, so the counter is the access count). Returns reads.
+fn count_reads(path: &Path, name: &str, data: &[u8], use_index: bool) -> u64 {
+    let part = Partition::uniform(1, 8);
+    let mut ar = Archive::open_with(SerialComm::new(), path, IoTuning::direct(), use_index).unwrap();
+    assert_eq!(ar.is_indexed(), use_index);
+    assert_eq!(ar.read_array(name, &part, 32).unwrap(), data);
+    let reads = ar.file().io_stats().read_calls;
+    ar.close().unwrap();
+    reads
+}
+
+#[test]
+fn open_dataset_is_o1_in_section_count() {
+    let small = tmp("o1-small");
+    let large = tmp("o1-large");
+    let data_s = build_numbered(&small, 4);
+    let data_l = build_numbered(&large, 64);
+
+    // Acceptance criterion: the indexed path performs O(1) header reads —
+    // the syscall count for open + read of the LAST dataset is identical
+    // at 4 and at 64 sections (and small in absolute terms).
+    let small_reads = count_reads(&small, "ds/3", &data_s, true);
+    let large_reads = count_reads(&large, "ds/63", &data_l, true);
+    assert_eq!(
+        small_reads, large_reads,
+        "indexed access must not depend on section count ({small_reads} vs {large_reads})"
+    );
+    assert!(small_reads <= 8, "indexed open+read should be a handful of preads, got {small_reads}");
+
+    // The scan fallback is the contrast: linear in the section count.
+    let small_scan = count_reads(&small, "ds/3", &data_s, false);
+    let large_scan = count_reads(&large, "ds/63", &data_l, false);
+    assert!(
+        large_scan >= small_scan + 60,
+        "scan reads should grow with sections ({small_scan} -> {large_scan})"
+    );
+    std::fs::remove_file(&small).unwrap();
+    std::fs::remove_file(&large).unwrap();
+}
+
+#[test]
+fn toc_fast_path_agrees_with_scan() {
+    let path = tmp("tocfast");
+    build_numbered(&path, 6);
+    // Catalog-served toc (the file carries an index and the cursor is at
+    // the first section).
+    let mut f = ScdaFile::open(SerialComm::new(), &path).unwrap();
+    let fast = f.toc(true).unwrap();
+    assert!(f.at_end().unwrap());
+    f.close().unwrap();
+    // Force the linear scan through the archive's escape hatch.
+    let ar = Archive::open_with(SerialComm::new(), &path, IoTuning::default(), false).unwrap();
+    assert!(!ar.is_indexed());
+    let scanned: Vec<_> = ar.datasets().to_vec();
+    ar.close().unwrap();
+    // The fast path lists the six datasets plus the two trailer sections.
+    assert_eq!(fast.len(), scanned.len() + 2);
+    for (t, d) in fast.iter().zip(&scanned) {
+        assert_eq!(t.header.user, d.name.as_bytes());
+        assert_eq!(t.offset, d.offset);
+        assert_eq!(t.byte_len, d.byte_len);
+        assert_eq!(t.header.elem_count, d.elem_count);
+        assert_eq!(t.header.elem_size, d.elem_size);
+        assert_eq!(t.header.decoded, d.encoded);
+    }
+    assert_eq!(fast[6].header.user, b"scda:catalog");
+    assert_eq!(fast[7].header.user, b"scda:index");
+    // The trailer entries tile the file end exactly.
+    let flen = std::fs::metadata(&path).unwrap().len();
+    assert_eq!(fast[7].offset + fast[7].byte_len, flen);
+    assert_eq!(fast[6].offset + fast[6].byte_len, fast[7].offset);
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn plain_scda_files_fall_back_to_scan() {
+    let path = tmp("plain");
+    let part = Partition::uniform(1, 4);
+    let data = payload(4 * 8, 5);
+    // Written through the raw API: no catalog, no index.
+    let mut f = ScdaFile::create(SerialComm::new(), &path, b"plain").unwrap();
+    f.write_array(DataSrc::Contiguous(&data), &part, 8, Some(b"named"), false).unwrap();
+    f.write_block(b"blob", Some(b"")).unwrap(); // unnameable: empty user string
+    f.close().unwrap();
+
+    let mut ar = Archive::open(SerialComm::new(), &path).unwrap();
+    assert!(!ar.is_indexed());
+    // The named section is discovered; the anonymous one is skipped.
+    assert_eq!(ar.datasets().len(), 1);
+    assert_eq!(ar.read_array("named", &part, 8).unwrap(), data);
+    ar.close().unwrap();
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn name_errors_have_stable_codes() {
+    let path = tmp("names");
+    let part = Partition::uniform(1, 2);
+    let data = payload(2 * 4, 6);
+    let mut ar = Archive::create(SerialComm::new(), &path, b"names").unwrap();
+    ar.write_array("ok", DataSrc::Contiguous(&data), &part, 4, false).unwrap();
+    // Duplicate, reserved, whitespace and empty names are usage errors
+    // before anything reaches the file.
+    for bad in ["ok", "scda:catalog", "scda:index", "has space", ""] {
+        let err = ar.write_array(bad, DataSrc::Contiguous(&data), &part, 4, false).unwrap_err();
+        assert_eq!(err.code(), 3000 + usage::BAD_DATASET_NAME, "{bad:?}");
+    }
+    ar.finish().unwrap();
+
+    let mut ar = Archive::open(SerialComm::new(), &path).unwrap();
+    let err = ar.open_dataset("missing").unwrap_err();
+    assert_eq!(err.code(), 3000 + usage::NO_SUCH_DATASET);
+    // Kind-mismatched typed reads are usage errors, not data corruption.
+    let err = ar.read_block("ok", 0).unwrap_err();
+    assert_eq!(err.kind(), ScdaErrorKind::Usage);
+    // The file is still readable afterwards.
+    assert_eq!(ar.read_array("ok", &part, 4).unwrap(), data);
+    ar.close().unwrap();
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn catalog_trailer_is_ascii() {
+    let path = tmp("ascii");
+    build_numbered(&path, 3);
+    // Locate the trailer via the toc and check every byte is ASCII: the
+    // catalog layer must not make an ASCII file binary.
+    let bytes = std::fs::read(&path).unwrap();
+    let mut f = ScdaFile::open(SerialComm::new(), &path).unwrap();
+    let toc = f.toc(true).unwrap();
+    f.close().unwrap();
+    let catalog = &toc[toc.len() - 2];
+    let index = &toc[toc.len() - 1];
+    for e in [catalog, index] {
+        let range = e.offset as usize..(e.offset + e.byte_len) as usize;
+        assert!(bytes[range].is_ascii(), "{:?} section contains non-ASCII bytes", e.header.user);
+    }
+    assert_eq!(corrupt::BAD_CATALOG, 14, "stable code for catalog corruption");
+    std::fs::remove_file(&path).unwrap();
+}

@@ -1,0 +1,213 @@
+//! Serial equivalence and partition independence of the archive layer:
+//! a file written through `Archive` on 1/2/4/8 ranks is byte-identical
+//! to the serial archive image (the catalog is a pure function of
+//! collective inputs), `open_dataset` round-trips under mismatched
+//! writer/reader rank counts, and versioned checkpoint steps restore by
+//! name on any rank count — including files written by the pre-archive
+//! checkpoint layout (scan fallback).
+
+use scda::api::{DataSrc, ScdaFile};
+use scda::archive::{restart, Archive};
+use scda::bench_support::sha256;
+use scda::coordinator::checkpoint::{read_checkpoint, Field, FieldPayload};
+use scda::coordinator::Metrics;
+use scda::par::{run_parallel, Communicator, Partition, SerialComm};
+use scda::runtime::Identity;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("scda-archive-eq");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(format!("{name}-{}.scda", std::process::id()))
+}
+
+const N: u64 = 60;
+const E: u64 = 16;
+
+fn global_fixed() -> Vec<u8> {
+    (0..N * E).map(|i| (i * 11 % 253) as u8).collect()
+}
+
+fn global_sizes() -> Vec<u64> {
+    (0..N).map(|i| (i * 7) % 23).collect()
+}
+
+fn global_var() -> Vec<u8> {
+    let total: u64 = global_sizes().iter().sum();
+    (0..total).map(|i| (i * 5 % 249) as u8).collect()
+}
+
+/// Write the reference archive on `ranks` ranks: one raw array, one
+/// encoded array, one varray, all named.
+fn write_archive(path: &PathBuf, ranks: usize) {
+    let path = path.clone();
+    let (fixed, sizes, var) = (Arc::new(global_fixed()), Arc::new(global_sizes()), Arc::new(global_var()));
+    run_parallel(ranks, move |comm| {
+        let part = Partition::uniform(ranks, N);
+        let r = part.local_range(comm.rank());
+        let local_fixed = &fixed[(r.start * E) as usize..(r.end * E) as usize];
+        let local_sizes = &sizes[r.start as usize..r.end as usize];
+        let lo: u64 = sizes[..r.start as usize].iter().sum();
+        let len: u64 = local_sizes.iter().sum();
+        let local_var = &var[lo as usize..(lo + len) as usize];
+        let mut ar = Archive::create(comm, &path, b"eq").unwrap();
+        ar.write_array("grid", DataSrc::Contiguous(local_fixed), &part, E, false).unwrap();
+        ar.write_array("grid.z", DataSrc::Contiguous(local_fixed), &part, E, true).unwrap();
+        ar.write_varray("hp", DataSrc::Contiguous(local_var), &part, local_sizes, false).unwrap();
+        ar.finish().unwrap();
+    });
+}
+
+#[test]
+fn archive_bytes_identical_at_any_writer_rank_count() {
+    let mut hashes = Vec::new();
+    for ranks in [1usize, 2, 4, 8] {
+        let path = tmp(&format!("id-{ranks}"));
+        write_archive(&path, ranks);
+        scda::api::verify_file(&path).unwrap();
+        hashes.push(sha256(&std::fs::read(&path).unwrap()));
+        std::fs::remove_file(&path).unwrap();
+    }
+    assert!(hashes.windows(2).all(|h| h[0] == h[1]), "archive bytes depend on writer rank count");
+}
+
+#[test]
+fn open_dataset_roundtrips_on_mismatched_rank_counts() {
+    let path = tmp("mismatch");
+    write_archive(&path, 3);
+    for reader_ranks in [1usize, 2, 5, 8] {
+        let p = path.clone();
+        let windows = run_parallel(reader_ranks, move |comm| {
+            let part = Partition::uniform(reader_ranks, N);
+            let mut ar = Archive::open(comm, &p).unwrap();
+            assert!(ar.is_indexed());
+            // By-name access, out of file order, on a partition the
+            // writer never saw.
+            let enc = ar.read_array("grid.z", &part, E).unwrap();
+            let raw = ar.read_array("grid", &part, E).unwrap();
+            let (sizes, var) = ar.read_varray("hp", &part).unwrap();
+            assert_eq!(enc, raw);
+            ar.close().unwrap();
+            (raw, sizes, var)
+        });
+        let mut fixed = Vec::new();
+        let mut sizes = Vec::new();
+        let mut var = Vec::new();
+        for (f, s, v) in windows {
+            fixed.extend_from_slice(&f);
+            sizes.extend_from_slice(&s);
+            var.extend_from_slice(&v);
+        }
+        assert_eq!(fixed, global_fixed(), "reader ranks {reader_ranks}");
+        assert_eq!(sizes, global_sizes(), "reader ranks {reader_ranks}");
+        assert_eq!(var, global_var(), "reader ranks {reader_ranks}");
+    }
+    std::fs::remove_file(&path).unwrap();
+}
+
+fn step_fields(seed: u8, part: &Partition, rank: usize) -> Vec<Field> {
+    let r = part.local_range(rank);
+    let data: Vec<u8> =
+        ((r.start * 8)..(r.end * 8)).map(|i| (i as u8).wrapping_mul(3).wrapping_add(seed)).collect();
+    vec![Field {
+        name: "rho".into(),
+        encode: seed % 2 == 0,
+        precondition: false,
+        payload: FieldPayload::Fixed { elem_size: 8, data },
+    }]
+}
+
+#[test]
+fn versioned_steps_restore_by_name_on_any_rank_count() {
+    let path = tmp("steps");
+    {
+        let p = path.clone();
+        run_parallel(4, move |comm| {
+            let part = Partition::uniform(4, N);
+            let mut ar = Archive::create(comm, &p, b"multi-step").unwrap();
+            for (step, seed) in [(10u64, 1u8), (20, 2)] {
+                let fields = step_fields(seed, &part, ar.file().comm().rank());
+                restart::write_step(&mut ar, "steps-app", step, &part, &fields, &Identity, &Metrics::new())
+                    .unwrap();
+            }
+            ar.finish().unwrap();
+        });
+    }
+    scda::api::verify_file(&path).unwrap();
+
+    // Restore on 3 ranks: latest step by default, an older step by
+    // number, a single field by name.
+    let p = path.clone();
+    let outputs = run_parallel(3, move |comm| {
+        let part = Partition::uniform(3, N);
+        let rank = comm.rank();
+        let mut ar = Archive::open(comm, &p).unwrap();
+        assert_eq!(restart::list_steps(&ar), vec![10, 20]);
+        let (latest, fields20) = restart::read_step(&mut ar, None, &part, &Identity).unwrap();
+        assert_eq!((latest.step, latest.app.as_str()), (20, "steps-app"));
+        let (old, fields10) = restart::read_step(&mut ar, Some(10), &part, &Identity).unwrap();
+        assert_eq!(old.step, 10);
+        let single = restart::read_field(&mut ar, 10, &old.fields[0], &part, &Identity).unwrap();
+        ar.close().unwrap();
+        let expect10 = step_fields(1, &part, rank);
+        let expect20 = step_fields(2, &part, rank);
+        assert_eq!(fields10[0].payload, expect10[0].payload);
+        assert_eq!(fields20[0].payload, expect20[0].payload);
+        assert_eq!(single.payload, expect10[0].payload);
+        true
+    });
+    assert!(outputs.into_iter().all(|ok| ok));
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn legacy_checkpoint_layout_restores_through_the_scan_fallback() {
+    // A checkpoint in the pre-archive layout: inline scda:ckpt, block
+    // scda:manifest, bare-named field sections, no catalog trailer.
+    let path = tmp("legacy");
+    let n = 12u64;
+    let data: Vec<u8> = (0..n * 8).map(|i| (i % 251) as u8).collect();
+    let data2: Vec<u8> = (0..n * 8).map(|i| (i % 241) as u8).rev().collect();
+    {
+        let part = Partition::uniform(1, n);
+        let mut f = ScdaFile::create(SerialComm::new(), &path, b"legacy ckpt").unwrap();
+        let mut inline = format!("step {:>20} ok", 5).into_bytes();
+        inline.resize(31, b' ');
+        inline.push(b'\n');
+        f.write_inline(&inline, Some(b"scda:ckpt")).unwrap();
+        // Two fields sharing one name: legal under the old writer, and
+        // the sequential legacy restore must keep them apart.
+        let manifest = format!(
+            "scda-checkpoint 1\napp legacy-app\nstep 5\n\
+             field name=rho kind=fixed elem=8 n={n} encode=0 precond=0\n\
+             field name=rho kind=fixed elem=8 n={n} encode=0 precond=0\n"
+        );
+        f.write_block(manifest.as_bytes(), Some(b"scda:manifest")).unwrap();
+        f.write_array(DataSrc::Contiguous(&data), &part, 8, Some(b"rho"), false).unwrap();
+        f.write_array(DataSrc::Contiguous(&data2), &part, 8, Some(b"rho"), false).unwrap();
+        f.close().unwrap();
+    }
+    for ranks in [1usize, 2] {
+        let p = path.clone();
+        let (d, d2) = (data.clone(), data2.clone());
+        let windows = run_parallel(ranks, move |comm| {
+            let part = Partition::uniform(ranks, n);
+            let r = part.local_range(comm.rank());
+            let (info, fields) = read_checkpoint(comm, &p, &part, &Identity).unwrap();
+            assert_eq!((info.app.as_str(), info.step), ("legacy-app", 5));
+            let window = (r.start * 8) as usize..(r.end * 8) as usize;
+            for (field, global) in fields.iter().zip([&d, &d2]) {
+                match &field.payload {
+                    FieldPayload::Fixed { elem_size: 8, data } => {
+                        assert_eq!(data, &global[window.clone()]);
+                    }
+                    other => panic!("bad payload {other:?}"),
+                }
+            }
+            true
+        });
+        assert!(windows.into_iter().all(|ok| ok));
+    }
+    std::fs::remove_file(&path).unwrap();
+}

@@ -1,0 +1,47 @@
+//! Archive bench smoke: exercises the indexed-vs-scan measurement
+//! harness end to end and records `BENCH_archive.json` so the catalog
+//! random-access trajectory is tracked from this PR onward.
+//!
+//! The quick bench is `#[ignore]`d so `cargo test -q` stays fast; run
+//! with `cargo test --test bench_archive_smoke -- --ignored`.
+
+use scda::bench_support::{archive_bench, bench_archive_json_path};
+
+#[test]
+fn archive_bench_harness_roundtrips_tiny_workload() {
+    // Non-ignored correctness pass at a size too small to be a
+    // benchmark: checks the access accounting and the report shape
+    // without timing assertions.
+    let profiles =
+        vec![archive_bench::random_access(4, 8, 64, 1), archive_bench::random_access(32, 8, 64, 1)];
+    // The O(1) shape: indexed reads identical at both section counts,
+    // scan reads growing with them.
+    assert_eq!(profiles[0].indexed_reads, profiles[1].indexed_reads);
+    assert!(profiles[1].scan_reads > profiles[0].scan_reads + 20);
+    let r = archive_bench::report(&profiles).render();
+    assert!(r.contains("\"bench\": \"archive\""));
+    assert!(r.contains("\"open_dataset_4\""));
+    assert!(r.contains("\"open_dataset_32\""));
+    assert!(r.contains("\"indexed_reads\""));
+    assert!(r.contains("\"scan_reads\""));
+}
+
+#[test]
+#[ignore = "perf smoke; run with -- --ignored"]
+fn archive_bench_quick_records_json() {
+    let profiles = archive_bench::run_quick();
+    for p in &profiles {
+        assert!(p.indexed_ms > 0.0 && p.scan_ms > 0.0);
+    }
+    let path = bench_archive_json_path();
+    archive_bench::report(&profiles).write(&path).unwrap();
+    let written = std::fs::read_to_string(&path).unwrap();
+    assert!(written.contains("\"bench\": \"archive\""));
+    for p in &profiles {
+        println!(
+            "archive quick: S={} indexed {:.3} ms / {} preads, scan {:.3} ms / {} preads ({:.1}x)",
+            p.datasets, p.indexed_ms, p.indexed_reads, p.scan_ms, p.scan_reads, p.speedup()
+        );
+    }
+    println!("wrote {}", path.display());
+}

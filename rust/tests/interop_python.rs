@@ -196,17 +196,29 @@ fn python_verifies_rust_checkpoint_structure() {
         &scda::coordinator::Metrics::new(),
     )
     .unwrap();
+    // The checkpoint is a named-dataset archive: versioned step datasets
+    // followed by the catalog block and the footer index, all ordinary
+    // sections the foreign reader walks like any other — including the
+    // ASCII catalog text and the ASCII decimal index payload.
     let out = run_py(&format!(
         r#"
 from scda_py import ScdaReader
 r = ScdaReader({path:?})
 k, u, _ = r.next_section()
-assert (k, u) == ("I", b"scda:ckpt")
+assert (k, u) == ("I", b"ckpt/9.info")
 k, u, manifest = r.next_section()
-assert (k, u) == ("B", b"scda:manifest")
+assert (k, u) == ("B", b"ckpt/9.manifest")
 assert b"app interop-app" in manifest and b"step 9" in manifest
 k, u, elems = r.next_section()
-assert (k, u) == ("A", b"rho") and len(elems) == {n}
+assert (k, u) == ("A", b"ckpt/9/rho") and len(elems) == {n}
+k, u, catalog = r.next_section()
+assert (k, u) == ("B", b"scda:catalog")
+assert catalog.startswith(b"scda-catalog 1")
+assert b"name=ckpt/9/rho" in catalog and b"kind=A" in catalog
+k, u, idx = r.next_section()
+assert (k, u) == ("I", b"scda:index")
+catalog_off = int(idx.decode().strip())
+assert catalog_off > 128
 assert r.at_end()
 print("PY-CKPT-OK")
 "#
