@@ -184,6 +184,18 @@ fn main() {
         }
         println!("\nT2c: engine sweep at P=4 (direct / aggregated / collective, sync and async)\n");
         et.print();
+        let mut rt = Table::new(&["engine", "read MiB/s", "read syscalls", "gathered MiB", "gather preads"]);
+        for e in &io.read_engines {
+            rt.row(&[
+                e.name.clone(),
+                format!("{:.0}", e.read_mib_s),
+                e.read_calls.to_string(),
+                format!("{:.2}", e.gathered_bytes as f64 / (1024.0 * 1024.0)),
+                e.gather_preads.to_string(),
+            ]);
+        }
+        println!("\nT2d: read-side engine sweep (direct / sieved / collective gather)\n");
+        rt.print();
         let io_json = scda::bench_support::bench_io_json_path();
         io.report().write(&io_json).unwrap();
         println!("\nwrote {}", io_json.display());

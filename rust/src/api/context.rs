@@ -314,6 +314,19 @@ impl<C: Communicator> ScdaFile<C> {
         self.engine.read_vec(&self.file, offset, len)
     }
 
+    /// Collective data-window read: every rank passes its own window
+    /// (`buf` may be empty on ranks reading nothing — they still
+    /// participate, which is what lets skipped `want = false` reads stay
+    /// collective under the gathering engine). Per-rank engines serve it
+    /// through their sieve routing and return `false`; the collective
+    /// engine's stripe-owner gather runs here and returns `true` when
+    /// its own collectives already synchronized every rank, letting the
+    /// caller skip its section barrier. The flag is identical on all
+    /// ranks (a pure function of collective inputs).
+    pub(crate) fn window_read(&mut self, offset: u64, buf: &mut [u8]) -> Result<bool> {
+        self.engine.read_window(&self.file, offset, buf, &self.comm)
+    }
+
     /// File length in bytes (served from the open-time cache in read
     /// mode — no fstat).
     pub(crate) fn file_len(&self) -> Result<u64> {

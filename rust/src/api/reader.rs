@@ -283,16 +283,17 @@ impl<C: Communicator> ScdaFile<C> {
                     ));
                 }
                 let rank = self.comm.rank();
-                let out = if want {
-                    let np = part.count(rank);
-                    let off = payload_off + part.offset(rank) * elem_size;
-                    Some(self.read_sieved(off, (np * elem_size) as usize)?)
-                } else {
-                    None
-                };
+                let np = part.count(rank);
+                let off = payload_off + part.offset(rank) * elem_size;
+                // Every rank enters the collective window read; skipped
+                // ranks (want = false) participate with an empty request.
+                let mut out = vec![0u8; if want { (np * elem_size) as usize } else { 0 }];
+                let synced = self.window_read(off, &mut out)?;
                 self.cursor += meta.total_len(None) as u64;
-                self.comm.barrier();
-                Ok(out)
+                if !synced {
+                    self.comm.barrier();
+                }
+                Ok(want.then_some(out))
             }
             Pending::DecodedArray { v_meta, erows_off, uncomp_elem } => {
                 part.check_total(to_u64(v_meta.elem_count, "N")?)?;
@@ -350,12 +351,12 @@ impl<C: Communicator> ScdaFile<C> {
                         format!("element size {elem_size} does not match section's {}", meta.elem_size),
                     ));
                 }
-                if !buf.is_empty() {
-                    let off = payload_off + part.offset(rank) * elem_size;
-                    self.engine.read_into(&self.file, off, buf)?;
-                }
+                let off = payload_off + part.offset(rank) * elem_size;
+                let synced = self.window_read(off, buf)?;
                 self.cursor += meta.total_len(None) as u64;
-                self.comm.barrier();
+                if !synced {
+                    self.comm.barrier();
+                }
                 Ok(())
             }
             decoded @ Pending::DecodedArray { .. } => {
@@ -431,14 +432,15 @@ impl<C: Communicator> ScdaFile<C> {
                 let sq = self.comm.allgather_u64(local_bytes);
                 let my_off: u64 = sq[..rank].iter().sum();
                 let total: u64 = sq.iter().sum();
-                let out = if want {
-                    Some(self.read_sieved(data_off + my_off, local_bytes as usize)?)
-                } else {
-                    None
-                };
+                // Every rank enters the collective window read; skipped
+                // ranks (want = false) participate with an empty request.
+                let mut out = vec![0u8; if want { local_bytes as usize } else { 0 }];
+                let synced = self.window_read(data_off + my_off, &mut out)?;
                 self.cursor += meta.total_len(Some(total as u128)) as u64;
-                self.comm.barrier();
-                Ok(out)
+                if !synced {
+                    self.comm.barrier();
+                }
+                Ok(want.then_some(out))
             }
             Pending::DecodedVarray { erows_off, v_meta, .. } => {
                 let n = to_u64(v_meta.elem_count, "N")?;
@@ -494,11 +496,11 @@ impl<C: Communicator> ScdaFile<C> {
                 let sq = self.comm.allgather_u64(local_bytes);
                 let my_off: u64 = sq[..rank].iter().sum();
                 let total: u64 = sq.iter().sum();
-                if !buf.is_empty() {
-                    self.engine.read_into(&self.file, data_off + my_off, buf)?;
-                }
+                let synced = self.window_read(data_off + my_off, buf)?;
                 self.cursor += meta.total_len(Some(total as u128)) as u64;
-                self.comm.barrier();
+                if !synced {
+                    self.comm.barrier();
+                }
                 Ok(())
             }
             decoded @ Pending::DecodedVarray { .. } => {
@@ -565,6 +567,174 @@ impl<C: Communicator> ScdaFile<C> {
     }
 
     // ------------------------------------------------------------------
+    // Range reads (catalog-seeded partial-dataset access)
+    // ------------------------------------------------------------------
+
+    /// Read elements `[first, first + count)` of the pending fixed-size
+    /// array section on every rank — the engine behind
+    /// [`crate::archive::Archive::read_range`]. The byte window is
+    /// located directly from the section layout: a raw `A` section needs
+    /// no size rows at all (`payload + first·E`), and a convention-(9)
+    /// pair reads only the compressed-size rows `[0, first + count)` —
+    /// the prefix sum that locates the window — never a row at or past
+    /// the range end, and never payload bytes outside it. All window
+    /// reads are collective (every rank requests the same range, which
+    /// the gathering engine dedupes to one owner-side read set).
+    ///
+    /// Leaves the cursor at `section_end`: the caller knows the
+    /// section's extent (catalog `byte_len`), which a range read cannot
+    /// derive without summing all size rows.
+    pub(crate) fn read_array_range_data(&mut self, first: u64, count: u64, section_end: u64) -> Result<Vec<u8>> {
+        let pending = std::mem::replace(&mut self.pending, Pending::None);
+        let out = match pending {
+            Pending::Raw { meta, payload_off } => {
+                if meta.kind != SectionKind::Array {
+                    return Err(wrong_section("read_array_range_data", meta.kind));
+                }
+                check_elem_range(first, count, to_u64(meta.elem_count, "N")?)?;
+                let e = to_u64(meta.elem_size, "E")?;
+                let len = count
+                    .checked_mul(e)
+                    .and_then(|b| usize::try_from(b).ok())
+                    .ok_or_else(|| range_overflow("range byte length"))?;
+                let mut out = vec![0u8; len];
+                let synced = self.window_read(payload_off + first * e, &mut out)?;
+                if !synced {
+                    self.comm.barrier();
+                }
+                out
+            }
+            Pending::DecodedArray { v_meta, erows_off, uncomp_elem } => {
+                let n = to_u64(v_meta.elem_count, "N")?;
+                check_elem_range(first, count, n)?;
+                let prefix = self.sum_rows_window(erows_off, first, b'E')?;
+                let comp_sizes = self.read_rows_window(erows_off, first, count, b'E')?;
+                let local_comp: u64 = comp_sizes.iter().sum();
+                let data_off = erows_off + n * COUNT_ENTRY_BYTES as u64;
+                let mut blob = vec![0u8; local_comp as usize];
+                let synced = self.window_read(data_off + prefix, &mut blob)?;
+                let expected_total =
+                    usize::try_from(count.saturating_mul(uncomp_elem)).unwrap_or(usize::MAX);
+                let out = decode_range_elements(&blob, &comp_sizes, expected_total, |_| uncomp_elem)?;
+                if !synced {
+                    self.comm.barrier();
+                }
+                out
+            }
+            other => {
+                self.pending = other;
+                return Err(call_seq("read_array_range_data without a pending array section"));
+            }
+        };
+        self.cursor = section_end;
+        Ok(out)
+    }
+
+    /// The varray counterpart of [`Self::read_array_range_data`]:
+    /// elements `[first, first + count)` of the pending variable-size
+    /// array section, returned as `(element sizes, concatenated
+    /// payloads)` on every rank. Size rows are read only as far as the
+    /// prefix sum requires — `[0, first + count)` for the raw `E` rows
+    /// and the convention-(10) compressed rows, and *only the range's
+    /// own rows* for the uncompressed-size (`U`) rows — never any row at
+    /// or past the range end, never payload outside the window.
+    pub(crate) fn read_varray_range_data(
+        &mut self,
+        first: u64,
+        count: u64,
+        section_end: u64,
+    ) -> Result<(Vec<u64>, Vec<u8>)> {
+        let pending = std::mem::replace(&mut self.pending, Pending::None);
+        let out = match pending {
+            Pending::Raw { meta, payload_off } => {
+                if meta.kind != SectionKind::Varray {
+                    return Err(wrong_section("read_varray_range_data", meta.kind));
+                }
+                let n = to_u64(meta.elem_count, "N")?;
+                check_elem_range(first, count, n)?;
+                let prefix = self.sum_rows_window(payload_off, first, b'E')?;
+                let sizes = self.read_rows_window(payload_off, first, count, b'E')?;
+                let range_bytes: u64 = sizes.iter().sum();
+                let data_off = payload_off + n * COUNT_ENTRY_BYTES as u64 + prefix;
+                let mut data = vec![0u8; range_bytes as usize];
+                let synced = self.window_read(data_off, &mut data)?;
+                if !synced {
+                    self.comm.barrier();
+                }
+                (sizes, data)
+            }
+            Pending::DecodedVarray { urows_off, erows_off, v_meta } => {
+                let n = to_u64(v_meta.elem_count, "N")?;
+                check_elem_range(first, count, n)?;
+                // Uncompressed sizes: only the range's own rows.
+                let usizes = self.read_rows_window(urows_off, first, count, b'U')?;
+                // Compressed sizes: the locating prefix sum streams the
+                // rows before the range; only the range's own rows stay.
+                let prefix = self.sum_rows_window(erows_off, first, b'E')?;
+                let comp_sizes = self.read_rows_window(erows_off, first, count, b'E')?;
+                let local_comp: u64 = comp_sizes.iter().sum();
+                let data_off = erows_off + n * COUNT_ENTRY_BYTES as u64;
+                let mut blob = vec![0u8; local_comp as usize];
+                let synced = self.window_read(data_off + prefix, &mut blob)?;
+                let total: u64 = usizes.iter().sum();
+                let data = decode_range_elements(&blob, &comp_sizes, total as usize, |i| usizes[i])?;
+                if !synced {
+                    self.comm.barrier();
+                }
+                (usizes, data)
+            }
+            other => {
+                self.pending = other;
+                return Err(call_seq("read_varray_range_data without a pending varray section"));
+            }
+        };
+        self.cursor = section_end;
+        Ok(out)
+    }
+
+    /// Collectively read `nrows` 32-byte size rows starting at global row
+    /// `first_row` of the row region at `rows_off` — every rank requests
+    /// the identical window, which the collective engine's gather dedupes
+    /// into one owner-side read set. The caller issues at least one more
+    /// collective window read and handles the barrier after the last one,
+    /// so the synced flag is dropped here.
+    fn read_rows_window(&mut self, rows_off: u64, first_row: u64, nrows: u64, letter: u8) -> Result<Vec<u64>> {
+        let len = usize::try_from(nrows)
+            .ok()
+            .and_then(|r| r.checked_mul(COUNT_ENTRY_BYTES))
+            .ok_or_else(|| range_overflow("size-row window"))?;
+        let mut bytes = vec![0u8; len];
+        let _synced = self.window_read(rows_off + first_row * COUNT_ENTRY_BYTES as u64, &mut bytes)?;
+        let mut sizes = Vec::with_capacity(nrows as usize);
+        for row in bytes.chunks_exact(COUNT_ENTRY_BYTES) {
+            sizes.push(to_u64(decode_count(row, letter)?, "element size")?);
+        }
+        Ok(sizes)
+    }
+
+    /// Sum the size rows `[0, nrows)` at `rows_off` — the locating
+    /// prefix sum of a range read — streaming in bounded chunks so
+    /// memory stays constant no matter how deep into the section the
+    /// range starts (the same discipline as `sum_size_rows` on the skip
+    /// path). Each chunk is one collective window read with identical
+    /// requests on every rank (the chunk schedule is a pure function of
+    /// `nrows`), so the collective discipline holds and the gathering
+    /// engine still dedupes the reads P-fold.
+    fn sum_rows_window(&mut self, rows_off: u64, nrows: u64, letter: u8) -> Result<u64> {
+        const CHUNK_ROWS: u64 = 4096; // 128 KiB of row text per round
+        let mut total = 0u64;
+        let mut at = 0u64;
+        while at < nrows {
+            let take = CHUNK_ROWS.min(nrows - at);
+            for s in self.read_rows_window(rows_off, at, take, letter)? {
+                total += s;
+            }
+            at += take;
+        }
+        Ok(total)
+    }
+
+    // ------------------------------------------------------------------
     // Internals
     // ------------------------------------------------------------------
 
@@ -624,10 +794,13 @@ impl<C: Communicator> ScdaFile<C> {
         let my_off: u64 = sq[..rank].iter().sum();
         let total: u64 = sq.iter().sum();
         let data_off = erows_off + n * COUNT_ENTRY_BYTES as u64;
+        // Every rank enters the collective window read (skipped ranks
+        // with an empty request) before `want` decides what to keep.
+        let mut blob = vec![0u8; if want { local_comp as usize } else { 0 }];
+        self.window_read(data_off + my_off, &mut blob)?;
         if !want {
             return Ok((None, total));
         }
-        let blob = self.read_sieved(data_off + my_off, local_comp as usize)?;
         // Per-element views into the blob, in element order.
         let mut elems: Vec<&[u8]> = Vec::with_capacity(comp_sizes.len());
         let mut at = 0usize;
@@ -676,6 +849,54 @@ impl<C: Communicator> ScdaFile<C> {
         }
         Ok((Some(decoded), total))
     }
+}
+
+/// Validate that `[first, first + count)` lies inside `n` elements.
+fn check_elem_range(first: u64, count: u64, n: u64) -> Result<()> {
+    let end = first
+        .checked_add(count)
+        .ok_or_else(|| ScdaError::usage(usage::BAD_RANGE, format!("element range {first}+{count} overflows")))?;
+    if end > n {
+        return Err(ScdaError::usage(
+            usage::BAD_RANGE,
+            format!("element range [{first}, {end}) outside the section's {n} elements"),
+        ));
+    }
+    Ok(())
+}
+
+fn range_overflow(what: &str) -> ScdaError {
+    ScdaError::corrupt(corrupt::COUNT_OVERFLOW, format!("{what} exceeds this implementation's limits"))
+}
+
+/// Inflate consecutive compressed elements out of `blob` (sized by
+/// `comp_sizes`, the §3 frames back to back), verifying each element's
+/// uncompressed size, into one buffer reserved at `expected_total`.
+/// Serial on purpose: range reads are small relative to whole-section
+/// reads, whose pooled decode lives in `read_compressed_elements`.
+fn decode_range_elements(
+    blob: &[u8],
+    comp_sizes: &[u64],
+    expected_total: usize,
+    expected: impl Fn(usize) -> u64,
+) -> Result<Vec<u8>> {
+    with_scratch(|scratch| {
+        // The capacity is a hint from file metadata: cap it so a corrupt
+        // size cannot force an absurd allocation before decoding fails.
+        let mut out = Vec::with_capacity(expected_total.min(64 << 20));
+        let mut at = 0usize;
+        for (i, &cs) in comp_sizes.iter().enumerate() {
+            let got = decode_element_into(&blob[at..at + cs as usize], scratch, &mut out)?;
+            if got as u64 != expected(i) {
+                return Err(ScdaError::corrupt(
+                    corrupt::SIZE_MISMATCH,
+                    format!("range element {i} inflated to {got} bytes, metadata says {}", expected(i)),
+                ));
+            }
+            at += cs as usize;
+        }
+        Ok(out)
+    })
 }
 
 fn to_u64(v: u128, what: &str) -> Result<u64> {

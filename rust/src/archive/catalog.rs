@@ -90,13 +90,19 @@ impl<C: Communicator> Archive<C> {
         if file.comm().size() == 1 {
             return Ok(index::load(file)?.map(|l| l.datasets));
         }
+        // Rank 0 keeps the datasets `index::load` already parsed and
+        // reuses them after the broadcast instead of re-parsing its own
+        // wire payload (the PR 4 cleanup debt): the broadcast still
+        // carries the raw on-disk catalog text — the file bytes stay the
+        // single authority on every *other* rank — but the root parses
+        // exactly once.
+        let mut parsed_root: Option<Vec<DatasetInfo>> = None;
         let wire: Option<Vec<u8>> = if file.comm().rank() == 0 {
             Some(match index::load(file) {
                 Ok(Some(l)) => {
-                    // Ship the raw on-disk catalog text, not a re-render:
-                    // the file bytes stay the single authority everywhere.
                     let mut w = vec![1u8];
                     w.extend_from_slice(&l.payload);
+                    parsed_root = Some(l.datasets);
                     w
                 }
                 Ok(None) => vec![0u8],
@@ -113,7 +119,10 @@ impl<C: Communicator> Archive<C> {
         let wire = file.comm().bcast_bytes(0, wire);
         match wire.first().copied() {
             Some(0) => Ok(None),
-            Some(1) => Ok(Some(parse_catalog(&wire[1..])?)),
+            Some(1) => match parsed_root {
+                Some(datasets) => Ok(Some(datasets)),
+                None => Ok(Some(parse_catalog(&wire[1..])?)),
+            },
             Some(2) if wire.len() >= 5 => {
                 let code = i32::from_le_bytes(wire[1..5].try_into().unwrap());
                 let msg = String::from_utf8_lossy(&wire[5..]).into_owned();
@@ -291,9 +300,7 @@ impl<C: Communicator> Archive<C> {
     /// equal the name; a catalog that points elsewhere is corrupt (the
     /// sections are authoritative, the catalog merely addresses them).
     pub fn open_dataset(&mut self, name: &str) -> Result<SectionHeader> {
-        let entry = self.get(name).ok_or_else(|| {
-            ScdaError::usage(usage::NO_SUCH_DATASET, format!("archive has no dataset named {name:?}"))
-        })?;
+        let entry = self.get(name).ok_or_else(|| no_such_dataset(name))?;
         let offset = entry.offset;
         self.file.seek_section(offset)?;
         let header = self.file.read_section_header(true)?;
@@ -342,6 +349,70 @@ impl<C: Communicator> Archive<C> {
         let data = self.file.read_varray_data(part, &sizes, true)?.unwrap_or_default();
         Ok((sizes, data))
     }
+
+    // ------------------------------------------------------------------
+    // Catalog-seeded range reads
+    // ------------------------------------------------------------------
+
+    /// Read elements `[first, first + count)` of a named fixed-size
+    /// array dataset — delivered to *every* rank of the reading
+    /// communicator — seeding the read window straight from the catalog
+    /// entry instead of replaying the section stream. A raw array
+    /// touches no size rows at all (the window is `offset + first · E`);
+    /// an encoded (convention-9) dataset reads only the compressed-size
+    /// rows `[0, first + count)` that the locating prefix sum requires —
+    /// never a row at or past the range end, never payload bytes outside
+    /// the window (`rust/tests/archive_range.rs` asserts both through
+    /// `IoStats`). Equivalent to a full [`Self::read_array`] followed by
+    /// slicing, under any writer/reader partition combination.
+    ///
+    /// Collective like every archive call; under
+    /// [`crate::io::IoTuning::collective`] the identical per-rank
+    /// requests dedupe into one stripe-owner read set (the collective
+    /// read gather).
+    ///
+    /// ```
+    /// use scda::api::DataSrc;
+    /// use scda::archive::Archive;
+    /// use scda::par::{Partition, SerialComm};
+    ///
+    /// let path = std::env::temp_dir().join(format!("scda-doc-range-{}.scda", std::process::id()));
+    /// let part = Partition::uniform(1, 100);
+    /// let data: Vec<u8> = (0..800u32).map(|i| (i % 251) as u8).collect();
+    /// let mut ar = Archive::create(SerialComm::new(), &path, b"doc").unwrap();
+    /// ar.write_array("temps", DataSrc::Contiguous(&data), &part, 8, false).unwrap();
+    /// ar.finish().unwrap();
+    ///
+    /// let mut ar = Archive::open(SerialComm::new(), &path).unwrap();
+    /// // Elements 10..14, straight out of the middle of the section:
+    /// let got = ar.read_range("temps", 10, 4).unwrap();
+    /// assert_eq!(got, &data[80..112]);
+    /// ar.close().unwrap();
+    /// # std::fs::remove_file(&path).unwrap();
+    /// ```
+    pub fn read_range(&mut self, name: &str, first: u64, count: u64) -> Result<Vec<u8>> {
+        let entry = self.get(name).ok_or_else(|| no_such_dataset(name))?;
+        entry.check_range(first, count)?;
+        let section_end = entry.offset + entry.byte_len;
+        let h = self.open_dataset(name)?;
+        expect_kind(name, h.kind, crate::format::section::SectionKind::Array)?;
+        self.file.read_array_range_data(first, count, section_end)
+    }
+
+    /// The varray counterpart of [`Self::read_range`]: elements
+    /// `[first, first + count)` of a named variable-size array dataset,
+    /// returned as `(element sizes, concatenated payloads)` on every
+    /// rank. Size rows are read only as far as the locating prefix sum
+    /// requires (`[0, first + count)`); rows at or past the range end
+    /// and payload bytes outside the window are never touched.
+    pub fn read_varray_range(&mut self, name: &str, first: u64, count: u64) -> Result<(Vec<u64>, Vec<u8>)> {
+        let entry = self.get(name).ok_or_else(|| no_such_dataset(name))?;
+        entry.check_range(first, count)?;
+        let section_end = entry.offset + entry.byte_len;
+        let h = self.open_dataset(name)?;
+        expect_kind(name, h.kind, crate::format::section::SectionKind::Varray)?;
+        self.file.read_varray_range_data(first, count, section_end)
+    }
 }
 
 /// Rebuild a broadcast error on the receiving ranks (code ranges are the
@@ -356,6 +427,10 @@ fn rebuild_error(code: i32, msg: String) -> ScdaError {
         3000..=3999 => ScdaError::usage(code - 3000, msg),
         _ => ScdaError::io(std::io::Error::other(msg.clone()), msg),
     }
+}
+
+fn no_such_dataset(name: &str) -> ScdaError {
+    ScdaError::usage(usage::NO_SUCH_DATASET, format!("archive has no dataset named {name:?}"))
 }
 
 fn expect_kind(

@@ -43,6 +43,28 @@ pub struct DatasetInfo {
     pub encoded: bool,
 }
 
+impl DatasetInfo {
+    /// Validate that `[first, first + count)` lies inside this dataset's
+    /// element range — the cheap catalog-side gate of
+    /// [`crate::archive::Archive::read_range`] (the section header,
+    /// which stays authoritative, re-checks on the seeked read).
+    pub fn check_range(&self, first: u64, count: u64) -> Result<()> {
+        let end = first.checked_add(count).ok_or_else(|| {
+            ScdaError::usage(usage::BAD_RANGE, format!("element range {first}+{count} overflows"))
+        })?;
+        if end > self.elem_count {
+            return Err(ScdaError::usage(
+                usage::BAD_RANGE,
+                format!(
+                    "element range [{first}, {end}) outside dataset {:?}'s {} elements",
+                    self.name, self.elem_count
+                ),
+            ));
+        }
+        Ok(())
+    }
+}
+
 /// Names the archive layer claims for its own sections; user datasets
 /// cannot use them.
 pub const RESERVED_NAMES: [&str; 2] = ["scda:catalog", "scda:index"];

@@ -203,6 +203,42 @@ pub fn read_manifest<C: Communicator>(ar: &mut Archive<C>, step: Option<u64>) ->
     parse_manifest(&bytes)
 }
 
+/// Wrap a freshly read payload as the manifest field's [`Field`],
+/// inverting the preconditioner per element when the manifest says so —
+/// the restore tail shared by the named (catalog) and legacy
+/// (sequential) paths, factored here so the Fixed/Var inversion logic
+/// exists exactly once. `sizes` is `Some` exactly when the field is
+/// variable-size; `np` is this rank's element count under the reading
+/// partition.
+fn finish_field(
+    fi: &FieldInfo,
+    pre: &dyn Transform,
+    np: usize,
+    sizes: Option<Vec<u64>>,
+    data: Vec<u8>,
+) -> Result<Field> {
+    let payload = match (fi.fixed_elem, sizes) {
+        (Some(e), None) => {
+            let data = if fi.precondition {
+                invert_elements(pre, &data, std::iter::repeat(e).take(np))?
+            } else {
+                data
+            };
+            FieldPayload::Fixed { elem_size: e, data }
+        }
+        (None, Some(sizes)) => {
+            let data = if fi.precondition {
+                invert_elements(pre, &data, sizes.iter().copied())?
+            } else {
+                data
+            };
+            FieldPayload::Var { sizes, data }
+        }
+        _ => unreachable!("callers read sizes exactly when the field is variable-size"),
+    };
+    Ok(Field { name: fi.name.clone(), encode: fi.encode, precondition: fi.precondition, payload })
+}
+
 /// Restore one manifest field by name under any reading partition,
 /// inverting the preconditioner when the manifest says so.
 pub fn read_field<C: Communicator>(
@@ -229,28 +265,15 @@ pub fn read_field<C: Communicator>(
             format!("manifest names field {:?} but the archive has no such dataset", fi.name),
         ));
     };
-    let payload = match fi.fixed_elem {
-        Some(e) => {
-            let data = ar.read_array(&name, part, e)?;
-            let data = if fi.precondition {
-                let np = part.count(ar.file().comm().rank()) as usize;
-                invert_elements(pre, &data, std::iter::repeat(e).take(np))?
-            } else {
-                data
-            };
-            FieldPayload::Fixed { elem_size: e, data }
-        }
+    let (sizes, data) = match fi.fixed_elem {
+        Some(e) => (None, ar.read_array(&name, part, e)?),
         None => {
             let (sizes, data) = ar.read_varray(&name, part)?;
-            let data = if fi.precondition {
-                invert_elements(pre, &data, sizes.iter().copied())?
-            } else {
-                data
-            };
-            FieldPayload::Var { sizes, data }
+            (Some(sizes), data)
         }
     };
-    Ok(Field { name: fi.name.clone(), encode: fi.encode, precondition: fi.precondition, payload })
+    let np = part.count(ar.file().comm().rank()) as usize;
+    finish_field(fi, pre, np, sizes, data)
 }
 
 /// Restore a whole step (the latest with `step = None`): manifest first,
@@ -317,34 +340,16 @@ fn read_legacy_fields<C: Communicator>(
             ));
         }
         part.check_total(h.elem_count)?;
-        let payload = match fi.fixed_elem {
-            Some(e) => {
-                let data = file.read_array_data(part, e, true)?.unwrap_or_default();
-                let data = if fi.precondition {
-                    let np = part.count(file.comm().rank()) as usize;
-                    invert_elements(pre, &data, std::iter::repeat(e).take(np))?
-                } else {
-                    data
-                };
-                FieldPayload::Fixed { elem_size: e, data }
-            }
+        let (sizes, data) = match fi.fixed_elem {
+            Some(e) => (None, file.read_array_data(part, e, true)?.unwrap_or_default()),
             None => {
                 let sizes = file.read_varray_sizes(part)?;
                 let data = file.read_varray_data(part, &sizes, true)?.unwrap_or_default();
-                let data = if fi.precondition {
-                    invert_elements(pre, &data, sizes.iter().copied())?
-                } else {
-                    data
-                };
-                FieldPayload::Var { sizes, data }
+                (Some(sizes), data)
             }
         };
-        fields.push(Field {
-            name: fi.name.clone(),
-            encode: fi.encode,
-            precondition: fi.precondition,
-            payload,
-        });
+        let np = part.count(file.comm().rank()) as usize;
+        fields.push(finish_field(fi, pre, np, sizes, data)?);
     }
     Ok(fields)
 }

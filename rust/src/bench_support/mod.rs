@@ -411,6 +411,26 @@ pub mod io_bench {
         pub shipped_exchange_max: u64,
     }
 
+    /// One engine configuration's read-side numbers (the read sweep
+    /// skips the `*_async` configs: background flush is write-side
+    /// only).
+    #[derive(Debug, Clone)]
+    pub struct ReadEngineProfile {
+        /// "direct", "aggregated" (sieved) or "collective" (gathered).
+        pub name: String,
+        pub read_mib_s: f64,
+        /// Read syscalls summed over all ranks for one whole-file pass.
+        pub read_calls: u64,
+        /// Collective read gathers summed over all ranks (0 for
+        /// per-rank engines).
+        pub read_exchanges: u64,
+        /// Bytes served to other ranks' read windows (gather volume).
+        pub gathered_bytes: u64,
+        /// Owner-side preads issued by the gather — the count that
+        /// tracks bytes touched, not rank count.
+        pub gather_preads: u64,
+    }
+
     /// The engine configurations the sweep covers (name, tuning).
     pub fn engine_configs() -> Vec<(&'static str, IoTuning)> {
         vec![
@@ -442,6 +462,8 @@ pub mod io_bench {
         /// Write-side numbers for every engine configuration
         /// ([`engine_configs`]).
         pub engines: Vec<EngineProfile>,
+        /// Read-side numbers per engine (direct / sieved / gathered).
+        pub read_engines: Vec<ReadEngineProfile>,
     }
 
     impl IoProfile {
@@ -488,6 +510,17 @@ pub mod io_bench {
                     ("shipped_bytes", JsonVal::Int(e.shipped_bytes as i64)),
                     ("exchanges", JsonVal::Int(e.exchanges as i64)),
                     ("shipped_exchange_max", JsonVal::Int(e.shipped_exchange_max as i64)),
+                ]);
+            }
+            for e in &self.read_engines {
+                r.entry(vec![
+                    ("name", JsonVal::Str(format!("read_engine_{}", e.name))),
+                    ("engine", JsonVal::Str(e.name.clone())),
+                    ("read_mib_per_s", JsonVal::Num(e.read_mib_s)),
+                    ("read_calls", JsonVal::Int(e.read_calls as i64)),
+                    ("read_exchanges", JsonVal::Int(e.read_exchanges as i64)),
+                    ("gathered_bytes", JsonVal::Int(e.gathered_bytes as i64)),
+                    ("gather_preads", JsonVal::Int(e.gather_preads as i64)),
                 ]);
             }
             r
@@ -537,6 +570,22 @@ pub mod io_bench {
         elem_bytes: usize,
         tuning: IoTuning,
     ) -> Vec<IoStats> {
+        read_once_stats(path, ranks, sections, elems_per_rank, elem_bytes, tuning)
+            .into_iter()
+            .map(|(s, _)| s)
+            .collect()
+    }
+
+    /// [`read_once`] that also snapshots each rank's engine counters
+    /// (gather preads, exchanges, gathered bytes) for the read sweep.
+    pub fn read_once_stats(
+        path: &Arc<PathBuf>,
+        ranks: usize,
+        sections: usize,
+        elems_per_rank: usize,
+        elem_bytes: usize,
+        tuning: IoTuning,
+    ) -> Vec<(IoStats, EngineStats)> {
         let path = Arc::clone(path);
         run_parallel(ranks, move |comm| {
             let part = Partition::uniform(ranks, (ranks * elems_per_rank) as u64);
@@ -548,7 +597,7 @@ pub mod io_bench {
                 let data = f.read_varray_data(&part, &sizes, true).unwrap().unwrap();
                 assert_eq!(data.len(), elems_per_rank * elem_bytes);
             }
-            let st = f.io_stats();
+            let st = (f.io_stats(), f.engine_stats());
             f.close().unwrap();
             st
         })
@@ -616,6 +665,42 @@ pub mod io_bench {
                 shipped_exchange_max,
             });
         }
+
+        // Read-side engine sweep over the same file (the engine
+        // property tests pin its bytes identical under every writer):
+        // the collective read gather vs the per-rank routes. Background
+        // flush is write-side only (`*_async` configs skipped), and the
+        // per-rank engines reuse the counts already measured above —
+        // their gather counters are definitionally zero.
+        let zero_gather = |name: &str, read_mib_s: f64, read_calls: u64| ReadEngineProfile {
+            name: name.to_string(),
+            read_mib_s,
+            read_calls,
+            read_exchanges: 0,
+            gathered_bytes: 0,
+            gather_preads: 0,
+        };
+        let mut read_engines = Vec::new();
+        for (name, tuning) in engine_configs() {
+            if name.ends_with("_async") {
+                continue;
+            }
+            read_engines.push(match name {
+                "direct" => zero_gather(name, read_direct_mib_s, read_calls_direct),
+                "aggregated" => zero_gather(name, read_sieved_mib_s, read_calls_sieved),
+                _ => {
+                    let st = read_once_stats(&path, ranks, sections, elems_per_rank, elem_bytes, tuning);
+                    ReadEngineProfile {
+                        name: name.to_string(),
+                        read_mib_s: mib(false, tuning),
+                        read_calls: st.iter().map(|(s, _)| s.read_calls).sum(),
+                        read_exchanges: st.iter().map(|(_, e)| e.read_exchanges).sum(),
+                        gathered_bytes: st.iter().map(|(_, e)| e.gathered_bytes).sum(),
+                        gather_preads: st.iter().map(|(_, e)| e.gather_preads).sum(),
+                    }
+                }
+            });
+        }
         std::fs::remove_file(&*path).ok();
         IoProfile {
             ranks,
@@ -630,6 +715,7 @@ pub mod io_bench {
             read_calls_direct,
             read_calls_sieved,
             engines,
+            read_engines,
         }
     }
 

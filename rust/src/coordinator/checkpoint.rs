@@ -251,8 +251,32 @@ pub fn read_checkpoint<C: Communicator>(
     part: &Partition,
     pre: &dyn Transform,
 ) -> Result<(CheckpointInfo, Vec<Field>)> {
-    let (mut ar, info) = open_checkpoint(comm, path)?;
+    read_checkpoint_tuned(comm, path, part, pre, &Metrics::new(), IoTuning::default())
+}
+
+/// [`read_checkpoint`] with explicit I/O engine knobs and metrics — the
+/// restore-side dual of [`write_checkpoint_tuned`]. A collective-read
+/// tuning ([`IoTuning::collective`]) routes the field windows through
+/// the stripe-owner read gather, so restore syscalls track bytes
+/// touched rather than rank count; the gather volume lands in
+/// `metrics.bytes_gathered` and the syscall shape in
+/// `metrics.read_calls`.
+pub fn read_checkpoint_tuned<C: Communicator>(
+    comm: C,
+    path: &Path,
+    part: &Partition,
+    pre: &dyn Transform,
+    metrics: &Metrics,
+    tuning: IoTuning,
+) -> Result<(CheckpointInfo, Vec<Field>)> {
+    let mut ar = Archive::open_with(comm, path, tuning, true)?;
+    let info = restart::read_manifest(&mut ar, None)?;
     let fields = restart::read_fields(&mut ar, &info, part, pre)?;
+    let io = ar.file().io_stats();
+    let engine = ar.file().engine_stats();
+    Metrics::add(&metrics.bytes_read, io.read_bytes);
+    Metrics::add(&metrics.read_calls, io.read_calls);
+    Metrics::add(&metrics.bytes_gathered, engine.gathered_bytes);
     ar.close()?;
     Ok((info, fields))
 }

@@ -20,6 +20,12 @@ pub struct Metrics {
     /// Bytes shipped to other ranks' stripes by the collective two-phase
     /// engine (0 for per-rank engines), per `ScdaFile::engine_stats`.
     pub bytes_shipped: AtomicU64,
+    /// Positional read syscalls issued by the file layer, per
+    /// `ScdaFile::io_stats` (restore paths record them).
+    pub read_calls: AtomicU64,
+    /// Bytes served to other ranks' read windows by the collective read
+    /// gather (0 for per-rank engines), per `ScdaFile::engine_stats`.
+    pub bytes_gathered: AtomicU64,
     pub elements_written: AtomicU64,
     pub sections_written: AtomicU64,
     pub chunks_skipped_incompressible: AtomicU64,
@@ -68,6 +74,8 @@ impl Metrics {
              \x20 compressed    {:>10.2} MiB  ({:.1} ms, {:.0} MiB/s, ratio {:.3})\n\
              \x20 written       {:>10.2} MiB  ({:.1} ms, {:.0} MiB/s, {} pwrites)\n\
              \x20 shipped       {:>10.2} MiB  (collective two-phase exchange)\n\
+             \x20 read          {:>10.2} MiB  ({} preads)\n\
+             \x20 gathered      {:>10.2} MiB  (collective read gather)\n\
              \x20 sections {}  elements {}  incompressible-chunks {}",
             mb(g(&self.bytes_in)),
             mb(g(&self.bytes_transformed)),
@@ -82,6 +90,9 @@ impl Metrics {
             bw(g(&self.bytes_written), g(&self.ns_write)),
             g(&self.write_calls),
             mb(g(&self.bytes_shipped)),
+            mb(g(&self.bytes_read)),
+            g(&self.read_calls),
+            mb(g(&self.bytes_gathered)),
             g(&self.sections_written),
             g(&self.elements_written),
             g(&self.chunks_skipped_incompressible),

@@ -9,8 +9,8 @@ pub mod rebalance;
 pub mod scheduler;
 
 pub use checkpoint::{
-    open_checkpoint, read_checkpoint, write_checkpoint, write_checkpoint_tuned, CheckpointInfo, Field, FieldInfo,
-    FieldPayload,
+    open_checkpoint, read_checkpoint, read_checkpoint_tuned, write_checkpoint, write_checkpoint_tuned,
+    CheckpointInfo, Field, FieldInfo, FieldPayload,
 };
 pub use metrics::Metrics;
 pub use pipeline::{map_ordered, PipelineOpts, Stage};

@@ -150,6 +150,9 @@ pub mod usage {
     pub const BUFFER_SIZE: i32 = 9;
     pub const NO_SUCH_DATASET: i32 = 10;
     pub const BAD_DATASET_NAME: i32 = 11;
+    /// An element range (`first`, `count`) reaches outside the dataset
+    /// (see `crate::archive::Archive::read_range`).
+    pub const BAD_RANGE: i32 = 12;
 }
 
 /// Translate an error code to a string, mirroring `scda_ferror_string`
@@ -185,6 +188,7 @@ pub fn ferror_string(code: i32) -> Option<&'static str> {
         c if c == 3000 + usage::BUFFER_SIZE => "usage: buffer size inconsistent with metadata",
         c if c == 3000 + usage::NO_SUCH_DATASET => "usage: no dataset with that name in the archive",
         c if c == 3000 + usage::BAD_DATASET_NAME => "usage: invalid or duplicate dataset name",
+        c if c == 3000 + usage::BAD_RANGE => "usage: element range outside the dataset",
         c if (3000..4000).contains(&c) => "semantically invalid input or call sequence",
         _ => return None,
     })

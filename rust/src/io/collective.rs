@@ -32,14 +32,30 @@
 //! already one syscall, and shipping them would only move bytes. The
 //! bypass drains this rank's staged extents locally first, preserving
 //! stage order without a collective.
+//!
+//! # The read gather (the write path's dual)
+//!
+//! Reads re-home the same way, in the opposite direction: at each
+//! collective data read ([`IoEngine::read_window`]) every rank announces
+//! its `(offset, length)` window with one allgather, the rank owning
+//! stripe `s = s mod P` issues **one `pread` per contiguous run of
+//! requested stripes** it owns, and the fragments scatter back to the
+//! requesting ranks over [`Communicator::alltoall_bytes`]. Read syscalls
+//! therefore track the *bytes touched* — the union of the requested
+//! windows — never the rank count or the section interleaving
+//! (`rust/tests/io_read_gather.rs` asserts the invariance, mirroring the
+//! write side). Identical requests from many ranks (catalog range reads,
+//! size-row windows) dedupe to a single owner-side read. A lone request
+//! of at least the staging capacity bypasses the exchange — the
+//! requester is already one syscall — and when an owner's `pread` fails,
+//! the failure ships in-band (a status byte ahead of the fragments), so
+//! the error surfaces on every rank instead of splitting the collective.
 
 use std::sync::Arc;
 
-use crate::error::{Result, ScdaError};
+use crate::error::{corrupt, Result, ScdaError};
 use crate::io::aggregate::WriteAggregator;
-use crate::io::engine::{
-    dispatch_runs, route_read_into, route_read_vec, route_view, AsyncFlusher, EngineStats, IoEngine,
-};
+use crate::io::engine::{dispatch_runs, EngineStats, IoEngine, StagedCore};
 use crate::io::sieve::ReadSieve;
 use crate::par::comm::Communicator;
 use crate::par::pfile::ParallelFile;
@@ -49,25 +65,25 @@ use crate::io::engine::DirectEngine;
 
 /// The collective two-phase engine; see the module docs.
 pub struct CollectiveEngine {
-    /// This rank's staged extents, in stage order.
-    agg: WriteAggregator,
-    /// Exchange threshold: a section boundary triggers the collective
-    /// exchange once any rank has staged at least half of this. Also the
-    /// large-write bypass bound.
-    capacity: usize,
+    /// The shared staging/routing core ([`StagedCore`]): this rank's
+    /// staged extents, the capacity (exchange threshold: a section
+    /// boundary triggers the exchange once any rank has staged at least
+    /// half of it; also the large-access bypass bound), the read sieve
+    /// and the optional background flusher.
+    core: StagedCore,
     /// Stripe size in bytes; stripe `s` is owned by rank `s % P`.
     stripe: u64,
-    sieve: Option<ReadSieve>,
-    scratch: Vec<u8>,
-    flusher: Option<AsyncFlusher>,
     shipped_bytes: u64,
     exchanges: u64,
-    flush_batches: u64,
     /// Bytes shipped in each exchange, in exchange order (ROADMAP's
     /// stripe-ownership follow-up wants this shape, not just the
     /// total). Bounded at [`SHIPPED_HISTORY_CAP`] most-recent entries so
     /// a long-lived file cannot grow it without limit.
     shipped_history: std::collections::VecDeque<u64>,
+    /// Read-gather counters (see [`EngineStats`]).
+    read_exchanges: u64,
+    gathered_bytes: u64,
+    gather_preads: u64,
 }
 
 /// Most-recent exchanges kept in [`EngineStats::shipped_per_exchange`];
@@ -78,29 +94,15 @@ pub const SHIPPED_HISTORY_CAP: usize = 1024;
 impl CollectiveEngine {
     pub fn new(capacity: usize, stripe_size: usize, sieve: Option<ReadSieve>, async_flush: bool) -> Self {
         CollectiveEngine {
-            agg: WriteAggregator::new(),
-            capacity,
+            core: StagedCore::new(capacity, sieve, async_flush),
             stripe: (stripe_size.max(1)) as u64,
-            sieve,
-            scratch: Vec::new(),
-            flusher: async_flush.then(AsyncFlusher::new),
             shipped_bytes: 0,
             exchanges: 0,
-            flush_batches: 0,
             shipped_history: std::collections::VecDeque::new(),
+            read_exchanges: 0,
+            gathered_bytes: 0,
+            gather_preads: 0,
         }
-    }
-
-    /// Write this rank's staged extents itself (merged runs), skipping the
-    /// exchange. Used for the large-write bypass and the drop path — both
-    /// byte-correct, since staged extents are this rank's own windows.
-    fn drain_staged_locally(&mut self, file: &Arc<ParallelFile>) -> Result<()> {
-        if self.agg.is_empty() {
-            return Ok(());
-        }
-        let runs = self.agg.take_runs();
-        self.flush_batches += 1;
-        dispatch_runs(&mut self.flusher, file, runs)
     }
 
     /// Phase one + two: split staged extents at stripe boundaries, ship
@@ -112,7 +114,7 @@ impl CollectiveEngine {
         let me = comm.rank();
         self.exchanges += 1;
         let shipped_before = self.shipped_bytes;
-        let extents = self.agg.take_extents();
+        let extents = self.core.agg.take_extents();
         let mut outgoing: Vec<Vec<u8>> = vec![Vec::new(); p];
         // This rank's fragments for its own stripes skip the wire — and
         // the copy: they stay borrowed views into `extents` until the
@@ -177,9 +179,180 @@ impl CollectiveEngine {
         }
         let runs = recv.take_runs();
         if !runs.is_empty() {
-            self.flush_batches += 1;
+            self.core.flush_batches += 1;
         }
-        dispatch_runs(&mut self.flusher, file, runs)
+        dispatch_runs(&mut self.core.flusher, file, runs)
+    }
+
+    /// The collective read gather; see the module docs. Every rank's
+    /// request is known to all after one allgather, so every branch
+    /// below is a pure function of collective inputs — the alltoall runs
+    /// on every rank or on none, and the returned synced flag is
+    /// identical everywhere.
+    fn read_gather(
+        &mut self,
+        file: &Arc<ParallelFile>,
+        offset: u64,
+        buf: &mut [u8],
+        comm: &dyn Communicator,
+    ) -> Result<bool> {
+        let p = comm.size();
+        let me = comm.rank();
+        if p == 1 {
+            // One rank owns every stripe: the gather degenerates to the
+            // local read (all requested stripes merge into one run).
+            if !buf.is_empty() {
+                self.gather_preads += 1;
+                file.read_at(offset, buf)?;
+            }
+            return Ok(false);
+        }
+        // Phase 0: announce every rank's request window.
+        let reqs = comm.allgather_u64_pair(offset, buf.len() as u64);
+        self.read_exchanges += 1;
+        let live: Vec<usize> = reqs.iter().enumerate().filter(|(_, r)| r.1 > 0).map(|(i, _)| i).collect();
+        if live.is_empty() {
+            // Nothing to read anywhere; the allgather already synced.
+            return Ok(true);
+        }
+        // Direct bypass: a lone large request gains nothing from
+        // re-homing — the requester is already one syscall. The outcome
+        // still crosses ranks (one flag allgather): a failed pread must
+        // error on *every* rank, exactly like the in-band status byte of
+        // the exchange path, or the collective would split.
+        if live.len() == 1 && reqs[live[0]].1 >= self.core.capacity as u64 {
+            let mut my_err: Option<ScdaError> = None;
+            if live[0] == me {
+                match file.read_at(offset, buf) {
+                    Ok(()) => self.gather_preads += 1,
+                    Err(e) => my_err = Some(e),
+                }
+            }
+            let any_failed =
+                comm.allgather_u64(u64::from(my_err.is_some())).into_iter().any(|v| v != 0);
+            if let Some(e) = my_err {
+                return Err(e);
+            }
+            if any_failed {
+                return Err(ScdaError::io(
+                    std::io::Error::other("peer pread failed"),
+                    "collective read gather failed on the bypassing requester rank",
+                ));
+            }
+            return Ok(true);
+        }
+        // Phase 1: this rank serves every request fragment falling in
+        // its owned stripes. Fragment spans merge into maximal
+        // contiguous runs — one `pread` each. Requests are usually
+        // disjoint rank windows, but overlapping ones (every rank asking
+        // for the same size-row window or catalog range) merge here too,
+        // which is exactly the P-fold read dedup.
+        let mut frags: Vec<(u64, u64, usize)> = Vec::new(); // (abs offset, len, requester)
+        for (r, &(ro, rl)) in reqs.iter().enumerate() {
+            let end = ro + rl;
+            let mut at = ro;
+            while at < end {
+                let stripe_idx = at / self.stripe;
+                let stripe_end = (stripe_idx + 1) * self.stripe;
+                let take = stripe_end.min(end) - at;
+                if (stripe_idx as usize) % p == me {
+                    frags.push((at, take, r));
+                }
+                at += take;
+            }
+        }
+        let mut spans: Vec<(u64, u64)> = frags.iter().map(|&(o, l, _)| (o, l)).collect();
+        spans.sort_unstable();
+        let mut merged: Vec<(u64, u64)> = Vec::new(); // (start, end)
+        for (o, l) in spans {
+            match merged.last_mut() {
+                Some((_, e)) if o <= *e => *e = (*e).max(o + l),
+                _ => merged.push((o, o + l)),
+            }
+        }
+        let mut runs: Vec<(u64, Vec<u8>)> = Vec::with_capacity(merged.len());
+        let mut read_err: Option<ScdaError> = None;
+        for (s, e) in &merged {
+            let mut b = vec![0u8; (e - s) as usize];
+            if read_err.is_none() {
+                match file.read_at(*s, &mut b) {
+                    Ok(()) => self.gather_preads += 1,
+                    Err(err) => read_err = Some(err),
+                }
+            }
+            runs.push((*s, b));
+        }
+        // Phase 2: scatter the fragments. The leading status byte keeps
+        // a failed pread collective: every rank still enters the
+        // alltoall and the error surfaces everywhere afterwards.
+        let status = u8::from(read_err.is_some());
+        let mut outgoing: Vec<Vec<u8>> = (0..p).map(|_| vec![status]).collect();
+        if read_err.is_none() {
+            for &(o, l, dest) in &frags {
+                let run = runs.partition_point(|(s, _)| *s <= o) - 1;
+                let (run_start, run_buf) = &runs[run];
+                let rel = (o - run_start) as usize;
+                let bytes = &run_buf[rel..rel + l as usize];
+                if dest == me {
+                    // Own fragments skip the wire.
+                    let at = (o - offset) as usize;
+                    buf[at..at + l as usize].copy_from_slice(bytes);
+                } else {
+                    let out = &mut outgoing[dest];
+                    out.extend_from_slice(&o.to_le_bytes());
+                    out.extend_from_slice(&l.to_le_bytes());
+                    out.extend_from_slice(bytes);
+                    self.gathered_bytes += l;
+                }
+            }
+        }
+        let incoming = comm.alltoall_bytes(outgoing);
+        if let Some(err) = read_err {
+            return Err(err);
+        }
+        for (src, payload) in incoming.iter().enumerate() {
+            if src == me {
+                continue;
+            }
+            let Some((&status, rest)) = payload.split_first() else {
+                return Err(ScdaError::corrupt(corrupt::TRUNCATED, "read-gather frame missing status byte"));
+            };
+            if status != 0 {
+                return Err(ScdaError::io(
+                    std::io::Error::other("peer pread failed"),
+                    "collective read gather failed on a stripe-owner rank",
+                ));
+            }
+            let mut at = 0usize;
+            while at < rest.len() {
+                if at + 16 > rest.len() {
+                    return Err(ScdaError::corrupt(corrupt::TRUNCATED, "malformed read-gather fragment frame"));
+                }
+                let o = u64::from_le_bytes(rest[at..at + 8].try_into().unwrap());
+                let l = u64::from_le_bytes(rest[at + 8..at + 16].try_into().unwrap()) as usize;
+                at += 16;
+                if at + l > rest.len() {
+                    return Err(ScdaError::corrupt(
+                        corrupt::TRUNCATED,
+                        "read-gather fragment shorter than its length field",
+                    ));
+                }
+                let rel = o.checked_sub(offset).map(|r| r as usize);
+                match rel {
+                    Some(rel) if rel + l <= buf.len() => {
+                        buf[rel..rel + l].copy_from_slice(&rest[at..at + l]);
+                    }
+                    _ => {
+                        return Err(ScdaError::corrupt(
+                            corrupt::TRUNCATED,
+                            "read-gather fragment outside the requested window",
+                        ))
+                    }
+                }
+                at += l;
+            }
+        }
+        Ok(true)
     }
 }
 
@@ -189,35 +362,36 @@ impl IoEngine for CollectiveEngine {
     }
 
     fn write(&mut self, file: &Arc<ParallelFile>, offset: u64, data: &[u8]) -> Result<()> {
-        let cap = self.capacity;
-        if cap == 0 || data.len() >= cap {
-            self.drain_staged_locally(file)?;
-            return file.write_at(offset, data);
-        }
         // The exchange needs a collective point, which the middle of a
-        // section is not — but staging must not grow with the section
-        // size. At the capacity (a hard cap, same policy as the
-        // aggregating engine), drain this rank's extents locally
-        // (own-window writes, always byte-correct): a giant section
-        // degrades to per-rank aggregation instead of unbounded memory,
-        // and normal sections still ship whole at the next boundary.
-        if self.agg.staged_bytes() + data.len() > cap {
-            self.drain_staged_locally(file)?;
-        }
-        self.agg.stage(offset, data);
-        Ok(())
+        // section is not — so mid-section policy is [`StagedCore`]'s:
+        // large writes bypass (staged extents drain locally first,
+        // preserving stage order without a collective), a write past the
+        // capacity spills locally (a giant section degrades to per-rank
+        // aggregation instead of unbounded memory), everything else
+        // stages until the next boundary ships it whole.
+        self.core.stage_write(file, offset, data)
     }
 
     fn view(&mut self, file: &Arc<ParallelFile>, offset: u64, len: usize) -> Result<&[u8]> {
-        route_view(self.sieve.as_mut(), &mut self.scratch, file, offset, len)
+        self.core.view(file, offset, len)
     }
 
     fn read_vec(&mut self, file: &Arc<ParallelFile>, offset: u64, len: usize) -> Result<Vec<u8>> {
-        route_read_vec(&mut self.sieve, file, offset, len)
+        self.core.read_vec(file, offset, len)
     }
 
     fn read_into(&mut self, file: &Arc<ParallelFile>, offset: u64, buf: &mut [u8]) -> Result<()> {
-        route_read_into(&mut self.sieve, file, offset, buf)
+        self.core.read_into(file, offset, buf)
+    }
+
+    fn read_window(
+        &mut self,
+        file: &Arc<ParallelFile>,
+        offset: u64,
+        buf: &mut [u8],
+        comm: &dyn Communicator,
+    ) -> Result<bool> {
+        self.read_gather(file, offset, buf, comm)
     }
 
     fn section_end(&mut self, file: &Arc<ParallelFile>, comm: &dyn Communicator) -> Result<bool> {
@@ -225,9 +399,9 @@ impl IoEngine for CollectiveEngine {
         // same maximum, so either every rank enters the alltoall or none
         // does — the collective call discipline is preserved by
         // construction.
-        let staged = self.agg.staged_bytes() as u64;
+        let staged = self.core.agg.staged_bytes() as u64;
         let max = comm.allgather_u64(staged).into_iter().max().unwrap_or(0);
-        if max >= (self.capacity as u64 / 2).max(1) {
+        if max >= (self.core.capacity as u64 / 2).max(1) {
             self.exchange(file, comm)?;
         }
         // The allgather above already synchronized every rank; the
@@ -240,26 +414,23 @@ impl IoEngine for CollectiveEngine {
         // (close after an explicit flush, read-mode retune), one
         // allgather replaces the pointless empty alltoall — and keeps
         // the `exchanges` counter honest.
-        let max = comm.allgather_u64(self.agg.staged_bytes() as u64).into_iter().max().unwrap_or(0);
+        let max =
+            comm.allgather_u64(self.core.agg.staged_bytes() as u64).into_iter().max().unwrap_or(0);
         if max > 0 {
             self.exchange(file, comm)?;
         }
-        match &mut self.flusher {
+        match &mut self.core.flusher {
             Some(fl) => fl.wait(),
             None => Ok(()),
         }
     }
 
     fn drain_local(&mut self, file: &Arc<ParallelFile>) -> Result<()> {
-        self.drain_staged_locally(file)?;
-        match &mut self.flusher {
-            Some(fl) => fl.wait(),
-            None => Ok(()),
-        }
+        self.core.drain_local(file)
     }
 
     fn take_error(&mut self) -> Option<ScdaError> {
-        self.flusher.as_ref().and_then(|fl| fl.try_take_error())
+        self.core.take_error()
     }
 
     fn stats(&self) -> EngineStats {
@@ -267,9 +438,12 @@ impl IoEngine for CollectiveEngine {
             engine: "collective",
             shipped_bytes: self.shipped_bytes,
             exchanges: self.exchanges,
-            flush_batches: self.flush_batches,
-            sieve_refills: self.sieve.as_ref().map(|s| s.refills()).unwrap_or(0),
+            flush_batches: self.core.flush_batches,
+            sieve_refills: self.core.sieve_refills(),
             shipped_per_exchange: self.shipped_history.iter().copied().collect(),
+            read_exchanges: self.read_exchanges,
+            gathered_bytes: self.gathered_bytes,
+            gather_preads: self.gather_preads,
         }
     }
 }
@@ -341,6 +515,117 @@ mod tests {
         for (i, chunk) in data.chunks(64).enumerate() {
             assert!(chunk.iter().all(|&b| b as usize == i % 4), "extent {i}");
         }
+        std::fs::remove_file(&*path).unwrap();
+    }
+
+    #[test]
+    fn read_gather_serial_degenerates_to_local_read() {
+        let path = tmp("gather-serial");
+        let f = Arc::new(ParallelFile::create(&SerialComm::new(), &path).unwrap());
+        let data: Vec<u8> = (0..256u32).map(|i| (i % 251) as u8).collect();
+        f.write_at(0, &data).unwrap();
+        let mut e = CollectiveEngine::new(1 << 20, 64, None, false);
+        let mut buf = vec![0u8; 100];
+        let synced = e.read_window(&f, 50, &mut buf, &SerialComm::new()).unwrap();
+        assert!(!synced, "no collective ran on one rank");
+        assert_eq!(buf, &data[50..150]);
+        let st = e.stats();
+        assert_eq!(st.gather_preads, 1);
+        assert_eq!((st.read_exchanges, st.gathered_bytes), (0, 0));
+        // An empty request issues nothing.
+        e.read_window(&f, 0, &mut [], &SerialComm::new()).unwrap();
+        assert_eq!(e.stats().gather_preads, 1);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn read_gather_scatters_windows_and_counts_stripes() {
+        // 4 ranks, 4 KiB file of 256-byte stripes: each rank requests a
+        // disjoint 1 KiB window. The union touches all 16 stripes, and
+        // at P = 4 adjacent stripes never share an owner, so the summed
+        // owner-side preads equal the touched-stripe count — while every
+        // rank still receives exactly its own window's bytes.
+        let path = Arc::new(tmp("gather-par"));
+        let data: Vec<u8> = (0..4096u32).map(|i| (i * 7 % 251) as u8).collect();
+        {
+            let f = ParallelFile::create(&SerialComm::new(), &*path).unwrap();
+            f.write_at(0, &data).unwrap();
+        }
+        let p = Arc::clone(&path);
+        let d = data.clone();
+        let stats = run_parallel(4, move |comm| {
+            let f = Arc::new(ParallelFile::open_read(&comm, &*p).unwrap());
+            let mut e = CollectiveEngine::new(1 << 20, 256, None, false);
+            let me = comm.rank();
+            let mut buf = vec![0u8; 1024];
+            let synced = e.read_window(&f, me as u64 * 1024, &mut buf, &comm).unwrap();
+            assert!(synced, "the gather's collectives synchronized the ranks");
+            assert_eq!(buf, &d[me * 1024..(me + 1) * 1024], "rank {me} window");
+            comm.barrier();
+            e.stats()
+        });
+        let preads: u64 = stats.iter().map(|s| s.gather_preads).sum();
+        assert_eq!(preads, 16, "one pread per touched 256-byte stripe");
+        // 3 of each rank's 4 owned stripes serve other ranks' windows.
+        let gathered: u64 = stats.iter().map(|s| s.gathered_bytes).sum();
+        assert_eq!(gathered, 4096 * 3 / 4);
+        assert!(stats.iter().all(|s| s.read_exchanges == 1));
+        std::fs::remove_file(&*path).unwrap();
+    }
+
+    #[test]
+    fn read_gather_dedupes_identical_requests() {
+        // Every rank requests the same 2 KiB window: owners read each
+        // touched stripe once and fan the copies out, so the summed
+        // preads stay the touched-stripe count — not P times it.
+        let path = Arc::new(tmp("gather-dedup"));
+        let data: Vec<u8> = (0..4096u32).map(|i| (i * 13 % 251) as u8).collect();
+        {
+            let f = ParallelFile::create(&SerialComm::new(), &*path).unwrap();
+            f.write_at(0, &data).unwrap();
+        }
+        let p = Arc::clone(&path);
+        let d = data.clone();
+        let stats = run_parallel(4, move |comm| {
+            let f = Arc::new(ParallelFile::open_read(&comm, &*p).unwrap());
+            let mut e = CollectiveEngine::new(1 << 20, 512, None, false);
+            let mut buf = vec![0u8; 2048];
+            e.read_window(&f, 1024, &mut buf, &comm).unwrap();
+            assert_eq!(buf, &d[1024..3072]);
+            comm.barrier();
+            e.stats()
+        });
+        let preads: u64 = stats.iter().map(|s| s.gather_preads).sum();
+        assert_eq!(preads, 4, "stripes touched by [1024, 3072) at 512-byte stripes");
+        std::fs::remove_file(&*path).unwrap();
+    }
+
+    #[test]
+    fn read_gather_lone_large_request_bypasses() {
+        let path = Arc::new(tmp("gather-bypass"));
+        let data = vec![0x5Au8; 8192];
+        {
+            let f = ParallelFile::create(&SerialComm::new(), &*path).unwrap();
+            f.write_at(0, &data).unwrap();
+        }
+        let p = Arc::clone(&path);
+        let stats = run_parallel(2, move |comm| {
+            let f = Arc::new(ParallelFile::open_read(&comm, &*p).unwrap());
+            // Capacity 1 KiB: rank 0's lone 8 KiB request is "large".
+            let mut e = CollectiveEngine::new(1024, 256, None, false);
+            let mut buf = vec![0u8; if comm.rank() == 0 { 8192 } else { 0 }];
+            let synced = e.read_window(&f, 0, &mut buf, &comm).unwrap();
+            assert!(synced);
+            if comm.rank() == 0 {
+                assert!(buf.iter().all(|&b| b == 0x5A));
+            }
+            comm.barrier();
+            (e.stats(), f.io_stats().read_calls)
+        });
+        assert_eq!(stats[0].0.gather_preads, 1, "one direct pread on the requester");
+        assert_eq!(stats[1].0.gather_preads, 0);
+        assert_eq!(stats[1].1, 0, "the non-requesting rank touched the file not at all");
+        assert!(stats.iter().all(|(s, _)| s.gathered_bytes == 0), "nothing shipped");
         std::fs::remove_file(&*path).unwrap();
     }
 

@@ -68,6 +68,20 @@ pub struct EngineStats {
     /// shape is what the smarter-stripe-ownership work needs: a uniform
     /// `s mod P` map shows up as consistently high per-exchange volume.
     pub shipped_per_exchange: Vec<u64>,
+    /// Collective read gathers performed — the read-side dual of
+    /// `exchanges` (0 for per-rank engines).
+    pub read_exchanges: u64,
+    /// Bytes this rank served to *other* ranks' read requests as a
+    /// stripe owner (read-side dual of `shipped_bytes`; 0 for per-rank
+    /// engines).
+    pub gathered_bytes: u64,
+    /// `pread`s this rank issued while serving collective read gathers:
+    /// one per contiguous run of requested stripes it owns, plus
+    /// single-requester bypass reads. Summed over ranks, this is a pure
+    /// function of the *bytes touched* — never of the rank count or the
+    /// section interleaving (`rust/tests/io_read_gather.rs` asserts
+    /// this, mirroring the write-side syscall invariant).
+    pub gather_preads: u64,
 }
 
 /// One write/read transport for an open scda file; see the module docs
@@ -92,6 +106,29 @@ pub trait IoEngine: Send {
     /// Read exactly `buf.len()` bytes at `offset` into a caller buffer
     /// (no allocation on the direct route).
     fn read_into(&mut self, file: &Arc<ParallelFile>, offset: u64, buf: &mut [u8]) -> Result<()>;
+
+    /// Collective window read: every rank of `comm` passes its own
+    /// request window (`buf` may be empty on ranks reading nothing —
+    /// they still participate, exactly like a skipped `want = false`
+    /// data call). The default is the per-rank [`Self::read_into`]
+    /// route; the collective engine overrides it with the stripe-owner
+    /// gather — the read-side dual of the two-phase write. Returns
+    /// whether the engine's own collectives already synchronized every
+    /// rank (so the caller may skip its section barrier); the value is
+    /// a pure function of collective inputs and therefore identical on
+    /// all ranks.
+    fn read_window(
+        &mut self,
+        file: &Arc<ParallelFile>,
+        offset: u64,
+        buf: &mut [u8],
+        _comm: &dyn Communicator,
+    ) -> Result<bool> {
+        if !buf.is_empty() {
+            self.read_into(file, offset, buf)?;
+        }
+        Ok(false)
+    }
 
     /// Collective hook invoked by every rank at each section boundary.
     /// Two-phase engines use it to agree — collectively — when to
@@ -232,6 +269,109 @@ pub(crate) fn route_read_into(
         }
     }
     file.read_at(offset, buf)
+}
+
+// ---------------------------------------------------------------------
+// StagedCore: the staging state shared by the buffering engines
+// ---------------------------------------------------------------------
+
+/// The write-staging and read-routing core shared near-verbatim by
+/// [`AggregatingEngine`] and [`crate::io::CollectiveEngine`], factored
+/// into one composed struct (the ROADMAP's consolidation item): staging
+/// capacity + [`WriteAggregator`] + optional background [`AsyncFlusher`]
+/// on the write side, sieve-or-direct routing on the read side. The
+/// aggregating engine is little more than this struct behind the trait;
+/// the collective engine composes it with the two-phase extent exchange
+/// (writes) and the stripe-owner gather (reads), so the staging policy
+/// and the sieve routing exist exactly once.
+pub(crate) struct StagedCore {
+    pub(crate) agg: WriteAggregator,
+    /// Staging capacity; 0 disables staging (direct writes, but sieved
+    /// reads — the two sides are independent). Also the large-access
+    /// bypass bound: accesses of at least this size are already one
+    /// syscall.
+    pub(crate) capacity: usize,
+    pub(crate) sieve: Option<ReadSieve>,
+    scratch: Vec<u8>,
+    pub(crate) flusher: Option<AsyncFlusher>,
+    /// Staged-run drain batches issued (sync or async).
+    pub(crate) flush_batches: u64,
+}
+
+impl StagedCore {
+    pub(crate) fn new(capacity: usize, sieve: Option<ReadSieve>, async_flush: bool) -> Self {
+        StagedCore {
+            agg: WriteAggregator::new(),
+            capacity,
+            sieve,
+            scratch: Vec::new(),
+            flusher: async_flush.then(AsyncFlusher::new),
+            flush_batches: 0,
+        }
+    }
+
+    /// Write this rank's staged extents itself (merged runs, stage
+    /// order), skipping any collective. Used for capacity spills, the
+    /// large-write bypass and the drop path — all byte-correct, since
+    /// staged extents are the rank's own window writes.
+    pub(crate) fn drain_staged_locally(&mut self, file: &Arc<ParallelFile>) -> Result<()> {
+        if self.agg.is_empty() {
+            return Ok(());
+        }
+        let runs = self.agg.take_runs();
+        self.flush_batches += 1;
+        dispatch_runs(&mut self.flusher, file, runs)
+    }
+
+    /// The shared write policy: writes of at least the capacity bypass
+    /// staging (they are already one syscall; staged extents drain first
+    /// to preserve stage order), a write that would overflow the buffer
+    /// spills it, everything else stages. For the collective engine the
+    /// spill means a giant section degrades to per-rank aggregation
+    /// instead of unbounded memory — normal sections still ship whole at
+    /// the next boundary.
+    pub(crate) fn stage_write(&mut self, file: &Arc<ParallelFile>, offset: u64, data: &[u8]) -> Result<()> {
+        let cap = self.capacity;
+        if cap == 0 || data.len() >= cap {
+            self.drain_staged_locally(file)?;
+            return file.write_at(offset, data);
+        }
+        if self.agg.staged_bytes() + data.len() > cap {
+            self.drain_staged_locally(file)?;
+        }
+        self.agg.stage(offset, data);
+        Ok(())
+    }
+
+    pub(crate) fn view(&mut self, file: &ParallelFile, offset: u64, len: usize) -> Result<&[u8]> {
+        route_view(self.sieve.as_mut(), &mut self.scratch, file, offset, len)
+    }
+
+    pub(crate) fn read_vec(&mut self, file: &ParallelFile, offset: u64, len: usize) -> Result<Vec<u8>> {
+        route_read_vec(&mut self.sieve, file, offset, len)
+    }
+
+    pub(crate) fn read_into(&mut self, file: &ParallelFile, offset: u64, buf: &mut [u8]) -> Result<()> {
+        route_read_into(&mut self.sieve, file, offset, buf)
+    }
+
+    /// Drain staged extents and wait out background work (the shared
+    /// `drain_local` of both staged engines).
+    pub(crate) fn drain_local(&mut self, file: &Arc<ParallelFile>) -> Result<()> {
+        self.drain_staged_locally(file)?;
+        match &mut self.flusher {
+            Some(fl) => fl.wait(),
+            None => Ok(()),
+        }
+    }
+
+    pub(crate) fn take_error(&self) -> Option<ScdaError> {
+        self.flusher.as_ref().and_then(|fl| fl.try_take_error())
+    }
+
+    pub(crate) fn sieve_refills(&self) -> u64 {
+        self.sieve.as_ref().map(|s| s.refills()).unwrap_or(0)
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -438,37 +578,16 @@ pub(crate) fn dispatch_runs(
 /// Per-rank write aggregation + read sieving (PR 2's transport) behind
 /// the engine trait: extents stage until the buffer would overflow, then
 /// merge into contiguous runs written with one syscall each — on the
-/// calling thread, or on the codec pool with `async_flush`.
+/// calling thread, or on the codec pool with `async_flush`. This is
+/// [`StagedCore`]'s policy verbatim; the struct only adds the trait
+/// plumbing.
 pub struct AggregatingEngine {
-    agg: WriteAggregator,
-    /// Staging capacity; 0 disables staging (direct writes, but sieved
-    /// reads — the two sides are independent).
-    capacity: usize,
-    sieve: Option<ReadSieve>,
-    scratch: Vec<u8>,
-    flusher: Option<AsyncFlusher>,
-    drains: u64,
+    core: StagedCore,
 }
 
 impl AggregatingEngine {
     pub fn new(capacity: usize, sieve: Option<ReadSieve>, async_flush: bool) -> Self {
-        AggregatingEngine {
-            agg: WriteAggregator::new(),
-            capacity,
-            sieve,
-            scratch: Vec::new(),
-            flusher: async_flush.then(AsyncFlusher::new),
-            drains: 0,
-        }
-    }
-
-    fn drain_staged(&mut self, file: &Arc<ParallelFile>) -> Result<()> {
-        if self.agg.is_empty() {
-            return Ok(());
-        }
-        let runs = self.agg.take_runs();
-        self.drains += 1;
-        dispatch_runs(&mut self.flusher, file, runs)
+        AggregatingEngine { core: StagedCore::new(capacity, sieve, async_flush) }
     }
 }
 
@@ -478,53 +597,38 @@ impl IoEngine for AggregatingEngine {
     }
 
     fn write(&mut self, file: &Arc<ParallelFile>, offset: u64, data: &[u8]) -> Result<()> {
-        let cap = self.capacity;
-        if cap == 0 || data.len() >= cap {
-            // Already one syscall's worth: drain staged extents first to
-            // preserve stage order, then write directly.
-            self.drain_staged(file)?;
-            return file.write_at(offset, data);
-        }
-        if self.agg.staged_bytes() + data.len() > cap {
-            self.drain_staged(file)?;
-        }
-        self.agg.stage(offset, data);
-        Ok(())
+        self.core.stage_write(file, offset, data)
     }
 
     fn view(&mut self, file: &Arc<ParallelFile>, offset: u64, len: usize) -> Result<&[u8]> {
-        route_view(self.sieve.as_mut(), &mut self.scratch, file, offset, len)
+        self.core.view(file, offset, len)
     }
 
     fn read_vec(&mut self, file: &Arc<ParallelFile>, offset: u64, len: usize) -> Result<Vec<u8>> {
-        route_read_vec(&mut self.sieve, file, offset, len)
+        self.core.read_vec(file, offset, len)
     }
 
     fn read_into(&mut self, file: &Arc<ParallelFile>, offset: u64, buf: &mut [u8]) -> Result<()> {
-        route_read_into(&mut self.sieve, file, offset, buf)
+        self.core.read_into(file, offset, buf)
     }
 
     fn flush(&mut self, file: &Arc<ParallelFile>, _comm: &dyn Communicator) -> Result<()> {
-        self.drain_local(file)
+        self.core.drain_local(file)
     }
 
     fn drain_local(&mut self, file: &Arc<ParallelFile>) -> Result<()> {
-        self.drain_staged(file)?;
-        match &mut self.flusher {
-            Some(fl) => fl.wait(),
-            None => Ok(()),
-        }
+        self.core.drain_local(file)
     }
 
     fn take_error(&mut self) -> Option<ScdaError> {
-        self.flusher.as_ref().and_then(|fl| fl.try_take_error())
+        self.core.take_error()
     }
 
     fn stats(&self) -> EngineStats {
         EngineStats {
             engine: "aggregated",
-            flush_batches: self.drains,
-            sieve_refills: self.sieve.as_ref().map(|s| s.refills()).unwrap_or(0),
+            flush_batches: self.core.flush_batches,
+            sieve_refills: self.core.sieve_refills(),
             ..EngineStats::default()
         }
     }

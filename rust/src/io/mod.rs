@@ -19,6 +19,11 @@
 //!   `Communicator::alltoall_bytes` to the aggregator rank owning each
 //!   file stripe, so each stripe is written by exactly one rank with one
 //!   syscall per contiguous run, regardless of section interleaving.
+//!   Reads run the same re-homing in reverse ([`IoEngine::read_window`],
+//!   the collective *read gather*): ranks announce their windows, stripe
+//!   owners `pread` one contiguous run of requested stripes each, and
+//!   fragments scatter back over the alltoall — read syscalls track
+//!   bytes touched, not rank count or interleaving.
 //!
 //! Any engine can additionally run its drains on the shared codec pool
 //! (`async_flush`): `pwrite`s overlap encoding, and errors surface at
@@ -114,7 +119,22 @@ impl IoTuning {
         }
     }
 
-    /// Two-phase collective buffering with the default knobs.
+    /// Two-phase collective buffering with the default knobs: writes
+    /// ship staged extents to stripe-owner ranks, reads run the
+    /// stripe-owner gather — both syscall shapes track bytes touched,
+    /// not rank count. The file bytes are identical to every other
+    /// tuning.
+    ///
+    /// ```
+    /// use scda::api::IoTuning;
+    /// use scda::io::IoEngineKind;
+    ///
+    /// let t = IoTuning::collective().with_stripe_size(64 << 10).with_async_flush(true);
+    /// assert_eq!(t.engine, IoEngineKind::Collective);
+    /// assert_eq!(t.stripe_size, 64 << 10);
+    /// assert!(t.async_flush);
+    /// // Apply per file: `ScdaFile::set_io_tuning(t)`.
+    /// ```
     pub fn collective() -> Self {
         IoTuning { engine: IoEngineKind::Collective, ..IoTuning::default() }
     }

@@ -7,6 +7,12 @@
 //! and a file can be read on any number of processes agreeing on any
 //! partition of the stored element counts.
 //!
+//! The byte-level format itself — the grammar every section obeys, the
+//! archive trailer conventions, and the invariants the tests assert — is
+//! specified implementation-independently in `SPEC.md` at the repository
+//! root; this crate documentation describes the *implementation* layered
+//! on top of it. The command-line tool is documented in `docs/cli.md`.
+//!
 //! The crate is layered exactly like the specification:
 //!
 //! * [`format`] — the byte-level layout of §2 (padding, count entries, the
@@ -125,6 +131,54 @@
 //!   and per exchange), exchanges, drain batches and sieve refills;
 //!   `BENCH_io.json` (f1/t2/t3 benches, smoke tests) tracks MiB/s and
 //!   syscall counts for all three engines, sync and async.
+//!
+//! # Collective reads & range reads
+//!
+//! Since PR 5 the freedom the I/O engines exploit is symmetric: *who
+//! issues a `pread` is as invisible in the returned bytes as who issued
+//! the `pwrite`*.
+//!
+//! * **The collective read gather** ([`io::IoEngine::read_window`],
+//!   implemented by [`io::CollectiveEngine`]) is the read-side dual of
+//!   the two-phase write. At every collective data read — array
+//!   windows, varray payloads, compressed blobs, size-row windows of
+//!   range reads — each rank announces its `(offset, length)` request
+//!   with one allgather; the rank owning stripe `s = s mod P` issues
+//!   **one `pread` per contiguous run of requested stripes** and
+//!   scatters the fragments to the requesting ranks over
+//!   `Communicator::alltoall_bytes`. Read syscalls therefore track the
+//!   *bytes touched* (the union of requested windows), never the rank
+//!   count or the section interleaving — `rust/tests/io_read_gather.rs`
+//!   asserts the invariance at P = 2/4/8, mirroring the write-side
+//!   syscall invariant. Skipped reads (`want = false`) participate with
+//!   empty requests, so the collective discipline is preserved; lone
+//!   large requests bypass the exchange (they are already one syscall);
+//!   identical requests from many ranks dedupe to a single owner-side
+//!   read; and a failed owner `pread` ships in-band so the error
+//!   surfaces on every rank. Per-rank engines serve the same hook
+//!   through their sieve routing — the file bytes returned are
+//!   identical under every engine (property-tested at 1/2/4/8 ranks).
+//! * **Catalog-seeded range reads**
+//!   ([`archive::Archive::read_range`] /
+//!   [`archive::Archive::read_varray_range`], CLI
+//!   `scda cat --range <name> <first> <count>`) read elements
+//!   `[first, first + count)` of a named dataset by seeding the window
+//!   from the catalog entry's `offset`/`byte_len` instead of replaying
+//!   the section stream: a raw fixed-size array touches *no size rows
+//!   at all* (the window is `payload + first·E`), and variable or
+//!   encoded datasets read only the size rows `[0, first + count)` that
+//!   the locating prefix sum requires — never a row at or past the
+//!   range end, never payload outside the window
+//!   (`rust/tests/archive_range.rs` asserts the byte counts via
+//!   [`par::pfile::IoStats`]). Every rank receives the range, and under
+//!   [`io::IoTuning::collective`] the identical per-rank requests
+//!   collapse into one stripe-owner read set.
+//! * **Observability.** [`io::EngineStats`] gains `read_exchanges`,
+//!   `gathered_bytes` and `gather_preads`; `BENCH_io.json` adds a
+//!   read-side engine sweep (`read_engine_*` entries), and restore
+//!   paths can record reads via
+//!   [`coordinator::checkpoint::read_checkpoint_tuned`]
+//!   (`Metrics::{read_calls, bytes_read, bytes_gathered}`).
 //!
 //! # Archive layer
 //!

@@ -52,6 +52,26 @@ pub trait Communicator: Send {
         u64::from_le_bytes(bytes.try_into().expect("bcast_u64 payload"))
     }
 
+    /// Gather one `(u64, u64)` pair from every rank, delivered to all —
+    /// the request-announcement primitive of the collective *read*
+    /// gather (`crate::io::collective`): each rank announces its
+    /// `(offset, length)` window, and every rank derives the same
+    /// stripe-serving plan from the identical gathered vector, so the
+    /// follow-up `alltoall_bytes` either runs on every rank or on none.
+    fn allgather_u64_pair(&self, a: u64, b: u64) -> Vec<(u64, u64)> {
+        let mut wire = Vec::with_capacity(16);
+        wire.extend_from_slice(&a.to_le_bytes());
+        wire.extend_from_slice(&b.to_le_bytes());
+        self.allgather_bytes(wire)
+            .into_iter()
+            .map(|v| {
+                let a = u64::from_le_bytes(v[..8].try_into().expect("u64-pair frame"));
+                let b = u64::from_le_bytes(v[8..16].try_into().expect("u64-pair frame"));
+                (a, b)
+            })
+            .collect()
+    }
+
     /// Personalized exchange (MPI_Alltoallv): `outgoing[d]` is delivered
     /// to rank `d`; returns `incoming`, where `incoming[s]` is the payload
     /// rank `s` addressed to this rank. `outgoing.len()` must equal
@@ -129,5 +149,11 @@ mod tests {
     fn alltoall_on_serial_is_identity() {
         let c = SerialComm::new();
         assert_eq!(c.alltoall_bytes(vec![vec![9, 8, 7]]), vec![vec![9, 8, 7]]);
+    }
+
+    #[test]
+    fn u64_pair_allgather_roundtrips() {
+        let c = SerialComm::new();
+        assert_eq!(c.allgather_u64_pair(12345, u64::MAX), vec![(12345, u64::MAX)]);
     }
 }

@@ -19,12 +19,24 @@ fn io_bench_quick_records_json() {
     // The acceptance shape: aggregation collapses the per-element write
     // storm by at least 5x.
     assert!(p.write_syscall_reduction() >= 5.0, "only {:.1}x fewer writes", p.write_syscall_reduction());
+    // Read-side sweep at 2 ranks: the gather actually exchanged.
+    let col = p.read_engines.iter().find(|e| e.name == "collective").expect("collective read profile");
+    assert!(col.read_exchanges >= 1, "gather never ran");
+    assert!(col.gathered_bytes > 0, "nothing crossed ranks in the gather");
+    let dir = p.read_engines.iter().find(|e| e.name == "direct").unwrap();
+    assert!(
+        col.read_calls <= dir.read_calls,
+        "gathered reads ({}) exceed direct reads ({})",
+        col.read_calls,
+        dir.read_calls
+    );
     let path = bench_io_json_path();
     p.report().write(&path).unwrap();
     let written = std::fs::read_to_string(&path).unwrap();
     assert!(written.contains("\"bench\": \"io\""));
     assert!(written.contains("varray_write"));
     assert!(written.contains("varray_read"));
+    assert!(written.contains("read_engine_collective"));
     println!(
         "io quick: write {:.0} -> {:.0} MiB/s ({} -> {} syscalls, {:.0}x), read {:.0} -> {:.0} MiB/s \
          ({} -> {} syscalls); wrote {}",
@@ -62,6 +74,19 @@ fn io_bench_harness_roundtrips_tiny_workload() {
         assert!(e.write_calls >= 1, "{}: no writes counted", e.name);
         assert!(e.write_mib_s > 0.0, "{}: no throughput", e.name);
     }
+    // The read-side sweep covers the three read routes with sane
+    // counters (ranks = 1 here: the gather degenerates to local preads,
+    // which must still be counted).
+    let rnames: Vec<&str> = p.read_engines.iter().map(|e| e.name.as_str()).collect();
+    for expected in ["direct", "aggregated", "collective"] {
+        assert!(rnames.contains(&expected), "read sweep missing {expected}: {rnames:?}");
+    }
+    for e in &p.read_engines {
+        assert!(e.read_calls >= 1, "{}: no reads counted", e.name);
+        assert!(e.read_mib_s > 0.0, "{}: no read throughput", e.name);
+    }
+    let col = p.read_engines.iter().find(|e| e.name == "collective").unwrap();
+    assert!(col.gather_preads >= 1, "the gather issues owner-side preads even on one rank");
     let r = p.report().render();
     assert!(r.contains("\"aggregated_write_calls\""));
     assert!(r.contains("\"sieved_read_calls\""));
@@ -69,4 +94,7 @@ fn io_bench_harness_roundtrips_tiny_workload() {
     assert!(r.contains("\"engine_collective\""));
     assert!(r.contains("\"engine_collective_async\""));
     assert!(r.contains("\"engine_direct\""));
+    assert!(r.contains("\"read_engine_direct\""));
+    assert!(r.contains("\"read_engine_collective\""));
+    assert!(r.contains("\"gather_preads\""));
 }

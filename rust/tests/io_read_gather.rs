@@ -1,0 +1,258 @@
+//! The collective read gather — the read-side dual of the two-phase
+//! collective write (`crate::io::collective`): payload reads route to
+//! stripe-owner ranks, so read syscalls track the *bytes touched*, not
+//! the rank count or the section interleaving, while every engine's
+//! reads stay byte-identical to the direct reference path.
+
+use scda::api::{DataSrc, EngineStats, IoTuning, ScdaFile};
+use scda::coordinator::checkpoint::{read_checkpoint, read_checkpoint_tuned, write_checkpoint};
+use scda::coordinator::Metrics;
+use scda::format::section::SectionKind;
+use scda::par::{run_parallel, Communicator, Partition, SerialComm};
+use scda::runtime::NativeTransform;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("scda-read-gather");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(format!("{name}-{}.scda", std::process::id()))
+}
+
+/// The interleaved workload of `io_engines.rs`: inline, block, fixed
+/// array (8-byte elements), then `sections` varrays of `elem_bytes`
+/// elements. Written serially — serial equivalence makes the bytes
+/// identical to any parallel writer, so the write side stays out of
+/// this test's way.
+fn write_workload(path: &PathBuf, sections: usize, elems_total: usize, elem_bytes: usize) {
+    let part = Partition::uniform(1, elems_total as u64);
+    let mut f = ScdaFile::create(SerialComm::new(), path, b"read-gather").unwrap();
+    f.set_sync_on_close(false);
+    f.set_io_tuning(IoTuning::direct()).unwrap();
+    f.write_inline(&[b'i'; 32], Some(b"inline")).unwrap();
+    let block: Vec<u8> = (0..300usize).map(|i| (i % 251) as u8).collect();
+    f.write_block_from(0, Some(&block), 300, Some(b"block"), false).unwrap();
+    let adata: Vec<u8> = (0..elems_total * 8).map(|i| (i % 251) as u8).collect();
+    f.write_array(DataSrc::Contiguous(&adata), &part, 8, Some(b"arr"), false).unwrap();
+    let vdata: Vec<u8> = (0..elems_total * elem_bytes).map(|i| (i * 7 % 251) as u8).collect();
+    let sizes = vec![elem_bytes as u64; elems_total];
+    for _ in 0..sections {
+        f.write_varray(DataSrc::Contiguous(&vdata), &part, &sizes, Some(b"var"), false).unwrap();
+    }
+    f.close().unwrap();
+}
+
+/// Read the whole workload back on `ranks` ranks; returns each rank's
+/// concatenated payloads and engine counters.
+fn read_all(
+    path: &Arc<PathBuf>,
+    ranks: usize,
+    sections: usize,
+    elems_total: usize,
+    tuning: IoTuning,
+) -> Vec<(Vec<u8>, EngineStats)> {
+    let path = Arc::clone(path);
+    run_parallel(ranks, move |comm| {
+        let part = Partition::uniform(ranks, elems_total as u64);
+        let mut f = ScdaFile::open(comm, &**path).unwrap();
+        f.set_io_tuning(tuning).unwrap();
+        let mut acc = Vec::new();
+        f.read_section_header(false).unwrap();
+        if let Some(d) = f.read_inline_data(0, true).unwrap() {
+            acc.extend_from_slice(&d);
+        }
+        f.read_section_header(false).unwrap();
+        if let Some(d) = f.read_block_data(0, true).unwrap() {
+            acc.extend_from_slice(&d);
+        }
+        f.read_section_header(false).unwrap();
+        acc.extend(f.read_array_data(&part, 8, true).unwrap().unwrap());
+        for _ in 0..sections {
+            f.read_section_header(false).unwrap();
+            let sizes = f.read_varray_sizes(&part).unwrap();
+            acc.extend(f.read_varray_data(&part, &sizes, true).unwrap().unwrap());
+        }
+        assert!(f.at_end().unwrap());
+        let st = f.engine_stats();
+        f.close().unwrap();
+        (acc, st)
+    })
+}
+
+/// Read-side byte identity: at 1, 2, 4 and 8 ranks, every engine's
+/// reads return exactly what the direct reference path returns.
+#[test]
+fn read_side_byte_identity_vs_direct_at_1_2_4_8_ranks() {
+    let (sections, elems) = (3usize, 64usize);
+    let path = Arc::new(tmp("identity"));
+    write_workload(&path, sections, elems, 48);
+    let configs: Vec<(&str, IoTuning)> = vec![
+        ("aggregated", IoTuning::default()),
+        ("collective", IoTuning::collective()),
+        ("collective_small_stripes", IoTuning::collective().with_stripe_size(4 << 10)),
+    ];
+    for ranks in [1usize, 2, 4, 8] {
+        let reference: Vec<Vec<u8>> = read_all(&path, ranks, sections, elems, IoTuning::direct())
+            .into_iter()
+            .map(|(d, _)| d)
+            .collect();
+        for (name, tuning) in &configs {
+            let got: Vec<Vec<u8>> =
+                read_all(&path, ranks, sections, elems, *tuning).into_iter().map(|(d, _)| d).collect();
+            assert_eq!(got, reference, "{name} reads differ from direct at ranks={ranks}");
+        }
+    }
+    std::fs::remove_file(&*path).unwrap();
+}
+
+/// The bytes-touched formula: one owner-side pread per stripe touched
+/// by each collective data window (adjacent stripes never share an
+/// owner at P >= 2), summed over the array payload and every varray
+/// payload region.
+fn expected_gather_preads(path: &PathBuf, stripe: u64, elem_bytes: u64) -> u64 {
+    let mut f = ScdaFile::open(SerialComm::new(), path).unwrap();
+    f.set_io_tuning(IoTuning::direct()).unwrap();
+    let toc = f.toc(false).unwrap();
+    f.close().unwrap();
+    let stripes = |off: u64, len: u64| {
+        if len == 0 {
+            0
+        } else {
+            (off + len - 1) / stripe - off / stripe + 1
+        }
+    };
+    let mut total = 0u64;
+    for e in &toc {
+        match e.header.kind {
+            // Raw A prefix: 64-byte type row + N row + E row.
+            SectionKind::Array => total += stripes(e.offset + 128, e.header.elem_count * e.header.elem_size),
+            // Raw V: 64 + 32 (N row) + N size rows precede the payload.
+            SectionKind::Varray => {
+                total += stripes(e.offset + 96 + e.header.elem_count * 32, e.header.elem_count * elem_bytes)
+            }
+            _ => {}
+        }
+    }
+    total
+}
+
+/// The acceptance invariant: the collective read-gather syscall count
+/// is identical at P = 2, 4 and 8 and across section interleavings of
+/// the same payload — it equals the touched-stripe formula, a pure
+/// function of the bytes read.
+#[test]
+fn gather_preads_track_bytes_touched_not_ranks_or_interleaving() {
+    const STRIPE: u64 = 4 << 10;
+    let tuning = IoTuning::collective().with_stripe_size(STRIPE as usize);
+    let mut per_shape = Vec::new();
+    // Two interleavings of the same varray payload: 4 sections x 128
+    // elements vs 8 sections x 64 elements, 64-byte elements.
+    for (shape, (sections, elems)) in [(4usize, 128usize), (8, 64)].into_iter().enumerate() {
+        let path = Arc::new(tmp(&format!("invariance-{shape}")));
+        write_workload(&path, sections, elems, 64);
+        let expected = expected_gather_preads(&path, STRIPE, 64);
+        let mut per_p = Vec::new();
+        for ranks in [2usize, 4, 8] {
+            let stats = read_all(&path, ranks, sections, elems, tuning);
+            let preads: u64 = stats.iter().map(|(_, e)| e.gather_preads).sum();
+            let exchanges: u64 = stats.iter().map(|(_, e)| e.read_exchanges).sum();
+            // One gather per collective data read on every rank: the
+            // array window plus one per varray section.
+            assert_eq!(exchanges, ((1 + sections) * ranks) as u64, "shape {shape} ranks {ranks}");
+            per_p.push(preads);
+        }
+        assert_eq!(per_p[0], per_p[1], "shape {shape}: preads must not depend on the rank count");
+        assert_eq!(per_p[1], per_p[2], "shape {shape}: preads must not depend on the rank count");
+        assert_eq!(per_p[0], expected, "shape {shape}: one pread per touched stripe");
+        per_shape.push((per_p[0], expected));
+        std::fs::remove_file(&*path).unwrap();
+    }
+    // Across interleavings the count follows the formula, never the
+    // shape: both shapes hold the same payload, and each matches its
+    // own touched-stripe count exactly.
+    for (got, expected) in per_shape {
+        assert_eq!(got, expected);
+    }
+}
+
+/// The gather moves bytes between ranks and beats the per-rank direct
+/// syscall count on interleaved reads.
+#[test]
+fn gather_ships_fragments_and_cuts_read_calls() {
+    let (sections, elems) = (4usize, 128usize);
+    let path = Arc::new(tmp("volume"));
+    write_workload(&path, sections, elems, 64);
+    let ranks = 4;
+    let gathered_stats = read_all(&path, ranks, sections, elems, IoTuning::collective().with_stripe_size(4 << 10));
+    let gathered: u64 = gathered_stats.iter().map(|(_, e)| e.gathered_bytes).sum();
+    assert!(gathered > 0, "interleaved windows must cross ranks");
+    let preads: u64 = gathered_stats.iter().map(|(_, e)| e.gather_preads).sum();
+    // The direct path issues one pread per logical access per rank;
+    // the gather's data-path count must be far below it.
+    let direct_data_reads = (ranks * (1 + sections)) as u64;
+    assert!(
+        preads <= direct_data_reads * 2,
+        "gather preads ({preads}) should stay near the per-window stripe count"
+    );
+    std::fs::remove_file(&*path).unwrap();
+}
+
+/// Restore through the collective read tuning: same fields as the
+/// default path, with the gather volume recorded in the metrics.
+#[test]
+fn checkpoint_restores_identically_through_the_gather() {
+    let path = tmp("ckpt-gather");
+    let leaves = scda::mesh::ring_mesh(3, 5, (0.5, 0.5), 0.3);
+    let n = leaves.len() as u64;
+    let rho = scda::mesh::fields::local_fixed_field(&leaves, 0..leaves.len(), 4);
+    let write_part = Arc::new(Partition::uniform(3, n));
+    let (p2, part2, rho2) = (path.clone(), Arc::clone(&write_part), rho.clone());
+    run_parallel(3, move |comm| {
+        let r = part2.local_range(comm.rank());
+        let flds = vec![scda::coordinator::Field {
+            name: "rho".into(),
+            encode: false,
+            precondition: false,
+            payload: scda::coordinator::FieldPayload::Fixed {
+                elem_size: 32,
+                data: rho2[(r.start * 32) as usize..(r.end * 32) as usize].to_vec(),
+            },
+        }];
+        write_checkpoint(comm, &p2, "gather-test", 1, &part2, &flds, &NativeTransform, &Metrics::new())
+            .unwrap();
+    });
+    let read_part = Arc::new(Partition::uniform(4, n));
+    let (pa, pb) = (path.clone(), path.clone());
+    let (parta, partb) = (Arc::clone(&read_part), Arc::clone(&read_part));
+    let default_fields = run_parallel(4, move |comm| {
+        read_checkpoint(comm, &pa, &parta, &NativeTransform).unwrap().1
+    });
+    let metrics = Arc::new(Metrics::new());
+    let m2 = Arc::clone(&metrics);
+    let gathered_fields = run_parallel(4, move |comm| {
+        read_checkpoint_tuned(
+            comm,
+            &pb,
+            &partb,
+            &NativeTransform,
+            &m2,
+            IoTuning::collective().with_stripe_size(4 << 10),
+        )
+        .unwrap()
+        .1
+    });
+    for (d, g) in default_fields.iter().zip(&gathered_fields) {
+        assert_eq!(d.len(), g.len());
+        for (fd, fg) in d.iter().zip(g) {
+            assert_eq!(fd.name, fg.name);
+            assert_eq!(fd.payload, fg.payload);
+        }
+    }
+    use std::sync::atomic::Ordering;
+    assert!(metrics.read_calls.load(Ordering::Relaxed) > 0);
+    assert!(
+        metrics.bytes_gathered.load(Ordering::Relaxed) > 0,
+        "a 4-rank restore through 4 KiB stripes must ship fragments"
+    );
+    std::fs::remove_file(&path).unwrap();
+}

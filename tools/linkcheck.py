@@ -1,0 +1,72 @@
+#!/usr/bin/env python3
+"""Offline markdown link checker for the repo's documentation.
+
+Usage: python3 tools/linkcheck.py FILE.md [FILE.md ...]
+
+Checks every inline markdown link `[text](target)` in the given files:
+
+* external targets (http/https/mailto) are skipped — CI must not
+  depend on network;
+* relative targets must exist on disk (resolved against the linking
+  file's directory);
+* `path#anchor` targets into markdown files must name a heading of the
+  target file (GitHub anchor rules, simplified: lowercase, punctuation
+  stripped, spaces to dashes).
+
+Exits nonzero listing every broken link.
+"""
+
+import pathlib
+import re
+import sys
+
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING = re.compile(r"#{1,6}\s+(.*)")
+
+
+def anchors(md: pathlib.Path) -> set:
+    out = set()
+    for line in md.read_text(encoding="utf-8").splitlines():
+        m = HEADING.match(line)
+        if not m:
+            continue
+        a = m.group(1).strip().lower()
+        a = re.sub(r"[`*_]", "", a)
+        a = re.sub(r"[^\w\- ]", "", a)
+        out.add(a.replace(" ", "-"))
+    return out
+
+
+def main(paths):
+    if not paths:
+        print("usage: linkcheck.py FILE.md [FILE.md ...]")
+        return 2
+    bad = []
+    checked = 0
+    for arg in paths:
+        p = pathlib.Path(arg)
+        if not p.exists():
+            bad.append(f"{p}: file not found")
+            continue
+        for m in LINK.finditer(p.read_text(encoding="utf-8")):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            checked += 1
+            base, _, frag = target.partition("#")
+            dest = (p.parent / base).resolve() if base else p.resolve()
+            if not dest.exists():
+                bad.append(f"{p}: broken link {target}")
+                continue
+            if frag and dest.suffix == ".md" and frag.lower() not in anchors(dest):
+                bad.append(f"{p}: missing anchor {target}")
+    for b in bad:
+        print(b)
+    if bad:
+        return 1
+    print(f"linkcheck: {len(paths)} file(s), {checked} relative link(s) OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
