@@ -70,9 +70,77 @@ def decode_count_entry(entry: bytes, letter: bytes) -> int:
     return int(digits)
 
 
-def compress_element(data: bytes, level: int = 9) -> bytes:
-    """§3.1 two-stage framing: be64 size + b'z' + zlib, then base64/76."""
-    stage1 = struct.pack(">Q", len(data)) + b"z" + zlib.compress(data, level)
+PRECOND_MAX_WIDTH = 32
+PRECOND_DELTA_FLAG = 0x80
+
+
+def precond_descriptor(width: int, delta: bool) -> int:
+    """One-byte wire descriptor after the b'p' marker (SPEC §5.4):
+    low 7 bits = element width, high bit = per-plane delta."""
+    if not 1 <= width <= PRECOND_MAX_WIDTH:
+        raise ValueError(f"preconditioning width {width} outside 1..={PRECOND_MAX_WIDTH}")
+    return width | (PRECOND_DELTA_FLAG if delta else 0)
+
+
+def precond_forward(data: bytes, width: int, delta: bool) -> bytes:
+    """Byte-plane shuffle by `width`, then optional per-plane wrapping
+    byte delta; the `len % width` tail passes through raw. Exactly
+    length-preserving (mirrors rust/src/codec/precondition.rs)."""
+    rows = len(data) // width
+    body = rows * width
+    if width == 1:
+        out = bytearray(data[:body])
+    else:
+        out = bytearray(body)
+        for k in range(width):
+            out[k * rows : (k + 1) * rows] = data[k:body:width]
+    if delta and rows:
+        for k in range(width):
+            plane = out[k * rows : (k + 1) * rows]
+            prev = 0
+            for i, cur in enumerate(plane):
+                plane[i] = (cur - prev) & 0xFF
+                prev = cur
+            out[k * rows : (k + 1) * rows] = plane
+    return bytes(out) + data[body:]
+
+
+def precond_inverse(data: bytes, width: int, delta: bool) -> bytes:
+    """Exact inverse of precond_forward: per-plane wrapping prefix sum,
+    then un-shuffle."""
+    rows = len(data) // width
+    body = rows * width
+    buf = bytearray(data)
+    if delta and rows:
+        for k in range(width):
+            acc = 0
+            for i in range(k * rows, (k + 1) * rows):
+                acc = (acc + buf[i]) & 0xFF
+                buf[i] = acc
+    if width > 1 and rows:
+        planes = bytes(buf[:body])
+        for k in range(width):
+            buf[k:body:width] = planes[k * rows : (k + 1) * rows]
+    return bytes(buf)
+
+
+def compress_element(data: bytes, level: int = 9, precondition=None) -> bytes:
+    """§3.1 two-stage framing: be64 size + b'z' + zlib, then base64/76.
+
+    With `precondition=(width, delta)` the frame is the SPEC §5.4
+    variant: b'p' + descriptor byte, and zlib holds the shuffled/delta'd
+    payload.
+    """
+    if precondition is None:
+        stage1 = struct.pack(">Q", len(data)) + b"z" + zlib.compress(data, level)
+    else:
+        width, delta = precondition
+        stage1 = (
+            struct.pack(">Q", len(data))
+            + b"p"
+            + bytes([precond_descriptor(width, delta)])
+            + zlib.compress(precond_forward(data, width, delta), level)
+        )
     code = base64.b64encode(stage1)
     lines = [code[i : i + 76] for i in range(0, len(code), 76)] or [b""]
     return b"".join(line + b"=\n" for line in lines)
@@ -87,8 +155,18 @@ def decompress_element(enc: bytes) -> bytes:
     code = b"".join(enc[78 * j : 78 * j + min(76, code_len - 76 * j)] for j in range(lines))
     stage1 = base64.b64decode(code, validate=True)
     (size,) = struct.unpack(">Q", stage1[:8])
-    assert stage1[8:9] == b"z", "missing z marker"
-    out = zlib.decompress(stage1[9:])
+    marker = stage1[8:9]
+    if marker == b"z":
+        out = zlib.decompress(stage1[9:])
+    elif marker == b"p":
+        # Self-describing preconditioned frame: the descriptor byte
+        # configures the inverse, no out-of-band state needed.
+        desc = stage1[9]
+        width = desc & ~PRECOND_DELTA_FLAG
+        assert 1 <= width <= PRECOND_MAX_WIDTH, f"bad precondition descriptor {desc:#04x}"
+        out = precond_inverse(zlib.decompress(stage1[10:]), width, bool(desc & PRECOND_DELTA_FLAG))
+    else:
+        raise AssertionError(f"missing z/p marker, got {marker!r}")
     assert len(out) == size, (len(out), size)
     return out
 
@@ -110,20 +188,20 @@ class ScdaWriter:
         self._type_row(b"I", user)
         self.f.write(data)
 
-    def write_block(self, data: bytes, user: bytes = b"", encode: bool = False) -> None:
+    def write_block(self, data: bytes, user: bytes = b"", encode: bool = False, precondition=None) -> None:
         if encode:
             self.write_inline(encode_count_entry(b"U", len(data)), CONV_BLOCK)
-            data = compress_element(data)
+            data = compress_element(data, precondition=precondition)
         self._type_row(b"B", user)
         self.f.write(encode_count_entry(b"E", len(data)))
         self.f.write(data)
         self.f.write(pad_data(len(data), data[-1:] if data else None))
 
-    def write_array(self, data: bytes, n: int, e: int, user: bytes = b"", encode: bool = False) -> None:
+    def write_array(self, data: bytes, n: int, e: int, user: bytes = b"", encode: bool = False, precondition=None) -> None:
         assert len(data) == n * e
         if encode:
             self.write_inline(encode_count_entry(b"U", e), CONV_ARRAY)
-            elems = [compress_element(data[i * e : (i + 1) * e]) for i in range(n)]
+            elems = [compress_element(data[i * e : (i + 1) * e], precondition=precondition) for i in range(n)]
             self._write_varray_raw(elems, user)
             return
         self._type_row(b"A", user)
@@ -132,11 +210,11 @@ class ScdaWriter:
         self.f.write(data)
         self.f.write(pad_data(len(data), data[-1:] if data else None))
 
-    def write_varray(self, elems: list[bytes], user: bytes = b"", encode: bool = False) -> None:
+    def write_varray(self, elems: list[bytes], user: bytes = b"", encode: bool = False, precondition=None) -> None:
         if encode:
             urows = b"".join(encode_count_entry(b"U", len(el)) for el in elems)
             self.write_array(urows, len(elems), COUNT_ENTRY, CONV_VARRAY)
-            elems = [compress_element(el) for el in elems]
+            elems = [compress_element(el, precondition=precondition) for el in elems]
         self._write_varray_raw(elems, user)
 
     def _write_varray_raw(self, elems: list[bytes], user: bytes) -> None:

@@ -15,6 +15,8 @@ from scda_py.format import (
     encode_count_entry,
     pad_data,
     pad_str,
+    precond_forward,
+    precond_inverse,
     unpad_str,
 )
 
@@ -122,6 +124,64 @@ def test_element_framing():
         for j in range(0, len(enc), 78):
             line = enc[j : j + 78]
             assert line.endswith(b"=\n") or len(line) < 78
+
+
+def test_precondition_transform_roundtrips():
+    import struct as s
+
+    payloads = [
+        b"",
+        b"x",
+        s.pack("<1000I", *range(0, 3000, 3)),
+        bytes(i * 7 % 251 for i in range(777)),  # length coprime to widths
+    ]
+    for width in (1, 2, 4, 8, 32):
+        for delta in (False, True):
+            for p in payloads:
+                t = precond_forward(p, width, delta)
+                assert len(t) == len(p)
+                assert precond_inverse(t, width, delta) == p
+                # Tail bytes (len % width) pass through raw.
+                body = len(p) // width * width
+                assert t[body:] == p[body:]
+
+
+def test_preconditioned_frames_roundtrip_and_are_wire_visible():
+    import struct as s
+
+    data = s.pack("<500Q", *range(1000, 1500))
+    enc = compress_element(data, precondition=(8, True))
+    assert enc.isascii()
+    assert decompress_element(enc) == data
+    # Stage 1 bytes 8..10 are the marker + self-describing descriptor.
+    import base64 as b64
+
+    lines = max(1, -(-len(enc) // 78))
+    code = b"".join(enc[78 * j : 78 * j + 76] for j in range(lines))
+    stage1 = b64.b64decode(code[: len(enc) - 2 * lines])
+    assert stage1[8:10] == b"p" + bytes([8 | 0x80])
+    with pytest.raises(ValueError):
+        compress_element(data, precondition=(0, False))
+    with pytest.raises(ValueError):
+        compress_element(data, precondition=(33, True))
+
+
+def test_preconditioned_sections_roundtrip():
+    block = bytes((i * 13) % 256 for i in range(5000))
+    arr = b"".join(i.to_bytes(4, "little") for i in range(256))
+    elems = [bytes((j * i) % 256 for j in range(n)) for i, n in enumerate((0, 64, 500))]
+
+    def write(w):
+        w.write_block(block, b"pb", encode=True, precondition=(1, True))
+        w.write_array(arr, 256, 4, b"pa", encode=True, precondition=(4, True))
+        w.write_varray(elems, b"pv", encode=True, precondition=(8, False))
+
+    _, r = roundtrip_file(write)
+    assert ("B", b"pb", block) == r.next_section()
+    kind, user, got = r.next_section()
+    assert (kind, user) == ("A", b"pa") and b"".join(got) == arr
+    assert ("V", b"pv", elems) == r.next_section()
+    assert r.at_end()
 
 
 def test_marker_byte_verified():

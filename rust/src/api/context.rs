@@ -121,6 +121,11 @@ pub struct ScdaFile<C: Communicator> {
     pub(crate) engine: Box<dyn IoEngine>,
     /// Set by `close`; guards the drop-path drain.
     pub(crate) closed: bool,
+    /// True while a lockstep whole-file scan (`toc_scan`) runs: every
+    /// rank is known to issue identical metadata reads, so they route
+    /// through the collective window read and the gathering engine
+    /// dedupes the P identical header preads to one owner-side read.
+    pub(crate) lockstep_scan: bool,
 }
 
 impl<C: Communicator> std::fmt::Debug for ScdaFile<C> {
@@ -158,6 +163,7 @@ impl<C: Communicator> ScdaFile<C> {
             tuning,
             engine,
             closed: false,
+            lockstep_scan: false,
         };
         // The file header is just the first staged extent: it coalesces
         // with the first section's rows into one write.
@@ -192,6 +198,7 @@ impl<C: Communicator> ScdaFile<C> {
             tuning,
             engine,
             closed: false,
+            lockstep_scan: false,
         })
     }
 
@@ -224,6 +231,21 @@ impl<C: Communicator> ScdaFile<C> {
     pub fn set_level(&mut self, level: u8) -> &mut Self {
         self.codec.level = level.min(9);
         self
+    }
+
+    /// Configure the shuffle/delta preconditioning stage (SPEC §5.4) for
+    /// subsequent `encode = true` writes; `None` (the default) writes
+    /// plain `'z'` frames. The stage is format-visible and
+    /// self-describing — readers need no matching call — and the archive
+    /// layer records it per dataset in the catalog so tools can report it.
+    pub fn set_precondition(&mut self, p: Option<crate::codec::Precond>) -> &mut Self {
+        self.codec.precondition = p;
+        self
+    }
+
+    /// The preconditioning stage currently applied to encoded writes.
+    pub fn precondition(&self) -> Option<crate::codec::Precond> {
+        self.codec.precondition
     }
 
     /// Configure how the per-element codec runs (serial, the shared
@@ -293,6 +315,13 @@ impl<C: Communicator> ScdaFile<C> {
     /// per the engine's policy).
     pub(crate) fn stage_write(&mut self, offset: u64, data: &[u8]) -> Result<()> {
         self.engine.write(&self.file, offset, data)
+    }
+
+    /// [`Self::stage_write`] relinquishing the buffer: staging engines
+    /// move it into the aggregator without a memcpy (the zero-copy path
+    /// for codec-materialized payloads).
+    pub(crate) fn stage_write_owned(&mut self, offset: u64, data: Vec<u8>) -> Result<()> {
+        self.engine.write_owned(&self.file, offset, data)
     }
 
     /// The collective section boundary: gives the engine its collective

@@ -54,7 +54,20 @@ impl<C: Communicator> ScdaFile<C> {
     /// files without a footer index): walk every section header from the
     /// current cursor. The archive layer calls this directly when asked
     /// to bypass the index.
+    ///
+    /// The scan runs in *lockstep* mode: the cursor is shared state, so
+    /// every rank issues the identical sequence of header and size-row
+    /// reads — which lets them route through the collective window read,
+    /// where the gathering engine dedupes the P identical preads to one
+    /// owner-side read set per window instead of P× header preads.
     pub(crate) fn toc_scan(&mut self, decode: bool) -> Result<Vec<TocEntry>> {
+        self.lockstep_scan = true;
+        let out = self.toc_scan_inner(decode);
+        self.lockstep_scan = false;
+        out
+    }
+
+    fn toc_scan_inner(&mut self, decode: bool) -> Result<Vec<TocEntry>> {
         let mut entries = Vec::new();
         while !self.at_end()? {
             let offset = self.cursor;

@@ -94,14 +94,28 @@ impl<C: Communicator> ScdaFile<C> {
             return Err(ScdaError::corrupt(corrupt::TRUNCATED, "no further section in file"));
         }
         let take = (flen - off).min(SECTION_PREFIX_MAX as u64) as usize;
+        if self.lockstep_scan {
+            // Lockstep scan (`toc_scan`): every rank requests this exact
+            // window, so the collective read gather serves it with one
+            // owner-side pread instead of P identical ones.
+            let mut buf = vec![0u8; take];
+            self.window_read(off, &mut buf)?;
+            return parse_section_prefix(&buf);
+        }
         parse_section_prefix(self.engine.view(&self.file, off, take)?)
     }
 
     /// Read `len` bytes at `off` through the engine: small reads are
     /// served from the sieve window, large ones (or all reads on the
     /// direct engine) go straight to the file into an exactly-sized
-    /// buffer.
+    /// buffer. During a lockstep scan the read is collective instead
+    /// (identical requests on every rank — see `parse_prefix_at`).
     fn read_sieved(&mut self, off: u64, len: usize) -> Result<Vec<u8>> {
+        if self.lockstep_scan {
+            let mut buf = vec![0u8; len];
+            self.window_read(off, &mut buf)?;
+            return Ok(buf);
+        }
         self.engine.read_vec(&self.file, off, len)
     }
 

@@ -91,6 +91,24 @@ impl<'a> DataSrc<'a> {
     }
 }
 
+/// A rank-local payload on its way into the engine: borrowed caller data
+/// (staged by copy, as before), or an owned buffer — codec output — that
+/// rides [`crate::io::IoEngine::write_owned`] and reaches the aggregator
+/// without a staging memcpy.
+enum Staged<'a> {
+    Src(DataSrc<'a>),
+    Blob(Vec<u8>),
+}
+
+impl Staged<'_> {
+    fn last_byte(&self) -> Option<u8> {
+        match self {
+            Staged::Src(d) => d.last_byte(),
+            Staged::Blob(b) => b.last().copied(),
+        }
+    }
+}
+
 impl<C: Communicator> ScdaFile<C> {
     // ------------------------------------------------------------------
     // Inline sections (§2.3, §A.4.1 — MPI_Bcast semantics)
@@ -168,9 +186,9 @@ impl<C: Communicator> ScdaFile<C> {
                 None
             };
             let clen = self.comm.bcast_u64(root, compressed.as_ref().map(|c| c.len() as u64));
-            return self.write_block_raw(root, compressed.as_deref(), clen, user);
+            return self.write_block_raw(root, compressed.map(Staged::Blob), clen, user);
         }
-        self.write_block_raw(root, data, len, user)
+        self.write_block_raw(root, data.map(|d| Staged::Src(DataSrc::Contiguous(d))), len, user)
     }
 
     /// Convenience: block data replicated on all ranks, root 0, raw.
@@ -178,7 +196,13 @@ impl<C: Communicator> ScdaFile<C> {
         self.write_block_from(0, Some(data), data.len() as u64, user, false)
     }
 
-    fn write_block_raw(&mut self, root: usize, data: Option<&[u8]>, len: u64, user: &[u8]) -> Result<()> {
+    fn write_block_raw(
+        &mut self,
+        root: usize,
+        data: Option<Staged<'_>>,
+        len: u64,
+        user: &[u8],
+    ) -> Result<()> {
         let meta = SectionMeta::block(user, len as u128);
         let mut head = encode_type_row(SectionKind::Block, user, self.style)?;
         encode_count(&mut head, b'E', len as u128, self.style)?;
@@ -188,9 +212,10 @@ impl<C: Communicator> ScdaFile<C> {
         let data_off = self.cursor + meta.header_len() as u64;
         if self.comm.rank() == root {
             let d = data.unwrap();
-            self.stage_write(data_off, d)?;
+            let last = d.last_byte();
+            self.write_windows(data_off, d, std::iter::once(len))?;
             let mut pad = Vec::new();
-            pad_data(&mut pad, len as u128, d.last().copied(), self.style);
+            pad_data(&mut pad, len as u128, last, self.style);
             self.stage_write(data_off + len, &pad)?;
         }
         self.section_end()?;
@@ -230,7 +255,7 @@ impl<C: Communicator> ScdaFile<C> {
             encode_count(&mut u_entry, b'U', elem_size as u128, self.style)?;
             self.write_inline_from(0, Some(&u_entry), Some(CONV_ARRAY))?;
             let (sizes, blob) = self.encode_local_elements(&data, std::iter::repeat(elem_size).take(np as usize))?;
-            return self.write_varray_raw(DataSrc::Contiguous(&blob), part, &sizes, user);
+            return self.write_varray_raw(Staged::Blob(blob), part, &sizes, user);
         }
         let meta = SectionMeta::array(user, part.total() as u128, elem_size as u128);
         let mut head = encode_type_row(SectionKind::Array, user, self.style)?;
@@ -241,7 +266,11 @@ impl<C: Communicator> ScdaFile<C> {
         }
         let data_off = self.cursor + meta.header_len() as u64;
         let my_off = data_off + part.offset(self.comm.rank()) * elem_size;
-        self.write_windows(my_off, &data, std::iter::repeat(elem_size).take(np as usize))?;
+        self.write_windows(
+            my_off,
+            Staged::Src(data),
+            std::iter::repeat(elem_size).take(np as usize),
+        )?;
         // Rank 0 writes the single trailing padding; its contents depend
         // on the globally last data byte.
         let total = part.total() * elem_size;
@@ -304,16 +333,16 @@ impl<C: Communicator> ScdaFile<C> {
                 false,
             )?;
             let (sizes, blob) = self.encode_local_elements(&data, local_sizes.iter().copied())?;
-            return self.write_varray_raw(DataSrc::Contiguous(&blob), part, &sizes, user);
+            return self.write_varray_raw(Staged::Blob(blob), part, &sizes, user);
         }
-        self.write_varray_raw(data, part, local_sizes, user)
+        self.write_varray_raw(Staged::Src(data), part, local_sizes, user)
     }
 
     /// The shared V-section writer: header by rank 0, per-rank size rows,
     /// per-rank data windows, padding by rank 0.
     fn write_varray_raw(
         &mut self,
-        data: DataSrc<'_>,
+        data: Staged<'_>,
         part: &Partition,
         local_sizes: &[u64],
         user: &[u8],
@@ -342,8 +371,9 @@ impl<C: Communicator> ScdaFile<C> {
         let my_byte_off: u64 = sq[..my_rank].iter().sum();
         let total_bytes: u64 = sq.iter().sum();
         let data_off = erows_off + n * COUNT_ENTRY_BYTES as u64;
-        self.write_windows(data_off + my_byte_off, &data, local_sizes.iter().copied())?;
-        let last = self.gather_last_byte(data.last_byte());
+        let last_local = data.last_byte();
+        self.write_windows(data_off + my_byte_off, data, local_sizes.iter().copied())?;
+        let last = self.gather_last_byte(last_local);
         if self.comm.rank() == 0 {
             let mut pad = Vec::new();
             pad_data(&mut pad, total_bytes as u128, last, self.style);
@@ -434,23 +464,30 @@ impl<C: Communicator> ScdaFile<C> {
     /// the aggregator: an `Indirect` element list gathers into contiguous
     /// staged runs, so scattered in-memory elements reach the file with
     /// one syscall per run — the `pwritev` effect — instead of one per
-    /// element.
+    /// element. An owned blob (codec output) is *moved* into the engine
+    /// instead, skipping the staging memcpy entirely.
     fn write_windows(
         &mut self,
         offset: u64,
-        data: &DataSrc<'_>,
+        data: Staged<'_>,
         sizes: impl Iterator<Item = u64>,
     ) -> Result<()> {
         match data {
-            DataSrc::Contiguous(b) => {
+            Staged::Blob(b) => {
+                if !b.is_empty() {
+                    self.stage_write_owned(offset, b)?;
+                }
+                Ok(())
+            }
+            Staged::Src(DataSrc::Contiguous(b)) => {
                 if !b.is_empty() {
                     self.stage_write(offset, b)?;
                 }
                 Ok(())
             }
-            DataSrc::Indirect(_) => {
+            Staged::Src(src @ DataSrc::Indirect(_)) => {
                 let mut at = offset;
-                data.for_each_element(sizes, |elem| {
+                src.for_each_element(sizes, |elem| {
                     if !elem.is_empty() {
                         self.stage_write(at, elem)?;
                     }

@@ -214,6 +214,7 @@ impl<C: Communicator> Archive<C> {
             elem_count: 0,
             elem_size: 0,
             encoded: false,
+            precondition: None,
         });
         Ok(())
     }
@@ -237,6 +238,7 @@ impl<C: Communicator> Archive<C> {
             elem_count: 0,
             elem_size: len,
             encoded: encode,
+            precondition: if encode { self.file.precondition() } else { None },
         });
         Ok(())
     }
@@ -261,6 +263,7 @@ impl<C: Communicator> Archive<C> {
             elem_count: part.total(),
             elem_size,
             encoded: encode,
+            precondition: if encode { self.file.precondition() } else { None },
         });
         Ok(())
     }
@@ -285,6 +288,7 @@ impl<C: Communicator> Archive<C> {
             elem_count: part.total(),
             elem_size: 0,
             encoded: encode,
+            precondition: if encode { self.file.precondition() } else { None },
         });
         Ok(())
     }

@@ -41,6 +41,10 @@ pub struct DatasetInfo {
     /// Whether the dataset was written with the §3 compression
     /// convention.
     pub encoded: bool,
+    /// The shuffle/delta preconditioning stage the dataset's encoded
+    /// frames carry (SPEC §5.4), if any. Advisory: the frames are
+    /// self-describing, so this only saves tools a data read.
+    pub precondition: Option<crate::codec::Precond>,
 }
 
 impl DatasetInfo {
@@ -114,7 +118,7 @@ pub fn render_catalog(entries: &[DatasetInfo]) -> Vec<u8> {
     s.push_str(&format!("count {}\n", entries.len()));
     for e in entries {
         s.push_str(&format!(
-            "dataset name={} kind={} off={} len={} n={} e={} z={}\n",
+            "dataset name={} kind={} off={} len={} n={} e={} z={}",
             e.name,
             kind_letter(e.kind),
             e.offset,
@@ -123,6 +127,13 @@ pub fn render_catalog(entries: &[DatasetInfo]) -> Vec<u8> {
             e.elem_size,
             e.encoded as u8
         ));
+        // Optional key, omitted when absent: catalogs without it parse
+        // under this reader and catalogs with it parse under older
+        // readers (unknown keys are skipped).
+        if let Some(p) = e.precondition {
+            s.push_str(&format!(" p={p}"));
+        }
+        s.push('\n');
     }
     s.into_bytes()
 }
@@ -162,6 +173,7 @@ pub fn parse_catalog(bytes: &[u8]) -> Result<Vec<DatasetInfo>> {
         let mut n = None;
         let mut e = None;
         let mut z = None;
+        let mut precondition = None;
         for tok in body.split_whitespace() {
             let (k, val) = tok.split_once('=').ok_or_else(|| bad(format!("bad catalog token {tok:?}")))?;
             let parse_u64 = |what: &str| -> Result<u64> {
@@ -183,6 +195,12 @@ pub fn parse_catalog(bytes: &[u8]) -> Result<Vec<DatasetInfo>> {
                         _ => return Err(bad(format!("bad z value {val:?} in catalog"))),
                     })
                 }
+                "p" => {
+                    precondition = Some(
+                        val.parse()
+                            .map_err(|_| bad(format!("bad p value {val:?} in catalog")))?,
+                    )
+                }
                 _ => {} // forward compatibility: unknown keys are ignored
             }
         }
@@ -200,6 +218,7 @@ pub fn parse_catalog(bytes: &[u8]) -> Result<Vec<DatasetInfo>> {
             elem_count: n,
             elem_size: e,
             encoded: z,
+            precondition,
         });
     }
     if entries.len() != declared {
@@ -222,6 +241,7 @@ mod tests {
                 elem_count: 100,
                 elem_size: 40,
                 encoded: true,
+                precondition: Some(crate::codec::Precond::new(8, true).unwrap()),
             },
             DatasetInfo {
                 name: "ckpt/7/hp".into(),
@@ -231,6 +251,7 @@ mod tests {
                 elem_count: 3,
                 elem_size: 0,
                 encoded: false,
+                precondition: None,
             },
         ]
     }

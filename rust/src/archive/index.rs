@@ -163,6 +163,9 @@ pub fn scan<C: Communicator>(file: &mut ScdaFile<C>) -> Result<Vec<DatasetInfo>>
             elem_count: e.header.elem_count,
             elem_size: e.header.elem_size,
             encoded: e.header.decoded,
+            // Headers don't carry the frame marker; scan discovery leaves
+            // the advisory field unset (frames still self-describe).
+            precondition: None,
         });
     }
     Ok(out)

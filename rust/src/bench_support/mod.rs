@@ -267,6 +267,47 @@ pub mod codec_bench {
         pub write_pooled: f64,
         pub read_serial: f64,
         pub read_pooled: f64,
+        /// Encoded-size effect of the §5.4 preconditioning stage.
+        pub precond: PrecondGain,
+    }
+
+    /// Encoded-size gain of the SPEC §5.4 preconditioning stage (8-byte
+    /// shuffle + per-plane delta) on the AMR f64 corpus — deterministic
+    /// byte counts, not timings, so the entry is stable across machines.
+    #[derive(Debug, Clone)]
+    pub struct PrecondGain {
+        pub payload_bytes: u64,
+        pub plain_bytes: u64,
+        pub precond_bytes: u64,
+    }
+
+    impl PrecondGain {
+        /// How many times smaller the preconditioned frames are.
+        pub fn size_ratio(&self) -> f64 {
+            self.plain_bytes as f64 / self.precond_bytes as f64
+        }
+
+        /// Encode the AMR f64 corpus element-wise with and without the
+        /// `Precond::new(8, true)` transform and compare total frame
+        /// bytes.
+        pub fn measure(total_bytes: usize, elem_bytes: usize) -> PrecondGain {
+            use crate::codec::frame::{encode_element, CodecOptions};
+            let data = super::corpus(total_bytes)
+                .into_iter()
+                .find(|(n, _)| *n == "amr-f64")
+                .expect("amr corpus")
+                .1;
+            let pre = CodecOptions {
+                precondition: Some(crate::codec::Precond::new(8, true).unwrap()),
+                ..CodecOptions::default()
+            };
+            let (mut plain_bytes, mut precond_bytes) = (0u64, 0u64);
+            for chunk in data.chunks(elem_bytes.max(1)) {
+                plain_bytes += encode_element(chunk, CodecOptions::default()).len() as u64;
+                precond_bytes += encode_element(chunk, pre).len() as u64;
+            }
+            PrecondGain { payload_bytes: data.len() as u64, plain_bytes, precond_bytes }
+        }
     }
 
     impl CodecThroughput {
@@ -296,6 +337,14 @@ pub mod codec_bench {
                     ("speedup", JsonVal::Num(pooled / serial)),
                 ]);
             }
+            let g = &self.precond;
+            r.entry(vec![
+                ("name", JsonVal::Str("precond_frames".into())),
+                ("payload_bytes", JsonVal::Int(g.payload_bytes as i64)),
+                ("plain_encoded_bytes", JsonVal::Int(g.plain_bytes as i64)),
+                ("precond_encoded_bytes", JsonVal::Int(g.precond_bytes as i64)),
+                ("size_ratio", JsonVal::Num(g.size_ratio())),
+            ]);
             r
         }
     }
@@ -358,6 +407,9 @@ pub mod codec_bench {
         let write_pooled = mib(&pool, true);
         let read_pooled = mib(&pool, false);
         std::fs::remove_file(&path).ok();
+        // Deterministic size numbers for the §5.4 stage: measured on a
+        // corpus slice no larger than 1 MiB (the ratio converges fast).
+        let precond = PrecondGain::measure(total_bytes.min(1 << 20), elem_bytes);
         CodecThroughput {
             lanes,
             payload_bytes: data.len() as u64,
@@ -366,6 +418,7 @@ pub mod codec_bench {
             write_pooled,
             read_serial,
             read_pooled,
+            precond,
         }
     }
 

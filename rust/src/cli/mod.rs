@@ -26,9 +26,11 @@ USAGE: scda <command> [args]
 COMMANDS:
   info <file> [--raw]          list sections (logical view; --raw shows
                                convention pairs as their raw sections)
-  ls <file>                    list named datasets via the archive catalog
+  ls <file> [--json]           list named datasets via the archive catalog
                                (O(1) footer index; falls back to a scan on
-                               plain scda files)
+                               plain scda files); --json emits one machine-
+                               readable object per dataset, including the
+                               frame preconditioning token
   verify <file>                strict byte-level structural verification
   cat <file> <name|index> [--raw] [--name]
                                dump a dataset (by catalog name) or section
@@ -41,8 +43,12 @@ COMMANDS:
                                named dataset (catalog-seeded range read:
                                touches the range's bytes, not the section)
   demo-write <file> [--ranks P] [--encode] [--precondition]
+             [--frame-precond <width[d]>]
                                write an AMR demo checkpoint on P simulated
-                               ranks (base/max level via --base/--max)
+                               ranks (base/max level via --base/--max);
+                               --frame-precond writes encoded fields as
+                               self-describing 'p' frames (byte shuffle by
+                               <width>, trailing 'd' adds per-plane delta)
   restart <file> [--ranks P]   read a checkpoint on P ranks and report
   version                      print version and backend information
 
@@ -148,9 +154,56 @@ fn cmd_info(args: &Args) -> CliResult {
     Ok(())
 }
 
+/// Minimal JSON string escaping for `ls --json` (dataset names are the
+/// only free-form strings; everything else is numeric or boolean).
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
 fn cmd_ls(args: &Args) -> CliResult {
     let path = args.positional(0, "file argument")?;
     let mut ar = crate::archive::Archive::open(SerialComm::new(), path)?;
+    if args.flag("json") {
+        // Machine-readable listing: a single JSON document so scripted
+        // pipelines don't have to parse the aligned table. `precondition`
+        // carries the catalog's advisory `p=` token (e.g. "8d") or null.
+        let mut out = String::from("[");
+        for (i, d) in ar.datasets().iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "\n  {{\"name\": {}, \"kind\": {}, \"elem_count\": {}, \"elem_size\": {}, \
+                 \"byte_len\": {}, \"offset\": {}, \"encoded\": {}, \"precondition\": {}}}",
+                json_str(&d.name),
+                json_str(&d.kind.to_string()),
+                d.elem_count,
+                d.elem_size,
+                d.byte_len,
+                d.offset,
+                d.encoded,
+                match d.precondition {
+                    Some(p) => json_str(&p.to_string()),
+                    None => "null".into(),
+                },
+            ));
+        }
+        out.push_str("\n]");
+        println!("{out}");
+        ar.close()?;
+        return Ok(());
+    }
     println!(
         "file    {path}\ncatalog {}",
         if ar.is_indexed() { "footer index (O(1))" } else { "none — linear scan fallback" }
@@ -168,7 +221,11 @@ fn cmd_ls(args: &Args) -> CliResult {
             d.byte_len,
             d.offset,
             d.name,
-            if d.encoded { " [compressed]" } else { "" },
+            match (d.encoded, d.precondition) {
+                (true, Some(p)) => format!(" [compressed p={p}]"),
+                (true, None) => " [compressed]".into(),
+                _ => String::new(),
+            },
         );
     }
     let n = ar.datasets().len();
@@ -299,6 +356,18 @@ fn cmd_demo_write(args: &Args) -> CliResult {
     let max: u8 = args.get_parse("max", 7)?;
     let encode = args.flag("encode");
     let precondition = args.flag("precondition");
+    // Format-visible frame preconditioning (SPEC §5.4): "--frame-precond
+    // 8d" shuffles encoded frames by 8-byte elements with per-plane
+    // delta. Self-describing on the wire, so readers need no flag.
+    let frame_precond: Option<crate::codec::Precond> = match args.get("frame-precond") {
+        Some(tok) => Some(tok.parse().map_err(CliError::Scda)?),
+        None => None,
+    };
+    if frame_precond.is_some() && !encode {
+        return Err(CliError::Usage(
+            "--frame-precond needs --encode ('p' frames only exist in encoded sections)".into(),
+        ));
+    }
     let leaves = Arc::new(mesh::ring_mesh(base, max, (0.5, 0.5), 0.3));
     let n = leaves.len() as u64;
     println!("mesh: {n} elements (levels {base}..{max}), ranks {ranks}, encode={encode} precondition={precondition}");
@@ -333,9 +402,20 @@ fn cmd_demo_write(args: &Args) -> CliResult {
                 payload: FieldPayload::Var { sizes: hp_sizes, data: hp_data },
             },
         ];
-        checkpoint::write_checkpoint(comm, &pathc, "scda-demo", 1, &part2, &fields, &*pre2, &metrics2)
-            .err()
-            .map(|e| e.to_string())
+        let opts = checkpoint::CheckpointOptions { frame_precond, ..Default::default() };
+        checkpoint::write_checkpoint_with(
+            comm,
+            &pathc,
+            "scda-demo",
+            1,
+            &part2,
+            &fields,
+            &*pre2,
+            &metrics2,
+            opts,
+        )
+        .err()
+        .map(|e| e.to_string())
     });
     if let Some(e) = errors.into_iter().flatten().next() {
         return Err(CliError::Usage(e));
@@ -420,6 +500,42 @@ mod tests {
         assert_ne!(run_words(&["cat", p, "--range", "ckpt/1/rho:f64x5", "zero", "4"]), 0);
         assert_eq!(run_words(&["restart", p, "--ranks", "5"]), 0);
         std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn demo_write_frame_precond_is_readable_and_cataloged() {
+        let path = tmpfile("cli-precond");
+        let p = path.to_str().unwrap();
+        // 'p' frames only exist inside encoded sections, and the token
+        // must parse (width 33 exceeds the SPEC §5.4 7-bit range).
+        assert_ne!(run_words(&["demo-write", p, "--frame-precond", "8d"]), 0);
+        let write = |tok: &str| {
+            run_words(&[
+                "demo-write", p, "--ranks", "2", "--base", "2", "--max", "3", "--encode",
+                "--frame-precond", tok,
+            ])
+        };
+        assert_ne!(write("33"), 0);
+        assert_eq!(write("8d"), 0);
+        assert_eq!(run_words(&["verify", p]), 0);
+        assert_eq!(run_words(&["ls", p]), 0);
+        assert_eq!(run_words(&["ls", p, "--json"]), 0);
+        // Reads stay transparent — the frames self-describe on the wire.
+        assert_eq!(run_words(&["cat", p, "ckpt/1/rho:f64x5"]), 0);
+        assert_eq!(run_words(&["restart", p, "--ranks", "3"]), 0);
+        // The catalog records the advisory token on encoded datasets.
+        let mut ar = crate::archive::Archive::open(SerialComm::new(), p).unwrap();
+        let tok = ar.get("ckpt/1/rho:f64x5").and_then(|d| d.precondition);
+        assert_eq!(tok.map(|x| x.to_string()).as_deref(), Some("8d"));
+        ar.close().unwrap();
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn json_strings_escape_cleanly() {
+        assert_eq!(json_str("plain"), "\"plain\"");
+        assert_eq!(json_str("a\"b\\c"), "\"a\\\"b\\\\c\"");
+        assert_eq!(json_str("t\tn\n"), "\"t\\u0009n\\u000a\"");
     }
 
     #[test]

@@ -91,8 +91,21 @@ impl<'a> BitReader<'a> {
         BitReader { data, pos: 0, bitbuf: 0, bitcount: 0 }
     }
 
+    /// Top up the 64-bit reservoir. The steady state is one unaligned
+    /// 8-byte load shifted into place (filling at least 32 bits whenever
+    /// the buffer was at most half full); the byte-at-a-time loop only
+    /// runs within the final 7 bytes of the stream.
     #[inline]
     fn refill(&mut self) {
+        if self.pos + 8 <= self.data.len() {
+            let word = u64::from_le_bytes(self.data[self.pos..self.pos + 8].try_into().unwrap());
+            self.bitbuf |= word << self.bitcount;
+            // Whole bytes that fit in the 64-bit buffer above bitcount.
+            let take = (63 - self.bitcount) >> 3;
+            self.pos += take as usize;
+            self.bitcount += take * 8;
+            return;
+        }
         while self.bitcount <= 56 && self.pos < self.data.len() {
             self.bitbuf |= (self.data[self.pos] as u64) << self.bitcount;
             self.pos += 1;

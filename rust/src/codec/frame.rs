@@ -12,9 +12,15 @@
 //! checks: the Adler-32 inside zlib, the uncompressed-size comparison, and
 //! the `'z'` marker byte ("verifying that the ninth byte of the decoded
 //! base64 data is indeed 'z'").
+//!
+//! When the optional preconditioning stage (SPEC §5.4) is enabled, the
+//! marker byte is `'p'` followed by a one-byte transform descriptor, and
+//! the zlib stream holds the transformed payload; decode self-configures
+//! from the descriptor, so the knob exists only on the write side.
 
 use crate::codec::base64::{decode_lines, encode_lines_into, encoded_len};
 use crate::codec::lz77::{MatchParams, Matcher};
+use crate::codec::precondition::Precond;
 use crate::codec::zlib::{zlib_compress_into, zlib_decompress_into};
 use crate::error::{corrupt, Result, ScdaError};
 use crate::format::padding::LineStyle;
@@ -27,11 +33,14 @@ pub struct CodecOptions {
     pub level: u8,
     /// Line-break style for base64 lines and surrounding padding.
     pub style: LineStyle,
+    /// Optional shuffle/delta preconditioning inside the frame (`'p'`
+    /// marker). `None` writes the plain `'z'` frame.
+    pub precondition: Option<Precond>,
 }
 
 impl Default for CodecOptions {
     fn default() -> Self {
-        CodecOptions { level: 9, style: LineStyle::Unix }
+        CodecOptions { level: 9, style: LineStyle::Unix, precondition: None }
     }
 }
 
@@ -45,6 +54,9 @@ impl Default for CodecOptions {
 pub struct CodecScratch {
     matcher: Option<Matcher>,
     stage1: Vec<u8>,
+    /// Scratch for the preconditioning transform (forward staging on
+    /// encode, plane staging on the in-place inverse).
+    precond: Vec<u8>,
 }
 
 impl CodecScratch {
@@ -78,13 +90,24 @@ pub fn encode_element(data: &[u8], opts: CodecOptions) -> Vec<u8> {
 /// invariant that makes parallel per-element encoding bit-identical to
 /// the serial path.
 pub fn encode_element_into(data: &[u8], opts: CodecOptions, scratch: &mut CodecScratch, out: &mut Vec<u8>) {
-    let CodecScratch { matcher, stage1 } = scratch;
+    let CodecScratch { matcher, stage1, precond } = scratch;
     let matcher = matcher.get_or_insert_with(|| Matcher::new(MatchParams::from_level(9)));
     stage1.clear();
-    stage1.reserve(9 + data.len() / 2 + 64);
+    stage1.reserve(10 + data.len() / 2 + 64);
     stage1.extend_from_slice(&(data.len() as u64).to_be_bytes());
-    stage1.push(b'z');
-    zlib_compress_into(data, opts.level, matcher, stage1);
+    match opts.precondition {
+        None => {
+            stage1.push(b'z');
+            zlib_compress_into(data, opts.level, matcher, stage1);
+        }
+        Some(p) => {
+            stage1.push(b'p');
+            stage1.push(p.descriptor());
+            precond.clear();
+            p.forward_into(data, precond);
+            zlib_compress_into(precond, opts.level, matcher, stage1);
+        }
+    }
     out.reserve(encoded_len(stage1.len()));
     encode_lines_into(stage1, opts.style, out);
 }
@@ -104,7 +127,7 @@ pub fn decode_element(encoded: &[u8]) -> Result<Vec<u8>> {
 /// decoded elements) with explicit scratch; returns the number of bytes
 /// appended. On error `out`'s length is restored (capacity may grow).
 pub fn decode_element_into(encoded: &[u8], scratch: &mut CodecScratch, out: &mut Vec<u8>) -> Result<usize> {
-    let stage1 = &mut scratch.stage1;
+    let CodecScratch { stage1, precond, .. } = scratch;
     stage1.clear();
     crate::codec::base64::decode_lines_into(encoded, stage1)?;
     if stage1.len() < 9 {
@@ -115,18 +138,36 @@ pub fn decode_element_into(encoded: &[u8], scratch: &mut CodecScratch, out: &mut
     }
     let usize_bytes: [u8; 8] = stage1[..8].try_into().unwrap();
     let uncompressed = u64::from_be_bytes(usize_bytes);
-    if stage1[8] != b'z' {
-        return Err(ScdaError::corrupt(
-            corrupt::BAD_CONVENTION,
-            format!("ninth byte of compression frame is {:#04x}, expected 'z'", stage1[8]),
-        ));
-    }
+    // The marker byte selects the frame variant: plain zlib ('z') or
+    // preconditioned ('p' + descriptor, SPEC §5.4).
+    let (transform, body_at) = match stage1[8] {
+        b'z' => (None, 9usize),
+        b'p' => {
+            if stage1.len() < 10 {
+                return Err(ScdaError::corrupt(
+                    corrupt::BAD_CONVENTION,
+                    "preconditioned frame lacks descriptor byte",
+                ));
+            }
+            (Some(Precond::from_descriptor(stage1[9])?), 10usize)
+        }
+        other => {
+            return Err(ScdaError::corrupt(
+                corrupt::BAD_CONVENTION,
+                format!("ninth byte of compression frame is {other:#04x}, expected 'z' or 'p'"),
+            ));
+        }
+    };
     let expected = usize::try_from(uncompressed).map_err(|_| {
         ScdaError::corrupt(corrupt::COUNT_OVERFLOW, "uncompressed size exceeds addressable memory")
     })?;
     // zlib's own Adler-32 verification plus the size comparison happen here.
-    let appended = zlib_decompress_into(&stage1[9..], Some(expected), out)?;
+    let base = out.len();
+    let appended = zlib_decompress_into(&stage1[body_at..], Some(expected), out)?;
     debug_assert_eq!(appended, expected);
+    if let Some(p) = transform {
+        p.inverse_in_place(&mut out[base..], precond);
+    }
     Ok(appended)
 }
 
@@ -134,7 +175,7 @@ pub fn decode_element_into(encoded: &[u8], scratch: &mut CodecScratch, out: &mut
 /// (used by skip paths and `scda info`).
 pub fn peek_uncompressed_size(encoded: &[u8]) -> Result<u64> {
     let stage1 = decode_lines(encoded)?;
-    if stage1.len() < 9 || stage1[8] != b'z' {
+    if stage1.len() < 9 || !matches!(stage1[8], b'z' | b'p') {
         return Err(ScdaError::corrupt(corrupt::BAD_CONVENTION, "malformed compression frame"));
     }
     Ok(u64::from_be_bytes(stage1[..8].try_into().unwrap()))
@@ -145,7 +186,7 @@ mod tests {
     use super::*;
 
     fn opts(level: u8, style: LineStyle) -> CodecOptions {
-        CodecOptions { level, style }
+        CodecOptions { level, style, precondition: None }
     }
 
     #[test]
@@ -264,5 +305,51 @@ mod tests {
         let data = vec![b'a'; 100_000];
         let enc = encode_element(&data, CodecOptions::default());
         assert!(enc.len() < data.len() / 50, "len {}", enc.len());
+    }
+
+    #[test]
+    fn preconditioned_frames_roundtrip() {
+        let payloads: Vec<Vec<u8>> = vec![
+            vec![],
+            b"x".to_vec(),
+            (0..10_000u32).flat_map(|i| (7 * i).to_le_bytes()).collect(),
+            (0..4096u64).flat_map(|i| (i as f64).sqrt().to_le_bytes()).collect(),
+            vec![0xEE; 777], // length not a multiple of any width > 1
+        ];
+        for width in [1u8, 2, 4, 8] {
+            for delta in [false, true] {
+                let o = CodecOptions {
+                    precondition: Some(Precond::new(width, delta).unwrap()),
+                    ..CodecOptions::default()
+                };
+                for p in &payloads {
+                    let enc = encode_element(p, o);
+                    assert!(enc.iter().all(|&b| b.is_ascii()));
+                    assert_eq!(decode_element(&enc).unwrap(), *p, "w={width} d={delta}");
+                    assert_eq!(peek_uncompressed_size(&enc).unwrap(), p.len() as u64);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn preconditioned_frame_descriptor_is_wire_visible() {
+        // The tenth stage-1 byte is the descriptor; readers self-configure
+        // from it, so a truncated descriptor must be rejected cleanly.
+        let o = CodecOptions {
+            precondition: Some(Precond::new(8, true).unwrap()),
+            ..CodecOptions::default()
+        };
+        let enc = encode_element(b"0123456789abcdef", o);
+        let stage1 = crate::codec::base64::decode_lines(&enc).unwrap();
+        assert_eq!(stage1[8], b'p');
+        assert_eq!(stage1[9], Precond::new(8, true).unwrap().descriptor());
+        let truncated = crate::codec::base64::encode_lines(&stage1[..9], LineStyle::Unix);
+        assert!(decode_element(&truncated).is_err());
+        // A zero descriptor (width 0) is invalid.
+        let mut bad = stage1.clone();
+        bad[9] = 0;
+        let bad = crate::codec::base64::encode_lines(&bad, LineStyle::Unix);
+        assert!(decode_element(&bad).is_err());
     }
 }

@@ -5,8 +5,11 @@
 //! * [`build_lengths`] — length-limited Huffman code construction from
 //!   symbol frequencies via the package-merge algorithm (optimal under the
 //!   15-bit DEFLATE limit).
-//! * [`HuffDecoder`] — table-driven decoder: a single-level lookup table of
-//!   `PEEK_BITS` bits with an overflow path for longer codes.
+//! * [`HuffDecoder`] — table-driven decoder: a two-level lookup table (a
+//!   [`ROOT_BITS`]-bit root plus per-prefix overflow subtables) resolving
+//!   every symbol in at most two indexed loads, never a scan.
+//! * [`BitwiseDecoder`] — the one-bit-at-a-time canonical decoder, kept as
+//!   the reference the LUT decoder is differentially tested against.
 
 use crate::error::{corrupt, Result, ScdaError};
 use crate::codec::bitio::{reverse_bits, BitReader};
@@ -203,64 +206,166 @@ fn build_lengths_package_merge(freqs: &[u32], limit: usize) -> Vec<u8> {
     lengths
 }
 
-const PEEK_BITS: u32 = 9;
+/// Root table width of the two-level decoder. 9 bits covers every code
+/// of the DEFLATE fixed tables and the vast majority of dynamic codes in
+/// one lookup; longer codes take exactly one more.
+pub const ROOT_BITS: u32 = 9;
 
-/// Table-driven canonical Huffman decoder.
+/// Entry packing of the decode table (`u32`):
+/// bits 0..=15  — symbol (direct) or subtable base index (indirect),
+/// bits 16..=20 — code length in bits (direct) or subtable width (indirect),
+/// bit 31       — indirect flag. Zero is "invalid code".
+const SUBTABLE_FLAG: u32 = 1 << 31;
+
+#[inline]
+fn pack(len: u32, payload: u32) -> u32 {
+    debug_assert!(len <= 31 && payload <= 0xFFFF);
+    (len << 16) | payload
+}
+
+/// Table-driven canonical Huffman decoder: a `1 << ROOT_BITS` root table
+/// with per-prefix overflow subtables appended to the same vector, so
+/// decoding is one load for codes of at most [`ROOT_BITS`] bits and two
+/// loads otherwise — a symbol per lookup, never a linear scan.
 pub struct HuffDecoder {
-    /// Primary table indexed by `PEEK_BITS` reversed bits:
-    /// `(symbol, len)` for codes of length <= PEEK_BITS, or a sentinel for
-    /// longer codes resolved through `long`.
-    table: Vec<(u16, u8)>,
-    /// Sorted (reversed_code, len, symbol) for codes longer than PEEK_BITS.
-    long: Vec<(u32, u8, u16)>,
-    max_len: u8,
+    table: Vec<u32>,
 }
 
 impl HuffDecoder {
     /// Build a decoder from code lengths.
     pub fn new(lengths: &[u8]) -> Result<Self> {
         let codes = lengths_to_codes(lengths)?;
-        let mut table = vec![(u16::MAX, 0u8); 1 << PEEK_BITS];
-        let mut long = Vec::new();
-        let mut max_len = 0u8;
+        let root = 1usize << ROOT_BITS;
+        let mut table = vec![0u32; root];
+        // Pass 1: direct entries, and the widest overflow length under
+        // each root prefix (the subtable's index width).
+        let mut sub_max = std::collections::BTreeMap::<u32, u32>::new();
         for (sym, (&len, &code)) in lengths.iter().zip(codes.iter()).enumerate() {
             if len == 0 {
                 continue;
             }
-            max_len = max_len.max(len);
-            let rev = reverse_bits(code as u32, len as u32);
-            if (len as u32) <= PEEK_BITS {
-                // Fill all table slots whose low `len` bits equal `rev`.
+            let len = len as u32;
+            let rev = reverse_bits(code as u32, len);
+            if len <= ROOT_BITS {
+                // Fill all root slots whose low `len` bits equal `rev`.
                 let step = 1u32 << len;
                 let mut idx = rev;
-                while idx < (1 << PEEK_BITS) {
-                    table[idx as usize] = (sym as u16, len);
+                while (idx as usize) < root {
+                    table[idx as usize] = pack(len, sym as u32);
                     idx += step;
                 }
             } else {
-                long.push((rev, len, sym as u16));
+                let prefix = rev & (root as u32 - 1);
+                let e = sub_max.entry(prefix).or_insert(0);
+                *e = (*e).max(len - ROOT_BITS);
             }
         }
-        long.sort_unstable();
-        Ok(HuffDecoder { table, long, max_len })
+        // Pass 2: allocate one subtable per overflow prefix.
+        for (&prefix, &bits) in &sub_max {
+            let base = table.len() as u32;
+            debug_assert!(base <= 0xFFFF, "decode table exceeds 16-bit base indexing");
+            table[prefix as usize] = SUBTABLE_FLAG | pack(bits, base);
+            table.resize(table.len() + (1usize << bits), 0);
+        }
+        // Pass 3: fill overflow entries.
+        for (sym, (&len, &code)) in lengths.iter().zip(codes.iter()).enumerate() {
+            let len = len as u32;
+            if len <= ROOT_BITS {
+                continue;
+            }
+            let rev = reverse_bits(code as u32, len);
+            let prefix = rev & (root as u32 - 1);
+            let bits = sub_max[&prefix];
+            let base = (table[prefix as usize] & 0xFFFF) as usize;
+            let high = rev >> ROOT_BITS; // the code's len - ROOT_BITS tail bits
+            let step = 1u32 << (len - ROOT_BITS);
+            let mut idx = high;
+            while idx < (1u32 << bits) {
+                table[base + idx as usize] = pack(len, sym as u32);
+                idx += step;
+            }
+        }
+        Ok(HuffDecoder { table })
     }
 
     /// Decode one symbol from the reader.
     #[inline]
     pub fn decode(&self, r: &mut BitReader<'_>) -> Result<u16> {
-        let peek = r.peek_bits(PEEK_BITS);
-        let (sym, len) = self.table[peek as usize];
-        if len > 0 {
-            r.consume(len as u32)?;
-            return Ok(sym);
+        let peek = r.peek_bits(ROOT_BITS);
+        let mut e = self.table[peek as usize];
+        if e & SUBTABLE_FLAG != 0 {
+            let bits = (e >> 16) & 0x1F;
+            let base = (e & 0xFFFF) as usize;
+            let idx = (r.peek_bits(ROOT_BITS + bits) >> ROOT_BITS) as usize;
+            e = self.table[base + idx];
         }
-        // Long path: try lengths PEEK_BITS+1..=max_len.
-        let peek_long = r.peek_bits(self.max_len as u32);
-        for &(rev, len, sym) in &self.long {
-            let mask = (1u32 << len) - 1;
-            if peek_long & mask == rev {
-                r.consume(len as u32)?;
-                return Ok(sym);
+        let len = e >> 16;
+        if len == 0 {
+            return Err(ScdaError::corrupt(
+                corrupt::BAD_ZLIB,
+                "invalid Huffman code in deflate stream",
+            ));
+        }
+        r.consume(len)?;
+        Ok((e & 0xFFFF) as u16)
+    }
+}
+
+/// The pre-LUT reference decoder: canonical decode one bit at a time
+/// using per-length code ranges (RFC 1951's textbook procedure). Kept so
+/// the LUT decoder has an independently-derived implementation to be
+/// differentially tested against; not used on any hot path.
+pub struct BitwiseDecoder {
+    /// `first_code[l]` — canonical (MSB-first) code value of the first
+    /// code of length `l`; `first_sym[l]` — its index into `syms`.
+    first_code: [u32; MAX_BITS + 1],
+    first_sym: [u32; MAX_BITS + 1],
+    count: [u32; MAX_BITS + 1],
+    /// Symbols ordered by (length, code) — canonical order.
+    syms: Vec<u16>,
+    max_len: u32,
+}
+
+impl BitwiseDecoder {
+    pub fn new(lengths: &[u8]) -> Result<Self> {
+        let codes = lengths_to_codes(lengths)?; // validates over-subscription
+        let mut count = [0u32; MAX_BITS + 1];
+        for &l in lengths {
+            count[l as usize] += 1;
+        }
+        count[0] = 0;
+        let mut order: Vec<u16> = (0..lengths.len() as u16)
+            .filter(|&s| lengths[s as usize] > 0)
+            .collect();
+        order.sort_by_key(|&s| (lengths[s as usize], codes[s as usize]));
+        let mut first_code = [0u32; MAX_BITS + 1];
+        let mut first_sym = [0u32; MAX_BITS + 1];
+        let mut max_len = 0u32;
+        let mut at = 0u32;
+        for l in 1..=MAX_BITS {
+            first_sym[l] = at;
+            if count[l] > 0 {
+                // Canonical: the first code of each length is what
+                // lengths_to_codes assigned to the first symbol of it.
+                first_code[l] = codes[order[at as usize] as usize] as u32;
+                max_len = l as u32;
+            }
+            at += count[l];
+        }
+        Ok(BitwiseDecoder { first_code, first_sym, count, syms: order, max_len })
+    }
+
+    /// Decode one symbol, reading a single bit per iteration.
+    pub fn decode(&self, r: &mut BitReader<'_>) -> Result<u16> {
+        let mut code = 0u32;
+        for len in 1..=self.max_len {
+            code = (code << 1) | r.read_bits(1)?;
+            let l = len as usize;
+            if self.count[l] > 0
+                && code >= self.first_code[l]
+                && code - self.first_code[l] < self.count[l]
+            {
+                return Ok(self.syms[(self.first_sym[l] + code - self.first_code[l]) as usize]);
             }
         }
         Err(ScdaError::corrupt(corrupt::BAD_ZLIB, "invalid Huffman code in deflate stream"))
@@ -361,5 +466,53 @@ mod tests {
     fn oversubscribed_rejected() {
         let lengths = [1u8, 1, 1];
         assert!(lengths_to_codes(&lengths).is_err());
+    }
+
+    #[test]
+    fn lut_decoder_matches_bitwise_reference() {
+        // Differential test: random valid codes (built from random
+        // frequency profiles, so lengths always satisfy Kraft), random
+        // symbol streams; the two-level LUT decoder must agree with the
+        // one-bit-at-a-time reference symbol for symbol.
+        let mut rng = crate::testutil::Rng::new(0xD1FF);
+        for trial in 0..64 {
+            let nsyms = 2 + (rng.next_u64() % 600) as usize;
+            let mut freqs = vec![0u32; nsyms];
+            for f in freqs.iter_mut() {
+                // Skewed profile: many zeros, a few heavy symbols, so
+                // trials mix short codes, >ROOT_BITS codes, and holes.
+                *f = match rng.next_u64() % 4 {
+                    0 => 0,
+                    1 => 1,
+                    2 => (rng.next_u64() % 100) as u32,
+                    _ => (rng.next_u64() % 10_000) as u32,
+                };
+            }
+            if freqs.iter().all(|&f| f == 0) {
+                freqs[0] = 1;
+            }
+            let lens = build_lengths(&freqs, 15);
+            let codes = lengths_to_codes(&lens).unwrap();
+            let present: Vec<u16> =
+                (0..nsyms as u16).filter(|&s| lens[s as usize] > 0).collect();
+            let stream: Vec<u16> = (0..200)
+                .map(|_| present[(rng.next_u64() as usize) % present.len()])
+                .collect();
+            let mut w = BitWriter::new();
+            for &s in &stream {
+                w.write_code(codes[s as usize] as u32, lens[s as usize] as u32);
+            }
+            let bytes = w.finish();
+            let lut = HuffDecoder::new(&lens).unwrap();
+            let bitwise = BitwiseDecoder::new(&lens).unwrap();
+            let mut ra = BitReader::new(&bytes);
+            let mut rb = BitReader::new(&bytes);
+            for (k, &s) in stream.iter().enumerate() {
+                let a = lut.decode(&mut ra).unwrap();
+                let b = bitwise.decode(&mut rb).unwrap();
+                assert_eq!(a, b, "trial {trial} sym {k}");
+                assert_eq!(a, s, "trial {trial} sym {k}");
+            }
+        }
     }
 }

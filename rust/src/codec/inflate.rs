@@ -50,8 +50,8 @@ pub fn inflate_into(data: &[u8], expected_size: Option<usize>, out: &mut Vec<u8>
                 out.extend_from_slice(bytes);
             }
             0b01 => {
-                let (lit, dist) = fixed_decoders()?;
-                inflate_block(&mut r, &lit, &dist, out, base, limit)?;
+                let (lit, dist) = fixed_decoders();
+                inflate_block(&mut r, lit, dist, out, base, limit)?;
             }
             0b10 => {
                 let (lit, dist) = read_dynamic_header(&mut r)?;
@@ -91,11 +91,19 @@ fn check_limit(total: u64, limit: Option<u64>) -> Result<()> {
     Ok(())
 }
 
-fn fixed_decoders() -> Result<(HuffDecoder, HuffDecoder)> {
-    let mut lit = vec![8u8; 288];
-    lit[144..256].iter_mut().for_each(|x| *x = 9);
-    lit[256..280].iter_mut().for_each(|x| *x = 7);
-    Ok((HuffDecoder::new(&lit)?, HuffDecoder::new(&vec![5u8; 30])?))
+/// The RFC 1951 fixed-code decoders, built once per process: fixed
+/// blocks are the common case for small per-element frames, and the LUT
+/// construction is the dominant cost of decoding such a frame.
+fn fixed_decoders() -> (&'static HuffDecoder, &'static HuffDecoder) {
+    static FIXED: std::sync::OnceLock<(HuffDecoder, HuffDecoder)> = std::sync::OnceLock::new();
+    let (lit, dist) = FIXED.get_or_init(|| {
+        let mut lit = vec![8u8; 288];
+        lit[144..256].iter_mut().for_each(|x| *x = 9);
+        lit[256..280].iter_mut().for_each(|x| *x = 7);
+        // The fixed tables are well-formed by construction; unwrap is fine.
+        (HuffDecoder::new(&lit).unwrap(), HuffDecoder::new(&[5u8; 30]).unwrap())
+    });
+    (lit, dist)
 }
 
 fn read_dynamic_header(r: &mut BitReader<'_>) -> Result<(HuffDecoder, HuffDecoder)> {

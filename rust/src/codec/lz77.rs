@@ -1,12 +1,23 @@
 //! Greedy-with-lazy-evaluation LZ77 match finder over a 32 KiB window,
 //! hash-chained as in zlib. Produces the token stream consumed by the
 //! DEFLATE block encoder.
+//!
+//! The hot loops are word-wide: candidates are found through a 4-byte
+//! hash and verified/extended eight bytes at a time (`u64` loads + XOR +
+//! `trailing_zeros`), and positions covered by an emitted match enter
+//! the hash table head-only (findable, but not chain-linked), so long
+//! matches cost O(len/8) compares and O(1) table work per position.
 
 /// Maximum backward distance (RFC 1951).
 pub const MAX_DIST: usize = 32 * 1024;
 /// Minimum and maximum match lengths.
 pub const MIN_MATCH: usize = 3;
 pub const MAX_MATCH: usize = 258;
+
+/// Bytes folded into the hash. Four (not `MIN_MATCH`) trades the last
+/// possible 3-byte match at a window tail for a far more selective
+/// table; chains verify actual bytes either way.
+const HASH_BYTES: usize = 4;
 
 const MAX_HASH_BITS: u32 = 15;
 const MIN_HASH_BITS: u32 = 9;
@@ -41,10 +52,31 @@ impl MatchParams {
 }
 
 #[inline]
-fn hash3(data: &[u8], i: usize, bits: u32) -> usize {
-    // Multiplicative hash of 3 bytes (sufficient: chains verify bytes).
-    let v = (data[i] as u32) | ((data[i + 1] as u32) << 8) | ((data[i + 2] as u32) << 16);
+fn hash4(data: &[u8], i: usize, bits: u32) -> usize {
+    // Multiplicative hash of 4 bytes (sufficient: chains verify bytes).
+    let v = u32::from_le_bytes(data[i..i + HASH_BYTES].try_into().unwrap());
     (v.wrapping_mul(0x9E37_79B1) >> (32 - bits)) as usize
+}
+
+/// Length of the common prefix of `data[a..]` and `data[b..]`, capped at
+/// `max_len`, compared a word at a time. Requires `b + max_len <= n` and
+/// `a < b` (so both sides stay in bounds).
+#[inline]
+fn match_len(data: &[u8], a: usize, b: usize, max_len: usize) -> usize {
+    let mut l = 0usize;
+    while l + 8 <= max_len {
+        let x = u64::from_le_bytes(data[a + l..a + l + 8].try_into().unwrap());
+        let y = u64::from_le_bytes(data[b + l..b + l + 8].try_into().unwrap());
+        let xor = x ^ y;
+        if xor != 0 {
+            return l + (xor.trailing_zeros() >> 3) as usize;
+        }
+        l += 8;
+    }
+    while l < max_len && data[a + l] == data[b + l] {
+        l += 1;
+    }
+    l
 }
 
 /// Hash-chain match finder with reusable buffers.
@@ -86,12 +118,12 @@ impl Matcher {
     #[inline]
     fn longest_match(&self, data: &[u8], pos: usize, best_so_far: usize) -> Option<(usize, usize)> {
         let max_len = (data.len() - pos).min(MAX_MATCH);
-        if max_len < MIN_MATCH {
+        if max_len < HASH_BYTES {
             return None;
         }
         let mut best_len = best_so_far.max(MIN_MATCH - 1);
         let mut best_dist = 0usize;
-        let mut cand = self.head[hash3(data, pos, self.hash_bits)];
+        let mut cand = self.head[hash4(data, pos, self.hash_bits)];
         let min_pos = pos.saturating_sub(MAX_DIST) as i32;
         let mut chain = self.params.max_chain;
         while cand >= min_pos && chain > 0 {
@@ -102,10 +134,7 @@ impl Matcher {
                 && data[c + best_len] == data[pos + best_len]
                 && data[c] == data[pos]
             {
-                let mut l = 0usize;
-                while l < max_len && data[c + l] == data[pos + l] {
-                    l += 1;
-                }
+                let l = match_len(data, c, pos, max_len);
                 if l > best_len {
                     best_len = l;
                     best_dist = pos - c;
@@ -132,30 +161,41 @@ impl Matcher {
         self.prepare(n);
         let bits = self.hash_bits;
 
+        // Full insert: the entry joins its bucket's chain.
         let insert = |head: &mut Vec<i32>, prev: &mut Vec<i32>, data: &[u8], i: usize| {
-            if i + MIN_MATCH <= data.len() {
-                let h = hash3(data, i, bits);
+            if i + HASH_BYTES <= data.len() {
+                let h = hash4(data, i, bits);
                 prev[i] = head[h];
                 head[h] = i as i32;
+            }
+        };
+        // Head-only insert for positions covered by an emitted match:
+        // the entry is findable as the bucket head but is not linked to
+        // the chain behind it (`prev` stays -1), so a covered span costs
+        // one store per position instead of a chain splice.
+        let insert_head = |head: &mut Vec<i32>, data: &[u8], i: usize| {
+            if i + HASH_BYTES <= data.len() {
+                head[hash4(data, i, bits)] = i as i32;
             }
         };
 
         let mut i = 0usize;
         while i < n {
-            let cur = self.longest_match(data, i, 0);
-            match cur {
+            match self.longest_match(data, i, 0) {
                 None => {
                     emit(Token::Literal(data[i]));
                     insert(&mut self.head, &mut self.prev, data, i);
                     i += 1;
                 }
                 Some((len, dist)) => {
-                    // Lazy evaluation: if the next position holds a strictly
-                    // better match, emit a literal here instead.
                     let mut take = (len, dist);
                     let mut start = i;
+                    // The match position always enters the chain; lazy
+                    // evaluation only decides whether to also probe i+1
+                    // for a strictly better match (emitting a literal
+                    // here if so).
+                    insert(&mut self.head, &mut self.prev, data, i);
                     if self.params.lazy && len < self.params.good_len && i + 1 < n {
-                        insert(&mut self.head, &mut self.prev, data, i);
                         if let Some((nlen, ndist)) = self.longest_match(data, i + 1, len) {
                             if nlen > len {
                                 emit(Token::Literal(data[i]));
@@ -163,18 +203,14 @@ impl Matcher {
                                 start = i + 1;
                             }
                         }
-                    } else if self.params.lazy {
-                        insert(&mut self.head, &mut self.prev, data, i);
-                    } else {
-                        insert(&mut self.head, &mut self.prev, data, i);
                     }
                     let (mlen, mdist) = take;
                     emit(Token::Match { len: mlen as u16, dist: mdist as u16 });
-                    // Insert hash entries for covered positions.
+                    // Covered positions get head-only entries.
                     let end = start + mlen;
                     let from = if start == i { start + 1 } else { start };
-                    for j in from..end.min(n.saturating_sub(MIN_MATCH - 1)) {
-                        insert(&mut self.head, &mut self.prev, data, j);
+                    for j in from..end.min(n.saturating_sub(HASH_BYTES - 1)) {
+                        insert_head(&mut self.head, data, j);
                     }
                     i = end;
                 }
@@ -227,6 +263,20 @@ mod tests {
             for data in &cases {
                 assert_eq!(detokenize(&tokens_for(data, level)), *data);
             }
+        }
+    }
+
+    #[test]
+    fn match_len_is_exact_at_every_boundary() {
+        // Agreement lengths 0..=40 cross both the word loop and the tail
+        // loop; the divergence byte must be found exactly.
+        for agree in 0..=40usize {
+            let mut data = vec![0xAAu8; agree + 1];
+            data.extend_from_slice(&vec![0xAAu8; agree]);
+            data.push(0x55);
+            // data[0..agree] == data[agree+1..2*agree+1], diverging after.
+            let max = data.len() - (agree + 1);
+            assert_eq!(match_len(&data, 0, agree + 1, max.min(agree + 1)), agree.min(max));
         }
     }
 

@@ -15,6 +15,7 @@ pub mod frame;
 pub mod huffman;
 pub mod inflate;
 pub mod lz77;
+pub mod precondition;
 pub mod zlib;
 
 pub use adler32::adler32;
@@ -24,4 +25,5 @@ pub use frame::{
     with_scratch, CodecOptions, CodecScratch,
 };
 pub use inflate::{inflate, inflate_into};
+pub use precondition::Precond;
 pub use zlib::{zlib_compress, zlib_compress_into, zlib_decompress, zlib_decompress_into};

@@ -1,0 +1,234 @@
+//! Optional, format-visible preconditioning inside the compression
+//! convention's element frame (SPEC §5.4): a byte-plane shuffle by the
+//! element width, optionally followed by a per-plane byte delta, applied
+//! to the payload *before* the zlib stage and inverted after inflation.
+//!
+//! For fixed-width numeric data the shuffle groups bytes of equal
+//! significance (near-constant exponent/high bytes become long runs) and
+//! the delta turns smooth fields into near-zero planes — both cheaper
+//! for DEFLATE to model and faster to match. The transform is exactly
+//! length-preserving and self-describing: the frame marker byte `'p'`
+//! plus a one-byte descriptor replace the plain `'z'` marker, so readers
+//! need no out-of-band configuration (the catalog's `p=` key is advisory
+//! convenience for tools, not required for decoding).
+//!
+//! Byte-exact definition (all arithmetic on bytes, wrapping):
+//! * let `w` be the element width and `rows = len / w`; the first
+//!   `rows * w` bytes are the body, the `len % w` tail passes through raw;
+//! * shuffle: output plane `k` (of `w`, each `rows` long, plane-major)
+//!   holds the bytes `body[j*w + k]` for `j = 0..rows`;
+//! * delta (if enabled, applied after the shuffle, per plane): each plane
+//!   byte is replaced by its wrapping difference from the previous byte
+//!   of the same plane, the first byte unchanged.
+//! Decode inverts in the opposite order: per-plane wrapping prefix sum,
+//! then un-shuffle. Distinct from the coordinator-level runtime
+//! preconditioner ([`crate::runtime::precond`]): this stage lives inside
+//! the frame bytes and changes what is stored; that one is an I/O-path
+//! transform outside the format.
+
+use std::fmt;
+use std::str::FromStr;
+
+use crate::error::{corrupt, Result, ScdaError};
+
+/// Per-dataset preconditioning parameters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Precond {
+    /// Element width in bytes (1..=[`Precond::MAX_WIDTH`]). Width 1 makes
+    /// the shuffle the identity; the delta can still apply.
+    pub width: u8,
+    /// Apply the per-plane byte delta after the shuffle.
+    pub delta: bool,
+}
+
+impl Precond {
+    /// Largest supported element width. 32 covers every scalar plus
+    /// complex128 and small fixed-size records.
+    pub const MAX_WIDTH: u8 = 32;
+
+    /// Descriptor-byte flag for the delta stage.
+    const DELTA_FLAG: u8 = 0x80;
+
+    pub fn new(width: u8, delta: bool) -> Result<Self> {
+        if width == 0 || width > Self::MAX_WIDTH {
+            return Err(ScdaError::corrupt(
+                corrupt::BAD_CONVENTION,
+                format!("preconditioning width {width} outside 1..={}", Self::MAX_WIDTH),
+            ));
+        }
+        Ok(Precond { width, delta })
+    }
+
+    /// The one-byte wire descriptor following the `'p'` frame marker:
+    /// low 7 bits = width, high bit = delta.
+    pub fn descriptor(self) -> u8 {
+        self.width | if self.delta { Self::DELTA_FLAG } else { 0 }
+    }
+
+    /// Parse a wire descriptor (the read side self-configures from it).
+    pub fn from_descriptor(b: u8) -> Result<Self> {
+        Precond::new(b & !Self::DELTA_FLAG, b & Self::DELTA_FLAG != 0)
+    }
+
+    /// Forward transform, appending exactly `data.len()` bytes to `out`.
+    pub fn forward_into(self, data: &[u8], out: &mut Vec<u8>) {
+        let w = self.width as usize;
+        let rows = data.len() / w;
+        let body = rows * w;
+        let start = out.len();
+        out.reserve(data.len());
+        if w == 1 {
+            out.extend_from_slice(&data[..body]);
+        } else {
+            for k in 0..w {
+                out.extend((0..rows).map(|j| data[j * w + k]));
+            }
+        }
+        if self.delta {
+            for plane in out[start..start + body].chunks_exact_mut(rows.max(1)) {
+                let mut prev = 0u8;
+                for b in plane.iter_mut() {
+                    let cur = *b;
+                    *b = cur.wrapping_sub(prev);
+                    prev = cur;
+                }
+            }
+        }
+        out.extend_from_slice(&data[body..]);
+    }
+
+    /// Exact inverse of [`Self::forward_into`], in place. `tmp` is scratch
+    /// reused across calls (cleared here).
+    pub fn inverse_in_place(self, buf: &mut [u8], tmp: &mut Vec<u8>) {
+        let w = self.width as usize;
+        let rows = buf.len() / w;
+        let body = rows * w;
+        if self.delta {
+            for plane in buf[..body].chunks_exact_mut(rows.max(1)) {
+                let mut acc = 0u8;
+                for b in plane.iter_mut() {
+                    acc = acc.wrapping_add(*b);
+                    *b = acc;
+                }
+            }
+        }
+        if w > 1 && rows > 0 {
+            tmp.clear();
+            tmp.extend_from_slice(&buf[..body]);
+            for k in 0..w {
+                for j in 0..rows {
+                    buf[j * w + k] = tmp[k * rows + j];
+                }
+            }
+        }
+    }
+}
+
+/// Catalog/CLI token form: decimal width, optional trailing `d` for
+/// delta — `"8d"`, `"4"`. No spaces (catalog tokens are space-split).
+impl fmt::Display for Precond {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}{}", self.width, if self.delta { "d" } else { "" })
+    }
+}
+
+impl FromStr for Precond {
+    type Err = ScdaError;
+
+    fn from_str(s: &str) -> Result<Self> {
+        let (digits, delta) = match s.strip_suffix('d') {
+            Some(rest) => (rest, true),
+            None => (s, false),
+        };
+        let width: u8 = digits.parse().map_err(|_| {
+            ScdaError::corrupt(corrupt::BAD_CONVENTION, format!("bad preconditioning spec {s:?}"))
+        })?;
+        Precond::new(width, delta)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::Rng;
+
+    fn roundtrip(p: Precond, data: &[u8]) {
+        let mut t = Vec::new();
+        p.forward_into(data, &mut t);
+        assert_eq!(t.len(), data.len(), "{p} len {}", data.len());
+        let mut tmp = Vec::new();
+        p.inverse_in_place(&mut t, &mut tmp);
+        assert_eq!(t, data, "{p} len {}", data.len());
+    }
+
+    #[test]
+    fn roundtrips_all_widths_and_lengths() {
+        let mut rng = Rng::new(42);
+        for width in [1u8, 2, 3, 4, 7, 8, 16, 32] {
+            for delta in [false, true] {
+                let p = Precond::new(width, delta).unwrap();
+                for len in [0usize, 1, 2, 7, 8, 9, 63, 64, 65, 1000, 4096 + 5] {
+                    roundtrip(p, &rng.bytes(len, 256));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn structured_payloads_roundtrip_and_compress_better() {
+        // A smooth little-endian u32 ramp: after shuffle+delta the high
+        // planes are almost all zero, so deflate does strictly better.
+        let data: Vec<u8> = (0..20_000u32).flat_map(|i| (1000 + 3 * i).to_le_bytes()).collect();
+        let p = Precond::new(4, true).unwrap();
+        roundtrip(p, &data);
+        let mut t = Vec::new();
+        p.forward_into(&data, &mut t);
+        let raw = crate::codec::zlib_compress(&data, 6).len();
+        let pre = crate::codec::zlib_compress(&t, 6).len();
+        assert!(pre < raw, "preconditioned {pre} vs raw {raw}");
+    }
+
+    #[test]
+    fn tail_bytes_pass_through() {
+        let p = Precond::new(8, true).unwrap();
+        let data: Vec<u8> = (0..8 * 5 + 3).map(|i| i as u8).collect();
+        let mut t = Vec::new();
+        p.forward_into(&data, &mut t);
+        assert_eq!(&t[8 * 5..], &data[8 * 5..]);
+    }
+
+    #[test]
+    fn width_one_shuffle_is_identity() {
+        let data = b"width one leaves byte order alone".to_vec();
+        let p = Precond::new(1, false).unwrap();
+        let mut t = Vec::new();
+        p.forward_into(&data, &mut t);
+        assert_eq!(t, data);
+        // With delta, width 1 is a plain byte delta over the whole buffer.
+        let p = Precond::new(1, true).unwrap();
+        let mut t = Vec::new();
+        p.forward_into(&data, &mut t);
+        assert_eq!(t[0], data[0]);
+        assert_eq!(t[1], data[1].wrapping_sub(data[0]));
+        let mut tmp = Vec::new();
+        p.inverse_in_place(&mut t, &mut tmp);
+        assert_eq!(t, data);
+    }
+
+    #[test]
+    fn descriptor_and_string_forms_roundtrip() {
+        for width in 1..=Precond::MAX_WIDTH {
+            for delta in [false, true] {
+                let p = Precond::new(width, delta).unwrap();
+                assert_eq!(Precond::from_descriptor(p.descriptor()).unwrap(), p);
+                assert_eq!(p.to_string().parse::<Precond>().unwrap(), p);
+            }
+        }
+        assert!(Precond::new(0, false).is_err());
+        assert!(Precond::new(33, true).is_err());
+        assert!(Precond::from_descriptor(0).is_err());
+        assert!("".parse::<Precond>().is_err());
+        assert!("4x".parse::<Precond>().is_err());
+        assert!("d".parse::<Precond>().is_err());
+    }
+}

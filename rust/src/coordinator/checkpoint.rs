@@ -165,6 +165,17 @@ pub fn write_checkpoint<C: Communicator>(
     write_checkpoint_tuned(comm, path, app, step, part, fields, pre, metrics, IoTuning::default())
 }
 
+/// Write-side knobs beyond the defaults: the I/O engine tuning and the
+/// optional format-visible frame preconditioning (SPEC §5.4) applied to
+/// encoded fields — `'p'` frames whose shuffle/delta parameters the
+/// catalog records as the advisory `p=` token. Readers self-configure
+/// from the frame descriptor, so the knob is write-side only.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CheckpointOptions {
+    pub tuning: IoTuning,
+    pub frame_precond: Option<crate::codec::Precond>,
+}
+
 /// [`write_checkpoint`] with explicit I/O aggregation knobs. A
 /// checkpoint is the aggregation-friendly workload: many small metadata
 /// rows interleaved with field windows, written once, durably — staging
@@ -181,8 +192,26 @@ pub fn write_checkpoint_tuned<C: Communicator>(
     metrics: &Metrics,
     tuning: IoTuning,
 ) -> Result<()> {
+    let opts = CheckpointOptions { tuning, frame_precond: None };
+    write_checkpoint_with(comm, path, app, step, part, fields, pre, metrics, opts)
+}
+
+/// [`write_checkpoint`] with the full [`CheckpointOptions`] surface.
+#[allow(clippy::too_many_arguments)]
+pub fn write_checkpoint_with<C: Communicator>(
+    comm: C,
+    path: &Path,
+    app: &str,
+    step: u64,
+    part: &Partition,
+    fields: &[Field],
+    pre: &dyn Transform,
+    metrics: &Metrics,
+    opts: CheckpointOptions,
+) -> Result<()> {
     let mut ar = Archive::create(comm, path, format!("scda checkpoint: {app}").as_bytes())?;
-    ar.file_mut().set_io_tuning(tuning)?;
+    ar.file_mut().set_io_tuning(opts.tuning)?;
+    ar.file_mut().set_precondition(opts.frame_precond);
     restart::write_step(&mut ar, app, step, part, fields, pre, metrics)?;
     // Drain the engine inside the write timer — with staging on, this
     // flush is where the actual pwrites happen (and where the collective

@@ -14,8 +14,47 @@
 //!   coordinator layer and ablation benches: holds `&ParallelFile`,
 //!   auto-flushes at a high-water mark and on drop.
 
+use std::sync::Arc;
+
 use crate::error::Result;
 use crate::par::pfile::ParallelFile;
+
+/// One staged extent's bytes: owned outright, or a pinned shared buffer
+/// staged without copying. A pinned payload keeps its producer's
+/// allocation alive (via the `Arc`) until the flush that writes it —
+/// that is the whole point: codec output and large caller windows flow
+/// from producer to `pwrite` (or to the collective wire) with zero
+/// staging memcpy.
+#[derive(Debug, Clone)]
+pub enum Payload {
+    Owned(Vec<u8>),
+    Pinned(Arc<[u8]>),
+}
+
+impl Payload {
+    #[inline]
+    pub fn as_slice(&self) -> &[u8] {
+        match self {
+            Payload::Owned(v) => v,
+            Payload::Pinned(a) => a,
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.as_slice().len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.as_slice().is_empty()
+    }
+}
+
+/// Staging an owned buffer below this size copies it into the previous
+/// extent when contiguous (tiny header/count rows keep coalescing);
+/// larger owned buffers always stage by move. Pinned buffers never copy.
+const APPEND_MAX: usize = 4 * 1024;
 
 /// Staged positional writes, merged into contiguous runs at flush time.
 ///
@@ -24,11 +63,13 @@ use crate::par::pfile::ParallelFile;
 /// run by replaying its extents **in stage order** into one buffer and
 /// issuing a single `write_at` — so overlapping stages resolve exactly
 /// like the equivalent sequence of direct `pwrite`s (last writer wins),
-/// and the file bytes never depend on the flush schedule.
+/// and the file bytes never depend on the flush schedule. Single-extent
+/// runs (the common case for staged-by-move codec output) skip the
+/// replay buffer entirely: the staged payload is handed onward as-is.
 #[derive(Debug, Default)]
 pub struct WriteAggregator {
     /// Staged extents in stage order.
-    extents: Vec<(u64, Vec<u8>)>,
+    extents: Vec<(u64, Payload)>,
     staged_bytes: usize,
 }
 
@@ -46,36 +87,68 @@ impl WriteAggregator {
         self.extents.is_empty()
     }
 
-    /// Stage `data` at absolute `offset`. Contiguous with the previously
-    /// staged extent, the bytes append in place (the common pattern:
-    /// header row, count rows, data window of one section in file order).
+    /// Stage `data` at absolute `offset`, copying. Contiguous with the
+    /// previously staged owned extent, the bytes append in place (the
+    /// common pattern: header row, count rows, data window of one
+    /// section in file order).
     pub fn stage(&mut self, offset: u64, data: &[u8]) {
         if data.is_empty() {
             return;
         }
-        if let Some((o, buf)) = self.extents.last_mut() {
+        if let Some((o, Payload::Owned(buf))) = self.extents.last_mut() {
             if *o + buf.len() as u64 == offset {
                 buf.extend_from_slice(data);
                 self.staged_bytes += data.len();
                 return;
             }
         }
-        self.extents.push((offset, data.to_vec()));
+        self.extents.push((offset, Payload::Owned(data.to_vec())));
         self.staged_bytes += data.len();
+    }
+
+    /// Stage an owned buffer by move — the zero-copy staging path for
+    /// codec-materialized output. Small buffers contiguous with the
+    /// previous owned extent still append (coalescing beats saving a
+    /// tiny memcpy); everything else becomes its own extent, no copy.
+    pub fn stage_owned(&mut self, offset: u64, data: Vec<u8>) {
+        if data.is_empty() {
+            return;
+        }
+        if data.len() <= APPEND_MAX {
+            if let Some((o, Payload::Owned(buf))) = self.extents.last_mut() {
+                if *o + buf.len() as u64 == offset {
+                    self.staged_bytes += data.len();
+                    buf.extend_from_slice(&data);
+                    return;
+                }
+            }
+        }
+        self.staged_bytes += data.len();
+        self.extents.push((offset, Payload::Owned(data)));
+    }
+
+    /// Stage a pinned shared buffer — never copied; the `Arc` keeps the
+    /// bytes alive until the flush (or exchange) that consumes them.
+    pub fn stage_pinned(&mut self, offset: u64, data: Arc<[u8]>) {
+        if data.is_empty() {
+            return;
+        }
+        self.staged_bytes += data.len();
+        self.extents.push((offset, Payload::Pinned(data)));
     }
 
     /// Drain the raw staged extents in stage order, unmerged — the
     /// collective engine ships these to stripe owners, who merge on
     /// arrival (merging before the split would only be undone by the
     /// stripe boundaries).
-    pub fn take_extents(&mut self) -> Vec<(u64, Vec<u8>)> {
+    pub fn take_extents(&mut self) -> Vec<(u64, Payload)> {
         self.staged_bytes = 0;
         std::mem::take(&mut self.extents)
     }
 
     /// Drain the staged extents into merged contiguous runs, each run a
-    /// single `(offset, bytes)` ready for one `write_at`.
-    pub fn take_runs(&mut self) -> Vec<(u64, Vec<u8>)> {
+    /// single `(offset, payload)` ready for one `write_at`.
+    pub fn take_runs(&mut self) -> Vec<(u64, Payload)> {
         let mut staged = std::mem::take(&mut self.extents);
         self.staged_bytes = 0;
         if staged.is_empty() {
@@ -85,7 +158,7 @@ impl WriteAggregator {
         // order) to find runs; replay each run's members in stage order.
         let mut order: Vec<usize> = (0..staged.len()).collect();
         order.sort_by_key(|&i| staged[i].0);
-        let mut out: Vec<(u64, Vec<u8>)> = Vec::new();
+        let mut out: Vec<(u64, Payload)> = Vec::new();
         let mut i = 0usize;
         while i < order.len() {
             let start = staged[order[i]].0;
@@ -101,9 +174,10 @@ impl WriteAggregator {
                 }
             }
             if j == i + 1 {
-                // Single-extent run: move the staged buffer out, no copy.
+                // Single-extent run: move the staged payload out, no copy
+                // (for pinned payloads this is the zero-copy promise).
                 let (o, b) = &mut staged[order[i]];
-                out.push((*o, std::mem::take(b)));
+                out.push((*o, std::mem::replace(b, Payload::Owned(Vec::new()))));
             } else {
                 // Every byte of [start, end) is covered: a run only grows
                 // while the next extent starts at or before its end.
@@ -113,9 +187,9 @@ impl WriteAggregator {
                 for m in members {
                     let (o, b) = &staged[m];
                     let rel = (*o - start) as usize;
-                    buf[rel..rel + b.len()].copy_from_slice(b);
+                    buf[rel..rel + b.len()].copy_from_slice(b.as_slice());
                 }
-                out.push((start, buf));
+                out.push((start, Payload::Owned(buf)));
             }
             i = j;
         }
@@ -127,7 +201,7 @@ impl WriteAggregator {
     pub fn flush_to(&mut self, file: &ParallelFile) -> Result<u64> {
         let mut writes = 0u64;
         for (o, buf) in self.take_runs() {
-            file.write_at(o, &buf)?;
+            file.write_at(o, buf.as_slice())?;
             writes += 1;
         }
         Ok(writes)
@@ -292,15 +366,59 @@ mod tests {
         assert!(a.is_empty());
         assert_eq!(a.staged_bytes(), 0);
         assert_eq!(runs.len(), 2);
-        assert_eq!(runs[0], (0, b"aabb".to_vec()));
-        assert_eq!(runs[1], (10, b"cc".to_vec()));
+        assert_eq!((runs[0].0, runs[0].1.as_slice()), (0, &b"aabb"[..]));
+        assert_eq!((runs[1].0, runs[1].1.as_slice()), (10, &b"cc"[..]));
     }
 
     #[test]
     fn empty_stage_is_a_no_op() {
         let mut a = WriteAggregator::new();
         a.stage(5, b"");
+        a.stage_owned(6, Vec::new());
+        a.stage_pinned(7, Vec::new().into());
         assert!(a.is_empty());
         assert!(a.take_runs().is_empty());
+    }
+
+    #[test]
+    fn owned_staging_moves_large_buffers_without_copy() {
+        let mut a = WriteAggregator::new();
+        let big: Vec<u8> = (0..2 * APPEND_MAX).map(|i| (i % 251) as u8).collect();
+        let expect = big.clone();
+        let ptr = big.as_ptr();
+        a.stage_owned(100, big);
+        let runs = a.take_runs();
+        assert_eq!(runs.len(), 1);
+        let Payload::Owned(out) = &runs[0].1 else { panic!("owned run") };
+        assert_eq!(out.as_ptr(), ptr, "buffer moved, never copied");
+        assert_eq!(out, &expect);
+    }
+
+    #[test]
+    fn small_owned_buffers_still_coalesce() {
+        let mut a = WriteAggregator::new();
+        a.stage(0, b"head");
+        a.stage_owned(4, b"tail".to_vec());
+        let runs = a.take_runs();
+        assert_eq!(runs.len(), 1, "contiguous small owned write appended");
+        assert_eq!(runs[0].1.as_slice(), b"headtail");
+    }
+
+    #[test]
+    fn pinned_staging_shares_and_merges_with_neighbors() {
+        let shared: std::sync::Arc<[u8]> = b"SHARED".to_vec().into();
+        let mut a = WriteAggregator::new();
+        a.stage(0, b"<<");
+        a.stage_pinned(2, std::sync::Arc::clone(&shared));
+        a.stage(8, b">>");
+        assert_eq!(a.staged_bytes(), 10);
+        let runs = a.take_runs();
+        assert_eq!(runs.len(), 1);
+        assert_eq!(runs[0].1.as_slice(), b"<<SHARED>>");
+        // A lone pinned extent comes back out as the same allocation.
+        a.stage_pinned(50, std::sync::Arc::clone(&shared));
+        let runs = a.take_runs();
+        let Payload::Pinned(p) = &runs[0].1 else { panic!("pinned run") };
+        assert!(std::sync::Arc::ptr_eq(p, &shared));
     }
 }

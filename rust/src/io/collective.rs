@@ -3,7 +3,9 @@
 //! collective points, ship them over [`Communicator::alltoall_bytes`] to
 //! the *aggregator rank* owning each file stripe. Phase one is the
 //! exchange; phase two is each aggregator replaying the fragments it
-//! received and issuing one `pwrite` per contiguous run of its stripes.
+//! received and issuing one `pwrite` per contiguous run within each of
+//! its stripes (runs never span a stripe boundary at P > 1, so every
+//! touched stripe is exactly one syscall no matter who owns it).
 //!
 //! # Why this helps
 //!
@@ -15,11 +17,26 @@
 //! interleave ranks: write syscalls become a function of *file size*,
 //! not of *access pattern* (`rust/tests/io_engines.rs` asserts this).
 //!
+//! # Stripe ownership: staging affinity
+//!
+//! Stripe `s` (bytes `[s·S, (s+1)·S)`) needs exactly one owner per
+//! exchange. A uniform `s mod P` map is correct but oblivious: when one
+//! rank staged nearly all of a stripe, a uniform map usually ships those
+//! bytes to a different rank anyway. Each exchange therefore *elects*
+//! owners from the staging pattern itself: every rank announces its
+//! per-stripe staged byte counts with one allgather, and all ranks
+//! deterministically pick, per stripe, the rank that staged the most
+//! bytes of it (on a tie, `s mod P` if it is among the tied maxima, else
+//! the lowest tied rank — so balanced interleavings keep the uniform
+//! map's spread instead of piling onto rank 0). The map is a pure
+//! function of collective inputs, so all ranks agree on it; stripes no
+//! rank staged simply have no fragments. The read gather below keeps the
+//! plain `s mod P` map: readers cannot know who staged what at write
+//! time, and the file bytes don't depend on it.
+//!
 //! # Correctness
 //!
-//! Stripe `s` (bytes `[s·S, (s+1)·S)`) is owned by rank `s mod P`; the
-//! ownership map is a pure function of collective inputs, so all ranks
-//! agree on it without communication. Serial equivalence survives the
+//! Serial equivalence survives the
 //! re-homing because (a) the section paths write every file byte exactly
 //! once, and a rank's staged extents lie in its own disjoint windows, so
 //! fragments from different sources never overlap; (b) fragments from
@@ -54,7 +71,7 @@
 use std::sync::Arc;
 
 use crate::error::{corrupt, Result, ScdaError};
-use crate::io::aggregate::WriteAggregator;
+use crate::io::aggregate::{Payload, WriteAggregator};
 use crate::io::engine::{dispatch_runs, EngineStats, IoEngine, StagedCore};
 use crate::io::sieve::ReadSieve;
 use crate::par::comm::Communicator;
@@ -71,7 +88,9 @@ pub struct CollectiveEngine {
     /// half of it; also the large-access bypass bound), the read sieve
     /// and the optional background flusher.
     core: StagedCore,
-    /// Stripe size in bytes; stripe `s` is owned by rank `s % P`.
+    /// Stripe size in bytes. Write-side ownership is elected per
+    /// exchange from staged-byte counts (module docs); the read gather
+    /// uses the uniform `s % P` map.
     stripe: u64,
     shipped_bytes: u64,
     exchanges: u64,
@@ -105,29 +124,89 @@ impl CollectiveEngine {
         }
     }
 
+    /// All ranks' per-stripe staged byte counts → the elected owner map
+    /// for this exchange (module docs, "staging affinity"). One
+    /// allgather; every rank computes the same map because it is a pure
+    /// function of the gathered counts.
+    fn elect_owners(
+        &self,
+        counts: &std::collections::BTreeMap<u64, u64>,
+        comm: &dyn Communicator,
+    ) -> std::collections::BTreeMap<u64, usize> {
+        let p = comm.size();
+        let mut wire = Vec::with_capacity(counts.len() * 16);
+        for (&s, &b) in counts {
+            wire.extend_from_slice(&s.to_le_bytes());
+            wire.extend_from_slice(&b.to_le_bytes());
+        }
+        // (best bytes, best rank) per stripe; ranks iterate in ascending
+        // order and only strictly-greater counts replace, so ties keep
+        // the lowest rank here — the `s mod P` preference applies below.
+        let mut best: std::collections::BTreeMap<u64, (u64, usize)> =
+            std::collections::BTreeMap::new();
+        let mut default_count: std::collections::BTreeMap<u64, u64> =
+            std::collections::BTreeMap::new();
+        for (rank, payload) in comm.allgather_bytes(wire).into_iter().enumerate() {
+            for pair in payload.chunks_exact(16) {
+                let s = u64::from_le_bytes(pair[..8].try_into().unwrap());
+                let b = u64::from_le_bytes(pair[8..].try_into().unwrap());
+                let e = best.entry(s).or_insert((0, rank));
+                if b > e.0 {
+                    *e = (b, rank);
+                }
+                if rank == (s as usize) % p {
+                    default_count.insert(s, b);
+                }
+            }
+        }
+        best.into_iter()
+            .map(|(s, (b, r))| {
+                let default = (s as usize) % p;
+                let owner = if default_count.get(&s) == Some(&b) { default } else { r };
+                (s, owner)
+            })
+            .collect()
+    }
+
     /// Phase one + two: split staged extents at stripe boundaries, ship
-    /// each fragment to its stripe's owner, replay what this rank
-    /// received (own fragments included, in source-rank order) and write
-    /// one syscall per contiguous run. Collective.
+    /// each fragment to its stripe's elected owner, replay what this
+    /// rank received (own fragments included, in source-rank order) and
+    /// write one syscall per contiguous run. Collective.
     fn exchange(&mut self, file: &Arc<ParallelFile>, comm: &dyn Communicator) -> Result<()> {
         let p = comm.size();
         let me = comm.rank();
         self.exchanges += 1;
         let shipped_before = self.shipped_bytes;
         let extents = self.core.agg.take_extents();
+        // Per-stripe staged byte counts feed the ownership election.
+        let mut counts: std::collections::BTreeMap<u64, u64> = std::collections::BTreeMap::new();
+        for (off, buf) in &extents {
+            let mut at = 0usize;
+            while at < buf.len() {
+                let o = off + at as u64;
+                let stripe_idx = o / self.stripe;
+                let take = (((stripe_idx + 1) * self.stripe - o) as usize).min(buf.len() - at);
+                *counts.entry(stripe_idx).or_insert(0) += take as u64;
+                at += take;
+            }
+        }
+        let owners = self.elect_owners(&counts, comm);
         let mut outgoing: Vec<Vec<u8>> = vec![Vec::new(); p];
         // This rank's fragments for its own stripes skip the wire — and
         // the copy: they stay borrowed views into `extents` until the
         // replay below.
         let mut mine: Vec<(u64, &[u8])> = Vec::new();
-        for (off, buf) in &extents {
+        for (off, payload) in &extents {
+            let buf = payload.as_slice();
             let mut at = 0usize;
             while at < buf.len() {
                 let o = off + at as u64;
                 let stripe_idx = o / self.stripe;
                 let stripe_end = (stripe_idx + 1) * self.stripe;
                 let take = ((stripe_end - o) as usize).min(buf.len() - at);
-                let dest = (stripe_idx as usize) % p;
+                // Every staged stripe was counted above, so the elected
+                // map always has an entry here.
+                let dest = owners[&stripe_idx];
                 let frag = &buf[at..at + take];
                 if dest == me {
                     mine.push((o, frag));
@@ -178,10 +257,40 @@ impl CollectiveEngine {
             }
         }
         let runs = recv.take_runs();
+        let runs = if p > 1 { self.split_runs_at_stripes(runs) } else { runs };
         if !runs.is_empty() {
             self.core.flush_batches += 1;
         }
         dispatch_runs(&mut self.core.flusher, file, runs)
+    }
+
+    /// Splits replayed runs at stripe boundaries so each touched stripe
+    /// stays exactly one `pwrite` — the invariant `io_engines.rs` pins.
+    /// Under the uniform map adjacent stripes never shared an owner and
+    /// runs could not cross a boundary; the affinity election can hand
+    /// one rank adjacent stripes, so the split (and its copy) only ever
+    /// triggers on those elected adjacencies.
+    fn split_runs_at_stripes(&self, runs: Vec<(u64, Payload)>) -> Vec<(u64, Payload)> {
+        let mut out = Vec::with_capacity(runs.len());
+        for (off, payload) in runs {
+            if payload.is_empty() {
+                continue;
+            }
+            let end = off + payload.len() as u64 - 1;
+            if off / self.stripe == end / self.stripe {
+                out.push((off, payload));
+                continue;
+            }
+            let buf = payload.as_slice();
+            let mut at = 0usize;
+            while at < buf.len() {
+                let o = off + at as u64;
+                let take = (((o / self.stripe + 1) * self.stripe - o) as usize).min(buf.len() - at);
+                out.push((o, Payload::Owned(buf[at..at + take].to_vec())));
+                at += take;
+            }
+        }
+        out
     }
 
     /// The collective read gather; see the module docs. Every rank's
@@ -372,6 +481,13 @@ impl IoEngine for CollectiveEngine {
         self.core.stage_write(file, offset, data)
     }
 
+    fn write_owned(&mut self, file: &Arc<ParallelFile>, offset: u64, data: Vec<u8>) -> Result<()> {
+        // Same policy as `write`, minus the staging memcpy: the owned
+        // buffer parks in the aggregator until the exchange slices it
+        // (own-stripe fragments are then borrowed straight from it).
+        self.core.stage_write_owned(file, offset, data)
+    }
+
     fn view(&mut self, file: &Arc<ParallelFile>, offset: u64, len: usize) -> Result<&[u8]> {
         self.core.view(file, offset, len)
     }
@@ -516,6 +632,86 @@ mod tests {
             assert!(chunk.iter().all(|&b| b as usize == i % 4), "extent {i}");
         }
         std::fs::remove_file(&*path).unwrap();
+    }
+
+    #[test]
+    fn affinity_election_keeps_majority_stripes_local() {
+        // Rank r writes almost all of stripe (r+1)%4 (bytes [64, 4096))
+        // and a 64-byte sliver at the start of stripe r. Under the old
+        // uniform map every rank would ship its 4032-byte majority
+        // fragment to rank (r+1)%4; under staging-affinity election the
+        // majority writer owns the stripe, so only the slivers travel.
+        let path = Arc::new(tmp("affinity"));
+        let p = Arc::clone(&path);
+        let stats = run_parallel(4, move |comm| {
+            let f = Arc::new(ParallelFile::create(&comm, &*p).unwrap());
+            let mut e = CollectiveEngine::new(1 << 20, 4096, None, false);
+            let me = comm.rank() as u64;
+            let big = (me + 1) % 4;
+            e.write(&f, big * 4096 + 64, &[me as u8; 4032]).unwrap();
+            e.write(&f, me * 4096, &[me as u8; 64]).unwrap();
+            e.flush(&f, &comm).unwrap();
+            comm.barrier();
+            (f.io_stats().write_calls, e.stats().shipped_bytes)
+        });
+        for (r, (writes, shipped)) in stats.iter().enumerate() {
+            assert_eq!(*shipped, 64, "rank {r}: only the sliver ships");
+            // The sliver received from rank (r+1)%4 lands flush against
+            // this rank's own majority fragment: one run, one pwrite.
+            assert_eq!(*writes, 1, "rank {r}: one merged pwrite");
+        }
+        let data = std::fs::read(&*path).unwrap();
+        assert_eq!(data.len(), 4 * 4096);
+        for s in 0..4usize {
+            let stripe = &data[s * 4096..(s + 1) * 4096];
+            assert!(stripe[..64].iter().all(|&b| b as usize == s), "stripe {s} sliver");
+            let writer = (s + 3) % 4;
+            assert!(stripe[64..].iter().all(|&b| b as usize == writer), "stripe {s} body");
+        }
+        std::fs::remove_file(&*path).unwrap();
+    }
+
+    #[test]
+    fn elected_adjacent_stripes_still_write_one_pwrite_each() {
+        // Rank 0 stages both 4 KiB stripes of an 8 KiB span; the
+        // election hands it both (rank 1 staged nothing), and the replay
+        // must still split at the stripe boundary — one pwrite per
+        // touched stripe, the invariant `io_engines.rs` builds on.
+        let path = Arc::new(tmp("adjacent"));
+        let p = Arc::clone(&path);
+        let stats = run_parallel(2, move |comm| {
+            let f = Arc::new(ParallelFile::create(&comm, &*p).unwrap());
+            let mut e = CollectiveEngine::new(1 << 20, 4096, None, false);
+            if comm.rank() == 0 {
+                e.write(&f, 0, &[0xABu8; 8192]).unwrap();
+            }
+            e.flush(&f, &comm).unwrap();
+            comm.barrier();
+            (f.io_stats().write_calls, e.stats().shipped_bytes)
+        });
+        assert_eq!(stats[0], (2, 0), "two stripes, two pwrites, nothing shipped");
+        assert_eq!(stats[1], (0, 0), "rank 1 neither wrote nor shipped");
+        let data = std::fs::read(&*path).unwrap();
+        assert_eq!(data.len(), 8192);
+        assert!(data.iter().all(|&b| b == 0xAB));
+        std::fs::remove_file(&*path).unwrap();
+    }
+
+    #[test]
+    fn owned_writes_stage_without_copy_and_match() {
+        let path = tmp("owned");
+        let f = Arc::new(ParallelFile::create(&SerialComm::new(), &path).unwrap());
+        let mut e = CollectiveEngine::new(1 << 20, 4096, None, false);
+        let a: Vec<u8> = (0..9000u32).map(|i| (i % 251) as u8).collect();
+        let expect = a.clone();
+        e.write_owned(&f, 0, a).unwrap();
+        e.write(&f, 9000, &[0xEEu8; 40]).unwrap();
+        assert_eq!(f.io_stats().write_calls, 0, "both staged");
+        e.flush(&f, &SerialComm::new()).unwrap();
+        let got = f.read_vec(0, 9040).unwrap();
+        assert_eq!(&got[..9000], &expect[..]);
+        assert!(got[9000..].iter().all(|&b| b == 0xEE));
+        std::fs::remove_file(&path).unwrap();
     }
 
     #[test]

@@ -39,7 +39,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
 use crate::error::{Result, ScdaError};
-use crate::io::aggregate::WriteAggregator;
+use crate::io::aggregate::{Payload, WriteAggregator};
 use crate::io::sieve::ReadSieve;
 use crate::io::{IoEngineKind, IoTuning};
 use crate::par::comm::Communicator;
@@ -93,6 +93,15 @@ pub trait IoEngine: Send {
 
     /// Stage or issue `data` at absolute `offset` (this rank's window).
     fn write(&mut self, file: &Arc<ParallelFile>, offset: u64, data: &[u8]) -> Result<()>;
+
+    /// Like [`Self::write`], but the caller relinquishes the buffer —
+    /// staging engines move it into the aggregator as its own extent
+    /// instead of memcpy'ing it (the zero-copy path for
+    /// codec-materialized frames). The default delegates to `write`,
+    /// so the byte semantics are identical on every engine.
+    fn write_owned(&mut self, file: &Arc<ParallelFile>, offset: u64, data: Vec<u8>) -> Result<()> {
+        self.write(file, offset, &data)
+    }
 
     /// A borrowed view of `len` bytes at `offset` — the metadata read
     /// primitive (section prefixes, count rows). Sieved engines serve it
@@ -343,6 +352,27 @@ impl StagedCore {
         Ok(())
     }
 
+    /// [`Self::stage_write`] for an owned buffer: same spill/bypass
+    /// policy, but the staged path *moves* the buffer into the
+    /// aggregator (no memcpy), and the bypass writes straight from it.
+    pub(crate) fn stage_write_owned(
+        &mut self,
+        file: &Arc<ParallelFile>,
+        offset: u64,
+        data: Vec<u8>,
+    ) -> Result<()> {
+        let cap = self.capacity;
+        if cap == 0 || data.len() >= cap {
+            self.drain_staged_locally(file)?;
+            return file.write_at(offset, &data);
+        }
+        if self.agg.staged_bytes() + data.len() > cap {
+            self.drain_staged_locally(file)?;
+        }
+        self.agg.stage_owned(offset, data);
+        Ok(())
+    }
+
     pub(crate) fn view(&mut self, file: &ParallelFile, offset: u64, len: usize) -> Result<&[u8]> {
         route_view(self.sieve.as_mut(), &mut self.scratch, file, offset, len)
     }
@@ -444,7 +474,7 @@ struct FlushCtl {
 /// so any execution order produces the same file.
 struct FlushBatch {
     file: Arc<ParallelFile>,
-    runs: Vec<(u64, Vec<u8>)>,
+    runs: Vec<(u64, Payload)>,
     next: AtomicUsize,
     done: AtomicUsize,
     ctl: Arc<FlushCtl>,
@@ -462,7 +492,7 @@ impl ParJob for FlushBatch {
             };
         }
         let (off, buf) = &self.runs[i];
-        if let Err(e) = self.file.write_at(*off, buf) {
+        if let Err(e) = self.file.write_at(*off, buf.as_slice()) {
             let mut g = self.ctl.error.lock().unwrap();
             if g.is_none() {
                 *g = Some(e);
@@ -500,7 +530,7 @@ impl AsyncFlusher {
         }
     }
 
-    pub(crate) fn submit(&mut self, file: &Arc<ParallelFile>, runs: Vec<(u64, Vec<u8>)>) {
+    pub(crate) fn submit(&mut self, file: &Arc<ParallelFile>, runs: Vec<(u64, Payload)>) {
         if runs.is_empty() {
             return;
         }
@@ -555,7 +585,7 @@ impl AsyncFlusher {
 pub(crate) fn dispatch_runs(
     flusher: &mut Option<AsyncFlusher>,
     file: &Arc<ParallelFile>,
-    runs: Vec<(u64, Vec<u8>)>,
+    runs: Vec<(u64, Payload)>,
 ) -> Result<()> {
     match flusher {
         Some(fl) => {
@@ -564,7 +594,7 @@ pub(crate) fn dispatch_runs(
         }
         None => {
             for (off, buf) in runs {
-                file.write_at(off, &buf)?;
+                file.write_at(off, buf.as_slice())?;
             }
             Ok(())
         }
@@ -598,6 +628,10 @@ impl IoEngine for AggregatingEngine {
 
     fn write(&mut self, file: &Arc<ParallelFile>, offset: u64, data: &[u8]) -> Result<()> {
         self.core.stage_write(file, offset, data)
+    }
+
+    fn write_owned(&mut self, file: &Arc<ParallelFile>, offset: u64, data: Vec<u8>) -> Result<()> {
+        self.core.stage_write_owned(file, offset, data)
     }
 
     fn view(&mut self, file: &Arc<ParallelFile>, offset: u64, len: usize) -> Result<&[u8]> {

@@ -36,7 +36,7 @@ pub mod collective;
 pub mod engine;
 pub mod sieve;
 
-pub use aggregate::{WriteAggregator, WriteCoalescer};
+pub use aggregate::{Payload, WriteAggregator, WriteCoalescer};
 pub use collective::CollectiveEngine;
 pub use engine::{take_drop_error, AggregatingEngine, DirectEngine, EngineStats, IoEngine};
 pub use sieve::ReadSieve;

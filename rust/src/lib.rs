@@ -180,6 +180,56 @@
 //!   [`coordinator::checkpoint::read_checkpoint_tuned`]
 //!   (`Metrics::{read_calls, bytes_read, bytes_gathered}`).
 //!
+//! # Data-plane speed
+//!
+//! The data plane — the bytes' path from caller memory through the
+//! codec into the engines — is tuned end to end, always under the same
+//! non-negotiable: file bytes stay bit-identical at any rank and worker
+//! count. `BENCH_codec.json` / `BENCH_io.json` track what each layer
+//! buys.
+//!
+//! * **Wide LZ77 match loop** ([`codec::lz77`]): candidate matches
+//!   extend by `u64` block compares (one XOR + trailing-zero count per
+//!   8 bytes), candidates come from a 4-byte rolling hash chain with
+//!   head-only insertion inside matches — the classic "lazy but not
+//!   quadratic" shape, with identical token output to the byte-at-a-time
+//!   loop (pinned by `rust/tests/compression_conformance.rs`).
+//! * **Multi-symbol Huffman decode** ([`codec::huffman`],
+//!   [`codec::bitio`]): inflate decodes through a two-level
+//!   lookup-table (a root table indexed by the next ~10 bits resolving
+//!   short codes in one probe, overflow sub-tables for long codes) fed
+//!   by a ≥32-bit bit reservoir refilled in one unaligned load —
+//!   differential-tested against the canonical tree walk over random
+//!   and adversarial code sets.
+//! * **Preconditioning stage** ([`codec::Precond`], SPEC §5.4): an
+//!   optional, format-visible byte-shuffle (by element width) plus
+//!   per-plane delta ahead of deflate, carried per frame by the `'p'`
+//!   marker + descriptor byte. Self-describing on the wire (readers
+//!   auto-decode; the Python reference implementation interoperates
+//!   both directions), surfaced via [`api::ScdaFile::set_precondition`],
+//!   [`coordinator::checkpoint::CheckpointOptions`] and the CLI
+//!   (`demo-write --frame-precond`, `ls --json`), and recorded as the
+//!   advisory catalog token `p=<w>[d]`.
+//! * **Zero-copy extent staging** ([`io::Payload`]): staged extents are
+//!   `Owned` (encoded buffers move, never copy, into the aggregator via
+//!   the `write_owned` route) or `Pinned` (stable caller bytes), so the
+//!   write path's steady-state copy count drops to the one unavoidable
+//!   kernel copy; drains and the collective exchange borrow payload
+//!   slices instead of materializing runs.
+//! * **Staging-affinity stripe ownership** ([`io::CollectiveEngine`]):
+//!   each exchange elects every stripe's owner as the rank that staged
+//!   the most bytes for it (ties prefer the uniform `s mod P` owner),
+//!   so shipped bytes track actual misalignment instead of the worst
+//!   case — majority-local workloads keep their bytes on-rank. The
+//!   election is deterministic from collective inputs, and owner-side
+//!   runs still split at stripe boundaries, preserving the engine's
+//!   syscall-count invariants.
+//! * **Lockstep scan dedup** ([`api::ScdaFile::toc`]): table-of-contents
+//!   scans mark their header reads as lockstep-identical across ranks,
+//!   so under the collective engine `P` identical metadata `pread`s
+//!   dedupe to one owner-side read — scan syscalls no longer scale with
+//!   the rank count (`rust/tests/io_read_gather.rs`).
+//!
 //! # Archive layer
 //!
 //! The paper leaves "the definition of variables … and self-describing

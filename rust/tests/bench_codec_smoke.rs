@@ -21,6 +21,14 @@ fn codec_bench_quick_records_json() {
     assert!(written.contains("\"bench\": \"codec\""));
     assert!(written.contains("encoded_write"));
     assert!(written.contains("encoded_read"));
+    assert!(written.contains("precond_frames"));
+    // The §5.4 stage must actually shrink the AMR f64 frames.
+    assert!(
+        t.precond.size_ratio() > 1.0,
+        "preconditioning grew the encoded bytes: {} -> {}",
+        t.precond.plain_bytes,
+        t.precond.precond_bytes
+    );
     println!(
         "codec quick: write {:.0} -> {:.0} MiB/s ({:.2}x), read {:.0} -> {:.0} MiB/s ({:.2}x); wrote {}",
         t.write_serial,
@@ -44,4 +52,8 @@ fn codec_bench_harness_roundtrips_tiny_workload() {
     let r = t.report().render();
     assert!(r.contains("\"pooled_mib_per_s\""));
     assert!(r.contains("\"speedup\""));
+    // The precond entry carries real byte counts (size, not timing, so
+    // it is exact even at this scale).
+    assert!(r.contains("\"precond_encoded_bytes\""));
+    assert!(t.precond.plain_bytes > 0 && t.precond.precond_bytes > 0);
 }

@@ -81,7 +81,7 @@ fn element_framing_randomized() {
         let data = rng.bytes(len, alphabet);
         let style = if rng.bool() { LineStyle::Unix } else { LineStyle::Mime };
         let level = rng.below(10) as u8;
-        let enc = encode_element(&data, CodecOptions { level, style });
+        let enc = encode_element(&data, CodecOptions { level, style, ..CodecOptions::default() });
         assert!(enc.is_ascii());
         assert_eq!(decode_element(&enc).unwrap(), data);
     }

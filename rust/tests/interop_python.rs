@@ -168,6 +168,64 @@ print("PY-READ-OK")
 }
 
 #[test]
+fn python_reads_rust_preconditioned_file_and_vice_versa() {
+    if python().is_none() {
+        return;
+    }
+    // Rust writes SPEC §5.4 'p' frames (shuffle width 4 + delta); the
+    // foreign reader must self-configure from the descriptor byte.
+    let path = tmp("rust-p");
+    let mut f = ScdaFile::create(SerialComm::new(), &path, b"from rust").unwrap();
+    f.set_precondition(Some(scda::codec::Precond::new(4, true).unwrap()));
+    let part = Partition::uniform(1, 16);
+    let data: Vec<u8> = (0..16u32 * 25).flat_map(|i| (1000 + 3 * i).to_le_bytes()).collect();
+    f.write_array(DataSrc::Contiguous(&data), &part, 100, Some(b"pa"), true).unwrap();
+    f.write_block_from(0, Some(&data), data.len() as u64, Some(b"pb"), true).unwrap();
+    f.close().unwrap();
+    let out = run_py(&format!(
+        r#"
+from scda_py import ScdaReader
+r = ScdaReader({path:?})
+expect = b"".join((1000 + 3 * i).to_bytes(4, "little") for i in range(16 * 25))
+k, u, elems = r.next_section()
+assert (k, u) == ("A", b"pa") and b"".join(elems) == expect, (k, u)
+k, u, data = r.next_section()
+assert (k, u) == ("B", b"pb") and data == expect, (k, u)
+assert r.at_end()
+print("PY-P-READ-OK")
+"#
+    ));
+    assert!(out.contains("PY-P-READ-OK"));
+    std::fs::remove_file(&path).unwrap();
+
+    // And the reverse: python-written 'p' frames decode transparently
+    // here, with the same payload bytes.
+    let path = tmp("py-p");
+    run_py(&format!(
+        r#"
+from scda_py import ScdaWriter
+data = b"".join((1000 + 3 * i).to_bytes(4, "little") for i in range(16 * 25))
+w = ScdaWriter({path:?}, b"from python")
+w.write_array(data, 16, 100, b"pa", encode=True, precondition=(4, True))
+w.write_block(data, b"pb", encode=True, precondition=(8, False))
+w.close()
+"#
+    ));
+    scda::api::verify_file(&path).unwrap();
+    let expect: Vec<u8> = (0..16u32 * 25).flat_map(|i| (1000 + 3 * i).to_le_bytes()).collect();
+    let mut f = ScdaFile::open(SerialComm::new(), &path).unwrap();
+    let h = f.read_section_header(true).unwrap();
+    assert!(h.decoded);
+    let a = f.read_array_data(&part, 100, true).unwrap().unwrap();
+    assert_eq!(a, expect);
+    let h = f.read_section_header(true).unwrap();
+    assert!(h.decoded);
+    assert_eq!(f.read_block_data(0, true).unwrap().unwrap(), expect);
+    f.close().unwrap();
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
 fn python_verifies_rust_checkpoint_structure() {
     if python().is_none() {
         return;

@@ -175,6 +175,35 @@ fn gather_preads_track_bytes_touched_not_ranks_or_interleaving() {
     }
 }
 
+/// Lockstep toc scans route their header and size-row reads through the
+/// collective gather: every rank requests the identical windows, owners
+/// read each once, and the summed owner-side preads are invariant in
+/// the rank count — instead of every rank paying its own header preads.
+#[test]
+fn toc_scan_dedupes_header_preads_across_ranks() {
+    let (sections, elems) = (4usize, 64usize);
+    let path = Arc::new(tmp("toc-dedup"));
+    write_workload(&path, sections, elems, 48);
+    let tuning = IoTuning::collective().with_stripe_size(4 << 10);
+    let mut sums = Vec::new();
+    for ranks in [2usize, 4] {
+        let p = Arc::clone(&path);
+        let stats = run_parallel(ranks, move |comm| {
+            let mut f = ScdaFile::open(comm, &**p).unwrap();
+            f.set_io_tuning(tuning).unwrap();
+            let toc = f.toc(false).unwrap();
+            assert_eq!(toc.len(), 3 + sections);
+            let st = f.engine_stats();
+            f.close().unwrap();
+            st
+        });
+        assert!(stats.iter().all(|s| s.read_exchanges > 0), "scan reads went through the gather");
+        sums.push(stats.iter().map(|s| s.gather_preads).sum::<u64>());
+    }
+    assert_eq!(sums[0], sums[1], "toc preads must not scale with the rank count");
+    std::fs::remove_file(&*path).unwrap();
+}
+
 /// The gather moves bytes between ranks and beats the per-rank direct
 /// syscall count on interleaved reads.
 #[test]

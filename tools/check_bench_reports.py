@@ -1,0 +1,62 @@
+#!/usr/bin/env python3
+"""Fail CI if a committed BENCH_*.json perf snapshot is missing or stale.
+
+"Stale" is structural, not numeric: timing values are machine-dependent
+and change every run, so the committed snapshot is compared against a
+freshly regenerated report on its *shape* — the bench id, the metadata
+keys, and the ordered list of entry names with each entry's field set.
+A harness change that adds, removes or renames a tracked entry without
+recommitting the snapshots fails here.
+
+Usage (see .github/workflows/ci.yml): copy the committed reports to
+/tmp/committed-<name>, regenerate the reports in place via the quick
+bench smoke tests, then run this script from the repository root.
+"""
+
+import json
+import pathlib
+import sys
+
+REPORTS = ["BENCH_codec.json", "BENCH_io.json", "BENCH_archive.json"]
+COMMITTED_DIR = pathlib.Path(sys.argv[1] if len(sys.argv) > 1 else "/tmp")
+
+
+def shape(doc):
+    meta_keys = sorted(k for k in doc if k != "entries")
+    entries = [(e.get("name"), sorted(e)) for e in doc.get("entries", [])]
+    return {"meta": meta_keys, "entries": entries}
+
+
+def main():
+    failures = []
+    for name in REPORTS:
+        committed_path = COMMITTED_DIR / f"committed-{name}"
+        fresh_path = pathlib.Path(name)
+        if not committed_path.exists():
+            failures.append(f"{name}: not committed (copy step found no file)")
+            continue
+        if not fresh_path.exists():
+            failures.append(f"{name}: bench run did not regenerate it")
+            continue
+        try:
+            committed = shape(json.loads(committed_path.read_text()))
+            fresh = shape(json.loads(fresh_path.read_text()))
+        except (json.JSONDecodeError, AttributeError) as e:
+            failures.append(f"{name}: unparseable report ({e})")
+            continue
+        if committed != fresh:
+            failures.append(
+                f"{name}: committed snapshot is stale\n"
+                f"  committed shape: {committed}\n"
+                f"  fresh shape:     {fresh}"
+            )
+        else:
+            n = len(fresh["entries"])
+            print(f"OK {name}: {n} entries, shape matches")
+    for f in failures:
+        print(f"FAIL {f}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
