@@ -126,6 +126,12 @@ pub struct ScdaFile<C: Communicator> {
     /// through the collective window read and the gathering engine
     /// dedupes the P identical header preads to one owner-side read.
     pub(crate) lockstep_scan: bool,
+    /// First persistent write-path error seen on this rank, as its wire
+    /// form `(code, message)`. Kept (never cleared) so every later
+    /// collective point — `flush`, `section_end`, `close` — re-surfaces
+    /// the same error on *all* ranks through the agreement exchange,
+    /// even when the failing rank's engine has nothing left staged.
+    pub(crate) sticky_error: Option<(i32, String)>,
 }
 
 impl<C: Communicator> std::fmt::Debug for ScdaFile<C> {
@@ -164,6 +170,7 @@ impl<C: Communicator> ScdaFile<C> {
             engine,
             closed: false,
             lockstep_scan: false,
+            sticky_error: None,
         };
         // The file header is just the first staged extent: it coalesces
         // with the first section's rows into one write.
@@ -199,6 +206,7 @@ impl<C: Communicator> ScdaFile<C> {
             engine,
             closed: false,
             lockstep_scan: false,
+            sticky_error: None,
         })
     }
 
@@ -295,6 +303,16 @@ impl<C: Communicator> ScdaFile<C> {
         self.file.inject_write_failure(after);
     }
 
+    /// Arm a deterministic [`crate::io::FaultPlan`] on this rank's file
+    /// handle (the generalized fault plane: transient-then-succeed
+    /// errors, persistent failures, torn writes, crash points). Replaces
+    /// any armed plan; `None` disarms. Per-rank plans on a shared
+    /// communicator arm the same plan everywhere and let the plan's
+    /// `rank` filter select the faulty rank.
+    pub fn set_fault_plan(&self, plan: Option<crate::io::FaultPlan>) {
+        self.file.set_fault_plan(plan);
+    }
+
     /// Take a deferred background-flush error that has been recorded but
     /// not yet surfaced through a `flush`/`close` result. Returns `None`
     /// when nothing failed (or the failure was already reported).
@@ -306,34 +324,96 @@ impl<C: Communicator> ScdaFile<C> {
     /// collective engine exchanges extents here). `close` does this
     /// implicitly; call it to make bytes visible mid-file, e.g. before
     /// sampling [`Self::io_stats`]. Any deferred background-flush error
-    /// surfaces here.
+    /// surfaces here — and via the collective error agreement it
+    /// surfaces as the *same* error on every rank, even when only one
+    /// rank's writes failed.
     pub fn flush(&mut self) -> Result<()> {
-        self.engine.flush(&self.file, &self.comm)
+        let local = self.engine.flush(&self.file, &self.comm);
+        let local = self.fold_sticky(self.note_error(local));
+        self.agree(local)
+    }
+
+    /// Record a persistent write-path error in its wire form so later
+    /// collective points keep re-surfacing it (§A.6: errors are never
+    /// silently lost, and never surface on just one rank).
+    fn note_error(&mut self, r: Result<()>) -> Result<()> {
+        if let Err(e) = &r {
+            if self.sticky_error.is_none() {
+                self.sticky_error = Some((e.code(), e.message().to_string()));
+            }
+        }
+        r
+    }
+
+    /// Substitute the recorded sticky error for a local `Ok` — the
+    /// failing rank may have nothing staged by the time `flush` runs,
+    /// but its earlier write error still decides the collective outcome.
+    fn fold_sticky(&self, local: Result<()>) -> Result<()> {
+        match (&self.sticky_error, local) {
+            (_, Err(e)) => Err(e),
+            (Some((code, msg)), Ok(())) => Err(ScdaError::rebuild(*code, msg.clone())),
+            (None, Ok(())) => Ok(()),
+        }
+    }
+
+    /// Collective error agreement: every rank contributes its local
+    /// outcome as a `(code, message)` wire frame over one
+    /// `allgather_bytes`, and the lowest-ranked error (if any) is
+    /// re-raised on *all* ranks via [`ScdaError::rebuild`] — so either
+    /// every rank succeeds or every rank returns the same `ScdaError`,
+    /// and the serial-equivalence of the API's control flow survives a
+    /// rank-local fault. The allgather also synchronizes the ranks, so
+    /// callers need no separate barrier. All ranks must reach this call
+    /// (faulted engines return their error *after* completing their own
+    /// collectives, which is what keeps the exchange from splitting).
+    fn agree(&mut self, local: Result<()>) -> Result<()> {
+        let frame = match &local {
+            Ok(()) => Vec::new(),
+            Err(e) => {
+                let mut f = e.code().to_le_bytes().to_vec();
+                f.extend_from_slice(e.message().as_bytes());
+                f
+            }
+        };
+        let gathered = self.comm.allgather_bytes(frame);
+        let first = gathered.into_iter().find(|p| p.len() >= 4);
+        match first {
+            Some(p) => {
+                let code = i32::from_le_bytes(p[..4].try_into().unwrap());
+                let msg = String::from_utf8_lossy(&p[4..]).into_owned();
+                if self.sticky_error.is_none() {
+                    self.sticky_error = Some((code, msg.clone()));
+                }
+                Err(ScdaError::rebuild(code, msg))
+            }
+            None => Ok(()),
+        }
     }
 
     /// Route a positional write through the engine (stage, ship or issue
     /// per the engine's policy).
     pub(crate) fn stage_write(&mut self, offset: u64, data: &[u8]) -> Result<()> {
-        self.engine.write(&self.file, offset, data)
+        let r = self.engine.write(&self.file, offset, data);
+        self.note_error(r)
     }
 
     /// [`Self::stage_write`] relinquishing the buffer: staging engines
     /// move it into the aggregator without a memcpy (the zero-copy path
     /// for codec-materialized payloads).
     pub(crate) fn stage_write_owned(&mut self, offset: u64, data: Vec<u8>) -> Result<()> {
-        self.engine.write_owned(&self.file, offset, data)
+        let r = self.engine.write_owned(&self.file, offset, data);
+        self.note_error(r)
     }
 
     /// The collective section boundary: gives the engine its collective
-    /// hook (two-phase exchange scheduling), then synchronizes — the
-    /// barrier every section write ended with before engines existed.
-    /// Engines whose hook already ran a collective report so, and the
-    /// redundant barrier round is skipped.
+    /// hook (two-phase exchange scheduling), then runs the error
+    /// agreement — whose allgather subsumes the barrier every section
+    /// write ended with before engines existed, while also guaranteeing
+    /// a rank-local section-write fault surfaces identically everywhere.
     pub(crate) fn section_end(&mut self) -> Result<()> {
-        if !self.engine.section_end(&self.file, &self.comm)? {
-            self.comm.barrier();
-        }
-        Ok(())
+        let local = self.engine.section_end(&self.file, &self.comm).map(|_| ());
+        let local = self.fold_sticky(self.note_error(local));
+        self.agree(local)
     }
 
     /// Read `len` bytes at an absolute offset through the engine — the
@@ -413,19 +493,29 @@ impl<C: Communicator> ScdaFile<C> {
 
     /// `scda_fclose`: collective; flushes in write mode (staged extents
     /// first — surfacing any deferred background-flush error — then
-    /// optionally to stable storage). The context is consumed
-    /// (deallocation is automatic in Rust, error or not).
+    /// optionally to stable storage). Both the flush outcome and rank
+    /// 0's fsync outcome pass through the collective error agreement, so
+    /// `close` is an explicit `Result` path returning the *same* error
+    /// on every rank (never relying on the drop-error sink). The context
+    /// is consumed (deallocation is automatic in Rust, error or not).
     pub fn close(mut self) -> Result<()> {
         // Mark closed up front: whatever happens below was reported
         // in-band, so the drop path must not double-handle it.
         self.closed = true;
         if self.mode == OpenMode::Write {
-            self.engine.flush(&self.file, &self.comm)?;
-            self.comm.barrier();
-            if self.sync_on_close && self.comm.rank() == 0 {
-                self.file.sync()?;
-            }
-            self.comm.barrier();
+            let local = self.engine.flush(&self.file, &self.comm);
+            let local = self.fold_sticky(self.note_error(local));
+            // This agreement's allgather also orders rank 0's fsync
+            // after every rank's pwrites (the old flush/sync barrier).
+            self.agree(local)?;
+            let sync_local = if self.sync_on_close && self.comm.rank() == 0 {
+                self.file.sync()
+            } else {
+                Ok(())
+            };
+            // A failed fsync on rank 0 must fail `close` everywhere —
+            // the checkpoint is not durable for anyone.
+            self.agree(sync_local)?;
         }
         Ok(())
     }

@@ -32,6 +32,9 @@ pub mod writer;
 
 pub use context::{CodecParallel, OpenMode, ScdaFile};
 pub use crate::io::{EngineStats, IoEngineKind, IoTuning};
-pub use query::{verify_bytes, verify_file, TocEntry};
+pub use query::{
+    verified_prefix_bytes, verified_prefix_file, verify_bytes, verify_file, RawSection, TocEntry,
+    VerifiedPrefix,
+};
 pub use reader::SectionHeader;
 pub use writer::DataSrc;

@@ -257,7 +257,59 @@ pub fn verify_bytes(bytes: &[u8]) -> Result<usize> {
 /// the verifier's buffer at 8 KiB).
 const VERIFY_CHUNK_ROWS: u64 = 256;
 
+/// One raw section recorded by the prefix walk ([`verified_prefix_file`]).
+#[derive(Debug, Clone)]
+pub struct RawSection {
+    pub kind: SectionKind,
+    /// The section's user string, verbatim.
+    pub user: Vec<u8>,
+    /// Absolute offset of the section's first byte.
+    pub offset: u64,
+    /// Absolute offset one past the section's last byte (data padding
+    /// included): the next section starts here.
+    pub end: u64,
+}
+
+/// The verify-grade prefix walk behind `Archive::recover`: how far from
+/// the front the file is structurally intact, under exactly the checks
+/// [`verify_file`] applies (same walker, so "valid prefix" here and
+/// "verify-clean" there can never disagree).
+#[derive(Debug)]
+pub struct VerifiedPrefix {
+    /// Every fully verified raw section, in file order.
+    pub sections: Vec<RawSection>,
+    /// End of the last fully verified section — equals the file length
+    /// exactly when the whole file verifies.
+    pub good_end: u64,
+    /// The violation that stopped the walk short, if any.
+    pub error: Option<ScdaError>,
+}
+
+/// Walk `path` front-to-back with the strict verifier, stopping at (and
+/// reporting, not raising) the first structural violation. Errors only
+/// for an unopenable file or one too short to hold the 128-byte header —
+/// there is no valid prefix to speak of below that.
+pub fn verified_prefix_file(path: &std::path::Path) -> Result<VerifiedPrefix> {
+    let file =
+        std::fs::File::open(path).map_err(|e| ScdaError::io(e, format!("reading {}", path.display())))?;
+    let len = file.metadata().map_err(|e| ScdaError::io(e, "stat"))?.len();
+    prefix_source(&mut FileSource { file, len, win: Vec::new(), win_off: 0 })
+}
+
+/// [`verified_prefix_file`] over an in-memory image.
+pub fn verified_prefix_bytes(bytes: &[u8]) -> Result<VerifiedPrefix> {
+    prefix_source(&mut SliceSource(bytes))
+}
+
 fn verify_source(src: &mut dyn VerifySource) -> Result<usize> {
+    let p = prefix_source(src)?;
+    match p.error {
+        Some(e) => Err(e),
+        None => Ok(p.sections.len()),
+    }
+}
+
+fn prefix_source(src: &mut dyn VerifySource) -> Result<VerifiedPrefix> {
     let len = src.src_len();
     if len < FILE_HEADER_BYTES as u64 {
         return Err(ScdaError::corrupt(corrupt::TRUNCATED, "file shorter than the 128-byte header"));
@@ -265,65 +317,90 @@ fn verify_source(src: &mut dyn VerifySource) -> Result<usize> {
     let mut head = [0u8; FILE_HEADER_BYTES];
     src.read_exact(0, &mut head)?;
     parse_file_header(&head, true)?;
+    let mut sections = Vec::new();
     let mut at = FILE_HEADER_BYTES as u64;
-    let mut sections = 0usize;
+    let mut error = None;
     let mut buf = vec![0u8; (VERIFY_CHUNK_ROWS as usize) * COUNT_ENTRY_BYTES];
     while at < len {
-        let take = (len - at).min(SECTION_PREFIX_MAX as u64) as usize;
-        src.read_exact(at, &mut buf[..take])?;
-        let (meta, prefix) = parse_section_prefix(&buf[..take])?;
-        at += prefix as u64;
-        let data_len: u128 = match meta.kind {
-            SectionKind::Inline => INLINE_DATA_BYTES as u128,
-            SectionKind::Block => meta.elem_size,
-            SectionKind::Array => meta.elem_count * meta.elem_size,
-            SectionKind::Varray => {
-                // Validate and sum all size rows, a bounded chunk at a
-                // time.
-                let mut total: u128 = 0;
-                let mut row: u128 = 0;
-                while row < meta.elem_count {
-                    let rows = (meta.elem_count - row).min(VERIFY_CHUNK_ROWS as u128) as usize;
-                    let bytes = rows * COUNT_ENTRY_BYTES;
-                    if at + bytes as u64 > len {
-                        return Err(ScdaError::corrupt(corrupt::TRUNCATED, "V size rows truncated"));
-                    }
-                    src.read_exact(at, &mut buf[..bytes])?;
-                    for entry in buf[..bytes].chunks_exact(COUNT_ENTRY_BYTES) {
-                        total += decode_count(entry, b'E')?;
-                    }
-                    at += bytes as u64;
-                    row += rows as u128;
-                }
-                total
+        match verify_one_section(src, len, at, &mut buf) {
+            Ok((kind, user, end)) => {
+                sections.push(RawSection { kind, user, offset: at, end });
+                at = end;
             }
-        };
-        if data_len > (len - at) as u128 {
-            return Err(ScdaError::corrupt(corrupt::TRUNCATED, "section data truncated"));
-        }
-        let data_len = data_len as u64;
-        if meta.kind == SectionKind::Inline {
-            // Inline data is opaque and never padded: nothing to read.
-            at += data_len;
-        } else {
-            let p = data_pad_len(data_len as u128);
-            if at + data_len + p as u64 > len {
-                return Err(ScdaError::corrupt(corrupt::TRUNCATED, "data padding truncated"));
+            Err(e) => {
+                error = Some(e);
+                break;
             }
-            // The strict padding check needs the last data byte; one
-            // read covers it and the padding — all we read of the data.
-            let (last, pad_from) = if data_len > 0 {
-                src.read_exact(at + data_len - 1, &mut buf[..p + 1])?;
-                (Some(buf[0]), 1usize)
-            } else {
-                src.read_exact(at, &mut buf[..p])?;
-                (None, 0usize)
-            };
-            check_data_pad(&buf[pad_from..pad_from + p], data_len as u128, last, true)?;
-            at += data_len + p as u64;
         }
-        sections += 1;
     }
-    debug_assert_eq!(at, len);
-    Ok(sections)
+    if error.is_none() {
+        debug_assert_eq!(at, len);
+    }
+    Ok(VerifiedPrefix { sections, good_end: at, error })
+}
+
+/// Verify one raw section starting at `start`: header rows, count
+/// entries, string padding, data padding — data bytes skipped. Returns
+/// its kind, user string and end offset.
+fn verify_one_section(
+    src: &mut dyn VerifySource,
+    len: u64,
+    start: u64,
+    buf: &mut [u8],
+) -> Result<(SectionKind, Vec<u8>, u64)> {
+    let mut at = start;
+    let take = (len - at).min(SECTION_PREFIX_MAX as u64) as usize;
+    src.read_exact(at, &mut buf[..take])?;
+    let (meta, prefix) = parse_section_prefix(&buf[..take])?;
+    at += prefix as u64;
+    let data_len: u128 = match meta.kind {
+        SectionKind::Inline => INLINE_DATA_BYTES as u128,
+        SectionKind::Block => meta.elem_size,
+        SectionKind::Array => meta.elem_count * meta.elem_size,
+        SectionKind::Varray => {
+            // Validate and sum all size rows, a bounded chunk at a
+            // time.
+            let mut total: u128 = 0;
+            let mut row: u128 = 0;
+            while row < meta.elem_count {
+                let rows = (meta.elem_count - row).min(VERIFY_CHUNK_ROWS as u128) as usize;
+                let bytes = rows * COUNT_ENTRY_BYTES;
+                if at + bytes as u64 > len {
+                    return Err(ScdaError::corrupt(corrupt::TRUNCATED, "V size rows truncated"));
+                }
+                src.read_exact(at, &mut buf[..bytes])?;
+                for entry in buf[..bytes].chunks_exact(COUNT_ENTRY_BYTES) {
+                    total += decode_count(entry, b'E')?;
+                }
+                at += bytes as u64;
+                row += rows as u128;
+            }
+            total
+        }
+    };
+    if data_len > (len - at) as u128 {
+        return Err(ScdaError::corrupt(corrupt::TRUNCATED, "section data truncated"));
+    }
+    let data_len = data_len as u64;
+    if meta.kind == SectionKind::Inline {
+        // Inline data is opaque and never padded: nothing to read.
+        at += data_len;
+    } else {
+        let p = data_pad_len(data_len as u128);
+        if at + data_len + p as u64 > len {
+            return Err(ScdaError::corrupt(corrupt::TRUNCATED, "data padding truncated"));
+        }
+        // The strict padding check needs the last data byte; one
+        // read covers it and the padding — all we read of the data.
+        let (last, pad_from) = if data_len > 0 {
+            src.read_exact(at + data_len - 1, &mut buf[..p + 1])?;
+            (Some(buf[0]), 1usize)
+        } else {
+            src.read_exact(at, &mut buf[..p])?;
+            (None, 0usize)
+        };
+        check_data_pad(&buf[pad_from..pad_from + p], data_len as u128, last, true)?;
+        at += data_len + p as u64;
+    }
+    Ok((meta.kind, meta.user, at))
 }

@@ -706,6 +706,137 @@ impl<C: Communicator> ScdaFile<C> {
         Ok(out)
     }
 
+    /// The partitioned form of [`Self::read_array_range_data`]: the
+    /// global range `[first, first + count)` is split over the reading
+    /// communicator by `part` (a partition of `count` elements), and
+    /// each rank receives only its own sub-window's bytes. Collective
+    /// discipline: all size-row reads are *identical* on every rank —
+    /// the chunk schedule must be a pure function of collective inputs,
+    /// or per-rank collective call counts diverge — and only the single
+    /// payload window read differs per rank (exactly the shape of a
+    /// whole-section `read_array_data`).
+    pub(crate) fn read_array_range_data_part(
+        &mut self,
+        first: u64,
+        count: u64,
+        section_end: u64,
+        part: &Partition,
+    ) -> Result<Vec<u8>> {
+        check_read_partition(part, count, self.comm.size())?;
+        let rank = self.comm.rank();
+        let (r_off, r_count) = (part.offset(rank), part.count(rank));
+        let pending = std::mem::replace(&mut self.pending, Pending::None);
+        let out = match pending {
+            Pending::Raw { meta, payload_off } => {
+                if meta.kind != SectionKind::Array {
+                    return Err(wrong_section("read_array_range_data_part", meta.kind));
+                }
+                check_elem_range(first, count, to_u64(meta.elem_count, "N")?)?;
+                let e = to_u64(meta.elem_size, "E")?;
+                let len = r_count
+                    .checked_mul(e)
+                    .and_then(|b| usize::try_from(b).ok())
+                    .ok_or_else(|| range_overflow("range byte length"))?;
+                let mut out = vec![0u8; len];
+                let synced = self.window_read(payload_off + (first + r_off) * e, &mut out)?;
+                if !synced {
+                    self.comm.barrier();
+                }
+                out
+            }
+            Pending::DecodedArray { v_meta, erows_off, uncomp_elem } => {
+                let n = to_u64(v_meta.elem_count, "N")?;
+                check_elem_range(first, count, n)?;
+                let prefix = self.sum_rows_window(erows_off, first, b'E')?;
+                let comp_all = self.read_rows_window(erows_off, first, count, b'E')?;
+                let my_skip: u64 = comp_all[..r_off as usize].iter().sum();
+                let comp_sizes = &comp_all[r_off as usize..(r_off + r_count) as usize];
+                let local_comp: u64 = comp_sizes.iter().sum();
+                let data_off = erows_off + n * COUNT_ENTRY_BYTES as u64;
+                let mut blob = vec![0u8; local_comp as usize];
+                let synced = self.window_read(data_off + prefix + my_skip, &mut blob)?;
+                let expected_total =
+                    usize::try_from(r_count.saturating_mul(uncomp_elem)).unwrap_or(usize::MAX);
+                let out = decode_range_elements(&blob, comp_sizes, expected_total, |_| uncomp_elem)?;
+                if !synced {
+                    self.comm.barrier();
+                }
+                out
+            }
+            other => {
+                self.pending = other;
+                return Err(call_seq("read_array_range_data_part without a pending array section"));
+            }
+        };
+        self.cursor = section_end;
+        Ok(out)
+    }
+
+    /// The partitioned form of [`Self::read_varray_range_data`]: each
+    /// rank receives its own sub-window's `(element sizes, payload)`
+    /// under `part`, with the same collective discipline as
+    /// [`Self::read_array_range_data_part`] — identical size-row reads
+    /// everywhere, one per-rank payload window.
+    pub(crate) fn read_varray_range_data_part(
+        &mut self,
+        first: u64,
+        count: u64,
+        section_end: u64,
+        part: &Partition,
+    ) -> Result<(Vec<u64>, Vec<u8>)> {
+        check_read_partition(part, count, self.comm.size())?;
+        let rank = self.comm.rank();
+        let (r_off, r_count) = (part.offset(rank) as usize, part.count(rank) as usize);
+        let pending = std::mem::replace(&mut self.pending, Pending::None);
+        let out = match pending {
+            Pending::Raw { meta, payload_off } => {
+                if meta.kind != SectionKind::Varray {
+                    return Err(wrong_section("read_varray_range_data_part", meta.kind));
+                }
+                let n = to_u64(meta.elem_count, "N")?;
+                check_elem_range(first, count, n)?;
+                let prefix = self.sum_rows_window(payload_off, first, b'E')?;
+                let sizes_all = self.read_rows_window(payload_off, first, count, b'E')?;
+                let my_skip: u64 = sizes_all[..r_off].iter().sum();
+                let sizes = sizes_all[r_off..r_off + r_count].to_vec();
+                let range_bytes: u64 = sizes.iter().sum();
+                let data_off = payload_off + n * COUNT_ENTRY_BYTES as u64 + prefix + my_skip;
+                let mut data = vec![0u8; range_bytes as usize];
+                let synced = self.window_read(data_off, &mut data)?;
+                if !synced {
+                    self.comm.barrier();
+                }
+                (sizes, data)
+            }
+            Pending::DecodedVarray { urows_off, erows_off, v_meta } => {
+                let n = to_u64(v_meta.elem_count, "N")?;
+                check_elem_range(first, count, n)?;
+                let usizes_all = self.read_rows_window(urows_off, first, count, b'U')?;
+                let prefix = self.sum_rows_window(erows_off, first, b'E')?;
+                let comp_all = self.read_rows_window(erows_off, first, count, b'E')?;
+                let my_skip: u64 = comp_all[..r_off].iter().sum();
+                let comp_sizes = &comp_all[r_off..r_off + r_count];
+                let usizes = usizes_all[r_off..r_off + r_count].to_vec();
+                let local_comp: u64 = comp_sizes.iter().sum();
+                let data_off = erows_off + n * COUNT_ENTRY_BYTES as u64;
+                let mut blob = vec![0u8; local_comp as usize];
+                let synced = self.window_read(data_off + prefix + my_skip, &mut blob)?;
+                let total: u64 = usizes.iter().sum();
+                let data = decode_range_elements(&blob, comp_sizes, total as usize, |i| usizes[i])?;
+                if !synced {
+                    self.comm.barrier();
+                }
+                (usizes, data)
+            }
+            other => {
+                self.pending = other;
+                return Err(call_seq("read_varray_range_data_part without a pending varray section"));
+            }
+        };
+        self.cursor = section_end;
+        Ok(out)
+    }
+
     /// Collectively read `nrows` 32-byte size rows starting at global row
     /// `first_row` of the row region at `rows_off` — every rank requests
     /// the identical window, which the collective engine's gather dedupes
@@ -863,6 +994,26 @@ impl<C: Communicator> ScdaFile<C> {
         }
         Ok((Some(decoded), total))
     }
+}
+
+/// Validate a partitioned range read's partition: it must divide
+/// exactly the `count` elements of the range over exactly the reading
+/// communicator's ranks (collective input — all ranks pass the same
+/// partition, like §A.2).
+fn check_read_partition(part: &Partition, count: u64, size: usize) -> Result<()> {
+    if part.num_ranks() != size {
+        return Err(ScdaError::usage(
+            usage::PARTITION_MISMATCH,
+            format!("range partition has {} ranks, communicator has {size}", part.num_ranks()),
+        ));
+    }
+    if part.total() != count {
+        return Err(ScdaError::usage(
+            usage::PARTITION_MISMATCH,
+            format!("range partition covers {} elements, range has {count}", part.total()),
+        ));
+    }
+    Ok(())
 }
 
 /// Validate that `[first, first + count)` lies inside `n` elements.

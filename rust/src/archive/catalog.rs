@@ -417,6 +417,66 @@ impl<C: Communicator> Archive<C> {
         expect_kind(name, h.kind, crate::format::section::SectionKind::Varray)?;
         self.file.read_varray_range_data(first, count, section_end)
     }
+
+    /// The partitioned form of [`Self::read_range`]: the global element
+    /// range `[first, first + count)` is divided over the reading
+    /// communicator by `part` — a partition of exactly `count` elements
+    /// over exactly the communicator's ranks — and each rank receives
+    /// only its own sub-window's bytes, instead of every rank receiving
+    /// the whole range. This is the restore-shaped access pattern: P
+    /// readers each pull their slice of a named dataset without
+    /// materializing `count · E` bytes per rank.
+    ///
+    /// Collective, and equivalent on every rank to
+    /// `read_range(name, first, count)` sliced to
+    /// `[part.offset(rank) · E, (part.offset(rank) + part.count(rank)) · E)`
+    /// — under any writer rank count (`rust/tests/archive_range.rs`
+    /// asserts the equivalence).
+    pub fn read_range_partitioned(
+        &mut self,
+        name: &str,
+        first: u64,
+        count: u64,
+        part: &Partition,
+    ) -> Result<Vec<u8>> {
+        let entry = self.get(name).ok_or_else(|| no_such_dataset(name))?;
+        entry.check_range(first, count)?;
+        let section_end = entry.offset + entry.byte_len;
+        let h = self.open_dataset(name)?;
+        expect_kind(name, h.kind, crate::format::section::SectionKind::Array)?;
+        self.file.read_array_range_data_part(first, count, section_end, part)
+    }
+
+    /// The varray counterpart of [`Self::read_range_partitioned`]: each
+    /// rank receives its own sub-window's `(element sizes, payload)`
+    /// under `part`.
+    pub fn read_varray_range_partitioned(
+        &mut self,
+        name: &str,
+        first: u64,
+        count: u64,
+        part: &Partition,
+    ) -> Result<(Vec<u64>, Vec<u8>)> {
+        let entry = self.get(name).ok_or_else(|| no_such_dataset(name))?;
+        entry.check_range(first, count)?;
+        let section_end = entry.offset + entry.byte_len;
+        let h = self.open_dataset(name)?;
+        expect_kind(name, h.kind, crate::format::section::SectionKind::Varray)?;
+        self.file.read_varray_range_data_part(first, count, section_end, part)
+    }
+}
+
+impl Archive<crate::par::SerialComm> {
+    /// Repair an archive with a torn tail (crash or torn write during an
+    /// append): truncate the damage, rebuild a consistent trailer over
+    /// the surviving sections, and report what survived. A local,
+    /// non-collective filesystem repair — run it from one process (or
+    /// `scda recover`) before reopening the archive in parallel. Thin
+    /// delegate to [`crate::archive::recover::recover`], which documents
+    /// the algorithm and guarantees.
+    pub fn recover(path: impl AsRef<Path>) -> Result<crate::archive::recover::RecoveryReport> {
+        crate::archive::recover::recover(path)
+    }
 }
 
 /// Rebuild a broadcast error on the receiving ranks (code ranges are the
@@ -425,12 +485,7 @@ impl<C: Communicator> Archive<C> {
 /// `code()` for one collective failure — io errors reconstruct their
 /// errno from the detail.
 fn rebuild_error(code: i32, msg: String) -> ScdaError {
-    match code {
-        1000..=1999 => ScdaError::corrupt(code - 1000, msg),
-        2000..=2999 => ScdaError::io(std::io::Error::from_raw_os_error(code - 2000), msg),
-        3000..=3999 => ScdaError::usage(code - 3000, msg),
-        _ => ScdaError::io(std::io::Error::other(msg.clone()), msg),
-    }
+    ScdaError::rebuild(code, msg)
 }
 
 fn no_such_dataset(name: &str) -> ScdaError {

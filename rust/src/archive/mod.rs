@@ -34,6 +34,13 @@
 //! names is authoritative, and disagreement between catalog and sections
 //! is a [`crate::error::corrupt::BAD_CATALOG`] error.
 //!
+//! Crash consistency ([`recover`]): because sections are appended
+//! front-to-back and the trailer is written last, a crash mid-append
+//! damages only the tail. [`recover::recover`] truncates the torn tail
+//! and rebuilds a consistent trailer over the surviving sections, so
+//! every dataset committed before the crash restores by name on any
+//! rank count.
+//!
 //! [`restart`] builds versioned checkpoints on top: datasets named
 //! `ckpt/<n>/<field>` restore by name on any rank count, several steps
 //! per archive.
@@ -41,7 +48,9 @@
 pub mod catalog;
 pub mod dataset;
 pub mod index;
+pub mod recover;
 pub mod restart;
 
 pub use catalog::Archive;
 pub use dataset::{DatasetInfo, DatasetKind};
+pub use recover::{recover, RecoveryAction, RecoveryReport};

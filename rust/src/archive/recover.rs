@@ -1,0 +1,326 @@
+//! Torn-tail archive recovery: make a crashed append readable again.
+//!
+//! A crash (or torn write) during an archive append damages exactly the
+//! *tail* of the file: sections are written front-to-back, inline
+//! sections are unpadded, and the catalog/footer-index trailer is always
+//! the last thing written ([`crate::archive::index`]). Everything before
+//! the torn byte is a verify-clean prefix of ordinary sections — the
+//! datasets committed before the crash. Recovery therefore:
+//!
+//! 1. walks the file with the *same* strict walker `scda verify` uses
+//!    ([`crate::api::verified_prefix_file`]), finding the last offset up
+//!    to which every section is byte-valid;
+//! 2. drops trailing sections that cannot stand on their own: stale
+//!    trailer sections (`scda:catalog` / `scda:index` — they describe a
+//!    file that no longer exists past the tear) and a dangling
+//!    compression-convention leader (an `I "B/A compressed scda 00"` or
+//!    `A "V compressed scda 00"` section whose trailing partner was
+//!    torn off — half a logical section is unreadable);
+//! 3. truncates the file after the last surviving section, rescans the
+//!    surviving sections into a fresh catalog, and appends a consistent
+//!    catalog + footer-index trailer;
+//! 4. re-verifies the result end to end — recovery *never* reports
+//!    success on a file `scda verify` would reject.
+//!
+//! The result contains exactly the datasets whose sections were fully
+//! committed before the crash, and restores by name on any rank count
+//! (partition independence is the format's, not the catalog's). A file
+//! that is already intact — verify-clean with a consistent trailer — is
+//! reported [`RecoveryAction::Intact`] and left untouched.
+//!
+//! Recovery is a local filesystem repair, not a collective call: run it
+//! from one process (the `scda recover` CLI) before reopening the
+//! archive in parallel.
+
+use std::path::Path;
+
+use crate::api::query::{verified_prefix_file, RawSection};
+use crate::api::ScdaFile;
+use crate::archive::dataset::render_catalog;
+use crate::archive::index::{self, encode_index_payload, CATALOG_USER, INDEX_USER};
+use crate::error::{corrupt, Result, ScdaError};
+use crate::format::limits::{CONV_ARRAY, CONV_BLOCK, CONV_VARRAY, FILE_HEADER_BYTES};
+use crate::format::padding::{pad_data, LineStyle};
+use crate::format::section::{encode_section_header, SectionKind, SectionMeta};
+use crate::par::SerialComm;
+
+/// What [`recover`] did to the file.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RecoveryAction {
+    /// The file was already verify-clean with a consistent trailer; it
+    /// was not modified.
+    Intact,
+    /// The torn tail was truncated and a fresh trailer appended.
+    Rebuilt,
+}
+
+/// The outcome of a successful [`recover`] run.
+#[derive(Debug, Clone)]
+pub struct RecoveryReport {
+    /// File length before recovery.
+    pub original_len: u64,
+    /// File length after recovery (trailer included).
+    pub recovered_len: u64,
+    /// Bytes of torn tail dropped (before the new trailer was appended).
+    pub truncated_bytes: u64,
+    /// Names of the surviving datasets, in file order.
+    pub datasets: Vec<String>,
+    pub action: RecoveryAction,
+}
+
+/// True for trailing sections recovery must drop: stale trailer
+/// sections, and a compression-convention leader whose partner section
+/// is gone (conventions 8/9/10 pair a leading `I`/`A` magic section
+/// with a trailing data section — half a pair is unreadable).
+fn must_drop_from_tail(s: &RawSection) -> bool {
+    s.user == CATALOG_USER
+        || s.user == INDEX_USER
+        || (s.kind == SectionKind::Inline && (s.user == CONV_BLOCK || s.user == CONV_ARRAY))
+        || (s.kind == SectionKind::Array && s.user == CONV_VARRAY)
+}
+
+/// Whether an intact file's trailer is consistent: the footer index
+/// loads, and its catalog entries tile the section region exactly — the
+/// shape `Archive::finish` always writes.
+fn trailer_consistent(path: &Path) -> bool {
+    let Ok(mut file) = ScdaFile::open(SerialComm::new(), path) else { return false };
+    let Ok(Some(loaded)) = index::load(&mut file) else { return false };
+    let mut at = FILE_HEADER_BYTES as u64;
+    for d in &loaded.datasets {
+        if d.offset != at {
+            return false;
+        }
+        at = match at.checked_add(d.byte_len) {
+            Some(v) => v,
+            None => return false,
+        };
+    }
+    at == loaded.catalog_off
+}
+
+/// Recover an archive with a torn tail; see the module docs for the
+/// algorithm and guarantees. Returns the report on success; errors are
+/// [`crate::error::corrupt`]-coded when the file is damaged beyond the
+/// 128-byte header (no valid prefix to salvage) or when the rebuilt
+/// file fails re-verification.
+pub fn recover(path: impl AsRef<Path>) -> Result<RecoveryReport> {
+    let path = path.as_ref();
+    let prefix = verified_prefix_file(path)?;
+    let original_len = prefix
+        .sections
+        .last()
+        .map(|s| s.end)
+        .max(Some(prefix.good_end))
+        .unwrap_or(FILE_HEADER_BYTES as u64);
+    let file_len = std::fs::metadata(path).map_err(|e| ScdaError::io(e, "stat"))?.len();
+    debug_assert!(original_len <= file_len);
+
+    // Intact means: verify-clean, and either no trailer at all (a plain
+    // scda file is not damaged — recovery repairs, it does not convert)
+    // or a trailer whose catalog tiles the sections it claims.
+    if prefix.error.is_none() {
+        let has_trailer =
+            prefix.sections.iter().any(|s| s.user == CATALOG_USER || s.user == INDEX_USER);
+        if !has_trailer || trailer_consistent(path) {
+            let mut file = ScdaFile::open(SerialComm::new(), path)?;
+            let datasets = match index::load(&mut file)? {
+                Some(l) => l.datasets,
+                None => index::scan(&mut file)?,
+            };
+            return Ok(RecoveryReport {
+                original_len: file_len,
+                recovered_len: file_len,
+                truncated_bytes: 0,
+                datasets: datasets.into_iter().map(|d| d.name).collect(),
+                action: RecoveryAction::Intact,
+            });
+        }
+    }
+
+    // Drop what cannot stand on its own at the tail, then truncate.
+    let mut sections = prefix.sections;
+    while sections.last().is_some_and(must_drop_from_tail) {
+        sections.pop();
+    }
+    let good_end = sections.last().map(|s| s.end).unwrap_or(FILE_HEADER_BYTES as u64);
+    let file = std::fs::OpenOptions::new()
+        .write(true)
+        .open(path)
+        .map_err(|e| ScdaError::io(e, format!("opening {} for recovery", path.display())))?;
+    file.set_len(good_end).map_err(|e| ScdaError::io(e, "truncating the torn tail"))?;
+
+    // Rescan the surviving sections into a fresh catalog. The prefix is
+    // verify-clean up to `good_end`, so the scan sees only whole
+    // sections; convention pairs regroup into logical datasets exactly
+    // as the original writer's catalog recorded them (the advisory
+    // precondition marker is not recoverable from headers — frames
+    // still self-describe).
+    let mut sfile = ScdaFile::open(SerialComm::new(), path)?;
+    let entries = index::scan(&mut sfile)?;
+    drop(sfile);
+
+    // Render the trailer by hand (there is no write-mode reopen for an
+    // existing scda file): the catalog block section, then the 96-byte
+    // footer index — byte-identical to what `Archive::finish` writes.
+    let text = render_catalog(&entries);
+    let meta = SectionMeta::block(CATALOG_USER, text.len() as u128);
+    let mut trailer = encode_section_header(&meta, None, LineStyle::Unix)?;
+    trailer.extend_from_slice(&text);
+    pad_data(&mut trailer, text.len() as u128, text.last().copied(), LineStyle::Unix);
+    let index_meta = SectionMeta::inline(INDEX_USER);
+    trailer.extend_from_slice(&encode_section_header(&index_meta, None, LineStyle::Unix)?);
+    trailer.extend_from_slice(&encode_index_payload(good_end));
+    {
+        use std::os::unix::fs::FileExt;
+        file.write_all_at(&trailer, good_end)
+            .map_err(|e| ScdaError::io(e, "writing the recovered trailer"))?;
+        file.sync_all().map_err(|e| ScdaError::io(e, "syncing the recovered file"))?;
+    }
+
+    // The gate: a recovered file must pass the same strict verification
+    // as any other scda file, or recovery itself failed.
+    crate::api::verify_file(path).map_err(|e| {
+        ScdaError::corrupt(
+            corrupt::TRUNCATED,
+            format!("recovered file fails verification ({e}); the archive is damaged beyond the tail"),
+        )
+    })?;
+
+    Ok(RecoveryReport {
+        original_len: file_len,
+        recovered_len: good_end + trailer.len() as u64,
+        truncated_bytes: file_len - good_end,
+        datasets: entries.into_iter().map(|d| d.name).collect(),
+        action: RecoveryAction::Rebuilt,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::DataSrc;
+    use crate::archive::Archive;
+    use crate::par::Partition;
+    use std::path::PathBuf;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("scda-recover");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(format!("{name}-{}.scda", std::process::id()))
+    }
+
+    fn build(path: &Path) -> Vec<u8> {
+        let part = Partition::uniform(1, 16);
+        let data: Vec<u8> = (0..16 * 8u32).map(|i| (i % 251) as u8).collect();
+        let mut ar = Archive::create(SerialComm::new(), path, b"recover-test").unwrap();
+        ar.write_array("a", DataSrc::Contiguous(&data), &part, 8, false).unwrap();
+        ar.write_block_from("b", 0, Some(b"hello recovery"), 14, false).unwrap();
+        ar.finish().unwrap();
+        data
+    }
+
+    #[test]
+    fn intact_archive_is_left_untouched() {
+        let path = tmp("intact");
+        build(&path);
+        let before = std::fs::read(&path).unwrap();
+        let r = recover(&path).unwrap();
+        assert_eq!(r.action, RecoveryAction::Intact);
+        assert_eq!(r.truncated_bytes, 0);
+        assert_eq!(r.datasets, ["a", "b"]);
+        assert_eq!(std::fs::read(&path).unwrap(), before, "intact file unmodified");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn torn_trailer_is_rebuilt_with_all_datasets() {
+        let path = tmp("torn-trailer");
+        let data = build(&path);
+        let len = std::fs::metadata(&path).unwrap().len();
+        // Tear off the last 40 bytes: the index section (96 B) is torn.
+        let f = std::fs::OpenOptions::new().write(true).open(&path).unwrap();
+        f.set_len(len - 40).unwrap();
+        drop(f);
+        let r = recover(&path).unwrap();
+        assert_eq!(r.action, RecoveryAction::Rebuilt);
+        assert_eq!(r.datasets, ["a", "b"]);
+        crate::api::verify_file(&path).unwrap();
+        let mut ar = Archive::open(SerialComm::new(), &path).unwrap();
+        assert!(ar.is_indexed());
+        let part = Partition::uniform(1, 16);
+        assert_eq!(ar.read_array("a", &part, 8).unwrap(), data);
+        ar.close().unwrap();
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn tear_inside_a_dataset_salvages_the_prefix() {
+        let path = tmp("torn-data");
+        build(&path);
+        // Find dataset "b"'s offset and tear inside it: only "a" survives.
+        let b_off = {
+            let mut ar = Archive::open(SerialComm::new(), &path).unwrap();
+            let off = ar.get("b").unwrap().offset;
+            ar.close().unwrap();
+            off
+        };
+        let f = std::fs::OpenOptions::new().write(true).open(&path).unwrap();
+        f.set_len(b_off + 70).unwrap();
+        drop(f);
+        let r = recover(&path).unwrap();
+        assert_eq!(r.action, RecoveryAction::Rebuilt);
+        assert_eq!(r.datasets, ["a"]);
+        crate::api::verify_file(&path).unwrap();
+        // Recovery is idempotent: a second run reports Intact.
+        let again = recover(&path).unwrap();
+        assert_eq!(again.action, RecoveryAction::Intact);
+        assert_eq!(again.datasets, ["a"]);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn file_shorter_than_header_is_unrecoverable() {
+        let path = tmp("stub");
+        std::fs::write(&path, b"scda").unwrap();
+        let err = recover(&path).unwrap_err();
+        assert_eq!(err.code(), 1000 + corrupt::TRUNCATED);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn header_only_file_is_plain_and_intact() {
+        let path = tmp("empty");
+        build(&path);
+        let f = std::fs::OpenOptions::new().write(true).open(&path).unwrap();
+        f.set_len(FILE_HEADER_BYTES as u64).unwrap();
+        drop(f);
+        // Truncating to the bare header leaves a verify-clean plain scda
+        // file with zero sections: nothing is torn, so recovery reports
+        // it intact rather than appending a trailer.
+        let r = recover(&path).unwrap();
+        assert_eq!(r.action, RecoveryAction::Intact);
+        assert!(r.datasets.is_empty());
+        let ar = Archive::open(SerialComm::new(), &path).unwrap();
+        assert!(ar.datasets().is_empty());
+        ar.close().unwrap();
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn tear_inside_the_first_dataset_rebuilds_empty() {
+        let path = tmp("first-torn");
+        build(&path);
+        let f = std::fs::OpenOptions::new().write(true).open(&path).unwrap();
+        f.set_len(FILE_HEADER_BYTES as u64 + 17).unwrap();
+        drop(f);
+        let r = recover(&path).unwrap();
+        assert_eq!(r.action, RecoveryAction::Rebuilt);
+        assert!(r.datasets.is_empty());
+        crate::api::verify_file(&path).unwrap();
+        let ar = Archive::open(SerialComm::new(), &path).unwrap();
+        assert!(ar.is_indexed());
+        assert!(ar.datasets().is_empty());
+        ar.close().unwrap();
+        std::fs::remove_file(&path).unwrap();
+    }
+}

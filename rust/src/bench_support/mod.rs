@@ -247,6 +247,14 @@ pub fn bench_archive_json_path() -> std::path::PathBuf {
         .unwrap_or_else(|| std::path::PathBuf::from("BENCH_archive.json"))
 }
 
+/// Where crash/recovery soak numbers land (`SCDA_BENCH_RECOVER_JSON`
+/// overrides).
+pub fn bench_recover_json_path() -> std::path::PathBuf {
+    std::env::var_os("SCDA_BENCH_RECOVER_JSON")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| std::path::PathBuf::from("BENCH_recover.json"))
+}
+
 /// Encoded write/read throughput of the per-element codec pipeline,
 /// serial vs pooled — the perf-trajectory numbers this PR's acceptance
 /// criterion tracks. Shared by the f1/t4 benches and the ignored-by-

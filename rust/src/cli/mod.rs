@@ -41,7 +41,15 @@ COMMANDS:
   cat <file> --range <name> <first> <count>
                                dump only elements [first, first+count) of a
                                named dataset (catalog-seeded range read:
-                               touches the range's bytes, not the section)
+                               touches the range's bytes, not the section);
+                               the reserved trailer names scda:catalog and
+                               scda:index dump the catalog text / footer
+                               index payload
+  recover <file>               repair an archive with a torn tail (crash or
+                               torn write during an append): truncate the
+                               damage, rebuild a consistent catalog + footer
+                               index over the surviving sections, and report
+                               what survived; intact files are untouched
   demo-write <file> [--ranks P] [--encode] [--precondition]
              [--frame-precond <width[d]>]
                                write an AMR demo checkpoint on P simulated
@@ -68,6 +76,7 @@ pub fn run(argv: impl IntoIterator<Item = String>) -> i32 {
         "ls" => cmd_ls(&args),
         "verify" => cmd_verify(&args),
         "cat" => cmd_cat(&args),
+        "recover" => cmd_recover(&args),
         "demo-write" => cmd_demo_write(&args),
         "restart" => cmd_restart(&args),
         "version" => {
@@ -310,12 +319,67 @@ fn cat_range(path: &str, name: &str, first: u64, count: u64) -> CliResult {
 }
 
 /// `scda cat <file> <name>`: seek to a named dataset through the catalog
-/// and dump its payload.
+/// and dump its payload. The reserved trailer names (`scda:catalog`,
+/// `scda:index`) are not catalog entries — they *are* the catalog — so
+/// they dump through a direct section walk instead.
 fn cat_dataset(path: &str, name: &str) -> CliResult {
+    if crate::archive::dataset::RESERVED_NAMES.contains(&name) {
+        return cat_trailer(path, name);
+    }
     let mut ar = crate::archive::Archive::open(SerialComm::new(), path)?;
     let h = ar.open_dataset(name)?;
     dump_section(ar.file_mut(), &h)?;
     ar.close()?;
+    Ok(())
+}
+
+/// Dump a trailer section (`scda:catalog` ASCII text or the 32-byte
+/// `scda:index` payload) by walking the sections for the *last* match —
+/// the trailer is always last, but the walk tolerates any position, so
+/// this also works on files mid-repair.
+fn cat_trailer(path: &str, name: &str) -> CliResult {
+    let mut f = ScdaFile::open(SerialComm::new(), path)?;
+    let mut found = None;
+    let mut offset = f.position();
+    while !f.at_end()? {
+        let h = f.read_section_header(true)?;
+        if h.user == name.as_bytes() {
+            found = Some(offset);
+        }
+        f.skip_section_data()?;
+        offset = f.position();
+    }
+    let Some(off) = found else {
+        f.close()?;
+        return Err(CliError::Usage(format!("{path} has no {name} section (plain scda file?)")));
+    };
+    f.seek_section(off)?;
+    let h = f.read_section_header(true)?;
+    dump_section(&mut f, &h)?;
+    f.close()?;
+    Ok(())
+}
+
+/// `scda recover <file>`: repair a torn tail and report what survived.
+fn cmd_recover(args: &Args) -> CliResult {
+    use crate::archive::recover::{recover, RecoveryAction};
+    let path = args.positional(0, "file argument")?;
+    let r = recover(Path::new(path))?;
+    match r.action {
+        RecoveryAction::Intact => {
+            println!("{path}: intact ({} dataset(s), {} bytes) — not modified", r.datasets.len(), r.recovered_len);
+        }
+        RecoveryAction::Rebuilt => {
+            println!(
+                "{path}: recovered — dropped {} torn byte(s), {} -> {} bytes",
+                r.truncated_bytes, r.original_len, r.recovered_len
+            );
+            println!("{} dataset(s) survived:", r.datasets.len());
+            for name in &r.datasets {
+                println!("  {name}");
+            }
+        }
+    }
     Ok(())
 }
 
@@ -528,6 +592,30 @@ mod tests {
         let tok = ar.get("ckpt/1/rho:f64x5").and_then(|d| d.precondition);
         assert_eq!(tok.map(|x| x.to_string()).as_deref(), Some("8d"));
         ar.close().unwrap();
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn recover_and_trailer_cat() {
+        let path = tmpfile("cli-recover");
+        let p = path.to_str().unwrap();
+        assert_eq!(run_words(&["demo-write", p, "--ranks", "2", "--base", "2", "--max", "3"]), 0);
+        // The trailer sections dump by their reserved names.
+        assert_eq!(run_words(&["cat", p, "scda:catalog"]), 0);
+        assert_eq!(run_words(&["cat", p, "scda:index"]), 0);
+        // An intact archive recovers to itself.
+        assert_eq!(run_words(&["recover", p]), 0);
+        assert_eq!(run_words(&["verify", p]), 0);
+        // Tear the footer index off and repair it.
+        let len = std::fs::metadata(&path).unwrap().len();
+        let f = std::fs::OpenOptions::new().write(true).open(&path).unwrap();
+        f.set_len(len - 50).unwrap();
+        drop(f);
+        assert_ne!(run_words(&["verify", p]), 0);
+        assert_eq!(run_words(&["recover", p]), 0);
+        assert_eq!(run_words(&["verify", p]), 0);
+        assert_eq!(run_words(&["ls", p]), 0);
+        assert_ne!(run_words(&["recover", "/nonexistent.scda"]), 0);
         std::fs::remove_file(&path).unwrap();
     }
 

@@ -83,6 +83,35 @@ impl ScdaError {
     pub fn message(&self) -> &str {
         &self.message
     }
+
+    /// True for retryable I/O failures (`EINTR`-shaped): the engines'
+    /// bounded-backoff retry (`crate::io::fault::retry_transient`)
+    /// absorbs these; every other error passes through immediately.
+    pub fn is_transient_io(&self) -> bool {
+        self.kind == ScdaErrorKind::Io
+            && (self.detail == 4 // EINTR
+                || self.source.as_ref().is_some_and(|e| e.kind() == std::io::ErrorKind::Interrupted))
+    }
+
+    /// Reconstruct a typed error from its wire form `(code, message)` —
+    /// the collective error-agreement transport: a rank that received a
+    /// peer's error code re-raises it locally so every rank surfaces the
+    /// *same* `ScdaError`. Codes outside the three groups degrade to a
+    /// usage error (never a panic on a malformed frame).
+    pub fn rebuild(code: i32, message: impl Into<String>) -> ScdaError {
+        let message = message.into();
+        match code {
+            1000..=1999 => ScdaError::corrupt(code - 1000, message),
+            2000..=2999 => ScdaError {
+                kind: ScdaErrorKind::Io,
+                detail: code - 2000,
+                message,
+                source: Some(std::io::Error::from_raw_os_error(code - 2000)),
+            },
+            3000..=3999 => ScdaError::usage(code - 3000, message),
+            _ => ScdaError::usage(usage::NOT_COLLECTIVE, message),
+        }
+    }
 }
 
 impl fmt::Display for ScdaError {
@@ -216,6 +245,20 @@ mod tests {
         assert_eq!(e.kind(), ScdaErrorKind::Io);
         assert!(e.to_string().contains("opening checkpoint"));
         assert!(std::error::Error::source(&e).is_some());
+    }
+
+    #[test]
+    fn rebuild_roundtrips_codes_across_groups() {
+        for code in [1000 + corrupt::TRUNCATED, 2004, 2000, 3000 + usage::BAD_RANGE] {
+            let e = ScdaError::rebuild(code, "peer error");
+            assert_eq!(e.code(), code, "code {code}");
+            assert!(e.to_string().contains("peer error"));
+        }
+        // EINTR-shaped rebuilds stay recognizably transient.
+        assert!(ScdaError::rebuild(2004, "x").is_transient_io());
+        assert!(!ScdaError::rebuild(2005, "x").is_transient_io());
+        // Out-of-range codes degrade to usage, never panic.
+        assert_eq!(ScdaError::rebuild(17, "x").kind(), ScdaErrorKind::Usage);
     }
 
     #[test]

@@ -73,6 +73,7 @@ use std::sync::Arc;
 use crate::error::{corrupt, Result, ScdaError};
 use crate::io::aggregate::{Payload, WriteAggregator};
 use crate::io::engine::{dispatch_runs, EngineStats, IoEngine, StagedCore};
+use crate::io::fault::retry_transient;
 use crate::io::sieve::ReadSieve;
 use crate::par::comm::Communicator;
 use crate::par::pfile::ParallelFile;
@@ -312,7 +313,7 @@ impl CollectiveEngine {
             // local read (all requested stripes merge into one run).
             if !buf.is_empty() {
                 self.gather_preads += 1;
-                file.read_at(offset, buf)?;
+                retry_transient(|| file.read_at(offset, buf))?;
             }
             return Ok(false);
         }
@@ -332,7 +333,7 @@ impl CollectiveEngine {
         if live.len() == 1 && reqs[live[0]].1 >= self.core.capacity as u64 {
             let mut my_err: Option<ScdaError> = None;
             if live[0] == me {
-                match file.read_at(offset, buf) {
+                match retry_transient(|| file.read_at(offset, buf)) {
                     Ok(()) => self.gather_preads += 1,
                     Err(e) => my_err = Some(e),
                 }
@@ -384,7 +385,7 @@ impl CollectiveEngine {
         for (s, e) in &merged {
             let mut b = vec![0u8; (e - s) as usize];
             if read_err.is_none() {
-                match file.read_at(*s, &mut b) {
+                match retry_transient(|| file.read_at(*s, &mut b)) {
                     Ok(()) => self.gather_preads += 1,
                     Err(err) => read_err = Some(err),
                 }

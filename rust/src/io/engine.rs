@@ -35,11 +35,12 @@
 //!   never dropped, and re-surface at the next `flush`/`close` — or, if
 //!   the file is dropped without either, through [`take_drop_error`].
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
 use crate::error::{Result, ScdaError};
 use crate::io::aggregate::{Payload, WriteAggregator};
+use crate::io::fault::retry_transient;
 use crate::io::sieve::ReadSieve;
 use crate::io::{IoEngineKind, IoTuning};
 use crate::par::comm::Communicator;
@@ -200,19 +201,41 @@ pub(crate) fn build_engine(
 // ---------------------------------------------------------------------
 
 static DROP_ERRORS: Mutex<Vec<ScdaError>> = Mutex::new(Vec::new());
+static DROP_EVICTIONS: AtomicU64 = AtomicU64::new(0);
 
 /// Bound on the sink: it is an escape hatch for a polling error sweep,
 /// not a log — a process that never polls must not grow it forever.
 const DROP_ERRORS_CAP: usize = 64;
 
+/// Observability for the drop-error sink. §A.6 promises file errors are
+/// never *silently* lost; the eviction counter is what keeps the capped
+/// sink honest about that promise — an evicted error can no longer be
+/// taken, but its loss is at least counted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct DropErrorStats {
+    /// Errors currently recorded and not yet taken.
+    pub pending: usize,
+    /// Errors evicted past the sink's capacity since process start.
+    pub evicted: u64,
+}
+
+/// Snapshot the drop-error sink's counters (process-wide).
+pub fn drop_error_stats() -> DropErrorStats {
+    DropErrorStats {
+        pending: DROP_ERRORS.lock().unwrap().len(),
+        evicted: DROP_EVICTIONS.load(Ordering::Relaxed),
+    }
+}
+
 /// Record a flush error detected on a drop path (no `Result` channel left
 /// to return it through), attributed to the file it happened on.
 /// Surfaced later via [`take_drop_error`]. Oldest entries are evicted
-/// past [`DROP_ERRORS_CAP`].
+/// past [`DROP_ERRORS_CAP`], counted by [`drop_error_stats`].
 pub(crate) fn record_drop_error(path: &std::path::Path, e: ScdaError) {
     let mut g = DROP_ERRORS.lock().unwrap();
     if g.len() >= DROP_ERRORS_CAP {
         g.remove(0);
+        DROP_EVICTIONS.fetch_add(1, Ordering::Relaxed);
     }
     g.push(ScdaError::io(
         std::io::Error::other(e.to_string()),
@@ -245,7 +268,7 @@ pub(crate) fn route_view<'a>(
         None => {
             scratch.clear();
             scratch.resize(len, 0);
-            file.read_at(offset, scratch)?;
+            retry_transient(|| file.read_at(offset, scratch))?;
             Ok(&scratch[..])
         }
     }
@@ -262,7 +285,7 @@ pub(crate) fn route_read_vec(
             return s.read_vec(file, offset, len);
         }
     }
-    file.read_vec(offset, len)
+    retry_transient(|| file.read_vec(offset, len))
 }
 
 pub(crate) fn route_read_into(
@@ -277,7 +300,7 @@ pub(crate) fn route_read_into(
             return Ok(());
         }
     }
-    file.read_at(offset, buf)
+    retry_transient(|| file.read_at(offset, buf))
 }
 
 // ---------------------------------------------------------------------
@@ -343,7 +366,7 @@ impl StagedCore {
         let cap = self.capacity;
         if cap == 0 || data.len() >= cap {
             self.drain_staged_locally(file)?;
-            return file.write_at(offset, data);
+            return retry_transient(|| file.write_at(offset, data));
         }
         if self.agg.staged_bytes() + data.len() > cap {
             self.drain_staged_locally(file)?;
@@ -364,7 +387,7 @@ impl StagedCore {
         let cap = self.capacity;
         if cap == 0 || data.len() >= cap {
             self.drain_staged_locally(file)?;
-            return file.write_at(offset, &data);
+            return retry_transient(|| file.write_at(offset, &data));
         }
         if self.agg.staged_bytes() + data.len() > cap {
             self.drain_staged_locally(file)?;
@@ -428,7 +451,7 @@ impl IoEngine for DirectEngine {
     }
 
     fn write(&mut self, file: &Arc<ParallelFile>, offset: u64, data: &[u8]) -> Result<()> {
-        file.write_at(offset, data)
+        retry_transient(|| file.write_at(offset, data))
     }
 
     fn view(&mut self, file: &Arc<ParallelFile>, offset: u64, len: usize) -> Result<&[u8]> {
@@ -436,11 +459,11 @@ impl IoEngine for DirectEngine {
     }
 
     fn read_vec(&mut self, file: &Arc<ParallelFile>, offset: u64, len: usize) -> Result<Vec<u8>> {
-        file.read_vec(offset, len)
+        retry_transient(|| file.read_vec(offset, len))
     }
 
     fn read_into(&mut self, file: &Arc<ParallelFile>, offset: u64, buf: &mut [u8]) -> Result<()> {
-        file.read_at(offset, buf)
+        retry_transient(|| file.read_at(offset, buf))
     }
 
     fn flush(&mut self, _file: &Arc<ParallelFile>, _comm: &dyn Communicator) -> Result<()> {
@@ -492,7 +515,7 @@ impl ParJob for FlushBatch {
             };
         }
         let (off, buf) = &self.runs[i];
-        if let Err(e) = self.file.write_at(*off, buf.as_slice()) {
+        if let Err(e) = retry_transient(|| self.file.write_at(*off, buf.as_slice())) {
             let mut g = self.ctl.error.lock().unwrap();
             if g.is_none() {
                 *g = Some(e);
@@ -594,7 +617,7 @@ pub(crate) fn dispatch_runs(
         }
         None => {
             for (off, buf) in runs {
-                file.write_at(off, buf.as_slice())?;
+                retry_transient(|| file.write_at(off, buf.as_slice()))?;
             }
             Ok(())
         }

@@ -1,0 +1,342 @@
+//! Deterministic fault plane: seedable fault plans injected at the
+//! positional-I/O layer ([`crate::par::ParallelFile`]).
+//!
+//! The plan generalizes the original `inject_write_failure` countdown
+//! hook into the fault vocabulary the crash-consistency subsystem needs:
+//!
+//! * **transient-then-succeed** — the triggering operation fails with a
+//!   retryable (`EINTR`-shaped) error a fixed number of times, then
+//!   succeeds; the engines absorb these with bounded backoff
+//!   ([`retry_transient`]) and the caller never sees them.
+//! * **persistent** — the triggering operation and every one after it
+//!   fails; surfaces collectively at `flush`/`section_end`/`close`.
+//! * **torn write** — the triggering write puts only its first `keep`
+//!   bytes on disk and then fails, modeling a short `pwrite`.
+//! * **crash point** — a torn write followed by a process-local "power
+//!   cut": the file is truncated at exactly the torn byte and every
+//!   later operation on the handle fails. What remains on disk is the
+//!   byte prefix a real crash would leave, which is what
+//!   `Archive::recover` / `scda recover` is tested against.
+//!
+//! Plans are deterministic: the trigger is a per-handle operation
+//! countdown (exactly the old hook's semantics), and seeded plans derive
+//! their parameters from a tiny xorshift generator so a soak sweep can
+//! replay any failure by seed. Per-rank faults either target the handle
+//! of one rank ([`FaultPlan::on_rank`]) or are simply armed on a single
+//! rank's handle — the hook is per handle, never global.
+
+use crate::error::{Result, ScdaError};
+use std::time::Duration;
+
+/// What happens when a [`FaultPlan`]'s countdown reaches its trigger.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Fail the triggering operation (and the next `times - 1`) with a
+    /// retryable `EINTR` error, then let everything succeed.
+    Transient { times: u32 },
+    /// Fail the triggering operation and every one after it.
+    Persistent,
+    /// Write only the first `keep` bytes of the triggering write (clamped
+    /// to the buffer), then fail it and every write after it.
+    Torn { keep: u64 },
+    /// [`FaultKind::Torn`] followed by a process-local power cut: the
+    /// file is truncated at exactly the torn byte, and every later
+    /// operation on the handle fails.
+    Crash { keep: u64 },
+}
+
+/// The operation class a plan counts and fires on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultOp {
+    Write,
+    Read,
+}
+
+/// A deterministic fault plan: fire [`FaultKind`] after `after` more
+/// successful operations of class `op` on the armed handle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub after: u64,
+    pub kind: FaultKind,
+    pub op: FaultOp,
+    /// Restrict the plan to the handle of one rank (`None` = any handle
+    /// the plan is armed on). Lets a soak driver hand the *same* plan
+    /// value to every rank and still fault exactly one of them.
+    pub rank: Option<usize>,
+}
+
+impl FaultPlan {
+    /// Retryable `EINTR` failures for the `after+1`-th write and the
+    /// `times - 1` attempts after it, then success.
+    pub fn transient(after: u64, times: u32) -> Self {
+        FaultPlan { after, kind: FaultKind::Transient { times }, op: FaultOp::Write, rank: None }
+    }
+
+    /// The original `inject_write_failure` semantics: `after` more writes
+    /// succeed, every write after that fails.
+    pub fn persistent(after: u64) -> Self {
+        FaultPlan { after, kind: FaultKind::Persistent, op: FaultOp::Write, rank: None }
+    }
+
+    /// A short write: the trigger write keeps only `keep` bytes.
+    pub fn torn(after: u64, keep: u64) -> Self {
+        FaultPlan { after, kind: FaultKind::Torn { keep }, op: FaultOp::Write, rank: None }
+    }
+
+    /// A torn write plus power cut truncating the file at the torn byte.
+    pub fn crash(after: u64, keep: u64) -> Self {
+        FaultPlan { after, kind: FaultKind::Crash { keep }, op: FaultOp::Write, rank: None }
+    }
+
+    /// Count and fire on reads instead of writes (torn/crash kinds
+    /// degrade to persistent read errors: reads cannot tear the file).
+    pub fn on_reads(mut self) -> Self {
+        self.op = FaultOp::Read;
+        self
+    }
+
+    /// Fire only on the handle of `rank`; other ranks' handles ignore
+    /// the plan entirely (no ticks consumed).
+    pub fn on_rank(mut self, rank: usize) -> Self {
+        self.rank = Some(rank);
+        self
+    }
+
+    /// Derive a crash plan from a seed: trigger write in
+    /// `[0, max_trigger)`, torn byte count in `[0, 4096)`. Two calls with
+    /// the same arguments produce the same plan.
+    pub fn seeded_crash(seed: u64, max_trigger: u64) -> Self {
+        let mut rng = FaultRng::new(seed);
+        let after = rng.below(max_trigger.max(1));
+        let keep = rng.below(4096);
+        FaultPlan::crash(after, keep)
+    }
+}
+
+/// The per-handle armed state of a plan (lives on `ParallelFile`).
+#[derive(Debug)]
+pub struct FaultState {
+    plan: FaultPlan,
+    remaining: u64,
+    transient_left: u32,
+    /// A persistent/torn/crash fault already fired: every later matching
+    /// operation fails.
+    tripped: bool,
+}
+
+impl FaultState {
+    pub fn new(plan: FaultPlan) -> Self {
+        let transient_left = match plan.kind {
+            FaultKind::Transient { times } => times,
+            _ => 0,
+        };
+        FaultState { plan, remaining: plan.after, transient_left, tripped: false }
+    }
+
+    /// Consult the plan for one operation of class `op` on `rank`'s
+    /// handle writing (or reading) at `offset`. Returns:
+    ///
+    /// * `Ok(None)` — no fault; perform the operation normally;
+    /// * `Ok(Some((keep, cut)))` — torn write: the caller must write only
+    ///   the first `keep` bytes, truncate the file to `offset + keep` if
+    ///   `cut`, and return [`injected_error`] with `torn = true`;
+    /// * `Err(e)` — the operation fails with `e` outright.
+    ///
+    /// Exhausted transient plans report themselves via `Ok(None)` after
+    /// their last failure; the caller may drop the state then (checked
+    /// with [`FaultState::exhausted`]).
+    pub fn check(&mut self, op: FaultOp, rank: usize, offset: u64, len: u64) -> Result<Option<(u64, bool)>> {
+        if self.plan.op != op {
+            return Ok(None);
+        }
+        if self.plan.rank.is_some_and(|r| r != rank) {
+            return Ok(None);
+        }
+        if self.tripped {
+            return Err(injected_error(self.plan.kind, op, offset, len, false));
+        }
+        if self.remaining > 0 {
+            self.remaining -= 1;
+            return Ok(None);
+        }
+        match self.plan.kind {
+            FaultKind::Transient { .. } => {
+                if self.transient_left > 0 {
+                    self.transient_left -= 1;
+                    Err(transient_error(op, offset, len))
+                } else {
+                    // Exhausted: the operation (a retry) now succeeds.
+                    Ok(None)
+                }
+            }
+            FaultKind::Persistent => {
+                self.tripped = true;
+                Err(injected_error(self.plan.kind, op, offset, len, false))
+            }
+            FaultKind::Torn { keep } => {
+                self.tripped = true;
+                if op == FaultOp::Read {
+                    return Err(injected_error(self.plan.kind, op, offset, len, false));
+                }
+                Ok(Some((keep.min(len), false)))
+            }
+            FaultKind::Crash { keep } => {
+                self.tripped = true;
+                if op == FaultOp::Read {
+                    return Err(injected_error(self.plan.kind, op, offset, len, false));
+                }
+                Ok(Some((keep.min(len), true)))
+            }
+        }
+    }
+
+    /// True once a transient plan has delivered all its failures (the
+    /// state can be dropped — the handle is healthy again).
+    pub fn exhausted(&self) -> bool {
+        matches!(self.plan.kind, FaultKind::Transient { .. }) && self.transient_left == 0 && self.remaining == 0
+    }
+}
+
+/// `errno` of the injected transient failures: `EINTR`, the canonical
+/// retry-me error (its `ScdaError` code is therefore `2000 + 4`).
+pub const TRANSIENT_ERRNO: i32 = 4;
+
+fn transient_error(op: FaultOp, offset: u64, len: u64) -> ScdaError {
+    let verb = if op == FaultOp::Write { "writing" } else { "reading" };
+    ScdaError::io(
+        std::io::Error::from_raw_os_error(TRANSIENT_ERRNO),
+        format!("injected transient fault {verb} {len} bytes at offset {offset}"),
+    )
+}
+
+/// The error a fired (non-transient) fault reports. Indistinguishable
+/// from a real `pwrite`/`pread` failure to everything above the file
+/// layer.
+pub fn injected_error(kind: FaultKind, op: FaultOp, offset: u64, len: u64, torn: bool) -> ScdaError {
+    let verb = if op == FaultOp::Write { "writing" } else { "reading" };
+    let what = match (kind, torn) {
+        (FaultKind::Crash { .. }, _) => "simulated power cut",
+        (FaultKind::Torn { .. }, true) => "injected torn write",
+        _ => "injected write failure",
+    };
+    ScdaError::io(std::io::Error::other(what), format!("{verb} {len} bytes at offset {offset}"))
+}
+
+/// Bounded-backoff retry of transient I/O faults — the engines wrap
+/// every positional read/write in this, so `EINTR`-shaped errors
+/// (injected or real) are absorbed up to [`RETRY_LIMIT`] times and never
+/// reach the API surface. Anything non-transient passes through on the
+/// first failure.
+pub fn retry_transient<T>(mut f: impl FnMut() -> Result<T>) -> Result<T> {
+    let mut attempt = 0u32;
+    loop {
+        match f() {
+            Err(e) if e.is_transient_io() && attempt < RETRY_LIMIT => {
+                attempt += 1;
+                // Deterministic bounded backoff: 100 µs, 200, 400, 800.
+                std::thread::sleep(Duration::from_micros(50u64 << attempt));
+            }
+            other => return other,
+        }
+    }
+}
+
+/// Retries per operation before a transient fault is treated as
+/// persistent.
+pub const RETRY_LIMIT: u32 = 4;
+
+/// Tiny deterministic xorshift64* generator for seeded plans — fault
+/// schedules must replay exactly, so no OS entropy is involved.
+#[derive(Debug, Clone)]
+pub struct FaultRng(u64);
+
+impl FaultRng {
+    pub fn new(seed: u64) -> Self {
+        FaultRng(seed.wrapping_mul(2685821657736338717).max(1))
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.0 = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform-ish value in `[0, n)` (`n > 0`).
+    pub fn below(&mut self, n: u64) -> u64 {
+        self.next_u64() % n.max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transient_plan_fails_then_succeeds() {
+        let mut st = FaultState::new(FaultPlan::transient(1, 2));
+        assert!(st.check(FaultOp::Write, 0, 0, 8).unwrap().is_none()); // countdown
+        assert!(st.check(FaultOp::Write, 0, 8, 8).is_err());
+        assert!(st.check(FaultOp::Write, 0, 8, 8).is_err());
+        assert!(st.check(FaultOp::Write, 0, 8, 8).unwrap().is_none());
+        assert!(st.exhausted());
+        // Transient errors are recognizably retryable.
+        let e = FaultState::new(FaultPlan::transient(0, 1)).check(FaultOp::Write, 0, 0, 1).unwrap_err();
+        assert!(e.is_transient_io());
+        assert_eq!(e.code(), 2000 + TRANSIENT_ERRNO);
+    }
+
+    #[test]
+    fn persistent_plan_trips_and_stays_tripped() {
+        let mut st = FaultState::new(FaultPlan::persistent(0));
+        assert!(st.check(FaultOp::Write, 0, 0, 4).is_err());
+        assert!(st.check(FaultOp::Write, 0, 4, 4).is_err());
+        assert!(!st.check(FaultOp::Write, 0, 0, 4).unwrap_err().is_transient_io());
+        // Reads are not the planned op: untouched.
+        assert!(st.check(FaultOp::Read, 0, 0, 4).unwrap().is_none());
+    }
+
+    #[test]
+    fn torn_and_crash_report_keep_and_cut() {
+        let mut st = FaultState::new(FaultPlan::torn(0, 3));
+        assert_eq!(st.check(FaultOp::Write, 0, 10, 8).unwrap(), Some((3, false)));
+        assert!(st.check(FaultOp::Write, 0, 18, 8).is_err());
+        let mut st = FaultState::new(FaultPlan::crash(0, 100));
+        // keep clamps to the buffer length.
+        assert_eq!(st.check(FaultOp::Write, 0, 10, 8).unwrap(), Some((8, true)));
+    }
+
+    #[test]
+    fn per_rank_plans_ignore_other_ranks() {
+        let mut st = FaultState::new(FaultPlan::persistent(0).on_rank(2));
+        assert!(st.check(FaultOp::Write, 0, 0, 4).unwrap().is_none());
+        assert!(st.check(FaultOp::Write, 1, 0, 4).unwrap().is_none());
+        assert!(st.check(FaultOp::Write, 2, 0, 4).is_err());
+    }
+
+    #[test]
+    fn seeded_plans_replay() {
+        let a = FaultPlan::seeded_crash(42, 1000);
+        let b = FaultPlan::seeded_crash(42, 1000);
+        assert_eq!(a, b);
+        assert!(a.after < 1000);
+        let c = FaultPlan::seeded_crash(43, 1000);
+        assert!(a != c || FaultPlan::seeded_crash(44, 1000) != a);
+    }
+
+    #[test]
+    fn retry_absorbs_bounded_transients() {
+        let mut st = FaultState::new(FaultPlan::transient(0, 3));
+        let out = retry_transient(|| match st.check(FaultOp::Write, 0, 0, 1)? {
+            None => Ok(7u32),
+            Some(_) => unreachable!(),
+        });
+        assert_eq!(out.unwrap(), 7);
+        // More transient failures than the retry budget: the error escapes.
+        let mut st = FaultState::new(FaultPlan::transient(0, RETRY_LIMIT + 1));
+        let out: Result<u32> = retry_transient(|| st.check(FaultOp::Write, 0, 0, 1).map(|_| 7));
+        assert!(out.unwrap_err().is_transient_io());
+    }
+}

@@ -34,11 +34,16 @@
 pub mod aggregate;
 pub mod collective;
 pub mod engine;
+pub mod fault;
 pub mod sieve;
 
 pub use aggregate::{Payload, WriteAggregator, WriteCoalescer};
 pub use collective::CollectiveEngine;
-pub use engine::{take_drop_error, AggregatingEngine, DirectEngine, EngineStats, IoEngine};
+pub use engine::{
+    drop_error_stats, take_drop_error, AggregatingEngine, DirectEngine, DropErrorStats,
+    EngineStats, IoEngine,
+};
+pub use fault::{retry_transient, FaultKind, FaultOp, FaultPlan};
 pub use sieve::ReadSieve;
 
 /// Which transport an [`IoTuning`] selects.

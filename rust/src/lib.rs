@@ -265,6 +265,39 @@
 //!   [`coordinator::checkpoint`] writes and restores through it, so
 //!   restart addresses fields by name on any rank count.
 //!   `BENCH_archive.json` (t3 bench) tracks indexed-vs-scan access.
+//!
+//! # Crash consistency
+//!
+//! scda writers only append, so a crash damages only a suffix of the
+//! file (SPEC Appendix A); the crash-consistency subsystem turns that
+//! byte-level fact into operational guarantees:
+//!
+//! * **Deterministic fault plane** ([`io::FaultPlan`]): seedable
+//!   injected faults — short/torn writes, transient-then-succeed
+//!   errors, per-rank persistent failures, and in-engine power cuts
+//!   (`FaultPlan::seeded_crash`, which truncates the file at the torn
+//!   byte) — armed per file via [`api::ScdaFile::set_fault_plan`], so
+//!   every failure scenario in the test suite is replayable from a
+//!   seed.
+//! * **Collective error agreement**: transient (`EINTR`-class) faults
+//!   are absorbed by bounded retry inside the engines; persistent
+//!   faults are exchanged at the next collective boundary so every rank
+//!   surfaces the *same* [`ScdaError`] from `flush`/`close` — no rank
+//!   returns success while another fails, and a sticky prior failure
+//!   re-surfaces at `close` (`rust/tests/io_faults.rs` asserts the
+//!   agreement at 2 and 4 ranks). Errors from dropped files land in the
+//!   bounded drop sink ([`io::take_drop_error`],
+//!   [`io::drop_error_stats`] for eviction accounting).
+//! * **Torn-tail recovery** ([`archive::recover`], CLI `scda recover`):
+//!   walk the longest verify-clean prefix, drop the stale trailer and
+//!   any dangling convention-pair half, truncate, rebuild a fresh
+//!   catalog + footer index over the survivors, and gate on
+//!   re-verification; intact files (archives *and* plain scda) are left
+//!   byte-identical. The soak suite (`rust/tests/recover_soak.rs`)
+//!   sweeps bisected truncation offsets at 1/2/4/8 writer ranks plus
+//!   seeded in-engine crashes, asserting every crash point recovers to
+//!   exactly the committed-prefix dataset set, restorable on a
+//!   different rank count; `BENCH_recover.json` tracks the sweep.
 
 pub mod api;
 pub mod archive;

@@ -8,9 +8,11 @@
 use std::fs::{File, OpenOptions};
 use std::os::unix::fs::FileExt;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
 
 use crate::error::{Result, ScdaError};
+use crate::io::fault::{injected_error, FaultKind, FaultOp, FaultPlan, FaultState};
 use crate::par::comm::Communicator;
 
 /// Syscall-level instrumentation of one [`ParallelFile`] handle (i.e. of
@@ -55,13 +57,16 @@ pub struct ParallelFile {
     file: File,
     path: PathBuf,
     writable: bool,
+    /// The rank this handle belongs to (per-rank fault plans key on it).
+    rank: usize,
     /// Length cached at open for read-only handles (read-only scda files
     /// cannot grow, §A.3), so `len()` needs no per-section `fstat`.
     cached_len: Option<u64>,
     counters: IoCounters,
-    /// Fault injection (see [`Self::inject_write_failure`]); `u64::MAX`
-    /// means disarmed.
-    fail_writes_after: AtomicU64,
+    /// Armed fault plan (see [`Self::set_fault_plan`]); the atomic flag
+    /// keeps the disarmed fast path lock-free.
+    fault_armed: AtomicBool,
+    faults: Mutex<Option<FaultState>>,
 }
 
 impl ParallelFile {
@@ -105,9 +110,11 @@ impl ParallelFile {
             file,
             path: path.to_path_buf(),
             writable: true,
+            rank: comm.rank(),
             cached_len: None,
             counters: IoCounters::default(),
-            fail_writes_after: AtomicU64::new(u64::MAX),
+            fault_armed: AtomicBool::new(false),
+            faults: Mutex::new(None),
         })
     }
 
@@ -131,9 +138,11 @@ impl ParallelFile {
             file,
             path: path.to_path_buf(),
             writable: false,
+            rank: comm.rank(),
             cached_len: Some(cached_len),
             counters,
-            fail_writes_after: AtomicU64::new(u64::MAX),
+            fault_armed: AtomicBool::new(false),
+            faults: Mutex::new(None),
         })
     }
 
@@ -141,14 +150,39 @@ impl ParallelFile {
         &self.path
     }
 
-    /// Fault-injection hook for failure drills and tests of the staged /
-    /// background flush error paths: after `after` more successful
-    /// `write_at` calls on this handle, every subsequent write fails with
-    /// an injected I/O error. `u64::MAX` disarms. The hook is per handle
-    /// (never global) and the injected failure is indistinguishable from a
-    /// real `pwrite` error to everything above the file layer.
+    /// Arm a deterministic [`FaultPlan`] on this handle (fault drills,
+    /// the crash/restore soak, and tests of the staged / background
+    /// flush error paths). `None` disarms. The hook is per handle (never
+    /// global) and an injected failure is indistinguishable from a real
+    /// `pwrite`/`pread` error to everything above the file layer —
+    /// except transient plans, whose `EINTR`-shaped errors the engines'
+    /// bounded retry absorbs by design.
+    pub fn set_fault_plan(&self, plan: Option<FaultPlan>) {
+        let mut g = self.faults.lock().unwrap();
+        self.fault_armed.store(plan.is_some(), Ordering::SeqCst);
+        *g = plan.map(FaultState::new);
+    }
+
+    /// Compatibility shim for the original hook: after `after` more
+    /// successful `write_at` calls, every subsequent write fails
+    /// (a [`FaultPlan::persistent`]); `u64::MAX` disarms.
     pub fn inject_write_failure(&self, after: u64) {
-        self.fail_writes_after.store(after, Ordering::SeqCst);
+        self.set_fault_plan((after != u64::MAX).then(|| FaultPlan::persistent(after)));
+    }
+
+    /// Consult the armed plan for one operation; shared by the write and
+    /// read paths. `Ok(None)` = proceed normally; `Ok(Some((keep, cut)))`
+    /// = torn write of `keep` bytes (power cut truncating there if
+    /// `cut`); `Err` = the operation fails outright.
+    fn fault_check(&self, op: FaultOp, offset: u64, len: u64) -> Result<Option<(u64, bool)>> {
+        let mut g = self.faults.lock().unwrap();
+        let Some(st) = g.as_mut() else { return Ok(None) };
+        let verdict = st.check(op, self.rank, offset, len);
+        if st.exhausted() {
+            *g = None;
+            self.fault_armed.store(false, Ordering::SeqCst);
+        }
+        verdict
     }
 
     /// Write `buf` at absolute `offset` (this rank's window).
@@ -156,22 +190,16 @@ impl ParallelFile {
         debug_assert!(self.writable);
         self.counters.writes.fetch_add(1, Ordering::Relaxed);
         self.counters.write_bytes.fetch_add(buf.len() as u64, Ordering::Relaxed);
-        if self.fail_writes_after.load(Ordering::Relaxed) != u64::MAX {
-            // Atomic countdown: concurrent writers (async-flush pool
-            // workers) must each consume exactly one tick, and the
-            // armed-at-zero state must fail every write until disarmed.
-            let armed = self.fail_writes_after.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
-                if v == u64::MAX || v == 0 {
-                    None
-                } else {
-                    Some(v - 1)
+        if self.fault_armed.load(Ordering::Relaxed) {
+            if let Some((keep, cut)) = self.fault_check(FaultOp::Write, offset, buf.len() as u64)? {
+                // Realize the torn write / power cut, then report it.
+                let _ = self.file.write_all_at(&buf[..keep as usize], offset);
+                if cut {
+                    let _ = self.file.set_len(offset + keep);
+                    let _ = self.file.sync_all();
                 }
-            });
-            if armed == Err(0) {
-                return Err(ScdaError::io(
-                    std::io::Error::other("injected write failure"),
-                    format!("writing {} bytes at offset {offset}", buf.len()),
-                ));
+                let kind = if cut { FaultKind::Crash { keep } } else { FaultKind::Torn { keep } };
+                return Err(injected_error(kind, FaultOp::Write, offset, buf.len() as u64, true));
             }
         }
         self.file
@@ -183,6 +211,9 @@ impl ParallelFile {
     pub fn read_at(&self, offset: u64, buf: &mut [u8]) -> Result<()> {
         self.counters.reads.fetch_add(1, Ordering::Relaxed);
         self.counters.read_bytes.fetch_add(buf.len() as u64, Ordering::Relaxed);
+        if self.fault_armed.load(Ordering::Relaxed) {
+            self.fault_check(FaultOp::Read, offset, buf.len() as u64)?;
+        }
         self.file.read_exact_at(buf, offset).map_err(|e| {
             if e.kind() == std::io::ErrorKind::UnexpectedEof {
                 ScdaError::corrupt(

@@ -175,6 +175,65 @@ fn catalog_and_index_flips_fail_with_catalog_codes() {
     }
 }
 
+/// Mid-file section-header corruption vs `recover`: flip bytes inside
+/// *interior* section headers (not just the trailer). Recovery must
+/// either produce a verify-clean archive whose served datasets are
+/// byte-identical to the references, or fail with a corrupt-file code —
+/// never panic, never wrong data.
+#[test]
+fn recover_survives_mid_file_header_corruption() {
+    let (bytes, refs, bounds) = build();
+    let path = tmp("recover-flip");
+    // Interior section starts: every logical boundary except EOF. The
+    // flips land in the 64-byte type row: magic, kind letter, length
+    // digits, user string.
+    for (i, &b) in bounds[..bounds.len() - 1].iter().enumerate() {
+        for (off, mask) in [(0usize, 0x01u8), (1, 0x80), (8, 0x55), (33, 0x20), (63, 0x04)] {
+            let pos = b as usize + off;
+            if pos >= bytes.len() {
+                continue;
+            }
+            let mut img = bytes.clone();
+            img[pos] ^= mask;
+            std::fs::write(&path, &img).unwrap();
+            match scda::archive::recover(&path) {
+                Ok(_) => {
+                    scda::api::verify_file(&path).unwrap_or_else(|e| {
+                        panic!("boundary {i} flip at {pos}: recover said Ok but verify fails: {e}")
+                    });
+                    no_wrong_data(&path, &refs);
+                }
+                Err(e) => assert_eq!(
+                    e.kind(),
+                    ScdaErrorKind::CorruptFile,
+                    "boundary {i} flip at {pos}: non-corrupt error {e}"
+                ),
+            }
+        }
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+/// Every dataset the (possibly recovered) archive still serves must match
+/// its reference byte-for-byte. Graceful errors — at open or at any read
+/// — are acceptable outcomes for a damaged file; wrong bytes are not.
+fn no_wrong_data(path: &std::path::Path, refs: &[(String, Vec<u8>)]) {
+    let part = Partition::uniform(1, 6);
+    let Ok(mut ar) = Archive::open(SerialComm::new(), path) else { return };
+    let names: Vec<String> = ar.datasets().iter().map(|d| d.name.clone()).collect();
+    for name in &names {
+        let Some((_, reference)) = refs.iter().find(|(n, _)| n == name) else { continue };
+        let got = if name == "v/raw" {
+            ar.read_varray(name, &part).map(|(_, d)| d)
+        } else {
+            ar.read_array(name, &part, 24)
+        };
+        if let Ok(data) = got {
+            assert_eq!(&data, reference, "dataset {name} served wrong bytes after recovery");
+        }
+    }
+}
+
 /// Write the image under a distinct name, open it as an archive, return
 /// the error, and clean the file up.
 fn open_err(image: &[u8], label: &str) -> scda::ScdaError {

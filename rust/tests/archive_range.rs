@@ -187,6 +187,77 @@ fn range_reads_touch_only_the_window() {
     std::fs::remove_file(&*path).unwrap();
 }
 
+/// Partitioned range reads: `read_range_partitioned` hands each rank its
+/// own window of the range — equal to full-`read_range`-then-slice by
+/// the rank's `local_range` — for raw and encoded arrays and varrays,
+/// across engines.
+#[test]
+fn partitioned_range_reads_equal_sliced_full_range() {
+    let path = Arc::new(tmp("part-range"));
+    build(&path);
+    let (first, count) = (100u64, 18u64);
+    let cases: Vec<(usize, IoTuning)> = vec![
+        (2, IoTuning::default()),
+        (4, IoTuning::default()),
+        (4, IoTuning::collective().with_stripe_size(4 << 10)),
+        (4, IoTuning::direct()),
+    ];
+    for (ranks, tuning) in cases {
+        let p = Arc::clone(&path);
+        let results = run_parallel(ranks, move |comm| {
+            let part = Partition::uniform(ranks, count);
+            let mut ar = Archive::open_with(comm, &**p, tuning, true).unwrap();
+            let a = ar.read_range_partitioned("a", first, count, &part).unwrap();
+            let az = ar.read_range_partitioned("az", first, count, &part).unwrap();
+            let v = ar.read_varray_range_partitioned("v", first, count, &part).unwrap();
+            let vz = ar.read_varray_range_partitioned("vz", first, count, &part).unwrap();
+            ar.close().unwrap();
+            (a, az, v, vz)
+        });
+        let part = Partition::uniform(ranks, count);
+        let ea = slice_fixed(first, count);
+        let (es, ed) = slice_var(first, count);
+        for (rank, (a, az, v, vz)) in results.iter().enumerate() {
+            let r = part.local_range(rank);
+            let want_a = &ea[(r.start * E) as usize..(r.end * E) as usize];
+            assert_eq!(a, want_a, "rank {rank}/{ranks} a ({tuning:?})");
+            assert_eq!(az, want_a, "rank {rank}/{ranks} az ({tuning:?})");
+            let want_s = &es[r.start as usize..r.end as usize];
+            let skip: u64 = es[..r.start as usize].iter().sum();
+            let len: u64 = want_s.iter().sum();
+            let want_d = &ed[skip as usize..(skip + len) as usize];
+            for (name, (gs, gd)) in [("v", v), ("vz", vz)] {
+                assert_eq!(gs, want_s, "rank {rank}/{ranks} {name} sizes ({tuning:?})");
+                assert_eq!(gd, want_d, "rank {rank}/{ranks} {name} data ({tuning:?})");
+            }
+        }
+    }
+    std::fs::remove_file(&*path).unwrap();
+}
+
+/// Partition/communicator and partition/range mismatches fail with the
+/// documented usage code and leave the archive usable.
+#[test]
+fn partitioned_range_read_validates_the_partition() {
+    let path = Arc::new(tmp("part-range-err"));
+    build(&path);
+    let mut ar = Archive::open(SerialComm::new(), &*path).unwrap();
+    let wrong_ranks = Partition::uniform(2, 10);
+    let err = ar.read_range_partitioned("a", 0, 10, &wrong_ranks).unwrap_err();
+    assert_eq!(err.code(), 3000 + scda::error::usage::PARTITION_MISMATCH);
+    let wrong_total = Partition::uniform(1, 11);
+    let err = ar.read_range_partitioned("a", 0, 10, &wrong_total).unwrap_err();
+    assert_eq!(err.code(), 3000 + scda::error::usage::PARTITION_MISMATCH);
+    let err = ar.read_varray_range_partitioned("v", 0, 10, &wrong_total).unwrap_err();
+    assert_eq!(err.code(), 3000 + scda::error::usage::PARTITION_MISMATCH);
+    // Still usable, and the 1-rank partitioned read degenerates to the
+    // plain range read.
+    let part = Partition::uniform(1, 4);
+    assert_eq!(ar.read_range_partitioned("a", 0, 4, &part).unwrap(), slice_fixed(0, 4));
+    ar.close().unwrap();
+    std::fs::remove_file(&*path).unwrap();
+}
+
 /// Usage errors carry the documented codes and leave the archive
 /// usable.
 #[test]

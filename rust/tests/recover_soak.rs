@@ -1,0 +1,309 @@
+//! Crash/restore soak: the recovery property the crash-consistency
+//! subsystem promises. For every injected crash point — a bisected sweep
+//! of truncation offsets over the whole file, plus in-engine
+//! `FaultPlan::crash` power cuts — `recover` must yield a verify-clean
+//! archive containing *exactly* the datasets fully committed before the
+//! crash, with byte-identical content, restorable by name on a different
+//! rank count. Never a panic, never wrong data.
+//!
+//! The `#[ignore]`d recorder emits `BENCH_recover.json` (see
+//! `tools/check_bench_reports.py`); `SCDA_BENCH_QUICK=1` shrinks the
+//! sweep for CI.
+
+use scda::api::{DataSrc, IoTuning};
+use scda::archive::{recover, Archive, RecoveryAction};
+use scda::bench_support::{bench_recover_json_path, quick, BenchReport, JsonVal};
+use scda::format::section::SectionKind;
+use scda::io::FaultPlan;
+use scda::par::{run_parallel, Communicator, Partition, SerialComm};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+const ELEM: u64 = 8;
+const N: u64 = 96;
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("scda-recover-soak");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(format!("{name}-{}.scda", std::process::id()))
+}
+
+fn fixed_data() -> Vec<u8> {
+    (0..N * ELEM).map(|i| (i * 7 % 251) as u8).collect()
+}
+
+fn var_sizes() -> Vec<u64> {
+    (0..N).map(|i| 1 + (i % 23)).collect()
+}
+
+fn var_data(total: u64) -> Vec<u8> {
+    (0..total).map(|i| (i * 3 % 253) as u8).collect()
+}
+
+/// Write the soak archive on `writers` ranks: one of each section kind
+/// (the fixed array twice — raw and compressed, so the sweep crosses a
+/// convention-9 pair too). Deterministic content at every rank count.
+fn write_archive(path: &Path, writers: usize) {
+    let part = Partition::uniform(writers, N);
+    let data = Arc::new(fixed_data());
+    let sizes = Arc::new(var_sizes());
+    let vtotal: u64 = sizes.iter().sum();
+    let vdata = Arc::new(var_data(vtotal));
+    let path = path.to_path_buf();
+    run_parallel(writers, move |comm| {
+        let rank = comm.rank();
+        let mut ar = Archive::create(comm, &path, b"soak").unwrap();
+        let r = part.local_range(rank);
+        let local = &data[(r.start * ELEM) as usize..(r.end * ELEM) as usize];
+        ar.write_inline_from("stamp", 0, Some(&[42u8; 32])).unwrap();
+        ar.write_array("plain", DataSrc::Contiguous(local), &part, ELEM, false).unwrap();
+        ar.write_block_from("manifest", 0, Some(b"soak manifest v1"), 16, false).unwrap();
+        ar.write_array("packed", DataSrc::Contiguous(local), &part, ELEM, true).unwrap();
+        let ls = &sizes[r.start as usize..r.end as usize];
+        let voff: u64 = sizes[..r.start as usize].iter().sum();
+        let vlen: u64 = ls.iter().sum();
+        ar.write_varray(
+            "var",
+            DataSrc::Contiguous(&vdata[voff as usize..(voff + vlen) as usize]),
+            &part,
+            ls,
+            false,
+        )
+        .unwrap();
+        ar.finish().unwrap();
+    });
+}
+
+/// Every dataset's full content, serially, in file order.
+fn read_all(path: &Path) -> Vec<(String, Vec<u8>)> {
+    let mut ar = Archive::open(SerialComm::new(), path).unwrap();
+    let metas: Vec<(String, SectionKind, u64, u64)> =
+        ar.datasets().iter().map(|d| (d.name.clone(), d.kind, d.elem_count, d.elem_size)).collect();
+    let mut out = Vec::new();
+    for (name, kind, n, e) in metas {
+        let bytes = match kind {
+            SectionKind::Inline => ar.read_inline(&name, 0).unwrap().unwrap().to_vec(),
+            SectionKind::Block => ar.read_block(&name, 0).unwrap().unwrap(),
+            SectionKind::Array => ar.read_array(&name, &Partition::uniform(1, n), e).unwrap(),
+            SectionKind::Varray => ar.read_varray(&name, &Partition::uniform(1, n)).unwrap().1,
+        };
+        out.push((name, bytes));
+    }
+    ar.close().unwrap();
+    out
+}
+
+/// Breadth-first midpoint bisection of `[lo, hi)`: covers the whole file
+/// coarsely first, then refines — the offsets most likely to expose
+/// boundary bugs (section starts, row/payload seams) appear early.
+fn bisect_offsets(lo: u64, hi: u64, budget: usize) -> Vec<u64> {
+    let mut out = Vec::new();
+    let mut queue = std::collections::VecDeque::from([(lo, hi)]);
+    while out.len() < budget {
+        let Some((a, b)) = queue.pop_front() else { break };
+        if b <= a + 1 {
+            continue;
+        }
+        let mid = a + (b - a) / 2;
+        out.push(mid);
+        queue.push_back((a, mid));
+        queue.push_back((mid, b));
+    }
+    out
+}
+
+/// Truncate a copy of `good` at `cut`, recover it, and assert the full
+/// property: verify-clean, exactly the committed prefix of datasets,
+/// byte-identical content. Returns how many datasets survived.
+fn check_truncation(
+    good: &[u8],
+    cut: u64,
+    baseline: &[(String, Vec<u8>)],
+    extents: &[(String, u64)],
+    scratch: &Path,
+) -> usize {
+    std::fs::write(scratch, &good[..cut as usize]).unwrap();
+    let rep = recover(scratch).unwrap_or_else(|e| panic!("cut {cut}: recover failed: {e}"));
+    scda::api::verify_file(scratch).unwrap_or_else(|e| panic!("cut {cut}: recovered file unclean: {e}"));
+    // Exactly the datasets whose full extent precedes the cut.
+    let expected: Vec<&str> =
+        extents.iter().filter(|(_, end)| *end <= cut).map(|(n, _)| n.as_str()).collect();
+    assert_eq!(rep.datasets, expected, "cut {cut}: survivor set");
+    let recovered = read_all(scratch);
+    assert_eq!(recovered.len(), expected.len(), "cut {cut}: reopened dataset count");
+    for (i, (name, bytes)) in recovered.iter().enumerate() {
+        assert_eq!(name, &baseline[i].0, "cut {cut}: dataset order");
+        assert_eq!(bytes, &baseline[i].1, "cut {cut}: dataset {name} content differs");
+    }
+    recovered.len()
+}
+
+/// Restore the raw fixed array by name on `readers` ranks and check each
+/// rank's window — recovery must preserve partition independence.
+fn restore_parallel(path: &Path, readers: usize, expect: &[u8]) {
+    let path = path.to_path_buf();
+    let expect = expect.to_vec();
+    run_parallel(readers, move |comm| {
+        let rank = comm.rank();
+        let mut ar = Archive::open(comm, &path).unwrap();
+        let n = ar.get("plain").expect("plain survived").elem_count;
+        let part = Partition::uniform(readers, n);
+        let got = ar.read_array("plain", &part, ELEM).unwrap();
+        let r = part.local_range(rank);
+        assert_eq!(got, &expect[(r.start * ELEM) as usize..(r.end * ELEM) as usize]);
+        ar.close().unwrap();
+    });
+}
+
+#[test]
+fn truncation_sweep_recovers_committed_prefix() {
+    for &writers in &[1usize, 2, 4, 8] {
+        let path = tmp(&format!("sweep-{writers}"));
+        write_archive(&path, writers);
+        let good = std::fs::read(&path).unwrap();
+        let baseline = read_all(&path);
+        let extents: Vec<(String, u64)> = {
+            let ar = Archive::open(SerialComm::new(), &path).unwrap();
+            let e = ar.datasets().iter().map(|d| (d.name.clone(), d.offset + d.byte_len)).collect();
+            ar.close().unwrap();
+            e
+        };
+        let len = good.len() as u64;
+        let budget = if quick() { 16 } else { 48 };
+        let mut cuts = bisect_offsets(128, len, budget);
+        // Boundary offsets: dataset seams (±1), the trailer, the ends.
+        cuts.extend([129, len - 1, len.saturating_sub(96), len.saturating_sub(97)]);
+        for (_, end) in &extents {
+            cuts.extend([end.saturating_sub(1), *end, end + 1]);
+        }
+        cuts.retain(|&c| (128..len).contains(&c));
+        cuts.sort_unstable();
+        cuts.dedup();
+        let scratch = tmp(&format!("sweep-{writers}-cut"));
+        let mut survived_any = false;
+        for &cut in &cuts {
+            let survived = check_truncation(&good, cut, &baseline, &extents, &scratch);
+            survived_any |= survived > 0;
+        }
+        assert!(survived_any, "sweep at {writers} writers never salvaged a dataset");
+        // Restore on a different rank count from a recovered mid-file cut
+        // (after the raw array's extent, so "plain" survives).
+        let plain_end = extents.iter().find(|(n, _)| n == "plain").unwrap().1;
+        std::fs::write(&scratch, &good[..(plain_end + 1) as usize]).unwrap();
+        recover(&scratch).unwrap();
+        restore_parallel(&scratch, writers + 1, &fixed_data());
+        std::fs::remove_file(&path).unwrap();
+        std::fs::remove_file(&scratch).unwrap();
+    }
+}
+
+#[test]
+fn truncation_below_the_header_is_unrecoverable_not_a_panic() {
+    let path = tmp("short");
+    write_archive(&path, 1);
+    let good = std::fs::read(&path).unwrap();
+    let scratch = tmp("short-cut");
+    for cut in [0usize, 1, 64, 127] {
+        std::fs::write(&scratch, &good[..cut]).unwrap();
+        let err = recover(&scratch).unwrap_err();
+        assert_eq!(err.kind(), scda::error::ScdaErrorKind::CorruptFile, "cut {cut}");
+    }
+    std::fs::remove_file(&path).unwrap();
+    std::fs::remove_file(&scratch).unwrap();
+}
+
+/// In-engine power cuts: a seeded `FaultPlan::crash` truncates the file
+/// at the torn byte mid-write-stream (direct engine, so the stream is
+/// many small pwrites and the trigger lands mid-file). The failed writer
+/// must surface an error, and recovery must salvage a committed prefix
+/// with intact content.
+#[test]
+fn injected_crash_then_recover_salvages_committed_prefix() {
+    let intact = tmp("crash-intact");
+    write_archive(&intact, 1);
+    let baseline = read_all(&intact);
+    let seeds: &[u64] = if quick() { &[1, 7] } else { &[1, 7, 23, 41, 97, 131] };
+    for &seed in seeds {
+        let path = tmp(&format!("crash-{seed}"));
+        let part = Partition::uniform(1, N);
+        let data = fixed_data();
+        let sizes = var_sizes();
+        let vtotal: u64 = sizes.iter().sum();
+        let vdata = var_data(vtotal);
+        let mut ar = Archive::create(SerialComm::new(), &path, b"soak").unwrap();
+        ar.file_mut().set_io_tuning(IoTuning::direct()).unwrap();
+        ar.file_mut().set_fault_plan(Some(FaultPlan::seeded_crash(seed, 8)));
+        // Keep writing through the crash — a real application's writes
+        // after the power cut also go nowhere. Every error is collected,
+        // none may panic.
+        let mut errs = 0usize;
+        errs += ar.write_inline_from("stamp", 0, Some(&[42u8; 32])).is_err() as usize;
+        errs += ar.write_array("plain", DataSrc::Contiguous(&data), &part, ELEM, false).is_err() as usize;
+        errs += ar.write_block_from("manifest", 0, Some(b"soak manifest v1"), 16, false).is_err() as usize;
+        errs += ar.write_array("packed", DataSrc::Contiguous(&data), &part, ELEM, true).is_err() as usize;
+        errs += ar.write_varray("var", DataSrc::Contiguous(&vdata), &part, &sizes, false).is_err() as usize;
+        let fin = ar.finish();
+        assert!(errs > 0 || fin.is_err(), "seed {seed}: the crash never surfaced");
+        let rep = recover(&path).unwrap_or_else(|e| panic!("seed {seed}: recover failed: {e}"));
+        assert_eq!(rep.action, RecoveryAction::Rebuilt, "seed {seed}");
+        scda::api::verify_file(&path).unwrap();
+        // Survivors are a file-order prefix of the committed datasets
+        // with byte-identical content.
+        let recovered = read_all(&path);
+        assert!(recovered.len() <= baseline.len(), "seed {seed}");
+        for (i, (name, bytes)) in recovered.iter().enumerate() {
+            assert_eq!(name, &baseline[i].0, "seed {seed}: dataset order");
+            assert_eq!(bytes, &baseline[i].1, "seed {seed}: dataset {name} content");
+        }
+        std::fs::remove_file(&path).unwrap();
+    }
+    std::fs::remove_file(&intact).unwrap();
+}
+
+#[test]
+#[ignore = "perf smoke; run with -- --ignored"]
+fn recover_bench_quick_records_json() {
+    use std::time::Instant;
+    let mut report = BenchReport::new("recover");
+    report.meta("quick", JsonVal::Bool(quick()));
+    report.meta("elements", JsonVal::Int(N as i64));
+    for &writers in &[1usize, 2, 4] {
+        let path = tmp(&format!("bench-{writers}"));
+        write_archive(&path, writers);
+        let good = std::fs::read(&path).unwrap();
+        let len = good.len() as u64;
+        let cuts = bisect_offsets(128, len, if quick() { 8 } else { 24 });
+        let scratch = tmp(&format!("bench-{writers}-cut"));
+        let (mut rebuilt, mut intact) = (0i64, 0i64);
+        let t0 = Instant::now();
+        for &cut in &cuts {
+            std::fs::write(&scratch, &good[..cut as usize]).unwrap();
+            match recover(&scratch).unwrap().action {
+                RecoveryAction::Rebuilt => rebuilt += 1,
+                RecoveryAction::Intact => intact += 1,
+            }
+        }
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        report.entry(vec![
+            ("name", JsonVal::Str(format!("truncation sweep p{writers}"))),
+            ("writers", JsonVal::Int(writers as i64)),
+            ("file_bytes", JsonVal::Int(len as i64)),
+            ("cuts", JsonVal::Int(cuts.len() as i64)),
+            ("rebuilt", JsonVal::Int(rebuilt)),
+            ("intact", JsonVal::Int(intact)),
+            ("recover_ms_total", JsonVal::Num(ms)),
+            ("recover_ms_mean", JsonVal::Num(ms / cuts.len().max(1) as f64)),
+        ]);
+        println!(
+            "recover quick: P={writers} {} cuts over {len} bytes in {ms:.3} ms ({rebuilt} rebuilt, {intact} intact)",
+            cuts.len()
+        );
+        std::fs::remove_file(&path).unwrap();
+        std::fs::remove_file(&scratch).unwrap();
+    }
+    let out = bench_recover_json_path();
+    report.write(&out).unwrap();
+    let written = std::fs::read_to_string(&out).unwrap();
+    assert!(written.contains("\"bench\": \"recover\""));
+    println!("wrote {}", out.display());
+}
