@@ -1,0 +1,86 @@
+//! T5 — concurrent read service: one archive, many readers. N client
+//! sessions over one [`ArchiveReadService`] fire a zipfian request mix;
+//! the shared page cache (hits, single-flight miss collapse, budgeted
+//! eviction) is measured against the per-session-sieve baseline where
+//! every session refills privately.
+//!
+//! Expected shape: at >=4 sessions shared-cache req/s beats the
+//! baseline, and shared preads track the workload's *unique* bytes —
+//! flat in session count — while baseline preads grow ~linearly with
+//! sessions (every session re-reads the hot set).
+
+use scda::bench_support::{serve_bench, Table};
+use scda::coordinator::Metrics;
+
+fn main() {
+    let quick = scda::bench_support::quick();
+    // Workload: datasets x (elems x elem_bytes) arrays, per-session
+    // request count, elements per request.
+    let (datasets, elems, elem_bytes, per_session, count) =
+        if quick { (8, 2048, 64, 200, 16) } else { (8, 16384, 256, 2000, 32) };
+
+    println!(
+        "T5: {} sessions x {} budgets, zipfian {per_session} reqs/session of {count} x {elem_bytes} B over {datasets} datasets\n",
+        serve_bench::SESSIONS.len(),
+        serve_bench::BUDGETS.len(),
+    );
+
+    let profiles = serve_bench::run(datasets, elems, elem_bytes, per_session, count);
+
+    let mut table = Table::new(&[
+        "sessions",
+        "budget",
+        "shared req/s",
+        "base req/s",
+        "speedup",
+        "shared p50/p99 us",
+        "base p50/p99 us",
+        "shared preads",
+        "base preads",
+        "unique KiB",
+    ]);
+    for p in &profiles {
+        table.row(&[
+            p.sessions.to_string(),
+            format!("{} KiB", p.budget_bytes >> 10),
+            format!("{:.0}", p.shared_rps),
+            format!("{:.0}", p.baseline_rps),
+            format!("{:.2}x", p.speedup()),
+            format!("{:.1}/{:.1}", p.shared_p50_us, p.shared_p99_us),
+            format!("{:.1}/{:.1}", p.baseline_p50_us, p.baseline_p99_us),
+            p.shared_preads.to_string(),
+            p.baseline_preads.to_string(),
+            (p.unique_bytes >> 10).to_string(),
+        ]);
+    }
+    table.print();
+    println!(
+        "\nT5 shape check: shared preads ~flat in sessions (track unique bytes); baseline preads grow with sessions; speedup >= 1 at >=4 sessions."
+    );
+
+    // Satellite: the cache counters flow through the standard Metrics
+    // report — fold in the busiest cell and render it.
+    if let Some(p) = profiles.iter().max_by_key(|p| (p.sessions, p.budget_bytes)) {
+        let m = Metrics::new();
+        Metrics::add(&m.cache_hits, p.cache_hits);
+        Metrics::add(&m.cache_misses, p.cache_misses);
+        Metrics::add(&m.cache_evictions, p.cache_evictions);
+        Metrics::add(&m.cache_waits, p.single_flight_waits);
+        Metrics::add(&m.read_calls, p.shared_preads);
+        println!(
+            "\ncache counters at s{} b{} via Metrics:\n{}",
+            p.sessions,
+            p.budget_bytes,
+            m.report()
+        );
+    }
+
+    let path = scda::bench_support::bench_serve_json_path();
+    if let Err(e) =
+        serve_bench::report(&profiles, datasets, elems, elem_bytes, per_session).write(&path)
+    {
+        eprintln!("warning: could not write {}: {e}", path.display());
+    } else {
+        println!("wrote {}", path.display());
+    }
+}

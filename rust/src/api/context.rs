@@ -18,7 +18,7 @@ use crate::format::limits::{FILE_HEADER_BYTES, VENDOR_STRING};
 use crate::format::padding::LineStyle;
 use crate::format::section::SectionMeta;
 use crate::io::engine::{build_engine, EngineStats, IoEngine};
-use crate::io::IoTuning;
+use crate::io::{IoTuning, PageCache};
 use crate::par::comm::Communicator;
 use crate::par::pfile::{IoStats, ParallelFile};
 use crate::par::pool::CodecPool;
@@ -117,6 +117,13 @@ pub struct ScdaFile<C: Communicator> {
     pub(crate) sync_on_close: bool,
     /// I/O engine knobs (see [`crate::io`]).
     pub(crate) tuning: IoTuning,
+    /// Shared page cache backing the read sieve (read mode; the archive
+    /// read service hands every session the same pool). `None` keeps the
+    /// classic private-window sieve.
+    pub(crate) page_cache: Option<Arc<PageCache>>,
+    /// Dedicated pool for async background flush; `None` borrows the
+    /// shared codec pool.
+    pub(crate) flush_pool: Option<Arc<CodecPool>>,
     /// The transport every positional read/write routes through.
     pub(crate) engine: Box<dyn IoEngine>,
     /// Set by `close`; guards the drop-path drain.
@@ -154,7 +161,7 @@ impl<C: Communicator> ScdaFile<C> {
         let style = LineStyle::Unix;
         let header = encode_file_header(VENDOR_STRING, user, style)?;
         let tuning = IoTuning::default();
-        let engine = build_engine(&tuning, false, &file)?;
+        let engine = build_engine(&tuning, false, &file, None, None)?;
         let mut f = ScdaFile {
             comm,
             file,
@@ -167,6 +174,8 @@ impl<C: Communicator> ScdaFile<C> {
             header: None,
             sync_on_close: true,
             tuning,
+            page_cache: None,
+            flush_pool: None,
             engine,
             closed: false,
             lockstep_scan: false,
@@ -186,7 +195,7 @@ impl<C: Communicator> ScdaFile<C> {
     pub fn open(comm: C, path: impl AsRef<Path>) -> Result<Self> {
         let file = Arc::new(ParallelFile::open_read(&comm, path.as_ref())?);
         let tuning = IoTuning::default();
-        let mut engine = build_engine(&tuning, true, &file)?;
+        let mut engine = build_engine(&tuning, true, &file, None, None)?;
         // Route the header read through the engine: a sieved engine's
         // window also covers the first sections' header rows.
         let bytes = engine.read_vec(&file, 0, FILE_HEADER_BYTES)?;
@@ -203,11 +212,60 @@ impl<C: Communicator> ScdaFile<C> {
             header: Some(header),
             sync_on_close: false,
             tuning,
+            page_cache: None,
+            flush_pool: None,
             engine,
             closed: false,
             lockstep_scan: false,
             sticky_error: None,
         })
+    }
+
+    /// Open a *session* over an already-open file: a read-mode context on
+    /// a shared [`ParallelFile`] handle, with the header adopted from the
+    /// first open instead of re-read — zero syscalls. The archive read
+    /// service builds every client session this way, handing each one the
+    /// same shared [`PageCache`] so their sieves pool pages under one
+    /// budget (pass `None` for private windows). The handle's syscall
+    /// counters ([`IoStats`]) are shared across all sessions.
+    pub(crate) fn open_shared(
+        comm: C,
+        file: Arc<ParallelFile>,
+        header: FileHeader,
+        tuning: IoTuning,
+        cache: Option<Arc<PageCache>>,
+    ) -> Result<Self> {
+        let engine = build_engine(&tuning, true, &file, cache.as_ref(), None)?;
+        Ok(ScdaFile {
+            comm,
+            file,
+            cursor: FILE_HEADER_BYTES as u64,
+            mode: OpenMode::Read,
+            style: LineStyle::Unix,
+            codec: CodecOptions::default(),
+            codec_par: CodecParallel::default(),
+            pending: Pending::None,
+            header: Some(header),
+            sync_on_close: false,
+            tuning,
+            page_cache: cache,
+            flush_pool: None,
+            engine,
+            closed: false,
+            lockstep_scan: false,
+            sticky_error: None,
+        })
+    }
+
+    /// The shared file handle (the service clones it into new sessions).
+    pub(crate) fn shared_handle(&self) -> Arc<ParallelFile> {
+        Arc::clone(&self.file)
+    }
+
+    /// A clone of the parsed file header (read mode), for adoption by
+    /// [`Self::open_shared`] sessions.
+    pub(crate) fn header_clone(&self) -> Option<FileHeader> {
+        self.header.clone()
     }
 
     /// The user string recorded in the file header (read mode).
@@ -274,8 +332,56 @@ impl<C: Communicator> ScdaFile<C> {
     pub fn set_io_tuning(&mut self, tuning: IoTuning) -> Result<&mut Self> {
         self.engine.flush(&self.file, &self.comm)?;
         self.tuning = tuning;
-        self.engine = build_engine(&tuning, self.mode == OpenMode::Read, &self.file)?;
+        self.engine = self.rebuild_engine(&tuning)?;
         Ok(self)
+    }
+
+    fn rebuild_engine(&self, tuning: &IoTuning) -> Result<Box<dyn IoEngine>> {
+        build_engine(
+            tuning,
+            self.mode == OpenMode::Read,
+            &self.file,
+            self.page_cache.as_ref(),
+            self.flush_pool.as_ref(),
+        )
+    }
+
+    /// Back this file's read sieve with a shared [`PageCache`] (`None`
+    /// restores the private window). Collective like
+    /// [`Self::set_io_tuning`]: the engine is drained and rebuilt, so the
+    /// new backing applies to every subsequent read. Sessions opened by
+    /// the archive read service arrive with the service's pool already
+    /// attached.
+    pub fn set_page_cache(&mut self, cache: Option<Arc<PageCache>>) -> Result<&mut Self> {
+        self.engine.flush(&self.file, &self.comm)?;
+        self.page_cache = cache;
+        let t = self.tuning;
+        self.engine = self.rebuild_engine(&t)?;
+        Ok(self)
+    }
+
+    /// The shared page cache backing this file's reads, if any.
+    pub fn page_cache(&self) -> Option<&Arc<PageCache>> {
+        self.page_cache.as_ref()
+    }
+
+    /// Run async background flush on a dedicated pool instead of the
+    /// process-wide shared codec pool (`None` restores the shared pool) —
+    /// the carried-over "per-file pool" knob: a file with its own flush
+    /// pool never queues its `pwrite`s behind codec jobs, and heavy codec
+    /// work never waits on a slow disk. Collective like
+    /// [`Self::set_io_tuning`]; only matters with `async_flush` on.
+    pub fn set_flush_pool(&mut self, pool: Option<Arc<CodecPool>>) -> Result<&mut Self> {
+        self.engine.flush(&self.file, &self.comm)?;
+        self.flush_pool = pool;
+        let t = self.tuning;
+        self.engine = self.rebuild_engine(&t)?;
+        Ok(self)
+    }
+
+    /// The dedicated async-flush pool, if one is set.
+    pub fn flush_pool(&self) -> Option<&Arc<CodecPool>> {
+        self.flush_pool.as_ref()
     }
 
     /// The active I/O engine knobs.

@@ -68,6 +68,19 @@ impl<C: Communicator> Archive<C> {
             Some(datasets) => (datasets, true),
             None => (index::scan(&mut file)?, false),
         };
+        Self::from_parts(file, entries, indexed)
+    }
+
+    /// Assemble a read-mode archive from an already-open file and an
+    /// already-parsed catalog — no footer read, no scan. The archive
+    /// read service builds per-client sessions this way: the catalog is
+    /// parsed once at service open, then every session adopts a clone of
+    /// the entries over a [`ScdaFile`] sharing the service's file handle.
+    pub(crate) fn from_parts(
+        file: ScdaFile<C>,
+        entries: Vec<DatasetInfo>,
+        indexed: bool,
+    ) -> Result<Self> {
         let mut by_name = BTreeMap::new();
         for (i, e) in entries.iter().enumerate() {
             if by_name.insert(e.name.clone(), i).is_some() {

@@ -255,6 +255,14 @@ pub fn bench_recover_json_path() -> std::path::PathBuf {
         .unwrap_or_else(|| std::path::PathBuf::from("BENCH_recover.json"))
 }
 
+/// Where read-service bench numbers land (`SCDA_BENCH_SERVE_JSON`
+/// overrides).
+pub fn bench_serve_json_path() -> std::path::PathBuf {
+    std::env::var_os("SCDA_BENCH_SERVE_JSON")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| std::path::PathBuf::from("BENCH_serve.json"))
+}
+
 /// Encoded write/read throughput of the per-element codec pipeline,
 /// serial vs pooled — the perf-trajectory numbers this PR's acceptance
 /// criterion tracks. Shared by the f1/t4 benches and the ignored-by-
@@ -950,6 +958,307 @@ pub mod archive_bench {
     /// Quick-mode sweep: 8/64 datasets of 32 x 256 B elements.
     pub fn run_quick() -> Vec<AccessProfile> {
         [8usize, 64].iter().map(|&s| random_access(s, 32, 256, 2)).collect()
+    }
+}
+
+pub mod serve_bench {
+    //! Concurrent read-service bench: N client sessions over one
+    //! archive, zipfian request mix, shared page cache vs the
+    //! per-session-sieve baseline (`BENCH_serve.json`).
+
+    use super::JsonVal;
+    use crate::api::DataSrc;
+    use crate::archive::Archive;
+    use crate::par::{Partition, SerialComm};
+    use crate::runtime::{ArchiveReadService, ReadRequest, ReadResponse, ReadServiceConfig};
+    use crate::testutil::Rng;
+    use std::path::Path;
+    use std::time::Instant;
+
+    /// Session counts swept by [`run`]/[`run_quick`]. Quick and full
+    /// modes share the grid so `BENCH_serve.json` keeps one shape.
+    pub const SESSIONS: [usize; 4] = [1, 2, 4, 8];
+    /// Cache budgets swept: one small enough to force eviction on the
+    /// bench archive, one that holds it whole.
+    pub const BUDGETS: [usize; 2] = [512 * 1024, 32 * 1024 * 1024];
+
+    /// Shared-cache vs per-session-sieve numbers for one
+    /// (sessions, budget) cell of the sweep.
+    #[derive(Debug, Clone)]
+    pub struct ServeProfile {
+        pub sessions: usize,
+        pub budget_bytes: usize,
+        /// Total requests served (all sessions).
+        pub requests: u64,
+        /// Distinct payload bytes the workload touches — the floor any
+        /// cache-perfect reader must pread.
+        pub unique_bytes: u64,
+        pub shared_rps: f64,
+        pub shared_p50_us: f64,
+        pub shared_p99_us: f64,
+        /// `pread` syscalls issued by the shared-cache run (one shared
+        /// descriptor, so this is the whole fleet's count).
+        pub shared_preads: u64,
+        pub cache_hits: u64,
+        pub cache_misses: u64,
+        pub cache_evictions: u64,
+        pub single_flight_waits: u64,
+        pub baseline_rps: f64,
+        pub baseline_p50_us: f64,
+        pub baseline_p99_us: f64,
+        pub baseline_preads: u64,
+    }
+
+    impl ServeProfile {
+        /// Shared-cache throughput gain over private sieves.
+        pub fn speedup(&self) -> f64 {
+            self.shared_rps / self.baseline_rps
+        }
+    }
+
+    /// Zipf(s=1) CDF over `n` ranks: hot-key skew for the request mix.
+    struct Zipf {
+        cdf: Vec<f64>,
+    }
+
+    impl Zipf {
+        fn new(n: usize) -> Zipf {
+            let mut cdf = Vec::with_capacity(n);
+            let mut acc = 0.0;
+            for k in 0..n {
+                acc += 1.0 / (k + 1) as f64;
+                cdf.push(acc);
+            }
+            Zipf { cdf }
+        }
+
+        fn sample(&self, rng: &mut Rng) -> usize {
+            let total = *self.cdf.last().unwrap();
+            let u = rng.below(1 << 30) as f64 / (1u64 << 30) as f64 * total;
+            self.cdf.partition_point(|&c| c < u).min(self.cdf.len() - 1)
+        }
+    }
+
+    fn build(path: &Path, datasets: usize, elems: u64, elem_bytes: u64) {
+        let part = Partition::uniform(1, elems);
+        let payload: Vec<u8> = (0..elems * elem_bytes).map(|i| (i % 251) as u8).collect();
+        let mut ar = Archive::create(SerialComm::new(), path, b"serve-bench").unwrap();
+        ar.file_mut().set_sync_on_close(false);
+        for d in 0..datasets {
+            ar.write_array(&format!("ds/{d}"), DataSrc::Contiguous(&payload), &part, elem_bytes, false)
+                .unwrap();
+        }
+        ar.finish().unwrap();
+    }
+
+    /// Per-session deterministic zipfian request lists, plus the
+    /// workload's unique payload footprint in bytes. Ranks map to
+    /// (dataset, block) keys round-robin so the hot set spans datasets;
+    /// blocks are disjoint and equal-sized, so the footprint is just
+    /// the distinct-key count.
+    fn gen_workload(
+        sessions: usize,
+        per_session: usize,
+        datasets: usize,
+        elems: u64,
+        elem_bytes: u64,
+        count: u64,
+    ) -> (Vec<Vec<ReadRequest>>, u64) {
+        let blocks = (elems / count).max(1);
+        let zipf = Zipf::new((datasets as u64 * blocks) as usize);
+        let mut touched = std::collections::HashSet::new();
+        let mut reqs = Vec::with_capacity(sessions);
+        for s in 0..sessions {
+            let mut rng = Rng::new(0x5eed + s as u64);
+            let mut list = Vec::with_capacity(per_session);
+            for _ in 0..per_session {
+                let key = zipf.sample(&mut rng) as u64;
+                touched.insert(key);
+                list.push(ReadRequest {
+                    dataset: format!("ds/{}", key % datasets as u64),
+                    first: key / datasets as u64 * count,
+                    count,
+                });
+            }
+            reqs.push(list);
+        }
+        (reqs, touched.len() as u64 * count * elem_bytes)
+    }
+
+    struct RunStats {
+        rps: f64,
+        p50_us: f64,
+        p99_us: f64,
+        preads: u64,
+        bytes_served: u64,
+        cache: Option<crate::io::CacheStats>,
+    }
+
+    fn percentile_us(sorted: &[u64], q: f64) -> f64 {
+        if sorted.is_empty() {
+            return 0.0;
+        }
+        let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+        sorted[idx] as f64 / 1e3
+    }
+
+    /// Serve every session's request list concurrently (one thread per
+    /// session) and fold the per-request latencies into throughput and
+    /// tail numbers. `budget == 0` is the baseline: no shared cache,
+    /// each session on its private sieve.
+    fn serve_once(path: &Path, budget: usize, reqs: &[Vec<ReadRequest>]) -> RunStats {
+        let cfg = ReadServiceConfig { cache_budget: budget, ..Default::default() };
+        let svc = ArchiveReadService::open_with(path, cfg).unwrap();
+        let preads0 = svc.io_stats().read_calls;
+        let workers: Vec<_> =
+            reqs.iter().map(|list| (svc.session().unwrap(), list.as_slice())).collect();
+        let t0 = Instant::now();
+        let per_thread: Vec<(Vec<u64>, u64)> = std::thread::scope(|sc| {
+            let handles: Vec<_> = workers
+                .into_iter()
+                .map(|(mut sess, list)| {
+                    sc.spawn(move || {
+                        let mut lat = Vec::with_capacity(list.len());
+                        let mut bytes = 0u64;
+                        for req in list {
+                            let t = Instant::now();
+                            match sess.serve(req).unwrap() {
+                                ReadResponse::Array(v) => bytes += v.len() as u64,
+                                ReadResponse::Varray { data, .. } => bytes += data.len() as u64,
+                            }
+                            lat.push(t.elapsed().as_nanos() as u64);
+                        }
+                        (lat, bytes)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        let wall = t0.elapsed().as_secs_f64().max(1e-9);
+        let mut lat = Vec::new();
+        let mut bytes_served = 0u64;
+        for (l, b) in per_thread {
+            lat.extend(l);
+            bytes_served += b;
+        }
+        lat.sort_unstable();
+        RunStats {
+            rps: lat.len() as f64 / wall,
+            p50_us: percentile_us(&lat, 0.50),
+            p99_us: percentile_us(&lat, 0.99),
+            preads: svc.io_stats().read_calls - preads0,
+            bytes_served,
+            cache: svc.cache_stats(),
+        }
+    }
+
+    /// Measure one (sessions, budget) cell: the same deterministic
+    /// request lists served with the shared cache and by the
+    /// per-session-sieve baseline.
+    pub fn run_one(
+        path: &Path,
+        sessions: usize,
+        budget: usize,
+        datasets: usize,
+        elems: u64,
+        elem_bytes: u64,
+        per_session: usize,
+        count: u64,
+    ) -> ServeProfile {
+        let (reqs, unique_bytes) =
+            gen_workload(sessions, per_session, datasets, elems, elem_bytes, count);
+        let shared = serve_once(path, budget, &reqs);
+        let base = serve_once(path, 0, &reqs);
+        assert_eq!(shared.bytes_served, base.bytes_served, "modes served identical payloads");
+        let cs = shared.cache.expect("shared run has a cache");
+        ServeProfile {
+            sessions,
+            budget_bytes: budget,
+            requests: (sessions * per_session) as u64,
+            unique_bytes,
+            shared_rps: shared.rps,
+            shared_p50_us: shared.p50_us,
+            shared_p99_us: shared.p99_us,
+            shared_preads: shared.preads,
+            cache_hits: cs.hits,
+            cache_misses: cs.misses,
+            cache_evictions: cs.evictions,
+            single_flight_waits: cs.single_flight_waits,
+            baseline_rps: base.rps,
+            baseline_p50_us: base.p50_us,
+            baseline_p99_us: base.p99_us,
+            baseline_preads: base.preads,
+        }
+    }
+
+    /// The full [`SESSIONS`] x [`BUDGETS`] sweep against one archive of
+    /// `datasets` arrays of `elems` x `elem_bytes` B, `per_session`
+    /// zipfian requests of `count` elements each.
+    pub fn run(
+        datasets: usize,
+        elems: u64,
+        elem_bytes: u64,
+        per_session: usize,
+        count: u64,
+    ) -> Vec<ServeProfile> {
+        let dir = std::env::temp_dir().join("scda-serve-bench");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("serve-{}.scda", std::process::id()));
+        build(&path, datasets, elems, elem_bytes);
+        let mut out = Vec::new();
+        for &s in &SESSIONS {
+            for &b in &BUDGETS {
+                out.push(run_one(&path, s, b, datasets, elems, elem_bytes, per_session, count));
+            }
+        }
+        std::fs::remove_file(&path).ok();
+        out
+    }
+
+    /// Quick-mode sweep: 8 datasets of 2048 x 64 B, 200 requests per
+    /// session — the same grid as the full run, so the committed
+    /// `BENCH_serve.json` keeps its shape under `SCDA_BENCH_QUICK`.
+    pub fn run_quick() -> Vec<ServeProfile> {
+        run(8, 2048, 64, 200, 16)
+    }
+
+    /// The standard `BENCH_serve.json` report for a sweep.
+    pub fn report(
+        profiles: &[ServeProfile],
+        datasets: usize,
+        elems: u64,
+        elem_bytes: u64,
+        per_session: usize,
+    ) -> super::BenchReport {
+        let mut r = super::BenchReport::new("serve");
+        r.meta("quick", JsonVal::Bool(super::quick()));
+        r.meta("datasets", JsonVal::Int(datasets as i64));
+        r.meta("elems", JsonVal::Int(elems as i64));
+        r.meta("elem_bytes", JsonVal::Int(elem_bytes as i64));
+        r.meta("requests_per_session", JsonVal::Int(per_session as i64));
+        for p in profiles {
+            r.entry(vec![
+                ("name", JsonVal::Str(format!("serve_s{}_b{}", p.sessions, p.budget_bytes))),
+                ("sessions", JsonVal::Int(p.sessions as i64)),
+                ("budget_bytes", JsonVal::Int(p.budget_bytes as i64)),
+                ("requests", JsonVal::Int(p.requests as i64)),
+                ("unique_bytes", JsonVal::Int(p.unique_bytes as i64)),
+                ("shared_rps", JsonVal::Num(p.shared_rps)),
+                ("shared_p50_us", JsonVal::Num(p.shared_p50_us)),
+                ("shared_p99_us", JsonVal::Num(p.shared_p99_us)),
+                ("shared_preads", JsonVal::Int(p.shared_preads as i64)),
+                ("cache_hits", JsonVal::Int(p.cache_hits as i64)),
+                ("cache_misses", JsonVal::Int(p.cache_misses as i64)),
+                ("cache_evictions", JsonVal::Int(p.cache_evictions as i64)),
+                ("single_flight_waits", JsonVal::Int(p.single_flight_waits as i64)),
+                ("baseline_rps", JsonVal::Num(p.baseline_rps)),
+                ("baseline_p50_us", JsonVal::Num(p.baseline_p50_us)),
+                ("baseline_p99_us", JsonVal::Num(p.baseline_p99_us)),
+                ("baseline_preads", JsonVal::Int(p.baseline_preads as i64)),
+                ("speedup", JsonVal::Num(p.speedup())),
+            ]);
+        }
+        r
     }
 }
 

@@ -58,6 +58,14 @@ COMMANDS:
                                self-describing 'p' frames (byte shuffle by
                                <width>, trailing 'd' adds per-plane delta)
   restart <file> [--ranks P]   read a checkpoint on P ranks and report
+  serve-bench <file> [--sessions N] [--requests K] [--count C]
+              [--budget-kib B]
+                               concurrent read-service benchmark: N client
+                               sessions fire K random range requests of C
+                               elements each at one shared archive, once
+                               through a B KiB shared page cache and once
+                               over per-session sieves, reporting req/s,
+                               pread counts and the cache counters
   version                      print version and backend information
 
 Errors exit nonzero and print `scda error <code>: <message>`.";
@@ -79,6 +87,7 @@ pub fn run(argv: impl IntoIterator<Item = String>) -> i32 {
         "recover" => cmd_recover(&args),
         "demo-write" => cmd_demo_write(&args),
         "restart" => cmd_restart(&args),
+        "serve-bench" => cmd_serve_bench(&args),
         "version" => {
             println!(
                 "scda 0.1.0 (format scdata0; vendor {:?})",
@@ -413,6 +422,100 @@ fn dump_section(f: &mut ScdaFile<SerialComm>, h: &crate::api::SectionHeader) -> 
     Ok(())
 }
 
+/// `scda serve-bench <file>`: the concurrent read-service benchmark
+/// against a real archive — every range-addressable dataset (arrays and
+/// varrays with enough elements) is fair game for the random request
+/// mix. Runs the same workload twice: once through the shared page
+/// cache, once with it disabled (per-session sieve baseline).
+fn cmd_serve_bench(args: &Args) -> CliResult {
+    use crate::io::CacheStats;
+    use crate::runtime::{ArchiveReadService, ReadRequest, ReadResponse, ReadServiceConfig};
+    use crate::testutil::Rng;
+    let path = args.positional(0, "file argument")?;
+    let sessions: usize = args.get_parse("sessions", 4)?;
+    let requests: usize = args.get_parse("requests", 200)?;
+    let count: u64 = args.get_parse("count", 16)?;
+    let budget_kib: usize = args.get_parse("budget-kib", 32 * 1024)?;
+    if sessions == 0 || requests == 0 || count == 0 || budget_kib == 0 {
+        return Err(CliError::Usage(
+            "--sessions, --requests, --count and --budget-kib must be nonzero".into(),
+        ));
+    }
+    let run_once = |budget: usize| -> Result<(f64, u64, u64, Option<CacheStats>), CliError> {
+        let cfg = ReadServiceConfig { cache_budget: budget, ..Default::default() };
+        let svc = ArchiveReadService::open_with(path, cfg)?;
+        let targets: Vec<(String, u64)> = svc
+            .datasets()
+            .iter()
+            .filter(|d| {
+                matches!(
+                    d.kind,
+                    crate::archive::DatasetKind::Array | crate::archive::DatasetKind::Varray
+                ) && d.elem_count >= count
+            })
+            .map(|d| (d.name.clone(), d.elem_count / count))
+            .collect();
+        if targets.is_empty() {
+            return Err(CliError::Usage(format!(
+                "{path} has no array/varray dataset with >= {count} elements"
+            )));
+        }
+        let preads0 = svc.io_stats().read_calls;
+        let workers: Vec<_> =
+            (0..sessions).map(|s| svc.session().map(|sess| (sess, s))).collect::<Result<_, _>>()?;
+        let t0 = std::time::Instant::now();
+        let per: Vec<crate::error::Result<u64>> = std::thread::scope(|sc| {
+            let targets = &targets;
+            let handles: Vec<_> = workers
+                .into_iter()
+                .map(|(mut sess, sid): (_, usize)| {
+                    sc.spawn(move || -> crate::error::Result<u64> {
+                        let mut rng = Rng::new(0xc11 + sid as u64);
+                        let mut bytes = 0u64;
+                        for _ in 0..requests {
+                            let (name, blocks) = &targets[rng.below(targets.len() as u64) as usize];
+                            let first = rng.below(*blocks) * count;
+                            let req = ReadRequest { dataset: name.clone(), first, count };
+                            match sess.serve(&req)? {
+                                ReadResponse::Array(v) => bytes += v.len() as u64,
+                                ReadResponse::Varray { data, .. } => bytes += data.len() as u64,
+                            }
+                        }
+                        Ok(bytes)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        let wall = t0.elapsed().as_secs_f64().max(1e-9);
+        let mut bytes = 0u64;
+        for r in per {
+            bytes += r?;
+        }
+        let preads = svc.io_stats().read_calls - preads0;
+        Ok(((sessions * requests) as f64 / wall, preads, bytes, svc.cache_stats()))
+    };
+    println!("{path}: {sessions} sessions x {requests} requests of {count} elements each");
+    let (shared_rps, shared_preads, shared_bytes, cache) = run_once(budget_kib * 1024)?;
+    let (base_rps, base_preads, base_bytes, _) = run_once(0)?;
+    debug_assert_eq!(shared_bytes, base_bytes);
+    println!(
+        "shared cache ({budget_kib} KiB): {shared_rps:>9.0} req/s, {shared_preads:>6} preads, {shared_bytes} payload bytes"
+    );
+    println!("per-session sieves:      {base_rps:>9.0} req/s, {base_preads:>6} preads");
+    if let Some(cs) = cache {
+        let m = Metrics::new();
+        Metrics::add(&m.bytes_read, shared_bytes);
+        Metrics::add(&m.read_calls, shared_preads);
+        Metrics::add(&m.cache_hits, cs.hits);
+        Metrics::add(&m.cache_misses, cs.misses);
+        Metrics::add(&m.cache_evictions, cs.evictions);
+        Metrics::add(&m.cache_waits, cs.single_flight_waits);
+        println!("{}", m.report());
+    }
+    Ok(())
+}
+
 fn cmd_demo_write(args: &Args) -> CliResult {
     let path = PathBuf::from(args.positional(0, "file argument")?);
     let ranks: usize = args.get_parse("ranks", 4)?;
@@ -616,6 +719,25 @@ mod tests {
         assert_eq!(run_words(&["verify", p]), 0);
         assert_eq!(run_words(&["ls", p]), 0);
         assert_ne!(run_words(&["recover", "/nonexistent.scda"]), 0);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn serve_bench_runs_on_an_archive() {
+        let path = tmpfile("cli-serve");
+        let p = path.to_str().unwrap();
+        assert_eq!(run_words(&["demo-write", p, "--ranks", "2", "--base", "2", "--max", "4"]), 0);
+        assert_eq!(
+            run_words(&[
+                "serve-bench", p, "--sessions", "2", "--requests", "40", "--count", "4",
+                "--budget-kib", "64",
+            ]),
+            0
+        );
+        assert_ne!(run_words(&["serve-bench", p, "--sessions", "0"]), 0);
+        // A request size larger than every dataset leaves no targets.
+        assert_ne!(run_words(&["serve-bench", p, "--count", "99999999"]), 0);
+        assert_ne!(run_words(&["serve-bench", "/nonexistent.scda"]), 0);
         std::fs::remove_file(&path).unwrap();
     }
 

@@ -26,6 +26,17 @@ pub struct Metrics {
     /// Bytes served to other ranks' read windows by the collective read
     /// gather (0 for per-rank engines), per `ScdaFile::engine_stats`.
     pub bytes_gathered: AtomicU64,
+    /// Shared page-cache pages served resident, per
+    /// `crate::io::CacheStats` / `ScdaFile::engine_stats` (0 without a
+    /// shared cache).
+    pub cache_hits: AtomicU64,
+    /// Shared page-cache pages that had to be filled.
+    pub cache_misses: AtomicU64,
+    /// Pages evicted under the shared cache's budget.
+    pub cache_evictions: AtomicU64,
+    /// Times a reader blocked on another session's in-flight fill — each
+    /// one a pread the single-flight dedup saved.
+    pub cache_waits: AtomicU64,
     pub elements_written: AtomicU64,
     pub sections_written: AtomicU64,
     pub chunks_skipped_incompressible: AtomicU64,
@@ -76,6 +87,7 @@ impl Metrics {
              \x20 shipped       {:>10.2} MiB  (collective two-phase exchange)\n\
              \x20 read          {:>10.2} MiB  ({} preads)\n\
              \x20 gathered      {:>10.2} MiB  (collective read gather)\n\
+             \x20 page cache    {} hits / {} misses ({:.1}% hit, {} waits saved preads, {} evictions)\n\
              \x20 sections {}  elements {}  incompressible-chunks {}",
             mb(g(&self.bytes_in)),
             mb(g(&self.bytes_transformed)),
@@ -93,6 +105,16 @@ impl Metrics {
             mb(g(&self.bytes_read)),
             g(&self.read_calls),
             mb(g(&self.bytes_gathered)),
+            g(&self.cache_hits),
+            g(&self.cache_misses),
+            if g(&self.cache_hits) + g(&self.cache_misses) == 0 {
+                0.0
+            } else {
+                100.0 * g(&self.cache_hits) as f64
+                    / (g(&self.cache_hits) + g(&self.cache_misses)) as f64
+            },
+            g(&self.cache_waits),
+            g(&self.cache_evictions),
             g(&self.sections_written),
             g(&self.elements_written),
             g(&self.chunks_skipped_incompressible),
@@ -123,8 +145,12 @@ mod tests {
         let m = Metrics::new();
         Metrics::add(&m.bytes_in, 1024 * 1024);
         Metrics::add(&m.bytes_compressed, 512 * 1024);
+        Metrics::add(&m.cache_hits, 3);
+        Metrics::add(&m.cache_misses, 1);
+        Metrics::add(&m.cache_waits, 2);
         let r = m.report();
         assert!(r.contains("ratio 0.500"));
         assert!(r.contains("1.00 MiB"));
+        assert!(r.contains("3 hits / 1 misses (75.0% hit, 2 waits"), "{r}");
     }
 }

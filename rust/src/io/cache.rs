@@ -1,0 +1,515 @@
+//! The shared page cache: one pool of refcounted, evictable file pages
+//! serving any number of concurrent reader sessions of one archive.
+//!
+//! The per-handle [`crate::io::ReadSieve`] amortizes *one* reader's small
+//! metadata reads into window `pread`s — but every `ScdaFile` owns its
+//! sieve, so N concurrent readers of the same file pay N× the cache
+//! memory and N× the syscalls for the same hot bytes. This module is the
+//! read path's shared dual: the file is cut into fixed-size pages, pages
+//! live in one process-wide (per-service) pool under a single byte
+//! budget, and sessions borrow pages by `Arc` — eviction drops the pool's
+//! reference while in-flight readers keep theirs, so a page is never
+//! freed under a copy.
+//!
+//! # Coalesced misses (single-flight)
+//!
+//! Concurrent misses on the same page collapse to **one** `pread`: the
+//! first misser marks the slot `Filling` and issues the read; later
+//! requesters of that page block on a condvar until the slot is `Ready`
+//! (counted as `single_flight_waits`, the in-process analogue of the
+//! P-fold dedup in the collective read gather). A miss that spans
+//! several absent pages claims the whole contiguous run and fills it
+//! with a single gather `pread`, so sequential windows cost one syscall
+//! regardless of the page size.
+//!
+//! # Eviction
+//!
+//! Clock (second-chance) over the resident pages: pages enter the ring
+//! *unreferenced* and every hit sets the reference bit, so a page must
+//! be touched again after its fill to earn a second chance — one-touch
+//! scan pages leave before hot pages instead of aging the whole ring
+//! into FIFO. The evictor clears bits on its first pass and evicts on
+//! the second.
+//! Eviction runs under the fill lock whenever `resident_bytes` exceeds
+//! the budget — the budget bounds *resident* bytes; borrowed `Arc`s on
+//! in-flight reads may briefly exceed it, exactly like an OS page cache
+//! under pinned pages.
+//!
+//! A cache serves exactly one underlying file (pages are keyed by file
+//! offset only); the owner — [`crate::runtime::ArchiveReadService`] —
+//! guarantees every session passes the same [`ParallelFile`] handle.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::error::{corrupt, Result, ScdaError};
+use crate::io::fault::retry_transient;
+use crate::par::pfile::ParallelFile;
+
+/// Default page size: large enough that a section's metadata rows fit in
+/// one page, small enough that a zipfian tail does not drag whole
+/// megabytes in per key.
+pub const DEFAULT_PAGE_BYTES: usize = 64 << 10;
+
+/// Default budget: a few hot datasets' worth of pages.
+pub const DEFAULT_BUDGET_BYTES: usize = 32 << 20;
+
+/// Per-call / per-stream cache accounting, accumulated by each session's
+/// sieve so [`crate::io::EngineStats`] can report session-local hit
+/// rates while [`CacheStats`] reports the pool-global view.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheAccess {
+    /// Pages served from a resident slot.
+    pub hits: u64,
+    /// Pages this caller filled itself (it issued or joined the pread).
+    pub misses: u64,
+    /// Times this caller blocked on another caller's in-flight fill.
+    pub waits: u64,
+}
+
+impl CacheAccess {
+    /// Fold another accounting delta into this one.
+    pub fn absorb(&mut self, o: CacheAccess) {
+        self.hits += o.hits;
+        self.misses += o.misses;
+        self.waits += o.waits;
+    }
+}
+
+/// Pool-global counters ([`PageCache::stats`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Page lookups served from a resident page (all sessions).
+    pub hits: u64,
+    /// Page lookups that had to fill the page.
+    pub misses: u64,
+    /// Pages evicted under the budget.
+    pub evictions: u64,
+    /// Times a caller blocked on another caller's in-flight fill — each
+    /// one is a `pread` the single-flight dedup saved.
+    pub single_flight_waits: u64,
+    /// `pread`s issued to fill pages: one per contiguous run of missing
+    /// pages, however many sessions missed concurrently. Under a hot
+    /// workload this tracks *unique bytes touched*, never session count.
+    pub fill_preads: u64,
+    /// Bytes fetched by fill `pread`s.
+    pub filled_bytes: u64,
+    /// Bytes currently resident (always `<=` budget after each fill).
+    pub resident_bytes: u64,
+    /// Pages currently resident.
+    pub resident_pages: u64,
+}
+
+#[derive(Debug)]
+enum Slot {
+    /// A fill `pread` is in flight; waiters block on the condvar.
+    Filling,
+    /// Resident page. `referenced` is the clock's second-chance bit.
+    Ready { data: Arc<Vec<u8>>, referenced: bool },
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    slots: HashMap<u64, Slot>,
+    /// Clock ring over resident pages: exactly one entry per `Ready`
+    /// slot (`Filling` slots are not evictable and carry no entry).
+    clock: VecDeque<u64>,
+    resident_bytes: usize,
+}
+
+/// The shared, thread-safe page pool. Cheap to clone behind an `Arc`;
+/// every reader session of one [`crate::runtime::ArchiveReadService`]
+/// holds the same instance.
+#[derive(Debug)]
+pub struct PageCache {
+    page_bytes: usize,
+    budget_bytes: usize,
+    inner: Mutex<Inner>,
+    cv: Condvar,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+    waits: AtomicU64,
+    fill_preads: AtomicU64,
+    filled_bytes: AtomicU64,
+}
+
+impl PageCache {
+    /// A cache of `page_bytes`-sized pages under a `budget_bytes` total.
+    /// Both are clamped to sane floors (a 0-page cache is a bug, not a
+    /// policy — use `None` at the tuning layer to disable sharing).
+    pub fn new(page_bytes: usize, budget_bytes: usize) -> Self {
+        let page_bytes = page_bytes.max(512);
+        PageCache {
+            page_bytes,
+            budget_bytes: budget_bytes.max(page_bytes),
+            inner: Mutex::new(Inner::default()),
+            cv: Condvar::new(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            waits: AtomicU64::new(0),
+            fill_preads: AtomicU64::new(0),
+            filled_bytes: AtomicU64::new(0),
+        }
+    }
+
+    /// The defaults ([`DEFAULT_PAGE_BYTES`], [`DEFAULT_BUDGET_BYTES`]).
+    pub fn with_defaults() -> Self {
+        Self::new(DEFAULT_PAGE_BYTES, DEFAULT_BUDGET_BYTES)
+    }
+
+    pub fn page_bytes(&self) -> usize {
+        self.page_bytes
+    }
+
+    pub fn budget_bytes(&self) -> usize {
+        self.budget_bytes
+    }
+
+    /// Reads at least this large bypass the cache entirely: caching a
+    /// payload comparable to the whole budget would evict every hot page
+    /// for one streaming consumer.
+    pub fn bypass_bytes(&self) -> usize {
+        (self.budget_bytes / 2).max(self.page_bytes)
+    }
+
+    /// Pool-global counter snapshot.
+    pub fn stats(&self) -> CacheStats {
+        let inner = self.inner.lock().unwrap();
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            single_flight_waits: self.waits.load(Ordering::Relaxed),
+            fill_preads: self.fill_preads.load(Ordering::Relaxed),
+            filled_bytes: self.filled_bytes.load(Ordering::Relaxed),
+            resident_bytes: inner.resident_bytes as u64,
+            resident_pages: inner.clock.len() as u64,
+        }
+    }
+
+    /// Fill `dst` with the bytes at absolute `off`, serving every
+    /// overlapped page from the pool (filling absent runs with one
+    /// gather `pread` each, single-flight per page). Errors with the
+    /// same corrupt kind as a direct short read past EOF. Returns this
+    /// call's hit/miss/wait accounting for the caller's stream counters.
+    pub fn read_into(&self, file: &ParallelFile, off: u64, dst: &mut [u8]) -> Result<CacheAccess> {
+        let mut acc = CacheAccess::default();
+        if dst.is_empty() {
+            return Ok(acc);
+        }
+        let end = off
+            .checked_add(dst.len() as u64)
+            .ok_or_else(|| ScdaError::corrupt(corrupt::COUNT_OVERFLOW, "read range overflows u64"))?;
+        let file_len = file.len()?;
+        if end > file_len {
+            return Err(ScdaError::corrupt(
+                corrupt::TRUNCATED,
+                format!("file ends before {} bytes at offset {off}", dst.len()),
+            ));
+        }
+        let pb = self.page_bytes as u64;
+        let mut page = off / pb;
+        let last = (end - 1) / pb;
+        let mut inner = self.inner.lock().unwrap();
+        while page <= last {
+            // Re-borrow per iteration: fills drop the lock for the pread.
+            let slot = inner.slots.get_mut(&page);
+            match slot {
+                Some(Slot::Ready { data, referenced }) => {
+                    *referenced = true;
+                    let data = Arc::clone(data);
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    acc.hits += 1;
+                    copy_page_span(page, pb, &data, off, dst);
+                    page += 1;
+                }
+                Some(Slot::Filling) => {
+                    // Another session is filling this very page: block
+                    // until it lands instead of issuing a duplicate
+                    // pread, then re-examine (the fill may have failed
+                    // and been retracted, in which case we claim it).
+                    self.waits.fetch_add(1, Ordering::Relaxed);
+                    acc.waits += 1;
+                    inner = self.cv.wait(inner).unwrap();
+                }
+                None => {
+                    // Claim the maximal contiguous run of absent pages
+                    // and fill it with ONE pread (the coalesced miss).
+                    let mut run_end = page + 1;
+                    while run_end <= last && !inner.slots.contains_key(&run_end) {
+                        run_end += 1;
+                    }
+                    for p in page..run_end {
+                        inner.slots.insert(p, Slot::Filling);
+                    }
+                    drop(inner);
+                    let fill = self.fill_run(file, page, run_end, file_len);
+                    inner = self.inner.lock().unwrap();
+                    match fill {
+                        Err(e) => {
+                            // Retract the claims so waiters can retry
+                            // (one of them becomes the new filler).
+                            for p in page..run_end {
+                                inner.slots.remove(&p);
+                            }
+                            self.cv.notify_all();
+                            return Err(e);
+                        }
+                        Ok(pages) => {
+                            let n = pages.len() as u64;
+                            self.misses.fetch_add(n, Ordering::Relaxed);
+                            acc.misses += n;
+                            let Inner { slots, clock, resident_bytes } = &mut *inner;
+                            for (p, data) in &pages {
+                                *resident_bytes += data.len();
+                                // Unreferenced on entry (scan resistance):
+                                // only a *re*-touch earns a second chance.
+                                slots.insert(
+                                    *p,
+                                    Slot::Ready { data: Arc::clone(data), referenced: false },
+                                );
+                                clock.push_back(*p);
+                            }
+                            self.evict_to_budget(&mut inner);
+                            self.cv.notify_all();
+                            // Copy from our own Arcs: eviction above may
+                            // already have dropped the pool's reference,
+                            // but ours keeps the bytes alive.
+                            for (p, data) in &pages {
+                                copy_page_span(*p, pb, data, off, dst);
+                            }
+                            page = run_end;
+                        }
+                    }
+                }
+            }
+        }
+        Ok(acc)
+    }
+
+    /// One gather `pread` over pages `[first, run_end)` (clamped to
+    /// EOF), split into per-page refcounted buffers.
+    fn fill_run(
+        &self,
+        file: &ParallelFile,
+        first: u64,
+        run_end: u64,
+        file_len: u64,
+    ) -> Result<Vec<(u64, Arc<Vec<u8>>)>> {
+        let pb = self.page_bytes as u64;
+        let start = first * pb;
+        let end = (run_end * pb).min(file_len);
+        let mut buf = vec![0u8; (end - start) as usize];
+        retry_transient(|| file.read_at(start, &mut buf))?;
+        self.fill_preads.fetch_add(1, Ordering::Relaxed);
+        self.filled_bytes.fetch_add(buf.len() as u64, Ordering::Relaxed);
+        let mut out = Vec::with_capacity((run_end - first) as usize);
+        for (i, p) in (first..run_end).enumerate() {
+            let s = i * self.page_bytes;
+            let e = ((i + 1) * self.page_bytes).min(buf.len());
+            out.push((p, Arc::new(buf[s..e].to_vec())));
+        }
+        Ok(out)
+    }
+
+    /// Clock second-chance sweep until resident bytes fit the budget.
+    /// `Filling` slots carry no clock entry and are never evicted.
+    fn evict_to_budget(&self, inner: &mut Inner) {
+        let Inner { slots, clock, resident_bytes } = inner;
+        // Two full passes bound the sweep: pass one clears reference
+        // bits, pass two evicts — after that every page was evictable.
+        let mut budget_iters = clock.len() * 2 + 1;
+        while *resident_bytes > self.budget_bytes && budget_iters > 0 {
+            budget_iters -= 1;
+            let Some(p) = clock.pop_front() else { break };
+            match slots.get_mut(&p) {
+                Some(Slot::Ready { referenced, data }) => {
+                    if *referenced {
+                        *referenced = false;
+                        clock.push_back(p);
+                    } else {
+                        *resident_bytes -= data.len();
+                        slots.remove(&p);
+                        self.evictions.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                // Unreachable by the one-entry-per-Ready-slot invariant;
+                // dropping a stale entry is the safe recovery either way.
+                _ => {}
+            }
+        }
+    }
+}
+
+/// Copy the overlap of page `page` (bytes `[page*pb, page*pb+len)`) and
+/// the request window `[req_off, req_off + dst.len())` into `dst`.
+fn copy_page_span(page: u64, pb: u64, data: &[u8], req_off: u64, dst: &mut [u8]) {
+    let pstart = page * pb;
+    let pend = pstart + data.len() as u64;
+    let req_end = req_off + dst.len() as u64;
+    let lo = pstart.max(req_off);
+    let hi = pend.min(req_end);
+    if lo >= hi {
+        return;
+    }
+    dst[(lo - req_off) as usize..(hi - req_off) as usize]
+        .copy_from_slice(&data[(lo - pstart) as usize..(hi - pstart) as usize]);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::par::{Communicator, SerialComm};
+    use std::path::PathBuf;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("scda-cache");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(format!("{name}-{}", std::process::id()))
+    }
+
+    fn file_with(n: usize, name: &str) -> (Arc<ParallelFile>, PathBuf) {
+        let path = tmp(name);
+        let c = SerialComm::new();
+        assert_eq!(c.rank(), 0);
+        let f = ParallelFile::create(&c, &path).unwrap();
+        let data: Vec<u8> = (0..n).map(|i| (i % 251) as u8).collect();
+        f.write_at(0, &data).unwrap();
+        drop(f);
+        (Arc::new(ParallelFile::open_read(&c, &path).unwrap()), path)
+    }
+
+    fn expect(off: u64, len: usize) -> Vec<u8> {
+        (off..off + len as u64).map(|i| (i % 251) as u8).collect()
+    }
+
+    #[test]
+    fn pages_fill_once_and_hit_after() {
+        let (f, path) = file_with(64 * 1024, "fill-once");
+        let c = PageCache::new(4096, 1 << 20);
+        let mut buf = vec![0u8; 100];
+        let a = c.read_into(&f, 10, &mut buf).unwrap();
+        assert_eq!(buf, expect(10, 100));
+        assert_eq!((a.hits, a.misses, a.waits), (0, 1, 0));
+        let a = c.read_into(&f, 50, &mut buf).unwrap();
+        assert_eq!(buf, expect(50, 100));
+        assert_eq!((a.hits, a.misses), (1, 0));
+        let st = c.stats();
+        assert_eq!(st.fill_preads, 1);
+        assert_eq!(st.resident_pages, 1);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn run_of_missing_pages_is_one_gather_pread() {
+        let (f, path) = file_with(256 * 1024, "run");
+        let before = f.io_stats().read_calls;
+        let c = PageCache::new(4096, 1 << 20);
+        // 40 KiB spanning 11 pages: one coalesced pread, 11 pages.
+        let mut buf = vec![0u8; 40 * 1024];
+        let a = c.read_into(&f, 100, &mut buf).unwrap();
+        assert_eq!(buf, expect(100, 40 * 1024));
+        assert_eq!(a.misses, 11);
+        assert_eq!(c.stats().fill_preads, 1);
+        assert_eq!(f.io_stats().read_calls - before, 1);
+        // A second overlapping read is all hits, zero syscalls.
+        let a = c.read_into(&f, 4096, &mut buf).unwrap();
+        assert_eq!(a.misses, 0);
+        assert_eq!(f.io_stats().read_calls - before, 1);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn eviction_keeps_resident_bytes_under_budget() {
+        let (f, path) = file_with(512 * 1024, "evict");
+        let c = PageCache::new(4096, 8 * 4096);
+        let mut buf = vec![0u8; 4096];
+        for i in 0..64u64 {
+            c.read_into(&f, i * 4096, &mut buf).unwrap();
+            assert_eq!(buf, expect(i * 4096, 4096), "page {i}");
+            assert!(c.stats().resident_bytes <= 8 * 4096);
+        }
+        let st = c.stats();
+        assert!(st.evictions >= 64 - 8, "evictions {}", st.evictions);
+        assert_eq!(st.misses, 64, "a pure scan never re-hits");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn hot_page_survives_a_scan() {
+        let (f, path) = file_with(512 * 1024, "clock");
+        let c = PageCache::new(4096, 4 * 4096);
+        let mut buf = vec![0u8; 16];
+        // Touch the hot page, then keep re-touching it between scan
+        // steps: its reference bit stays set, so the clock evicts the
+        // one-touch scan pages first.
+        c.read_into(&f, 0, &mut buf).unwrap();
+        for i in 1..32u64 {
+            c.read_into(&f, i * 4096, &mut buf).unwrap();
+            c.read_into(&f, 8, &mut buf).unwrap();
+            assert_eq!(buf, expect(8, 16));
+        }
+        let st = c.stats();
+        // Page 0 was filled exactly once: 1 miss for it + 31 scan misses.
+        assert_eq!(st.misses, 32, "hot page never refilled: {st:?}");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn concurrent_hot_reads_collapse_to_one_pread() {
+        let (f, path) = file_with(64 * 1024, "single-flight");
+        let c = Arc::new(PageCache::new(4096, 1 << 20));
+        let before = f.io_stats().read_calls;
+        let barrier = Arc::new(std::sync::Barrier::new(8));
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let c = Arc::clone(&c);
+                let f = Arc::clone(&f);
+                let barrier = Arc::clone(&barrier);
+                s.spawn(move || {
+                    barrier.wait();
+                    let mut buf = vec![0u8; 256];
+                    c.read_into(&f, 1000, &mut buf).unwrap();
+                    assert_eq!(buf, expect(1000, 256));
+                });
+            }
+        });
+        // All eight sessions touched the same page: exactly one pread,
+        // regardless of who waited and who hit after the fill.
+        assert_eq!(f.io_stats().read_calls - before, 1);
+        assert_eq!(c.stats().fill_preads, 1);
+        let st = c.stats();
+        assert!(st.hits + st.misses + st.single_flight_waits >= 8, "{st:?}");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn past_eof_is_corrupt_error() {
+        let (f, path) = file_with(1000, "eof");
+        let c = PageCache::new(4096, 1 << 20);
+        let mut buf = vec![0u8; 100];
+        let err = c.read_into(&f, 950, &mut buf).unwrap_err();
+        assert_eq!(err.kind(), crate::error::ScdaErrorKind::CorruptFile);
+        // In-bounds read afterwards is fine (claims were not leaked).
+        let mut buf = vec![0u8; 50];
+        c.read_into(&f, 950, &mut buf).unwrap();
+        assert_eq!(buf, expect(950, 50));
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn short_tail_page_clamps_to_eof() {
+        let (f, path) = file_with(5000, "tail");
+        let c = PageCache::new(4096, 1 << 20);
+        let mut buf = vec![0u8; 900];
+        c.read_into(&f, 4100, &mut buf).unwrap();
+        assert_eq!(buf, expect(4100, 900));
+        let st = c.stats();
+        // Page 1 is the 904-byte tail, not a full page.
+        assert_eq!(st.resident_bytes, 4096 + 904);
+        std::fs::remove_file(&path).unwrap();
+    }
+}

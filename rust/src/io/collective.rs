@@ -125,6 +125,13 @@ impl CollectiveEngine {
         }
     }
 
+    /// Builder: run async flush on `pool` instead of the shared codec
+    /// pool (the per-file flush pool; `None` keeps the shared pool).
+    pub fn with_flush_pool(mut self, pool: Option<Arc<crate::par::pool::CodecPool>>) -> Self {
+        self.core.set_flush_pool(pool);
+        self
+    }
+
     /// All ranks' per-stripe staged byte counts → the elected owner map
     /// for this exchange (module docs, "staging affinity"). One
     /// allgather; every rank computes the same map because it is a pure
@@ -551,17 +558,19 @@ impl IoEngine for CollectiveEngine {
     }
 
     fn stats(&self) -> EngineStats {
-        EngineStats {
+        let mut st = EngineStats {
             engine: "collective",
             shipped_bytes: self.shipped_bytes,
             exchanges: self.exchanges,
             flush_batches: self.core.flush_batches,
-            sieve_refills: self.core.sieve_refills(),
             shipped_per_exchange: self.shipped_history.iter().copied().collect(),
             read_exchanges: self.read_exchanges,
             gathered_bytes: self.gathered_bytes,
             gather_preads: self.gather_preads,
-        }
+            ..EngineStats::default()
+        };
+        self.core.fill_read_stats(&mut st);
+        st
     }
 }
 

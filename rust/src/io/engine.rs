@@ -83,6 +83,21 @@ pub struct EngineStats {
     /// section interleaving (`rust/tests/io_read_gather.rs` asserts
     /// this, mirroring the write-side syscall invariant).
     pub gather_preads: u64,
+    /// Times the sieve's adaptive window doubled (sequential scans).
+    pub sieve_grows: u64,
+    /// Times the sieve's adaptive window halved (random access).
+    pub sieve_shrinks: u64,
+    /// Pages this handle's stream served from the shared page cache
+    /// (0 when the sieve is private — see [`crate::io::PageCache`]).
+    pub cache_hits: u64,
+    /// Pages this handle's stream had to fill itself.
+    pub cache_misses: u64,
+    /// Times this stream blocked on another session's in-flight fill
+    /// (each one is a pread the single-flight dedup saved).
+    pub cache_waits: u64,
+    /// Evictions of the backing shared cache. Pool-global (all sessions
+    /// of the service), snapshot at [`IoEngine::stats`] time.
+    pub cache_evictions: u64,
 }
 
 /// One write/read transport for an open scda file; see the module docs
@@ -172,27 +187,42 @@ pub trait IoEngine: Send {
 
 /// Build the engine an [`IoTuning`] selects. `read_mode` files get the
 /// sieve (when the tuning has one); write-mode files get staging state.
+/// With `cache`, the sieve of either staged engine sources its refills
+/// (and sub-bypass payload reads) from that shared page pool instead of
+/// private preads — the multi-session read-service path. With
+/// `flush_pool`, async background flush runs on the given pool instead
+/// of borrowing the process-wide shared codec pool.
 pub(crate) fn build_engine(
     tuning: &IoTuning,
     read_mode: bool,
     file: &Arc<ParallelFile>,
+    cache: Option<&Arc<crate::io::cache::PageCache>>,
+    flush_pool: Option<&Arc<CodecPool>>,
 ) -> Result<Box<dyn IoEngine>> {
     let sieve = if read_mode && tuning.sieve_window > 0 && tuning.engine != IoEngineKind::Direct {
-        Some(ReadSieve::new(tuning.sieve_window, file.len()?))
+        Some(match cache {
+            Some(c) => ReadSieve::shared(tuning.sieve_window, file.len()?, Arc::clone(c)),
+            None => ReadSieve::new(tuning.sieve_window, file.len()?),
+        })
     } else {
         None
     };
+    let pool = flush_pool.cloned();
     Ok(match tuning.engine {
         IoEngineKind::Direct => Box::new(DirectEngine::new()),
-        IoEngineKind::Aggregating => {
-            Box::new(AggregatingEngine::new(tuning.aggregation_buffer, sieve, tuning.async_flush))
-        }
-        IoEngineKind::Collective => Box::new(crate::io::collective::CollectiveEngine::new(
-            tuning.aggregation_buffer,
-            tuning.stripe_size,
-            sieve,
-            tuning.async_flush,
-        )),
+        IoEngineKind::Aggregating => Box::new(
+            AggregatingEngine::new(tuning.aggregation_buffer, sieve, tuning.async_flush)
+                .with_flush_pool(pool),
+        ),
+        IoEngineKind::Collective => Box::new(
+            crate::io::collective::CollectiveEngine::new(
+                tuning.aggregation_buffer,
+                tuning.stripe_size,
+                sieve,
+                tuning.async_flush,
+            )
+            .with_flush_pool(pool),
+        ),
     })
 }
 
@@ -284,6 +314,11 @@ pub(crate) fn route_read_vec(
         if len < s.base_window() {
             return s.read_vec(file, offset, len);
         }
+        if s.is_shared() {
+            let mut out = vec![0u8; len];
+            s.shared_read_into(file, offset, &mut out)?;
+            return Ok(out);
+        }
     }
     retry_transient(|| file.read_vec(offset, len))
 }
@@ -298,6 +333,9 @@ pub(crate) fn route_read_into(
         if buf.len() < s.base_window() {
             buf.copy_from_slice(s.view(file, offset, buf.len())?);
             return Ok(());
+        }
+        if s.is_shared() {
+            return s.shared_read_into(file, offset, buf);
         }
     }
     retry_transient(|| file.read_at(offset, buf))
@@ -425,6 +463,30 @@ impl StagedCore {
     pub(crate) fn sieve_refills(&self) -> u64 {
         self.sieve.as_ref().map(|s| s.refills()).unwrap_or(0)
     }
+
+    /// Point background flush at a dedicated pool (`None` restores the
+    /// shared codec pool). No-op without `async_flush`.
+    pub(crate) fn set_flush_pool(&mut self, pool: Option<Arc<CodecPool>>) {
+        if let Some(fl) = &mut self.flusher {
+            fl.set_pool(pool);
+        }
+    }
+
+    /// Copy the read-side counters (sieve adaptivity + shared-cache
+    /// accounting) into a stats snapshot — shared by both staged
+    /// engines' [`IoEngine::stats`].
+    pub(crate) fn fill_read_stats(&self, st: &mut EngineStats) {
+        if let Some(s) = &self.sieve {
+            st.sieve_refills = s.refills();
+            st.sieve_grows = s.grows();
+            st.sieve_shrinks = s.shrinks();
+            let acc = s.stream_stats();
+            st.cache_hits = acc.hits;
+            st.cache_misses = acc.misses;
+            st.cache_waits = acc.waits;
+            st.cache_evictions = s.cache_evictions();
+        }
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -539,6 +601,10 @@ pub(crate) struct AsyncFlusher {
     ctl: Arc<FlushCtl>,
     /// Live batches, kept so `wait` can help execute them.
     batches: Vec<Arc<FlushBatch>>,
+    /// Dedicated pool for this file's background writes; `None` borrows
+    /// the process-wide shared [`CodecPool`]. A file with its own pool
+    /// never steals workers from (or queues behind) codec jobs.
+    pool: Option<Arc<CodecPool>>,
 }
 
 impl AsyncFlusher {
@@ -550,7 +616,12 @@ impl AsyncFlusher {
                 error: Mutex::new(None),
             }),
             batches: Vec::new(),
+            pool: None,
         }
+    }
+
+    pub(crate) fn set_pool(&mut self, pool: Option<Arc<CodecPool>>) {
+        self.pool = pool;
     }
 
     pub(crate) fn submit(&mut self, file: &Arc<ParallelFile>, runs: Vec<(u64, Payload)>) {
@@ -573,7 +644,10 @@ impl AsyncFlusher {
             ctl: Arc::clone(&self.ctl),
         });
         self.batches.push(Arc::clone(&batch));
-        CodecPool::global().spawn(batch);
+        match &self.pool {
+            Some(p) => p.spawn(batch),
+            None => CodecPool::global().spawn(batch),
+        }
     }
 
     /// Block until every submitted run has executed, helping from the
@@ -642,6 +716,13 @@ impl AggregatingEngine {
     pub fn new(capacity: usize, sieve: Option<ReadSieve>, async_flush: bool) -> Self {
         AggregatingEngine { core: StagedCore::new(capacity, sieve, async_flush) }
     }
+
+    /// Builder: run async flush on `pool` instead of the shared codec
+    /// pool (the per-file flush pool; `None` keeps the shared pool).
+    pub fn with_flush_pool(mut self, pool: Option<Arc<CodecPool>>) -> Self {
+        self.core.set_flush_pool(pool);
+        self
+    }
 }
 
 impl IoEngine for AggregatingEngine {
@@ -682,12 +763,13 @@ impl IoEngine for AggregatingEngine {
     }
 
     fn stats(&self) -> EngineStats {
-        EngineStats {
+        let mut st = EngineStats {
             engine: "aggregated",
             flush_batches: self.core.flush_batches,
-            sieve_refills: self.core.sieve_refills(),
             ..EngineStats::default()
-        }
+        };
+        self.core.fill_read_stats(&mut st);
+        st
     }
 }
 

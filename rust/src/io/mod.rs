@@ -32,12 +32,14 @@
 //! file ([`crate::api::ScdaFile::set_io_tuning`]).
 
 pub mod aggregate;
+pub mod cache;
 pub mod collective;
 pub mod engine;
 pub mod fault;
 pub mod sieve;
 
 pub use aggregate::{Payload, WriteAggregator, WriteCoalescer};
+pub use cache::{CacheAccess, CacheStats, PageCache};
 pub use collective::CollectiveEngine;
 pub use engine::{
     drop_error_stats, take_drop_error, AggregatingEngine, DirectEngine, DropErrorStats,
@@ -86,9 +88,10 @@ pub struct IoTuning {
     /// codec work; errors surface at the next `flush`/`close`, never
     /// dropped (see [`take_drop_error`] for the drop path).
     ///
-    /// Background flush always rides the process-wide shared pool
-    /// ([`crate::par::pool::CodecPool::global`]); the per-file
-    /// `CodecParallel` knob governs only the codec stages.
+    /// Background flush rides the process-wide shared pool
+    /// ([`crate::par::pool::CodecPool::global`]) unless the file was
+    /// given its own pool (`ScdaFile::set_flush_pool`), which keeps
+    /// flush `pwrite`s from queueing behind codec jobs.
     ///
     /// Caveat: background runs execute in no particular order relative
     /// to each other or to bypass writes, so the async path assumes a

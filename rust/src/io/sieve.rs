@@ -27,8 +27,26 @@
 //! The streak counters mean one stray seek inside a scan (or one local
 //! run inside random access) never flips the window — that is the
 //! hysteresis `grow_and_shrink_have_hysteresis` asserts.
+//!
+//! # Shared-cache backing
+//!
+//! A sieve built with [`ReadSieve::shared`] keeps all of the above —
+//! the window, the adaptivity, the local assembly buffer — but sources
+//! its refills from a shared [`PageCache`] instead of a private
+//! `pread`: concurrent sessions reading the same archive then share one
+//! page pool under one budget, overlapping refills dedupe to one fill
+//! `pread` (single-flight), and large payload reads route through the
+//! cache too (up to the cache's bypass bound). The *adaptive state*
+//! stays strictly per sieve, i.e. per session stream: one client's
+//! random access can never shrink another client's sequential-scan
+//! window, because only the page pool is shared — never the hysteresis
+//! counters ([`ReadSieve::reset_adaptivity`] re-arms a stream that is
+//! handed to a new client).
+
+use std::sync::Arc;
 
 use crate::error::{corrupt, Result, ScdaError};
+use crate::io::cache::{CacheAccess, PageCache};
 use crate::par::pfile::ParallelFile;
 
 /// Window alignment: refills start on a 4 KiB boundary so the buffered
@@ -64,6 +82,16 @@ pub struct ReadSieve {
     jump_streak: u32,
     grows: u64,
     shrinks: u64,
+    /// Shared-cache backing plus this stream's accounting; `None` means
+    /// the classic private-window sieve.
+    shared: Option<SharedStream>,
+}
+
+/// One session stream's view of the shared page pool.
+#[derive(Debug)]
+struct SharedStream {
+    cache: Arc<PageCache>,
+    stats: CacheAccess,
 }
 
 impl ReadSieve {
@@ -80,7 +108,45 @@ impl ReadSieve {
             jump_streak: 0,
             grows: 0,
             shrinks: 0,
+            shared: None,
         }
+    }
+
+    /// A sieve whose refills are served from a shared [`PageCache`]
+    /// instead of private `pread`s. The window and its adaptivity are
+    /// unchanged (they now govern per-refill readahead *through* the
+    /// cache); only the backing store is pooled.
+    pub fn shared(window: usize, file_len: u64, cache: Arc<PageCache>) -> Self {
+        let mut s = Self::new(window, file_len);
+        s.shared = Some(SharedStream { cache, stats: CacheAccess::default() });
+        s
+    }
+
+    /// Whether refills route through a shared page cache.
+    pub fn is_shared(&self) -> bool {
+        self.shared.is_some()
+    }
+
+    /// This stream's hit/miss/wait accounting against the shared cache
+    /// (all zero for a private sieve).
+    pub fn stream_stats(&self) -> CacheAccess {
+        self.shared.as_ref().map(|s| s.stats).unwrap_or_default()
+    }
+
+    /// Evictions of the backing shared cache (pool-global; 0 private).
+    pub fn cache_evictions(&self) -> u64 {
+        self.shared.as_ref().map(|s| s.cache.stats().evictions).unwrap_or(0)
+    }
+
+    /// Re-arm the adaptive window for a fresh client stream: window back
+    /// to the configured base, streak counters cleared. Session-oriented
+    /// callers (the archive read service) invoke this when a sieve-backed
+    /// handle is handed to a new client, so one client's access pattern
+    /// never leaks hysteresis into the next one's.
+    pub fn reset_adaptivity(&mut self) {
+        self.window = self.base;
+        self.seq_streak = 0;
+        self.jump_streak = 0;
     }
 
     /// The current window size (what the next refill fetches).
@@ -168,7 +234,13 @@ impl ReadSieve {
             let win_end = (start + self.window as u64).max(end).min(self.file_len);
             let take = (win_end - start) as usize;
             self.buf.resize(take, 0);
-            file.read_at(start, &mut self.buf)?;
+            match &mut self.shared {
+                Some(s) => {
+                    let acc = s.cache.read_into(file, start, &mut self.buf)?;
+                    s.stats.absorb(acc);
+                }
+                None => file.read_at(start, &mut self.buf)?,
+            }
             self.buf_off = start;
             self.refills += 1;
         }
@@ -179,6 +251,24 @@ impl ReadSieve {
     /// [`Self::view`] into a fresh buffer.
     pub fn read_vec(&mut self, file: &ParallelFile, off: u64, len: usize) -> Result<Vec<u8>> {
         Ok(self.view(file, off, len)?.to_vec())
+    }
+
+    /// The large-read route of a shared sieve: fill `buf` straight from
+    /// the page cache (no window, no assembly copy into `self.buf`), so
+    /// overlapping payload reads across sessions still dedupe to one
+    /// fill. Reads at or past the cache's bypass bound — payloads big
+    /// enough to churn the whole budget — go direct, exactly like the
+    /// private sieve's large-read bypass. On a private sieve this is a
+    /// plain direct read.
+    pub fn shared_read_into(&mut self, file: &ParallelFile, off: u64, buf: &mut [u8]) -> Result<()> {
+        match &mut self.shared {
+            Some(s) if buf.len() < s.cache.bypass_bytes() => {
+                let acc = s.cache.read_into(file, off, buf)?;
+                s.stats.absorb(acc);
+                Ok(())
+            }
+            _ => crate::io::fault::retry_transient(|| file.read_at(off, buf)),
+        }
     }
 }
 
@@ -308,6 +398,86 @@ mod tests {
         let e2 = s.buf_off + s.buf.len() as u64;
         s.view(&f, e2, 16).unwrap();
         assert_eq!(s.grows(), 1);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn shared_sieves_dedupe_refills_through_one_cache() {
+        use crate::io::cache::PageCache;
+        use std::sync::Arc;
+        let len = 256 * 1024;
+        let (f, path) = file_with(len, "shared-dedupe");
+        let cache = Arc::new(PageCache::new(4096, 1 << 20));
+        let mut a = ReadSieve::shared(16 * 1024, len as u64, Arc::clone(&cache));
+        let mut b = ReadSieve::shared(16 * 1024, len as u64, Arc::clone(&cache));
+        let before = f.io_stats().read_calls;
+        // Session A fills its window; session B's identical window is
+        // then served entirely from the shared pages — zero syscalls.
+        let va = a.view(&f, 100, 64).unwrap().to_vec();
+        let after_a = f.io_stats().read_calls;
+        let vb = b.view(&f, 100, 64).unwrap().to_vec();
+        assert_eq!(va, vb);
+        assert_eq!(after_a - before, 1, "A's refill is one gather pread");
+        assert_eq!(f.io_stats().read_calls, after_a, "B refilled without a syscall");
+        assert!(b.stream_stats().hits > 0 && b.stream_stats().misses == 0, "{:?}", b.stream_stats());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn adaptive_state_is_per_stream_even_with_a_shared_cache() {
+        use crate::io::cache::PageCache;
+        use std::sync::Arc;
+        let len = 1024 * 1024;
+        let (f, path) = file_with(len, "shared-isolated");
+        let cache = Arc::new(PageCache::new(4096, 64 << 10));
+        let base = 8 * 1024;
+        let mut seq = ReadSieve::shared(base, len as u64, Arc::clone(&cache));
+        let mut rnd = ReadSieve::shared(base, len as u64, Arc::clone(&cache));
+        // Interleave a sequential scanner with a random-access client on
+        // the SAME cache: the scanner's window still grows to the cap and
+        // the random client's still shrinks to the floor — hysteresis
+        // never crosses streams.
+        let mut off = 0u64;
+        for i in 0..64u64 {
+            seq.view(&f, off, 512).unwrap();
+            off += 9 * 1024;
+            let r = if i % 2 == 0 { 16 } else { 900 * 1024 };
+            rnd.view(&f, r + i, 16).unwrap();
+        }
+        assert_eq!(seq.window(), base * MAX_GROWTH, "scanner reached the cap");
+        assert_eq!(seq.shrinks(), 0, "the random client never shrank the scanner");
+        assert_eq!(rnd.window(), WINDOW_ALIGN as usize, "random client at the floor");
+        assert_eq!(rnd.grows(), 0);
+        // Re-arming a stream for a new client restores the base window.
+        seq.reset_adaptivity();
+        assert_eq!(seq.window(), base);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn shared_large_reads_route_through_the_cache_with_bypass() {
+        use crate::io::cache::PageCache;
+        use std::sync::Arc;
+        let len = 512 * 1024;
+        let (f, path) = file_with(len, "shared-large");
+        let cache = Arc::new(PageCache::new(4096, 128 << 10));
+        let mut s = ReadSieve::shared(8 * 1024, len as u64, Arc::clone(&cache));
+        // 32 KiB < bypass (64 KiB): cached.
+        let mut buf = vec![0u8; 32 * 1024];
+        s.shared_read_into(&f, 1000, &mut buf).unwrap();
+        let expect: Vec<u8> = (1000..1000 + 32 * 1024u64).map(|i| (i % 251) as u8).collect();
+        assert_eq!(buf, expect);
+        assert!(cache.stats().fill_preads >= 1);
+        let fills = cache.stats().fill_preads;
+        // Same range again: pure hits.
+        s.shared_read_into(&f, 1000, &mut buf).unwrap();
+        assert_eq!(cache.stats().fill_preads, fills);
+        // 128 KiB >= bypass: direct, cache untouched.
+        let preads = f.io_stats().read_calls;
+        let mut big = vec![0u8; 128 * 1024];
+        s.shared_read_into(&f, 0, &mut big).unwrap();
+        assert_eq!(f.io_stats().read_calls, preads + 1);
+        assert_eq!(cache.stats().fill_preads, fills);
         std::fs::remove_file(&path).unwrap();
     }
 }

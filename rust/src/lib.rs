@@ -298,6 +298,52 @@
 //!   seeded in-engine crashes, asserting every crash point recovers to
 //!   exactly the committed-prefix dataset set, restorable on a
 //!   different rank count; `BENCH_recover.json` tracks the sweep.
+//!
+//! # Read service
+//!
+//! One archive, many readers: [`runtime::ArchiveReadService`] opens an
+//! archive once and mints independent [`runtime::ServiceSession`]s —
+//! full read-mode [`archive::Archive`]s over shared plumbing, so every
+//! range-read guarantee above applies verbatim to served responses.
+//!
+//! * **Shared catalog.** Header and catalog are read and parsed once at
+//!   service open; minting a session costs *zero* syscalls (no open, no
+//!   header read, no footer read — asserted in
+//!   `rust/tests/serve.rs`).
+//! * **Shared page cache** ([`io::PageCache`]): one refcounted pool of
+//!   fixed-size pages under a global memory budget, clock (second
+//!   chance) eviction with scan resistance — pages enter the ring
+//!   unreferenced; only a re-touch earns a second pass. Each session
+//!   keeps its own [`io::ReadSieve`] — window size and adaptivity
+//!   hysteresis are strictly per session — but refills route through
+//!   the shared pool, so overlapping requests across sessions hit
+//!   resident pages instead of the disk.
+//! * **Coalesced misses.** Concurrent misses on the same page collapse
+//!   to one fill (single-flight: the first toucher claims, the rest
+//!   wait on the filled page), and a run of absent pages fills with one
+//!   gather `pread` — the in-process analogue of the collective read
+//!   gather's P-fold dedup. `rust/tests/serve.rs` pins the hot-page
+//!   case: 8 concurrent sessions, one page, exactly one `pread`.
+//! * **Protocol.** [`runtime::ReadRequest`] names a dataset and an
+//!   element range; [`runtime::ServiceSession::serve`] dispatches on
+//!   the catalog kind to [`archive::Archive::read_range`] /
+//!   `read_varray_range` (partitioned form:
+//!   [`runtime::ServiceSession::serve_partitioned`]), so served bytes
+//!   are identical to direct archive reads *by construction* — and
+//!   `rust/tests/serve.rs` asserts the identity at 1/2/4/8 concurrent
+//!   sessions under eviction-forcing budgets.
+//! * **Observability & bench.** [`io::CacheStats`] (hits, misses,
+//!   evictions, single-flight waits) surfaces through
+//!   [`runtime::ArchiveReadService::cache_stats`],
+//!   [`io::EngineStats`] and [`coordinator::Metrics`]; the t5 bench and
+//!   `scda serve-bench` sweep sessions x budget over a zipfian mix
+//!   against the per-session-sieve baseline, tracking req/s, p50/p99
+//!   latency and pread counts in `BENCH_serve.json` (shared preads
+//!   track the workload's *unique bytes*, not the session count).
+//! * **Async-flush isolation.** Writers can hand a private
+//!   [`par::pool::CodecPool`] to [`api::ScdaFile::set_flush_pool`], so
+//!   a file's background flush jobs stop competing with the shared
+//!   codec pool that read sessions and encoders draw from.
 
 pub mod api;
 pub mod archive;

@@ -1,6 +1,8 @@
-//! Runtime bridge between the rust coordinator and the AOT-compiled
-//! JAX/Pallas graphs: a PJRT CPU engine plus a bit-identical native
-//! fallback for the preconditioning transform.
+//! Runtime services: the bridge between the rust coordinator and the
+//! AOT-compiled JAX/Pallas graphs (a PJRT CPU engine plus a
+//! bit-identical native fallback for the preconditioning transform),
+//! and the [`ArchiveReadService`] — the shared-cache multi-session read
+//! server over one archive.
 
 pub mod engine;
 pub mod precond;
@@ -8,4 +10,7 @@ pub mod service;
 
 pub use engine::Engine;
 pub use precond::{entropy_estimate, native_forward, native_inverse, Preconditioner, CHUNK, TILE};
-pub use service::{Identity, NativeTransform, PrecondService, Transform};
+pub use service::{
+    ArchiveReadService, Identity, NativeTransform, PrecondService, ReadRequest,
+    ReadResponse, ReadServiceConfig, ServiceSession, Transform,
+};

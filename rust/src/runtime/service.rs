@@ -1,14 +1,260 @@
-//! Thread-safe access to the preconditioner: the PJRT client (and hence
-//! [`Preconditioner`]) is single-threaded by construction (`Rc` inside
-//! the xla bindings), so parallel ranks reach it through a dedicated
-//! engine thread — the same shape as a real accelerator-offload service
-//! where exactly one owner talks to the device.
+//! In-process services over the scda layers.
+//!
+//! Two live here today:
+//!
+//! * [`PrecondService`] — thread-safe access to the preconditioner: the
+//!   PJRT client (and hence [`Preconditioner`]) is single-threaded by
+//!   construction (`Rc` inside the xla bindings), so parallel ranks
+//!   reach it through a dedicated engine thread — the same shape as a
+//!   real accelerator-offload service where exactly one owner talks to
+//!   the device.
+//! * [`ArchiveReadService`] — one archive, many readers: N concurrent
+//!   client sessions over a single open archive, sharing the parsed
+//!   catalog (one footer read + parse at service open, zero per-session
+//!   header I/O) and one [`PageCache`] page pool under a global memory
+//!   budget. Each [`ServiceSession`] is a full read-mode
+//!   [`Archive`] — all of the catalog-seeded range-read machinery
+//!   applies — but its sieve refills route through the shared pool:
+//!   overlapping requests across sessions hit cached pages, concurrent
+//!   misses on the same pages collapse to one fill `pread`
+//!   (single-flight, the in-process analogue of the P-fold dedup in the
+//!   collective read gather), and total resident bytes stay under the
+//!   one budget no matter how many sessions are open. Adaptive-window
+//!   state stays strictly per session ([`crate::io::ReadSieve`] module
+//!   docs).
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Sender};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
-use crate::error::{Result, ScdaError};
+use crate::api::ScdaFile;
+use crate::archive::{Archive, DatasetInfo, DatasetKind};
+use crate::error::{usage, Result, ScdaError};
+use crate::format::header::FileHeader;
+use crate::io::cache::{DEFAULT_BUDGET_BYTES, DEFAULT_PAGE_BYTES};
+use crate::io::{CacheStats, IoTuning, PageCache};
+use crate::par::pfile::{IoStats, ParallelFile};
+use crate::par::{Partition, SerialComm};
 use crate::runtime::precond::Preconditioner;
+
+// ---------------------------------------------------------------------
+// Archive read service
+// ---------------------------------------------------------------------
+
+/// Knobs for [`ArchiveReadService::open_with`].
+#[derive(Debug, Clone, Copy)]
+pub struct ReadServiceConfig {
+    /// Engine tuning applied to every session (the sieve window is each
+    /// session's readahead *through* the shared cache).
+    pub tuning: IoTuning,
+    /// Shared-cache page size in bytes.
+    pub page_bytes: usize,
+    /// Global cache memory budget in bytes across *all* sessions; `0`
+    /// disables the shared cache entirely (sessions fall back to
+    /// private sieve windows — the per-session baseline the serve bench
+    /// measures against).
+    pub cache_budget: usize,
+}
+
+impl Default for ReadServiceConfig {
+    fn default() -> Self {
+        ReadServiceConfig {
+            tuning: IoTuning::default(),
+            page_bytes: DEFAULT_PAGE_BYTES,
+            cache_budget: DEFAULT_BUDGET_BYTES,
+        }
+    }
+}
+
+/// One client request: an element range of a named dataset.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ReadRequest {
+    pub dataset: String,
+    /// First element of the range.
+    pub first: u64,
+    /// Number of elements.
+    pub count: u64,
+}
+
+/// A served response, shaped by the dataset's catalog kind.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ReadResponse {
+    /// Fixed-size array range: the concatenated element bytes.
+    Array(Vec<u8>),
+    /// Variable-size array range: per-element sizes plus concatenated
+    /// payloads.
+    Varray { sizes: Vec<u64>, data: Vec<u8> },
+}
+
+/// A shared-state read server over one archive: open once, then mint a
+/// [`ServiceSession`] per client. Sessions are independent `Send`
+/// values (move each to its client's thread); the service itself is
+/// `Sync` — minting is concurrency-safe.
+///
+/// What is shared, and what is not:
+///
+/// * **Catalog** — parsed once at [`ArchiveReadService::open_with`];
+///   sessions adopt a clone of the entries and never touch the footer.
+/// * **File handle** — one descriptor, shared; its [`IoStats`] count
+///   every session's syscalls together, which is what the serve bench's
+///   "preads track unique bytes" acceptance reads.
+/// * **Page pool** — one [`PageCache`] under `cache_budget`.
+/// * **Not shared** — cursors, pending-section state, sieve adaptivity:
+///   each session is a private [`Archive`] over the shared plumbing.
+pub struct ArchiveReadService {
+    file: Arc<ParallelFile>,
+    header: FileHeader,
+    entries: Vec<DatasetInfo>,
+    indexed: bool,
+    tuning: IoTuning,
+    cache: Option<Arc<PageCache>>,
+    sessions: AtomicU64,
+}
+
+impl ArchiveReadService {
+    /// Open with default knobs (default tuning, 64 KiB pages, 32 MiB
+    /// budget).
+    pub fn open(path: impl AsRef<std::path::Path>) -> Result<Self> {
+        Self::open_with(path, ReadServiceConfig::default())
+    }
+
+    /// Open an archive once and turn it into session-mintable shared
+    /// state: the header and catalog are read and parsed here — by the
+    /// ordinary [`Archive::open_with`] path — and never again.
+    pub fn open_with(path: impl AsRef<std::path::Path>, cfg: ReadServiceConfig) -> Result<Self> {
+        let ar = Archive::open_with(SerialComm::new(), path, cfg.tuning, true)?;
+        let file = ar.file().shared_handle();
+        let header = ar.file().header_clone().ok_or_else(|| {
+            ScdaError::usage(usage::CALL_SEQUENCE, "read-mode archive carries no parsed header")
+        })?;
+        let entries = ar.datasets().to_vec();
+        let indexed = ar.is_indexed();
+        ar.close()?;
+        let cache = (cfg.cache_budget > 0)
+            .then(|| Arc::new(PageCache::new(cfg.page_bytes, cfg.cache_budget)));
+        Ok(ArchiveReadService {
+            file,
+            header,
+            entries,
+            indexed,
+            tuning: cfg.tuning,
+            cache,
+            sessions: AtomicU64::new(0),
+        })
+    }
+
+    /// Mint a client session: a full read-mode [`Archive`] over the
+    /// shared handle, catalog and page pool — zero syscalls (no open,
+    /// no header read, no footer read).
+    pub fn session(&self) -> Result<ServiceSession> {
+        let id = self.sessions.fetch_add(1, Ordering::Relaxed);
+        let file = ScdaFile::open_shared(
+            SerialComm::new(),
+            Arc::clone(&self.file),
+            self.header.clone(),
+            self.tuning,
+            self.cache.clone(),
+        )?;
+        Ok(ServiceSession { archive: Archive::from_parts(file, self.entries.to_vec(), self.indexed)?, id })
+    }
+
+    /// The shared catalog, in file order.
+    pub fn datasets(&self) -> &[DatasetInfo] {
+        &self.entries
+    }
+
+    /// Whether the catalog came from the O(1) footer index.
+    pub fn is_indexed(&self) -> bool {
+        self.indexed
+    }
+
+    /// Pool-global cache counters (`None` with the cache disabled).
+    pub fn cache_stats(&self) -> Option<CacheStats> {
+        self.cache.as_ref().map(|c| c.stats())
+    }
+
+    /// Syscall counters of the one shared descriptor — every session's
+    /// reads summed.
+    pub fn io_stats(&self) -> IoStats {
+        self.file.io_stats()
+    }
+
+    /// Sessions minted over the service's lifetime.
+    pub fn sessions_opened(&self) -> u64 {
+        self.sessions.load(Ordering::Relaxed)
+    }
+}
+
+/// One client's session: private cursor and sieve stream over the
+/// service's shared catalog, handle and page pool. `Send` — mint on the
+/// service thread, move to the client's.
+pub struct ServiceSession {
+    archive: Archive<SerialComm>,
+    id: u64,
+}
+
+impl ServiceSession {
+    /// Serve one request, dispatching on the dataset's catalog kind:
+    /// arrays answer with [`Archive::read_range`], varrays with
+    /// [`Archive::read_varray_range`] — so a served range is
+    /// byte-identical to the direct archive call, by construction.
+    /// Inline/block datasets are not range-addressable; ask for them
+    /// through [`Self::archive_mut`].
+    pub fn serve(&mut self, req: &ReadRequest) -> Result<ReadResponse> {
+        let kind = self
+            .archive
+            .get(&req.dataset)
+            .ok_or_else(|| {
+                ScdaError::usage(
+                    usage::NO_SUCH_DATASET,
+                    format!("archive has no dataset named {:?}", req.dataset),
+                )
+            })?
+            .kind;
+        match kind {
+            DatasetKind::Array => {
+                Ok(ReadResponse::Array(self.archive.read_range(&req.dataset, req.first, req.count)?))
+            }
+            DatasetKind::Varray => {
+                let (sizes, data) =
+                    self.archive.read_varray_range(&req.dataset, req.first, req.count)?;
+                Ok(ReadResponse::Varray { sizes, data })
+            }
+            other => Err(ScdaError::usage(
+                usage::WRONG_SECTION,
+                format!("dataset {:?} is a {other} section; ranges address arrays and varrays", req.dataset),
+            )),
+        }
+    }
+
+    /// The partitioned form of [`Self::serve`] for array datasets: the
+    /// request range is divided by `part` and only this session's rank
+    /// window comes back — [`Archive::read_range_partitioned`] under
+    /// the shared cache.
+    pub fn serve_partitioned(&mut self, req: &ReadRequest, part: &Partition) -> Result<Vec<u8>> {
+        self.archive.read_range_partitioned(&req.dataset, req.first, req.count, part)
+    }
+
+    /// This session's mint order (0-based).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// The session's archive, for everything beyond the range protocol
+    /// (typed reads, engine stats, tuning).
+    pub fn archive_mut(&mut self) -> &mut Archive<SerialComm> {
+        &mut self.archive
+    }
+
+    pub fn archive(&self) -> &Archive<SerialComm> {
+        &self.archive
+    }
+
+    /// Close the session (the shared handle and pool outlive it).
+    pub fn close(self) -> Result<()> {
+        self.archive.close()
+    }
+}
 
 /// Requests served by the engine thread.
 enum Req {
@@ -165,6 +411,42 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
+    }
+
+    #[test]
+    fn read_service_sessions_share_catalog_and_cache() {
+        use crate::api::DataSrc;
+        let path = std::env::temp_dir()
+            .join(format!("scda-svc-unit-{}.scda", std::process::id()));
+        let part = Partition::uniform(1, 512);
+        let data: Vec<u8> = (0..512 * 8).map(|i| (i % 251) as u8).collect();
+        let mut ar = Archive::create(SerialComm::new(), &path, b"svc").unwrap();
+        ar.write_array("t", DataSrc::Contiguous(&data), &part, 8, false).unwrap();
+        ar.finish().unwrap();
+
+        let svc = ArchiveReadService::open(&path).unwrap();
+        assert!(svc.is_indexed());
+        assert_eq!(svc.datasets().len(), 1);
+        let preads_after_open = svc.io_stats().read_calls;
+
+        let req = ReadRequest { dataset: "t".into(), first: 10, count: 4 };
+        let mut s0 = svc.session().unwrap();
+        let mut s1 = svc.session().unwrap();
+        assert_eq!(
+            svc.io_stats().read_calls,
+            preads_after_open,
+            "minting sessions costs zero syscalls"
+        );
+        let a = s0.serve(&req).unwrap();
+        let b = s1.serve(&req).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a, ReadResponse::Array(data[80..112].to_vec()));
+        let st = svc.cache_stats().unwrap();
+        assert!(st.hits > 0, "second session hit the shared pages: {st:?}");
+        assert_eq!(svc.sessions_opened(), 2);
+        s0.close().unwrap();
+        s1.close().unwrap();
+        std::fs::remove_file(&path).unwrap();
     }
 
     #[test]

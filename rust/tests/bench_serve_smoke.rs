@@ -1,0 +1,70 @@
+//! Read-service bench smoke: exercises the concurrent shared-cache vs
+//! per-session-sieve harness end to end and records `BENCH_serve.json`
+//! so the serve trajectory is tracked from this PR onward.
+//!
+//! The quick bench is `#[ignore]`d so `cargo test -q` stays fast; run
+//! with `cargo test --test bench_serve_smoke -- --ignored`.
+
+use scda::bench_support::{bench_serve_json_path, serve_bench};
+
+#[test]
+fn serve_bench_harness_roundtrips_tiny_workload() {
+    // Non-ignored correctness pass at a size too small to be a
+    // benchmark: both modes must serve the same bytes (asserted inside
+    // `run_one`), preads must cover the workload, and the report must
+    // carry the sweep's field set.
+    let dir = std::env::temp_dir().join("scda-serve-smoke");
+    std::fs::create_dir_all(&dir).unwrap();
+    let profiles = serve_bench::run(4, 256, 32, 40, 8);
+    assert_eq!(profiles.len(), serve_bench::SESSIONS.len() * serve_bench::BUDGETS.len());
+    for p in &profiles {
+        assert_eq!(p.requests, p.sessions as u64 * 40);
+        assert!(p.unique_bytes > 0);
+        assert!(p.shared_preads > 0 && p.baseline_preads > 0);
+        assert!(p.cache_hits + p.cache_misses > 0, "shared run touched the cache: {p:?}");
+    }
+    // The shared pool dedupes across sessions: at 8 sessions the cache
+    // absorbs re-reads, so shared preads stay below the baseline's.
+    let p8 = profiles
+        .iter()
+        .find(|p| p.sessions == 8 && p.budget_bytes == serve_bench::BUDGETS[1])
+        .unwrap();
+    assert!(
+        p8.shared_preads < p8.baseline_preads,
+        "shared {} vs baseline {}",
+        p8.shared_preads,
+        p8.baseline_preads
+    );
+    let r = serve_bench::report(&profiles, 4, 256, 32, 40).render();
+    assert!(r.contains("\"bench\": \"serve\""));
+    for s in serve_bench::SESSIONS {
+        for b in serve_bench::BUDGETS {
+            assert!(r.contains(&format!("\"serve_s{s}_b{b}\"")), "missing entry s{s} b{b}");
+        }
+    }
+    for field in ["shared_rps", "shared_p50_us", "shared_p99_us", "baseline_preads", "single_flight_waits"] {
+        assert!(r.contains(&format!("\"{field}\"")), "missing field {field}");
+    }
+}
+
+#[test]
+#[ignore = "perf smoke; run with -- --ignored"]
+fn serve_bench_quick_records_json() {
+    let profiles = serve_bench::run_quick();
+    for p in &profiles {
+        assert!(p.shared_rps > 0.0 && p.baseline_rps > 0.0);
+        assert!(p.shared_p50_us <= p.shared_p99_us);
+    }
+    let path = bench_serve_json_path();
+    serve_bench::report(&profiles, 8, 2048, 64, 200).write(&path).unwrap();
+    let written = std::fs::read_to_string(&path).unwrap();
+    assert!(written.contains("\"bench\": \"serve\""));
+    for p in &profiles {
+        println!(
+            "serve quick: s={} b={} shared {:.0} req/s / {} preads, baseline {:.0} req/s / {} preads ({:.2}x)",
+            p.sessions, p.budget_bytes, p.shared_rps, p.shared_preads, p.baseline_rps,
+            p.baseline_preads, p.speedup()
+        );
+    }
+    println!("wrote {}", path.display());
+}

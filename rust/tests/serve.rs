@@ -1,0 +1,251 @@
+//! Concurrent read-service integration tests: N client sessions over
+//! one [`ArchiveReadService`] must serve byte-identical answers to
+//! direct `Archive::read_range` calls — overlapping and disjoint
+//! request mixes, budgets small enough to force eviction — while
+//! concurrent misses on one hot page collapse to a single `pread` and
+//! adaptive-window state stays private to each session.
+
+use scda::api::{DataSrc, IoTuning};
+use scda::archive::Archive;
+use scda::par::{CodecPool, Partition, SerialComm};
+use scda::runtime::{ArchiveReadService, ReadRequest, ReadResponse, ReadServiceConfig};
+use std::path::PathBuf;
+use std::sync::{Arc, Barrier};
+
+const N: u64 = 4096;
+const E: u64 = 16;
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("scda-serve");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(format!("{name}-{}.scda", std::process::id()))
+}
+
+fn array_payload() -> Vec<u8> {
+    (0..N * E).map(|i| ((i * 13) % 251) as u8).collect()
+}
+
+fn varray_payload() -> (Vec<u64>, Vec<u8>) {
+    let sizes: Vec<u64> = (0..N).map(|i| i % 7 + 1).collect();
+    let mut data = Vec::new();
+    for (i, &s) in sizes.iter().enumerate() {
+        for j in 0..s {
+            data.push(((i as u64 * 5 + j) % 251) as u8);
+        }
+    }
+    (sizes, data)
+}
+
+/// One serial writer: a raw array, an encoded array and a varray —
+/// every range-addressable shape the service dispatches on.
+fn build(path: &PathBuf) {
+    let part = Partition::uniform(1, N);
+    let a = array_payload();
+    let (vsizes, vdata) = varray_payload();
+    let mut ar = Archive::create(SerialComm::new(), path, b"serve-test").unwrap();
+    ar.file_mut().set_sync_on_close(false);
+    ar.write_array("a", DataSrc::Contiguous(&a), &part, E, false).unwrap();
+    ar.write_array("az", DataSrc::Contiguous(&a), &part, E, true).unwrap();
+    ar.write_varray("v", DataSrc::Contiguous(&vdata), &part, &vsizes, false).unwrap();
+    ar.finish().unwrap();
+}
+
+/// Direct (service-free) answer for one request.
+fn direct(ar: &mut Archive<SerialComm>, req: &ReadRequest) -> ReadResponse {
+    if req.dataset == "v" {
+        let (sizes, data) = ar.read_varray_range(&req.dataset, req.first, req.count).unwrap();
+        ReadResponse::Varray { sizes, data }
+    } else {
+        ReadResponse::Array(ar.read_range(&req.dataset, req.first, req.count).unwrap())
+    }
+}
+
+#[test]
+fn served_ranges_match_direct_reads_across_sessions() {
+    let path = tmp("identity");
+    build(&path);
+
+    // Overlapping mix: every session serves this same list. Disjoint
+    // mix: session s gets its own stripe of each dataset.
+    let overlap: Vec<ReadRequest> = vec![
+        ReadRequest { dataset: "a".into(), first: 100, count: 32 },
+        ReadRequest { dataset: "az".into(), first: 100, count: 32 },
+        ReadRequest { dataset: "v".into(), first: 7, count: 21 },
+        ReadRequest { dataset: "a".into(), first: N - 40, count: 40 },
+        ReadRequest { dataset: "az".into(), first: 0, count: 1 },
+    ];
+    let mut dar = Archive::open(SerialComm::new(), &path).unwrap();
+    let overlap_want: Vec<ReadResponse> = overlap.iter().map(|r| direct(&mut dar, r)).collect();
+
+    for sessions in [1usize, 2, 4, 8] {
+        let stripe = N / sessions as u64;
+        let lists: Vec<Vec<ReadRequest>> = (0..sessions as u64)
+            .map(|s| {
+                let mut l = overlap.clone();
+                for ds in ["a", "az", "v"] {
+                    l.push(ReadRequest {
+                        dataset: ds.into(),
+                        first: s * stripe,
+                        count: stripe.min(64),
+                    });
+                }
+                l
+            })
+            .collect();
+        let want: Vec<Vec<ReadResponse>> =
+            lists.iter().map(|l| l.iter().map(|r| direct(&mut dar, r)).collect()).collect();
+
+        // 4 KiB pages under a 16 KiB budget: far smaller than the
+        // archive, so serving must evict and refill correctly.
+        let cfg = ReadServiceConfig {
+            tuning: IoTuning::default(),
+            page_bytes: 4 << 10,
+            cache_budget: 16 << 10,
+        };
+        let svc = ArchiveReadService::open_with(&path, cfg).unwrap();
+        let workers: Vec<_> =
+            lists.iter().map(|l| (svc.session().unwrap(), l.as_slice())).collect();
+        let got: Vec<Vec<ReadResponse>> = std::thread::scope(|sc| {
+            let handles: Vec<_> = workers
+                .into_iter()
+                .map(|(mut sess, list)| {
+                    sc.spawn(move || {
+                        list.iter().map(|r| sess.serve(r).unwrap()).collect::<Vec<_>>()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for (s, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(&g[..overlap.len()], &overlap_want[..], "{sessions} sessions, session {s}, overlapping mix");
+            assert_eq!(g, w, "{sessions} sessions, session {s}");
+        }
+        let st = svc.cache_stats().unwrap();
+        assert!(st.evictions > 0, "16 KiB budget over a bigger archive must evict: {st:?}");
+        assert!(
+            st.resident_bytes <= 16 << 10,
+            "resident {} exceeds budget",
+            st.resident_bytes
+        );
+        assert_eq!(svc.sessions_opened(), sessions as u64);
+    }
+    dar.close().unwrap();
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn concurrent_sessions_hot_page_fills_once() {
+    // An archive smaller than one default cache page: every byte of it
+    // lives on page 0, so *all* concurrent serving across 8 sessions
+    // must boil down to exactly one fill pread.
+    let path = tmp("hot");
+    let n = 512u64;
+    let part = Partition::uniform(1, n);
+    let data: Vec<u8> = (0..n * 8).map(|i| ((i * 3) % 251) as u8).collect();
+    let mut ar = Archive::create(SerialComm::new(), &path, b"hot").unwrap();
+    ar.file_mut().set_sync_on_close(false);
+    ar.write_array("t", DataSrc::Contiguous(&data), &part, 8, false).unwrap();
+    ar.finish().unwrap();
+
+    let svc = ArchiveReadService::open(&path).unwrap();
+    let preads0 = svc.io_stats().read_calls;
+    let req = ReadRequest { dataset: "t".into(), first: 40, count: 16 };
+    let sessions: Vec<_> = (0..8).map(|_| svc.session().unwrap()).collect();
+    let barrier = Arc::new(Barrier::new(sessions.len()));
+    let want = ReadResponse::Array(data[40 * 8..56 * 8].to_vec());
+    std::thread::scope(|sc| {
+        for mut sess in sessions {
+            let barrier = Arc::clone(&barrier);
+            let req = req.clone();
+            let want = want.clone();
+            sc.spawn(move || {
+                barrier.wait();
+                assert_eq!(sess.serve(&req).unwrap(), want);
+            });
+        }
+    });
+    let st = svc.cache_stats().unwrap();
+    assert_eq!(
+        svc.io_stats().read_calls - preads0,
+        1,
+        "8 sessions, one page: one pread ({st:?})"
+    );
+    assert_eq!(st.misses, 1, "only the first toucher misses: {st:?}");
+    assert_eq!(st.fill_preads, 1, "{st:?}");
+    assert!(
+        st.hits + st.single_flight_waits >= 7,
+        "the other sessions hit or waited: {st:?}"
+    );
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn session_window_adaptivity_stays_private() {
+    let path = tmp("adapt");
+    build(&path);
+    // Every `serve` re-reads the dataset's section header, so a session
+    // whose *payloads* sit far from the header alternates
+    // header <-> payload refills — a jump streak that shrinks its
+    // window. A session whose requests fit in the header's own window
+    // never refills again. The shrink must stay private to the jumpy
+    // session.
+    let mut tuning = IoTuning::default();
+    tuning.sieve_window = 16 << 10;
+    let cfg = ReadServiceConfig { tuning, page_bytes: 4 << 10, cache_budget: 1 << 20 };
+    let svc = ArchiveReadService::open_with(&path, cfg).unwrap();
+
+    let mut jumpy = svc.session().unwrap();
+    let mut local = svc.session().unwrap();
+    // Payload offsets ~32-57 KiB into "a": far beyond the 16 KiB window
+    // that buffered the section header, so each serve jumps twice.
+    for first in [3500u64, 3600, 3000, 2000, 3900] {
+        jumpy.serve(&ReadRequest { dataset: "a".into(), first, count: 2 }).unwrap();
+    }
+    // Header and first payload bytes share one window: one refill ever.
+    for _ in 0..5 {
+        local.serve(&ReadRequest { dataset: "a".into(), first: 0, count: 4 }).unwrap();
+    }
+    let jumpy_st = jumpy.archive().file().engine_stats();
+    let local_st = local.archive().file().engine_stats();
+    assert!(jumpy_st.sieve_shrinks >= 1, "jumpy session shrank its window: {jumpy_st:?}");
+    assert_eq!(local_st.sieve_shrinks, 0, "local session kept its window: {local_st:?}");
+    assert_eq!(local_st.sieve_grows, 0, "{local_st:?}");
+    // Both routed through the one shared pool — and the local session's
+    // header page was already resident from the jumpy session's serves.
+    assert!(jumpy_st.cache_misses + jumpy_st.cache_hits > 0, "{jumpy_st:?}");
+    assert!(local_st.cache_hits > 0, "local refill lands on shared pages: {local_st:?}");
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn private_flush_pool_writes_identical_bytes() {
+    // Satellite: async flush draining through a per-file codec pool
+    // must produce the same bytes as the shared-pool (and sync) paths.
+    let part = Partition::uniform(1, N);
+    let a = array_payload();
+    let write = |path: &PathBuf, pool: bool| {
+        let mut ar = Archive::create(SerialComm::new(), path, b"pool-test").unwrap();
+        ar.file_mut().set_sync_on_close(false);
+        ar.file_mut().set_io_tuning(IoTuning::default().with_async_flush(pool)).unwrap();
+        if pool {
+            ar.file_mut().set_flush_pool(Some(Arc::new(CodecPool::new(2)))).unwrap();
+        }
+        ar.write_array("a", DataSrc::Contiguous(&a), &part, E, true).unwrap();
+        ar.write_array("b", DataSrc::Contiguous(&a), &part, E, false).unwrap();
+        ar.finish().unwrap();
+    };
+    let sync_path = tmp("pool-sync");
+    let pool_path = tmp("pool-async");
+    write(&sync_path, false);
+    write(&pool_path, true);
+    let sync_bytes = std::fs::read(&sync_path).unwrap();
+    let pool_bytes = std::fs::read(&pool_path).unwrap();
+    assert_eq!(sync_bytes, pool_bytes, "private flush pool changed the bytes");
+    // And the result still serves.
+    let svc = ArchiveReadService::open(&pool_path).unwrap();
+    let mut s = svc.session().unwrap();
+    let got = s.serve(&ReadRequest { dataset: "b".into(), first: 3, count: 5 }).unwrap();
+    assert_eq!(got, ReadResponse::Array(a[3 * E as usize..8 * E as usize].to_vec()));
+    std::fs::remove_file(&sync_path).unwrap();
+    std::fs::remove_file(&pool_path).unwrap();
+}

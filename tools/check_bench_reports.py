@@ -17,7 +17,13 @@ import json
 import pathlib
 import sys
 
-REPORTS = ["BENCH_codec.json", "BENCH_io.json", "BENCH_archive.json", "BENCH_recover.json"]
+REPORTS = [
+    "BENCH_codec.json",
+    "BENCH_io.json",
+    "BENCH_archive.json",
+    "BENCH_recover.json",
+    "BENCH_serve.json",
+]
 COMMITTED_DIR = pathlib.Path(sys.argv[1] if len(sys.argv) > 1 else "/tmp")
 
 
