@@ -59,13 +59,17 @@ fn main() {
     );
 
     // Satellite: the cache counters flow through the standard Metrics
-    // report — fold in the busiest cell and render it.
+    // report — fold in the busiest cell (once, via the absorb helpers)
+    // and render it.
     if let Some(p) = profiles.iter().max_by_key(|p| (p.sessions, p.budget_bytes)) {
         let m = Metrics::new();
-        Metrics::add(&m.cache_hits, p.cache_hits);
-        Metrics::add(&m.cache_misses, p.cache_misses);
-        Metrics::add(&m.cache_evictions, p.cache_evictions);
-        Metrics::add(&m.cache_waits, p.single_flight_waits);
+        m.absorb_cache(&scda::io::CacheStats {
+            hits: p.cache_hits,
+            misses: p.cache_misses,
+            evictions: p.cache_evictions,
+            single_flight_waits: p.single_flight_waits,
+            ..Default::default()
+        });
         Metrics::add(&m.read_calls, p.shared_preads);
         println!(
             "\ncache counters at s{} b{} via Metrics:\n{}",

@@ -19,6 +19,7 @@ use crate::format::padding::LineStyle;
 use crate::format::section::SectionMeta;
 use crate::io::engine::{build_engine, EngineStats, IoEngine};
 use crate::io::{IoTuning, PageCache};
+use crate::obs::trace::{encode_spans, merge_frames, SpanGuard, SpanKind, Tracer};
 use crate::par::comm::Communicator;
 use crate::par::pfile::{IoStats, ParallelFile};
 use crate::par::pool::CodecPool;
@@ -124,6 +125,11 @@ pub struct ScdaFile<C: Communicator> {
     /// Dedicated pool for async background flush; `None` borrows the
     /// shared codec pool.
     pub(crate) flush_pool: Option<Arc<CodecPool>>,
+    /// Span recorder for this rank ([`crate::obs`]); `None` (the
+    /// default) keeps every instrumentation site a single branch.
+    /// Installing one is collective — all ranks or none — because
+    /// `close` merges the per-rank timelines with an allgather.
+    pub(crate) tracer: Option<Arc<Tracer>>,
     /// The transport every positional read/write routes through.
     pub(crate) engine: Box<dyn IoEngine>,
     /// Set by `close`; guards the drop-path drain.
@@ -161,7 +167,7 @@ impl<C: Communicator> ScdaFile<C> {
         let style = LineStyle::Unix;
         let header = encode_file_header(VENDOR_STRING, user, style)?;
         let tuning = IoTuning::default();
-        let engine = build_engine(&tuning, false, &file, None, None)?;
+        let engine = build_engine(&tuning, false, &file, None, None, None)?;
         let mut f = ScdaFile {
             comm,
             file,
@@ -176,6 +182,7 @@ impl<C: Communicator> ScdaFile<C> {
             tuning,
             page_cache: None,
             flush_pool: None,
+            tracer: None,
             engine,
             closed: false,
             lockstep_scan: false,
@@ -195,7 +202,7 @@ impl<C: Communicator> ScdaFile<C> {
     pub fn open(comm: C, path: impl AsRef<Path>) -> Result<Self> {
         let file = Arc::new(ParallelFile::open_read(&comm, path.as_ref())?);
         let tuning = IoTuning::default();
-        let mut engine = build_engine(&tuning, true, &file, None, None)?;
+        let mut engine = build_engine(&tuning, true, &file, None, None, None)?;
         // Route the header read through the engine: a sieved engine's
         // window also covers the first sections' header rows.
         let bytes = engine.read_vec(&file, 0, FILE_HEADER_BYTES)?;
@@ -214,6 +221,7 @@ impl<C: Communicator> ScdaFile<C> {
             tuning,
             page_cache: None,
             flush_pool: None,
+            tracer: None,
             engine,
             closed: false,
             lockstep_scan: false,
@@ -234,8 +242,9 @@ impl<C: Communicator> ScdaFile<C> {
         header: FileHeader,
         tuning: IoTuning,
         cache: Option<Arc<PageCache>>,
+        tracer: Option<Arc<Tracer>>,
     ) -> Result<Self> {
-        let engine = build_engine(&tuning, true, &file, cache.as_ref(), None)?;
+        let engine = build_engine(&tuning, true, &file, cache.as_ref(), None, tracer.as_ref())?;
         Ok(ScdaFile {
             comm,
             file,
@@ -250,6 +259,7 @@ impl<C: Communicator> ScdaFile<C> {
             tuning,
             page_cache: cache,
             flush_pool: None,
+            tracer,
             engine,
             closed: false,
             lockstep_scan: false,
@@ -343,6 +353,7 @@ impl<C: Communicator> ScdaFile<C> {
             &self.file,
             self.page_cache.as_ref(),
             self.flush_pool.as_ref(),
+            self.tracer.as_ref(),
         )
     }
 
@@ -363,6 +374,32 @@ impl<C: Communicator> ScdaFile<C> {
     /// The shared page cache backing this file's reads, if any.
     pub fn page_cache(&self) -> Option<&Arc<PageCache>> {
         self.page_cache.as_ref()
+    }
+
+    /// Install a span recorder ([`crate::obs::Tracer`]) on this file
+    /// (`None` removes it). Collective like [`Self::set_io_tuning`] —
+    /// the engine is drained and rebuilt so its transport spans land on
+    /// the new tracer — and must be called on **all ranks or none**:
+    /// `close` merges the per-rank timelines with an allgather, which
+    /// would deadlock if only some ranks participate. Tracing never
+    /// changes the file bytes or the syscall/collective schedule.
+    pub fn set_tracer(&mut self, tracer: Option<Arc<Tracer>>) -> Result<&mut Self> {
+        self.engine.flush(&self.file, &self.comm)?;
+        self.tracer = tracer;
+        let t = self.tuning;
+        self.engine = self.rebuild_engine(&t)?;
+        Ok(self)
+    }
+
+    /// The installed span recorder, if any.
+    pub fn tracer(&self) -> Option<&Arc<Tracer>> {
+        self.tracer.as_ref()
+    }
+
+    /// Open a span of `kind` on the installed tracer (one branch when
+    /// tracing is off) — the section paths' instrumentation primitive.
+    pub(crate) fn span(&self, kind: SpanKind) -> Option<SpanGuard> {
+        self.tracer.as_ref().map(|t| Tracer::start(t, kind))
     }
 
     /// Run async background flush on a dedicated pool instead of the
@@ -623,7 +660,25 @@ impl<C: Communicator> ScdaFile<C> {
             // the checkpoint is not durable for anyone.
             self.agree(sync_local)?;
         }
+        self.merge_trace();
         Ok(())
+    }
+
+    /// Close-time cross-rank timeline merge: every rank contributes its
+    /// recorded spans as one wire frame over `allgather_bytes`, and rank
+    /// 0 stores the merged, time-ordered timeline on its tracer
+    /// ([`Tracer::merged`]). Collective — which is why installing a
+    /// tracer must itself be all-ranks-or-none. Runs only on the success
+    /// path: after an error the collective call discipline is already
+    /// forfeit, and a partial timeline is still readable per rank via
+    /// [`Tracer::snapshot`].
+    fn merge_trace(&mut self) {
+        if let Some(t) = &self.tracer {
+            let frames = self.comm.allgather_bytes(encode_spans(&t.snapshot()));
+            if self.comm.rank() == 0 {
+                t.set_merged(merge_frames(&frames));
+            }
+        }
     }
 }
 

@@ -219,6 +219,7 @@ impl<C: Communicator> ScdaFile<C> {
     /// `root` rank (`Some`), `None` elsewhere. Pass `want = false` on root
     /// to skip (the paper's NULL).
     pub fn read_inline_data(&mut self, root: usize, want: bool) -> Result<Option<[u8; 32]>> {
+        let mut span = self.span(crate::obs::SpanKind::SectionRead);
         let pending = std::mem::replace(&mut self.pending, Pending::None);
         let Pending::Raw { meta, payload_off } = pending else {
             return Err(call_seq("read_inline_data without a pending raw section"));
@@ -232,6 +233,9 @@ impl<C: Communicator> ScdaFile<C> {
         } else {
             None
         };
+        if let Some(s) = span.as_mut() {
+            s.set_bytes(if out.is_some() { INLINE_DATA_BYTES as u64 } else { 0 });
+        }
         self.cursor += meta.total_len(None) as u64;
         self.comm.barrier();
         Ok(out)
@@ -240,6 +244,7 @@ impl<C: Communicator> ScdaFile<C> {
     /// `scda_fread_block_data` (§A.5.3): the block bytes on `root`
     /// (decoded if the header was). `want = false` skips on root.
     pub fn read_block_data(&mut self, root: usize, want: bool) -> Result<Option<Vec<u8>>> {
+        let mut span = self.span(crate::obs::SpanKind::SectionRead);
         let pending = std::mem::replace(&mut self.pending, Pending::None);
         match pending {
             Pending::Raw { meta, payload_off } => {
@@ -251,6 +256,9 @@ impl<C: Communicator> ScdaFile<C> {
                 } else {
                     None
                 };
+                if let Some(s) = span.as_mut() {
+                    s.set_bytes(out.as_ref().map_or(0, |v| v.len() as u64));
+                }
                 self.cursor += meta.total_len(None) as u64;
                 self.comm.barrier();
                 Ok(out)
@@ -269,6 +277,9 @@ impl<C: Communicator> ScdaFile<C> {
                 } else {
                     None
                 };
+                if let Some(s) = span.as_mut() {
+                    s.set_bytes(out.as_ref().map_or(0, |v| v.len() as u64));
+                }
                 self.cursor += meta.total_len(None) as u64;
                 self.comm.barrier();
                 Ok(out)
@@ -283,6 +294,10 @@ impl<C: Communicator> ScdaFile<C> {
     /// participates in the collective.
     pub fn read_array_data(&mut self, part: &Partition, elem_size: u64, want: bool) -> Result<Option<Vec<u8>>> {
         self.check_partition(part)?;
+        let mut span = self.span(crate::obs::SpanKind::SectionRead);
+        if let Some(s) = span.as_mut() {
+            s.set_bytes(if want { part.count(self.comm.rank()) * elem_size } else { 0 });
+        }
         let pending = std::mem::replace(&mut self.pending, Pending::None);
         match pending {
             Pending::Raw { meta, payload_off } => {
@@ -351,6 +366,10 @@ impl<C: Communicator> ScdaFile<C> {
                 usage::BUFFER_SIZE,
                 format!("buffer has {} bytes for {np} elements of {elem_size}", buf.len()),
             ));
+        }
+        let mut span = self.span(crate::obs::SpanKind::SectionRead);
+        if let Some(s) = span.as_mut() {
+            s.set_bytes(buf.len() as u64);
         }
         let pending = std::mem::replace(&mut self.pending, Pending::None);
         match pending {
@@ -426,6 +445,10 @@ impl<C: Communicator> ScdaFile<C> {
         want: bool,
     ) -> Result<Option<Vec<u8>>> {
         self.check_partition(part)?;
+        let mut span = self.span(crate::obs::SpanKind::SectionRead);
+        if let Some(s) = span.as_mut() {
+            s.set_bytes(if want { local_sizes.iter().sum() } else { 0 });
+        }
         let pending = std::mem::replace(&mut self.pending, Pending::None);
         let Pending::VarraySized(inner) = pending else {
             return Err(call_seq("read_varray_data before read_varray_sizes"));
@@ -497,6 +520,10 @@ impl<C: Communicator> ScdaFile<C> {
                 usage::BUFFER_SIZE,
                 format!("buffer has {} bytes, sizes sum to {local_bytes}", buf.len()),
             ));
+        }
+        let mut span = self.span(crate::obs::SpanKind::SectionRead);
+        if let Some(s) = span.as_mut() {
+            s.set_bytes(buf.len() as u64);
         }
         let pending = std::mem::replace(&mut self.pending, Pending::None);
         let Pending::VarraySized(inner) = pending else {
@@ -599,6 +626,7 @@ impl<C: Communicator> ScdaFile<C> {
     /// section's extent (catalog `byte_len`), which a range read cannot
     /// derive without summing all size rows.
     pub(crate) fn read_array_range_data(&mut self, first: u64, count: u64, section_end: u64) -> Result<Vec<u8>> {
+        let mut span = self.span(crate::obs::SpanKind::SectionRead);
         let pending = std::mem::replace(&mut self.pending, Pending::None);
         let out = match pending {
             Pending::Raw { meta, payload_off } => {
@@ -640,6 +668,9 @@ impl<C: Communicator> ScdaFile<C> {
                 return Err(call_seq("read_array_range_data without a pending array section"));
             }
         };
+        if let Some(s) = span.as_mut() {
+            s.set_bytes(out.len() as u64);
+        }
         self.cursor = section_end;
         Ok(out)
     }
@@ -658,6 +689,7 @@ impl<C: Communicator> ScdaFile<C> {
         count: u64,
         section_end: u64,
     ) -> Result<(Vec<u64>, Vec<u8>)> {
+        let mut span = self.span(crate::obs::SpanKind::SectionRead);
         let pending = std::mem::replace(&mut self.pending, Pending::None);
         let out = match pending {
             Pending::Raw { meta, payload_off } => {
@@ -702,6 +734,9 @@ impl<C: Communicator> ScdaFile<C> {
                 return Err(call_seq("read_varray_range_data without a pending varray section"));
             }
         };
+        if let Some(s) = span.as_mut() {
+            s.set_bytes(out.1.len() as u64);
+        }
         self.cursor = section_end;
         Ok(out)
     }
@@ -725,6 +760,7 @@ impl<C: Communicator> ScdaFile<C> {
         check_read_partition(part, count, self.comm.size())?;
         let rank = self.comm.rank();
         let (r_off, r_count) = (part.offset(rank), part.count(rank));
+        let mut span = self.span(crate::obs::SpanKind::SectionRead);
         let pending = std::mem::replace(&mut self.pending, Pending::None);
         let out = match pending {
             Pending::Raw { meta, payload_off } => {
@@ -768,6 +804,9 @@ impl<C: Communicator> ScdaFile<C> {
                 return Err(call_seq("read_array_range_data_part without a pending array section"));
             }
         };
+        if let Some(s) = span.as_mut() {
+            s.set_bytes(out.len() as u64);
+        }
         self.cursor = section_end;
         Ok(out)
     }
@@ -787,6 +826,7 @@ impl<C: Communicator> ScdaFile<C> {
         check_read_partition(part, count, self.comm.size())?;
         let rank = self.comm.rank();
         let (r_off, r_count) = (part.offset(rank) as usize, part.count(rank) as usize);
+        let mut span = self.span(crate::obs::SpanKind::SectionRead);
         let pending = std::mem::replace(&mut self.pending, Pending::None);
         let out = match pending {
             Pending::Raw { meta, payload_off } => {
@@ -833,6 +873,9 @@ impl<C: Communicator> ScdaFile<C> {
                 return Err(call_seq("read_varray_range_data_part without a pending varray section"));
             }
         };
+        if let Some(s) = span.as_mut() {
+            s.set_bytes(out.1.len() as u64);
+        }
         self.cursor = section_end;
         Ok(out)
     }

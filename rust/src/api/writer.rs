@@ -118,6 +118,10 @@ impl<C: Communicator> ScdaFile<C> {
     /// `data` must be `Some` on the root rank and is ignored elsewhere.
     pub fn write_inline_from(&mut self, root: usize, data: Option<&[u8]>, user: Option<&[u8]>) -> Result<()> {
         self.require_mode(OpenMode::Write, "write_inline")?;
+        let mut span = self.span(crate::obs::SpanKind::SectionWrite);
+        if let Some(s) = span.as_mut() {
+            s.set_bytes(INLINE_DATA_BYTES as u64);
+        }
         let user = user.unwrap_or(b"");
         if self.comm.rank() == root {
             let d = data.ok_or_else(|| {
@@ -162,6 +166,10 @@ impl<C: Communicator> ScdaFile<C> {
         encode: bool,
     ) -> Result<()> {
         self.require_mode(OpenMode::Write, "write_block")?;
+        let mut span = self.span(crate::obs::SpanKind::SectionWrite);
+        if let Some(s) = span.as_mut() {
+            s.set_bytes(len);
+        }
         let user = user.unwrap_or(b"");
         if self.comm.rank() == root {
             let d = data.ok_or_else(|| {
@@ -239,6 +247,10 @@ impl<C: Communicator> ScdaFile<C> {
         encode: bool,
     ) -> Result<()> {
         self.require_mode(OpenMode::Write, "write_array")?;
+        let mut span = self.span(crate::obs::SpanKind::SectionWrite);
+        if let Some(s) = span.as_mut() {
+            s.set_bytes(data.total_len());
+        }
         let user = user.unwrap_or(b"");
         self.check_partition(part)?;
         let np = part.count(self.comm.rank());
@@ -301,6 +313,10 @@ impl<C: Communicator> ScdaFile<C> {
         encode: bool,
     ) -> Result<()> {
         self.require_mode(OpenMode::Write, "write_varray")?;
+        let mut span = self.span(crate::obs::SpanKind::SectionWrite);
+        if let Some(s) = span.as_mut() {
+            s.set_bytes(data.total_len());
+        }
         let user = user.unwrap_or(b"");
         self.check_partition(part)?;
         let np = part.count(self.comm.rank());

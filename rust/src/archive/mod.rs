@@ -53,4 +53,4 @@ pub mod restart;
 
 pub use catalog::Archive;
 pub use dataset::{DatasetInfo, DatasetKind};
-pub use recover::{recover, RecoveryAction, RecoveryReport};
+pub use recover::{recover, recover_with, RecoveryAction, RecoveryReport};

@@ -33,6 +33,7 @@
 //! archive in parallel.
 
 use std::path::Path;
+use std::sync::Arc;
 
 use crate::api::query::{verified_prefix_file, RawSection};
 use crate::api::ScdaFile;
@@ -42,6 +43,7 @@ use crate::error::{corrupt, Result, ScdaError};
 use crate::format::limits::{CONV_ARRAY, CONV_BLOCK, CONV_VARRAY, FILE_HEADER_BYTES};
 use crate::format::padding::{pad_data, LineStyle};
 use crate::format::section::{encode_section_header, SectionKind, SectionMeta};
+use crate::obs::trace::{SpanKind, Tracer};
 use crate::par::SerialComm;
 
 /// What [`recover`] did to the file.
@@ -104,7 +106,20 @@ fn trailer_consistent(path: &Path) -> bool {
 /// 128-byte header (no valid prefix to salvage) or when the rebuilt
 /// file fails re-verification.
 pub fn recover(path: impl AsRef<Path>) -> Result<RecoveryReport> {
+    recover_with(path, None)
+}
+
+/// [`recover`] with an optional span recorder: the walk, rebuild and
+/// re-verify phases each record one span (`recover_walk`,
+/// `recover_rebuild`, `recover_verify`) so a recovery run shows up on
+/// the same timeline as the workload around it. `tracer = None` is
+/// exactly [`recover`].
+pub fn recover_with(
+    path: impl AsRef<Path>,
+    tracer: Option<&Arc<Tracer>>,
+) -> Result<RecoveryReport> {
     let path = path.as_ref();
+    let mut walk_span = tracer.map(|t| Tracer::start(t, SpanKind::RecoverWalk));
     let prefix = verified_prefix_file(path)?;
     let original_len = prefix
         .sections
@@ -114,6 +129,10 @@ pub fn recover(path: impl AsRef<Path>) -> Result<RecoveryReport> {
         .unwrap_or(FILE_HEADER_BYTES as u64);
     let file_len = std::fs::metadata(path).map_err(|e| ScdaError::io(e, "stat"))?.len();
     debug_assert!(original_len <= file_len);
+    if let Some(s) = walk_span.as_mut() {
+        s.set_bytes(original_len);
+    }
+    drop(walk_span);
 
     // Intact means: verify-clean, and either no trailer at all (a plain
     // scda file is not damaged — recovery repairs, it does not convert)
@@ -138,6 +157,7 @@ pub fn recover(path: impl AsRef<Path>) -> Result<RecoveryReport> {
     }
 
     // Drop what cannot stand on its own at the tail, then truncate.
+    let mut rebuild_span = tracer.map(|t| Tracer::start(t, SpanKind::RecoverRebuild));
     let mut sections = prefix.sections;
     while sections.last().is_some_and(must_drop_from_tail) {
         sections.pop();
@@ -176,9 +196,17 @@ pub fn recover(path: impl AsRef<Path>) -> Result<RecoveryReport> {
             .map_err(|e| ScdaError::io(e, "writing the recovered trailer"))?;
         file.sync_all().map_err(|e| ScdaError::io(e, "syncing the recovered file"))?;
     }
+    if let Some(s) = rebuild_span.as_mut() {
+        s.set_bytes(file_len - good_end);
+    }
+    drop(rebuild_span);
 
     // The gate: a recovered file must pass the same strict verification
     // as any other scda file, or recovery itself failed.
+    let mut verify_span = tracer.map(|t| Tracer::start(t, SpanKind::RecoverVerify));
+    if let Some(s) = verify_span.as_mut() {
+        s.set_bytes(good_end + trailer.len() as u64);
+    }
     crate::api::verify_file(path).map_err(|e| {
         ScdaError::corrupt(
             corrupt::TRUNCATED,

@@ -969,6 +969,7 @@ pub mod serve_bench {
     use super::JsonVal;
     use crate::api::DataSrc;
     use crate::archive::Archive;
+    use crate::obs::Hist;
     use crate::par::{Partition, SerialComm};
     use crate::runtime::{ArchiveReadService, ReadRequest, ReadResponse, ReadServiceConfig};
     use crate::testutil::Rng;
@@ -1094,31 +1095,27 @@ pub mod serve_bench {
         cache: Option<crate::io::CacheStats>,
     }
 
-    fn percentile_us(sorted: &[u64], q: f64) -> f64 {
-        if sorted.is_empty() {
-            return 0.0;
-        }
-        let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
-        sorted[idx] as f64 / 1e3
-    }
-
     /// Serve every session's request list concurrently (one thread per
-    /// session) and fold the per-request latencies into throughput and
-    /// tail numbers. `budget == 0` is the baseline: no shared cache,
-    /// each session on its private sieve.
+    /// session), recording per-request latencies into one shared
+    /// [`Hist`] — the same definition of p50/p99 the tracer's per-kind
+    /// histograms report, so "p99" means one thing everywhere (upper
+    /// bucket edge, within an octave; see `crate::obs::hist`).
+    /// `budget == 0` is the baseline: no shared cache, each session on
+    /// its private sieve.
     fn serve_once(path: &Path, budget: usize, reqs: &[Vec<ReadRequest>]) -> RunStats {
         let cfg = ReadServiceConfig { cache_budget: budget, ..Default::default() };
         let svc = ArchiveReadService::open_with(path, cfg).unwrap();
         let preads0 = svc.io_stats().read_calls;
         let workers: Vec<_> =
             reqs.iter().map(|list| (svc.session().unwrap(), list.as_slice())).collect();
+        let hist = Hist::new();
         let t0 = Instant::now();
-        let per_thread: Vec<(Vec<u64>, u64)> = std::thread::scope(|sc| {
+        let per_thread: Vec<u64> = std::thread::scope(|sc| {
             let handles: Vec<_> = workers
                 .into_iter()
                 .map(|(mut sess, list)| {
+                    let hist = &hist;
                     sc.spawn(move || {
-                        let mut lat = Vec::with_capacity(list.len());
                         let mut bytes = 0u64;
                         for req in list {
                             let t = Instant::now();
@@ -1126,26 +1123,20 @@ pub mod serve_bench {
                                 ReadResponse::Array(v) => bytes += v.len() as u64,
                                 ReadResponse::Varray { data, .. } => bytes += data.len() as u64,
                             }
-                            lat.push(t.elapsed().as_nanos() as u64);
+                            hist.record(t.elapsed().as_nanos() as u64);
                         }
-                        (lat, bytes)
+                        bytes
                     })
                 })
                 .collect();
             handles.into_iter().map(|h| h.join().unwrap()).collect()
         });
         let wall = t0.elapsed().as_secs_f64().max(1e-9);
-        let mut lat = Vec::new();
-        let mut bytes_served = 0u64;
-        for (l, b) in per_thread {
-            lat.extend(l);
-            bytes_served += b;
-        }
-        lat.sort_unstable();
+        let bytes_served = per_thread.into_iter().sum();
         RunStats {
-            rps: lat.len() as f64 / wall,
-            p50_us: percentile_us(&lat, 0.50),
-            p99_us: percentile_us(&lat, 0.99),
+            rps: hist.count() as f64 / wall,
+            p50_us: hist.p50_us(),
+            p99_us: hist.p99_us(),
             preads: svc.io_stats().read_calls - preads0,
             bytes_served,
             cache: svc.cache_stats(),

@@ -51,21 +51,39 @@ COMMANDS:
                                index over the surviving sections, and report
                                what survived; intact files are untouched
   demo-write <file> [--ranks P] [--encode] [--precondition]
-             [--frame-precond <width[d]>]
+             [--frame-precond <width[d]>] [--stats-json <path>]
                                write an AMR demo checkpoint on P simulated
                                ranks (base/max level via --base/--max);
+                               --stats-json dumps the run's Metrics as JSON;
                                --frame-precond writes encoded fields as
                                self-describing 'p' frames (byte shuffle by
                                <width>, trailing 'd' adds per-plane delta)
   restart <file> [--ranks P]   read a checkpoint on P ranks and report
   serve-bench <file> [--sessions N] [--requests K] [--count C]
-              [--budget-kib B]
+              [--budget-kib B] [--stats-json <path>]
                                concurrent read-service benchmark: N client
                                sessions fire K random range requests of C
                                elements each at one shared archive, once
                                through a B KiB shared page cache and once
                                over per-session sieves, reporting req/s,
-                               pread counts and the cache counters
+                               pread counts and the cache counters;
+                               --stats-json also writes them as JSON
+  stats <file> [--json] [--stats-json <path>]
+                               read every range-addressable dataset once
+                               through the read service and report the
+                               pipeline counters (Metrics), the handle's
+                               syscall counters, the session engine stats
+                               and the shared-cache counters; --json
+                               prints one JSON document, --stats-json
+                               writes it to <path>
+  trace <file> <out.json> [--ranks P]
+                               run a traced demo workload — a collective
+                               checkpoint write on P simulated ranks, then
+                               a cached read-service leg — merge every
+                               rank's spans into one timeline, write it as
+                               Chrome trace-event JSON (load in
+                               chrome://tracing or ui.perfetto.dev) and
+                               print the per-kind latency histograms
   version                      print version and backend information
 
 Errors exit nonzero and print `scda error <code>: <message>`.";
@@ -88,6 +106,8 @@ pub fn run(argv: impl IntoIterator<Item = String>) -> i32 {
         "demo-write" => cmd_demo_write(&args),
         "restart" => cmd_restart(&args),
         "serve-bench" => cmd_serve_bench(&args),
+        "stats" => cmd_stats(&args),
+        "trace" => cmd_trace(&args),
         "version" => {
             println!(
                 "scda 0.1.0 (format scdata0; vendor {:?})",
@@ -507,12 +527,229 @@ fn cmd_serve_bench(args: &Args) -> CliResult {
         let m = Metrics::new();
         Metrics::add(&m.bytes_read, shared_bytes);
         Metrics::add(&m.read_calls, shared_preads);
-        Metrics::add(&m.cache_hits, cs.hits);
-        Metrics::add(&m.cache_misses, cs.misses);
-        Metrics::add(&m.cache_evictions, cs.evictions);
-        Metrics::add(&m.cache_waits, cs.single_flight_waits);
+        // The shared-cache leg's single fold site: the pool view, once.
+        m.absorb_cache(&cs);
         println!("{}", m.report());
+        if let Some(out) = args.get("stats-json") {
+            write_json_file(out, &stats_doc(&m, None, None, Some(&cs)))?;
+            println!("wrote {out}");
+        }
     }
+    Ok(())
+}
+
+/// Render a flat `{"k": v, ...}` object from numeric counter pairs.
+fn json_num_obj(pairs: &[(&str, u64)]) -> String {
+    let mut out = String::from("{");
+    for (i, (k, v)) in pairs.iter().enumerate() {
+        if i > 0 {
+            out.push_str(", ");
+        }
+        out.push_str(&format!("{}: {v}", json_str(k)));
+    }
+    out.push('}');
+    out
+}
+
+/// One JSON document holding every counter family a run exposes: the
+/// folded [`Metrics`] snapshot plus whichever of the handle syscall
+/// counters, engine stats and shared-cache counters the caller has a
+/// handle to (`cache` renders as `null` when the pool is disabled, and
+/// the other sections are omitted entirely when unavailable).
+fn stats_doc(
+    m: &Metrics,
+    io: Option<&crate::par::pfile::IoStats>,
+    engine: Option<&crate::io::EngineStats>,
+    cache: Option<&crate::io::CacheStats>,
+) -> String {
+    let mut out = String::from("{\n  \"metrics\": ");
+    out.push_str(&json_num_obj(&m.snapshot()));
+    if let Some(io) = io {
+        out.push_str(",\n  \"io\": ");
+        out.push_str(&json_num_obj(&[
+            ("write_calls", io.write_calls),
+            ("write_bytes", io.write_bytes),
+            ("read_calls", io.read_calls),
+            ("read_bytes", io.read_bytes),
+            ("stat_calls", io.stat_calls),
+        ]));
+    }
+    if let Some(es) = engine {
+        let nums = json_num_obj(&[
+            ("shipped_bytes", es.shipped_bytes),
+            ("exchanges", es.exchanges),
+            ("flush_batches", es.flush_batches),
+            ("sieve_refills", es.sieve_refills),
+            ("read_exchanges", es.read_exchanges),
+            ("gathered_bytes", es.gathered_bytes),
+            ("gather_preads", es.gather_preads),
+            ("sieve_grows", es.sieve_grows),
+            ("sieve_shrinks", es.sieve_shrinks),
+            ("cache_hits", es.cache_hits),
+            ("cache_misses", es.cache_misses),
+            ("cache_waits", es.cache_waits),
+        ]);
+        // Splice the engine-name string ahead of the numeric fields.
+        out.push_str(",\n  \"engine\": ");
+        out.push_str(&format!("{{\"engine\": {}, {}", json_str(es.engine), &nums[1..]));
+    }
+    out.push_str(",\n  \"cache\": ");
+    match cache {
+        Some(cs) => out.push_str(&json_num_obj(&[
+            ("hits", cs.hits),
+            ("misses", cs.misses),
+            ("evictions", cs.evictions),
+            ("single_flight_waits", cs.single_flight_waits),
+            ("fill_preads", cs.fill_preads),
+            ("filled_bytes", cs.filled_bytes),
+            ("resident_bytes", cs.resident_bytes),
+            ("resident_pages", cs.resident_pages),
+        ])),
+        None => out.push_str("null"),
+    }
+    out.push_str("\n}");
+    out
+}
+
+fn write_json_file(path: &str, doc: &str) -> CliResult {
+    std::fs::write(path, doc)
+        .map_err(|e| CliError::Scda(ScdaError::io(e, format!("writing {path}"))))
+}
+
+/// `scda stats <file>`: read every range-addressable dataset once
+/// through the read service and report the counters — the standard
+/// `Metrics` report by default, one JSON document with `--json` /
+/// `--stats-json <path>`. The fold follows the exactly-once rule: the
+/// handle's read counters plus the *pool* view of the cache (the
+/// engine's cache counters describe the same events and are skipped).
+fn cmd_stats(args: &Args) -> CliResult {
+    use crate::runtime::{ArchiveReadService, ReadRequest, ReadResponse, ReadServiceConfig};
+    let path = args.positional(0, "file argument")?;
+    let svc = ArchiveReadService::open_with(path, ReadServiceConfig::default())?;
+    let targets: Vec<(String, u64)> = svc
+        .datasets()
+        .iter()
+        .filter(|d| {
+            matches!(
+                d.kind,
+                crate::archive::DatasetKind::Array | crate::archive::DatasetKind::Varray
+            ) && d.elem_count > 0
+        })
+        .map(|d| (d.name.clone(), d.elem_count))
+        .collect();
+    let mut sess = svc.session()?;
+    let mut payload = 0u64;
+    for (name, count) in &targets {
+        let req = ReadRequest { dataset: name.clone(), first: 0, count: *count };
+        match sess.serve(&req)? {
+            ReadResponse::Array(v) => payload += v.len() as u64,
+            ReadResponse::Varray { data, .. } => payload += data.len() as u64,
+        }
+    }
+    let engine = sess.archive().file().engine_stats();
+    sess.close()?;
+    let io = svc.io_stats();
+    let cache = svc.cache_stats();
+    let m = Metrics::new();
+    m.absorb_io_read(&io);
+    if let Some(cs) = &cache {
+        m.absorb_cache(cs);
+    }
+    let doc = stats_doc(&m, Some(&io), Some(&engine), cache.as_ref());
+    if let Some(out) = args.get("stats-json") {
+        write_json_file(out, &doc)?;
+        println!("wrote {out}");
+    }
+    if args.flag("json") {
+        println!("{doc}");
+    } else if args.get("stats-json").is_none() {
+        println!("{path}: {} dataset(s), {payload} payload bytes", targets.len());
+        println!("{}", m.report());
+        println!(
+            "engine {}: {} exchange(s), {} read exchange(s), {} sieve refill(s)",
+            engine.engine, engine.exchanges, engine.read_exchanges, engine.sieve_refills
+        );
+    }
+    Ok(())
+}
+
+/// `scda trace <file> <out.json>`: run a traced demo workload and write
+/// the merged all-rank timeline as Chrome trace-event JSON. Leg one is
+/// a collective checkpoint-style write on P simulated ranks — every
+/// rank records into its own span ring and `finish()` merges them over
+/// the allgather plane, so rank 0 returns one ordered timeline with
+/// stage/exchange/pwrite spans from all ranks. Leg two replays reads
+/// through a cached read service (serve + cache-fill spans). Both legs
+/// share the process-wide clock epoch, so their timestamps align in
+/// one viewer.
+fn cmd_trace(args: &Args) -> CliResult {
+    use crate::api::DataSrc;
+    use crate::archive::Archive;
+    use crate::io::IoTuning;
+    use crate::obs::{histogram_table, write_chrome_trace, Span, Tracer};
+    use crate::runtime::{ArchiveReadService, ReadRequest, ReadServiceConfig};
+    let path = PathBuf::from(args.positional(0, "file argument")?);
+    let out = PathBuf::from(args.positional(1, "output timeline path")?);
+    let ranks: usize = args.get_parse("ranks", 4)?;
+    if ranks == 0 {
+        return Err(CliError::Usage("--ranks must be nonzero".into()));
+    }
+    let elems = 4096u64;
+    let part = Arc::new(Partition::uniform(ranks, elems));
+    let pathc = path.clone();
+    let part2 = Arc::clone(&part);
+    let legs: Vec<Result<Vec<Span>, String>> = run_parallel(ranks, move |comm| {
+        let rank = comm.rank();
+        let tracer = Arc::new(Tracer::for_rank(rank));
+        let t2 = Arc::clone(&tracer);
+        // Borrows `pathc`/`part2` from the shared outer closure;
+        // `comm` and `t2` are consumed.
+        let res = (|| -> crate::error::Result<()> {
+            let mut ar = Archive::create(comm, &pathc, b"scda trace demo")?;
+            // Small stripes so every rank owns stripes of this small
+            // demo file and the timeline shows pwrites on every row.
+            ar.file_mut().set_io_tuning(IoTuning::collective().with_stripe_size(8 << 10))?;
+            ar.file_mut().set_tracer(Some(t2))?;
+            let r = part2.local_range(rank);
+            let a: Vec<u8> = (r.start * 8..r.end * 8).map(|i| (i % 251) as u8).collect();
+            let b: Vec<u8> = (r.start * 32..r.end * 32).map(|i| (i % 241) as u8).collect();
+            ar.write_array("trace/a", DataSrc::Contiguous(&a), &part2, 8, false)?;
+            ar.write_array("trace/b", DataSrc::Contiguous(&b), &part2, 32, true)?;
+            ar.finish()
+        })();
+        match res {
+            // After a successful close, rank 0 holds the merged
+            // all-rank timeline; other ranks contribute nothing here.
+            Ok(()) => Ok(tracer.merged().unwrap_or_default()),
+            Err(e) => Err(e.to_string()),
+        }
+    });
+    let mut spans: Vec<Span> = Vec::new();
+    for leg in legs {
+        spans.extend(leg.map_err(CliError::Usage)?);
+    }
+    // Leg two: a cached read-service replay over the file just written.
+    // Repeated ranges make the cache show both fill and hit behaviour.
+    let serve_tracer = Arc::new(Tracer::for_rank(0));
+    let cfg = ReadServiceConfig {
+        cache_budget: 1 << 20,
+        tracer: Some(Arc::clone(&serve_tracer)),
+        ..Default::default()
+    };
+    let svc = ArchiveReadService::open_with(&path, cfg)?;
+    let mut sess = svc.session()?;
+    for first in [0u64, 1024, 0, 2048, 1024] {
+        sess.serve(&ReadRequest { dataset: "trace/a".into(), first, count: 512 })?;
+    }
+    for first in [0u64, 512, 0] {
+        sess.serve(&ReadRequest { dataset: "trace/b".into(), first, count: 256 })?;
+    }
+    sess.close()?;
+    spans.extend(serve_tracer.snapshot());
+    write_chrome_trace(&out, &spans)
+        .map_err(|e| CliError::Scda(ScdaError::io(e, format!("writing {}", out.display()))))?;
+    println!("traced {} span(s) across {ranks} rank(s) -> {}", spans.len(), out.display());
+    println!("{}", histogram_table(&spans));
     Ok(())
 }
 
@@ -590,6 +827,10 @@ fn cmd_demo_write(args: &Args) -> CliResult {
     let bytes = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
     println!("wrote {} ({bytes} bytes)", path.display());
     println!("{}", metrics.report());
+    if let Some(out) = args.get("stats-json") {
+        write_json_file(out, &stats_doc(&metrics, None, None, None))?;
+        println!("wrote {out}");
+    }
     Ok(())
 }
 
@@ -739,6 +980,61 @@ mod tests {
         assert_ne!(run_words(&["serve-bench", p, "--count", "99999999"]), 0);
         assert_ne!(run_words(&["serve-bench", "/nonexistent.scda"]), 0);
         std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn trace_writes_a_chrome_timeline_with_all_ranks() {
+        let path = tmpfile("cli-trace");
+        let p = path.to_str().unwrap();
+        let out = std::env::temp_dir()
+            .join("scda-cli")
+            .join(format!("trace-{}.json", std::process::id()));
+        let o = out.to_str().unwrap();
+        assert_eq!(run_words(&["trace", p, o, "--ranks", "4"]), 0);
+        let text = std::fs::read_to_string(&out).unwrap();
+        assert!(text.contains("\"traceEvents\""));
+        // Spans from every phase the acceptance criteria name, plus the
+        // writer sections.
+        for kind in ["stage", "exchange", "pwrite", "cache_fill", "serve", "section_write"] {
+            assert!(text.contains(&format!("\"name\": \"{kind}\"")), "missing {kind} spans");
+        }
+        // All four write ranks appear as distinct timeline threads.
+        for tid in 0..4 {
+            assert!(text.contains(&format!("\"tid\": {tid}")), "missing rank {tid}");
+        }
+        // The demo file the traced run wrote is a verifiable archive.
+        assert_eq!(run_words(&["verify", p]), 0);
+        assert_ne!(run_words(&["trace", p]), 0);
+        assert_ne!(run_words(&["trace", p, o, "--ranks", "0"]), 0);
+        std::fs::remove_file(&path).unwrap();
+        std::fs::remove_file(&out).unwrap();
+    }
+
+    #[test]
+    fn stats_reports_counters_as_json() {
+        let path = tmpfile("cli-stats");
+        let p = path.to_str().unwrap();
+        let out = std::env::temp_dir()
+            .join("scda-cli")
+            .join(format!("stats-{}.json", std::process::id()));
+        let o = out.to_str().unwrap();
+        assert_eq!(
+            run_words(&[
+                "demo-write", p, "--ranks", "2", "--base", "2", "--max", "3", "--stats-json", o,
+            ]),
+            0
+        );
+        assert!(std::fs::read_to_string(&out).unwrap().contains("\"metrics\""));
+        assert_eq!(run_words(&["stats", p, "--json"]), 0);
+        assert_eq!(run_words(&["stats", p]), 0);
+        assert_eq!(run_words(&["stats", p, "--stats-json", o]), 0);
+        let text = std::fs::read_to_string(&out).unwrap();
+        for section in ["\"metrics\"", "\"io\"", "\"engine\"", "\"cache\"", "\"read_calls\""] {
+            assert!(text.contains(section), "missing {section}");
+        }
+        assert_ne!(run_words(&["stats", "/nonexistent.scda"]), 0);
+        std::fs::remove_file(&path).unwrap();
+        std::fs::remove_file(&out).unwrap();
     }
 
     #[test]

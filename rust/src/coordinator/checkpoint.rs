@@ -219,11 +219,10 @@ pub fn write_checkpoint_with<C: Communicator>(
     // covers the real I/O, and the syscall counters cover the fields.
     // (`finish` then appends the catalog trailer, a few hundred bytes.)
     Metrics::timed(&metrics.ns_write, || ar.file_mut().flush())?;
-    let io = ar.file().io_stats();
-    let engine = ar.file().engine_stats();
-    Metrics::add(&metrics.bytes_written, io.write_bytes);
-    Metrics::add(&metrics.write_calls, io.write_calls);
-    Metrics::add(&metrics.bytes_shipped, engine.shipped_bytes);
+    // The run's single fold site for the write-side handle and engine
+    // counters (see the fold-in notes on `Metrics`).
+    metrics.absorb_io_write(&ar.file().io_stats());
+    metrics.absorb_engine(&ar.file().engine_stats());
     ar.finish()
 }
 
@@ -301,11 +300,10 @@ pub fn read_checkpoint_tuned<C: Communicator>(
     let mut ar = Archive::open_with(comm, path, tuning, true)?;
     let info = restart::read_manifest(&mut ar, None)?;
     let fields = restart::read_fields(&mut ar, &info, part, pre)?;
-    let io = ar.file().io_stats();
-    let engine = ar.file().engine_stats();
-    Metrics::add(&metrics.bytes_read, io.read_bytes);
-    Metrics::add(&metrics.read_calls, io.read_calls);
-    Metrics::add(&metrics.bytes_gathered, engine.gathered_bytes);
+    // The run's single fold site for the read-side handle and engine
+    // counters (see the fold-in notes on `Metrics`).
+    metrics.absorb_io_read(&ar.file().io_stats());
+    metrics.absorb_engine(&ar.file().engine_stats());
     ar.close()?;
     Ok((info, fields))
 }

@@ -5,6 +5,9 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
+use crate::io::{CacheStats, EngineStats};
+use crate::par::pfile::IoStats;
+
 /// Pipeline-wide counters; cheap to share behind an `Arc`.
 #[derive(Debug, Default)]
 pub struct Metrics {
@@ -64,6 +67,80 @@ impl Metrics {
         let out = f();
         counter.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
         out
+    }
+
+    // -----------------------------------------------------------------
+    // Stats fold-in
+    //
+    // The lower layers keep their own counters (`IoStats` on the file
+    // handle, `EngineStats` on the engine, `CacheStats` on the shared
+    // page pool). A run folds each of them into its `Metrics` exactly
+    // once — through these helpers, at report time, over *deltas* since
+    // the run's start — never incrementally along the way. One fold
+    // site per source per run is the invariant the
+    // `fold_in_is_exactly_once` test pins.
+    // -----------------------------------------------------------------
+
+    /// Fold the write-side syscall counters of an [`IoStats`] delta.
+    pub fn absorb_io_write(&self, io: &IoStats) {
+        Self::add(&self.bytes_written, io.write_bytes);
+        Self::add(&self.write_calls, io.write_calls);
+    }
+
+    /// Fold the read-side syscall counters of an [`IoStats`] delta.
+    pub fn absorb_io_read(&self, io: &IoStats) {
+        Self::add(&self.bytes_read, io.read_bytes);
+        Self::add(&self.read_calls, io.read_calls);
+    }
+
+    /// Fold an [`EngineStats`] snapshot: collective exchange volumes
+    /// plus the engine-observed shared-cache counters.
+    pub fn absorb_engine(&self, es: &EngineStats) {
+        Self::add(&self.bytes_shipped, es.shipped_bytes);
+        Self::add(&self.bytes_gathered, es.gathered_bytes);
+        Self::add(&self.cache_hits, es.cache_hits);
+        Self::add(&self.cache_misses, es.cache_misses);
+        Self::add(&self.cache_waits, es.cache_waits);
+    }
+
+    /// Fold a pool-global [`CacheStats`] snapshot — for paths that read
+    /// the shared cache directly (the read service) instead of through
+    /// a single engine's view. A run folds *either* the engine view or
+    /// the pool view, never both.
+    pub fn absorb_cache(&self, cs: &CacheStats) {
+        Self::add(&self.cache_hits, cs.hits);
+        Self::add(&self.cache_misses, cs.misses);
+        Self::add(&self.cache_evictions, cs.evictions);
+        Self::add(&self.cache_waits, cs.single_flight_waits);
+    }
+
+    /// Every counter as `(name, value)` pairs, in declaration order —
+    /// the machine-readable face of [`Self::report`] (`scda stats
+    /// --json` and the bench stats dumps render from this).
+    pub fn snapshot(&self) -> Vec<(&'static str, u64)> {
+        let g = |c: &AtomicU64| c.load(Ordering::Relaxed);
+        vec![
+            ("bytes_in", g(&self.bytes_in)),
+            ("bytes_transformed", g(&self.bytes_transformed)),
+            ("bytes_compressed", g(&self.bytes_compressed)),
+            ("bytes_written", g(&self.bytes_written)),
+            ("bytes_read", g(&self.bytes_read)),
+            ("write_calls", g(&self.write_calls)),
+            ("bytes_shipped", g(&self.bytes_shipped)),
+            ("read_calls", g(&self.read_calls)),
+            ("bytes_gathered", g(&self.bytes_gathered)),
+            ("cache_hits", g(&self.cache_hits)),
+            ("cache_misses", g(&self.cache_misses)),
+            ("cache_evictions", g(&self.cache_evictions)),
+            ("cache_waits", g(&self.cache_waits)),
+            ("elements_written", g(&self.elements_written)),
+            ("sections_written", g(&self.sections_written)),
+            ("chunks_skipped_incompressible", g(&self.chunks_skipped_incompressible)),
+            ("ns_generate", g(&self.ns_generate)),
+            ("ns_precondition", g(&self.ns_precondition)),
+            ("ns_compress", g(&self.ns_compress)),
+            ("ns_write", g(&self.ns_write)),
+        ]
     }
 
     /// Render a human-readable report.
@@ -138,6 +215,67 @@ mod tests {
         });
         assert_eq!(v, 42);
         assert!(m.ns_compress.load(Ordering::Relaxed) >= 2_000_000);
+    }
+
+    #[test]
+    fn fold_in_is_exactly_once() {
+        // The double-wiring regression: cache/engine counters folded
+        // both incrementally and at report time showed 2x. Each absorb
+        // helper is the single fold site, so metrics == source counters.
+        let m = Metrics::new();
+        let io = IoStats { write_calls: 3, write_bytes: 4096, read_calls: 5, read_bytes: 640, stat_calls: 1 };
+        m.absorb_io_write(&io);
+        m.absorb_io_read(&io);
+        let es = EngineStats {
+            shipped_bytes: 700,
+            gathered_bytes: 300,
+            cache_hits: 11,
+            cache_misses: 2,
+            cache_waits: 1,
+            ..Default::default()
+        };
+        m.absorb_engine(&es);
+        let g = |c: &AtomicU64| c.load(Ordering::Relaxed);
+        assert_eq!(g(&m.write_calls), 3);
+        assert_eq!(g(&m.bytes_written), 4096);
+        assert_eq!(g(&m.read_calls), 5);
+        assert_eq!(g(&m.bytes_read), 640);
+        assert_eq!(g(&m.bytes_shipped), 700);
+        assert_eq!(g(&m.bytes_gathered), 300);
+        assert_eq!(g(&m.cache_hits), 11);
+        assert_eq!(g(&m.cache_misses), 2);
+        assert_eq!(g(&m.cache_waits), 1);
+    }
+
+    #[test]
+    fn absorb_cache_maps_pool_counters() {
+        let m = Metrics::new();
+        let cs = CacheStats {
+            hits: 9,
+            misses: 4,
+            evictions: 2,
+            single_flight_waits: 3,
+            ..Default::default()
+        };
+        m.absorb_cache(&cs);
+        let g = |c: &AtomicU64| c.load(Ordering::Relaxed);
+        assert_eq!(g(&m.cache_hits), 9);
+        assert_eq!(g(&m.cache_misses), 4);
+        assert_eq!(g(&m.cache_evictions), 2);
+        assert_eq!(g(&m.cache_waits), 3);
+    }
+
+    #[test]
+    fn snapshot_names_match_values() {
+        let m = Metrics::new();
+        Metrics::add(&m.bytes_in, 7);
+        Metrics::add(&m.cache_hits, 3);
+        let snap = m.snapshot();
+        assert_eq!(snap.len(), 20);
+        let get = |n: &str| snap.iter().find(|(k, _)| *k == n).unwrap().1;
+        assert_eq!(get("bytes_in"), 7);
+        assert_eq!(get("cache_hits"), 3);
+        assert_eq!(get("ns_write"), 0);
     }
 
     #[test]

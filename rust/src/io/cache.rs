@@ -45,6 +45,7 @@ use std::sync::{Arc, Condvar, Mutex};
 
 use crate::error::{corrupt, Result, ScdaError};
 use crate::io::fault::retry_transient;
+use crate::obs::trace::{SpanKind, Tracer};
 use crate::par::pfile::ParallelFile;
 
 /// Default page size: large enough that a section's metadata rows fit in
@@ -133,6 +134,10 @@ pub struct PageCache {
     waits: AtomicU64,
     fill_preads: AtomicU64,
     filled_bytes: AtomicU64,
+    /// Span recorder for fill/wait attribution (`cache_fill` spans carry
+    /// the gather-pread bytes; `cache_wait` spans cover the condvar
+    /// block on another session's fill). `None` costs one branch.
+    tracer: Option<Arc<Tracer>>,
 }
 
 impl PageCache {
@@ -152,12 +157,21 @@ impl PageCache {
             waits: AtomicU64::new(0),
             fill_preads: AtomicU64::new(0),
             filled_bytes: AtomicU64::new(0),
+            tracer: None,
         }
     }
 
     /// The defaults ([`DEFAULT_PAGE_BYTES`], [`DEFAULT_BUDGET_BYTES`]).
     pub fn with_defaults() -> Self {
         Self::new(DEFAULT_PAGE_BYTES, DEFAULT_BUDGET_BYTES)
+    }
+
+    /// Builder: record fill/wait spans on `tracer` (`None` disables).
+    /// Constructor-time only — `read_into` takes `&self`, so the tracer
+    /// is immutable for the cache's whole life.
+    pub fn with_tracer(mut self, tracer: Option<Arc<Tracer>>) -> Self {
+        self.tracer = tracer;
+        self
     }
 
     pub fn page_bytes(&self) -> usize {
@@ -233,6 +247,8 @@ impl PageCache {
                     // and been retracted, in which case we claim it).
                     self.waits.fetch_add(1, Ordering::Relaxed);
                     acc.waits += 1;
+                    let _span =
+                        self.tracer.as_ref().map(|t| Tracer::start(t, SpanKind::CacheWait));
                     inner = self.cv.wait(inner).unwrap();
                 }
                 None => {
@@ -303,7 +319,12 @@ impl PageCache {
         let start = first * pb;
         let end = (run_end * pb).min(file_len);
         let mut buf = vec![0u8; (end - start) as usize];
+        let mut span = self.tracer.as_ref().map(|t| Tracer::start(t, SpanKind::CacheFill));
+        if let Some(s) = span.as_mut() {
+            s.set_bytes(buf.len() as u64);
+        }
         retry_transient(|| file.read_at(start, &mut buf))?;
+        drop(span);
         self.fill_preads.fetch_add(1, Ordering::Relaxed);
         self.filled_bytes.fetch_add(buf.len() as u64, Ordering::Relaxed);
         let mut out = Vec::with_capacity((run_end - first) as usize);

@@ -75,6 +75,7 @@ use crate::io::aggregate::{Payload, WriteAggregator};
 use crate::io::engine::{dispatch_runs, EngineStats, IoEngine, StagedCore};
 use crate::io::fault::retry_transient;
 use crate::io::sieve::ReadSieve;
+use crate::obs::trace::{SpanGuard, SpanKind, Tracer};
 use crate::par::comm::Communicator;
 use crate::par::pfile::ParallelFile;
 
@@ -132,6 +133,20 @@ impl CollectiveEngine {
         self
     }
 
+    /// Builder: record stage/exchange/gather spans on `tracer` (`None`
+    /// disables). Tracing never changes which syscalls or collectives
+    /// run — the pinned pwrite/pread/shipped counts are untouched.
+    pub fn with_tracer(mut self, tracer: Option<Arc<Tracer>>) -> Self {
+        self.core.set_tracer(tracer);
+        self
+    }
+
+    /// Open a span of `kind` on the installed tracer (one branch when
+    /// tracing is off).
+    fn span(&self, kind: SpanKind) -> Option<SpanGuard> {
+        self.core.tracer.as_ref().map(|t| Tracer::start(t, kind))
+    }
+
     /// All ranks' per-stripe staged byte counts → the elected owner map
     /// for this exchange (module docs, "staging affinity"). One
     /// allgather; every rank computes the same map because it is a pure
@@ -181,6 +196,7 @@ impl CollectiveEngine {
     /// rank received (own fragments included, in source-rank order) and
     /// write one syscall per contiguous run. Collective.
     fn exchange(&mut self, file: &Arc<ParallelFile>, comm: &dyn Communicator) -> Result<()> {
+        let mut span = self.span(SpanKind::Exchange);
         let p = comm.size();
         let me = comm.rank();
         self.exchanges += 1;
@@ -232,6 +248,9 @@ impl CollectiveEngine {
             self.shipped_history.pop_front();
         }
         self.shipped_history.push_back(self.shipped_bytes - shipped_before);
+        if let Some(s) = span.as_mut() {
+            s.set_bytes(self.shipped_bytes - shipped_before);
+        }
         let incoming = comm.alltoall_bytes(outgoing);
         // Replay in source-rank order (fragments from different sources
         // are disjoint; within a source the wire preserves stage order).
@@ -269,7 +288,8 @@ impl CollectiveEngine {
         if !runs.is_empty() {
             self.core.flush_batches += 1;
         }
-        dispatch_runs(&mut self.core.flusher, file, runs)
+        let tracer = self.core.tracer.clone();
+        dispatch_runs(&mut self.core.flusher, file, runs, tracer.as_ref())
     }
 
     /// Splits replayed runs at stripe boundaries so each touched stripe
@@ -313,6 +333,10 @@ impl CollectiveEngine {
         buf: &mut [u8],
         comm: &dyn Communicator,
     ) -> Result<bool> {
+        let mut gspan = self.span(SpanKind::ReadGather);
+        if let Some(s) = gspan.as_mut() {
+            s.set_bytes(buf.len() as u64);
+        }
         let p = comm.size();
         let me = comm.rank();
         if p == 1 {
@@ -320,6 +344,10 @@ impl CollectiveEngine {
             // local read (all requested stripes merge into one run).
             if !buf.is_empty() {
                 self.gather_preads += 1;
+                let mut pspan = self.span(SpanKind::GatherPread);
+                if let Some(s) = pspan.as_mut() {
+                    s.set_bytes(buf.len() as u64);
+                }
                 retry_transient(|| file.read_at(offset, buf))?;
             }
             return Ok(false);
@@ -392,6 +420,10 @@ impl CollectiveEngine {
         for (s, e) in &merged {
             let mut b = vec![0u8; (e - s) as usize];
             if read_err.is_none() {
+                let mut pspan = self.span(SpanKind::GatherPread);
+                if let Some(sp) = pspan.as_mut() {
+                    sp.set_bytes(b.len() as u64);
+                }
                 match retry_transient(|| file.read_at(*s, &mut b)) {
                     Ok(()) => self.gather_preads += 1,
                     Err(err) => read_err = Some(err),
@@ -423,7 +455,13 @@ impl CollectiveEngine {
                 }
             }
         }
-        let incoming = comm.alltoall_bytes(outgoing);
+        let incoming = {
+            let mut sspan = self.span(SpanKind::Scatter);
+            if let Some(s) = sspan.as_mut() {
+                s.set_bytes(outgoing.iter().map(|o| o.len() as u64).sum());
+            }
+            comm.alltoall_bytes(outgoing)
+        };
         if let Some(err) = read_err {
             return Err(err);
         }
@@ -486,6 +524,10 @@ impl IoEngine for CollectiveEngine {
         // capacity spills locally (a giant section degrades to per-rank
         // aggregation instead of unbounded memory), everything else
         // stages until the next boundary ships it whole.
+        let mut span = self.span(SpanKind::Stage);
+        if let Some(s) = span.as_mut() {
+            s.set_bytes(data.len() as u64);
+        }
         self.core.stage_write(file, offset, data)
     }
 
@@ -493,6 +535,10 @@ impl IoEngine for CollectiveEngine {
         // Same policy as `write`, minus the staging memcpy: the owned
         // buffer parks in the aggregator until the exchange slices it
         // (own-stripe fragments are then borrowed straight from it).
+        let mut span = self.span(SpanKind::Stage);
+        if let Some(s) = span.as_mut() {
+            s.set_bytes(data.len() as u64);
+        }
         self.core.stage_write_owned(file, offset, data)
     }
 

@@ -43,6 +43,7 @@ use crate::io::aggregate::{Payload, WriteAggregator};
 use crate::io::fault::retry_transient;
 use crate::io::sieve::ReadSieve;
 use crate::io::{IoEngineKind, IoTuning};
+use crate::obs::trace::{SpanKind, Tracer};
 use crate::par::comm::Communicator;
 use crate::par::pfile::ParallelFile;
 use crate::par::pool::{CodecPool, ParJob, Step, SUBMITTER};
@@ -198,6 +199,7 @@ pub(crate) fn build_engine(
     file: &Arc<ParallelFile>,
     cache: Option<&Arc<crate::io::cache::PageCache>>,
     flush_pool: Option<&Arc<CodecPool>>,
+    tracer: Option<&Arc<Tracer>>,
 ) -> Result<Box<dyn IoEngine>> {
     let sieve = if read_mode && tuning.sieve_window > 0 && tuning.engine != IoEngineKind::Direct {
         Some(match cache {
@@ -208,11 +210,17 @@ pub(crate) fn build_engine(
         None
     };
     let pool = flush_pool.cloned();
+    let tracer = tracer.cloned();
     Ok(match tuning.engine {
+        // The direct engine stays untraced: it is the one-syscall
+        // reference path, and keeping it bare preserves the "zero
+        // overhead when disabled" baseline the property tests compare
+        // staged engines against.
         IoEngineKind::Direct => Box::new(DirectEngine::new()),
         IoEngineKind::Aggregating => Box::new(
             AggregatingEngine::new(tuning.aggregation_buffer, sieve, tuning.async_flush)
-                .with_flush_pool(pool),
+                .with_flush_pool(pool)
+                .with_tracer(tracer),
         ),
         IoEngineKind::Collective => Box::new(
             crate::io::collective::CollectiveEngine::new(
@@ -221,7 +229,8 @@ pub(crate) fn build_engine(
                 sieve,
                 tuning.async_flush,
             )
-            .with_flush_pool(pool),
+            .with_flush_pool(pool)
+            .with_tracer(tracer),
         ),
     })
 }
@@ -366,6 +375,9 @@ pub(crate) struct StagedCore {
     pub(crate) flusher: Option<AsyncFlusher>,
     /// Staged-run drain batches issued (sync or async).
     pub(crate) flush_batches: u64,
+    /// Span recorder for the drain paths (`pwrite` spans) and whatever
+    /// the owning engine instruments on top. `None` costs one branch.
+    pub(crate) tracer: Option<Arc<Tracer>>,
 }
 
 impl StagedCore {
@@ -377,7 +389,17 @@ impl StagedCore {
             scratch: Vec::new(),
             flusher: async_flush.then(AsyncFlusher::new),
             flush_batches: 0,
+            tracer: None,
         }
+    }
+
+    /// Install (or clear) the span recorder; background flush batches
+    /// pick it up on their next submit.
+    pub(crate) fn set_tracer(&mut self, tracer: Option<Arc<Tracer>>) {
+        if let Some(fl) = &mut self.flusher {
+            fl.set_tracer(tracer.clone());
+        }
+        self.tracer = tracer;
     }
 
     /// Write this rank's staged extents itself (merged runs, stage
@@ -390,7 +412,7 @@ impl StagedCore {
         }
         let runs = self.agg.take_runs();
         self.flush_batches += 1;
-        dispatch_runs(&mut self.flusher, file, runs)
+        dispatch_runs(&mut self.flusher, file, runs, self.tracer.as_ref())
     }
 
     /// The shared write policy: writes of at least the capacity bypass
@@ -563,6 +585,10 @@ struct FlushBatch {
     next: AtomicUsize,
     done: AtomicUsize,
     ctl: Arc<FlushCtl>,
+    /// Span recorder for the background `pwrite`s. Pool workers have no
+    /// span context, so these spans are roots (parent 0) — the rank tag
+    /// still places them on the right timeline row.
+    tracer: Option<Arc<Tracer>>,
 }
 
 impl ParJob for FlushBatch {
@@ -577,6 +603,10 @@ impl ParJob for FlushBatch {
             };
         }
         let (off, buf) = &self.runs[i];
+        let mut span = self.tracer.as_ref().map(|t| Tracer::start(t, SpanKind::Pwrite));
+        if let Some(s) = span.as_mut() {
+            s.set_bytes(buf.as_slice().len() as u64);
+        }
         if let Err(e) = retry_transient(|| self.file.write_at(*off, buf.as_slice())) {
             let mut g = self.ctl.error.lock().unwrap();
             if g.is_none() {
@@ -605,6 +635,8 @@ pub(crate) struct AsyncFlusher {
     /// the process-wide shared [`CodecPool`]. A file with its own pool
     /// never steals workers from (or queues behind) codec jobs.
     pool: Option<Arc<CodecPool>>,
+    /// Span recorder handed to each submitted batch.
+    tracer: Option<Arc<Tracer>>,
 }
 
 impl AsyncFlusher {
@@ -617,11 +649,16 @@ impl AsyncFlusher {
             }),
             batches: Vec::new(),
             pool: None,
+            tracer: None,
         }
     }
 
     pub(crate) fn set_pool(&mut self, pool: Option<Arc<CodecPool>>) {
         self.pool = pool;
+    }
+
+    pub(crate) fn set_tracer(&mut self, tracer: Option<Arc<Tracer>>) {
+        self.tracer = tracer;
     }
 
     pub(crate) fn submit(&mut self, file: &Arc<ParallelFile>, runs: Vec<(u64, Payload)>) {
@@ -642,6 +679,7 @@ impl AsyncFlusher {
             next: AtomicUsize::new(0),
             done: AtomicUsize::new(0),
             ctl: Arc::clone(&self.ctl),
+            tracer: self.tracer.clone(),
         });
         self.batches.push(Arc::clone(&batch));
         match &self.pool {
@@ -683,6 +721,7 @@ pub(crate) fn dispatch_runs(
     flusher: &mut Option<AsyncFlusher>,
     file: &Arc<ParallelFile>,
     runs: Vec<(u64, Payload)>,
+    tracer: Option<&Arc<Tracer>>,
 ) -> Result<()> {
     match flusher {
         Some(fl) => {
@@ -691,6 +730,10 @@ pub(crate) fn dispatch_runs(
         }
         None => {
             for (off, buf) in runs {
+                let mut span = tracer.map(|t| Tracer::start(t, SpanKind::Pwrite));
+                if let Some(s) = span.as_mut() {
+                    s.set_bytes(buf.as_slice().len() as u64);
+                }
                 retry_transient(|| file.write_at(off, buf.as_slice()))?;
             }
             Ok(())
@@ -721,6 +764,12 @@ impl AggregatingEngine {
     /// pool (the per-file flush pool; `None` keeps the shared pool).
     pub fn with_flush_pool(mut self, pool: Option<Arc<CodecPool>>) -> Self {
         self.core.set_flush_pool(pool);
+        self
+    }
+
+    /// Builder: record `pwrite` spans on `tracer` (`None` disables).
+    pub fn with_tracer(mut self, tracer: Option<Arc<Tracer>>) -> Self {
+        self.core.set_tracer(tracer);
         self
     }
 }

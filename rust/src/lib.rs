@@ -344,6 +344,39 @@
 //!   [`par::pool::CodecPool`] to [`api::ScdaFile::set_flush_pool`], so
 //!   a file's background flush jobs stop competing with the shared
 //!   codec pool that read sessions and encoders draw from.
+//!
+//! # Observability
+//!
+//! Serial equivalence guarantees the *what* (file bytes), never the
+//! *where* (wall time); the [`obs`] subsystem attributes time to the
+//! pipeline's phases without perturbing a single file byte
+//! (`rust/tests/obs_trace.rs` asserts byte identity with the tracer
+//! enabled).
+//!
+//! * **Span tracing** ([`obs::Tracer`]): a lock-free per-rank recorder —
+//!   RAII guards stamp a monotonic clock into a fixed-capacity
+//!   drop-oldest ring (dropped spans are counted, never silently lost),
+//!   and a disabled tracer costs one `Option` branch per site. Installed
+//!   via [`api::ScdaFile::set_tracer`] and
+//!   [`runtime::ReadServiceConfig`]; instrumented phases span the whole
+//!   pipeline: section writes/reads, collective stage/exchange/pwrite
+//!   and gather/scatter, page-cache fills and single-flight waits,
+//!   served requests, and recovery phases (the [`obs::SpanKind`]
+//!   registry).
+//! * **Cross-rank merge.** At `close`, ranks exchange their span frames
+//!   over the existing communicator collectives and rank 0 holds one
+//!   time-ordered timeline ([`obs::Tracer::merged`]) — the collective
+//!   discipline the format already imposes is exactly what makes the
+//!   merge safe.
+//! * **Latency histograms** ([`obs::Hist`]): HDR-style log-bucketed
+//!   (2^k) buckets with p50/p90/p99/max readout, accumulated per span
+//!   kind — and the *same* implementation computes the serve bench's
+//!   p50/p99 columns, so there is one definition of "p99" in the tree.
+//! * **Timeline export** ([`obs::export`], CLI `scda trace`): the merged
+//!   timeline renders as Chrome trace-event JSON (one row per rank in
+//!   the trace viewer); `scda stats --json` and the `--stats-json`
+//!   flags dump the flat counters machine-readably. See
+//!   `docs/observability.md` for setup and the span-kind registry.
 
 pub mod api;
 pub mod archive;
@@ -353,6 +386,7 @@ pub mod error;
 pub mod format;
 pub mod io;
 pub mod mesh;
+pub mod obs;
 pub mod par;
 pub mod runtime;
 

@@ -1,0 +1,99 @@
+//! Chrome trace-event JSON export of a span timeline.
+//!
+//! Emits the trace-event format the Chrome/Chromium trace viewer
+//! (`chrome://tracing`, or <https://ui.perfetto.dev> in legacy mode)
+//! loads directly: an object with a `traceEvents` array of complete
+//! (`"ph": "X"`) events. Each span becomes one event with
+//! `pid` 0 and `tid` = the recording rank, so the viewer shows one row
+//! per rank; timestamps and durations are microseconds (floats), as the
+//! format requires. Complete events are self-balanced — no B/E pairing
+//! to mismatch — which is what `tools/check_trace.py` verifies in CI.
+
+use std::path::Path;
+
+use crate::obs::trace::Span;
+
+fn push_event(out: &mut String, s: &Span) {
+    // Span names are the fixed kind registry — no escaping needed.
+    out.push_str(&format!(
+        "    {{\"name\": \"{}\", \"cat\": \"scda\", \"ph\": \"X\", \"pid\": 0, \"tid\": {}, \
+         \"ts\": {:.3}, \"dur\": {:.3}, \"args\": {{\"id\": {}, \"parent\": {}, \"bytes\": {}, \
+         \"detail\": {}}}}}",
+        s.kind.name(),
+        s.rank,
+        s.t_start_ns as f64 / 1e3,
+        s.duration_ns() as f64 / 1e3,
+        s.id,
+        s.parent,
+        s.bytes,
+        s.detail,
+    ));
+}
+
+/// Render a span list as Chrome trace-event JSON.
+pub fn chrome_trace_json(spans: &[Span]) -> String {
+    let mut out = String::from("{\n  \"displayTimeUnit\": \"ms\",\n  \"traceEvents\": [\n");
+    for (i, s) in spans.iter().enumerate() {
+        push_event(&mut out, s);
+        if i + 1 < spans.len() {
+            out.push(',');
+        }
+        out.push('\n');
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+/// Write a span list to `path` as Chrome trace-event JSON, creating
+/// parent directories as needed.
+pub fn write_chrome_trace(path: &Path, spans: &[Span]) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(path, chrome_trace_json(spans))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::SpanKind;
+
+    fn span(rank: u32, id: u64, kind: SpanKind) -> Span {
+        Span {
+            id,
+            parent: 0,
+            rank,
+            kind,
+            t_start_ns: 1_500,
+            t_end_ns: 4_000,
+            bytes: 64,
+            detail: 2,
+        }
+    }
+
+    #[test]
+    fn renders_complete_events_with_rank_rows() {
+        let spans = [span(0, 1, SpanKind::Exchange), span(3, 1, SpanKind::Pwrite)];
+        let json = chrome_trace_json(&spans);
+        assert!(json.contains("\"traceEvents\""));
+        assert!(json.contains("\"name\": \"exchange\""));
+        assert!(json.contains("\"name\": \"pwrite\""));
+        assert!(json.contains("\"ph\": \"X\""));
+        assert!(json.contains("\"tid\": 3"));
+        assert!(json.contains("\"ts\": 1.500"));
+        assert!(json.contains("\"dur\": 2.500"));
+        // Structural sanity: balanced braces/brackets, no trailing comma.
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        assert_eq!(json.matches('[').count(), json.matches(']').count());
+        assert!(!json.contains(",\n  ]"));
+    }
+
+    #[test]
+    fn empty_timeline_is_valid_json() {
+        let json = chrome_trace_json(&[]);
+        assert!(json.contains("\"traceEvents\": [\n  ]"));
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+    }
+}

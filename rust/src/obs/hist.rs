@@ -1,0 +1,220 @@
+//! Log-bucketed latency histograms: HDR-style power-of-two buckets with
+//! p50/p90/p99/max readout.
+//!
+//! A [`Hist`] is a fixed array of 65 atomic counters. Bucket `b >= 1`
+//! covers the value octave `[2^(b-1), 2^b - 1]`; bucket 0 holds exact
+//! zeros. Recording is one `leading_zeros` plus two relaxed atomic
+//! increments — cheap enough for per-request hot paths — and the
+//! structure is wait-free for concurrent writers, so one histogram can
+//! be shared by every session thread of the read service.
+//!
+//! **Readout semantics:** [`Hist::percentile`] returns the *upper edge*
+//! of the bucket containing the requested rank, clamped to the largest
+//! value actually observed. The reported quantile is therefore an upper
+//! bound on the true quantile and lies within one octave (a factor of
+//! two) of it. That is the precision/footprint trade every log-bucketed
+//! histogram makes; it is plenty to drive tail-latency tripwires (the
+//! serve bench's p99 column) while keeping the recorder allocation-free.
+//! Concurrent readers see a consistent-enough view: counters are read
+//! relaxed, so a percentile taken mid-run may lag in-flight records by
+//! a few samples.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Bucket count: one per octave of `u64` plus the zero bucket.
+pub const BUCKETS: usize = 65;
+
+/// The bucket index covering `v`: 0 for 0, otherwise `1 + floor(log2 v)`.
+pub fn bucket_of(v: u64) -> usize {
+    (u64::BITS - v.leading_zeros()) as usize
+}
+
+/// The largest value bucket `b` can hold (`2^b - 1`; `u64::MAX` for the
+/// top bucket).
+pub fn bucket_upper(b: usize) -> u64 {
+    if b == 0 {
+        0
+    } else if b >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << b) - 1
+    }
+}
+
+/// A log-bucketed histogram of `u64` samples (nanoseconds, byte counts —
+/// any nonnegative magnitude). See the module docs for the readout
+/// semantics.
+#[derive(Debug)]
+pub struct Hist {
+    buckets: Box<[AtomicU64]>,
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Hist::new()
+    }
+}
+
+impl Hist {
+    pub fn new() -> Hist {
+        Hist {
+            buckets: (0..BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one sample (wait-free; relaxed ordering).
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Fold another histogram's counts into this one.
+    pub fn merge_from(&self, other: &Hist) {
+        for (mine, theirs) in self.buckets.iter().zip(other.buckets.iter()) {
+            mine.fetch_add(theirs.load(Ordering::Relaxed), Ordering::Relaxed);
+        }
+        self.count.fetch_add(other.count.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.sum.fetch_add(other.sum.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.max.fetch_max(other.max.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    /// Arithmetic mean of the recorded samples (exact, not bucketed).
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum.load(Ordering::Relaxed) as f64 / n as f64
+        }
+    }
+
+    /// The quantile-`q` readout: the upper edge of the bucket holding the
+    /// `ceil(q * count)`-th smallest sample, clamped to the observed max.
+    /// Returns 0 on an empty histogram.
+    pub fn percentile(&self, q: f64) -> u64 {
+        let count = self.count();
+        if count == 0 {
+            return 0;
+        }
+        let target = ((count as f64) * q.clamp(0.0, 1.0)).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (b, bucket) in self.buckets.iter().enumerate() {
+            seen += bucket.load(Ordering::Relaxed);
+            if seen >= target {
+                return bucket_upper(b).min(self.max());
+            }
+        }
+        self.max()
+    }
+
+    /// p50 shorthand in microseconds (samples recorded as nanoseconds).
+    pub fn p50_us(&self) -> f64 {
+        self.percentile(0.50) as f64 / 1e3
+    }
+
+    /// p99 shorthand in microseconds (samples recorded as nanoseconds).
+    pub fn p99_us(&self) -> f64 {
+        self.percentile(0.99) as f64 / 1e3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_edges_are_octaves() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 3);
+        assert_eq!(bucket_of(u64::MAX), 64);
+        for b in 1..64 {
+            assert_eq!(bucket_of(bucket_upper(b)), b);
+            assert_eq!(bucket_of(bucket_upper(b) + 1), b + 1);
+        }
+        assert_eq!(bucket_upper(0), 0);
+        assert_eq!(bucket_upper(64), u64::MAX);
+    }
+
+    #[test]
+    fn percentile_is_an_upper_bound_within_one_octave() {
+        let h = Hist::new();
+        for v in 1..=1000u64 {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 1000);
+        assert_eq!(h.max(), 1000);
+        let p50 = h.percentile(0.50);
+        // True p50 is 500; the bucketed readout must bound it from above
+        // within one octave.
+        assert!(p50 >= 500, "p50 {p50} under-reports");
+        assert!(p50 < 1000, "p50 {p50} not within an octave of 500");
+        // The top quantiles clamp to the observed max.
+        assert_eq!(h.percentile(1.0), 1000);
+        assert_eq!(h.percentile(0.999), 1000);
+    }
+
+    #[test]
+    fn empty_and_zero_samples() {
+        let h = Hist::new();
+        assert_eq!(h.percentile(0.99), 0);
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean(), 0.0);
+        h.record(0);
+        assert_eq!(h.percentile(0.5), 0);
+        assert_eq!(h.max(), 0);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let a = Hist::new();
+        let b = Hist::new();
+        for v in [10u64, 20, 30] {
+            a.record(v);
+        }
+        for v in [1000u64, 2000] {
+            b.record(v);
+        }
+        a.merge_from(&b);
+        assert_eq!(a.count(), 5);
+        assert_eq!(a.max(), 2000);
+        assert!(a.percentile(0.99) >= 2000);
+        assert!((a.mean() - (10.0 + 20.0 + 30.0 + 1000.0 + 2000.0) / 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn concurrent_recording_counts_everything() {
+        use std::sync::Arc;
+        let h = Arc::new(Hist::new());
+        std::thread::scope(|sc| {
+            for t in 0..4 {
+                let h = Arc::clone(&h);
+                sc.spawn(move || {
+                    for i in 0..1000u64 {
+                        h.record(t * 1000 + i);
+                    }
+                });
+            }
+        });
+        assert_eq!(h.count(), 4000);
+        assert_eq!(h.max(), 3999);
+    }
+}

@@ -1,0 +1,30 @@
+//! Observability: span tracing, latency histograms and timeline export.
+//!
+//! The serial-equivalence guarantee means file bytes never tell you
+//! *where* time went — a collective write serialized behind one slow
+//! stripe owner is bit-identical to a perfectly overlapped one. This
+//! subsystem attributes wall time to the pipeline's phases without
+//! perturbing those bytes:
+//!
+//! * [`trace`] — the lock-free per-rank span recorder ([`Tracer`],
+//!   RAII [`SpanGuard`]s, drop-oldest ring, the [`SpanKind`] registry)
+//!   plus the close-time cross-rank merge helpers;
+//! * [`hist`] — HDR-style log-bucketed latency histograms
+//!   ([`Hist`]) with p50/p90/p99/max readout, accumulated per span
+//!   kind and shared with the serve bench (one definition of "p99");
+//! * [`export`] — the Chrome trace-event JSON timeline exporter.
+//!
+//! Instrumentation hangs off an `Arc<Tracer>` installed via
+//! `ScdaFile::set_tracer` or `ReadServiceConfig::tracer`; with no
+//! tracer installed every site is a single `Option` branch. See
+//! `docs/observability.md` for setup, the span-kind registry and the
+//! trace-viewer howto, and the `scda trace` CLI subcommand for a
+//! one-shot instrumented demo workload.
+
+pub mod export;
+pub mod hist;
+pub mod trace;
+
+pub use export::{chrome_trace_json, write_chrome_trace};
+pub use hist::Hist;
+pub use trace::{histogram_table, Span, SpanGuard, SpanKind, Tracer};

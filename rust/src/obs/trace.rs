@@ -1,0 +1,640 @@
+//! Lock-free per-rank span recorder.
+//!
+//! A [`Tracer`] owns a fixed-capacity ring of completed [`Span`]s.
+//! Recording is RAII: [`Tracer::start`] reads the monotonic clock,
+//! allocates an id and pushes the span onto a per-thread parent stack;
+//! dropping the returned [`SpanGuard`] reads the clock again and
+//! publishes the finished span into the ring with a per-slot seqlock —
+//! no mutex anywhere on the record path. When the ring is full the
+//! oldest spans are overwritten (drop-oldest); [`Tracer::dropped`]
+//! counts the casualties so a truncated timeline is never mistaken for
+//! a complete one.
+//!
+//! **Zero overhead when disabled.** The tracer is installed as an
+//! `Option<Arc<Tracer>>` (see `ScdaFile::set_tracer` and
+//! `ReadServiceConfig`); every instrumentation site is
+//! `tracer.as_ref().map(|t| Tracer::start(t, kind))`, which with `None`
+//! is a branch on a discriminant — no clock read, no allocation, no
+//! atomic.
+//!
+//! **Clock.** All tracers in a process share one monotonic epoch
+//! (first use of [`now_ns`]), so spans from the in-process rank
+//! simulation substrate land on one comparable timeline. Across real
+//! machines the per-rank clocks would be skewed; the merged timeline is
+//! then per-rank-ordered only, which the Chrome trace viewer renders
+//! fine (one row per rank).
+//!
+//! **Cross-rank merge.** Span ids are unique per rank, not globally:
+//! `(rank, id)` is the key of a merged timeline. `ScdaFile::close`
+//! allgathers every rank's [`encode_spans`] frame and deposits the
+//! decoded, time-ordered union on rank 0's tracer
+//! ([`Tracer::set_merged`]/[`Tracer::merged`]). Installing a tracer is
+//! therefore collective: every rank of a communicator installs one, or
+//! none does.
+
+use std::cell::{Cell, UnsafeCell};
+use std::sync::atomic::{fence, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::obs::hist::Hist;
+
+/// What an instrumented region is; the span-kind registry (also
+/// documented in `docs/observability.md`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum SpanKind {
+    /// One logical section write (`api/writer.rs`); bytes = payload.
+    SectionWrite = 0,
+    /// One logical section data read (`api/reader.rs`); bytes = payload.
+    SectionRead = 1,
+    /// Staging one write extent into an engine buffer (`io/engine.rs`).
+    Stage = 2,
+    /// One two-phase collective write exchange (`io/collective.rs`);
+    /// bytes = extents shipped off-rank by this rank.
+    Exchange = 3,
+    /// One positioned write syscall dispatched by an engine (sync drain
+    /// or async flush batch); bytes = run length.
+    Pwrite = 4,
+    /// One collective read gather (`io/collective.rs`); bytes = window.
+    ReadGather = 5,
+    /// One owner-side pread serving gathered stripes; bytes read.
+    GatherPread = 6,
+    /// The fragment scatter (`alltoall`) phase of a read gather.
+    Scatter = 7,
+    /// One page-cache fill pread (`io/cache.rs`); bytes filled.
+    CacheFill = 8,
+    /// Blocking on another thread's in-flight fill (`io/cache.rs`).
+    CacheWait = 9,
+    /// One `ReadRequest` served by a service session
+    /// (`runtime/service.rs`); bytes = response payload, detail =
+    /// session id.
+    Serve = 10,
+    /// Recovery phase: the verified-prefix walk (`archive/recover.rs`).
+    RecoverWalk = 11,
+    /// Recovery phase: truncate + rescan + fresh trailer append.
+    RecoverRebuild = 12,
+    /// Recovery phase: the gating end-to-end re-verification.
+    RecoverVerify = 13,
+}
+
+impl SpanKind {
+    pub const ALL: [SpanKind; 14] = [
+        SpanKind::SectionWrite,
+        SpanKind::SectionRead,
+        SpanKind::Stage,
+        SpanKind::Exchange,
+        SpanKind::Pwrite,
+        SpanKind::ReadGather,
+        SpanKind::GatherPread,
+        SpanKind::Scatter,
+        SpanKind::CacheFill,
+        SpanKind::CacheWait,
+        SpanKind::Serve,
+        SpanKind::RecoverWalk,
+        SpanKind::RecoverRebuild,
+        SpanKind::RecoverVerify,
+    ];
+    pub const COUNT: usize = SpanKind::ALL.len();
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::SectionWrite => "section_write",
+            SpanKind::SectionRead => "section_read",
+            SpanKind::Stage => "stage",
+            SpanKind::Exchange => "exchange",
+            SpanKind::Pwrite => "pwrite",
+            SpanKind::ReadGather => "read_gather",
+            SpanKind::GatherPread => "gather_pread",
+            SpanKind::Scatter => "scatter",
+            SpanKind::CacheFill => "cache_fill",
+            SpanKind::CacheWait => "cache_wait",
+            SpanKind::Serve => "serve",
+            SpanKind::RecoverWalk => "recover_walk",
+            SpanKind::RecoverRebuild => "recover_rebuild",
+            SpanKind::RecoverVerify => "recover_verify",
+        }
+    }
+
+    pub fn from_u8(b: u8) -> Option<SpanKind> {
+        SpanKind::ALL.get(b as usize).copied()
+    }
+}
+
+/// One completed instrumented region.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Span {
+    /// Nonzero, unique within one rank's tracer.
+    pub id: u64,
+    /// Id of the enclosing span on the same thread, 0 for roots.
+    pub parent: u64,
+    /// The recording rank's tag (one tracer per rank).
+    pub rank: u32,
+    pub kind: SpanKind,
+    /// Monotonic nanoseconds since the process trace epoch.
+    pub t_start_ns: u64,
+    pub t_end_ns: u64,
+    /// Payload bytes the region moved (0 where not meaningful).
+    pub bytes: u64,
+    /// Free-form numeric detail (session id, request index, offset...).
+    pub detail: u64,
+}
+
+impl Span {
+    fn zero() -> Span {
+        Span {
+            id: 0,
+            parent: 0,
+            rank: 0,
+            kind: SpanKind::SectionWrite,
+            t_start_ns: 0,
+            t_end_ns: 0,
+            bytes: 0,
+            detail: 0,
+        }
+    }
+
+    pub fn duration_ns(&self) -> u64 {
+        self.t_end_ns.saturating_sub(self.t_start_ns)
+    }
+}
+
+/// Monotonic nanoseconds since the (lazily pinned) process trace epoch.
+pub fn now_ns() -> u64 {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    EPOCH.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+thread_local! {
+    /// The innermost open span id on this thread (parent for new spans).
+    static CURRENT_PARENT: Cell<u64> = const { Cell::new(0) };
+}
+
+/// One ring slot: a per-slot seqlock. `seq == 2n + 1` marks the write of
+/// record number `n` in progress; `seq == 2n + 2` marks it published.
+struct Slot {
+    seq: AtomicU64,
+    span: UnsafeCell<Span>,
+}
+
+/// Fixed-capacity drop-oldest span ring with seqlock publication:
+/// writers reserve a monotonically increasing record number with one
+/// `fetch_add`, readers ([`SpanRing::snapshot`]) skip slots whose
+/// sequence shows a concurrent overwrite. No locks on either side.
+struct SpanRing {
+    slots: Box<[Slot]>,
+    /// Total records ever pushed (the next record number).
+    next: AtomicU64,
+}
+
+// SAFETY: the only access to `Slot::span` is under the per-slot seqlock
+// protocol — writers bracket the write with odd/even `seq` stores
+// (Release), readers validate `seq` is the published even value for the
+// exact record number both before and after copying (Acquire + fence),
+// discarding torn reads. Two writers can only collide on a slot if the
+// ring laps itself within one push, which would need `capacity`
+// concurrent recorders.
+unsafe impl Sync for SpanRing {}
+unsafe impl Send for SpanRing {}
+
+impl SpanRing {
+    fn new(capacity: usize) -> SpanRing {
+        let cap = capacity.max(1);
+        let slots: Box<[Slot]> = (0..cap)
+            .map(|_| Slot { seq: AtomicU64::new(0), span: UnsafeCell::new(Span::zero()) })
+            .collect();
+        SpanRing { slots, next: AtomicU64::new(0) }
+    }
+
+    fn push(&self, span: Span) {
+        let n = self.next.fetch_add(1, Ordering::Relaxed);
+        let slot = &self.slots[(n % self.slots.len() as u64) as usize];
+        slot.seq.store(2 * n + 1, Ordering::Relaxed);
+        fence(Ordering::Release);
+        // SAFETY: see the `Sync` impl — this write is bracketed by the
+        // odd/even sequence stores and readers reject torn copies.
+        unsafe {
+            *slot.span.get() = span;
+        }
+        slot.seq.store(2 * n + 2, Ordering::Release);
+    }
+
+    fn recorded(&self) -> u64 {
+        self.next.load(Ordering::Acquire)
+    }
+
+    /// Every still-resident published span, oldest first. Slots being
+    /// overwritten concurrently are skipped, never torn.
+    fn snapshot(&self) -> Vec<Span> {
+        let end = self.recorded();
+        let cap = self.slots.len() as u64;
+        let start = end.saturating_sub(cap);
+        let mut out = Vec::with_capacity((end - start) as usize);
+        for n in start..end {
+            let slot = &self.slots[(n % cap) as usize];
+            let seq = slot.seq.load(Ordering::Acquire);
+            if seq != 2 * n + 2 {
+                continue;
+            }
+            // SAFETY: seqlock read protocol (see the `Sync` impl).
+            let span = unsafe { *slot.span.get() };
+            fence(Ordering::Acquire);
+            if slot.seq.load(Ordering::Relaxed) == seq {
+                out.push(span);
+            }
+        }
+        out
+    }
+}
+
+/// The per-rank span recorder; see the module docs. Shared as
+/// `Arc<Tracer>` between a `ScdaFile`, its engine, its page cache and
+/// any service sessions.
+pub struct Tracer {
+    rank: u32,
+    ring: SpanRing,
+    ids: AtomicU64,
+    /// Per-[`SpanKind`] duration histograms (nanoseconds), fed as spans
+    /// complete.
+    hists: Vec<Hist>,
+    /// Rank 0's cross-rank merged timeline, deposited at `close()`.
+    merged: Mutex<Option<Vec<Span>>>,
+}
+
+impl std::fmt::Debug for Tracer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Tracer")
+            .field("rank", &self.rank)
+            .field("recorded", &self.recorded())
+            .field("dropped", &self.dropped())
+            .finish()
+    }
+}
+
+impl Default for Tracer {
+    fn default() -> Self {
+        Tracer::new()
+    }
+}
+
+impl Tracer {
+    /// Default ring capacity: 64 Ki spans (~3.4 MiB resident).
+    pub const DEFAULT_CAPACITY: usize = 64 * 1024;
+
+    pub fn new() -> Tracer {
+        Tracer::with_capacity(0, Tracer::DEFAULT_CAPACITY)
+    }
+
+    /// A tracer tagging its spans with `rank` (one tracer per rank).
+    pub fn for_rank(rank: usize) -> Tracer {
+        Tracer::with_capacity(rank, Tracer::DEFAULT_CAPACITY)
+    }
+
+    pub fn with_capacity(rank: usize, capacity: usize) -> Tracer {
+        Tracer {
+            rank: rank as u32,
+            ring: SpanRing::new(capacity),
+            ids: AtomicU64::new(0),
+            hists: (0..SpanKind::COUNT).map(|_| Hist::new()).collect(),
+            merged: Mutex::new(None),
+        }
+    }
+
+    pub fn rank(&self) -> u32 {
+        self.rank
+    }
+
+    /// Open a span; it records itself when the guard drops. An
+    /// associated function (not a method) so call sites can write
+    /// `tracer.as_ref().map(|t| Tracer::start(t, kind))` — the disabled
+    /// path is a single `Option` branch.
+    pub fn start(this: &Arc<Tracer>, kind: SpanKind) -> SpanGuard {
+        let id = this.ids.fetch_add(1, Ordering::Relaxed) + 1;
+        let parent = CURRENT_PARENT.with(|c| c.replace(id));
+        SpanGuard {
+            tracer: Arc::clone(this),
+            id,
+            parent,
+            kind,
+            t_start_ns: now_ns(),
+            bytes: 0,
+            detail: 0,
+        }
+    }
+
+    fn record(&self, span: Span) {
+        self.hists[span.kind as usize].record(span.duration_ns());
+        self.ring.push(span);
+    }
+
+    /// Total spans ever recorded (including overwritten ones).
+    pub fn recorded(&self) -> u64 {
+        self.ring.recorded()
+    }
+
+    /// Spans lost to drop-oldest overwriting.
+    pub fn dropped(&self) -> u64 {
+        self.ring.recorded().saturating_sub(self.ring.slots.len() as u64)
+    }
+
+    /// The resident local spans, oldest first (completion order).
+    pub fn snapshot(&self) -> Vec<Span> {
+        self.ring.snapshot()
+    }
+
+    /// The duration histogram accumulated for `kind` (nanoseconds).
+    pub fn hist(&self, kind: SpanKind) -> &Hist {
+        &self.hists[kind as usize]
+    }
+
+    /// Deposit the cross-rank merged timeline (rank 0, at close).
+    pub fn set_merged(&self, spans: Vec<Span>) {
+        *self.merged.lock().unwrap() = Some(spans);
+    }
+
+    /// The merged timeline, if this tracer's rank received one.
+    pub fn merged(&self) -> Option<Vec<Span>> {
+        self.merged.lock().unwrap().clone()
+    }
+}
+
+/// RAII handle for an open span (see [`Tracer::start`]). Dropping it
+/// stamps the end time and publishes the span.
+pub struct SpanGuard {
+    tracer: Arc<Tracer>,
+    id: u64,
+    parent: u64,
+    kind: SpanKind,
+    t_start_ns: u64,
+    bytes: u64,
+    detail: u64,
+}
+
+impl SpanGuard {
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    pub fn set_bytes(&mut self, n: u64) {
+        self.bytes = n;
+    }
+
+    pub fn add_bytes(&mut self, n: u64) {
+        self.bytes += n;
+    }
+
+    pub fn set_detail(&mut self, d: u64) {
+        self.detail = d;
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let t_end_ns = now_ns();
+        CURRENT_PARENT.with(|c| c.set(self.parent));
+        self.tracer.record(Span {
+            id: self.id,
+            parent: self.parent,
+            rank: self.tracer.rank,
+            kind: self.kind,
+            t_start_ns: self.t_start_ns,
+            t_end_ns,
+            bytes: self.bytes,
+            detail: self.detail,
+        });
+    }
+}
+
+/// Wire size of one encoded span (the cross-rank merge frame format).
+pub const SPAN_WIRE_BYTES: usize = 53;
+
+/// Serialize spans for the close-time cross-rank allgather: fixed
+/// 53-byte little-endian records, no header.
+pub fn encode_spans(spans: &[Span]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(spans.len() * SPAN_WIRE_BYTES);
+    for s in spans {
+        out.extend_from_slice(&s.id.to_le_bytes());
+        out.extend_from_slice(&s.parent.to_le_bytes());
+        out.extend_from_slice(&s.rank.to_le_bytes());
+        out.push(s.kind as u8);
+        out.extend_from_slice(&s.t_start_ns.to_le_bytes());
+        out.extend_from_slice(&s.t_end_ns.to_le_bytes());
+        out.extend_from_slice(&s.bytes.to_le_bytes());
+        out.extend_from_slice(&s.detail.to_le_bytes());
+    }
+    out
+}
+
+/// Decode an [`encode_spans`] frame; `None` on a malformed frame (wrong
+/// framing or an unknown kind byte).
+pub fn decode_spans(bytes: &[u8]) -> Option<Vec<Span>> {
+    if bytes.len() % SPAN_WIRE_BYTES != 0 {
+        return None;
+    }
+    let u64_at = |rec: &[u8], at: usize| u64::from_le_bytes(rec[at..at + 8].try_into().unwrap());
+    let mut out = Vec::with_capacity(bytes.len() / SPAN_WIRE_BYTES);
+    for rec in bytes.chunks_exact(SPAN_WIRE_BYTES) {
+        out.push(Span {
+            id: u64_at(rec, 0),
+            parent: u64_at(rec, 8),
+            rank: u32::from_le_bytes(rec[16..20].try_into().unwrap()),
+            kind: SpanKind::from_u8(rec[20])?,
+            t_start_ns: u64_at(rec, 21),
+            t_end_ns: u64_at(rec, 29),
+            bytes: u64_at(rec, 37),
+            detail: u64_at(rec, 45),
+        });
+    }
+    Some(out)
+}
+
+/// Merge per-rank frames into one time-ordered timeline (ties broken by
+/// rank, then id, so the order is deterministic). Malformed frames are
+/// skipped — a lossy merge beats a lost one.
+pub fn merge_frames(frames: &[Vec<u8>]) -> Vec<Span> {
+    let mut merged = Vec::new();
+    for f in frames {
+        if let Some(spans) = decode_spans(f) {
+            merged.extend(spans);
+        }
+    }
+    merged.sort_by_key(|s| (s.t_start_ns, s.rank, s.id));
+    merged
+}
+
+/// Per-kind duration histograms rebuilt from a span list (used for the
+/// merged, cross-rank table — the live [`Tracer::hist`] set only covers
+/// local spans).
+pub fn kind_histograms(spans: &[Span]) -> Vec<Hist> {
+    let hists: Vec<Hist> = (0..SpanKind::COUNT).map(|_| Hist::new()).collect();
+    for s in spans {
+        hists[s.kind as usize].record(s.duration_ns());
+    }
+    hists
+}
+
+/// Render the per-kind latency table (count, p50/p90/p99/max in
+/// microseconds, total bytes) for a span list; kinds with no spans are
+/// omitted.
+pub fn histogram_table(spans: &[Span]) -> String {
+    let hists = kind_histograms(spans);
+    let mut bytes = vec![0u64; SpanKind::COUNT];
+    for s in spans {
+        bytes[s.kind as usize] += s.bytes;
+    }
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<16} {:>8} {:>10} {:>10} {:>10} {:>10} {:>12}\n",
+        "span kind", "count", "p50 us", "p90 us", "p99 us", "max us", "bytes"
+    ));
+    for kind in SpanKind::ALL {
+        let h = &hists[kind as usize];
+        if h.count() == 0 {
+            continue;
+        }
+        let us = |v: u64| v as f64 / 1e3;
+        out.push_str(&format!(
+            "{:<16} {:>8} {:>10.1} {:>10.1} {:>10.1} {:>10.1} {:>12}\n",
+            kind.name(),
+            h.count(),
+            us(h.percentile(0.50)),
+            us(h.percentile(0.90)),
+            us(h.percentile(0.99)),
+            us(h.max()),
+            bytes[kind as usize],
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn guard_records_nesting_and_parentage() {
+        let t = Arc::new(Tracer::with_capacity(3, 64));
+        {
+            let outer = Tracer::start(&t, SpanKind::Exchange);
+            let outer_id = outer.id();
+            {
+                let mut inner = Tracer::start(&t, SpanKind::Pwrite);
+                inner.set_bytes(512);
+                assert_ne!(inner.id(), outer_id);
+            }
+            drop(outer);
+            // A sibling opened after both closed is a root again.
+            let _sib = Tracer::start(&t, SpanKind::Stage);
+        }
+        let spans = t.snapshot();
+        assert_eq!(spans.len(), 3);
+        // Completion order: inner, outer, sibling.
+        let (inner, outer, sib) = (&spans[0], &spans[1], &spans[2]);
+        assert_eq!(inner.kind, SpanKind::Pwrite);
+        assert_eq!(inner.parent, outer.id);
+        assert_eq!(inner.bytes, 512);
+        assert_eq!(outer.parent, 0);
+        assert_eq!(sib.parent, 0);
+        for s in &spans {
+            assert_eq!(s.rank, 3);
+            assert!(s.t_end_ns >= s.t_start_ns);
+        }
+        assert!(inner.t_start_ns >= outer.t_start_ns);
+        assert!(inner.t_end_ns <= outer.t_end_ns);
+        assert_eq!(t.dropped(), 0);
+    }
+
+    #[test]
+    fn ring_overflow_drops_oldest_and_counts() {
+        let t = Arc::new(Tracer::with_capacity(0, 8));
+        for i in 0..20u64 {
+            let mut g = Tracer::start(&t, SpanKind::Serve);
+            g.set_detail(i);
+        }
+        assert_eq!(t.recorded(), 20);
+        assert_eq!(t.dropped(), 12);
+        let spans = t.snapshot();
+        assert_eq!(spans.len(), 8);
+        // The survivors are exactly the newest 8, oldest first.
+        let details: Vec<u64> = spans.iter().map(|s| s.detail).collect();
+        assert_eq!(details, (12..20).collect::<Vec<u64>>());
+        // Histograms saw every span, resident or dropped.
+        assert_eq!(t.hist(SpanKind::Serve).count(), 20);
+    }
+
+    #[test]
+    fn spans_roundtrip_the_wire_format() {
+        let t = Arc::new(Tracer::with_capacity(2, 16));
+        for _ in 0..5 {
+            let mut g = Tracer::start(&t, SpanKind::CacheFill);
+            g.set_bytes(4096);
+        }
+        let spans = t.snapshot();
+        let wire = encode_spans(&spans);
+        assert_eq!(wire.len(), 5 * SPAN_WIRE_BYTES);
+        assert_eq!(decode_spans(&wire).unwrap(), spans);
+        // Malformed frames are rejected, not mis-parsed.
+        assert!(decode_spans(&wire[1..]).is_none());
+        let mut bad_kind = wire.clone();
+        bad_kind[20] = 0xff;
+        assert!(decode_spans(&bad_kind).is_none());
+    }
+
+    #[test]
+    fn merge_orders_by_time_then_rank() {
+        let mk = |rank: u32, id: u64, start: u64| Span {
+            id,
+            parent: 0,
+            rank,
+            kind: SpanKind::Serve,
+            t_start_ns: start,
+            t_end_ns: start + 10,
+            bytes: 0,
+            detail: 0,
+        };
+        let f0 = encode_spans(&[mk(0, 1, 50), mk(0, 2, 10)]);
+        let f1 = encode_spans(&[mk(1, 1, 30)]);
+        let merged = merge_frames(&[f0, f1]);
+        let order: Vec<(u64, u32)> = merged.iter().map(|s| (s.t_start_ns, s.rank)).collect();
+        assert_eq!(order, vec![(10, 0), (30, 1), (50, 0)]);
+        // A torn frame drops, the rest still merge.
+        let f_torn = vec![0u8; SPAN_WIRE_BYTES - 1];
+        assert_eq!(merge_frames(&[encode_spans(&[mk(2, 1, 5)]), f_torn]).len(), 1);
+    }
+
+    #[test]
+    fn histogram_table_lists_only_recorded_kinds() {
+        let t = Arc::new(Tracer::new());
+        {
+            let mut g = Tracer::start(&t, SpanKind::Exchange);
+            g.set_bytes(100);
+        }
+        let table = histogram_table(&t.snapshot());
+        assert!(table.contains("exchange"));
+        assert!(!table.contains("cache_fill"));
+        assert!(table.contains("span kind"));
+    }
+
+    #[test]
+    fn concurrent_recorders_never_tear() {
+        let t = Arc::new(Tracer::with_capacity(0, 1024));
+        std::thread::scope(|sc| {
+            for _ in 0..4 {
+                let t = Arc::clone(&t);
+                sc.spawn(move || {
+                    for _ in 0..500 {
+                        let mut g = Tracer::start(&t, SpanKind::Serve);
+                        g.set_bytes(7);
+                        g.set_detail(9);
+                    }
+                });
+            }
+        });
+        assert_eq!(t.recorded(), 2000);
+        for s in t.snapshot() {
+            // Published slots carry consistent contents, never a torn mix.
+            assert_eq!((s.bytes, s.detail), (7, 9));
+            assert!(s.id >= 1);
+        }
+    }
+}

@@ -34,6 +34,7 @@ use crate::format::header::FileHeader;
 use crate::io::cache::{DEFAULT_BUDGET_BYTES, DEFAULT_PAGE_BYTES};
 use crate::io::{CacheStats, IoTuning, PageCache};
 use crate::par::pfile::{IoStats, ParallelFile};
+use crate::obs::trace::{SpanKind, Tracer};
 use crate::par::{Partition, SerialComm};
 use crate::runtime::precond::Preconditioner;
 
@@ -42,7 +43,7 @@ use crate::runtime::precond::Preconditioner;
 // ---------------------------------------------------------------------
 
 /// Knobs for [`ArchiveReadService::open_with`].
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct ReadServiceConfig {
     /// Engine tuning applied to every session (the sieve window is each
     /// session's readahead *through* the shared cache).
@@ -54,6 +55,10 @@ pub struct ReadServiceConfig {
     /// private sieve windows — the per-session baseline the serve bench
     /// measures against).
     pub cache_budget: usize,
+    /// Optional span recorder shared by every session and the page
+    /// cache: serve/read spans, cache fill/wait spans. `None` (the
+    /// default) keeps the whole service untraced.
+    pub tracer: Option<Arc<Tracer>>,
 }
 
 impl Default for ReadServiceConfig {
@@ -62,6 +67,7 @@ impl Default for ReadServiceConfig {
             tuning: IoTuning::default(),
             page_bytes: DEFAULT_PAGE_BYTES,
             cache_budget: DEFAULT_BUDGET_BYTES,
+            tracer: None,
         }
     }
 }
@@ -108,6 +114,7 @@ pub struct ArchiveReadService {
     indexed: bool,
     tuning: IoTuning,
     cache: Option<Arc<PageCache>>,
+    tracer: Option<Arc<Tracer>>,
     sessions: AtomicU64,
 }
 
@@ -130,8 +137,11 @@ impl ArchiveReadService {
         let entries = ar.datasets().to_vec();
         let indexed = ar.is_indexed();
         ar.close()?;
-        let cache = (cfg.cache_budget > 0)
-            .then(|| Arc::new(PageCache::new(cfg.page_bytes, cfg.cache_budget)));
+        let cache = (cfg.cache_budget > 0).then(|| {
+            Arc::new(
+                PageCache::new(cfg.page_bytes, cfg.cache_budget).with_tracer(cfg.tracer.clone()),
+            )
+        });
         Ok(ArchiveReadService {
             file,
             header,
@@ -139,6 +149,7 @@ impl ArchiveReadService {
             indexed,
             tuning: cfg.tuning,
             cache,
+            tracer: cfg.tracer,
             sessions: AtomicU64::new(0),
         })
     }
@@ -154,6 +165,7 @@ impl ArchiveReadService {
             self.header.clone(),
             self.tuning,
             self.cache.clone(),
+            self.tracer.clone(),
         )?;
         Ok(ServiceSession { archive: Archive::from_parts(file, self.entries.to_vec(), self.indexed)?, id })
     }
@@ -201,6 +213,11 @@ impl ServiceSession {
     /// Inline/block datasets are not range-addressable; ask for them
     /// through [`Self::archive_mut`].
     pub fn serve(&mut self, req: &ReadRequest) -> Result<ReadResponse> {
+        let mut span =
+            self.archive.file().tracer().map(|t| Tracer::start(t, SpanKind::Serve));
+        if let Some(s) = span.as_mut() {
+            s.set_detail(self.id);
+        }
         let kind = self
             .archive
             .get(&req.dataset)
@@ -213,11 +230,18 @@ impl ServiceSession {
             .kind;
         match kind {
             DatasetKind::Array => {
-                Ok(ReadResponse::Array(self.archive.read_range(&req.dataset, req.first, req.count)?))
+                let out = self.archive.read_range(&req.dataset, req.first, req.count)?;
+                if let Some(s) = span.as_mut() {
+                    s.set_bytes(out.len() as u64);
+                }
+                Ok(ReadResponse::Array(out))
             }
             DatasetKind::Varray => {
                 let (sizes, data) =
                     self.archive.read_varray_range(&req.dataset, req.first, req.count)?;
+                if let Some(s) = span.as_mut() {
+                    s.set_bytes(data.len() as u64);
+                }
                 Ok(ReadResponse::Varray { sizes, data })
             }
             other => Err(ScdaError::usage(

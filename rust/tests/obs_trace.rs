@@ -1,0 +1,193 @@
+//! Observability integration tests: the tracer must watch without
+//! touching. A traced collective write produces byte-identical files to
+//! an untraced one; the cross-rank merge at close puts every rank's
+//! spans — correctly tagged, locally monotonic — on rank 0's timeline
+//! at 1/2/4 ranks; the read service records serve and cache-fill spans
+//! when configured with a tracer and none when not.
+
+use scda::api::{DataSrc, IoTuning};
+use scda::archive::Archive;
+use scda::obs::{Span, SpanKind, Tracer};
+use scda::par::{run_parallel, Communicator, Partition};
+use scda::runtime::{ArchiveReadService, ReadRequest, ReadServiceConfig};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+const N: u64 = 2048;
+const E: u64 = 16;
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("scda-obs");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(format!("{name}-{}.scda", std::process::id()))
+}
+
+fn payload(r: std::ops::Range<u64>) -> Vec<u8> {
+    (r.start * E..r.end * E).map(|i| ((i * 13) % 251) as u8).collect()
+}
+
+/// A collective write of two arrays on `ranks` ranks; every rank
+/// installs a tracer when `traced`, none does otherwise. Returns rank
+/// 0's merged timeline (empty when untraced).
+fn write_archive(path: &PathBuf, ranks: usize, traced: bool) -> Vec<Span> {
+    let part = Arc::new(Partition::uniform(ranks, N));
+    let part2 = Arc::clone(&part);
+    let pathc = path.clone();
+    let timelines: Vec<Vec<Span>> = run_parallel(ranks, move |comm| {
+        let rank = comm.rank();
+        let tracer = traced.then(|| Arc::new(Tracer::for_rank(rank)));
+        let mut ar = Archive::create(comm, &pathc, b"obs-test").unwrap();
+        ar.file_mut().set_sync_on_close(false);
+        // Small stripes so every rank owns some of this small file's
+        // stripes and issues pwrites of its own (default 1 MiB stripes
+        // would elect a single owner for the whole file).
+        ar.file_mut().set_io_tuning(IoTuning::collective().with_stripe_size(4 << 10)).unwrap();
+        ar.file_mut().set_tracer(tracer.clone()).unwrap();
+        let data = payload(part2.local_range(rank));
+        ar.write_array("obs/a", DataSrc::Contiguous(&data), &part2, E, false).unwrap();
+        ar.write_array("obs/az", DataSrc::Contiguous(&data), &part2, E, true).unwrap();
+        ar.finish().unwrap();
+        tracer.and_then(|t| t.merged()).unwrap_or_default()
+    });
+    timelines.into_iter().next().unwrap()
+}
+
+/// Tracing must not perturb the bytes: the format stays
+/// serial-equivalent and deterministic with the recorder attached.
+#[test]
+fn traced_write_is_byte_identical_to_untraced() {
+    let traced = tmp("traced");
+    let plain = tmp("plain");
+    let spans = write_archive(&traced, 4, true);
+    let no_spans = write_archive(&plain, 4, false);
+    assert!(no_spans.is_empty());
+    assert!(!spans.is_empty());
+    let a = std::fs::read(&traced).unwrap();
+    let b = std::fs::read(&plain).unwrap();
+    assert_eq!(a, b, "tracer changed the file bytes");
+    std::fs::remove_file(&traced).unwrap();
+    std::fs::remove_file(&plain).unwrap();
+}
+
+/// The close-time allgather merge: rank 0 holds one ordered timeline
+/// with every rank's spans, correct rank tags, and locally monotonic
+/// timestamps, at each rank count.
+#[test]
+fn merged_timeline_covers_every_rank() {
+    for ranks in [1usize, 2, 4] {
+        let path = tmp(&format!("merge-{ranks}"));
+        let spans = write_archive(&path, ranks, true);
+        assert!(!spans.is_empty(), "ranks={ranks}: no merged timeline on rank 0");
+
+        // Every rank contributed, and no span claims a foreign rank.
+        for r in 0..ranks as u32 {
+            assert!(
+                spans.iter().any(|s| s.rank == r),
+                "ranks={ranks}: rank {r} missing from the merged timeline"
+            );
+        }
+        assert!(spans.iter().all(|s| (s.rank as usize) < ranks));
+
+        // Every rank staged, issued pwrites and wrote sections; the
+        // shuffle exchange spans appear once there is more than one
+        // rank to exchange with.
+        for r in 0..ranks as u32 {
+            for kind in [SpanKind::Stage, SpanKind::Pwrite, SpanKind::SectionWrite] {
+                assert!(
+                    spans.iter().any(|s| s.rank == r && s.kind == kind),
+                    "ranks={ranks}: rank {r} recorded no {} span",
+                    kind.name()
+                );
+            }
+        }
+        if ranks > 1 {
+            assert!(spans.iter().any(|s| s.kind == SpanKind::Exchange));
+        }
+
+        // The merge is globally start-ordered, which makes each rank's
+        // sub-sequence locally monotonic too; spans never end before
+        // they start.
+        for w in spans.windows(2) {
+            assert!(w[0].t_start_ns <= w[1].t_start_ns);
+        }
+        for s in &spans {
+            assert!(s.t_end_ns >= s.t_start_ns);
+            assert!(s.id != 0);
+        }
+        std::fs::remove_file(&path).unwrap();
+    }
+}
+
+/// A traced read service records serve spans (tagged with the session
+/// id) and cache fills; the default (untraced) service records nothing
+/// and serves identical bytes.
+#[test]
+fn read_service_records_serve_and_cache_fill_spans() {
+    let path = tmp("service");
+    write_archive(&path, 2, false);
+
+    let tracer = Arc::new(Tracer::for_rank(0));
+    let cfg = ReadServiceConfig {
+        cache_budget: 1 << 20,
+        tracer: Some(Arc::clone(&tracer)),
+        ..Default::default()
+    };
+    let svc = ArchiveReadService::open_with(&path, cfg).unwrap();
+    let mut sess = svc.session().unwrap();
+    let req = |first| ReadRequest { dataset: "obs/a".into(), first, count: 64 };
+    let traced_bytes: Vec<_> =
+        [0u64, 512, 0].iter().map(|&f| sess.serve(&req(f)).unwrap()).collect();
+    sess.close().unwrap();
+
+    let spans = tracer.snapshot();
+    let serves: Vec<_> = spans.iter().filter(|s| s.kind == SpanKind::Serve).collect();
+    assert_eq!(serves.len(), 3);
+    for s in &serves {
+        assert_eq!(s.bytes, 64 * E);
+        assert_eq!(s.detail, 0, "serve span carries the session id");
+    }
+    assert!(spans.iter().any(|s| s.kind == SpanKind::CacheFill));
+    assert!(tracer.hist(SpanKind::Serve).count() >= 3);
+
+    // Same service without a tracer: same answers, no recorder involved.
+    let svc2 = ArchiveReadService::open_with(&path, ReadServiceConfig::default()).unwrap();
+    let mut sess2 = svc2.session().unwrap();
+    let plain_bytes: Vec<_> =
+        [0u64, 512, 0].iter().map(|&f| sess2.serve(&req(f)).unwrap()).collect();
+    sess2.close().unwrap();
+    for (a, b) in traced_bytes.iter().zip(&plain_bytes) {
+        match (a, b) {
+            (scda::runtime::ReadResponse::Array(x), scda::runtime::ReadResponse::Array(y)) => {
+                assert_eq!(x, y)
+            }
+            _ => panic!("mixed response kinds"),
+        }
+    }
+    std::fs::remove_file(&path).unwrap();
+}
+
+/// Recovery phases report through the tracer without changing what
+/// recovery does.
+#[test]
+fn recovery_records_phase_spans() {
+    let path = tmp("recover");
+    write_archive(&path, 2, false);
+    let len = std::fs::metadata(&path).unwrap().len();
+    let f = std::fs::OpenOptions::new().write(true).open(&path).unwrap();
+    f.set_len(len - 50).unwrap();
+    drop(f);
+
+    let tracer = Arc::new(Tracer::for_rank(0));
+    let report = scda::archive::recover_with(&path, Some(&tracer)).unwrap();
+    assert!(report.recovered_len < len);
+    for kind in [SpanKind::RecoverWalk, SpanKind::RecoverRebuild, SpanKind::RecoverVerify] {
+        assert_eq!(
+            tracer.snapshot().iter().filter(|s| s.kind == kind).count(),
+            1,
+            "expected exactly one {} span",
+            kind.name()
+        );
+    }
+    scda::api::verify_file(&path).unwrap();
+    std::fs::remove_file(&path).unwrap();
+}

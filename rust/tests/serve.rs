@@ -101,6 +101,7 @@ fn served_ranges_match_direct_reads_across_sessions() {
             tuning: IoTuning::default(),
             page_bytes: 4 << 10,
             cache_budget: 16 << 10,
+            ..Default::default()
         };
         let svc = ArchiveReadService::open_with(&path, cfg).unwrap();
         let workers: Vec<_> =
@@ -191,7 +192,12 @@ fn session_window_adaptivity_stays_private() {
     // session.
     let mut tuning = IoTuning::default();
     tuning.sieve_window = 16 << 10;
-    let cfg = ReadServiceConfig { tuning, page_bytes: 4 << 10, cache_budget: 1 << 20 };
+    let cfg = ReadServiceConfig {
+        tuning,
+        page_bytes: 4 << 10,
+        cache_budget: 1 << 20,
+        ..Default::default()
+    };
     let svc = ArchiveReadService::open_with(&path, cfg).unwrap();
 
     let mut jumpy = svc.session().unwrap();

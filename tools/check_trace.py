@@ -1,0 +1,96 @@
+#!/usr/bin/env python3
+"""Validate a Chrome trace-event timeline produced by `scda trace`.
+
+Usage: python3 tools/check_trace.py TRACE.json [--ranks N]
+       [--require NAME [NAME ...]]
+
+Checks (all structural — timing values are machine-dependent):
+
+* the file parses as JSON with a non-empty `traceEvents` list;
+* every event is a complete duration event: `ph` is "X", `dur` >= 0,
+  and the name/cat/pid/tid/ts fields are present with sane types;
+* with `--ranks N`, the set of `tid` values (one timeline thread per
+  rank) is exactly {0, ..., N-1} — a missing rank means the cross-rank
+  span merge dropped a frame;
+* with `--require`, every named span kind (e.g. `stage`, `pwrite`,
+  `cache_fill`) appears at least once.
+
+Exits nonzero listing every violation.
+"""
+
+import argparse
+import json
+import pathlib
+import sys
+
+EVENT_FIELDS = {
+    "name": str,
+    "cat": str,
+    "ph": str,
+    "pid": int,
+    "tid": int,
+    "ts": (int, float),
+    "dur": (int, float),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("trace", type=pathlib.Path)
+    ap.add_argument("--ranks", type=int, default=None, help="expect tids {0..N-1}")
+    ap.add_argument("--require", nargs="*", default=[], help="span names that must appear")
+    args = ap.parse_args()
+
+    failures = []
+    try:
+        doc = json.loads(args.trace.read_text(encoding="utf-8"))
+    except (OSError, ValueError) as e:
+        print(f"FAIL {args.trace}: unreadable or not JSON: {e}")
+        return 1
+
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        print(f"FAIL {args.trace}: traceEvents missing or empty")
+        return 1
+
+    tids = set()
+    names = set()
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            failures.append(f"event {i}: not an object")
+            continue
+        for field, ty in EVENT_FIELDS.items():
+            if not isinstance(ev.get(field), ty) or isinstance(ev.get(field), bool):
+                failures.append(f"event {i}: bad or missing {field!r}: {ev.get(field)!r}")
+        if ev.get("ph") != "X":
+            failures.append(f"event {i}: ph {ev.get('ph')!r} != 'X' (complete event)")
+        if isinstance(ev.get("dur"), (int, float)) and ev["dur"] < 0:
+            failures.append(f"event {i}: negative dur {ev['dur']}")
+        if isinstance(ev.get("tid"), int):
+            tids.add(ev["tid"])
+        if isinstance(ev.get("name"), str):
+            names.add(ev["name"])
+
+    if args.ranks is not None:
+        want = set(range(args.ranks))
+        if tids != want:
+            failures.append(f"rank coverage: tids {sorted(tids)} != expected {sorted(want)}")
+
+    for name in args.require:
+        if name not in names:
+            failures.append(f"required span kind {name!r} never appears")
+
+    if failures:
+        print(f"FAIL {args.trace}: {len(failures)} problem(s)")
+        for f in failures[:50]:
+            print(f"  - {f}")
+        return 1
+    print(
+        f"OK {args.trace}: {len(events)} events, {len(tids)} rank timeline(s), "
+        f"{len(names)} span kind(s)"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
