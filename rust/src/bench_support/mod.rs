@@ -263,6 +263,14 @@ pub fn bench_serve_json_path() -> std::path::PathBuf {
         .unwrap_or_else(|| std::path::PathBuf::from("BENCH_serve.json"))
 }
 
+/// Where AMR scenario bench numbers land (`SCDA_BENCH_AMR_JSON`
+/// overrides).
+pub fn bench_amr_json_path() -> std::path::PathBuf {
+    std::env::var_os("SCDA_BENCH_AMR_JSON")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| std::path::PathBuf::from("BENCH_amr.json"))
+}
+
 /// Encoded write/read throughput of the per-element codec pipeline,
 /// serial vs pooled — the perf-trajectory numbers this PR's acceptance
 /// criterion tracks. Shared by the f1/t4 benches and the ignored-by-
@@ -1250,6 +1258,159 @@ pub mod serve_bench {
             ]);
         }
         r
+    }
+}
+
+pub mod amr_bench {
+    //! End-to-end AMR churn bench: the [`crate::runtime::scenario`]
+    //! driver (refine → rebalance → checkpoint → seeded crash →
+    //! recover → restore-on-P') with per-phase throughput, plus the
+    //! catalog-reopen-cost-vs-step-count probe — the numbers
+    //! `BENCH_amr.json` tracks.
+
+    use super::{measure, JsonVal};
+    use crate::coordinator::open_checkpoint;
+    use crate::error::Result;
+    use crate::par::SerialComm;
+    use crate::runtime::scenario::{crash_path, run_scenario, ScenarioConfig, ScenarioReport};
+    use std::path::{Path, PathBuf};
+
+    /// One full scenario run plus the reopen probes.
+    #[derive(Debug)]
+    pub struct AmrProfile {
+        pub cfg: ScenarioConfig,
+        pub report: ScenarioReport,
+        /// Median ms to reopen a 1-step archive and read its manifest.
+        pub reopen_first_ms: f64,
+        /// Same probe against the full `cfg.cycles`-step archive.
+        pub reopen_last_ms: f64,
+    }
+
+    fn reopen_ms(path: &Path, reps: usize) -> f64 {
+        let s = measure(1, reps.max(1), || {
+            let (ar, _info) = open_checkpoint(SerialComm::new(), path).unwrap();
+            ar.close().unwrap();
+        });
+        s.median * 1e3
+    }
+
+    /// Run the scenario against `path` and probe catalog reopen cost at
+    /// 1 step (a sacrificial `<path>.one` sibling, removed afterwards)
+    /// and at `cfg.cycles` steps (the archive itself).
+    pub fn run(path: &Path, cfg: ScenarioConfig, reps: usize) -> Result<AmrProfile> {
+        let report = run_scenario(path, &cfg)?;
+        let mut one = path.as_os_str().to_os_string();
+        one.push(".one");
+        let one = PathBuf::from(one);
+        let one_cfg =
+            ScenarioConfig { cycles: 1, crash_seed: None, traced: false, ..cfg };
+        run_scenario(&one, &one_cfg)?;
+        let reopen_first_ms = reopen_ms(&one, reps);
+        let reopen_last_ms = reopen_ms(path, reps);
+        let _ = std::fs::remove_file(&one);
+        Ok(AmrProfile { cfg, report, reopen_first_ms, reopen_last_ms })
+    }
+
+    /// Quick-mode defaults: 2 writer ranks, restore on 3, seeded crash
+    /// armed; under `SCDA_BENCH_QUICK` the mesh and cycle count shrink
+    /// but the report keeps its shape. Runs against a temp path and
+    /// cleans up after itself.
+    pub fn run_quick() -> AmrProfile {
+        let q = super::quick();
+        let cfg = ScenarioConfig {
+            cycles: if q { 2 } else { 4 },
+            base_level: if q { 2 } else { 3 },
+            max_level: if q { 4 } else { 6 },
+            writers: 2,
+            restore_ranks: 3,
+            crash_seed: Some(0xC4A5),
+            ..ScenarioConfig::default()
+        };
+        let mut path = std::env::temp_dir();
+        path.push(format!("scda-amr-bench-{}.scda", std::process::id()));
+        let profile = run(&path, cfg, if q { 2 } else { 5 }).expect("amr bench scenario");
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_file(crash_path(&path));
+        profile
+    }
+
+    impl AmrProfile {
+        /// The standard `BENCH_amr.json` report: per-phase throughput,
+        /// crash/recover accounting and the reopen-cost pair. Entry
+        /// names are fixed so quick and full runs share a shape.
+        pub fn report(&self) -> super::BenchReport {
+            let c = &self.report.cycles;
+            let elements: u64 = c.iter().map(|s| s.elements).sum();
+            let payload: u64 = c.iter().map(|s| s.payload_bytes).sum();
+            let moved: u64 = c.iter().map(|s| s.moved_bytes).sum();
+            let refine_s: f64 = c.iter().map(|s| s.refine_s).sum();
+            let rebalance_s: f64 = c.iter().map(|s| s.rebalance_s).sum();
+            let write_s: f64 = c.iter().map(|s| s.write_s).sum();
+            let per_s = |n: u64, s: f64| n as f64 / s.max(1e-9);
+            let mib_s = |b: u64, s: f64| b as f64 / (1024.0 * 1024.0) / s.max(1e-9);
+            let mut r = super::BenchReport::new("amr");
+            r.meta("quick", JsonVal::Bool(super::quick()))
+                .meta("cycles", JsonVal::Int(self.cfg.cycles as i64))
+                .meta("writers", JsonVal::Int(self.cfg.writers as i64))
+                .meta("restore_ranks", JsonVal::Int(self.cfg.restore_ranks as i64))
+                .meta("base_level", JsonVal::Int(self.cfg.base_level as i64))
+                .meta("max_level", JsonVal::Int(self.cfg.max_level as i64))
+                .meta("seed", JsonVal::Int(self.cfg.seed as i64))
+                .meta("encode", JsonVal::Bool(self.cfg.encode));
+            r.entry(vec![
+                ("name", JsonVal::Str("refine".into())),
+                ("elements", JsonVal::Int(elements as i64)),
+                ("seconds", JsonVal::Num(refine_s)),
+                ("elements_per_s", JsonVal::Num(per_s(elements, refine_s))),
+            ]);
+            r.entry(vec![
+                ("name", JsonVal::Str("rebalance".into())),
+                ("elements", JsonVal::Int(elements as i64)),
+                ("moved_bytes", JsonVal::Int(moved as i64)),
+                ("seconds", JsonVal::Num(rebalance_s)),
+                ("elements_per_s", JsonVal::Num(per_s(elements, rebalance_s))),
+            ]);
+            r.entry(vec![
+                ("name", JsonVal::Str("checkpoint".into())),
+                ("payload_bytes", JsonVal::Int(payload as i64)),
+                ("file_bytes", JsonVal::Int(self.report.file_bytes as i64)),
+                ("seconds", JsonVal::Num(write_s)),
+                ("mib_per_s", JsonVal::Num(mib_s(payload, write_s))),
+            ]);
+            let rs = &self.report.restore;
+            r.entry(vec![
+                ("name", JsonVal::Str("restore".into())),
+                ("ranks", JsonVal::Int(rs.ranks as i64)),
+                ("steps", JsonVal::Int(rs.steps as i64)),
+                ("payload_bytes", JsonVal::Int(rs.payload_bytes as i64)),
+                ("seconds", JsonVal::Num(rs.seconds)),
+                ("mib_per_s", JsonVal::Num(mib_s(rs.payload_bytes, rs.seconds))),
+            ]);
+            let (rec_ms, rec_cut, rec_steps, rec_sets) = match &self.report.recover {
+                Some(rec) => {
+                    (rec.seconds * 1e3, rec.truncated_bytes, rec.steps_survived, rec.datasets)
+                }
+                None => (0.0, 0, 0, 0),
+            };
+            r.entry(vec![
+                ("name", JsonVal::Str("recover".into())),
+                ("ms", JsonVal::Num(rec_ms)),
+                ("truncated_bytes", JsonVal::Int(rec_cut as i64)),
+                ("steps_survived", JsonVal::Int(rec_steps as i64)),
+                ("datasets", JsonVal::Int(rec_sets as i64)),
+            ]);
+            r.entry(vec![
+                ("name", JsonVal::Str("reopen_first".into())),
+                ("steps", JsonVal::Int(1)),
+                ("open_ms", JsonVal::Num(self.reopen_first_ms)),
+            ]);
+            r.entry(vec![
+                ("name", JsonVal::Str("reopen_last".into())),
+                ("steps", JsonVal::Int(self.cfg.cycles as i64)),
+                ("open_ms", JsonVal::Num(self.reopen_last_ms)),
+            ]);
+            r
+        }
     }
 }
 

@@ -59,6 +59,20 @@ COMMANDS:
                                self-describing 'p' frames (byte shuffle by
                                <width>, trailing 'd' adds per-plane delta)
   restart <file> [--ranks P]   read a checkpoint on P ranks and report
+  amr-bench <file> [--cycles N] [--ranks P] [--restore-ranks R]
+            [--base B] [--max M] [--seed S] [--crash-seed K] [--no-crash]
+            [--no-encode] [--reps N] [--trace <out.json>] [--spans <path>]
+            [--json <path>]
+                               end-to-end AMR churn scenario: N cycles of
+                               refine -> byte-balanced rebalance -> versioned
+                               checkpoint on P simulated ranks, a seeded
+                               mid-write crash replayed into <file>.crash
+                               plus recovery (disable with --no-crash), then
+                               restore-by-name on R ranks, byte-verified
+                               against a recomputed reference; --trace writes
+                               the merged per-phase Chrome timeline, --spans
+                               the raw span frame (input for trace --merge),
+                               --json the BENCH_amr-shaped report
   serve-bench <file> [--sessions N] [--requests K] [--count C]
               [--budget-kib B] [--stats-json <path>]
                                concurrent read-service benchmark: N client
@@ -84,6 +98,11 @@ COMMANDS:
                                Chrome trace-event JSON (load in
                                chrome://tracing or ui.perfetto.dev) and
                                print the per-kind latency histograms
+  trace --merge <out.json> <frame-files...>
+                               merge raw span frames (e.g. the --spans
+                               output of amr-bench) from a user-supplied
+                               workload into one Chrome timeline and print
+                               the per-kind latency histograms
   version                      print version and backend information
 
 Errors exit nonzero and print `scda error <code>: <message>`.";
@@ -105,6 +124,7 @@ pub fn run(argv: impl IntoIterator<Item = String>) -> i32 {
         "recover" => cmd_recover(&args),
         "demo-write" => cmd_demo_write(&args),
         "restart" => cmd_restart(&args),
+        "amr-bench" => cmd_amr_bench(&args),
         "serve-bench" => cmd_serve_bench(&args),
         "stats" => cmd_stats(&args),
         "trace" => cmd_trace(&args),
@@ -688,6 +708,9 @@ fn cmd_trace(args: &Args) -> CliResult {
     use crate::io::IoTuning;
     use crate::obs::{histogram_table, write_chrome_trace, Span, Tracer};
     use crate::runtime::{ArchiveReadService, ReadRequest, ReadServiceConfig};
+    if let Some(out) = args.get("merge") {
+        return trace_merge(out, args);
+    }
     let path = PathBuf::from(args.positional(0, "file argument")?);
     let out = PathBuf::from(args.positional(1, "output timeline path")?);
     let ranks: usize = args.get_parse("ranks", 4)?;
@@ -750,6 +773,136 @@ fn cmd_trace(args: &Args) -> CliResult {
         .map_err(|e| CliError::Scda(ScdaError::io(e, format!("writing {}", out.display()))))?;
     println!("traced {} span(s) across {ranks} rank(s) -> {}", spans.len(), out.display());
     println!("{}", histogram_table(&spans));
+    Ok(())
+}
+
+/// `scda trace --merge <out.json> <frame-files...>`: merge raw span
+/// frames captured from a *user-supplied* workload (one
+/// `encode_spans` frame per file — e.g. the `--spans` output of
+/// `amr-bench`, or frames a library user dumped from
+/// `Tracer::snapshot`) into one Chrome timeline, instead of tracing
+/// the built-in demo.
+fn trace_merge(out: &str, args: &Args) -> CliResult {
+    use crate::obs::trace::{decode_spans, merge_frames};
+    use crate::obs::{histogram_table, write_chrome_trace};
+    if args.positional.is_empty() {
+        return Err(CliError::Usage(
+            "trace --merge needs at least one span-frame file".into(),
+        ));
+    }
+    let mut frames = Vec::with_capacity(args.positional.len());
+    for p in &args.positional {
+        let bytes = std::fs::read(p)
+            .map_err(|e| CliError::Scda(ScdaError::io(e, format!("reading {p}"))))?;
+        if decode_spans(&bytes).is_none() {
+            return Err(CliError::Usage(format!(
+                "{p}: not a span frame (expected whole 53-byte records with known span kinds)"
+            )));
+        }
+        frames.push(bytes);
+    }
+    let spans = merge_frames(&frames);
+    write_chrome_trace(Path::new(out), &spans)
+        .map_err(|e| CliError::Scda(ScdaError::io(e, format!("writing {out}"))))?;
+    println!("merged {} span(s) from {} frame file(s) -> {out}", spans.len(), frames.len());
+    println!("{}", histogram_table(&spans));
+    Ok(())
+}
+
+/// `scda amr-bench <file>`: the end-to-end AMR churn scenario
+/// (`crate::runtime::scenario`) as a one-shot workload — refine →
+/// rebalance → checkpoint on P ranks, seeded crash replay + recovery
+/// against `<file>.crash`, restore-by-name on a different rank count
+/// with byte verification — reporting per-cycle phase timings, the
+/// folded `Metrics`, and optionally the merged Chrome timeline
+/// (`--trace`), the raw span frame (`--spans`) and the
+/// `BENCH_amr.json`-shaped report (`--json`).
+fn cmd_amr_bench(args: &Args) -> CliResult {
+    use crate::bench_support::{amr_bench, Table};
+    use crate::obs::trace::encode_spans;
+    use crate::obs::{histogram_table, write_chrome_trace};
+    use crate::runtime::scenario::ScenarioConfig;
+    let path = PathBuf::from(args.positional(0, "file argument")?);
+    let d = ScenarioConfig::default();
+    let cfg = ScenarioConfig {
+        cycles: args.get_parse("cycles", d.cycles)?,
+        writers: args.get_parse("ranks", d.writers)?,
+        restore_ranks: args.get_parse("restore-ranks", d.restore_ranks)?,
+        base_level: args.get_parse("base", d.base_level)?,
+        max_level: args.get_parse("max", d.max_level)?,
+        seed: args.get_parse("seed", d.seed)?,
+        encode: !args.flag("no-encode"),
+        crash_seed: if args.flag("no-crash") {
+            None
+        } else {
+            Some(args.get_parse("crash-seed", 0xC4A5u64)?)
+        },
+        traced: args.get("trace").is_some() || args.get("spans").is_some(),
+        ..d
+    };
+    let reps: usize = args.get_parse("reps", 3)?;
+    println!(
+        "amr scenario: {} cycle(s), levels {}..{}, {} writer rank(s), restore on {}, encode={}",
+        cfg.cycles, cfg.base_level, cfg.max_level, cfg.writers, cfg.restore_ranks, cfg.encode
+    );
+    let profile = amr_bench::run(&path, cfg, reps)?;
+    let report = &profile.report;
+    let mut t = Table::new(&[
+        "cycle", "elements", "payload B", "moved B", "refine ms", "rebalance ms", "write ms",
+    ]);
+    for c in &report.cycles {
+        t.row(&[
+            c.cycle.to_string(),
+            c.elements.to_string(),
+            c.payload_bytes.to_string(),
+            c.moved_bytes.to_string(),
+            format!("{:.3}", c.refine_s * 1e3),
+            format!("{:.3}", c.rebalance_s * 1e3),
+            format!("{:.3}", c.write_s * 1e3),
+        ]);
+    }
+    t.print();
+    println!("archive: {} ({} bytes)", path.display(), report.file_bytes);
+    if let Some(rec) = &report.recover {
+        println!(
+            "crash replay: recovered {} in {:.3} ms — {} torn byte(s) cut, \
+             {} dataset(s) survived, {} complete step(s) restored on {} rank(s)",
+            if rec.rebuilt { "rebuilt" } else { "intact" },
+            rec.seconds * 1e3,
+            rec.truncated_bytes,
+            rec.datasets,
+            rec.steps_survived,
+            cfg.restore_ranks,
+        );
+    }
+    let rs = &report.restore;
+    println!(
+        "restore on {} rank(s): {} step(s), {} payload bytes in {:.3} ms (byte-verified)",
+        rs.ranks,
+        rs.steps,
+        rs.payload_bytes,
+        rs.seconds * 1e3
+    );
+    println!(
+        "catalog reopen: {:.3} ms at 1 step, {:.3} ms at {} steps",
+        profile.reopen_first_ms, profile.reopen_last_ms, cfg.cycles
+    );
+    println!("{}", report.metrics.report());
+    if let Some(out) = args.get("trace") {
+        write_chrome_trace(Path::new(out), &report.spans)
+            .map_err(|e| CliError::Scda(ScdaError::io(e, format!("writing {out}"))))?;
+        println!("wrote {out}");
+        println!("{}", histogram_table(&report.spans));
+    }
+    if let Some(out) = args.get("spans") {
+        std::fs::write(out, encode_spans(&report.spans))
+            .map_err(|e| CliError::Scda(ScdaError::io(e, format!("writing {out}"))))?;
+        println!("wrote {out}");
+    }
+    if let Some(out) = args.get("json") {
+        write_json_file(out, &profile.report().render())?;
+        println!("wrote {out}");
+    }
     Ok(())
 }
 
@@ -1008,6 +1161,63 @@ mod tests {
         assert_ne!(run_words(&["trace", p, o, "--ranks", "0"]), 0);
         std::fs::remove_file(&path).unwrap();
         std::fs::remove_file(&out).unwrap();
+    }
+
+    #[test]
+    fn amr_bench_runs_exports_and_merges() {
+        let path = tmpfile("cli-amr");
+        let p = path.to_str().unwrap();
+        let dir = std::env::temp_dir().join("scda-cli");
+        let pid = std::process::id();
+        let trace = dir.join(format!("amr-trace-{pid}.json"));
+        let frames = dir.join(format!("amr-frames-{pid}.bin"));
+        let json = dir.join(format!("amr-bench-{pid}.json"));
+        assert_eq!(
+            run_words(&[
+                "amr-bench", p, "--cycles", "2", "--ranks", "2", "--restore-ranks", "3",
+                "--base", "1", "--max", "3", "--reps", "1",
+                "--trace", trace.to_str().unwrap(),
+                "--spans", frames.to_str().unwrap(),
+                "--json", json.to_str().unwrap(),
+            ]),
+            0
+        );
+        // The scenario's archive is an ordinary verifiable checkpoint.
+        assert_eq!(run_words(&["verify", p]), 0);
+        assert_eq!(run_words(&["restart", p, "--ranks", "4"]), 0);
+        // Timeline covers the scenario phases.
+        let text = std::fs::read_to_string(&trace).unwrap();
+        assert!(text.contains("\"traceEvents\""));
+        for kind in ["refine", "rebalance", "restore", "section_write"] {
+            assert!(text.contains(&format!("\"name\": \"{kind}\"")), "missing {kind} spans");
+        }
+        // The JSON report has the committed BENCH_amr.json shape.
+        let doc = std::fs::read_to_string(&json).unwrap();
+        assert!(doc.contains("\"bench\": \"amr\""));
+        for entry in
+            ["refine", "rebalance", "checkpoint", "restore", "recover", "reopen_first", "reopen_last"]
+        {
+            assert!(doc.contains(&format!("\"name\": \"{entry}\"")), "missing {entry} entry");
+        }
+        // The raw frame merges back into a timeline; garbage does not.
+        let merged = dir.join(format!("amr-merged-{pid}.json"));
+        assert_eq!(
+            run_words(&["trace", "--merge", merged.to_str().unwrap(), frames.to_str().unwrap()]),
+            0
+        );
+        assert!(std::fs::read_to_string(&merged).unwrap().contains("\"traceEvents\""));
+        assert_ne!(run_words(&["trace", "--merge", merged.to_str().unwrap()]), 0);
+        assert_ne!(
+            run_words(&["trace", "--merge", merged.to_str().unwrap(), json.to_str().unwrap()]),
+            0
+        );
+        // Config errors surface as usage errors, not panics.
+        assert_ne!(run_words(&["amr-bench", p, "--ranks", "0"]), 0);
+        assert_ne!(run_words(&["amr-bench", p, "--base", "9", "--max", "3"]), 0);
+        for f in [&path, &trace, &frames, &json, &merged] {
+            let _ = std::fs::remove_file(f);
+        }
+        let _ = std::fs::remove_file(crate::runtime::scenario::crash_path(&path));
     }
 
     #[test]

@@ -164,6 +164,11 @@ pub mod corrupt {
     /// that locates it is malformed, or disagrees with the sections it
     /// describes (see `crate::archive`).
     pub const BAD_CATALOG: i32 = 14;
+    /// Data read back (or moved through a rebalance exchange) differs
+    /// from the independently recomputed reference — the AMR scenario
+    /// driver's end-to-end verification failed
+    /// (see `crate::runtime::scenario`).
+    pub const SCENARIO_MISMATCH: i32 = 15;
 }
 
 // Detail codes for usage errors.
@@ -182,6 +187,10 @@ pub mod usage {
     /// An element range (`first`, `count`) reaches outside the dataset
     /// (see `crate::archive::Archive::read_range`).
     pub const BAD_RANGE: i32 = 12;
+    /// A driver configuration is internally inconsistent (zero ranks or
+    /// cycles, refinement floor above the cap, a crash plan that never
+    /// fires — see `crate::runtime::scenario::ScenarioConfig`).
+    pub const BAD_CONFIG: i32 = 13;
 }
 
 /// Translate an error code to a string, mirroring `scda_ferror_string`
@@ -204,6 +213,7 @@ pub fn ferror_string(code: i32) -> Option<&'static str> {
         c if c == 1000 + corrupt::SIZE_MISMATCH => "corrupt file: uncompressed size mismatch",
         c if c == 1000 + corrupt::COUNT_OVERFLOW => "corrupt file: count exceeds 26 decimal digits",
         c if c == 1000 + corrupt::BAD_CATALOG => "corrupt file: malformed archive catalog",
+        c if c == 1000 + corrupt::SCENARIO_MISMATCH => "corrupt data: scenario verification mismatch",
         c if (1000..2000).contains(&c) => "corrupt file contents",
         c if (2000..3000).contains(&c) => "file system error",
         c if c == 3000 + usage::BAD_MODE => "usage: invalid open mode",
@@ -218,6 +228,7 @@ pub fn ferror_string(code: i32) -> Option<&'static str> {
         c if c == 3000 + usage::NO_SUCH_DATASET => "usage: no dataset with that name in the archive",
         c if c == 3000 + usage::BAD_DATASET_NAME => "usage: invalid or duplicate dataset name",
         c if c == 3000 + usage::BAD_RANGE => "usage: element range outside the dataset",
+        c if c == 3000 + usage::BAD_CONFIG => "usage: inconsistent driver configuration",
         c if (3000..4000).contains(&c) => "semantically invalid input or call sequence",
         _ => return None,
     })

@@ -377,6 +377,24 @@
 //!   the trace viewer); `scda stats --json` and the `--stats-json`
 //!   flags dump the flat counters machine-readably. See
 //!   `docs/observability.md` for setup and the span-kind registry.
+//!
+//! # AMR scenario
+//!
+//! [`runtime::scenario`] closes the loop: a deterministic, seedable AMR
+//! churn driver that runs the whole stack the way the paper's motivating
+//! applications do — N cycles of refine ([`mesh::ring_mesh`] around a
+//! golden-angle moving front) → byte-balanced rebalance
+//! ([`coordinator::rebalance::by_bytes`] + `exchange`, verified against
+//! a direct recomputation) → versioned checkpoint
+//! ([`archive::restart`]) — then a seeded mid-write crash replayed
+//! serially into a sacrificial sibling (serial equivalence makes the
+//! serial torn prefix stand for any writer count's), recovery, and
+//! restore-by-name on a *different* rank count with every byte compared
+//! to an independently recomputed reference. Phases record
+//! refine/rebalance/restore spans; `scda amr-bench` is the CLI face and
+//! `BENCH_amr.json` the committed snapshot (`bench_support::amr_bench`).
+//! The soak (`rust/tests/amr_scenario.rs`) sweeps writer ranks 1/2/4/8 ×
+//! bisected crash points × restore-P' ≠ P; see `docs/amr.md`.
 
 pub mod api;
 pub mod archive;

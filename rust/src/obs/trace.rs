@@ -76,10 +76,20 @@ pub enum SpanKind {
     RecoverRebuild = 12,
     /// Recovery phase: the gating end-to-end re-verification.
     RecoverVerify = 13,
+    /// AMR scenario phase: mesh refinement (`runtime/scenario.rs`);
+    /// bytes = element count of the refined mesh.
+    Refine = 14,
+    /// AMR scenario phase: byte-balanced repartition + payload
+    /// exchange (`coordinator/rebalance.rs`); bytes = payload moved
+    /// through the exchange by this rank.
+    Rebalance = 15,
+    /// AMR scenario phase: restore-by-name of one checkpoint step on
+    /// the reader rank count; bytes = restored payload, detail = step.
+    Restore = 16,
 }
 
 impl SpanKind {
-    pub const ALL: [SpanKind; 14] = [
+    pub const ALL: [SpanKind; 17] = [
         SpanKind::SectionWrite,
         SpanKind::SectionRead,
         SpanKind::Stage,
@@ -94,6 +104,9 @@ impl SpanKind {
         SpanKind::RecoverWalk,
         SpanKind::RecoverRebuild,
         SpanKind::RecoverVerify,
+        SpanKind::Refine,
+        SpanKind::Rebalance,
+        SpanKind::Restore,
     ];
     pub const COUNT: usize = SpanKind::ALL.len();
 
@@ -113,6 +126,9 @@ impl SpanKind {
             SpanKind::RecoverWalk => "recover_walk",
             SpanKind::RecoverRebuild => "recover_rebuild",
             SpanKind::RecoverVerify => "recover_verify",
+            SpanKind::Refine => "refine",
+            SpanKind::Rebalance => "rebalance",
+            SpanKind::Restore => "restore",
         }
     }
 

@@ -1,15 +1,20 @@
 //! Runtime services: the bridge between the rust coordinator and the
 //! AOT-compiled JAX/Pallas graphs (a PJRT CPU engine plus a
 //! bit-identical native fallback for the preconditioning transform),
-//! and the [`ArchiveReadService`] — the shared-cache multi-session read
-//! server over one archive.
+//! the [`ArchiveReadService`] — the shared-cache multi-session read
+//! server over one archive — and the [`scenario`] AMR churn driver
+//! that exercises the whole stack end to end.
 
 pub mod engine;
 pub mod precond;
+pub mod scenario;
 pub mod service;
 
 pub use engine::Engine;
 pub use precond::{entropy_estimate, native_forward, native_inverse, Preconditioner, CHUNK, TILE};
+pub use scenario::{
+    run_scenario, CycleStats, RecoverStats, RestoreStats, ScenarioConfig, ScenarioReport,
+};
 pub use service::{
     ArchiveReadService, Identity, NativeTransform, PrecondService, ReadRequest,
     ReadResponse, ReadServiceConfig, ServiceSession, Transform,

@@ -1,0 +1,721 @@
+//! End-to-end AMR churn scenario: refine → rebalance → checkpoint →
+//! crash → restore-on-a-different-rank-count, as one deterministic,
+//! seedable driver.
+//!
+//! The paper's claim is that scda files are invariant under linear
+//! repartition; this module is the workload that *exercises* the claim
+//! with every layer the crate has. Each cycle moves a ring-shaped
+//! refinement front across the unit square ([`mesh_at`]), rebalances
+//! the Morton-ordered leaves by payload bytes
+//! ([`crate::coordinator::rebalance::by_bytes`] + `exchange`), writes a
+//! versioned checkpoint of one fixed-size field (`rho`) and one
+//! variable-size hp field (`hp`) through [`crate::archive::restart`],
+//! and — when a crash seed is armed — replays the same deterministic
+//! write stream into a sacrificial sibling file under
+//! [`FaultPlan::seeded_crash`], recovers the torn tail, and restores
+//! every surviving step on a *different* rank count, comparing restored
+//! bytes against an independently recomputed reference.
+//!
+//! Two properties make the cross-P verification honest:
+//!
+//! * the global element stream of a cycle is a pure function of
+//!   `(seed, cycle)`, so any rank on any partition can recompute its
+//!   window of the reference bytes without talking to the writer;
+//! * serial equivalence means the crash replay may run at P = 1: a torn
+//!   prefix of the serial file *is* a torn prefix of the P-rank file,
+//!   byte for byte (asserted by `tests/amr_scenario.rs`).
+//!
+//! Phases are traced ([`SpanKind::Refine`], [`SpanKind::Rebalance`],
+//! [`SpanKind::Restore`] plus the existing write/recover spans) when
+//! [`ScenarioConfig::traced`] is set, and I/O counters fold into one
+//! [`Metrics`] exactly once per handle. `scda amr-bench` and
+//! `bench_support::amr_bench` wrap this module; `BENCH_amr.json` is the
+//! committed snapshot.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::api::IoTuning;
+use crate::archive::{recover_with, restart, Archive, RecoveryAction};
+use crate::coordinator::rebalance::{by_bytes, by_count, exchange};
+use crate::coordinator::{Field, FieldPayload, Metrics};
+use crate::error::{corrupt, usage, Result, ScdaError};
+use crate::io::FaultPlan;
+use crate::mesh::fields::{hp_payload_size, local_fixed_field, local_hp_field};
+use crate::mesh::{check_mesh, ring_mesh, Quadrant};
+use crate::obs::{Span, SpanKind, Tracer};
+use crate::par::{run_parallel, Communicator, Partition, SerialComm};
+use crate::runtime::Identity;
+
+/// Application string stamped into every scenario checkpoint manifest.
+pub const APP_NAME: &str = "amr";
+/// Fixed-size field name (`ckpt/<n>/rho`).
+pub const FIXED_FIELD: &str = "rho";
+/// Variable-size hp field name (`ckpt/<n>/hp`).
+pub const HP_FIELD: &str = "hp";
+
+/// Knobs of one scenario run. `Copy` on purpose: the driver shares the
+/// config across writer/reader threads by value, which keeps every
+/// closure trivially `Send + Sync`.
+#[derive(Clone, Copy, Debug)]
+pub struct ScenarioConfig {
+    /// Checkpoint steps written (steps are numbered `1..=cycles`).
+    pub cycles: u32,
+    /// Uniform refinement floor of the ring mesh.
+    pub base_level: u8,
+    /// Refinement cap at the moving front.
+    pub max_level: u8,
+    /// Writer rank count P.
+    pub writers: usize,
+    /// Restore rank count P' (the interesting case is P' ≠ P).
+    pub restore_ranks: usize,
+    /// Doubles per element of the fixed field.
+    pub fixed_k: usize,
+    /// Polynomial degree cap of the hp field (payload grows with level).
+    pub max_degree: u32,
+    /// Compress field payloads.
+    pub encode: bool,
+    /// Seed of the moving refinement front (mesh shape per cycle).
+    pub seed: u64,
+    /// `Some(seed)` arms the crash replay leg.
+    pub crash_seed: Option<u64>,
+    /// Upper bound on the seeded crash trigger (write ops before the
+    /// power cut), forwarded to [`FaultPlan::seeded_crash`].
+    pub crash_max_trigger: u64,
+    /// Record per-phase spans and merge them cross-rank.
+    pub traced: bool,
+}
+
+impl Default for ScenarioConfig {
+    fn default() -> Self {
+        ScenarioConfig {
+            cycles: 3,
+            base_level: 2,
+            max_level: 5,
+            writers: 2,
+            restore_ranks: 3,
+            fixed_k: 5,
+            max_degree: 6,
+            encode: true,
+            seed: 0x5cda,
+            crash_seed: None,
+            crash_max_trigger: 64,
+            traced: false,
+        }
+    }
+}
+
+impl ScenarioConfig {
+    fn validate(&self) -> Result<()> {
+        let bad = |msg: String| Err(ScdaError::usage(usage::BAD_CONFIG, msg));
+        if self.cycles == 0 {
+            return bad("scenario needs at least one cycle".into());
+        }
+        if self.writers == 0 || self.restore_ranks == 0 {
+            return bad("writer and restore rank counts must be >= 1".into());
+        }
+        if self.base_level > self.max_level {
+            return bad(format!(
+                "base_level {} exceeds max_level {}",
+                self.base_level, self.max_level
+            ));
+        }
+        if self.fixed_k == 0 {
+            return bad("fixed_k must be >= 1".into());
+        }
+        Ok(())
+    }
+
+    fn fixed_elem_size(&self) -> u64 {
+        (self.fixed_k * 8) as u64
+    }
+}
+
+/// Wall time and volume of one cycle (rank 0's clock).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CycleStats {
+    /// Step number (1-based).
+    pub cycle: u64,
+    /// Leaves in this cycle's mesh.
+    pub elements: u64,
+    /// Field payload bytes checkpointed (both fields, all ranks).
+    pub payload_bytes: u64,
+    /// Payload bytes whose owning rank changed in the rebalance.
+    pub moved_bytes: u64,
+    /// Seconds in refine (mesh build + validity check).
+    pub refine_s: f64,
+    /// Seconds in rebalance (weights, partition, exchange, verify).
+    pub rebalance_s: f64,
+    /// Seconds in checkpoint write (`write_step` + flush).
+    pub write_s: f64,
+}
+
+/// Outcome of the crash replay + recovery leg.
+#[derive(Clone, Copy, Debug)]
+pub struct RecoverStats {
+    /// Seconds spent in [`crate::archive::recover_with`].
+    pub seconds: f64,
+    /// Recovery rebuilt the trailer (vs found the file intact).
+    pub rebuilt: bool,
+    /// Torn bytes dropped from the tail.
+    pub truncated_bytes: u64,
+    /// Datasets that survived recovery.
+    pub datasets: u64,
+    /// Steps whose *complete* dataset set (info, manifest, both
+    /// fields) survived — these restored byte-identically on
+    /// [`ScenarioConfig::restore_ranks`].
+    pub steps_survived: u64,
+}
+
+/// Outcome of the restore-by-name verification leg.
+#[derive(Clone, Copy, Debug)]
+pub struct RestoreStats {
+    /// Reader rank count P'.
+    pub ranks: usize,
+    /// Steps restored and verified.
+    pub steps: u64,
+    /// Field payload bytes restored (all ranks).
+    pub payload_bytes: u64,
+    /// Wall seconds for the whole restore sweep.
+    pub seconds: f64,
+}
+
+/// Everything one [`run_scenario`] call produced.
+#[derive(Debug)]
+pub struct ScenarioReport {
+    /// Per-cycle phase timings (rank 0).
+    pub cycles: Vec<CycleStats>,
+    /// Final size of the (uncrashed) archive.
+    pub file_bytes: u64,
+    /// Crash/recover leg, present when a crash seed was armed.
+    pub recover: Option<RecoverStats>,
+    /// Restore-by-name verification on `restore_ranks`.
+    pub restore: RestoreStats,
+    /// Merged spans from every traced leg (empty when untraced).
+    pub spans: Vec<Span>,
+    /// Folded I/O + pipeline counters (write + restore legs).
+    pub metrics: Arc<Metrics>,
+}
+
+// ---------------------------------------------------------------------
+// Deterministic workload shape
+// ---------------------------------------------------------------------
+
+fn splitmix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// Center and radius of the refinement front at `cycle`. The center
+/// orbits the domain midpoint on a golden-angle schedule so successive
+/// cycles never overlap, and the radius breathes with the seed — every
+/// value is a pure function of `(seed, cycle)`.
+pub fn front(seed: u64, cycle: u64) -> ((f64, f64), f64) {
+    let h = splitmix(seed ^ cycle.wrapping_mul(0x9e37_79b9_7f4a_7c15));
+    let unit = (h >> 11) as f64 / (1u64 << 53) as f64;
+    let turns = (unit + 0.618_033_988_749_895 * cycle as f64).fract();
+    let theta = std::f64::consts::TAU * turns;
+    let radius = 0.12 + 0.10 * (((h >> 16) & 0xffff) as f64 / 65536.0);
+    ((0.5 + 0.2 * theta.cos(), 0.5 + 0.2 * theta.sin()), radius)
+}
+
+/// The cycle's mesh: a ring of max-level refinement around the moving
+/// front over a uniform base. Deterministic — every rank (and the
+/// restore leg, on a different rank count) recomputes the same leaves.
+pub fn mesh_at(cfg: &ScenarioConfig, cycle: u64) -> Vec<Quadrant> {
+    let (center, radius) = front(cfg.seed, cycle);
+    ring_mesh(cfg.base_level, cfg.max_level, center, radius)
+}
+
+/// Checkpoint bytes each leaf contributes (fixed + hp payload) — the
+/// weights `by_bytes` balances.
+pub fn element_weights(leaves: &[Quadrant], fixed_k: usize, max_degree: u32) -> Vec<u64> {
+    leaves.iter().map(|q| (fixed_k * 8) as u64 + hp_payload_size(q, max_degree)).collect()
+}
+
+/// Path of the sacrificial crash-replay sibling (`<file>.crash`).
+pub fn crash_path(path: &Path) -> PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".crash");
+    PathBuf::from(os)
+}
+
+fn usize_range(r: std::ops::Range<u64>) -> std::ops::Range<usize> {
+    r.start as usize..r.end as usize
+}
+
+fn mismatch(detail: i32, what: String) -> ScdaError {
+    ScdaError::corrupt(detail, what)
+}
+
+/// Collective OR of a local failure flag, so a rank that *would* bail
+/// out early instead fails in lockstep with its peers (a lone early
+/// return would strand the others in the next barrier).
+fn agree_ok<C: Communicator>(comm: &C, local_ok: bool, what: &str) -> Result<()> {
+    let votes = comm.allgather_bytes(vec![local_ok as u8]);
+    if votes.iter().all(|v| v == &[1u8]) {
+        Ok(())
+    } else {
+        Err(mismatch(corrupt::SCENARIO_MISMATCH, format!("scenario verification failed: {what}")))
+    }
+}
+
+// ---------------------------------------------------------------------
+// Cycle body shared by the parallel write leg and the serial crash leg
+// ---------------------------------------------------------------------
+
+/// The deterministic per-cycle element stream: leaves, byte weights and
+/// the byte-balanced target partition for `ranks` writers.
+fn cycle_shape(cfg: &ScenarioConfig, cycle: u64, ranks: usize) -> (Vec<Quadrant>, Vec<u64>, Partition) {
+    let leaves = mesh_at(cfg, cycle);
+    let weights = element_weights(&leaves, cfg.fixed_k, cfg.max_degree);
+    let part = by_bytes(&weights, ranks);
+    (leaves, weights, part)
+}
+
+/// Build this rank's two checkpoint fields over `range` of `leaves`.
+fn make_fields(
+    cfg: &ScenarioConfig,
+    leaves: &[Quadrant],
+    range: std::ops::Range<usize>,
+    fixed: Vec<u8>,
+    hp_sizes: Vec<u64>,
+    hp: Vec<u8>,
+) -> [Field; 2] {
+    debug_assert_eq!(fixed.len() as u64, range.len() as u64 * cfg.fixed_elem_size());
+    debug_assert_eq!(hp_sizes.len(), leaves[range].len());
+    [
+        Field {
+            name: FIXED_FIELD.to_string(),
+            encode: cfg.encode,
+            precondition: false,
+            payload: FieldPayload::Fixed { elem_size: cfg.fixed_elem_size(), data: fixed },
+        },
+        Field {
+            name: HP_FIELD.to_string(),
+            encode: cfg.encode,
+            precondition: false,
+            payload: FieldPayload::Var { sizes: hp_sizes, data: hp },
+        },
+    ]
+}
+
+// ---------------------------------------------------------------------
+// Write leg (P writer ranks, one archive, `cycles` steps)
+// ---------------------------------------------------------------------
+
+fn write_leg(
+    path: &Path,
+    cfg: &ScenarioConfig,
+    metrics: &Arc<Metrics>,
+) -> Result<(Vec<CycleStats>, Vec<Span>)> {
+    let cfg = *cfg;
+    let path = path.to_path_buf();
+    let metrics = Arc::clone(metrics);
+    let legs = run_parallel(cfg.writers, move |comm| -> Result<(Vec<CycleStats>, Vec<Span>)> {
+        let rank = comm.rank();
+        let size = comm.size();
+        let tracer = cfg.traced.then(|| Arc::new(Tracer::for_rank(rank)));
+        let mut ar = Archive::create(comm, &path, b"scda amr churn scenario")?;
+        ar.file_mut().set_io_tuning(IoTuning::collective())?;
+        if let Some(t) = &tracer {
+            ar.file_mut().set_tracer(Some(Arc::clone(t)))?;
+        }
+        let mut stats = Vec::with_capacity(cfg.cycles as usize);
+        for cycle in 1..=cfg.cycles as u64 {
+            // --- refine: build this cycle's mesh and validate it.
+            let t0 = Instant::now();
+            let mut span = tracer.as_ref().map(|t| Tracer::start(t, SpanKind::Refine));
+            let (leaves, weights, part_new) = cycle_shape(&cfg, cycle, size);
+            let n = leaves.len() as u64;
+            let mesh_ok = check_mesh(&leaves);
+            if let Some(s) = span.as_mut() {
+                s.set_bytes(n);
+                s.set_detail(cycle);
+            }
+            drop(span);
+            let refine_s = t0.elapsed().as_secs_f64();
+            agree_ok(ar.file().comm(), mesh_ok, "refine produced an invalid mesh")?;
+
+            // --- rebalance: naive uniform ownership → byte-balanced
+            // ownership, payloads moved through the allgather exchange,
+            // then checked against a direct recomputation of the new
+            // window (the exchange must be a pure relabeling).
+            let t1 = Instant::now();
+            let mut span = tracer.as_ref().map(|t| Tracer::start(t, SpanKind::Rebalance));
+            let part_old = by_count(n, size);
+            let old = usize_range(part_old.local_range(rank));
+            let new = usize_range(part_new.local_range(rank));
+            let fixed_old = local_fixed_field(&leaves, old.clone(), cfg.fixed_k);
+            let (hp_sizes_old, hp_old) = local_hp_field(&leaves, old.clone(), cfg.max_degree);
+            let fixed_sizes_old = vec![cfg.fixed_elem_size(); old.len()];
+            let (_, fixed_new) =
+                exchange(ar.file().comm(), &part_old, &part_new, &fixed_sizes_old, &fixed_old);
+            let (hp_sizes_new, hp_new) =
+                exchange(ar.file().comm(), &part_old, &part_new, &hp_sizes_old, &hp_old);
+            let fixed_ref = local_fixed_field(&leaves, new.clone(), cfg.fixed_k);
+            let (hp_sizes_ref, hp_ref) = local_hp_field(&leaves, new.clone(), cfg.max_degree);
+            let exchange_ok =
+                fixed_new == fixed_ref && hp_sizes_new == hp_sizes_ref && hp_new == hp_ref;
+            let moved_bytes: u64 = weights
+                .iter()
+                .enumerate()
+                .filter(|&(i, _)| part_old.owner_of(i as u64) != part_new.owner_of(i as u64))
+                .map(|(_, w)| *w)
+                .sum();
+            if let Some(s) = span.as_mut() {
+                s.set_bytes((fixed_new.len() + hp_new.len()) as u64);
+                s.set_detail(cycle);
+            }
+            drop(span);
+            let rebalance_s = t1.elapsed().as_secs_f64();
+            agree_ok(
+                ar.file().comm(),
+                exchange_ok,
+                "exchanged payload differs from the recomputed reference",
+            )?;
+
+            // --- checkpoint: one versioned step under the balanced
+            // partition; the flush lands the cycle's sections on disk
+            // so write_s measures real I/O, not staging.
+            let t2 = Instant::now();
+            let fields = make_fields(&cfg, &leaves, new, fixed_new, hp_sizes_new, hp_new);
+            restart::write_step(&mut ar, APP_NAME, cycle, &part_new, &fields, &Identity, &metrics)?;
+            Metrics::timed(&metrics.ns_write, || ar.file_mut().flush())?;
+            let write_s = t2.elapsed().as_secs_f64();
+
+            stats.push(CycleStats {
+                cycle,
+                elements: n,
+                payload_bytes: weights.iter().sum(),
+                moved_bytes,
+                refine_s,
+                rebalance_s,
+                write_s,
+            });
+        }
+        metrics.absorb_io_write(&ar.file().io_stats());
+        metrics.absorb_engine(&ar.file().engine_stats());
+        ar.finish()?;
+        let spans = tracer.and_then(|t| t.merged()).unwrap_or_default();
+        Ok((stats, spans))
+    });
+    let mut out = None;
+    for (rank, leg) in legs.into_iter().enumerate() {
+        let (stats, spans) = leg?;
+        if rank == 0 {
+            out = Some((stats, spans));
+        }
+    }
+    Ok(out.expect("run_parallel returns one leg per rank"))
+}
+
+// ---------------------------------------------------------------------
+// Restore leg (P' reader ranks, every step verified against recompute)
+// ---------------------------------------------------------------------
+
+fn restore_leg(
+    path: &Path,
+    cfg: &ScenarioConfig,
+    steps: &[u64],
+    ranks: usize,
+    metrics: &Arc<Metrics>,
+) -> Result<(RestoreStats, Vec<Span>)> {
+    let cfg = *cfg;
+    let path = path.to_path_buf();
+    let steps: Vec<u64> = steps.to_vec();
+    let metrics = Arc::clone(metrics);
+    let t = Instant::now();
+    let legs = run_parallel(ranks, move |comm| -> Result<(u64, Vec<Span>)> {
+        let rank = comm.rank();
+        let tracer = cfg.traced.then(|| Arc::new(Tracer::for_rank(rank)));
+        let mut ar = Archive::open(comm, &path)?;
+        if let Some(t) = &tracer {
+            ar.file_mut().set_tracer(Some(Arc::clone(t)))?;
+        }
+        let mut bytes = 0u64;
+        for &step in &steps {
+            let leaves = mesh_at(&cfg, step);
+            let n = leaves.len() as u64;
+            let part = Partition::uniform(ranks, n);
+            let window = usize_range(part.local_range(rank));
+            let mut span = tracer.as_ref().map(|t| Tracer::start(t, SpanKind::Restore));
+            let (info, fields) = restart::read_step(&mut ar, Some(step), &part, &Identity)?;
+            let fixed_ref = local_fixed_field(&leaves, window.clone(), cfg.fixed_k);
+            let (hp_sizes_ref, hp_ref) = local_hp_field(&leaves, window.clone(), cfg.max_degree);
+            let mut ok = info.step == step && fields.len() == 2;
+            for f in &fields {
+                ok &= match (&*f.name, &f.payload) {
+                    (FIXED_FIELD, FieldPayload::Fixed { elem_size, data }) => {
+                        *elem_size == cfg.fixed_elem_size() && *data == fixed_ref
+                    }
+                    (HP_FIELD, FieldPayload::Var { sizes, data }) => {
+                        *sizes == hp_sizes_ref && *data == hp_ref
+                    }
+                    _ => false,
+                };
+            }
+            bytes += (fixed_ref.len() + hp_ref.len()) as u64;
+            if let Some(s) = span.as_mut() {
+                s.set_bytes((fixed_ref.len() + hp_ref.len()) as u64);
+                s.set_detail(step);
+            }
+            drop(span);
+            agree_ok(
+                ar.file().comm(),
+                ok,
+                "restored field bytes differ from the recomputed reference",
+            )?;
+        }
+        metrics.absorb_io_read(&ar.file().io_stats());
+        metrics.absorb_engine(&ar.file().engine_stats());
+        ar.close()?;
+        let spans = tracer.and_then(|t| t.merged()).unwrap_or_default();
+        Ok((bytes, spans))
+    });
+    let seconds = t.elapsed().as_secs_f64();
+    let mut payload_bytes = 0;
+    let mut spans = Vec::new();
+    for leg in legs {
+        let (b, s) = leg?;
+        payload_bytes += b;
+        spans.extend(s);
+    }
+    Ok((RestoreStats { ranks, steps: steps.len() as u64, payload_bytes, seconds }, spans))
+}
+
+// ---------------------------------------------------------------------
+// Crash replay leg (serial by serial-equivalence) + recovery
+// ---------------------------------------------------------------------
+
+fn crash_leg(
+    main_path: &Path,
+    cfg: &ScenarioConfig,
+    crash_seed: u64,
+    metrics: &Arc<Metrics>,
+) -> Result<(RecoverStats, Vec<Span>)> {
+    let path = crash_path(main_path);
+    // Replay the identical element stream serially: serial equivalence
+    // means this file's bytes match the P-rank archive, so a torn
+    // prefix here stands for a torn prefix of any writer rank count.
+    // The seeded trigger may land past the end of a small workload's
+    // write-op count, in which case no crash fires — derive a new seed
+    // and replay (deterministic given `crash_seed`).
+    let replay_metrics = Metrics::new();
+    let mut attempt_seed = crash_seed;
+    let mut fired = false;
+    for _ in 0..8 {
+        let _ = std::fs::remove_file(&path);
+        let mut ar = Archive::create(SerialComm::new(), &path, b"scda amr churn scenario")?;
+        ar.file_mut().set_io_tuning(IoTuning::direct())?;
+        // Armed only after create: the 128-byte file header is already
+        // on disk, so recovery always has a valid prefix to stand on.
+        ar.file_mut()
+            .set_fault_plan(Some(FaultPlan::seeded_crash(attempt_seed, cfg.crash_max_trigger)));
+        let mut write_errs = 0usize;
+        for cycle in 1..=cfg.cycles as u64 {
+            let (leaves, _, _) = cycle_shape(cfg, cycle, 1);
+            let n = leaves.len();
+            let part = Partition::uniform(1, n as u64);
+            let fixed = local_fixed_field(&leaves, 0..n, cfg.fixed_k);
+            let (hp_sizes, hp) = local_hp_field(&leaves, 0..n, cfg.max_degree);
+            let fields = make_fields(cfg, &leaves, 0..n, fixed, hp_sizes, hp);
+            write_errs +=
+                restart::write_step(&mut ar, APP_NAME, cycle, &part, &fields, &Identity, &replay_metrics)
+                    .is_err() as usize;
+        }
+        let finished = ar.finish();
+        if write_errs > 0 || finished.is_err() {
+            fired = true;
+            break;
+        }
+        attempt_seed = splitmix(attempt_seed);
+    }
+    if !fired {
+        return Err(ScdaError::usage(
+            usage::BAD_CONFIG,
+            format!("seeded crash (seed {crash_seed:#x}) never fired; raise crash_max_trigger"),
+        ));
+    }
+
+    // Recover the torn tail, then account for what survived.
+    let tracer = cfg.traced.then(|| Arc::new(Tracer::for_rank(0)));
+    let t = Instant::now();
+    let report = recover_with(&path, tracer.as_ref())?;
+    let seconds = t.elapsed().as_secs_f64();
+
+    let ar = Archive::open(SerialComm::new(), &path)?;
+    let complete: Vec<u64> = restart::list_steps(&ar)
+        .into_iter()
+        .filter(|&s| {
+            ar.get(&restart::info_name(s)).is_some()
+                && ar.get(&restart::field_name(s, FIXED_FIELD)).is_some()
+                && ar.get(&restart::field_name(s, HP_FIELD)).is_some()
+        })
+        .collect();
+    ar.close()?;
+
+    // Every complete surviving step must restore byte-identically on
+    // the (different) restore rank count.
+    let (_, restore_spans) = restore_leg(&path, cfg, &complete, cfg.restore_ranks, metrics)?;
+
+    let mut spans = tracer.map(|t| t.snapshot()).unwrap_or_default();
+    spans.extend(restore_spans);
+    Ok((
+        RecoverStats {
+            seconds,
+            rebuilt: report.action == RecoveryAction::Rebuilt,
+            truncated_bytes: report.truncated_bytes,
+            datasets: report.datasets.len() as u64,
+            steps_survived: complete.len() as u64,
+        },
+        spans,
+    ))
+}
+
+// ---------------------------------------------------------------------
+// Orchestration
+// ---------------------------------------------------------------------
+
+/// Run the full scenario against `path`: write `cfg.cycles` checkpoint
+/// steps with `cfg.writers` ranks, optionally crash-replay + recover a
+/// sacrificial sibling (`<path>.crash`), then restore and verify every
+/// step on `cfg.restore_ranks` ranks.
+pub fn run_scenario(path: impl AsRef<Path>, cfg: &ScenarioConfig) -> Result<ScenarioReport> {
+    cfg.validate()?;
+    let path = path.as_ref();
+    let metrics = Arc::new(Metrics::new());
+
+    let (cycles, mut spans) = write_leg(path, cfg, &metrics)?;
+    let file_bytes = std::fs::metadata(path)
+        .map_err(|e| ScdaError::io(e, "stat scenario archive"))?
+        .len();
+
+    let recover = match cfg.crash_seed {
+        Some(seed) => {
+            let (stats, crash_spans) = crash_leg(path, cfg, seed, &metrics)?;
+            spans.extend(crash_spans);
+            Some(stats)
+        }
+        None => None,
+    };
+
+    let steps: Vec<u64> = (1..=cfg.cycles as u64).collect();
+    let (restore, restore_spans) = restore_leg(path, cfg, &steps, cfg.restore_ranks, &metrics)?;
+    spans.extend(restore_spans);
+
+    Ok(ScenarioReport { cycles, file_bytes, recover, restore, spans, metrics })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("scda-scenario-{}-{}", std::process::id(), name));
+        p
+    }
+
+    #[test]
+    fn front_is_deterministic_and_in_domain() {
+        for cycle in 1..=16 {
+            let (a, ra) = front(7, cycle);
+            let (b, rb) = front(7, cycle);
+            assert_eq!((a, ra), (b, rb));
+            assert!((0.0..=1.0).contains(&a.0) && (0.0..=1.0).contains(&a.1));
+            assert!(ra > 0.0 && ra < 0.5);
+            // A different seed moves the front.
+            assert_ne!(front(8, cycle), (a, ra));
+        }
+    }
+
+    #[test]
+    fn mesh_at_is_valid_and_churns() {
+        let cfg = ScenarioConfig::default();
+        let mut shapes = std::collections::BTreeSet::new();
+        for cycle in 1..=cfg.cycles as u64 {
+            let leaves = mesh_at(&cfg, cycle);
+            assert!(check_mesh(&leaves), "cycle {cycle} mesh invalid");
+            assert!(leaves.len() > (1 << (2 * cfg.base_level)), "cycle {cycle} never refined");
+            shapes.insert(leaves.len());
+        }
+        assert!(shapes.len() > 1, "front never moved: {shapes:?}");
+    }
+
+    #[test]
+    fn weights_match_field_payloads() {
+        let cfg = ScenarioConfig::default();
+        let leaves = mesh_at(&cfg, 1);
+        let weights = element_weights(&leaves, cfg.fixed_k, cfg.max_degree);
+        let fixed = local_fixed_field(&leaves, 0..leaves.len(), cfg.fixed_k);
+        let (_, hp) = local_hp_field(&leaves, 0..leaves.len(), cfg.max_degree);
+        assert_eq!(weights.iter().sum::<u64>(), (fixed.len() + hp.len()) as u64);
+    }
+
+    #[test]
+    fn rejects_bad_configs() {
+        let path = tmp("bad-cfg.scda");
+        for cfg in [
+            ScenarioConfig { cycles: 0, ..Default::default() },
+            ScenarioConfig { writers: 0, ..Default::default() },
+            ScenarioConfig { restore_ranks: 0, ..Default::default() },
+            ScenarioConfig { base_level: 6, max_level: 5, ..Default::default() },
+            ScenarioConfig { fixed_k: 0, ..Default::default() },
+        ] {
+            let err = run_scenario(&path, &cfg).unwrap_err();
+            assert_eq!(err.code(), 3000 + usage::BAD_CONFIG, "cfg {cfg:?}");
+        }
+    }
+
+    #[test]
+    fn tiny_scenario_round_trips() {
+        let path = tmp("tiny.scda");
+        let cfg = ScenarioConfig {
+            cycles: 2,
+            base_level: 1,
+            max_level: 3,
+            writers: 2,
+            restore_ranks: 3,
+            ..Default::default()
+        };
+        let report = run_scenario(&path, &cfg).unwrap();
+        assert_eq!(report.cycles.len(), 2);
+        assert!(report.cycles.iter().all(|c| c.elements > 0 && c.payload_bytes > 0));
+        assert!(report.recover.is_none());
+        assert_eq!(report.restore.steps, 2);
+        assert!(report.restore.payload_bytes > 0);
+        assert!(report.file_bytes > 128);
+        assert!(report.spans.is_empty(), "untraced run recorded spans");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn traced_crash_scenario_recovers_and_spans_cover_phases() {
+        let path = tmp("crash.scda");
+        let cfg = ScenarioConfig {
+            cycles: 2,
+            base_level: 1,
+            max_level: 3,
+            writers: 2,
+            restore_ranks: 3,
+            crash_seed: Some(0xC4A5),
+            traced: true,
+            ..Default::default()
+        };
+        let report = run_scenario(&path, &cfg).unwrap();
+        let rec = report.recover.expect("crash leg ran");
+        assert!(rec.rebuilt || rec.truncated_bytes == 0);
+        assert!(rec.steps_survived <= cfg.cycles as u64);
+        let kinds: std::collections::BTreeSet<&str> =
+            report.spans.iter().map(|s| s.kind.name()).collect();
+        for want in ["refine", "rebalance", "restore", "section_write"] {
+            assert!(kinds.contains(want), "missing {want} span in {kinds:?}");
+        }
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_file(crash_path(&path));
+    }
+}

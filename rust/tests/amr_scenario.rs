@@ -1,0 +1,270 @@
+//! End-to-end AMR churn soak: the scenario driver's full property sweep.
+//!
+//! For writer rank counts P ∈ {1, 2, 4, 8} the driver refines a moving
+//! front, rebalances by payload bytes, and checkpoints — and this test
+//! asserts the paper's claims on top of it:
+//!
+//! * an *uncrashed* run's archive is byte-identical at every writer P
+//!   (serial equivalence — which is also what licenses the driver's
+//!   serial crash replay);
+//! * every bisected crash point recovers to exactly the committed-prefix
+//!   dataset set, and each surviving *complete* step restores
+//!   byte-identically on a different rank count P' ≠ P against an
+//!   independently recomputed reference;
+//! * `check_mesh` holds for every cycle's mesh (the driver additionally
+//!   enforces it collectively after each refine);
+//! * a torn tail *inside* an hp varray convention pair leaves the prior
+//!   step's datasets intact.
+//!
+//! `SCDA_BENCH_QUICK=1` shrinks the sweeps for CI.
+
+use scda::archive::{recover, restart, Archive};
+use scda::bench_support::quick;
+use scda::coordinator::FieldPayload;
+use scda::mesh::check_mesh;
+use scda::mesh::fields::{local_fixed_field, local_hp_field};
+use scda::par::{run_parallel, Communicator, Partition, SerialComm};
+use scda::runtime::scenario::{self, ScenarioConfig};
+use scda::runtime::Identity;
+use std::path::{Path, PathBuf};
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("scda-amr-soak");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(format!("{name}-{}.scda", std::process::id()))
+}
+
+/// The soak workload: small enough to sweep, churny enough that every
+/// cycle's rebalance actually moves elements.
+fn soak_cfg(writers: usize) -> ScenarioConfig {
+    ScenarioConfig {
+        cycles: if quick() { 2 } else { 3 },
+        base_level: 1,
+        max_level: 3,
+        writers,
+        restore_ranks: 3, // never equals a swept writer count
+        crash_seed: None,
+        ..Default::default()
+    }
+}
+
+/// Breadth-first midpoint bisection of `[lo, hi)` (see
+/// `tests/recover_soak.rs`): coarse coverage first, seams early.
+fn bisect_offsets(lo: u64, hi: u64, budget: usize) -> Vec<u64> {
+    let mut out = Vec::new();
+    let mut queue = std::collections::VecDeque::from([(lo, hi)]);
+    while out.len() < budget {
+        let Some((a, b)) = queue.pop_front() else { break };
+        if b <= a + 1 {
+            continue;
+        }
+        let mid = a + (b - a) / 2;
+        out.push(mid);
+        queue.push_back((a, mid));
+        queue.push_back((mid, b));
+    }
+    out
+}
+
+/// Dataset extents `(name, end_offset)` in file order.
+fn extents(path: &Path) -> Vec<(String, u64)> {
+    let ar = Archive::open(SerialComm::new(), path).unwrap();
+    let e = ar.datasets().iter().map(|d| (d.name.clone(), d.offset + d.byte_len)).collect();
+    ar.close().unwrap();
+    e
+}
+
+/// Steps whose complete dataset set (info, manifest, both fields)
+/// survived in the archive at `path`.
+fn complete_steps(path: &Path) -> Vec<u64> {
+    let ar = Archive::open(SerialComm::new(), path).unwrap();
+    let steps = restart::list_steps(&ar)
+        .into_iter()
+        .filter(|&s| {
+            ar.get(&restart::info_name(s)).is_some()
+                && ar.get(&restart::manifest_name(s)).is_some()
+                && ar.get(&restart::field_name(s, scenario::FIXED_FIELD)).is_some()
+                && ar.get(&restart::field_name(s, scenario::HP_FIELD)).is_some()
+        })
+        .collect();
+    ar.close().unwrap();
+    steps
+}
+
+/// Restore `steps` on `ranks` reader ranks and verify each rank's window
+/// of both fields byte-for-byte against an independent recomputation
+/// from `(seed, step)` alone.
+fn restore_and_verify(path: &Path, cfg: &ScenarioConfig, steps: &[u64], ranks: usize) {
+    let cfg = *cfg;
+    let path = path.to_path_buf();
+    let steps = steps.to_vec();
+    run_parallel(ranks, move |comm| {
+        let rank = comm.rank();
+        let mut ar = Archive::open(comm, &path).unwrap();
+        for &step in &steps {
+            let leaves = scenario::mesh_at(&cfg, step);
+            let part = Partition::uniform(ranks, leaves.len() as u64);
+            let r = part.local_range(rank);
+            let window = r.start as usize..r.end as usize;
+            let (info, fields) = restart::read_step(&mut ar, Some(step), &part, &Identity)
+                .unwrap_or_else(|e| panic!("step {step} on P'={ranks}: {e}"));
+            assert_eq!(info.step, step);
+            assert_eq!(fields.len(), 2, "step {step}: field count");
+            let fixed_ref = local_fixed_field(&leaves, window.clone(), cfg.fixed_k);
+            let (hp_sizes_ref, hp_ref) = local_hp_field(&leaves, window, cfg.max_degree);
+            for f in &fields {
+                match (&*f.name, &f.payload) {
+                    (scenario::FIXED_FIELD, FieldPayload::Fixed { elem_size, data }) => {
+                        assert_eq!(*elem_size, (cfg.fixed_k * 8) as u64, "step {step} rho elem");
+                        assert_eq!(*data, fixed_ref, "step {step} rank {rank}: rho bytes");
+                    }
+                    (scenario::HP_FIELD, FieldPayload::Var { sizes, data }) => {
+                        assert_eq!(*sizes, hp_sizes_ref, "step {step} rank {rank}: hp sizes");
+                        assert_eq!(*data, hp_ref, "step {step} rank {rank}: hp bytes");
+                    }
+                    (name, _) => panic!("step {step}: unexpected field {name}"),
+                }
+            }
+        }
+        ar.close().unwrap();
+    });
+}
+
+#[test]
+fn uncrashed_archive_is_byte_identical_at_every_writer_p() {
+    let mut baseline: Option<Vec<u8>> = None;
+    for &writers in &[1usize, 2, 4, 8] {
+        let cfg = soak_cfg(writers);
+        // Every cycle's mesh is valid — checked here independently of
+        // the driver's own collective check.
+        for cycle in 1..=cfg.cycles as u64 {
+            assert!(check_mesh(&scenario::mesh_at(&cfg, cycle)), "cycle {cycle}");
+        }
+        let path = tmp(&format!("ident-{writers}"));
+        // run_scenario's restore leg already verifies every step on
+        // P' = 3 against the recomputed reference.
+        let report = scenario::run_scenario(&path, &cfg).unwrap();
+        assert_eq!(report.restore.steps, cfg.cycles as u64);
+        let bytes = std::fs::read(&path).unwrap();
+        match &baseline {
+            None => baseline = Some(bytes),
+            Some(b) => assert_eq!(
+                &bytes, b,
+                "P={writers} archive differs from P=1 (serial equivalence broken)"
+            ),
+        }
+        std::fs::remove_file(&path).unwrap();
+    }
+}
+
+#[test]
+fn crash_bisection_sweep_recovers_committed_prefix_and_restores_on_other_p() {
+    for &writers in &[1usize, 2, 4, 8] {
+        let cfg = soak_cfg(writers);
+        let path = tmp(&format!("sweep-{writers}"));
+        scenario::run_scenario(&path, &cfg).unwrap();
+        let good = std::fs::read(&path).unwrap();
+        let ext = extents(&path);
+        let len = good.len() as u64;
+        let budget = if quick() { 8 } else { 20 };
+        let mut cuts = bisect_offsets(128, len, budget);
+        // Dataset seams: the offsets most likely to expose an off-by-one
+        // in trailer reconstruction.
+        for (_, end) in &ext {
+            cuts.extend([end.saturating_sub(1), *end, end + 1]);
+        }
+        cuts.retain(|&c| (128..len).contains(&c));
+        cuts.sort_unstable();
+        cuts.dedup();
+        let scratch = tmp(&format!("sweep-{writers}-cut"));
+        let mut restored_any = false;
+        for &cut in &cuts {
+            std::fs::write(&scratch, &good[..cut as usize]).unwrap();
+            let rep = recover(&scratch)
+                .unwrap_or_else(|e| panic!("P={writers} cut {cut}: recover failed: {e}"));
+            // Exactly the datasets whose full extent precedes the cut.
+            let expected: Vec<&str> =
+                ext.iter().filter(|(_, end)| *end <= cut).map(|(n, _)| n.as_str()).collect();
+            assert_eq!(rep.datasets, expected, "P={writers} cut {cut}: survivor set");
+            scda::api::verify_file(&scratch)
+                .unwrap_or_else(|e| panic!("P={writers} cut {cut}: unclean after recovery: {e}"));
+            // Every complete surviving step restores byte-identically on
+            // P' = 3 ≠ P.
+            let steps = complete_steps(&scratch);
+            assert!(steps.len() as u32 <= cfg.cycles, "P={writers} cut {cut}");
+            if !steps.is_empty() {
+                restore_and_verify(&scratch, &cfg, &steps, cfg.restore_ranks);
+                restored_any = true;
+            }
+        }
+        assert!(restored_any, "P={writers}: no cut ever left a restorable step");
+        std::fs::remove_file(&path).unwrap();
+        std::fs::remove_file(&scratch).unwrap();
+    }
+}
+
+#[test]
+fn seeded_in_driver_crash_recovers_and_verifies() {
+    let seeds: &[u64] = if quick() { &[0xC4A5] } else { &[0xC4A5, 7, 131] };
+    for &writers in &[2usize, 4] {
+        for &seed in seeds {
+            let cfg = ScenarioConfig {
+                crash_seed: Some(seed),
+                crash_max_trigger: 48,
+                ..soak_cfg(writers)
+            };
+            let path = tmp(&format!("drv-{writers}-{seed}"));
+            let report = scenario::run_scenario(&path, &cfg)
+                .unwrap_or_else(|e| panic!("P={writers} seed {seed:#x}: {e}"));
+            let rec = report.recover.expect("crash leg ran");
+            assert!(rec.steps_survived <= cfg.cycles as u64, "P={writers} seed {seed:#x}");
+            // The driver already restored every surviving complete step
+            // on P' = 3 and compared bytes; the crash file must also be
+            // verify-clean now.
+            let crash = scenario::crash_path(&path);
+            scda::api::verify_file(&crash).unwrap();
+            std::fs::remove_file(&path).unwrap();
+            std::fs::remove_file(&crash).unwrap();
+        }
+    }
+}
+
+/// Satellite: a torn tail *inside* the step-2 hp varray's convention
+/// pair (sizes row + payload of an encoded V section) must leave every
+/// step-1 dataset intact and restorable.
+#[test]
+fn torn_hp_convention_pair_preserves_prior_step() {
+    let cfg = soak_cfg(2);
+    let path = tmp("hp-pair");
+    scenario::run_scenario(&path, &cfg).unwrap();
+    let good = std::fs::read(&path).unwrap();
+    let ext = extents(&path);
+    let hp2 = restart::field_name(2, scenario::HP_FIELD);
+    let (hp_start, hp_end) = {
+        let ar = Archive::open(SerialComm::new(), &path).unwrap();
+        let d = ar.get(&hp2).unwrap_or_else(|| panic!("{hp2} missing"));
+        let se = (d.offset, d.offset + d.byte_len);
+        assert!(d.encoded, "hp field should be an encoded convention pair");
+        ar.close().unwrap();
+        se
+    };
+    let scratch = tmp("hp-pair-cut");
+    for cut in [hp_start + 1, hp_start + (hp_end - hp_start) / 2, hp_end - 1] {
+        std::fs::write(&scratch, &good[..cut as usize]).unwrap();
+        recover(&scratch).unwrap_or_else(|e| panic!("cut {cut}: {e}"));
+        scda::api::verify_file(&scratch).unwrap();
+        // All of step 1 survives; step 2 is incomplete (its hp is torn).
+        let steps = complete_steps(&scratch);
+        assert!(steps.contains(&1), "cut {cut}: step 1 lost ({steps:?})");
+        assert!(!steps.contains(&2), "cut {cut}: torn step 2 reported complete");
+        // Step 1's datasets are byte-identical to the uncut archive's.
+        let survivors = extents(&scratch);
+        for (name, end) in &survivors {
+            let orig = ext.iter().find(|(n, _)| n == name).unwrap();
+            assert_eq!(*end, orig.1, "cut {cut}: {name} extent moved");
+        }
+        restore_and_verify(&scratch, &cfg, &[1], cfg.restore_ranks);
+    }
+    std::fs::remove_file(&path).unwrap();
+    std::fs::remove_file(&scratch).unwrap();
+}

@@ -1,0 +1,99 @@
+//! AMR churn bench smoke: exercises the `amr_bench` harness end to end
+//! and records `BENCH_amr.json` so the scenario trajectory (per-phase
+//! throughput, recover cost, catalog reopen cost) is tracked from this
+//! PR onward.
+//!
+//! The quick bench is `#[ignore]`d so `cargo test -q` stays fast; run
+//! with `cargo test --test bench_amr_smoke -- --ignored`.
+
+use scda::bench_support::{amr_bench, bench_amr_json_path};
+use scda::runtime::scenario::{crash_path, run_scenario, ScenarioConfig};
+use std::path::PathBuf;
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("scda-amr-smoke");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(format!("{name}-{}.scda", std::process::id()))
+}
+
+fn tiny() -> ScenarioConfig {
+    ScenarioConfig {
+        cycles: 2,
+        base_level: 1,
+        max_level: 3,
+        writers: 2,
+        restore_ranks: 3,
+        crash_seed: None,
+        ..Default::default()
+    }
+}
+
+/// Non-ignored determinism pass at a size too small to be a benchmark:
+/// the whole driver — mesh, rebalance, checkpoint — is a pure function
+/// of the config, and the archive is writer-count-invariant.
+#[test]
+fn amr_workload_is_deterministic_and_writer_invariant() {
+    let a = tmp("det-a");
+    let b = tmp("det-b");
+    run_scenario(&a, &tiny()).unwrap();
+    run_scenario(&b, &tiny()).unwrap();
+    let bytes_a = std::fs::read(&a).unwrap();
+    assert_eq!(bytes_a, std::fs::read(&b).unwrap(), "same config, different bytes");
+    // One writer rank produces the identical archive (serial
+    // equivalence is what licenses the bench's serial crash replay).
+    let c = tmp("det-c");
+    run_scenario(&c, &ScenarioConfig { writers: 1, ..tiny() }).unwrap();
+    assert_eq!(bytes_a, std::fs::read(&c).unwrap(), "P=1 vs P=2 bytes differ");
+    for p in [&a, &b, &c] {
+        std::fs::remove_file(p).unwrap();
+    }
+}
+
+/// Non-ignored shape pass: the profile the recorder writes always
+/// carries the fixed entry set `check_bench_reports.py` gates on.
+#[test]
+fn amr_bench_harness_roundtrips_tiny_workload() {
+    let path = tmp("shape");
+    let cfg = ScenarioConfig { crash_seed: Some(0xC4A5), ..tiny() };
+    let profile = amr_bench::run(&path, cfg, 1).unwrap();
+    assert_eq!(profile.report.cycles.len(), 2);
+    assert!(profile.report.recover.is_some());
+    assert!(profile.reopen_first_ms >= 0.0 && profile.reopen_last_ms >= 0.0);
+    let r = profile.report().render();
+    assert!(r.contains("\"bench\": \"amr\""));
+    for entry in
+        ["refine", "rebalance", "checkpoint", "restore", "recover", "reopen_first", "reopen_last"]
+    {
+        assert!(r.contains(&format!("\"{entry}\"")), "missing entry {entry}");
+    }
+    for field in ["elements_per_s", "mib_per_s", "moved_bytes", "truncated_bytes", "open_ms"] {
+        assert!(r.contains(&format!("\"{field}\"")), "missing field {field}");
+    }
+    std::fs::remove_file(&path).unwrap();
+    let _ = std::fs::remove_file(crash_path(&path));
+}
+
+#[test]
+#[ignore = "perf smoke; run with -- --ignored"]
+fn amr_bench_quick_records_json() {
+    let profile = amr_bench::run_quick();
+    let rec = profile.report.recover.as_ref().expect("quick bench arms the crash leg");
+    assert!(rec.steps_survived <= profile.cfg.cycles as u64);
+    let path = bench_amr_json_path();
+    profile.report().write(&path).unwrap();
+    let written = std::fs::read_to_string(&path).unwrap();
+    assert!(written.contains("\"bench\": \"amr\""));
+    for c in &profile.report.cycles {
+        println!(
+            "amr quick: cycle {} n={} payload {} B moved {} B refine {:.2} ms rebalance {:.2} ms write {:.2} ms",
+            c.cycle, c.elements, c.payload_bytes, c.moved_bytes,
+            c.refine_s * 1e3, c.rebalance_s * 1e3, c.write_s * 1e3
+        );
+    }
+    println!(
+        "amr quick: restore P'={} {:.2} ms, recover {:.2} ms, reopen {:.3} → {:.3} ms",
+        profile.report.restore.ranks, profile.report.restore.seconds * 1e3,
+        rec.seconds * 1e3, profile.reopen_first_ms, profile.reopen_last_ms
+    );
+    println!("wrote {}", path.display());
+}

@@ -1,0 +1,175 @@
+//! Property tests for the mesh and rebalance modules — the AMR substrate
+//! the churn scenario (`tests/amr_scenario.rs`) stands on:
+//!
+//! * `check_mesh` accepts every `refine_mesh` output (arbitrary seeded
+//!   indicators, moving-front ring meshes, degenerate cases);
+//! * Morton order is preserved under `rebalance::exchange` at 1/2/4/8
+//!   ranks — the exchanged stream is exactly the global leaf-order
+//!   stream re-windowed, never reordered;
+//! * `by_bytes` partitions are balanced within one max-element weight of
+//!   the ideal share.
+
+use scda::coordinator::rebalance::{by_bytes, by_count, exchange};
+use scda::mesh::{check_mesh, refine_mesh, ring_mesh, Quadrant};
+use scda::par::{run_parallel, Communicator, Partition};
+use scda::runtime::scenario;
+use scda::testutil::Rng;
+use std::sync::Arc;
+
+fn splitmix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// A deterministic but structure-free refinement indicator: hash the
+/// quadrant coordinates with the seed and refine on a coin flip. This
+/// explores refinement patterns no geometric front would produce.
+fn seeded_indicator(seed: u64) -> impl Fn(&Quadrant) -> bool {
+    move |q: &Quadrant| {
+        let h = splitmix(seed ^ ((q.x as u64) << 33) ^ ((q.y as u64) << 2) ^ q.level as u64);
+        h & 3 != 0 // refine with probability 3/4 — deep but not uniform
+    }
+}
+
+#[test]
+fn check_mesh_accepts_every_refine_mesh_output() {
+    // Arbitrary seeded indicators across depths.
+    for seed in [1u64, 7, 42, 0x5cda, 0xdead_beef] {
+        for max_level in 1..=6u8 {
+            let leaves = refine_mesh(max_level, seeded_indicator(seed ^ max_level as u64));
+            assert!(
+                check_mesh(&leaves),
+                "seed {seed:#x} max_level {max_level}: invalid mesh ({} leaves)",
+                leaves.len()
+            );
+            assert!(leaves.iter().all(|q| q.level <= max_level));
+        }
+    }
+    // The scenario's own moving fronts.
+    for cycle in 1..=8u64 {
+        let (center, radius) = scenario::front(42, cycle);
+        let leaves = ring_mesh(2, 5, center, radius);
+        assert!(check_mesh(&leaves), "cycle {cycle}: ring mesh invalid");
+    }
+    // Degenerate ends: never refine (root only) and always refine.
+    let root = refine_mesh(0, |_| true);
+    assert_eq!(root.len(), 1);
+    assert!(check_mesh(&root));
+    assert!(check_mesh(&refine_mesh(4, |_| true)));
+}
+
+/// Global variable-size payload stream in leaf order: element `i` gets
+/// `1 + (i % 19)` bytes of per-element deterministic content. Any window
+/// of it is recomputable from the index alone.
+fn global_stream(n: usize) -> (Vec<u64>, Vec<u8>) {
+    let sizes: Vec<u64> = (0..n as u64).map(|i| 1 + (i % 19)).collect();
+    let mut data = Vec::new();
+    for (i, &s) in sizes.iter().enumerate() {
+        for j in 0..s {
+            data.push((splitmix(i as u64 ^ (j << 32)) & 0xff) as u8);
+        }
+    }
+    (sizes, data)
+}
+
+#[test]
+fn exchange_preserves_morton_order_at_every_rank_count() {
+    let leaves = ring_mesh(2, 4, (0.4, 0.6), 0.2);
+    let n = leaves.len();
+    let (sizes, data) = global_stream(n);
+    let weights = sizes.clone();
+    let sizes = Arc::new(sizes);
+    let data = Arc::new(data);
+    for &ranks in &[1usize, 2, 4, 8] {
+        let part_old = by_count(n as u64, ranks);
+        let part_new = by_bytes(&weights, ranks);
+        let sizes = Arc::clone(&sizes);
+        let data = Arc::clone(&data);
+        let results = run_parallel(ranks, move |comm| {
+            let rank = comm.rank();
+            let old = part_old.local_range(rank);
+            let boff: u64 = sizes[..old.start as usize].iter().sum();
+            let blen: u64 = sizes[old.start as usize..old.end as usize].iter().sum();
+            let local_old = &data[boff as usize..(boff + blen) as usize];
+            let local_sizes = &sizes[old.start as usize..old.end as usize];
+            let (got_sizes, got_data) = exchange(&comm, &part_old, &part_new, local_sizes, local_old);
+            // The exchanged window must be exactly the global stream's
+            // slice for this rank's new window — same order, same bytes.
+            let new = part_new.local_range(rank);
+            let noff: u64 = sizes[..new.start as usize].iter().sum();
+            let nlen: u64 = sizes[new.start as usize..new.end as usize].iter().sum();
+            assert_eq!(got_sizes, sizes[new.start as usize..new.end as usize], "rank {rank} sizes");
+            assert_eq!(got_data, data[noff as usize..(noff + nlen) as usize], "rank {rank} bytes");
+            (got_sizes, got_data)
+        });
+        // Rank-ordered concatenation reassembles the global stream: the
+        // exchange is a pure re-windowing of the Morton-order sequence.
+        let mut cat_sizes = Vec::new();
+        let mut cat_data = Vec::new();
+        for (s, d) in results {
+            cat_sizes.extend(s);
+            cat_data.extend(d);
+        }
+        assert_eq!(cat_sizes, *sizes, "ranks {ranks}: size stream reordered");
+        assert_eq!(cat_data, *data, "ranks {ranks}: byte stream reordered");
+    }
+}
+
+#[test]
+fn by_bytes_is_balanced_within_one_max_element_weight() {
+    let mut rng = Rng::new(0xba1a);
+    for case in 0..32u64 {
+        let n = 1 + rng.below(400) as usize;
+        let weights: Vec<u64> = (0..n).map(|_| rng.below(1 << (1 + case % 12))).collect();
+        let total: u64 = weights.iter().sum();
+        let wmax = weights.iter().copied().max().unwrap_or(0);
+        for ranks in 1..=8usize {
+            let part = by_bytes(&weights, ranks);
+            assert_eq!(part.total(), n as u64, "case {case} ranks {ranks}: lost elements");
+            for rank in 0..ranks {
+                let r = part.local_range(rank);
+                let load: u64 = weights[r.start as usize..r.end as usize].iter().sum();
+                let bound = total.div_ceil(ranks as u64) + wmax;
+                assert!(
+                    load <= bound,
+                    "case {case} ranks {ranks} rank {rank}: load {load} > bound {bound}"
+                );
+            }
+        }
+    }
+    // Degenerate: all-zero weights still partition every element.
+    let zeros = vec![0u64; 17];
+    for ranks in 1..=8usize {
+        assert_eq!(by_bytes(&zeros, ranks).total(), 17);
+    }
+    // Empty input yields an empty but well-formed partition.
+    let empty = by_bytes(&[], 4);
+    assert_eq!(empty.total(), 0);
+    assert_eq!(empty.num_ranks(), 4);
+}
+
+#[test]
+fn scenario_weights_drive_a_balanced_partition() {
+    // The real workload: the scenario's per-leaf checkpoint weights must
+    // satisfy the same bound on the meshes the churn driver produces.
+    let cfg = scda::runtime::ScenarioConfig::default();
+    for cycle in 1..=4u64 {
+        let leaves = scenario::mesh_at(&cfg, cycle);
+        let weights = scenario::element_weights(&leaves, cfg.fixed_k, cfg.max_degree);
+        let total: u64 = weights.iter().sum();
+        let wmax = weights.iter().copied().max().unwrap();
+        for &ranks in &[2usize, 4, 8] {
+            let part = by_bytes(&weights, ranks);
+            let bound = total.div_ceil(ranks as u64) + wmax;
+            for rank in 0..ranks {
+                let r = part.local_range(rank);
+                let load: u64 = weights[r.start as usize..r.end as usize].iter().sum();
+                assert!(load <= bound, "cycle {cycle} P{ranks} rank {rank}");
+            }
+        }
+        // A uniform partition of the same stream must also be valid.
+        assert_eq!(Partition::uniform(3, leaves.len() as u64).total(), leaves.len() as u64);
+    }
+}

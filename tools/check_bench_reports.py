@@ -23,6 +23,7 @@ REPORTS = [
     "BENCH_archive.json",
     "BENCH_recover.json",
     "BENCH_serve.json",
+    "BENCH_amr.json",
 ]
 COMMITTED_DIR = pathlib.Path(sys.argv[1] if len(sys.argv) > 1 else "/tmp")
 
